@@ -1,0 +1,96 @@
+//! Fig 6 reproduction: intermediate object-detection results during
+//! transmission of the `detector` boxfind model (stands in for the
+//! paper's SSD-MobileNetV2/COCO demo at 2.5 MB/s).
+//!
+//! Renders, per stage, the predicted box against ground truth as a small
+//! ASCII canvas plus IoU — the textual Fig 6.
+//!
+//! Run with: `cargo run --release --example progressive_detection`
+
+use std::sync::Arc;
+
+use prognet::client::{ProgressiveClient, ProgressiveOptions};
+use prognet::eval::{iou_cxcywh, EvalSet};
+use prognet::models::Registry;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::ServerConfig;
+use prognet::server::{Repository, Server};
+
+const W: usize = 24;
+const H: usize = 12;
+
+fn render(truth: &[f32], pred: &[f32]) -> Vec<String> {
+    let mut canvas = vec![vec![b'.'; W]; H];
+    let draw = |canvas: &mut Vec<Vec<u8>>, b: &[f32], ch: u8| {
+        let x0 = (((b[0] - b[2] / 2.0).max(0.0)) * W as f32) as usize;
+        let x1 = (((b[0] + b[2] / 2.0).min(1.0)) * (W - 1) as f32) as usize;
+        let y0 = (((b[1] - b[3] / 2.0).max(0.0)) * H as f32) as usize;
+        let y1 = (((b[1] + b[3] / 2.0).min(1.0)) * (H - 1) as f32) as usize;
+        for x in x0..=x1.min(W - 1) {
+            canvas[y0][x] = ch;
+            canvas[y1.min(H - 1)][x] = ch;
+        }
+        for row in canvas.iter_mut().take(y1.min(H - 1) + 1).skip(y0) {
+            row[x0] = ch;
+            row[x1.min(W - 1)] = ch;
+        }
+    };
+    draw(&mut canvas, truth, b'#');
+    draw(&mut canvas, pred, b'o');
+    canvas
+        .into_iter()
+        .map(|r| String::from_utf8(r).unwrap())
+        .collect()
+}
+
+fn main() -> prognet::Result<()> {
+    anyhow::ensure!(
+        prognet::artifacts_available(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let repo = Arc::new(Repository::open_default()?);
+    let server = Server::start("127.0.0.1:0", repo, ServerConfig::default())?;
+    let engine = Engine::global()?;
+    let registry = Registry::open_default()?;
+    let manifest = registry.get("detector")?;
+    let session = ModelSession::load_batches(&engine, manifest, &[1])?;
+    let eval = EvalSet::load_named(&manifest.dataset)?;
+
+    let img_idx = 0;
+    let images = eval.image(img_idx).to_vec();
+
+    // paper configuration: 2.5 MB/s transmission
+    let mut opts = ProgressiveOptions::concurrent("detector");
+    opts.request = opts.request.with_speed(2.5);
+    let client = ProgressiveClient::new(server.addr());
+    let outcome = client.fetch_and_infer(&opts, &session, &images, 1)?;
+
+    let truth_box = eval.box_of(img_idx);
+    let truth_cls = eval.labels[img_idx] as usize;
+    println!(
+        "Progressive object detection (detector @ 2.5 MB/s)\n\
+         ground truth: {} at (cx={:.2}, cy={:.2}, w={:.2}, h={:.2})\n\
+         legend: # = ground truth, o = prediction\n",
+        eval.classes[truth_cls], truth_box[0], truth_box[1], truth_box[2], truth_box[3]
+    );
+    for r in &outcome.results {
+        let row = r.output.row(0);
+        let cls = r.output.argmax_class(0, manifest.classes);
+        let pred_box = &row[manifest.classes..manifest.classes + 4];
+        let iou = iou_cxcywh(pred_box, truth_box);
+        println!(
+            "stage {} ({:>2} bits, t={:.2}s): class={}{} IoU={:.2}",
+            r.stage + 1,
+            r.cum_bits,
+            r.t_output_ready,
+            eval.classes[cls],
+            if cls == truth_cls { " ✓" } else { "" },
+            iou
+        );
+        for line in render(truth_box, pred_box) {
+            println!("    {line}");
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the full progressive-transmission loop in ~40 lines.
+//!
+//! Starts an in-process model server, progressively fetches the trained
+//! `cnn` classifier over a bandwidth-shaped loopback connection, and runs
+//! inference on a few evaluation images at every transmission stage —
+//! printing the approximate predictions as they improve (Fig 1 of the
+//! paper, end to end).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use prognet::client::{ProgressiveClient, ProgressiveOptions};
+use prognet::eval::{top1, EvalSet};
+use prognet::models::Registry;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::ServerConfig;
+use prognet::server::{Repository, Server};
+use prognet::util::stats::{fmt_bytes, fmt_secs};
+
+fn main() -> prognet::Result<()> {
+    anyhow::ensure!(
+        prognet::artifacts_available(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    // 1. Server side: repository of progressively encoded models.
+    let repo = Arc::new(Repository::open_default()?);
+    let server = Server::start("127.0.0.1:0", repo, ServerConfig::default())?;
+    println!("server up on {}", server.addr());
+
+    // 2. Client side: compiled executable + eval workload.
+    let engine = Engine::global()?;
+    let registry = Registry::open_default()?;
+    let manifest = registry.get("cnn")?;
+    let session = ModelSession::load_batches(&engine, manifest, &[32])?;
+    let eval = EvalSet::load_named(&manifest.dataset)?;
+    let n = 32;
+    let images = eval.image_batch(n).to_vec();
+
+    // 3. Progressive fetch at 2 MB/s with concurrent inference (§III-C).
+    let mut opts = ProgressiveOptions::concurrent("cnn");
+    opts.request = opts.request.with_speed(2.0);
+    let client = ProgressiveClient::new(server.addr());
+    let outcome = client.fetch_and_infer(&opts, &session, &images, n)?;
+
+    println!("\nstage  bits  transfer   output    top-1 on {n} images");
+    for r in &outcome.results {
+        let acc = top1(&r.output, &eval.labels[..n], manifest.classes);
+        println!(
+            "  {}    {:>2}   {:>8}  {:>8}   {:>5.1}%",
+            r.stage,
+            r.cum_bits,
+            fmt_secs(r.t_transfer_done),
+            fmt_secs(r.t_output_ready),
+            acc * 100.0
+        );
+    }
+    println!(
+        "\ntransfer {} in {} | total (with 8 intermediate inferences) {}",
+        fmt_bytes(outcome.bytes),
+        fmt_secs(outcome.t_transfer_complete),
+        fmt_secs(outcome.t_total),
+    );
+    println!("concurrent overhead vs pure transfer: {:+.1}%",
+        (outcome.t_total / outcome.t_transfer_complete - 1.0) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Fig 4 reproduction: execution timelines of singleton vs progressive
+//! transmission with and without concurrent inference, rendered as ASCII
+//! lanes (legend: `=` transfer, `r` reconstruct, `I` inference,
+//! `*` output shown).
+//!
+//! Run with: `cargo run --release --example timeline`
+
+use prognet::eval::{harness, EvalSet};
+use prognet::models::Registry;
+use prognet::netsim::LinkSpec;
+use prognet::quant::Schedule;
+use prognet::runtime::Engine;
+use prognet::util::stats::fmt_secs;
+
+fn main() -> prognet::Result<()> {
+    anyhow::ensure!(
+        prognet::artifacts_available(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let engine = Engine::global()?;
+    let registry = Registry::open_default()?;
+    let manifest = registry.get("cnn")?;
+    let eval = EvalSet::load_named(&manifest.dataset)?;
+    let sched = Schedule::paper_default();
+    let link = LinkSpec::mbps(0.25);
+
+    let row = harness::run_exec_time(&engine, manifest, &eval, 32, &sched, link)?;
+
+    println!("Fig 4 — timelines for '{}' at 0.25 MB/s (32-image workload)\n", row.model);
+    println!(
+        "singleton:               total {}",
+        fmt_secs(row.singleton)
+    );
+    println!(
+        "progressive w/o concur.: total {} ({:+.0}%)",
+        fmt_secs(row.progressive_serial),
+        (row.progressive_serial / row.singleton - 1.0) * 100.0
+    );
+    println!(
+        "progressive w/ concur.:  total {} ({:+.0}%), first output {}\n",
+        fmt_secs(row.progressive_concurrent),
+        (row.progressive_concurrent / row.singleton - 1.0) * 100.0,
+        fmt_secs(row.first_output)
+    );
+
+    println!("-- progressive, w/o concurrent execution ('=' transfer pauses during 'r'+'I'):");
+    print!("{}", row.timeline_serial.render_ascii(100));
+    println!();
+    println!("-- progressive, concurrent execution (§III-C — transfer never pauses):");
+    print!("{}", row.timeline_concurrent.render_ascii(100));
+    Ok(())
+}

@@ -1,0 +1,307 @@
+"""AOT compile path: train models, lower to HLO text, dump artifacts.
+
+Run once via ``make artifacts``; afterwards the rust binary is fully
+self-contained. Emits, per model:
+
+    artifacts/models/<name>/
+        weights.bin      flat f32 LE parameter vector (manifest order)
+        manifest.json    tensors (name/shape/numel/offset/min/max), task,
+                         accuracy, hlo file index, codec parameters
+        fwd_b{B}.hlo.txt   (x[B,...], flat f32[P]) -> outputs
+        qfwd_b{B}.hlo.txt  (x, qflat u32[P], scales[T], los[T], half[1])
+                           -> outputs, Pallas dequant + Pallas matmul head
+
+plus eval datasets under artifacts/data/<ds>/ and cross-language golden
+vectors under artifacts/golden/ (the rust codec is tested against these).
+
+HLO **text** is the interchange format — xla_extension 0.5.1 rejects
+jax>=0.5 serialized HloModuleProto (64-bit instruction ids); the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+from .kernels import ref
+
+FWD_BATCHES = [1, 32, 256]
+QFWD_BATCHES = [1, 32, 256]
+DEFAULT_SCHEDULE = [2, 2, 2, 2, 2, 2, 2, 2]
+
+TRAIN_CFG = {
+    # name: (kind, steps, lr)
+    "mlp": ("classify", 500, 1e-3),
+    "cnn": ("classify", 600, 1.5e-3),
+    "widecnn": ("classify", 450, 1e-3),
+    "detector": ("detect", 600, 1.5e-3),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def pack_plane_np(values: np.ndarray, width: int) -> bytes:
+    """Tight MSB-first bit-packing of a u32 plane with ``width`` bits/elem.
+
+    Contract shared with rust/src/quant/bitplane.rs.
+    """
+    out = bytearray()
+    acc = 0
+    nbits = 0
+    mask = (1 << width) - 1
+    for v in values:
+        acc = (acc << width) | (int(v) & mask)
+        nbits += width
+        while nbits >= 8:
+            nbits -= 8
+            out.append((acc >> nbits) & 0xFF)
+    if nbits:
+        out.append((acc << (8 - nbits)) & 0xFF)
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------------
+
+
+def emit_model(name: str, flat: np.ndarray, out_dir: str, acc: dict, log=print):
+    spec = model.ARCHS[name]["spec"]
+    task = model.ARCHS[name]["task"]
+    os.makedirs(out_dir, exist_ok=True)
+
+    # weights
+    flat = flat.astype("<f4")
+    flat.tofile(os.path.join(out_dir, "weights.bin"))
+
+    # tensor manifest with quantization params
+    tensors = spec.manifest()
+    for t in tensors:
+        seg = flat[t["offset"] : t["offset"] + t["numel"]]
+        lo, hi = ref.qparams(seg)
+        t["min"], t["max"] = lo, hi
+
+    in_shape = [datasets.IMG, datasets.IMG, 3]
+    hlo_index = {}
+
+    for b in FWD_BATCHES:
+        x_spec = jax.ShapeDtypeStruct((b, *in_shape), jnp.float32)
+        f_spec = jax.ShapeDtypeStruct((spec.total,), jnp.float32)
+        t0 = time.time()
+        lowered = jax.jit(model.fwd(name)).lower(x_spec, f_spec)
+        text = to_hlo_text(lowered)
+        fn = f"fwd_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            f.write(text)
+        hlo_index[f"fwd_b{b}"] = fn
+        log(f"  [{name}] {fn}: {len(text)//1024} KiB ({time.time()-t0:.1f}s)")
+
+    ntens = len(tensors)
+    for b in QFWD_BATCHES:
+        x_spec = jax.ShapeDtypeStruct((b, *in_shape), jnp.float32)
+        q_spec = jax.ShapeDtypeStruct((spec.total,), jnp.uint32)
+        s_spec = jax.ShapeDtypeStruct((ntens,), jnp.float32)
+        h_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+        t0 = time.time()
+        lowered = jax.jit(model.qfwd(name)).lower(x_spec, q_spec, s_spec, s_spec, h_spec)
+        text = to_hlo_text(lowered)
+        fn = f"qfwd_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            f.write(text)
+        hlo_index[f"qfwd_b{b}"] = fn
+        log(f"  [{name}] {fn}: {len(text)//1024} KiB ({time.time()-t0:.1f}s)")
+
+    manifest = {
+        "name": name,
+        "task": task,
+        "classes": model.ARCHS[name]["classes"],
+        "input_shape": in_shape,
+        "param_count": int(spec.total),
+        "k": ref.K,
+        "default_schedule": DEFAULT_SCHEDULE,
+        "tensors": tensors,
+        "hlo": hlo_index,
+        "weights": "weights.bin",
+        "accuracy": acc,
+        "dataset": "shapes10" if task == "classify" else "boxfind",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def emit_data(root: str, log=print):
+    dd = os.path.join(root, "data")
+    # shapes10
+    d = os.path.join(dd, "shapes10")
+    os.makedirs(d, exist_ok=True)
+    x, y = datasets.shapes10(datasets.EVAL_N, datasets.EVAL_SEED_SHAPES)
+    x.astype("<f4").tofile(os.path.join(d, "images.bin"))
+    y.astype("<i4").tofile(os.path.join(d, "labels.bin"))
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "name": "shapes10",
+                "n": int(datasets.EVAL_N),
+                "image_shape": [32, 32, 3],
+                "classes": [
+                    "h-stripes", "v-stripes", "d-stripes", "circle", "ring",
+                    "square", "cross", "checker", "radial", "gradient",
+                ],
+                "files": {"images": "images.bin", "labels": "labels.bin"},
+            },
+            f, indent=1,
+        )
+    log(f"  [data] shapes10 eval: {datasets.EVAL_N} images")
+    # boxfind
+    d = os.path.join(dd, "boxfind")
+    os.makedirs(d, exist_ok=True)
+    x, y, b = datasets.boxfind(datasets.EVAL_N, datasets.EVAL_SEED_BOX)
+    x.astype("<f4").tofile(os.path.join(d, "images.bin"))
+    y.astype("<i4").tofile(os.path.join(d, "labels.bin"))
+    b.astype("<f4").tofile(os.path.join(d, "boxes.bin"))
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "name": "boxfind",
+                "n": int(datasets.EVAL_N),
+                "image_shape": [32, 32, 3],
+                "classes": ["red-box", "green-ellipse", "blue-diamond"],
+                "files": {"images": "images.bin", "labels": "labels.bin", "boxes": "boxes.bin"},
+            },
+            f, indent=1,
+        )
+    log(f"  [data] boxfind eval: {datasets.EVAL_N} images")
+
+
+def emit_golden(root: str, log=print):
+    """Cross-language golden vectors for the rust codec tests."""
+    gd = os.path.join(root, "golden")
+    os.makedirs(gd, exist_ok=True)
+    rng = np.random.default_rng(424242)
+    m = (rng.normal(0, 0.25, size=5000) * rng.uniform(0.2, 1.5)).astype(np.float32)
+    lo, hi = ref.qparams(m)
+    q = ref.quantize_np(m)
+    widths = DEFAULT_SCHEDULE
+    parts = ref.split_np(q, widths)
+    packed = [pack_plane_np(p, w) for p, w in zip(parts, widths)]
+    stages = []
+    cum = 0
+    for i, w in enumerate(widths):
+        cum += w
+        qc = ref.concat_np(parts[: i + 1], widths[: i + 1])
+        deq = ref.dequantize_np(qc, lo, hi, cum)
+        stages.append(
+            {
+                "cum_bits": cum,
+                "plane_crc32": zlib.crc32(packed[i]) & 0xFFFFFFFF,
+                "plane_len": len(packed[i]),
+                "q_head": [int(v) for v in qc[:32]],
+                "deq_head": [float(v) for v in deq[:32]],
+                "deq_max_abs_err": float(np.max(np.abs(deq - m))),
+            }
+        )
+    m.astype("<f4").tofile(os.path.join(gd, "weights.bin"))
+    q.astype("<u4").tofile(os.path.join(gd, "q16.bin"))
+    for i, p in enumerate(packed):
+        with open(os.path.join(gd, f"plane{i}.bin"), "wb") as f:
+            f.write(p)
+    with open(os.path.join(gd, "codec.json"), "w") as f:
+        json.dump(
+            {
+                "n": int(m.size), "k": ref.K, "min": lo, "max": hi,
+                "widths": widths, "stages": stages,
+                "q_crc32": zlib.crc32(q.astype("<u4").tobytes()) & 0xFFFFFFFF,
+            },
+            f, indent=1,
+        )
+    log(f"  [golden] codec vectors: n={m.size}")
+
+
+def emit_kernel_smoke(root: str, log=print):
+    """Tiny HLO combining the Pallas dequant + matmul kernels, for the
+    rust runtime integration test (independent of trained models)."""
+    from .kernels import dequant as pk_dequant
+    from .kernels import matmul as pk_matmul
+
+    def f(q, scale, lo, half, x):
+        w = pk_dequant.dequant(q, scale, lo, half).reshape(64, 32)
+        return (pk_matmul.matmul(x, w),)
+
+    q_spec = jax.ShapeDtypeStruct((2048,), jnp.uint32)
+    s_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    lowered = jax.jit(f).lower(q_spec, s_spec, s_spec, s_spec, x_spec)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(root, "kernel_smoke.hlo.txt"), "w") as fh:
+        fh.write(text)
+    log(f"  [smoke] kernel_smoke.hlo.txt: {len(text)//1024} KiB")
+
+
+def train_model(name: str, log=print) -> tuple[np.ndarray, dict]:
+    kind, steps, lr = TRAIN_CFG[name]
+    t0 = time.time()
+    if kind == "classify":
+        flat = train.train_classifier(name, steps=steps, lr=lr, log=log)
+        top1 = train.eval_classifier(name, flat)
+        acc = {"top1": top1}
+        log(f"  [{name}] trained: top1={top1:.3f} ({time.time()-t0:.0f}s)")
+    else:
+        flat = train.train_detector(name, steps=steps, lr=lr, log=log)
+        cls_acc, iou = train.eval_detector(name, flat)
+        acc = {"cls_acc": cls_acc, "mean_iou": iou}
+        log(f"  [{name}] trained: cls={cls_acc:.3f} iou={iou:.3f} ({time.time()-t0:.0f}s)")
+    return flat, acc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--models", default=",".join(TRAIN_CFG), help="comma list")
+    ap.add_argument("--retrain", action="store_true", help="ignore cached weights")
+    args = ap.parse_args()
+    root = os.path.abspath(args.out)
+    os.makedirs(root, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+
+    emit_data(root, log=print)
+    emit_golden(root, log=print)
+    emit_kernel_smoke(root, log=print)
+
+    index = []
+    for name in names:
+        out_dir = os.path.join(root, "models", name)
+        wpath = os.path.join(out_dir, "weights.bin")
+        mpath = os.path.join(out_dir, "manifest.json")
+        if not args.retrain and os.path.exists(wpath) and os.path.exists(mpath):
+            with open(mpath) as f:
+                acc = json.load(f)["accuracy"]
+            flat = np.fromfile(wpath, dtype="<f4")
+            print(f"  [{name}] using cached weights ({flat.size} params)")
+        else:
+            flat, acc = train_model(name, log=print)
+        manifest = emit_model(name, flat, out_dir, acc, log=print)
+        index.append({"name": name, "task": manifest["task"], "params": manifest["param_count"]})
+
+    with open(os.path.join(root, "models", "index.json"), "w") as f:
+        json.dump({"models": index}, f, indent=1)
+    print(f"artifacts complete at {root}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Synthetic datasets for the ProgressiveNet reproduction.
+
+The paper evaluates on ImageNet / MS-COCO with pre-trained models; offline
+we substitute procedurally generated datasets (see DESIGN.md §2):
+
+- ``shapes10``: 32x32x3 RGB images, 10 pattern classes (classification —
+  stands in for the ImageNet top-1 experiments of Table II rows 2-4).
+- ``boxfind``: 32x32x3 RGB images containing a single colored object on a
+  textured background; the task is to predict the object class (3 classes)
+  and its bounding box (detection — stands in for the COCO boxAP
+  experiments of Table II rows 5-7).
+
+Everything is pure numpy and fully deterministic given a seed, so the same
+eval split can be regenerated bit-exactly and is also dumped into
+``artifacts/data/`` for the rust side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 32
+N_CLASSES_SHAPES = 10
+N_CLASSES_BOX = 3
+
+
+# ---------------------------------------------------------------------------
+# shapes10
+# ---------------------------------------------------------------------------
+
+def _grid():
+    y, x = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    return x, y
+
+
+def _shapes10_image(rng: np.random.Generator, label: int) -> np.ndarray:
+    """Render one 32x32x3 image of pattern class ``label`` (0..9)."""
+    x, y = _grid()
+    img = rng.normal(0.5, 0.08, size=(IMG, IMG, 3)).astype(np.float32)
+    c = rng.uniform(0.55, 1.0, size=3).astype(np.float32)
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(0.5, 1.2)
+    cx, cy = rng.uniform(10, 22, size=2)
+    r = rng.uniform(5, 11)
+
+    if label == 0:  # horizontal stripes
+        mask = 0.5 + 0.5 * np.sin(freq * y + phase)
+    elif label == 1:  # vertical stripes
+        mask = 0.5 + 0.5 * np.sin(freq * x + phase)
+    elif label == 2:  # diagonal stripes
+        mask = 0.5 + 0.5 * np.sin(freq * (x + y) / np.sqrt(2) + phase)
+    elif label == 3:  # filled circle
+        mask = ((x - cx) ** 2 + (y - cy) ** 2 <= r * r).astype(np.float32)
+    elif label == 4:  # ring
+        d = np.sqrt((x - cx) ** 2 + (y - cy) ** 2)
+        mask = (np.abs(d - r) <= 2.0).astype(np.float32)
+    elif label == 5:  # filled square
+        mask = ((np.abs(x - cx) <= r * 0.8) & (np.abs(y - cy) <= r * 0.8)).astype(np.float32)
+    elif label == 6:  # cross
+        mask = ((np.abs(x - cx) <= 2.0) | (np.abs(y - cy) <= 2.0)).astype(np.float32)
+    elif label == 7:  # checkerboard
+        s = max(2, int(rng.integers(3, 6)))
+        mask = (((x // s) + (y // s)) % 2).astype(np.float32)
+    elif label == 8:  # radial gradient
+        d = np.sqrt((x - cx) ** 2 + (y - cy) ** 2)
+        mask = np.clip(1.0 - d / (IMG * 0.75), 0, 1)
+    else:  # label == 9: diagonal gradient
+        mask = (x + y) / (2 * (IMG - 1))
+
+    mask = mask.astype(np.float32)[..., None]
+    img = img * (1 - 0.85 * mask) + 0.85 * mask * c[None, None, :]
+    return np.clip(img, 0.0, 1.0)
+
+
+def shapes10(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` (image, label) pairs. Returns (x [n,32,32,3] f32, y [n] i32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, N_CLASSES_SHAPES, size=n).astype(np.int32)
+    imgs = np.stack([_shapes10_image(rng, int(l)) for l in labels])
+    return imgs.astype(np.float32), labels
+
+
+# ---------------------------------------------------------------------------
+# boxfind
+# ---------------------------------------------------------------------------
+
+def _boxfind_image(rng: np.random.Generator, label: int):
+    """One image with a single object of class ``label``; returns (img, box).
+
+    Box is (cx, cy, w, h), all normalized to [0, 1].
+    """
+    x, y = _grid()
+    img = rng.normal(0.45, 0.1, size=(IMG, IMG, 3)).astype(np.float32)
+    # background texture
+    img += 0.08 * np.sin(0.7 * x + rng.uniform(0, 6))[..., None]
+
+    w = rng.uniform(7, 16)
+    h = rng.uniform(7, 16)
+    cx = rng.uniform(w / 2 + 1, IMG - w / 2 - 1)
+    cy = rng.uniform(h / 2 + 1, IMG - h / 2 - 1)
+    color = np.zeros(3, dtype=np.float32)
+    color[label] = 1.0
+    color += rng.uniform(-0.08, 0.08, size=3).astype(np.float32)
+
+    if label == 0:  # red rectangle
+        mask = ((np.abs(x - cx) <= w / 2) & (np.abs(y - cy) <= h / 2)).astype(np.float32)
+    elif label == 1:  # green ellipse
+        mask = ((((x - cx) / (w / 2)) ** 2 + ((y - cy) / (h / 2)) ** 2) <= 1.0).astype(np.float32)
+    else:  # blue diamond
+        mask = ((np.abs(x - cx) / (w / 2) + np.abs(y - cy) / (h / 2)) <= 1.0).astype(np.float32)
+
+    mask = mask[..., None]
+    img = img * (1 - 0.9 * mask) + 0.9 * mask * color[None, None, :]
+    box = np.array([cx / IMG, cy / IMG, w / IMG, h / IMG], dtype=np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32), box
+
+
+def boxfind(n: int, seed: int):
+    """Generate ``n`` detection samples.
+
+    Returns (x [n,32,32,3] f32, labels [n] i32, boxes [n,4] f32 cxcywh-normalized).
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, N_CLASSES_BOX, size=n).astype(np.int32)
+    imgs, boxes = [], []
+    for l in labels:
+        im, b = _boxfind_image(rng, int(l))
+        imgs.append(im)
+        boxes.append(b)
+    return np.stack(imgs), labels, np.stack(boxes)
+
+
+# Canonical eval splits (dumped into artifacts/, also used by pytest).
+EVAL_SEED_SHAPES = 90210
+EVAL_SEED_BOX = 31337
+TRAIN_SEED_SHAPES = 1234
+TRAIN_SEED_BOX = 5678
+EVAL_N = 256

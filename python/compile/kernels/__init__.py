@@ -1,0 +1,9 @@
+"""L1: Pallas kernels (build-time) + pure-jnp oracles.
+
+- ``dequant``: Eq. 5 / fused Eq. 4+5 — the per-stage reconstruct hot-spot.
+- ``quantize``: Eq. 2 floor quantization + Eq. 3 bit division.
+- ``matmul``: MXU-tiled dense matmul for the model heads.
+- ``ref``: jnp/numpy oracles and the codec specification.
+"""
+
+from . import dequant, matmul, quantize, ref  # noqa: F401

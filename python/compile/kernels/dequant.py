@@ -1,0 +1,114 @@
+"""Pallas kernels for the per-stage compute hot-spot: Eq. 4 + Eq. 5.
+
+The progressive client reconstructs float weights at every stage; this is
+the paper's per-stage overhead that concurrent execution (§III-C) hides.
+Two kernels:
+
+- ``dequant``: Eq. 5 only — takes the already-OR-accumulated q'<k> plane.
+  This is what the ``qfwd`` model artifacts embed (the rust client keeps
+  the incremental OR-accumulator, Eq. 4, in its own hot loop).
+- ``concat_dequant``: fused Eq. 4 + Eq. 5 over n fraction planes — the
+  full reconstruct-from-planes path, used by the codec tests/benches.
+
+TPU mapping (DESIGN.md §3): pure streaming elementwise pass, 1-D grid over
+the flattened tensor, block = 16384 elements. Per block the kernel touches
+(n+1) * 64 KiB of VMEM (u32 in, f32 out) — far below VMEM capacity, leaving
+room for double buffering. Integer lanes for shift/OR, one astype + FMA at
+the end; VPU-bound by design (no MXU involvement).
+
+All kernels run ``interpret=True`` — mandatory for CPU PJRT (real TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 16384
+
+
+def _dequant_kernel(q_ref, scale_ref, lo_ref, half_ref, out_ref):
+    q = q_ref[...]
+    # single astype + FMA: out = (f32(q) + half) * scale + lo
+    out_ref[...] = (q.astype(jnp.float32) + half_ref[0]) * scale_ref[0] + lo_ref[0]
+
+
+def _pad_to_block(v, block):
+    n = v.shape[0]
+    pad = (-n) % block
+    if pad:
+        v = jnp.pad(v, (0, pad))
+    return v, n
+
+
+def dequant(q, scale, lo, half, *, block: int = BLOCK):
+    """Eq. 5 over a flat u32 vector ``q``; scalars are rank-0/(1,) f32.
+
+    Returns f32 vector of the same length.
+    """
+    q = q.reshape(-1)
+    qp, n = _pad_to_block(q, block)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    lo = jnp.asarray(lo, jnp.float32).reshape(1)
+    half = jnp.asarray(half, jnp.float32).reshape(1)
+    grid = qp.shape[0] // block
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, jnp.float32),
+        interpret=True,
+    )(qp, scale, lo, half)
+    return out[:n]
+
+
+def _concat_dequant_kernel(widths, k, *refs):
+    *part_refs, scale_ref, lo_ref, half_ref, out_ref = refs
+    q = jnp.zeros(part_refs[0].shape, dtype=jnp.uint32)
+    cum = 0
+    for p_ref, w in zip(part_refs, widths):
+        cum += w
+        q = q | (p_ref[...].astype(jnp.uint32) << (k - cum))
+    out_ref[...] = (q.astype(jnp.float32) + half_ref[0]) * scale_ref[0] + lo_ref[0]
+
+
+def concat_dequant(parts, widths, scale, lo, half, *, k: int = ref.K, block: int = BLOCK):
+    """Fused Eq. 4 + Eq. 5: OR ``len(parts)`` fraction planes, dequantize.
+
+    ``parts`` are flat u32 vectors (unpacked plane values), ``widths`` the
+    matching bit-widths (python ints, static).
+    """
+    assert len(parts) == len(widths) and parts, "need >= 1 plane"
+    flat = [p.reshape(-1) for p in parts]
+    n = flat[0].shape[0]
+    padded = []
+    for p in flat:
+        pp, _ = _pad_to_block(p, block)
+        padded.append(pp)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    lo = jnp.asarray(lo, jnp.float32).reshape(1)
+    half = jnp.asarray(half, jnp.float32).reshape(1)
+    grid = padded[0].shape[0] // block
+    kern = functools.partial(_concat_dequant_kernel, tuple(widths), k)
+    out = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in padded]
+        + [pl.BlockSpec((1,), lambda i: (0,)) for _ in range(3)],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(padded[0].shape, jnp.float32),
+        interpret=True,
+    )(*padded, scale, lo, half)
+    return out[:n]

@@ -1,0 +1,58 @@
+"""Pallas tiled matmul kernel for the dense heads.
+
+MXU-shaped 128x128 output tiles with a K-loop accumulator held in the
+output block (VMEM-resident across the innermost grid dimension). On real
+TPU this maps onto the systolic array with bf16 inputs; here it runs under
+interpret=True (CPU) and is used by the ``qfwd`` artifacts' final dense
+layer plus the kernel test/bench suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(nk, a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x, t):
+    return -(-x // t) * t
+
+
+def matmul(a, b, *, tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K):
+    """C[M,N] = A[M,K] @ B[K,N], f32, arbitrary shapes (padded to tiles)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    tm, tn, tk = min(tm, _ceil_to(m, 8)), min(tn, _ceil_to(n, 8)), min(tk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, tm), _ceil_to(n, tn), _ceil_to(k, tk)
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    nk = kp // tk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk),
+        grid=(mp // tm, np_ // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((tk, tn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]

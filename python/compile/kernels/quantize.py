@@ -1,0 +1,72 @@
+"""Pallas kernel for Eq. 2 (floor quantization) and Eq. 3 (bit division).
+
+Used by the encode-path tests and the codec benches; the deployed encoder
+is the rust implementation (rust/src/quant/), which is tested against the
+same golden vectors these kernels are.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .dequant import _pad_to_block, BLOCK
+
+
+def _quantize_kernel(k, m_ref, lo_ref, inv_ref, out_ref):
+    # q = clip(floor((m - lo) * inv), 0, 2^k - 1); inv = 2^k / (hi - lo + eps)
+    q = jnp.floor((m_ref[...] - lo_ref[0]) * inv_ref[0])
+    q = jnp.clip(q, 0.0, float(2**k - 1))
+    out_ref[...] = q.astype(jnp.uint32)
+
+
+def quantize(m, lo, hi, *, k: int = ref.K, block: int = BLOCK):
+    """Eq. 2 over a flat f32 vector. Returns u32 vector in [0, 2^k)."""
+    m = m.reshape(-1)
+    mp, n = _pad_to_block(m, block)
+    lo_s = jnp.asarray(lo, jnp.float32).reshape(1)
+    eps = jnp.maximum((jnp.asarray(hi) - jnp.asarray(lo)) * 1e-6, 1e-12)
+    inv = (float(2**k) / (jnp.asarray(hi, jnp.float32) - lo_s + eps)).reshape(1)
+    grid = mp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, k),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(mp.shape, jnp.uint32),
+        interpret=True,
+    )(mp, lo_s, inv)
+    return out[:n]
+
+
+def _split_kernel(widths, k, q_ref, *out_refs):
+    q = q_ref[...]
+    cum = 0
+    for o_ref, w in zip(out_refs, widths):
+        cum += w
+        o_ref[...] = (q >> (k - cum)) & jnp.uint32((1 << w) - 1)
+
+
+def bitplane_split(q, widths, *, k: int = ref.K, block: int = BLOCK):
+    """Eq. 3: split flat u32 q<k> into len(widths) fraction planes (u32)."""
+    assert sum(widths) == k
+    q = q.reshape(-1)
+    qp, n = _pad_to_block(q, block)
+    grid = qp.shape[0] // block
+    outs = pl.pallas_call(
+        functools.partial(_split_kernel, tuple(widths), k),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in widths],
+        out_shape=[jax.ShapeDtypeStruct(qp.shape, jnp.uint32) for _ in widths],
+        interpret=True,
+    )(qp)
+    return [o[:n] for o in outs]

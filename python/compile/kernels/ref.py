@@ -1,0 +1,128 @@
+"""Pure-jnp / numpy oracles for the ProgressiveNet codec (Eqs. 2-5).
+
+These are the ground-truth implementations the Pallas kernels (and the rust
+codec, transitively, via golden vectors emitted by aot.py) are tested
+against.
+
+Codec specification (shared with rust/src/quant/):
+
+- k = 16 bits, unsigned.
+- Eq. 2 (quantize):   q = floor(2^k * (M - min) / (max - min + eps))
+  with eps = max((max - min) * 1e-6, 1e-12), arithmetic in float64.
+  Degenerate tensors (max == min) quantize to all-zeros.
+- Eq. 3 (bit division) for schedule widths b = [b_1..b_n], cum c_m = sum b_1..b_m:
+      p<k,m> = (q << c_{m-1}) >> (k - b_m + c_{m-1})   (on k-bit words)
+  i.e. part m holds bits [k - c_m, k - c_{m-1}) of q, MSB-first.
+- Eq. 4 (bit concatenation): q'<k> = OR_m (p<k,m> << (k - c_m)).
+- Eq. 5 (dequantize) after receiving c cumulative bits:
+      M' = (max - min) * (q' + 2^{k-c-1}) / 2^k + min
+  The 2^{k-c-1} term is the midpoint estimate of the unreceived low bits;
+  at c == k it equals the paper's floor-loss revision (max-min)/2^{k+1}
+  (the paper's Eq. 5 writes the fully-received special case).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+K = 16
+Q_DTYPE = jnp.uint32
+
+
+def qparams(m: np.ndarray) -> tuple[float, float]:
+    """(min, max) of a tensor, as the encoder uses them (float64 exact)."""
+    return float(np.min(m)), float(np.max(m))
+
+
+def eps_for(lo: float, hi: float) -> float:
+    return max((hi - lo) * 1e-6, 1e-12)
+
+
+def quantize_np(m: np.ndarray, k: int = K) -> np.ndarray:
+    """Eq. 2 in float64 numpy — the canonical encoder."""
+    lo, hi = qparams(m)
+    if hi <= lo:
+        return np.zeros(m.shape, dtype=np.uint32)
+    scale = (2.0 ** k) / (hi - lo + eps_for(lo, hi))
+    q = np.floor((m.astype(np.float64) - lo) * scale)
+    q = np.clip(q, 0, 2 ** k - 1)
+    return q.astype(np.uint32)
+
+
+def quantize_jnp(m, lo, hi, k: int = K):
+    """Eq. 2 in jnp float32 (oracle for the Pallas quantize kernel).
+
+    Note: float32 arithmetic — tested against the Pallas kernel (also f32),
+    not bit-exactly against quantize_np.
+    """
+    eps = jnp.maximum((hi - lo) * 1e-6, 1e-12)
+    scale = (2.0 ** k) / (hi - lo + eps)
+    q = jnp.floor((m - lo) * scale)
+    q = jnp.clip(q, 0.0, float(2 ** k - 1))
+    return q.astype(Q_DTYPE)
+
+
+def split_np(q: np.ndarray, widths: list[int], k: int = K) -> list[np.ndarray]:
+    """Eq. 3: split the k-bit integers into len(widths) fraction planes."""
+    assert sum(widths) == k, f"schedule {widths} must sum to {k}"
+    parts = []
+    cum = 0
+    for w in widths:
+        cum += w
+        parts.append(((q >> (k - cum)) & ((1 << w) - 1)).astype(np.uint32))
+    return parts
+
+
+def concat_np(parts: list[np.ndarray], widths: list[int], k: int = K) -> np.ndarray:
+    """Eq. 4: OR the first len(parts) planes back into a k-bit integer."""
+    q = np.zeros(parts[0].shape, dtype=np.uint32)
+    cum = 0
+    for p, w in zip(parts, widths):
+        cum += w
+        q |= (p.astype(np.uint32) << (k - cum))
+    return q
+
+
+def dequantize_np(q: np.ndarray, lo: float, hi: float, cum_bits: int, k: int = K) -> np.ndarray:
+    """Eq. 5 with midpoint revision for partially received bits (float32 out)."""
+    half = float(2 ** (k - cum_bits - 1)) if cum_bits < k else 0.5
+    scale = (hi - lo) / float(2 ** k)
+    return ((q.astype(np.float64) + half) * scale + lo).astype(np.float32)
+
+
+def dequantize_jnp(q, scale, lo, half):
+    """Eq. 5 oracle matching the Pallas dequant kernel's contract.
+
+    scale = (max - min) / 2^k ; half = 2^{k-c-1} (0.5 when fully received).
+    """
+    return (q.astype(jnp.float32) + half) * scale + lo
+
+
+def concat_dequant_jnp(parts, widths, scale, lo, half, k: int = K):
+    """Fused Eq. 4 + Eq. 5 oracle (matches the Pallas concat_dequant kernel)."""
+    q = jnp.zeros(parts[0].shape, dtype=Q_DTYPE)
+    cum = 0
+    for p, w in zip(parts, widths):
+        cum += w
+        q = q | (p.astype(Q_DTYPE) << (k - cum))
+    return dequantize_jnp(q, scale, lo, half)
+
+
+def matmul_jnp(a, b):
+    """Oracle for the Pallas tiled matmul kernel."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def roundtrip_error_bound(lo: float, hi: float, cum_bits: int) -> float:
+    """Max |M - M'| after quantize -> truncate to cum_bits -> dequantize.
+
+    One quantization step at cum_bits (floor error + midpoint estimate),
+    plus eps: quantization scales by (hi-lo+eps) while dequantization
+    scales by (hi-lo), a mismatch that matters when eps ~ range (near-
+    degenerate tensors, range ~1e-12 — found by hypothesis).
+    """
+    if hi <= lo:
+        return 1e-6
+    step = (hi - lo + eps_for(lo, hi)) / (2 ** cum_bits)
+    return step + eps_for(lo, hi)

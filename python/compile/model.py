@@ -1,0 +1,244 @@
+"""L2: JAX model definitions (build-time only).
+
+Every model exposes a *flat-parameter* forward: ``fwd(x, flat)`` where
+``flat`` is the f32 concatenation of all weight tensors in manifest order.
+This is the key interface for progressive inference — the rust client
+reconstructs an updated ``flat`` at every transmission stage and feeds the
+same compiled executable again.
+
+Two lowered variants per model (see aot.py):
+- ``fwd``  — (x, flat f32[P]) -> logits. The rust hot path: dequant runs in
+  the rust codec, the executable sees plain float weights.
+- ``qfwd`` — (x, qflat u32[P], scales f32[T], los f32[T], half f32[1])
+  -> logits. The fused variant: the L1 Pallas dequant kernel (Eq. 5) runs
+  per tensor inside the executable, and the final dense layer uses the
+  L1 Pallas matmul kernel. ``scales`` = (max-min)/2^16 per tensor,
+  ``half`` = 2^{16-c-1} for c cumulative received bits.
+
+Models (DESIGN.md §2 substitutions for the paper's ImageNet/COCO zoo):
+  mlp / cnn / widecnn  — shapes10 classifiers (Table II rows 2-4 stand-ins)
+  detector             — boxfind single-object detector (rows 5-7 stand-in)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import dequant as pk_dequant
+from .kernels import matmul as pk_matmul
+
+IMG = 32
+DIMNUM = ("NHWC", "HWIO", "NHWC")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+class Spec:
+    """An ordered list of named tensors; defines the flat layout."""
+
+    def __init__(self, entries: list[tuple[str, tuple[int, ...]]]):
+        self.entries = entries
+        self.offsets = []
+        off = 0
+        for _, shape in entries:
+            self.offsets.append(off)
+            off += int(np.prod(shape))
+        self.total = off
+
+    def unflatten(self, flat):
+        out = []
+        for (name, shape), off in zip(self.entries, self.offsets):
+            n = int(np.prod(shape))
+            out.append(flat[off : off + n].reshape(shape))
+        return out
+
+    def flatten_np(self, tensors: list[np.ndarray]) -> np.ndarray:
+        assert len(tensors) == len(self.entries)
+        return np.concatenate([t.reshape(-1).astype(np.float32) for t in tensors])
+
+    def manifest(self) -> list[dict]:
+        return [
+            {"name": n, "shape": list(s), "numel": int(np.prod(s)), "offset": off}
+            for (n, s), off in zip(self.entries, self.offsets)
+        ]
+
+
+def _conv_spec(cin, cout, tag):
+    return [(f"{tag}.w", (3, 3, cin, cout)), (f"{tag}.b", (cout,))]
+
+
+def _dense_spec(cin, cout, tag):
+    return [(f"{tag}.w", (cin, cout)), (f"{tag}.b", (cout,))]
+
+
+ARCHS: dict[str, dict] = {
+    "mlp": {
+        "task": "classify",
+        "classes": 10,
+        "spec": Spec(
+            _dense_spec(IMG * IMG * 3, 256, "fc1")
+            + _dense_spec(256, 128, "fc2")
+            + _dense_spec(128, 10, "fc3")
+        ),
+    },
+    "cnn": {
+        "task": "classify",
+        "classes": 10,
+        "spec": Spec(
+            _conv_spec(3, 16, "c1")
+            + _conv_spec(16, 32, "c2")
+            + _conv_spec(32, 64, "c3")
+            + _dense_spec(4 * 4 * 64, 128, "fc1")
+            + _dense_spec(128, 10, "fc2")
+        ),
+    },
+    "widecnn": {
+        "task": "classify",
+        "classes": 10,
+        "spec": Spec(
+            _conv_spec(3, 32, "c1")
+            + _conv_spec(32, 64, "c2")
+            + _conv_spec(64, 96, "c3")
+            + _dense_spec(4 * 4 * 96, 768, "fc1")
+            + _dense_spec(768, 256, "fc2")
+            + _dense_spec(256, 10, "fc3")
+        ),
+    },
+    "detector": {
+        "task": "detect",
+        "classes": 3,
+        "spec": Spec(
+            _conv_spec(3, 16, "c1")
+            + _conv_spec(16, 32, "c2")
+            + _conv_spec(32, 48, "c3")
+            + _dense_spec(4 * 4 * 48, 128, "fc1")
+            + _dense_spec(128, 3 + 4, "head")
+        ),
+    },
+}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _conv_block(x, w, b):
+    x = lax.conv_general_dilated(x, w, (1, 1), "SAME", dimension_numbers=DIMNUM)
+    x = jax.nn.relu(x + b)
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _dense(x, w, b, *, pallas=False):
+    y = pk_matmul.matmul(x, w) if pallas else jnp.dot(x, w)
+    return y + b
+
+
+def _forward(name: str, params: list, x, *, pallas_head: bool = False):
+    """Shared forward over unflattened params. x: [B,32,32,3] f32 in [0,1]."""
+    p = list(params)
+
+    def pop2():
+        w, b = p.pop(0), p.pop(0)
+        return w, b
+
+    if name == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        w, b = pop2()
+        h = jax.nn.relu(_dense(h, w, b))
+        w, b = pop2()
+        h = jax.nn.relu(_dense(h, w, b))
+        w, b = pop2()
+        return _dense(h, w, b, pallas=pallas_head)
+
+    n_convs = {"cnn": 3, "widecnn": 3, "detector": 3}[name]
+    h = x
+    for _ in range(n_convs):
+        w, b = pop2()
+        h = _conv_block(h, w, b)
+    h = h.reshape(h.shape[0], -1)
+    while len(p) > 2:
+        w, b = pop2()
+        h = jax.nn.relu(_dense(h, w, b))
+    w, b = pop2()
+    out = _dense(h, w, b, pallas=pallas_head)
+    if name == "detector":
+        # logits[:, :3] class scores; box (cx,cy,w,h) squashed to (0,1)
+        cls, box = out[:, :3], jax.nn.sigmoid(out[:, 3:])
+        out = jnp.concatenate([cls, box], axis=1)
+    return out
+
+
+def fwd(name: str):
+    """(x, flat) -> outputs, float-weights variant (rust hot path)."""
+    spec = ARCHS[name]["spec"]
+
+    def f(x, flat):
+        return (_forward(name, spec.unflatten(flat), x),)
+
+    return f
+
+
+def qfwd(name: str, k: int = 16):
+    """(x, qflat, scales, los, half) -> outputs; Pallas dequant inside."""
+    spec = ARCHS[name]["spec"]
+
+    def f(x, qflat, scales, los, half):
+        params = []
+        for i, ((_, shape), off) in enumerate(zip(spec.entries, spec.offsets)):
+            n = int(np.prod(shape))
+            seg = lax.dynamic_slice(qflat, (off,), (n,))
+            w = pk_dequant.dequant(seg, scales[i], los[i], half[0])
+            params.append(w.reshape(shape))
+        return (_forward(name, params, x, pallas_head=True),)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Init + loss
+# ---------------------------------------------------------------------------
+
+def init_params(name: str, seed: int) -> list[np.ndarray]:
+    """He-normal init, numpy (so the artifact is reproducible)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for pname, shape in ARCHS[name]["spec"].entries:
+        if pname.endswith(".b"):
+            out.append(np.zeros(shape, dtype=np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = np.sqrt(2.0 / fan_in)
+            out.append(rng.normal(0.0, std, size=shape).astype(np.float32))
+    return out
+
+
+def loss_fn(name: str):
+    """Returns loss(flat, x, y[, boxes]) for training."""
+    spec = ARCHS[name]["spec"]
+    task = ARCHS[name]["task"]
+
+    def ce(logits, y):
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    if task == "classify":
+
+        def f(flat, x, y):
+            (logits,) = fwd(name)(x, flat)
+            return ce(logits, y)
+
+        return f
+
+    def f(flat, x, y, boxes):
+        (out,) = fwd(name)(x, flat)
+        cls, box = out[:, :3], out[:, 3:]
+        return ce(cls, y) + 5.0 * jnp.mean(jnp.abs(box - boxes))
+
+    return f

@@ -1,0 +1,115 @@
+"""Build-time training for the substitute model zoo (hand-rolled Adam).
+
+optax is unavailable offline, so Adam is implemented directly over the
+flat parameter vector. Training is deliberately small — each model reaches
+high accuracy on its synthetic task in a few hundred steps on one CPU core.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+
+
+def adam_step(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    def step(i, flat, m, v, g):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** (i + 1))
+        vh = v / (1 - b2 ** (i + 1))
+        return flat - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+    return step
+
+
+def _batches(n, batch, steps, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        yield rng.integers(0, n, size=batch)
+
+
+def train_classifier(name: str, steps: int, batch: int = 64, n_train: int = 4096,
+                     lr: float = 1e-3, seed: int = 7, log=print) -> np.ndarray:
+    """Train a shapes10 classifier; returns the flat f32 parameter vector."""
+    spec = model.ARCHS[name]["spec"]
+    x_all, y_all = datasets.shapes10(n_train, datasets.TRAIN_SEED_SHAPES)
+    flat = jnp.asarray(spec.flatten_np(model.init_params(name, seed)))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    loss = model.loss_fn(name)
+    step = adam_step(lr)
+
+    @jax.jit
+    def update(i, flat, m, v, x, y):
+        l, g = jax.value_and_grad(loss)(flat, x, y)
+        flat, m, v = step(i, flat, m, v, g)
+        return flat, m, v, l
+
+    t0 = time.time()
+    for i, idx in enumerate(_batches(n_train, batch, steps, seed + 1)):
+        flat, m, v, l = update(i, flat, m, v, jnp.asarray(x_all[idx]), jnp.asarray(y_all[idx]))
+        if i % 100 == 0 or i == steps - 1:
+            log(f"  [{name}] step {i:4d} loss {float(l):.4f} ({time.time()-t0:.0f}s)")
+    return np.asarray(flat)
+
+
+def train_detector(name: str, steps: int, batch: int = 64, n_train: int = 4096,
+                   lr: float = 1e-3, seed: int = 11, log=print) -> np.ndarray:
+    """Train the boxfind detector; returns the flat f32 parameter vector."""
+    spec = model.ARCHS[name]["spec"]
+    x_all, y_all, b_all = datasets.boxfind(n_train, datasets.TRAIN_SEED_BOX)
+    flat = jnp.asarray(spec.flatten_np(model.init_params(name, seed)))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    loss = model.loss_fn(name)
+    step = adam_step(lr)
+
+    @jax.jit
+    def update(i, flat, m, v, x, y, bx):
+        l, g = jax.value_and_grad(loss)(flat, x, y, bx)
+        flat, m, v = step(i, flat, m, v, g)
+        return flat, m, v, l
+
+    t0 = time.time()
+    for i, idx in enumerate(_batches(n_train, batch, steps, seed + 1)):
+        flat, m, v, l = update(
+            i, flat, m, v, jnp.asarray(x_all[idx]), jnp.asarray(y_all[idx]), jnp.asarray(b_all[idx])
+        )
+        if i % 100 == 0 or i == steps - 1:
+            log(f"  [{name}] step {i:4d} loss {float(l):.4f} ({time.time()-t0:.0f}s)")
+    return np.asarray(flat)
+
+
+def eval_classifier(name: str, flat: np.ndarray, n: int = 512) -> float:
+    x, y = datasets.shapes10(n, datasets.EVAL_SEED_SHAPES)
+    (logits,) = jax.jit(model.fwd(name))(jnp.asarray(x), jnp.asarray(flat))
+    return float(np.mean(np.argmax(np.asarray(logits), axis=1) == y))
+
+
+def eval_detector(name: str, flat: np.ndarray, n: int = 512) -> tuple[float, float]:
+    """Returns (class accuracy, mean IoU)."""
+    x, y, b = datasets.boxfind(n, datasets.EVAL_SEED_BOX)
+    (out,) = jax.jit(model.fwd(name))(jnp.asarray(x), jnp.asarray(flat))
+    out = np.asarray(out)
+    acc = float(np.mean(np.argmax(out[:, :3], axis=1) == y))
+    iou = float(np.mean(_iou_cxcywh(out[:, 3:], b)))
+    return acc, iou
+
+
+def _iou_cxcywh(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    def corners(t):
+        cx, cy, w, h = t[:, 0], t[:, 1], t[:, 2], t[:, 3]
+        return cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2
+
+    ax0, ay0, ax1, ay1 = corners(a)
+    bx0, by0, bx1, by1 = corners(b)
+    ix = np.maximum(0, np.minimum(ax1, bx1) - np.maximum(ax0, bx0))
+    iy = np.maximum(0, np.minimum(ay1, by1) - np.maximum(ay0, by0))
+    inter = ix * iy
+    union = (ax1 - ax0) * (ay1 - ay0) + (bx1 - bx0) * (by1 - by0) - inter
+    return inter / np.maximum(union, 1e-9)

@@ -1,0 +1,95 @@
+"""AOT artifact integrity — runs only if `make artifacts` has been run."""
+
+import json
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ROOT, "models", "index.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _models():
+    with open(os.path.join(ROOT, "models", "index.json")) as f:
+        return [m["name"] for m in json.load(f)["models"]]
+
+
+def test_index_lists_models():
+    assert set(_models()) >= {"mlp", "cnn", "detector"}
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn", "widecnn", "detector"])
+def test_model_artifact_consistency(name):
+    d = os.path.join(ROOT, "models", name)
+    if not os.path.exists(d):
+        pytest.skip(f"{name} not built")
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    flat = np.fromfile(os.path.join(d, "weights.bin"), dtype="<f4")
+    assert flat.size == man["param_count"]
+    off = 0
+    for t in man["tensors"]:
+        assert t["offset"] == off
+        seg = flat[off : off + t["numel"]]
+        assert abs(float(seg.min()) - t["min"]) < 1e-6
+        assert abs(float(seg.max()) - t["max"]) < 1e-6
+        off += t["numel"]
+    assert off == flat.size
+    for key, fn in man["hlo"].items():
+        path = os.path.join(d, fn)
+        assert os.path.exists(path), f"missing {key}"
+        head = open(path).read(200)
+        assert "HloModule" in head
+
+
+def test_golden_codec_vectors_selfconsistent():
+    from compile.kernels import ref
+    from compile.aot import pack_plane_np
+
+    gd = os.path.join(ROOT, "golden")
+    with open(os.path.join(gd, "codec.json")) as f:
+        g = json.load(f)
+    m = np.fromfile(os.path.join(gd, "weights.bin"), dtype="<f4")
+    assert m.size == g["n"]
+    q = np.fromfile(os.path.join(gd, "q16.bin"), dtype="<u4")
+    np.testing.assert_array_equal(ref.quantize_np(m), q)
+    assert (zlib.crc32(q.astype("<u4").tobytes()) & 0xFFFFFFFF) == g["q_crc32"]
+    parts = ref.split_np(q, g["widths"])
+    cum = 0
+    for i, (st, w) in enumerate(zip(g["stages"], g["widths"])):
+        cum += w
+        packed = pack_plane_np(parts[i], w)
+        assert len(packed) == st["plane_len"]
+        assert (zlib.crc32(packed) & 0xFFFFFFFF) == st["plane_crc32"]
+        deq = ref.dequantize_np(ref.concat_np(parts[: i + 1], g["widths"][: i + 1]),
+                                g["min"], g["max"], cum)
+        np.testing.assert_allclose(deq[:32], np.array(st["deq_head"], np.float32), rtol=1e-6)
+
+
+def test_eval_data_artifacts():
+    for ds, extra in [("shapes10", []), ("boxfind", ["boxes.bin"])]:
+        d = os.path.join(ROOT, "data", ds)
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        n = man["n"]
+        imgs = np.fromfile(os.path.join(d, "images.bin"), dtype="<f4")
+        assert imgs.size == n * 32 * 32 * 3
+        labels = np.fromfile(os.path.join(d, "labels.bin"), dtype="<i4")
+        assert labels.size == n
+        assert labels.min() >= 0 and labels.max() < len(man["classes"])
+        for e in extra:
+            assert os.path.exists(os.path.join(d, e))
+
+
+def test_trained_accuracy_recorded():
+    """Training must have produced usable models (the Table II baseline)."""
+    d = os.path.join(ROOT, "models", "cnn")
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["accuracy"]["top1"] > 0.7, man["accuracy"]

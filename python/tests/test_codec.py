@@ -1,0 +1,132 @@
+"""Codec (Eqs. 2-5) property tests: numpy reference implementation."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.aot import pack_plane_np
+
+SCHEDULES = [
+    [2, 2, 2, 2, 2, 2, 2, 2],
+    [4, 4, 4, 4],
+    [8, 8],
+    [1, 1, 2, 4, 8],
+    [16],
+    [2, 6, 8],
+]
+
+
+def _rand_tensor(seed, n=2048, scale=1.0, offset=0.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(0, 0.3, size=n) * scale + offset).astype(np.float32)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_quantize_range(seed):
+    m = _rand_tensor(seed)
+    q = ref.quantize_np(m)
+    assert q.dtype == np.uint32
+    assert q.min() >= 0 and q.max() <= 2**16 - 1
+    # max element maps to the top bucket, min to 0
+    assert q[np.argmin(m)] == 0
+    assert q[np.argmax(m)] == 2**16 - 1
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_split_concat_identity(schedule, seed):
+    """Eq. 4 over all planes must restore Eq. 3's input exactly."""
+    m = _rand_tensor(seed)
+    q = ref.quantize_np(m)
+    parts = ref.split_np(q, schedule)
+    assert (ref.concat_np(parts, schedule) == q).all()
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_parts_fit_width(schedule):
+    q = ref.quantize_np(_rand_tensor(3))
+    for p, w in zip(ref.split_np(q, schedule), schedule):
+        assert p.max() < (1 << w)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_progressive_error_decreases(schedule):
+    """More received bits must never increase max reconstruction error."""
+    m = _rand_tensor(7, n=4096)
+    lo, hi = ref.qparams(m)
+    q = ref.quantize_np(m)
+    parts = ref.split_np(q, schedule)
+    prev = np.inf
+    cum = 0
+    for i, w in enumerate(schedule):
+        cum += w
+        deq = ref.dequantize_np(ref.concat_np(parts[: i + 1], schedule[: i + 1]), lo, hi, cum)
+        err = float(np.max(np.abs(deq - m)))
+        assert err <= ref.roundtrip_error_bound(lo, hi, cum)
+        assert err <= prev + 1e-7
+        prev = err
+
+
+def test_full_roundtrip_error_bound():
+    m = _rand_tensor(11, n=8192, scale=3.0, offset=-1.0)
+    lo, hi = ref.qparams(m)
+    deq = ref.dequantize_np(ref.quantize_np(m), lo, hi, 16)
+    # half-step revision -> max error is half a quantization step, plus
+    # f32 cast slack (the reconstruction is stored in float32)
+    step = (hi - lo + ref.eps_for(lo, hi)) / 2**16
+    assert np.max(np.abs(deq - m)) <= step * 0.5 + abs(hi - lo) * 1e-6 + 1e-7
+
+
+def test_degenerate_constant_tensor():
+    m = np.full(100, 0.42, dtype=np.float32)
+    q = ref.quantize_np(m)
+    assert (q == 0).all()
+    deq = ref.dequantize_np(q, 0.42, 0.42, 16)
+    np.testing.assert_allclose(deq, m, atol=1e-6)
+
+
+@given(
+    data=st.lists(st.floats(-1e4, 1e4, width=32), min_size=2, max_size=300),
+    cut=st.integers(1, 15),
+)
+@settings(max_examples=60, deadline=None)
+def test_hypothesis_truncated_dequant_bound(data, cut):
+    """Truncation to `cut` bits keeps error within one step at `cut` bits."""
+    m = np.array(data, dtype=np.float32)
+    lo, hi = ref.qparams(m)
+    if hi <= lo:
+        return
+    q = ref.quantize_np(m)
+    q_trunc = (q >> (16 - cut)) << (16 - cut)
+    deq = ref.dequantize_np(q_trunc, lo, hi, cut)
+    assert np.max(np.abs(deq - m)) <= ref.roundtrip_error_bound(lo, hi, cut)
+
+
+@given(
+    vals=st.lists(st.integers(0, 2**16 - 1), min_size=1, max_size=200),
+    width=st.sampled_from([1, 2, 3, 4, 5, 6, 7, 8]),
+)
+@settings(max_examples=60, deadline=None)
+def test_hypothesis_pack_plane_size(vals, width):
+    """Packed plane is exactly ceil(n*width/8) bytes (no size inflation)."""
+    v = np.array(vals, dtype=np.uint32) & ((1 << width) - 1)
+    packed = pack_plane_np(v, width)
+    assert len(packed) == (len(vals) * width + 7) // 8
+
+
+def test_pack_plane_known_vector():
+    # width=2, values 0,1,2,3 -> bits 00 01 10 11 -> byte 0b00011011 = 0x1B
+    assert pack_plane_np(np.array([0, 1, 2, 3], np.uint32), 2) == b"\x1b"
+    # width=4, values 0xA,0xB,0xC -> 0xAB, 0xC0
+    assert pack_plane_np(np.array([0xA, 0xB, 0xC], np.uint32), 4) == b"\xab\xc0"
+
+
+def test_total_size_not_increased():
+    """Paper claim: progressive representation does not increase model size."""
+    m = _rand_tensor(13, n=10007)
+    q = ref.quantize_np(m)
+    widths = [2] * 8
+    total = sum(len(pack_plane_np(p, w)) for p, w in zip(ref.split_np(q, widths), widths))
+    singleton = (10007 * 16 + 7) // 8
+    assert total <= singleton + len(widths)  # <= one ragged byte per plane

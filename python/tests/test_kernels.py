@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes/schedules; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dequant as pk_dequant
+from compile.kernels import matmul as pk_matmul
+from compile.kernels import quantize as pk_quantize
+from compile.kernels import ref
+
+
+def _tensor(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, 0.5, size=n).astype(np.float32)
+
+
+# --------------------------------------------------------------------- dequant
+
+@pytest.mark.parametrize("n", [1, 7, 100, 16384, 16385, 50000])
+def test_dequant_matches_ref_sizes(n):
+    rng = np.random.default_rng(n)
+    q = rng.integers(0, 2**16, size=n).astype(np.uint32)
+    scale, lo, half = 3.1e-5, -0.47, 0.5
+    out = pk_dequant.dequant(jnp.asarray(q), scale, lo, half)
+    expect = ref.dequantize_jnp(jnp.asarray(q), scale, lo, half)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("block", [128, 1024, 16384])
+def test_dequant_block_invariance(block):
+    """Block size is a pure perf knob — results must be identical."""
+    q = np.random.default_rng(0).integers(0, 2**16, size=3000).astype(np.uint32)
+    a = pk_dequant.dequant(jnp.asarray(q), 1e-4, 0.0, 0.5, block=block)
+    b = ref.dequantize_jnp(jnp.asarray(q), 1e-4, 0.0, 0.5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(
+    n=st.integers(1, 3000),
+    stages=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=25, deadline=None)
+def test_hypothesis_concat_dequant_fused(n, stages, seed):
+    """Fused Eq. 4+5 kernel == oracle for arbitrary sizes / stage counts."""
+    widths = [2] * 8
+    m = _tensor(seed, n)
+    lo, hi = ref.qparams(m)
+    if hi <= lo:
+        return
+    q = ref.quantize_np(m)
+    parts = [jnp.asarray(p) for p in ref.split_np(q, widths)[:stages]]
+    cum = sum(widths[:stages])
+    scale = (hi - lo) / 2**16
+    half = float(2 ** (16 - cum - 1)) if cum < 16 else 0.5
+    out = pk_dequant.concat_dequant(parts, widths[:stages], scale, lo, half)
+    expect = ref.concat_dequant_jnp(parts, widths[:stages], scale, lo, half)
+    # atol covers FMA-contraction differences between the pallas interpret
+    # path and the jnp oracle (~1 ulp of the pre-add magnitude)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6, atol=5e-7)
+    # and the reconstruction is within the analytic bound of the original
+    assert np.max(np.abs(np.asarray(out) - m)) <= ref.roundtrip_error_bound(lo, hi, cum)
+
+
+# -------------------------------------------------------------------- quantize
+
+@pytest.mark.parametrize("n", [1, 129, 16384, 20000])
+def test_quantize_kernel_matches_jnp_oracle(n):
+    m = _tensor(n, n)
+    lo, hi = ref.qparams(m)
+    out = pk_quantize.quantize(jnp.asarray(m), lo, hi)
+    expect = ref.quantize_jnp(jnp.asarray(m), lo, hi)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@given(seed=st.integers(0, 2**31), n=st.integers(1, 2000))
+@settings(max_examples=20, deadline=None)
+def test_hypothesis_quantize_close_to_f64_encoder(seed, n):
+    """f32 kernel vs f64 canonical encoder: off by at most 1 code."""
+    m = _tensor(seed, n)
+    lo, hi = ref.qparams(m)
+    if hi <= lo:
+        return
+    q32 = np.asarray(pk_quantize.quantize(jnp.asarray(m), lo, hi)).astype(np.int64)
+    q64 = ref.quantize_np(m).astype(np.int64)
+    assert np.max(np.abs(q32 - q64)) <= 1
+
+
+@pytest.mark.parametrize("widths", [[2] * 8, [4] * 4, [8, 8], [1, 1, 2, 4, 8], [16]])
+def test_split_kernel_matches_ref(widths):
+    q = np.random.default_rng(5).integers(0, 2**16, size=4097).astype(np.uint32)
+    outs = pk_quantize.bitplane_split(jnp.asarray(q), widths)
+    expect = ref.split_np(q, widths)
+    for a, b in zip(outs, expect):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_split_then_fused_dequant_roundtrip():
+    m = _tensor(77, 9999)
+    lo, hi = ref.qparams(m)
+    q = ref.quantize_np(m)
+    widths = [2] * 8
+    parts = pk_quantize.bitplane_split(jnp.asarray(q), widths)
+    out = pk_dequant.concat_dequant(parts, widths, (hi - lo) / 2**16, lo, 0.5)
+    expect = ref.dequantize_np(q, lo, hi, 16)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (8, 64, 32), (70, 200, 33), (128, 128, 128), (130, 257, 129)]
+)
+def test_matmul_matches_oracle(m, k, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    out = pk_matmul.matmul(jnp.asarray(a), jnp.asarray(b))
+    expect = ref.matmul_jnp(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=15, deadline=None)
+def test_hypothesis_matmul_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    out = pk_matmul.matmul(jnp.asarray(a), jnp.asarray(b), tm=32, tn=32, tk=32)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,124 @@
+"""L2 model definitions: shapes, flat-layout, fwd/qfwd equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("name", list(model.ARCHS))
+def test_spec_flat_layout(name):
+    spec = model.ARCHS[name]["spec"]
+    man = spec.manifest()
+    # offsets are contiguous and ordered
+    off = 0
+    for t in man:
+        assert t["offset"] == off
+        assert t["numel"] == int(np.prod(t["shape"]))
+        off += t["numel"]
+    assert off == spec.total
+
+
+@pytest.mark.parametrize("name", list(model.ARCHS))
+def test_flatten_unflatten_roundtrip(name):
+    spec = model.ARCHS[name]["spec"]
+    params = model.init_params(name, 0)
+    flat = spec.flatten_np(params)
+    back = spec.unflatten(jnp.asarray(flat))
+    for a, b in zip(params, back):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+@pytest.mark.parametrize("name,batch", [(n, b) for n in model.ARCHS for b in (1, 4)])
+def test_fwd_output_shape(name, batch):
+    spec = model.ARCHS[name]["spec"]
+    flat = jnp.asarray(spec.flatten_np(model.init_params(name, 1)))
+    x = jnp.zeros((batch, 32, 32, 3), jnp.float32)
+    (out,) = model.fwd(name)(x, flat)
+    n_out = model.ARCHS[name]["classes"] + (4 if model.ARCHS[name]["task"] == "detect" else 0)
+    assert out.shape == (batch, n_out)
+
+
+def test_detector_box_in_unit_range():
+    flat = jnp.asarray(
+        model.ARCHS["detector"]["spec"].flatten_np(model.init_params("detector", 2))
+    )
+    x = jnp.asarray(np.random.default_rng(0).uniform(size=(3, 32, 32, 3)).astype(np.float32))
+    (out,) = model.fwd("detector")(x, flat)
+    box = np.asarray(out[:, 3:])
+    assert (box >= 0).all() and (box <= 1).all()
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn", "detector"])
+def test_qfwd_equals_fwd_at_full_bits(name):
+    """qfwd(quantize(w), 16 bits) must track fwd(w) within quantization noise."""
+    spec = model.ARCHS[name]["spec"]
+    flat = spec.flatten_np(model.init_params(name, 3))
+    qflat = np.zeros(spec.total, np.uint32)
+    scales, los = [], []
+    for (_, shape), off in zip(spec.entries, spec.offsets):
+        n = int(np.prod(shape))
+        seg = flat[off : off + n]
+        lo, hi = ref.qparams(seg)
+        qflat[off : off + n] = ref.quantize_np(seg)
+        scales.append((hi - lo) / 2**16)
+        los.append(lo)
+    x = jnp.asarray(np.random.default_rng(1).uniform(size=(2, 32, 32, 3)).astype(np.float32))
+    (a,) = jax.jit(model.fwd(name))(x, jnp.asarray(flat))
+    (b,) = jax.jit(model.qfwd(name))(
+        x,
+        jnp.asarray(qflat),
+        jnp.asarray(np.array(scales, np.float32)),
+        jnp.asarray(np.array(los, np.float32)),
+        jnp.asarray(np.array([0.5], np.float32)),
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+def test_loss_decreases_smoke():
+    """A few Adam steps must reduce classification loss (training sanity)."""
+    from compile import train
+
+    x, y = datasets.shapes10(64, 42)
+    spec = model.ARCHS["mlp"]["spec"]
+    flat = jnp.asarray(spec.flatten_np(model.init_params("mlp", 4)))
+    loss = model.loss_fn("mlp")
+    step = train.adam_step(1e-3)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    l0 = None
+    xs, ys = jnp.asarray(x), jnp.asarray(y)
+
+    @jax.jit
+    def upd(i, flat, m, v):
+        l, g = jax.value_and_grad(loss)(flat, xs, ys)
+        flat, m, v = step(i, flat, m, v, g)
+        return flat, m, v, l
+
+    for i in range(20):
+        flat, m, v, l = upd(i, flat, m, v)
+        if l0 is None:
+            l0 = float(l)
+    assert float(l) < l0
+
+
+def test_datasets_deterministic():
+    a1, b1 = datasets.shapes10(16, 5)
+    a2, b2 = datasets.shapes10(16, 5)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+    x1, y1, z1 = datasets.boxfind(8, 6)
+    x2, y2, z2 = datasets.boxfind(8, 6)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(z1, z2)
+
+
+def test_datasets_ranges():
+    x, y = datasets.shapes10(32, 9)
+    assert x.min() >= 0 and x.max() <= 1 and x.dtype == np.float32
+    assert set(np.unique(y)).issubset(set(range(10)))
+    xi, yi, bi = datasets.boxfind(32, 9)
+    assert (bi > 0).all() and (bi < 1).all()

@@ -1,0 +1,86 @@
+//! §III-A ablation — the naive decimal digit-split (Eq. 1) vs the
+//! quantization bit-split codec (Eqs. 2–5).
+//!
+//! The paper rejects digit splitting as "not efficient in terms of
+//! representation space"; this bench quantifies that on real trained
+//! weights: bytes on the wire per stage vs reconstruction error.
+
+use prognet::metrics::Table;
+use prognet::models::Registry;
+use prognet::quant::{bitplane, naive, quantize, Accumulator, DequantParams, QuantParams, Schedule, K};
+use prognet::util::stats::fmt_bytes;
+
+fn main() -> prognet::Result<()> {
+    if !prognet::artifacts_available() {
+        eprintln!("ablation_naive_split: artifacts not built, skipping");
+        return Ok(());
+    }
+    let registry = Registry::open_default()?;
+    let m = registry.get("cnn")?;
+    let flat = m.load_weights()?;
+
+    // ---- bit-split (4 stages of 4 bits, to match 4 digit groups)
+    let sched = Schedule::new(vec![4; 4], K)?;
+    let qp = QuantParams::from_data(&flat, K);
+    let q = quantize::quantize(&flat, &qp);
+    let planes = bitplane::encode_planes(&q, &sched);
+    let mut acc = Accumulator::new(flat.len(), sched.clone());
+    let mut out = vec![0f32; flat.len()];
+
+    // ---- naive digit-split (8 significand digits in 4 stages)
+    let enc = naive::encode(&flat, 4)?;
+
+    let mut table = Table::new(
+        "Eq. 1 ablation — naive digit-split vs quantization bit-split (cnn weights)",
+        &[
+            "stage",
+            "bit-split bytes (cum)",
+            "bit-split max err",
+            "naive bytes (cum)",
+            "naive max err",
+            "size ratio",
+        ],
+    );
+    let mut bs_bytes = 0usize;
+    let mut nv_bytes = 0usize;
+    for s in 0..4 {
+        bs_bytes += planes[s].len();
+        nv_bytes += enc.stage_bytes(s);
+        acc.absorb(&planes[s])?;
+        prognet::quant::dequantize_into(
+            acc.codes(),
+            DequantParams::new(&qp, sched.cum_bits(s)),
+            &mut out,
+        );
+        let bs_err = flat
+            .iter()
+            .zip(&out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        let nv = enc.decode(s + 1);
+        let nv_err = flat
+            .iter()
+            .zip(&nv)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        table.row(vec![
+            format!("{}", s + 1),
+            fmt_bytes(bs_bytes as u64),
+            format!("{bs_err:.2e}"),
+            fmt_bytes(nv_bytes as u64),
+            format!("{nv_err:.2e}"),
+            format!("{:.2}x", nv_bytes as f64 / bs_bytes as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    let ratio = enc.total_bytes() as f64 / bs_bytes as f64;
+    println!(
+        "naive total {} vs bit-split total {} — {:.2}x larger for comparable\n\
+         final precision; the paper's reason to use quantization (§III-A/B).",
+        fmt_bytes(enc.total_bytes() as u64),
+        fmt_bytes(bs_bytes as u64),
+        ratio
+    );
+    assert!(ratio > 1.5, "naive must cost substantially more wire bytes");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Codec micro-benchmarks: throughput of each hot-path primitive
+//! (quantize, bit-plane pack/unpack, incremental concat, dequantize).
+//!
+//! These are the L3 §Perf numbers tracked in EXPERIMENTS.md. Method:
+//! best-of-5 timed repetitions over a 4M-element tensor (16 MB f32),
+//! reporting elements/s and effective GB/s of input consumed.
+
+use std::time::Instant;
+
+use prognet::metrics::Table;
+use prognet::quant::{
+    bitplane, dequantize_into, quantize, Accumulator, DequantParams, QuantParams, Schedule, K,
+};
+use prognet::util::rng::Rng;
+
+const N: usize = 4_000_000;
+const REPS: usize = 5;
+
+fn best_of<F: FnMut()>(mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let data: Vec<f32> = (0..N).map(|_| rng.normal_ms(0.0, 0.4) as f32).collect();
+    let qp = QuantParams::from_data(&data, K);
+    let sched = Schedule::paper_default();
+
+    let mut table = Table::new(
+        &format!("codec micro-bench ({} M elements, best of {REPS})", N / 1_000_000),
+        &["primitive", "time", "Melem/s", "GB/s (in)"],
+    );
+    let mut row = |name: &str, secs: f64, in_bytes: usize| {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1} ms", secs * 1e3),
+            format!("{:.0}", N as f64 / secs / 1e6),
+            format!("{:.2}", in_bytes as f64 / secs / 1e9),
+        ]);
+    };
+
+    // quantize (Eq. 2)
+    let mut q = vec![0u32; N];
+    let t = best_of(|| quantize::quantize_into(&data, &qp, &mut q));
+    row("quantize (Eq.2)", t, N * 4);
+
+    // split+pack one 2-bit plane (Eq. 3)
+    let t = best_of(|| {
+        let plane = bitplane::split_plane(&q, &sched, 0);
+        let _ = bitplane::pack_plane(&plane, 2);
+    });
+    row("split+pack 2-bit plane (Eq.3)", t, N * 4);
+
+    // unpack + OR-concat one plane (Eq. 4, client hot path); the real
+    // client reuses its accumulator, so allocation is outside the timing
+    let packed = bitplane::pack_plane(&bitplane::split_plane(&q, &sched, 0), 2);
+    let mut acc = Accumulator::new(N, sched.clone());
+    let t = best_of(|| {
+        acc.reset();
+        acc.absorb(&packed).unwrap();
+    });
+    row("unpack+concat 2-bit plane (Eq.4)", t, packed.len());
+
+    // dequantize (Eq. 5, per-stage hot path)
+    let mut out = vec![0f32; N];
+    let dp = DequantParams::new(&qp, K);
+    let t = best_of(|| dequantize_into(&q, dp, &mut out));
+    row("dequantize (Eq.5)", t, N * 4);
+
+    // full stage: unpack + concat + dequant (what the client does per stage)
+    let t = best_of(|| {
+        acc.reset();
+        acc.absorb(&packed).unwrap();
+        dequantize_into(acc.codes(), DequantParams::new(&qp, 2), &mut out);
+    });
+    row("full stage reconstruct", t, packed.len() + N * 4);
+
+    // full encode (server, once per deployment)
+    let t = best_of(|| {
+        let q2 = quantize::quantize(&data, &qp);
+        let _ = bitplane::encode_planes(&q2, &sched);
+    });
+    row("full encode (8 stages)", t, N * 4);
+
+    println!("{}", table.render());
+    println!("§Perf target (DESIGN.md): ≥1 GB/s/core for the per-stage reconstruct path.");
+}

@@ -1,0 +1,109 @@
+//! End-to-end serving bench: the coordinator (router + dynamic batcher)
+//! under closed-loop multi-threaded load, in two scenarios:
+//!
+//!  1. steady state — fully downloaded model, throughput/latency;
+//!  2. progressive refinement — weights hot-swap mid-load (the serve_e2e
+//!     example's scenario), verifying serving never stalls.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use prognet::coordinator::{BatcherConfig, Router};
+use prognet::eval::EvalSet;
+use prognet::metrics::Table;
+use prognet::models::Registry;
+use prognet::runtime::Engine;
+use prognet::util::stats::{fmt_secs, Summary};
+
+const MODEL: &str = "mlp";
+
+fn main() -> prognet::Result<()> {
+    if !prognet::artifacts_available() {
+        eprintln!("e2e_serving: artifacts not built, skipping");
+        return Ok(());
+    }
+    let engine = Engine::global()?;
+    let registry = Registry::open_default()?;
+    let manifest = registry.get(MODEL)?.clone();
+    let eval = Arc::new(EvalSet::load_named(&manifest.dataset)?);
+    let flat = Arc::new(manifest.load_weights()?);
+
+    let mut table = Table::new(
+        "e2e serving (router + dynamic batcher, closed loop)",
+        &["scenario", "threads", "requests", "req/s", "p50", "p99"],
+    );
+
+    for (scenario, threads, swap) in [
+        ("steady state", 1usize, false),
+        ("steady state", 4, false),
+        ("steady state", 8, false),
+        ("hot-swap refinement", 4, true),
+    ] {
+        let router = Arc::new(Router::new(
+            engine.clone(),
+            Registry::open_default()?,
+            BatcherConfig {
+                max_batch: 32,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 1024,
+            },
+        ));
+        router.publish_weights(MODEL, &flat, if swap { 2 } else { 16 })?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let router = router.clone();
+                let eval = eval.clone();
+                let stop = stop.clone();
+                let served = served.clone();
+                std::thread::spawn(move || {
+                    let mut lat = Summary::new();
+                    let mut i = w;
+                    while !stop.load(Ordering::Relaxed) {
+                        let img = eval.image(i % eval.n).to_vec();
+                        let r = router.infer(MODEL, img).unwrap();
+                        lat.add(r.latency.as_secs_f64());
+                        served.fetch_add(1, Ordering::Relaxed);
+                        i += 1;
+                    }
+                    lat
+                })
+            })
+            .collect();
+
+        if swap {
+            // publish 8 refinements over the run
+            for bits in [4u32, 6, 8, 10, 12, 14, 16] {
+                std::thread::sleep(Duration::from_millis(120));
+                router.publish_weights(MODEL, &flat, bits)?;
+            }
+            std::thread::sleep(Duration::from_millis(150));
+        } else {
+            std::thread::sleep(Duration::from_millis(1000));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let mut lat = Summary::new();
+        for h in handles {
+            for s in h.join().unwrap().samples() {
+                lat.add(*s);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let n = served.load(Ordering::Relaxed);
+        table.row(vec![
+            scenario.into(),
+            threads.to_string(),
+            n.to_string(),
+            format!("{:.0}", n as f64 / secs),
+            fmt_secs(lat.median()),
+            fmt_secs(lat.p99()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("§Perf target: coordinator overhead (queueing vs raw execute) small;\nsee runtime bench for the raw executable latency.");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! PJRT runtime micro-benchmarks: executable latency per model and batch
+//! size, plus the fused-Pallas-dequant (qfwd) variant.
+
+use std::time::Instant;
+
+use prognet::eval::EvalSet;
+use prognet::metrics::Table;
+use prognet::models::Registry;
+use prognet::quant::{quantize, QuantParams, K};
+use prognet::runtime::{Engine, ModelSession};
+
+fn bench<F: FnMut() -> prognet::Result<()>>(mut f: F, reps: usize) -> prognet::Result<f64> {
+    // warmup
+    f()?;
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f()?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+fn main() -> prognet::Result<()> {
+    if !prognet::artifacts_available() {
+        eprintln!("runtime: artifacts not built, skipping");
+        return Ok(());
+    }
+    let engine = Engine::global()?;
+    let registry = Registry::open_default()?;
+
+    let mut table = Table::new(
+        "PJRT executable latency (best of 5)",
+        &["model", "path", "batch", "latency", "images/s"],
+    );
+    for name in ["mlp", "cnn", "widecnn", "detector"] {
+        let manifest = registry.get(name)?;
+        let eval = EvalSet::load_named(&manifest.dataset)?;
+        let session = ModelSession::load(&engine, manifest)?;
+        let flat = manifest.load_weights()?;
+        for batch in [1usize, 32, 256] {
+            let images = eval.image_batch(batch.min(eval.n)).to_vec();
+            let n = batch.min(eval.n);
+            let t = bench(|| session.infer(&images, n, &flat).map(|_| ()), 5)?;
+            table.row(vec![
+                name.into(),
+                "fwd".into(),
+                batch.to_string(),
+                format!("{:.2} ms", t * 1e3),
+                format!("{:.0}", n as f64 / t),
+            ]);
+        }
+        // fused qfwd (Pallas dequant inside the executable) at batch 32
+        if session.has_qfwd() {
+            let mut qflat = vec![0u32; flat.len()];
+            for t in &manifest.tensors {
+                let seg = &flat[t.offset..t.offset + t.numel];
+                let qp = QuantParams::from_data(seg, K);
+                qflat[t.offset..t.offset + t.numel]
+                    .copy_from_slice(&quantize::quantize(seg, &qp));
+            }
+            let n = 32;
+            let images = eval.image_batch(n).to_vec();
+            let t = bench(
+                || session.infer_quantized(&images, n, &qflat, K).map(|_| ()),
+                3,
+            )?;
+            table.row(vec![
+                name.into(),
+                "qfwd (Pallas dequant)".into(),
+                "32".into(),
+                format!("{:.2} ms", t * 1e3),
+                format!("{:.0}", n as f64 / t),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "note: qfwd embeds the interpret-mode Pallas dequant + matmul kernels\n\
+         in the HLO — correctness-path on CPU; real-TPU perf is estimated in\n\
+         DESIGN.md §3 (VMEM/roofline), not measurable on the CPU plugin."
+    );
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Table III + Fig 8 — the (simulated) user study.
+//!
+//! Protocol identical to the paper: 6 labeling stages, 8–12 images each,
+//! groups A (singleton) and B (progressive), link speeds 0.1 / 0.2 /
+//! 0.5 MB/s, MobileNetV2-sized transfer (7.1 MB). Participants are the
+//! behavioural model of `sim::user` (DESIGN.md §2 documents why and how
+//! it is calibrated). Expected shape: B > A at every speed; paper overall
+//! A=45%, B=71%.
+
+use prognet::metrics::Table;
+use prognet::sim::study::{run_table3, StudyConfig};
+use prognet::sim::survey::survey_from_waits;
+
+fn main() {
+    // n=29/28 in the paper; use a larger synthetic cohort for stability,
+    // plus the paper-sized cohort for the literal table.
+    for (label, users) in [("paper-sized cohort (n=29/group)", 29), ("large cohort (n=500/group)", 500)] {
+        let cfg = StudyConfig {
+            users_per_group: users,
+            ..Default::default()
+        };
+        let rows = run_table3(&cfg);
+        let mut t = Table::new(
+            &format!("Table III — active users of 'Find automatically', {label}"),
+            &["Network Speed", "images/stage", "Group A", "Group B"],
+        );
+        let (mut aa, mut na, mut ab, mut nb) = (0usize, 0usize, 0usize, 0usize);
+        let mut waits_a = Vec::new();
+        let mut waits_b = Vec::new();
+        for (speed, images, a, b) in &rows {
+            t.row(vec![
+                format!("{speed} MB/s"),
+                images.to_string(),
+                format!("{:.0}%", a.active_ratio() * 100.0),
+                format!("{:.0}%", b.active_ratio() * 100.0),
+            ]);
+            // With the paper-sized cohort (n=29) the per-cell estimate is
+            // noisy (±9pp at 95%); only the large cohort must strictly
+            // reproduce the B > A ordering per cell.
+            if users > 100 {
+                assert!(
+                    b.active_ratio() > a.active_ratio(),
+                    "paper shape violated at {speed} MB/s"
+                );
+            }
+            aa += a.active;
+            na += a.n;
+            ab += b.active;
+            nb += b.n;
+            waits_a.extend_from_slice(&a.user_mean_waits);
+            waits_b.extend_from_slice(&b.user_mean_waits);
+        }
+        t.row(vec![
+            "Overall".into(),
+            "-".into(),
+            format!("{:.0}%", aa as f64 / na as f64 * 100.0),
+            format!("{:.0}%", ab as f64 / nb as f64 * 100.0),
+        ]);
+        println!("{}", t.render());
+
+        if users > 100 {
+            let sa = survey_from_waits(&waits_a, 0.68, cfg.seed);
+            let sb = survey_from_waits(&waits_b, 0.68, cfg.seed + 1);
+            println!("{}", sa.render("Fig 8 — Group A (w/o progressive)"));
+            println!("{}", sb.render("Fig 8 — Group B (w/ progressive)"));
+            assert!(
+                sb.mean_score() > sa.mean_score(),
+                "Fig 8 shape: B must be more satisfied"
+            );
+            println!(
+                "mean Likert score: A {:.2}, B {:.2} (higher = more satisfied)\n",
+                sa.mean_score(),
+                sb.mean_score()
+            );
+        }
+    }
+    println!("paper (Table III): A 44/42/50% overall 45%; B 67/64/88% overall 71%.");
+}

@@ -1,0 +1,222 @@
+//! Incremental model assembly: per-tensor Eq. 4 accumulators + Eq. 5
+//! dequantization into a reusable flat weight buffer.
+
+use anyhow::{bail, Result};
+
+use crate::format::header::PnetManifest;
+use crate::quant::{dequantize_into, Accumulator, DequantParams};
+
+/// Assembles a progressive model from fragments, tensor by tensor.
+pub struct Assembler {
+    manifest: PnetManifest,
+    accs: Vec<Accumulator>,
+    /// number of tensors that completed each stage
+    stage_counts: Vec<usize>,
+    /// highest stage for which *all* tensors have arrived, +1 (0 = none)
+    stages_complete: usize,
+    /// reusable dequantized flat weights
+    flat: Vec<f32>,
+    /// stage reflected in `flat` (+1), 0 = never dequantized
+    flat_stage: usize,
+}
+
+impl Assembler {
+    pub fn new(manifest: PnetManifest) -> Self {
+        let accs = manifest
+            .tensors
+            .iter()
+            .map(|t| Accumulator::new(t.numel, manifest.schedule.clone()))
+            .collect();
+        let stage_counts = vec![0; manifest.schedule.stages()];
+        let flat = vec![0f32; manifest.param_count()];
+        Self {
+            manifest,
+            accs,
+            stage_counts,
+            stages_complete: 0,
+            flat,
+            flat_stage: 0,
+        }
+    }
+
+    pub fn manifest(&self) -> &PnetManifest {
+        &self.manifest
+    }
+
+    /// Absorb one fragment; returns `Some(stage)` when this fragment
+    /// completed that stage across all tensors.
+    pub fn absorb(&mut self, stage: usize, tensor: usize, payload: &[u8]) -> Result<Option<usize>> {
+        if tensor >= self.accs.len() {
+            bail!("tensor index {tensor} out of range");
+        }
+        if stage >= self.manifest.schedule.stages() {
+            bail!("stage {stage} out of range");
+        }
+        let acc = &mut self.accs[tensor];
+        if acc.stages_received() != stage {
+            bail!(
+                "tensor {tensor}: expected stage {}, got {stage}",
+                acc.stages_received()
+            );
+        }
+        acc.absorb(payload)?;
+        self.stage_counts[stage] += 1;
+        if self.stage_counts[stage] == self.accs.len() && self.stages_complete == stage {
+            self.stages_complete = stage + 1;
+            return Ok(Some(stage));
+        }
+        Ok(None)
+    }
+
+    /// Number of fully received stages.
+    pub fn stages_complete(&self) -> usize {
+        self.stages_complete
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.stages_complete == self.manifest.schedule.stages()
+    }
+
+    /// Cumulative bits of the last complete stage (0 if none).
+    pub fn cum_bits(&self) -> u32 {
+        if self.stages_complete == 0 {
+            0
+        } else {
+            self.manifest.schedule.cum_bits(self.stages_complete - 1)
+        }
+    }
+
+    /// Dequantize the current state into the internal flat buffer and
+    /// return it (Eq. 5 with the midpoint revision for missing bits).
+    ///
+    /// This is the per-stage reconstruct hot path. The buffer is reused;
+    /// no allocation happens after construction.
+    pub fn reconstruct(&mut self) -> Result<&[f32]> {
+        if self.stages_complete == 0 {
+            bail!("no complete stage to reconstruct");
+        }
+        let cum = self.cum_bits();
+        for (t, acc) in self.manifest.tensors.iter().zip(&self.accs) {
+            let qp = t.quant_params(self.manifest.k);
+            let dp = DequantParams::new(&qp, cum);
+            dequantize_into(
+                acc.codes(),
+                dp,
+                &mut self.flat[t.offset..t.offset + t.numel],
+            );
+        }
+        self.flat_stage = self.stages_complete;
+        Ok(&self.flat)
+    }
+
+    /// The current flat code vector concatenated across tensors (for the
+    /// fused `qfwd` path — dequant runs inside the executable instead).
+    pub fn codes_flat(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.manifest.param_count()];
+        for (t, acc) in self.manifest.tensors.iter().zip(&self.accs) {
+            out[t.offset..t.offset + t.numel].copy_from_slice(acc.codes());
+        }
+        out
+    }
+
+    /// Last reconstructed weights without re-running dequant.
+    pub fn flat(&self) -> &[f32] {
+        &self.flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::header::manifest_from_weights;
+    use crate::format::PnetWriter;
+    use crate::quant::Schedule;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (PnetWriter, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        let flat: Vec<f32> = (0..800).map(|_| r.normal() as f32).collect();
+        let m = manifest_from_weights(
+            "toy",
+            "classify",
+            &[
+                ("w1".to_string(), vec![20, 30]),
+                ("b1".to_string(), vec![30]),
+                ("w2".to_string(), vec![170]),
+            ],
+            &flat,
+            Schedule::paper_default(),
+        )
+        .unwrap();
+        (PnetWriter::encode(m, &flat).unwrap(), flat)
+    }
+
+    #[test]
+    fn stage_completion_tracking() {
+        let (w, _) = setup(1);
+        let mut asm = Assembler::new(w.manifest().clone());
+        assert_eq!(asm.stages_complete(), 0);
+        // stage 0, tensors 0..2
+        assert_eq!(asm.absorb(0, 0, w.fragment(0, 0)).unwrap(), None);
+        assert_eq!(asm.absorb(0, 1, w.fragment(0, 1)).unwrap(), None);
+        assert_eq!(asm.absorb(0, 2, w.fragment(0, 2)).unwrap(), Some(0));
+        assert_eq!(asm.stages_complete(), 1);
+        assert_eq!(asm.cum_bits(), 2);
+    }
+
+    #[test]
+    fn reconstruction_error_shrinks_with_stages() {
+        let (w, orig) = setup(2);
+        let mut asm = Assembler::new(w.manifest().clone());
+        let mut prev = f32::INFINITY;
+        for s in 0..8 {
+            for t in 0..3 {
+                asm.absorb(s, t, w.fragment(s, t)).unwrap();
+            }
+            let flat = asm.reconstruct().unwrap();
+            let err = flat
+                .iter()
+                .zip(&orig)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(err <= prev + 1e-6);
+            prev = err;
+        }
+        assert!(asm.is_complete());
+        // full 16-bit reconstruction: tight error
+        let max_range = w
+            .manifest()
+            .tensors
+            .iter()
+            .map(|t| t.max - t.min)
+            .fold(0f32, f32::max);
+        assert!(prev <= max_range / 65536.0 + 1e-6);
+    }
+
+    #[test]
+    fn out_of_order_fragment_rejected() {
+        let (w, _) = setup(3);
+        let mut asm = Assembler::new(w.manifest().clone());
+        assert!(asm.absorb(1, 0, w.fragment(1, 0)).is_err());
+    }
+
+    #[test]
+    fn reconstruct_before_any_stage_is_error() {
+        let (w, _) = setup(4);
+        let mut asm = Assembler::new(w.manifest().clone());
+        assert!(asm.reconstruct().is_err());
+    }
+
+    #[test]
+    fn codes_flat_matches_accumulators() {
+        let (w, _) = setup(5);
+        let mut asm = Assembler::new(w.manifest().clone());
+        for t in 0..3 {
+            asm.absorb(0, t, w.fragment(0, t)).unwrap();
+        }
+        let codes = asm.codes_flat();
+        assert_eq!(codes.len(), 800);
+        // stage 0 = top 2 bits only
+        assert!(codes.iter().all(|&c| c & 0x3FFF == 0));
+    }
+}

@@ -1,0 +1,268 @@
+//! Persistent download cache with resume.
+//!
+//! Mirrors what a browser cache / app storage does in the paper's
+//! scenarios (Fig 2): a partially transmitted `.pnet` is kept on disk and
+//! resumed with the server's `offset` support, so an interrupted download
+//! costs only the missing bytes. Completed containers are reused without
+//! touching the network.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::format::PnetReader;
+use crate::server::proto::FetchRequest;
+use crate::server::service::open_fetch;
+
+/// On-disk cache of `.pnet` containers, keyed by model + schedule.
+pub struct ModelCache {
+    dir: PathBuf,
+}
+
+/// Outcome of a cached fetch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FetchOutcome {
+    /// served entirely from cache
+    CacheHit,
+    /// resumed a partial file (bytes downloaded now)
+    Resumed { fetched: u64 },
+    /// full download (bytes downloaded)
+    Downloaded { fetched: u64 },
+}
+
+impl ModelCache {
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn key_path(&self, req: &FetchRequest) -> PathBuf {
+        let sched = req
+            .schedule
+            .as_ref()
+            .map(|s| {
+                s.widths()
+                    .iter()
+                    .map(|w| w.to_string())
+                    .collect::<Vec<_>>()
+                    .join("-")
+            })
+            .unwrap_or_else(|| "default".into());
+        self.dir.join(format!("{}.{sched}.pnet", req.model))
+    }
+
+    fn part_path(&self, req: &FetchRequest) -> PathBuf {
+        self.key_path(req).with_extension("pnet.part")
+    }
+
+    /// Fetch a container, using cache + resume. Returns the complete
+    /// container bytes and how they were obtained.
+    pub fn fetch(
+        &self,
+        addr: &std::net::SocketAddr,
+        req: &FetchRequest,
+    ) -> Result<(Vec<u8>, FetchOutcome)> {
+        let final_path = self.key_path(req);
+        if final_path.exists() {
+            let bytes = std::fs::read(&final_path)?;
+            // integrity: must still parse (evicts corrupt entries)
+            if PnetReader::from_bytes(&bytes).is_ok() {
+                return Ok((bytes, FetchOutcome::CacheHit));
+            }
+            crate::log_warn!("cache entry {} corrupt; refetching", final_path.display());
+            let _ = std::fs::remove_file(&final_path);
+        }
+
+        let part_path = self.part_path(req);
+        let mut existing = if part_path.exists() {
+            std::fs::read(&part_path)?
+        } else {
+            Vec::new()
+        };
+
+        let mut attempt_req = req.clone().with_offset(existing.len() as u64);
+        let (mut stream, total) = match open_fetch(addr, &attempt_req) {
+            Ok(ok) => ok,
+            Err(_) if !existing.is_empty() => {
+                // stale partial (e.g. server re-encoded); restart clean
+                existing.clear();
+                attempt_req = req.clone();
+                open_fetch(addr, &attempt_req)?
+            }
+            Err(e) => return Err(e),
+        };
+        if (existing.len() as u64) > total {
+            // partial longer than the container: stale — restart
+            existing.clear();
+            drop(stream);
+            let (s2, _) = open_fetch(addr, req)?;
+            stream = s2;
+        }
+        let resumed_from = existing.len() as u64;
+        let mut fetched = 0u64;
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            let n = stream.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            existing.extend_from_slice(&buf[..n]);
+            fetched += n as u64;
+            // checkpoint the partial periodically
+            if fetched % (256 * 1024) < buf.len() as u64 {
+                self.write_part(&part_path, &existing)?;
+            }
+        }
+        anyhow::ensure!(
+            existing.len() as u64 == total,
+            "download incomplete: {} of {total}",
+            existing.len()
+        );
+        // validate + promote to final
+        PnetReader::from_bytes(&existing).context("downloaded container invalid")?;
+        std::fs::write(&final_path, &existing)?;
+        let _ = std::fs::remove_file(&part_path);
+        let outcome = if resumed_from > 0 {
+            FetchOutcome::Resumed { fetched }
+        } else {
+            FetchOutcome::Downloaded { fetched }
+        };
+        Ok((existing, outcome))
+    }
+
+    fn write_part(&self, path: &Path, data: &[u8]) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(data)?;
+        f.flush()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Simulate an interrupted download: keep only `bytes` of the partial.
+    /// (Used by tests and failure-injection harnesses.)
+    pub fn store_partial(&self, req: &FetchRequest, data: &[u8]) -> Result<()> {
+        self.write_part(&self.part_path(req), data)
+    }
+
+    pub fn evict(&self, req: &FetchRequest) {
+        let _ = std::fs::remove_file(self.key_path(req));
+        let _ = std::fs::remove_file(self.part_path(req));
+    }
+
+    pub fn has(&self, req: &FetchRequest) -> bool {
+        self.key_path(req).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::service::ServerConfig;
+    use crate::server::{Repository, Server};
+    use std::sync::Arc;
+
+    fn setup() -> Option<(Server, Arc<Repository>, ModelCache)> {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let server = Server::start("127.0.0.1:0", repo.clone(), ServerConfig::default()).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "prognet-cache-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ModelCache::open(&dir).unwrap();
+        Some((server, repo, cache))
+    }
+
+    #[test]
+    fn download_then_hit() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        let (bytes, outcome) = cache.fetch(&server.addr(), &req).unwrap();
+        assert!(matches!(outcome, FetchOutcome::Downloaded { .. }));
+        let expect = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        assert_eq!(&bytes[..], &expect[..]);
+
+        // second fetch: no network (kill the server to prove it)
+        drop(server);
+        let (bytes2, outcome2) = cache.fetch(&"127.0.0.1:1".parse().unwrap(), &req).unwrap();
+        assert_eq!(outcome2, FetchOutcome::CacheHit);
+        assert_eq!(bytes2, bytes);
+    }
+
+    #[test]
+    fn resume_from_partial() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        let full = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        // plant a half-downloaded partial
+        let half = full.len() / 2;
+        cache.store_partial(&req, &full[..half]).unwrap();
+        let (bytes, outcome) = cache.fetch(&server.addr(), &req).unwrap();
+        match outcome {
+            FetchOutcome::Resumed { fetched } => {
+                assert_eq!(fetched as usize, full.len() - half);
+            }
+            o => panic!("expected resume, got {o:?}"),
+        }
+        assert_eq!(&bytes[..], &full[..]);
+    }
+
+    #[test]
+    fn corrupt_cache_entry_refetched() {
+        let Some((server, _repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        cache.fetch(&server.addr(), &req).unwrap();
+        // corrupt the cached file
+        let path = cache.key_path(&req);
+        let mut data = std::fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 5] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let (bytes, outcome) = cache.fetch(&server.addr(), &req).unwrap();
+        assert!(matches!(outcome, FetchOutcome::Downloaded { .. }));
+        assert!(PnetReader::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn stale_oversized_partial_restarts() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        let full = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        // partial longer than the real container (server re-encoded)
+        let mut bogus = full.to_vec();
+        bogus.extend_from_slice(&[0u8; 1024]);
+        cache.store_partial(&req, &bogus).unwrap();
+        let (bytes, _) = cache.fetch(&server.addr(), &req).unwrap();
+        assert_eq!(&bytes[..], &full[..]);
+    }
+
+    #[test]
+    fn distinct_schedules_cached_separately() {
+        let Some((server, _repo, cache)) = setup() else { return };
+        let a = FetchRequest::new("mlp");
+        let b = FetchRequest::new("mlp")
+            .with_schedule(crate::quant::Schedule::new(vec![8, 8], 16).unwrap());
+        cache.fetch(&server.addr(), &a).unwrap();
+        assert!(cache.has(&a));
+        assert!(!cache.has(&b));
+        let (bytes_b, _) = cache.fetch(&server.addr(), &b).unwrap();
+        let r = PnetReader::from_bytes(&bytes_b).unwrap();
+        assert_eq!(r.manifest.schedule.stages(), 2);
+    }
+}

@@ -1,0 +1,165 @@
+//! Socket download loop: reads chunks, feeds the incremental `.pnet`
+//! parser, forwards events. Records byte/stage arrival times.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::format::{FrameParser, ParserEvent};
+use crate::server::proto::FetchRequest;
+use crate::server::service::open_fetch;
+
+/// Download chunk size. Small enough that stage boundaries are observed
+/// promptly at paper link speeds, large enough to be cheap.
+pub const CHUNK: usize = 8 * 1024;
+
+/// A timestamped parser event.
+#[derive(Debug)]
+pub struct TimedEvent {
+    pub t: f64,
+    pub event: ParserEvent,
+}
+
+/// Streaming downloader bound to one fetch.
+pub struct Downloader {
+    stream: TcpStream,
+    parser: FrameParser,
+    start: Instant,
+    pub total_size: u64,
+    buf: Vec<u8>,
+}
+
+impl Downloader {
+    /// Connect and issue the fetch request.
+    pub fn connect(addr: &std::net::SocketAddr, req: &FetchRequest) -> Result<Self> {
+        let (stream, total_size) = open_fetch(addr, req)?;
+        Ok(Self {
+            stream,
+            parser: FrameParser::new(),
+            start: Instant::now(),
+            total_size,
+            buf: vec![0u8; CHUNK],
+        })
+    }
+
+    /// Set a small kernel receive buffer so that *not reading* (serial
+    /// mode) actually back-pressures the sender, as a busy browser tab
+    /// would stall a slow HTTP stream.
+    pub fn set_small_recv_buffer(&self) -> Result<()> {
+        use std::os::fd::AsRawFd;
+        let fd = self.stream.as_raw_fd();
+        let size: libc::c_int = 16 * 1024;
+        let rc = unsafe {
+            libc::setsockopt(
+                fd,
+                libc::SOL_SOCKET,
+                libc::SO_RCVBUF,
+                &size as *const _ as *const libc::c_void,
+                std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            )
+        };
+        anyhow::ensure!(rc == 0, "setsockopt(SO_RCVBUF) failed");
+        Ok(())
+    }
+
+    /// Seconds since the fetch started.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn start_instant(&self) -> Instant {
+        self.start
+    }
+
+    pub fn bytes_received(&self) -> u64 {
+        self.parser.bytes_consumed()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.parser.is_done()
+    }
+
+    /// Blocking read of the next chunk; returns timestamped events.
+    /// Empty vec + `is_done()` signals completion.
+    pub fn next_events(&mut self) -> Result<Vec<TimedEvent>> {
+        loop {
+            if self.parser.is_done() {
+                return Ok(Vec::new());
+            }
+            let n = self.stream.read(&mut self.buf)?;
+            if n == 0 {
+                anyhow::bail!(
+                    "connection closed early at {} / {} bytes",
+                    self.parser.bytes_consumed(),
+                    self.total_size
+                );
+            }
+            let events = self.parser.feed(&self.buf[..n])?;
+            if !events.is_empty() {
+                let t = self.elapsed();
+                return Ok(events
+                    .into_iter()
+                    .map(|event| TimedEvent { t, event })
+                    .collect());
+            }
+        }
+    }
+
+    /// Drain the entire stream, returning all events (non-progressive
+    /// "singleton" download).
+    pub fn download_all(&mut self) -> Result<Vec<TimedEvent>> {
+        let mut out = Vec::new();
+        while !self.is_done() {
+            out.extend(self.next_events()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Schedule;
+    use crate::server::{Repository, Server};
+    use crate::server::service::ServerConfig;
+    use std::sync::Arc;
+
+    #[test]
+    fn download_all_yields_all_fragments() {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let server = Server::start("127.0.0.1:0", repo.clone(), ServerConfig::default()).unwrap();
+        let mut dl = Downloader::connect(&server.addr(), &FetchRequest::new("mlp")).unwrap();
+        let events = dl.download_all().unwrap();
+        let m = repo.registry().get("mlp").unwrap();
+        let frags = events
+            .iter()
+            .filter(|e| matches!(e.event, ParserEvent::Fragment { .. }))
+            .count();
+        assert_eq!(
+            frags,
+            Schedule::paper_default().stages() * m.tensors.len()
+        );
+        assert!(dl.is_done());
+        assert_eq!(dl.bytes_received(), dl.total_size);
+    }
+
+    #[test]
+    fn events_are_time_ordered() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+        let mut dl = Downloader::connect(&server.addr(), &FetchRequest::new("mlp")).unwrap();
+        let events = dl.download_all().unwrap();
+        for w in events.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+    }
+}

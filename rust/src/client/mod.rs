@@ -1,0 +1,24 @@
+//! The progressive client — the "user device" half of Fig 1.
+//!
+//! Pipeline: bytes arrive from the socket ([`downloader`]) → the frame
+//! parser yields fragments → the [`assembler`] OR-accumulates them into
+//! per-tensor code buffers (Eq. 4) → on each completed stage the weights
+//! are dequantized (Eq. 5) and the approximate model is inferred.
+//!
+//! [`progressive::ProgressiveClient`] supports both execution modes of
+//! Fig 4: **serial** ("w/o concurrent": reconstruction + inference block
+//! the download) and **concurrent** (§III-C: a separate inference thread
+//! overlaps with the ongoing transfer — the paper's key systems trick
+//! that makes progressive inference free).
+
+pub mod assembler;
+pub mod cache;
+pub mod downloader;
+pub mod progressive;
+
+pub use assembler::Assembler;
+pub use cache::{FetchOutcome, ModelCache};
+pub use downloader::Downloader;
+pub use progressive::{
+    ExecMode, InferencePolicy, ProgressiveClient, ProgressiveOptions, SessionOutcome, StageResult,
+};

@@ -1,0 +1,271 @@
+//! Dynamic batching: requests accumulate up to `max_batch` or `max_delay`,
+//! whichever first, then run as one executable call.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::state::WeightStore;
+use crate::metrics::Histogram;
+use crate::runtime::ModelSession;
+use crate::util::pool::BoundedQueue;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_delay: Duration::from_millis(5),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Reply to one inference request.
+#[derive(Debug)]
+pub struct InferReply {
+    /// output row (output_dim values)
+    pub output: Result<Vec<f32>>,
+    /// weights version/bits used
+    pub cum_bits: u32,
+    /// queueing + execution latency
+    pub latency: Duration,
+}
+
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<InferReply>,
+}
+
+/// A per-model dynamic batcher with its own worker thread.
+pub struct Batcher {
+    queue: BoundedQueue<Request>,
+    worker: Option<JoinHandle<()>>,
+    input_numel: usize,
+    stats: Arc<std::sync::Mutex<Histogram>>,
+}
+
+impl Batcher {
+    /// Spawn the batcher worker. Inference uses the freshest snapshot of
+    /// `weights` at batch formation time.
+    pub fn start(session: Arc<ModelSession>, weights: WeightStore, config: BatcherConfig) -> Self {
+        let queue: BoundedQueue<Request> = BoundedQueue::new(config.queue_cap);
+        let q = queue.clone();
+        let input_numel = session.manifest().input_numel();
+        let stats = Arc::new(std::sync::Mutex::new(Histogram::new()));
+        let stats2 = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("batcher-{}", session.manifest().name))
+            .spawn(move || {
+                batch_loop(q, session, weights, config, stats2);
+            })
+            .expect("spawn batcher");
+        Self {
+            queue,
+            worker: Some(worker),
+            input_numel,
+            stats,
+        }
+    }
+
+    /// Enqueue one request; the reply arrives on the returned receiver.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<InferReply>> {
+        anyhow::ensure!(
+            image.len() == self.input_numel,
+            "image has {} values, expected {}",
+            image.len(),
+            self.input_numel
+        );
+        let (tx, rx) = mpsc::channel();
+        let ok = self.queue.push(Request {
+            image,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        anyhow::ensure!(ok, "batcher is shut down");
+        Ok(rx)
+    }
+
+    /// Blocking convenience call.
+    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<InferReply> {
+        let rx = self.submit(image)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Latency histogram snapshot.
+    pub fn latency_stats(&self) -> Histogram {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batch_loop(
+    queue: BoundedQueue<Request>,
+    session: Arc<ModelSession>,
+    weights: WeightStore,
+    config: BatcherConfig,
+    stats: Arc<std::sync::Mutex<Histogram>>,
+) {
+    let input_numel = session.manifest().input_numel();
+    let dim = session.manifest().output_dim();
+    loop {
+        // Block for the first request of the batch.
+        let Some(first) = queue.pop() else { break };
+        let deadline = Instant::now() + config.max_delay;
+        let mut batch = vec![first];
+        while batch.len() < config.max_batch {
+            match queue.try_pop() {
+                Some(r) => batch.push(r),
+                None => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+
+        let snap = weights.snapshot();
+        let n = batch.len();
+        let mut images = vec![0f32; n * input_numel];
+        for (i, r) in batch.iter().enumerate() {
+            images[i * input_numel..(i + 1) * input_numel].copy_from_slice(&r.image);
+        }
+        let result = session.infer(&images, n, &snap.flat);
+        match result {
+            Ok(out) => {
+                for (i, req) in batch.into_iter().enumerate() {
+                    let latency = req.enqueued.elapsed();
+                    stats.lock().unwrap().record(latency.as_secs_f64());
+                    let _ = req.reply.send(InferReply {
+                        output: Ok(out.row(i).to_vec()),
+                        cum_bits: snap.cum_bits,
+                        latency,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let latency = req.enqueued.elapsed();
+                    let _ = req.reply.send(InferReply {
+                        output: Err(anyhow::anyhow!("{msg}")),
+                        cum_bits: snap.cum_bits,
+                        latency,
+                    });
+                }
+            }
+        }
+        let _ = dim;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+    use crate::runtime::Engine;
+
+    fn setup() -> Option<(Arc<ModelSession>, WeightStore)> {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let engine = Engine::global().unwrap();
+        let reg = Registry::open_default().unwrap();
+        let m = reg.get("mlp").unwrap();
+        let session = Arc::new(ModelSession::load_batches(&engine, m, &[1, 32]).unwrap());
+        let ws = WeightStore::empty(m.param_count);
+        ws.publish(&m.load_weights().unwrap(), 16);
+        Some((session, ws))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let Some((session, ws)) = setup() else { return };
+        let numel = session.manifest().input_numel();
+        let mut b = Batcher::start(session, ws, BatcherConfig::default());
+        let reply = b.infer_blocking(vec![0.5f32; numel]).unwrap();
+        let out = reply.output.unwrap();
+        assert_eq!(out.len(), 10);
+        assert_eq!(reply.cum_bits, 16);
+        b.shutdown();
+    }
+
+    #[test]
+    fn many_requests_all_answered_exactly_once() {
+        let Some((session, ws)) = setup() else { return };
+        let numel = session.manifest().input_numel();
+        let b = Batcher::start(
+            session,
+            ws,
+            BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 256,
+            },
+        );
+        let rxs: Vec<_> = (0..50)
+            .map(|i| b.submit(vec![(i % 7) as f32 * 0.1; numel]).unwrap())
+            .collect();
+        let mut answered = 0;
+        for rx in rxs {
+            let reply = rx.recv().unwrap();
+            assert!(reply.output.is_ok());
+            answered += 1;
+            // exactly-once: a second recv must fail (sender dropped)
+            assert!(rx.try_recv().is_err());
+        }
+        assert_eq!(answered, 50);
+        assert_eq!(b.latency_stats().count(), 50);
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let Some((session, ws)) = setup() else { return };
+        let b = Batcher::start(session, ws, BatcherConfig::default());
+        assert!(b.submit(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn batching_outputs_match_unbatched() {
+        let Some((session, ws)) = setup() else { return };
+        let numel = session.manifest().input_numel();
+        let flat = ws.snapshot();
+        // direct single inference
+        let img = vec![0.25f32; numel];
+        let direct = session.infer(&img, 1, &flat.flat).unwrap();
+        let b = Batcher::start(session.clone(), ws, BatcherConfig::default());
+        // submit a burst so some requests batch together
+        let rxs: Vec<_> = (0..16).map(|_| b.submit(img.clone()).unwrap()).collect();
+        for rx in rxs {
+            let out = rx.recv().unwrap().output.unwrap();
+            for (a, c) in out.iter().zip(direct.row(0)) {
+                assert!((a - c).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Multi-client serving coordinator — the L3 "serving framework" layer.
+//!
+//! The progressive client ([`crate::client`]) refines a model in place
+//! while this coordinator serves inference requests against whatever
+//! approximation is currently available:
+//!
+//! - [`state::WeightStore`] — hot-swappable weights (stage refinements
+//!   are published atomically; in-flight batches keep the snapshot they
+//!   started with).
+//! - [`batcher::Batcher`] — dynamic batching per model (max-batch /
+//!   max-delay policy, like vLLM-style serving front-ends).
+//! - [`router::Router`] — routes requests by model id to its batcher.
+//! - [`scheduler::StageScheduler`] — §III-C decision logic: which
+//!   completed stages to run inference on, given measured inference cost
+//!   vs stage inter-arrival time.
+
+pub mod batcher;
+pub mod router;
+pub mod scheduler;
+pub mod state;
+
+pub use batcher::{Batcher, BatcherConfig, InferReply};
+pub use router::Router;
+pub use scheduler::{SchedulerDecision, StageScheduler};
+pub use state::{SessionState, SessionTable, WeightStore};

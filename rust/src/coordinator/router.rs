@@ -1,0 +1,169 @@
+//! Request router: model id → its dynamic batcher (lazily started).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig, InferReply};
+use super::state::WeightStore;
+use crate::models::Registry;
+use crate::runtime::{Engine, ModelSession};
+
+/// Multi-model inference front-end.
+pub struct Router {
+    engine: Engine,
+    registry: Registry,
+    config: BatcherConfig,
+    lanes: Mutex<HashMap<String, Arc<Lane>>>,
+}
+
+struct Lane {
+    batcher: Batcher,
+    weights: WeightStore,
+}
+
+impl Router {
+    pub fn new(engine: Engine, registry: Registry, config: BatcherConfig) -> Self {
+        Self {
+            engine,
+            registry,
+            config,
+            lanes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn lane(&self, model: &str) -> Result<Arc<Lane>> {
+        if let Some(l) = self.lanes.lock().unwrap().get(model) {
+            return Ok(l.clone());
+        }
+        // Build outside the lock (compilation can take a moment).
+        let manifest = self.registry.get(model)?;
+        let session = Arc::new(ModelSession::load_batches(
+            &self.engine,
+            manifest,
+            &manifest.fwd_batches(),
+        )?);
+        let weights = WeightStore::empty(manifest.param_count);
+        let batcher = Batcher::start(session, weights.clone(), self.config.clone());
+        let lane = Arc::new(Lane { batcher, weights });
+        let mut lanes = self.lanes.lock().unwrap();
+        // another thread may have raced us; keep the first
+        Ok(lanes.entry(model.to_string()).or_insert(lane).clone())
+    }
+
+    /// Publish refined weights for a model (from the progressive client).
+    pub fn publish_weights(&self, model: &str, flat: &[f32], cum_bits: u32) -> Result<()> {
+        let lane = self.lane(model)?;
+        lane.weights.publish(flat, cum_bits);
+        Ok(())
+    }
+
+    /// Is this model ready to serve (any weights published)?
+    pub fn model_ready(&self, model: &str) -> bool {
+        self.lanes
+            .lock()
+            .unwrap()
+            .get(model)
+            .map(|l| l.weights.ready())
+            .unwrap_or(false)
+    }
+
+    /// Route one request (blocking until the reply arrives).
+    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<InferReply> {
+        let lane = self.lane(model)?;
+        anyhow::ensure!(
+            lane.weights.ready(),
+            "model '{model}' has no published weights yet"
+        );
+        lane.batcher.infer_blocking(image)
+    }
+
+    /// Route one request asynchronously.
+    pub fn submit(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+    ) -> Result<std::sync::mpsc::Receiver<InferReply>> {
+        let lane = self.lane(model)?;
+        anyhow::ensure!(
+            lane.weights.ready(),
+            "model '{model}' has no published weights yet"
+        );
+        lane.batcher.submit(image)
+    }
+
+    /// Latency stats for a model's lane.
+    pub fn latency_stats(&self, model: &str) -> Option<crate::metrics::Histogram> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .get(model)
+            .map(|l| l.batcher.latency_stats())
+    }
+
+    pub fn active_models(&self) -> Vec<String> {
+        self.lanes.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<Router> {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let engine = Engine::global().unwrap();
+        let registry = Registry::open_default().unwrap();
+        Some(Router::new(engine, registry, BatcherConfig::default()))
+    }
+
+    #[test]
+    fn routes_by_model_and_requires_weights() {
+        let Some(router) = setup() else { return };
+        let reg = Registry::open_default().unwrap();
+        let m = reg.get("mlp").unwrap();
+        let img = vec![0.5f32; m.input_numel()];
+        // before weights published: refuse
+        assert!(router.infer("mlp", img.clone()).is_err());
+        router
+            .publish_weights("mlp", &m.load_weights().unwrap(), 16)
+            .unwrap();
+        assert!(router.model_ready("mlp"));
+        let r = router.infer("mlp", img).unwrap();
+        assert_eq!(r.output.unwrap().len(), 10);
+        assert!(router.active_models().contains(&"mlp".to_string()));
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let Some(router) = setup() else { return };
+        assert!(router.infer("nope", vec![0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn two_models_serve_independently() {
+        let Some(router) = setup() else { return };
+        let reg = Registry::open_default().unwrap();
+        for name in ["mlp", "cnn"] {
+            let m = reg.get(name).unwrap();
+            router
+                .publish_weights(name, &m.load_weights().unwrap(), 16)
+                .unwrap();
+        }
+        let mlp = reg.get("mlp").unwrap();
+        let cnn = reg.get("cnn").unwrap();
+        let a = router
+            .infer("mlp", vec![0.3f32; mlp.input_numel()])
+            .unwrap();
+        let b = router
+            .infer("cnn", vec![0.3f32; cnn.input_numel()])
+            .unwrap();
+        assert_eq!(a.output.unwrap().len(), 10);
+        assert_eq!(b.output.unwrap().len(), 10);
+        assert_eq!(router.active_models().len(), 2);
+    }
+}

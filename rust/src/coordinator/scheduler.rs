@@ -1,0 +1,172 @@
+//! §III-C stage-scheduling policy.
+//!
+//! Concurrency makes progressive inference free only while per-stage
+//! reconstruct+infer cost fits inside the transfer gap to the next stage.
+//! The scheduler tracks an EWMA of both and decides, per completed stage,
+//! whether to (a) infer it, (b) skip to the newest stage when lagging, or
+//! (c) defer everything to the final stage (degenerate link).
+
+/// Decision for a newly completed stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerDecision {
+    /// Run inference on this stage.
+    Infer,
+    /// Skip — a newer stage will arrive before this inference would end.
+    Skip,
+}
+
+/// Adaptive stage scheduler.
+#[derive(Debug, Clone)]
+pub struct StageScheduler {
+    /// EWMA of reconstruct+infer seconds
+    infer_cost: f64,
+    /// EWMA of the gap between consecutive stage completions
+    stage_gap: f64,
+    alpha: f64,
+    last_stage_t: Option<f64>,
+    /// never skip the final stage
+    total_stages: usize,
+    /// tunable: infer when cost <= headroom * gap
+    headroom: f64,
+}
+
+impl StageScheduler {
+    pub fn new(total_stages: usize) -> Self {
+        Self {
+            infer_cost: 0.0,
+            stage_gap: f64::INFINITY,
+            alpha: 0.4,
+            last_stage_t: None,
+            total_stages,
+            headroom: 1.0,
+        }
+    }
+
+    pub fn with_headroom(mut self, headroom: f64) -> Self {
+        self.headroom = headroom;
+        self
+    }
+
+    /// Record the observed cost of a reconstruct+infer pass.
+    pub fn observe_infer_cost(&mut self, secs: f64) {
+        if self.infer_cost == 0.0 {
+            self.infer_cost = secs;
+        } else {
+            self.infer_cost = self.alpha * secs + (1.0 - self.alpha) * self.infer_cost;
+        }
+    }
+
+    /// A stage completed at time `t`; decide what to do with it.
+    pub fn on_stage_complete(&mut self, stage: usize, t: f64) -> SchedulerDecision {
+        if let Some(prev) = self.last_stage_t {
+            let gap = (t - prev).max(1e-9);
+            self.stage_gap = if self.stage_gap.is_finite() {
+                self.alpha * gap + (1.0 - self.alpha) * self.stage_gap
+            } else {
+                gap
+            };
+        }
+        self.last_stage_t = Some(t);
+
+        if stage + 1 == self.total_stages {
+            return SchedulerDecision::Infer; // final model always shown
+        }
+        if self.infer_cost == 0.0 || !self.stage_gap.is_finite() {
+            return SchedulerDecision::Infer; // no data yet: be eager
+        }
+        if self.infer_cost <= self.headroom * self.stage_gap {
+            SchedulerDecision::Infer
+        } else {
+            SchedulerDecision::Skip
+        }
+    }
+
+    pub fn estimated_infer_cost(&self) -> f64 {
+        self.infer_cost
+    }
+
+    pub fn estimated_stage_gap(&self) -> f64 {
+        if self.stage_gap.is_finite() {
+            self.stage_gap
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_without_observations() {
+        let mut s = StageScheduler::new(8);
+        assert_eq!(s.on_stage_complete(0, 1.0), SchedulerDecision::Infer);
+    }
+
+    #[test]
+    fn fast_inference_always_runs() {
+        let mut s = StageScheduler::new(8);
+        s.observe_infer_cost(0.01);
+        for i in 0..8 {
+            // stages 1s apart, inference 10ms → always infer
+            assert_eq!(
+                s.on_stage_complete(i, i as f64),
+                SchedulerDecision::Infer,
+                "stage {i}"
+            );
+            s.observe_infer_cost(0.01);
+        }
+    }
+
+    #[test]
+    fn slow_inference_skips_middle_stages() {
+        let mut s = StageScheduler::new(8);
+        s.observe_infer_cost(5.0); // inference 5s
+        let mut decisions = Vec::new();
+        for i in 0..8 {
+            // stages 0.5s apart
+            decisions.push(s.on_stage_complete(i, i as f64 * 0.5));
+            s.observe_infer_cost(5.0);
+        }
+        // must skip some interior stages…
+        assert!(decisions[1..7].contains(&SchedulerDecision::Skip));
+        // …but never the final one
+        assert_eq!(decisions[7], SchedulerDecision::Infer);
+    }
+
+    #[test]
+    fn adapts_when_link_slows_down() {
+        let mut s = StageScheduler::new(16);
+        s.observe_infer_cost(1.0);
+        // fast stages first: skipping
+        let mut t = 0.0;
+        let mut skipped = false;
+        for i in 0..6 {
+            t += 0.1;
+            if s.on_stage_complete(i, t) == SchedulerDecision::Skip {
+                skipped = true;
+            }
+            s.observe_infer_cost(1.0);
+        }
+        assert!(skipped);
+        // link collapses to 10s gaps: inference fits again
+        for i in 6..10 {
+            t += 10.0;
+            let d = s.on_stage_complete(i, t);
+            if i > 7 {
+                assert_eq!(d, SchedulerDecision::Infer, "stage {i}");
+            }
+            s.observe_infer_cost(1.0);
+        }
+    }
+
+    #[test]
+    fn ewma_tracks() {
+        let mut s = StageScheduler::new(4);
+        s.observe_infer_cost(1.0);
+        s.observe_infer_cost(2.0);
+        let c = s.estimated_infer_cost();
+        assert!(c > 1.0 && c < 2.0);
+    }
+}

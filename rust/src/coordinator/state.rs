@@ -1,0 +1,191 @@
+//! Shared coordinator state: hot-swappable weights + client session table.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Versioned, hot-swappable flat weights.
+///
+/// The progressive client publishes each stage's reconstruction here; the
+/// batcher snapshots an `Arc` per batch, so refinement never blocks
+/// in-flight inference.
+#[derive(Clone)]
+pub struct WeightStore {
+    inner: Arc<RwLock<WeightsVersion>>,
+}
+
+#[derive(Clone)]
+pub struct WeightsVersion {
+    pub flat: Arc<Vec<f32>>,
+    /// cumulative quantization bits of this snapshot (0 = none yet)
+    pub cum_bits: u32,
+    /// monotonically increasing publish counter
+    pub version: u64,
+}
+
+impl WeightStore {
+    pub fn empty(param_count: usize) -> Self {
+        Self {
+            inner: Arc::new(RwLock::new(WeightsVersion {
+                flat: Arc::new(vec![0f32; param_count]),
+                cum_bits: 0,
+                version: 0,
+            })),
+        }
+    }
+
+    /// Publish a refined snapshot (copies the slice once).
+    pub fn publish(&self, flat: &[f32], cum_bits: u32) {
+        let mut w = self.inner.write().unwrap();
+        assert_eq!(flat.len(), w.flat.len(), "param count changed");
+        w.flat = Arc::new(flat.to_vec());
+        w.cum_bits = cum_bits;
+        w.version += 1;
+    }
+
+    /// Snapshot the current weights (cheap Arc clone).
+    pub fn snapshot(&self) -> WeightsVersion {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Has any stage been published yet?
+    pub fn ready(&self) -> bool {
+        self.inner.read().unwrap().version > 0
+    }
+}
+
+/// Per-download-session progress (exposed by the e2e driver's status).
+#[derive(Debug, Clone, Default)]
+pub struct SessionState {
+    pub model: String,
+    pub stages_complete: usize,
+    pub cum_bits: u32,
+    pub bytes_received: u64,
+    pub total_bytes: u64,
+    pub done: bool,
+}
+
+/// Thread-safe session table keyed by session id.
+#[derive(Default)]
+pub struct SessionTable {
+    next_id: AtomicU64,
+    sessions: Mutex<HashMap<u64, SessionState>>,
+}
+
+impl SessionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create(&self, model: &str) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.sessions.lock().unwrap().insert(
+            id,
+            SessionState {
+                model: model.to_string(),
+                ..Default::default()
+            },
+        );
+        id
+    }
+
+    pub fn update<F: FnOnce(&mut SessionState)>(&self, id: u64, f: F) {
+        if let Some(s) = self.sessions.lock().unwrap().get_mut(&id) {
+            f(s);
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<SessionState> {
+        self.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn remove(&self, id: u64) -> Option<SessionState> {
+        self.sessions.lock().unwrap().remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All sessions (for status dumps).
+    pub fn snapshot(&self) -> Vec<(u64, SessionState)> {
+        let mut v: Vec<_> = self
+            .sessions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (*k, s.clone()))
+            .collect();
+        v.sort_by_key(|(k, _)| *k);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_store_versioning() {
+        let ws = WeightStore::empty(4);
+        assert!(!ws.ready());
+        ws.publish(&[1.0, 2.0, 3.0, 4.0], 2);
+        let v1 = ws.snapshot();
+        assert_eq!(v1.version, 1);
+        assert_eq!(v1.cum_bits, 2);
+        ws.publish(&[1.1, 2.1, 3.1, 4.1], 4);
+        let v2 = ws.snapshot();
+        assert_eq!(v2.version, 2);
+        // old snapshot is unaffected (hot swap semantics)
+        assert_eq!(v1.flat[0], 1.0);
+        assert_eq!(v2.flat[0], 1.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "param count changed")]
+    fn publish_wrong_size_panics() {
+        let ws = WeightStore::empty(4);
+        ws.publish(&[0.0; 3], 2);
+    }
+
+    #[test]
+    fn session_table_crud() {
+        let t = SessionTable::new();
+        let a = t.create("cnn");
+        let b = t.create("mlp");
+        assert_ne!(a, b);
+        assert_eq!(t.len(), 2);
+        t.update(a, |s| {
+            s.stages_complete = 3;
+            s.cum_bits = 6;
+        });
+        assert_eq!(t.get(a).unwrap().stages_complete, 3);
+        assert_eq!(t.snapshot().len(), 2);
+        t.remove(a);
+        assert_eq!(t.len(), 1);
+        assert!(t.get(a).is_none());
+    }
+
+    #[test]
+    fn concurrent_publish_and_snapshot() {
+        let ws = WeightStore::empty(128);
+        let ws2 = ws.clone();
+        let writer = std::thread::spawn(move || {
+            for i in 1..=50u32 {
+                ws2.publish(&vec![i as f32; 128], (i % 16) + 1);
+            }
+        });
+        let mut last = 0;
+        for _ in 0..200 {
+            let v = ws.snapshot();
+            assert!(v.version >= last, "versions must not go backwards");
+            last = v.version;
+        }
+        writer.join().unwrap();
+        assert_eq!(ws.snapshot().version, 50);
+    }
+}

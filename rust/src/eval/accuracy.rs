@@ -1,0 +1,82 @@
+//! Classification metrics.
+
+use crate::runtime::InferOutput;
+
+/// Top-1 accuracy of `out` (class logits in the first `classes` columns)
+/// against integer labels.
+pub fn top1(out: &InferOutput, labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(out.n(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        if out.argmax_class(i, classes) == y as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len() as f64
+}
+
+/// Top-k accuracy (k small).
+pub fn topk(out: &InferOutput, labels: &[i32], classes: usize, k: usize) -> f64 {
+    assert_eq!(out.n(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &out.row(i)[..classes];
+        let mut idx: Vec<usize> = (0..classes).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        if idx[..k.min(classes)].contains(&(y as usize)) {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out_from(rows: Vec<Vec<f32>>) -> InferOutput {
+        let dim = rows[0].len();
+        InferOutput {
+            data: rows.into_iter().flatten().collect(),
+            dim,
+        }
+    }
+
+    #[test]
+    fn perfect_and_zero() {
+        let out = out_from(vec![vec![0.9, 0.1], vec![0.2, 0.8]]);
+        assert_eq!(top1(&out, &[0, 1], 2), 1.0);
+        assert_eq!(top1(&out, &[1, 0], 2), 0.0);
+    }
+
+    #[test]
+    fn partial() {
+        let out = out_from(vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ]);
+        assert_eq!(top1(&out, &[0, 1, 1, 2], 3), 0.75);
+    }
+
+    #[test]
+    fn topk_wider() {
+        let out = out_from(vec![vec![0.5, 0.4, 0.1]]);
+        assert_eq!(top1(&out, &[1], 3), 0.0);
+        assert_eq!(topk(&out, &[1], 3, 2), 1.0);
+    }
+
+    #[test]
+    fn ignores_extra_columns() {
+        // detection rows: 3 class cols + 4 box cols
+        let out = out_from(vec![vec![0.1, 0.9, 0.0, 0.5, 0.5, 0.2, 0.2]]);
+        assert_eq!(top1(&out, &[1], 3), 1.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Evaluation dataset loader (`artifacts/data/<name>/`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::bytes;
+use crate::util::json::Json;
+
+/// An evaluation split: images (+labels, +boxes for detection).
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub name: String,
+    pub n: usize,
+    pub image_shape: Vec<usize>,
+    pub classes: Vec<String>,
+    /// n * prod(image_shape) floats
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// n*4 cxcywh boxes for detection sets, empty otherwise
+    pub boxes: Vec<f32>,
+}
+
+impl EvalSet {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = Json::load(&dir.join("manifest.json"))?;
+        let n = j.get("n")?.as_usize()?;
+        let image_shape = j
+            .get("image_shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let classes = j
+            .get("classes")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let numel: usize = image_shape.iter().product();
+        let images = bytes::read_f32_file(&dir.join("images.bin"))?;
+        if images.len() != n * numel {
+            bail!("images.bin has {} floats, expected {}", images.len(), n * numel);
+        }
+        let labels = bytes::read_i32_file(&dir.join("labels.bin"))?;
+        if labels.len() != n {
+            bail!("labels.bin has {} entries, expected {n}", labels.len());
+        }
+        let boxes_path = dir.join("boxes.bin");
+        let boxes = if boxes_path.exists() {
+            let b = bytes::read_f32_file(&boxes_path)?;
+            if b.len() != n * 4 {
+                bail!("boxes.bin has {} floats, expected {}", b.len(), n * 4);
+            }
+            b
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            n,
+            image_shape,
+            classes,
+            images,
+            labels,
+            boxes,
+        })
+    }
+
+    /// Load by dataset name from the artifacts root.
+    pub fn load_named(name: &str) -> Result<Self> {
+        Self::load(&crate::artifacts_root().join("data").join(name))
+    }
+
+    pub fn image_numel(&self) -> usize {
+        self.image_shape.iter().product()
+    }
+
+    /// The first `n` images as one flat buffer.
+    pub fn image_batch(&self, n: usize) -> &[f32] {
+        &self.images[..n * self.image_numel()]
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let d = self.image_numel();
+        &self.images[i * d..(i + 1) * d]
+    }
+
+    pub fn is_detection(&self) -> bool {
+        !self.boxes.is_empty()
+    }
+
+    pub fn box_of(&self, i: usize) -> &[f32] {
+        &self.boxes[i * 4..(i + 1) * 4]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_real_eval_sets() {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = EvalSet::load_named("shapes10").unwrap();
+        assert_eq!(s.n, 256);
+        assert_eq!(s.classes.len(), 10);
+        assert_eq!(s.image_numel(), 32 * 32 * 3);
+        assert!(!s.is_detection());
+        assert!(s.labels.iter().all(|&l| (0..10).contains(&l)));
+        assert!(s.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+
+        let d = EvalSet::load_named("boxfind").unwrap();
+        assert!(d.is_detection());
+        assert_eq!(d.boxes.len(), d.n * 4);
+        assert!(d.boxes.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,134 @@
+//! Detection metrics: IoU and a boxAP-style score.
+//!
+//! The paper reports COCO boxAP for its detection rows (Table II). Our
+//! boxfind substitute has exactly one object per image, so AP reduces to:
+//! over IoU thresholds 0.5:0.05:0.95 (COCO convention), the fraction of
+//! images whose predicted box (with correct class) clears the threshold,
+//! averaged over thresholds. Same saturation behaviour vs bit-width as
+//! COCO boxAP, with far less machinery.
+
+use crate::runtime::InferOutput;
+
+/// IoU of two (cx, cy, w, h) boxes.
+pub fn iou_cxcywh(a: &[f32], b: &[f32]) -> f32 {
+    let corners = |t: &[f32]| {
+        (
+            t[0] - t[2] / 2.0,
+            t[1] - t[3] / 2.0,
+            t[0] + t[2] / 2.0,
+            t[1] + t[3] / 2.0,
+        )
+    };
+    let (ax0, ay0, ax1, ay1) = corners(a);
+    let (bx0, by0, bx1, by1) = corners(b);
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = (ax1 - ax0) * (ay1 - ay0) + (bx1 - bx0) * (by1 - by0) - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// COCO-style AP@[.5:.95] for single-object images.
+///
+/// `out` rows are `classes` logits followed by 4 box values; `labels` and
+/// `boxes` are ground truth.
+pub fn box_ap(out: &InferOutput, labels: &[i32], boxes: &[f32], classes: usize) -> f64 {
+    assert_eq!(out.n(), labels.len());
+    assert_eq!(boxes.len(), labels.len() * 4);
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let thresholds: Vec<f32> = (0..10).map(|i| 0.5 + 0.05 * i as f32).collect();
+    let mut total = 0f64;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = out.row(i);
+        let cls_ok = out.argmax_class(i, classes) == y as usize;
+        let iou = iou_cxcywh(&row[classes..classes + 4], &boxes[i * 4..i * 4 + 4]);
+        if cls_ok {
+            let hits = thresholds.iter().filter(|&&t| iou >= t).count();
+            total += hits as f64 / thresholds.len() as f64;
+        }
+    }
+    total / labels.len() as f64
+}
+
+/// Mean IoU regardless of class (diagnostic).
+pub fn mean_iou(out: &InferOutput, boxes: &[f32], classes: usize) -> f64 {
+    let n = out.n();
+    (0..n)
+        .map(|i| iou_cxcywh(&out.row(i)[classes..classes + 4], &boxes[i * 4..i * 4 + 4]) as f64)
+        .sum::<f64>()
+        / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identical_is_one() {
+        let b = [0.5, 0.5, 0.2, 0.2];
+        assert!((iou_cxcywh(&b, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(
+            iou_cxcywh(&[0.2, 0.2, 0.1, 0.1], &[0.8, 0.8, 0.1, 0.1]),
+            0.0
+        );
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // two unit-width boxes offset by half a width: IoU = 1/3
+        let a = [0.5, 0.5, 0.2, 0.2];
+        let b = [0.6, 0.5, 0.2, 0.2];
+        assert!((iou_cxcywh(&a, &b) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    fn out_from(rows: Vec<Vec<f32>>) -> InferOutput {
+        let dim = rows[0].len();
+        InferOutput {
+            data: rows.into_iter().flatten().collect(),
+            dim,
+        }
+    }
+
+    #[test]
+    fn ap_perfect() {
+        let out = out_from(vec![vec![5.0, 0.0, 0.0, 0.5, 0.5, 0.2, 0.2]]);
+        let ap = box_ap(&out, &[0], &[0.5, 0.5, 0.2, 0.2], 3);
+        assert!((ap - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ap_wrong_class_is_zero() {
+        let out = out_from(vec![vec![5.0, 0.0, 0.0, 0.5, 0.5, 0.2, 0.2]]);
+        assert_eq!(box_ap(&out, &[1], &[0.5, 0.5, 0.2, 0.2], 3), 0.0);
+    }
+
+    #[test]
+    fn ap_partial_overlap_partial_credit() {
+        // IoU = 1/3 < 0.5 → zero; IoU ≈ 0.82 → most thresholds pass
+        let good = out_from(vec![vec![5.0, 0.0, 0.0, 0.51, 0.5, 0.2, 0.2]]);
+        let ap = box_ap(&good, &[0], &[0.5, 0.5, 0.2, 0.2], 3);
+        assert!(ap > 0.4 && ap < 1.0, "ap={ap}");
+    }
+
+    #[test]
+    fn ap_monotone_in_iou() {
+        let truth = [0.5f32, 0.5, 0.2, 0.2];
+        let mut prev = 1.1f64;
+        for off in [0.0f32, 0.02, 0.05, 0.1, 0.2] {
+            let out = out_from(vec![vec![5.0, 0.0, 0.0, 0.5 + off, 0.5, 0.2, 0.2]]);
+            let ap = box_ap(&out, &[0], &truth, 3);
+            assert!(ap <= prev + 1e-9, "off={off}");
+            prev = ap;
+        }
+    }
+}

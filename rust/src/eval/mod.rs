@@ -1,0 +1,11 @@
+//! Evaluation: eval-set loading, classification/detection metrics, and
+//! the paper-table harnesses shared by benches and examples.
+
+pub mod accuracy;
+pub mod data;
+pub mod detection;
+pub mod harness;
+
+pub use accuracy::top1;
+pub use data::EvalSet;
+pub use detection::{box_ap, iou_cxcywh};

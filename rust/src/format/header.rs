@@ -1,0 +1,303 @@
+//! `.pnet` header and manifest structures.
+
+use anyhow::{bail, Result};
+
+use crate::quant::{QuantParams, Schedule, K};
+use crate::util::json::{self, Json};
+
+pub const MAGIC: &[u8; 4] = b"PNET";
+pub const VERSION: u16 = 1;
+/// stage u8 + pad u8 + tensor u16 + len u32 + crc u32 = 12 bytes
+pub const FRAG_HEADER_LEN: usize = 12;
+
+/// Per-tensor metadata carried in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    pub offset: usize,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl TensorMeta {
+    pub fn quant_params(&self, k: u32) -> QuantParams {
+        QuantParams {
+            min: self.min,
+            max: self.max,
+            k,
+        }
+    }
+}
+
+/// The `.pnet` manifest: everything a client needs to reconstruct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PnetManifest {
+    pub model: String,
+    pub task: String,
+    pub k: u32,
+    pub schedule: Schedule,
+    pub tensors: Vec<TensorMeta>,
+}
+
+impl PnetManifest {
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel).sum()
+    }
+
+    /// Total payload bytes (all fragments, without framing).
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| self.schedule.total_bytes(t.numel))
+            .sum()
+    }
+
+    /// Payload bytes of one stage across all tensors.
+    pub fn stage_payload_bytes(&self, stage: usize) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| self.schedule.plane_bytes(stage, t.numel))
+            .sum()
+    }
+
+    /// Wire bytes including framing and manifest.
+    pub fn wire_bytes(&self) -> usize {
+        let frames = self.schedule.stages() * self.tensors.len() * FRAG_HEADER_LEN;
+        8 + 4 + self.to_json().to_string().len() + frames + self.payload_bytes()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("task", json::s(&self.task)),
+            ("k", json::num(self.k as f64)),
+            (
+                "schedule",
+                json::arr(
+                    self.schedule
+                        .widths()
+                        .iter()
+                        .map(|&w| json::num(w as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "tensors",
+                json::arr(
+                    self.tensors
+                        .iter()
+                        .map(|t| {
+                            json::obj(vec![
+                                ("name", json::s(&t.name)),
+                                (
+                                    "shape",
+                                    json::arr(
+                                        t.shape.iter().map(|&d| json::num(d as f64)).collect(),
+                                    ),
+                                ),
+                                ("numel", json::num(t.numel as f64)),
+                                ("offset", json::num(t.offset as f64)),
+                                ("min", json::num(t.min as f64)),
+                                ("max", json::num(t.max as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let k = j.get("k")?.as_i64()? as u32;
+        if k == 0 || k > 32 {
+            bail!("invalid k={k}");
+        }
+        let widths = j
+            .get("schedule")?
+            .as_arr()?
+            .iter()
+            .map(|w| Ok(w.as_i64()? as u32))
+            .collect::<Result<Vec<_>>>()?;
+        let schedule = Schedule::new(widths, k)?;
+        let mut tensors = Vec::new();
+        for t in j.get("tensors")?.as_arr()? {
+            let shape = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            let numel = t.get("numel")?.as_usize()?;
+            if shape.iter().product::<usize>() != numel {
+                bail!("tensor {}: shape/numel mismatch", t.get("name")?.as_str()?);
+            }
+            tensors.push(TensorMeta {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape,
+                numel,
+                offset: t.get("offset")?.as_usize()?,
+                min: t.get("min")?.as_f64()? as f32,
+                max: t.get("max")?.as_f64()? as f32,
+            });
+        }
+        if tensors.is_empty() {
+            bail!("manifest has no tensors");
+        }
+        // offsets must be contiguous
+        let mut off = 0;
+        for t in &tensors {
+            if t.offset != off {
+                bail!("tensor {} offset {} != expected {off}", t.name, t.offset);
+            }
+            off += t.numel;
+        }
+        Ok(Self {
+            model: j.get("model")?.as_str()?.to_string(),
+            task: j.get("task")?.as_str()?.to_string(),
+            k,
+            schedule,
+            tensors,
+        })
+    }
+}
+
+/// One fragment's frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FragmentHeader {
+    pub stage: u8,
+    pub tensor: u16,
+    pub len: u32,
+    pub crc32: u32,
+}
+
+impl FragmentHeader {
+    pub fn encode(&self) -> [u8; FRAG_HEADER_LEN] {
+        let mut out = [0u8; FRAG_HEADER_LEN];
+        out[0] = self.stage;
+        out[1] = 0; // pad
+        out[2..4].copy_from_slice(&self.tensor.to_le_bytes());
+        out[4..8].copy_from_slice(&self.len.to_le_bytes());
+        out[8..12].copy_from_slice(&self.crc32.to_le_bytes());
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Self> {
+        if b.len() < FRAG_HEADER_LEN {
+            bail!("fragment header truncated");
+        }
+        Ok(Self {
+            stage: b[0],
+            tensor: u16::from_le_bytes([b[2], b[3]]),
+            len: u32::from_le_bytes([b[4], b[5], b[6], b[7]]),
+            crc32: u32::from_le_bytes([b[8], b[9], b[10], b[11]]),
+        })
+    }
+}
+
+/// Helper: build a manifest from raw weights + a schedule (encoder side).
+pub fn manifest_from_weights(
+    model: &str,
+    task: &str,
+    tensors: &[(String, Vec<usize>)],
+    flat: &[f32],
+    schedule: Schedule,
+) -> Result<PnetManifest> {
+    let mut metas = Vec::new();
+    let mut off = 0;
+    for (name, shape) in tensors {
+        let numel: usize = shape.iter().product();
+        if off + numel > flat.len() {
+            bail!("weights too short for tensor {name}");
+        }
+        let qp = QuantParams::from_data(&flat[off..off + numel], K);
+        metas.push(TensorMeta {
+            name: name.clone(),
+            shape: shape.clone(),
+            numel,
+            offset: off,
+            min: qp.min,
+            max: qp.max,
+        });
+        off += numel;
+    }
+    if off != flat.len() {
+        bail!("weights length {} != manifest total {off}", flat.len());
+    }
+    Ok(PnetManifest {
+        model: model.to_string(),
+        task: task.to_string(),
+        k: K,
+        schedule,
+        tensors: metas,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> PnetManifest {
+        manifest_from_weights(
+            "m",
+            "classify",
+            &[
+                ("a.w".to_string(), vec![4, 8]),
+                ("a.b".to_string(), vec![8]),
+            ],
+            &(0..40).map(|i| i as f32 * 0.1).collect::<Vec<_>>(),
+            Schedule::paper_default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = sample_manifest();
+        let j = m.to_json();
+        let m2 = PnetManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn fragment_header_roundtrip() {
+        let h = FragmentHeader {
+            stage: 3,
+            tensor: 517,
+            len: 123_456,
+            crc32: 0xDEADBEEF,
+        };
+        assert_eq!(FragmentHeader::decode(&h.encode()).unwrap(), h);
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let m = sample_manifest();
+        assert_eq!(m.param_count(), 40);
+        // 16 bits over 40 elements = 80 bytes total payload
+        assert_eq!(m.payload_bytes(), 80);
+        let per_stage: usize = (0..8).map(|s| m.stage_payload_bytes(s)).sum();
+        assert_eq!(per_stage, m.payload_bytes());
+    }
+
+    #[test]
+    fn bad_manifests_rejected() {
+        let m = sample_manifest();
+        let mut j = m.to_json().to_string();
+        j = j.replace("\"numel\":32", "\"numel\":31");
+        assert!(PnetManifest::from_json(&Json::parse(&j).unwrap()).is_err());
+    }
+
+    #[test]
+    fn weights_length_mismatch_rejected() {
+        let r = manifest_from_weights(
+            "m",
+            "classify",
+            &[("a".to_string(), vec![10])],
+            &[0.0; 9],
+            Schedule::paper_default(),
+        );
+        assert!(r.is_err());
+    }
+}

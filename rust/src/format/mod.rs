@@ -1,0 +1,28 @@
+//! `.pnet` — the progressive model container / wire format.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [magic "PNET"][version u16][flags u16]
+//! [manifest_len u32][manifest JSON bytes]      // model + tensor + schedule metadata
+//! fragment*                                    // stage-major order
+//!
+//! fragment := [stage u8][pad u8][tensor u16][len u32][crc32 u32][payload]
+//! ```
+//!
+//! Fragments are ordered **stage-major** (stage 0 of every tensor first),
+//! so a client holding any byte prefix that covers the first `m` stages
+//! can reconstruct the m-th approximate model — the property progressive
+//! transmission needs. Each fragment carries a CRC32 so corruption is
+//! detected per-fragment, not per-file. The container adds only
+//! `16 B × stages × tensors` of framing plus one manifest — the payload
+//! itself is exactly the singleton quantized size (paper §III-B: no model
+//! size inflation).
+
+pub mod header;
+pub mod reader;
+pub mod writer;
+
+pub use header::{FragmentHeader, PnetManifest, TensorMeta, FRAG_HEADER_LEN, MAGIC, VERSION};
+pub use reader::{FrameParser, ParserEvent, PnetReader};
+pub use writer::PnetWriter;

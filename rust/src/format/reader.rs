@@ -1,0 +1,331 @@
+//! `.pnet` decoding: a whole-file reader and an **incremental** frame
+//! parser that consumes arbitrary byte chunks as they arrive from the
+//! network — the entry point of the progressive client pipeline.
+
+use anyhow::{bail, Result};
+
+use super::header::{FragmentHeader, PnetManifest, FRAG_HEADER_LEN, MAGIC, VERSION};
+use crate::util::json::Json;
+
+/// Events produced by the incremental parser.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParserEvent {
+    /// The manifest is fully parsed (fires exactly once, first).
+    Manifest(Box<PnetManifest>),
+    /// A fragment's payload passed CRC and is ready to absorb.
+    Fragment {
+        stage: usize,
+        tensor: usize,
+        payload: Vec<u8>,
+    },
+}
+
+#[derive(Debug)]
+enum State {
+    Preamble,
+    Manifest { need: usize },
+    FrameHeader,
+    Payload { header: FragmentHeader },
+    Done,
+}
+
+/// Incremental `.pnet` stream parser. Feed it chunks; collect events.
+pub struct FrameParser {
+    buf: Vec<u8>,
+    state: State,
+    manifest: Option<PnetManifest>,
+    frames_seen: usize,
+    total_frames: usize,
+    bytes_consumed: u64,
+}
+
+impl Default for FrameParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameParser {
+    pub fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            state: State::Preamble,
+            manifest: None,
+            frames_seen: 0,
+            total_frames: 0,
+            bytes_consumed: 0,
+        }
+    }
+
+    pub fn manifest(&self) -> Option<&PnetManifest> {
+        self.manifest.as_ref()
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, State::Done)
+    }
+
+    pub fn bytes_consumed(&self) -> u64 {
+        self.bytes_consumed
+    }
+
+    /// Feed a chunk; returns all events that completed.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<Vec<ParserEvent>> {
+        self.buf.extend_from_slice(chunk);
+        self.bytes_consumed += chunk.len() as u64;
+        let mut events = Vec::new();
+        loop {
+            match &self.state {
+                State::Preamble => {
+                    if self.buf.len() < 12 {
+                        break;
+                    }
+                    if &self.buf[..4] != MAGIC {
+                        bail!("bad magic {:02x?}", &self.buf[..4]);
+                    }
+                    let version = u16::from_le_bytes([self.buf[4], self.buf[5]]);
+                    if version != VERSION {
+                        bail!("unsupported version {version}");
+                    }
+                    let mlen = u32::from_le_bytes([
+                        self.buf[8],
+                        self.buf[9],
+                        self.buf[10],
+                        self.buf[11],
+                    ]) as usize;
+                    if mlen > 64 << 20 {
+                        bail!("manifest absurdly large: {mlen}");
+                    }
+                    self.buf.drain(..12);
+                    self.state = State::Manifest { need: mlen };
+                }
+                State::Manifest { need } => {
+                    let need = *need;
+                    if self.buf.len() < need {
+                        break;
+                    }
+                    let text = std::str::from_utf8(&self.buf[..need])?;
+                    let manifest = PnetManifest::from_json(&Json::parse(text)?)?;
+                    self.buf.drain(..need);
+                    self.total_frames = manifest.schedule.stages() * manifest.tensors.len();
+                    events.push(ParserEvent::Manifest(Box::new(manifest.clone())));
+                    self.manifest = Some(manifest);
+                    self.state = State::FrameHeader;
+                }
+                State::FrameHeader => {
+                    if self.frames_seen == self.total_frames {
+                        self.state = State::Done;
+                        continue;
+                    }
+                    if self.buf.len() < FRAG_HEADER_LEN {
+                        break;
+                    }
+                    let header = FragmentHeader::decode(&self.buf[..FRAG_HEADER_LEN])?;
+                    let m = self.manifest.as_ref().unwrap();
+                    if header.stage as usize >= m.schedule.stages() {
+                        bail!("fragment stage {} out of range", header.stage);
+                    }
+                    if header.tensor as usize >= m.tensors.len() {
+                        bail!("fragment tensor {} out of range", header.tensor);
+                    }
+                    let expect =
+                        m.schedule.plane_bytes(header.stage as usize, m.tensors[header.tensor as usize].numel);
+                    if header.len as usize != expect {
+                        bail!(
+                            "fragment ({}, {}) declares {} bytes, manifest expects {expect}",
+                            header.stage,
+                            header.tensor,
+                            header.len
+                        );
+                    }
+                    self.buf.drain(..FRAG_HEADER_LEN);
+                    self.state = State::Payload { header };
+                }
+                State::Payload { header } => {
+                    let need = header.len as usize;
+                    if self.buf.len() < need {
+                        break;
+                    }
+                    let payload: Vec<u8> = self.buf.drain(..need).collect();
+                    let crc = crc32fast::hash(&payload);
+                    if crc != header.crc32 {
+                        bail!(
+                            "fragment ({}, {}) CRC mismatch: {:08x} != {:08x}",
+                            header.stage,
+                            header.tensor,
+                            crc,
+                            header.crc32
+                        );
+                    }
+                    events.push(ParserEvent::Fragment {
+                        stage: header.stage as usize,
+                        tensor: header.tensor as usize,
+                        payload,
+                    });
+                    self.frames_seen += 1;
+                    self.state = State::FrameHeader;
+                }
+                State::Done => {
+                    if !self.buf.is_empty() {
+                        bail!("{} trailing bytes after final fragment", self.buf.len());
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(events)
+    }
+}
+
+/// Whole-file reader (validates everything eagerly).
+pub struct PnetReader {
+    pub manifest: PnetManifest,
+    /// `fragments[stage][tensor]`
+    pub fragments: Vec<Vec<Vec<u8>>>,
+}
+
+impl PnetReader {
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut parser = FrameParser::new();
+        let events = parser.feed(bytes)?;
+        if !parser.is_done() {
+            bail!("truncated .pnet: consumed {} bytes", parser.bytes_consumed());
+        }
+        let mut manifest = None;
+        let mut fragments: Vec<Vec<Vec<u8>>> = Vec::new();
+        for ev in events {
+            match ev {
+                ParserEvent::Manifest(m) => {
+                    fragments =
+                        vec![vec![Vec::new(); m.tensors.len()]; m.schedule.stages()];
+                    manifest = Some(*m);
+                }
+                ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } => {
+                    fragments[stage][tensor] = payload;
+                }
+            }
+        }
+        let manifest = manifest.ok_or_else(|| anyhow::anyhow!("no manifest"))?;
+        Ok(Self {
+            manifest,
+            fragments,
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::header::manifest_from_weights;
+    use crate::format::writer::PnetWriter;
+    use crate::quant::Schedule;
+    use crate::util::rng::Rng;
+
+    fn sample_bytes() -> (PnetWriter, Vec<u8>) {
+        let mut r = Rng::new(7);
+        let flat: Vec<f32> = (0..500).map(|_| r.normal() as f32).collect();
+        let m = manifest_from_weights(
+            "toy",
+            "classify",
+            &[("a".to_string(), vec![400]), ("b".to_string(), vec![100])],
+            &flat,
+            Schedule::paper_default(),
+        )
+        .unwrap();
+        let w = PnetWriter::encode(m, &flat).unwrap();
+        let bytes = w.to_bytes();
+        (w, bytes)
+    }
+
+    #[test]
+    fn whole_file_roundtrip() {
+        let (w, bytes) = sample_bytes();
+        let r = PnetReader::from_bytes(&bytes).unwrap();
+        assert_eq!(&r.manifest, w.manifest());
+        for s in 0..8 {
+            for t in 0..2 {
+                assert_eq!(r.fragments[s][t], w.fragment(s, t));
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_byte_by_byte() {
+        let (_, bytes) = sample_bytes();
+        let mut parser = FrameParser::new();
+        let mut frags = 0;
+        let mut got_manifest = false;
+        for b in bytes {
+            for ev in parser.feed(&[b]).unwrap() {
+                match ev {
+                    ParserEvent::Manifest(_) => got_manifest = true,
+                    ParserEvent::Fragment { .. } => frags += 1,
+                }
+            }
+        }
+        assert!(got_manifest);
+        assert_eq!(frags, 16);
+        assert!(parser.is_done());
+    }
+
+    #[test]
+    fn stage_major_ordering() {
+        let (_, bytes) = sample_bytes();
+        let mut parser = FrameParser::new();
+        let mut order = Vec::new();
+        for chunk in bytes.chunks(97) {
+            for ev in parser.feed(chunk).unwrap() {
+                if let ParserEvent::Fragment { stage, tensor, .. } = ev {
+                    order.push((stage, tensor));
+                }
+            }
+        }
+        let expect: Vec<(usize, usize)> =
+            (0..8).flat_map(|s| (0..2).map(move |t| (s, t))).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (_, mut bytes) = sample_bytes();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF; // flip payload byte of last fragment
+        let mut parser = FrameParser::new();
+        let mut failed = false;
+        for chunk in bytes.chunks(64) {
+            if parser.feed(chunk).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "corrupted payload must fail CRC");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let (_, mut bytes) = sample_bytes();
+        bytes[0] = b'X';
+        assert!(PnetReader::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let (_, bytes) = sample_bytes();
+        assert!(PnetReader::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let (_, mut bytes) = sample_bytes();
+        bytes.push(0);
+        assert!(PnetReader::from_bytes(&bytes).is_err());
+    }
+}

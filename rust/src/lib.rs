@@ -1,0 +1,58 @@
+//! # ProgressiveNet-RS
+//!
+//! Production-grade reproduction of *“Progressive Transmission and
+//! Inference of Deep Learning Models”* (Lee et al., 2021) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! A trained model is **quantized** (Eq. 2), **bit-divided** into fraction
+//! planes (Eq. 3), streamed to clients over a bandwidth-shaped link,
+//! **bit-concatenated** (Eq. 4) and **dequantized** (Eq. 5) incrementally,
+//! and **inferred concurrently with the ongoing transmission** (§III-C) —
+//! so approximate predictions appear long before the download finishes,
+//! with no increase in total model size or total execution time.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — progressive encoder, `.pnet` container,
+//!   streaming server, progressive client pipeline, multi-client
+//!   coordinator (router + dynamic batcher), network simulator,
+//!   evaluation + user-study harnesses.
+//! - **L2/L1 (build time)** — JAX models + Pallas kernels, AOT-lowered to
+//!   HLO text under `artifacts/` (see `python/compile/`), loaded here via
+//!   the PJRT CPU client ([`runtime`]).
+//!
+//! Quickstart: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
+
+pub mod client;
+pub mod coordinator;
+pub mod eval;
+pub mod format;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts root, overridable with `PROGNET_ARTIFACTS`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var_os("PROGNET_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            // Resolve relative to the crate root so tests/benches work from
+            // any working directory.
+            let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            p.push("artifacts");
+            p
+        })
+}
+
+/// True when the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_root().join("models/index.json").exists()
+}

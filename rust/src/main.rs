@@ -1,0 +1,268 @@
+//! `prognet` — ProgressiveNet-RS command line.
+//!
+//! Subcommands:
+//!   encode   — encode a trained model into a `.pnet` progressive container
+//!   inspect  — print a `.pnet` container's manifest + fragment map
+//!   serve    — run the streaming model server
+//!   fetch    — progressively fetch + infer from a server
+//!   eval     — Table II style accuracy-vs-bit-width evaluation
+//!   study    — run the simulated user study (Table III / Fig 8)
+//!   models   — list models available in the artifacts registry
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use prognet::client::{ProgressiveClient, ProgressiveOptions};
+use prognet::eval::{harness, EvalSet};
+use prognet::format::PnetReader;
+use prognet::metrics::Table;
+use prognet::models::Registry;
+use prognet::quant::{Schedule, K};
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::ServerConfig;
+use prognet::server::{Repository, Server};
+use prognet::sim::study::{run_table3, StudyConfig};
+use prognet::sim::survey::survey_from_waits;
+use prognet::util::cli::Args;
+use prognet::util::stats::{fmt_bytes, fmt_secs};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: prognet <command> [options]\n\
+         commands:\n  \
+           models\n  \
+           encode  --model NAME [--schedule 2,2,2,2,2,2,2,2] --out FILE\n  \
+           inspect --file FILE\n  \
+           serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F]\n  \
+           fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F]\n  \
+           eval    --model NAME [--n 256]\n  \
+           study   [--users 29] [--seed 2021]"
+    );
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    let args = Args::from_env(2, &["serial", "qfwd", "verbose"])?;
+    match cmd.as_str() {
+        "models" => cmd_models(),
+        "encode" => cmd_encode(&args),
+        "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "fetch" => cmd_fetch(&args),
+        "eval" => cmd_eval(&args),
+        "study" => cmd_study(&args),
+        _ => usage(),
+    }
+}
+
+fn cmd_models() -> Result<()> {
+    let reg = Registry::open_default()?;
+    let mut t = Table::new("Models", &["name", "task", "params", "16-bit size"]);
+    for m in reg.iter() {
+        t.row(vec![
+            m.name.clone(),
+            m.task.clone(),
+            m.param_count.to_string(),
+            fmt_bytes(m.param_count as u64 * 2),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> Result<()> {
+    let name = args.require("model")?;
+    let out = args.require("out")?;
+    let schedule = match args.get("schedule") {
+        Some(text) => Schedule::parse(text, K)?,
+        None => Schedule::paper_default(),
+    };
+    let reg = Registry::open_default()?;
+    let m = reg.get(name)?;
+    let flat = m.load_weights()?;
+    let pm = m.pnet_manifest(&flat, schedule.clone())?;
+    let writer = prognet::format::PnetWriter::encode(pm, &flat)?;
+    let n = writer.write_file(std::path::Path::new(out))?;
+    println!(
+        "encoded {name} [{schedule}] -> {out}: {} ({} params)",
+        fmt_bytes(n),
+        m.param_count
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let file = args.require("file")?;
+    let r = PnetReader::from_file(std::path::Path::new(file))?;
+    let m = &r.manifest;
+    println!("model:    {} ({})", m.model, m.task);
+    println!("k:        {} bits, schedule {}", m.k, m.schedule);
+    println!("tensors:  {}", m.tensors.len());
+    println!("params:   {}", m.param_count());
+    println!("payload:  {}", fmt_bytes(m.payload_bytes() as u64));
+    println!("wire:     {}", fmt_bytes(m.wire_bytes() as u64));
+    let mut t = Table::new("Tensors", &["name", "shape", "numel", "min", "max"]);
+    for ti in &m.tensors {
+        t.row(vec![
+            ti.name.clone(),
+            format!("{:?}", ti.shape),
+            ti.numel.to_string(),
+            format!("{:.4}", ti.min),
+            format!("{:.4}", ti.max),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let file_cfg = prognet::util::config::ServeFileConfig::resolve(args)?;
+    let repo = Arc::new(Repository::open_default()?);
+    // pre-encode requested models so first fetches are warm
+    for model in &file_cfg.preload {
+        repo.container(model, &file_cfg.schedule)?;
+    }
+    let config = ServerConfig {
+        default_speed_mbps: file_cfg.speed_mbps,
+        workers: file_cfg.workers,
+        default_schedule: file_cfg.schedule.clone(),
+    };
+    let server = Server::start(&file_cfg.addr, repo, config)?;
+    println!(
+        "serving on {} (shaping: {:?} MB/s, schedule {}, {} preloaded) — Ctrl-C to stop",
+        server.addr(),
+        file_cfg.speed_mbps,
+        file_cfg.schedule,
+        file_cfg.preload.len()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_fetch(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = args.require("addr")?.parse()?;
+    let model = args.require("model")?;
+    let n = args.get_usize("n", 4)?;
+    let engine = Engine::global()?;
+    let reg = Registry::open_default()?;
+    let manifest = reg.get(model)?;
+    let session =
+        ModelSession::load_batches(&engine, manifest, &[manifest.best_fwd_batch(n)?])?;
+    let eval = EvalSet::load_named(&manifest.dataset)?;
+    let images = eval.image_batch(n).to_vec();
+
+    let mut opts = if args.flag("serial") {
+        ProgressiveOptions::serial(model)
+    } else {
+        ProgressiveOptions::concurrent(model)
+    };
+    if let Some(speed) = args.get("speed-mbps") {
+        opts.request = opts.request.clone().with_speed(speed.parse()?);
+    }
+    let client = ProgressiveClient::new(addr);
+    let outcome = client.fetch_and_infer(&opts, &session, &images, n)?;
+    let mut t = Table::new(
+        &format!("Progressive fetch: {model}"),
+        &["stage", "bits", "transfer done", "output ready", "top-1 on batch"],
+    );
+    for r in &outcome.results {
+        let acc = prognet::eval::top1(&r.output, &eval.labels[..n], manifest.classes);
+        t.row(vec![
+            r.stage.to_string(),
+            r.cum_bits.to_string(),
+            fmt_secs(r.t_transfer_done),
+            fmt_secs(r.t_output_ready),
+            format!("{:.1}%", acc * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "transfer complete {} | total {} | {}",
+        fmt_secs(outcome.t_transfer_complete),
+        fmt_secs(outcome.t_total),
+        fmt_bytes(outcome.bytes)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.require("model")?;
+    let n = args.get_usize("n", 256)?;
+    let engine = Engine::global()?;
+    let reg = Registry::open_default()?;
+    let manifest = reg.get(model)?;
+    let eval = EvalSet::load_named(&manifest.dataset)?;
+    let n = n.min(eval.n);
+    let session =
+        ModelSession::load_batches(&engine, manifest, &[manifest.best_fwd_batch(n)?])?;
+    let schedule = Schedule::paper_default();
+    let (per_stage, orig) = harness::table2_row(&session, manifest, &eval, n, &schedule)?;
+    let metric = if manifest.task == "detect" { "boxAP" } else { "top-1" };
+    let mut header: Vec<String> = vec!["model".into()];
+    header.extend(schedule.cum_all().iter().map(|c| format!("{c}-bit")));
+    header.push("orig.".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&format!("Accuracy ({metric}, n={n})"), &header_refs);
+    let mut row = vec![model.to_string()];
+    row.extend(per_stage.iter().map(|a| format!("{:.1}", a * 100.0)));
+    row.push(format!("{:.1}", orig * 100.0));
+    t.row(row);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_study(args: &Args) -> Result<()> {
+    let cfg = StudyConfig {
+        users_per_group: args.get_usize("users", 29)?,
+        seed: args.get_u64("seed", 2021)?,
+        ..Default::default()
+    };
+    let rows = run_table3(&cfg);
+    let mut t = Table::new(
+        "Table III — active users of 'Find automatically'",
+        &["speed", "images/stage", "Group A", "Group B"],
+    );
+    let mut waits_a = Vec::new();
+    let mut waits_b = Vec::new();
+    let (mut act_a, mut n_a, mut act_b, mut n_b) = (0, 0, 0, 0);
+    for (speed, images, a, b) in &rows {
+        t.row(vec![
+            format!("{speed} MB/s"),
+            images.to_string(),
+            format!("{:.0}%", a.active_ratio() * 100.0),
+            format!("{:.0}%", b.active_ratio() * 100.0),
+        ]);
+        act_a += a.active;
+        n_a += a.n;
+        act_b += b.active;
+        n_b += b.n;
+        waits_a.extend_from_slice(&a.user_mean_waits);
+        waits_b.extend_from_slice(&b.user_mean_waits);
+    }
+    t.row(vec![
+        "Overall".into(),
+        "-".into(),
+        format!("{:.0}%", act_a as f64 / n_a as f64 * 100.0),
+        format!("{:.0}%", act_b as f64 / n_b as f64 * 100.0),
+    ]);
+    println!("{}", t.render());
+
+    println!(
+        "{}",
+        survey_from_waits(&waits_a, 0.68, cfg.seed).render("Fig 8 — Group A")
+    );
+    println!(
+        "{}",
+        survey_from_waits(&waits_b, 0.68, cfg.seed + 1).render("Fig 8 — Group B")
+    );
+    Ok(())
+}

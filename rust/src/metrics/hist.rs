@@ -1,0 +1,121 @@
+//! Fixed-bucket latency histogram (log-spaced), for serving metrics.
+
+/// Log-spaced histogram from 1µs to ~100s.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    bounds: Vec<f64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 1µs .. ~158s in 1/4-decade steps
+        let bounds: Vec<f64> = (0..33).map(|i| 1e-6 * 10f64.powf(i as f64 / 4.0)).collect();
+        Self {
+            buckets: vec![0; bounds.len() + 1],
+            bounds,
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.bounds.get(i).copied().unwrap_or(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.05005).abs() < 1e-3);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.02 && p50 < 0.12, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= p50);
+        assert!(h.max() <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(0.001);
+        b.record(0.002);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Metrics: event timelines (Fig 4), histograms and table reporters.
+
+pub mod hist;
+pub mod report;
+pub mod timeline;
+
+pub use hist::Histogram;
+pub use report::Table;
+pub use timeline::{Event, EventKind, Timeline};

@@ -1,0 +1,169 @@
+//! Event timeline for progressive sessions — the data behind Fig 4.
+//!
+//! Both real runs (wall-clock) and simulated runs (virtual time) record
+//! the same event stream; the Fig 4 bench renders it as ASCII lanes.
+
+/// What happened at a point in (virtual or wall) time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// transfer of stage `i`'s bytes started
+    StageTransferStart,
+    /// all of stage `i`'s fragments arrived
+    StageTransferDone,
+    /// concat+dequant of stage `i` started
+    ReconstructStart,
+    ReconstructDone,
+    /// inference with the stage-`i` approximate model
+    InferStart,
+    InferDone,
+    /// first output shown to the user (per stage)
+    OutputReady,
+}
+
+/// One timeline record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub stage: usize,
+    pub kind: EventKind,
+}
+
+/// An ordered event log.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    events: Vec<Event>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, stage: usize, kind: EventKind) {
+        self.events.push(Event { t, stage, kind });
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Time of the first event of `kind` for `stage`.
+    pub fn time_of(&self, stage: usize, kind: EventKind) -> Option<f64> {
+        self.events
+            .iter()
+            .find(|e| e.stage == stage && e.kind == kind)
+            .map(|e| e.t)
+    }
+
+    /// Completion time (max event time).
+    pub fn total_time(&self) -> f64 {
+        self.events.iter().map(|e| e.t).fold(0.0, f64::max)
+    }
+
+    /// Times at which each stage's output became available (Fig 5/6's
+    /// "intermediate results at t=…" captions).
+    pub fn output_times(&self) -> Vec<(usize, f64)> {
+        let mut out: Vec<(usize, f64)> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::OutputReady)
+            .map(|e| (e.stage, e.t))
+            .collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        out
+    }
+
+    /// Render as ASCII lanes (one row per stage), `width` columns.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let total = self.total_time().max(1e-9);
+        let stages = self.events.iter().map(|e| e.stage).max().unwrap_or(0) + 1;
+        let col = |t: f64| ((t / total) * (width - 1) as f64).round() as usize;
+        let mut out = String::new();
+        for s in 0..stages {
+            let mut row = vec![b'.'; width];
+            let mark = |row: &mut Vec<u8>, a: Option<f64>, b: Option<f64>, ch: u8| {
+                if let (Some(a), Some(b)) = (a, b) {
+                    for c in col(a)..=col(b) {
+                        row[c] = ch;
+                    }
+                }
+            };
+            mark(
+                &mut row,
+                self.time_of(s, EventKind::StageTransferStart),
+                self.time_of(s, EventKind::StageTransferDone),
+                b'=',
+            );
+            mark(
+                &mut row,
+                self.time_of(s, EventKind::ReconstructStart),
+                self.time_of(s, EventKind::ReconstructDone),
+                b'r',
+            );
+            mark(
+                &mut row,
+                self.time_of(s, EventKind::InferStart),
+                self.time_of(s, EventKind::InferDone),
+                b'I',
+            );
+            if let Some(t) = self.time_of(s, EventKind::OutputReady) {
+                row[col(t)] = b'*';
+            }
+            out.push_str(&format!("stage {s:2} |{}|\n", String::from_utf8(row).unwrap()));
+        }
+        out.push_str(&format!(
+            "            0.0s{:>width$}\n",
+            format!("{:.1}s", total),
+            width = width - 3
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Timeline {
+        let mut t = Timeline::new();
+        t.push(0.0, 0, EventKind::StageTransferStart);
+        t.push(1.0, 0, EventKind::StageTransferDone);
+        t.push(1.0, 0, EventKind::ReconstructStart);
+        t.push(1.2, 0, EventKind::ReconstructDone);
+        t.push(1.2, 0, EventKind::InferStart);
+        t.push(1.5, 0, EventKind::InferDone);
+        t.push(1.5, 0, EventKind::OutputReady);
+        t.push(1.0, 1, EventKind::StageTransferStart);
+        t.push(2.0, 1, EventKind::StageTransferDone);
+        t.push(2.5, 1, EventKind::OutputReady);
+        t
+    }
+
+    #[test]
+    fn queries() {
+        let t = sample();
+        assert_eq!(t.time_of(0, EventKind::OutputReady), Some(1.5));
+        assert_eq!(t.total_time(), 2.5);
+        assert_eq!(t.output_times(), vec![(0, 1.5), (1, 2.5)]);
+    }
+
+    #[test]
+    fn ascii_render_has_rows() {
+        let t = sample();
+        let s = t.render_ascii(40);
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains('='));
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn empty_timeline() {
+        let t = Timeline::new();
+        assert!(t.is_empty());
+        assert_eq!(t.total_time(), 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Per-model artifact manifest (`artifacts/models/<name>/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::format::header::{manifest_from_weights, PnetManifest};
+use crate::quant::Schedule;
+use crate::util::bytes;
+use crate::util::json::Json;
+
+/// One tensor's metadata as emitted by aot.py.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    pub offset: usize,
+    pub min: f32,
+    pub max: f32,
+}
+
+/// The full model manifest + artifact directory.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub task: String,
+    pub classes: usize,
+    pub input_shape: Vec<usize>,
+    pub param_count: usize,
+    pub k: u32,
+    pub default_schedule: Schedule,
+    pub tensors: Vec<TensorInfo>,
+    /// hlo key (e.g. "fwd_b32") -> file name
+    pub hlo: Vec<(String, String)>,
+    pub dataset: String,
+    dir: PathBuf,
+}
+
+impl ModelManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = Json::load(&dir.join("manifest.json"))?;
+        let k = j.get("k")?.as_i64()? as u32;
+        let widths = j
+            .get("default_schedule")?
+            .as_arr()?
+            .iter()
+            .map(|w| Ok(w.as_i64()? as u32))
+            .collect::<Result<Vec<_>>>()?;
+        let mut tensors = Vec::new();
+        for t in j.get("tensors")?.as_arr()? {
+            tensors.push(TensorInfo {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                numel: t.get("numel")?.as_usize()?,
+                offset: t.get("offset")?.as_usize()?,
+                min: t.get("min")?.as_f64()? as f32,
+                max: t.get("max")?.as_f64()? as f32,
+            });
+        }
+        let hlo = j
+            .get("hlo")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            task: j.get("task")?.as_str()?.to_string(),
+            classes: j.get("classes")?.as_usize()?,
+            input_shape: j
+                .get("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            param_count: j.get("param_count")?.as_usize()?,
+            k,
+            default_schedule: Schedule::new(widths, k)?,
+            tensors,
+            hlo,
+            dataset: j.get("dataset")?.as_str()?.to_string(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the flat f32 weight vector.
+    pub fn load_weights(&self) -> Result<Vec<f32>> {
+        let flat = bytes::read_f32_file(&self.dir.join("weights.bin"))
+            .with_context(|| format!("weights for {}", self.name))?;
+        if flat.len() != self.param_count {
+            bail!(
+                "{}: weights.bin has {} params, manifest says {}",
+                self.name,
+                flat.len(),
+                self.param_count
+            );
+        }
+        Ok(flat)
+    }
+
+    /// Path of an HLO artifact by key (e.g. "fwd_b32").
+    pub fn hlo_path(&self, key: &str) -> Result<PathBuf> {
+        let file = self
+            .hlo
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, f)| f)
+            .ok_or_else(|| anyhow::anyhow!("{}: no HLO artifact '{key}'", self.name))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Largest fwd batch size ≤ `want` available in the artifacts.
+    pub fn best_fwd_batch(&self, want: usize) -> Result<usize> {
+        let mut best = None;
+        for (k, _) in &self.hlo {
+            if let Some(b) = k.strip_prefix("fwd_b").and_then(|s| s.parse::<usize>().ok()) {
+                if b <= want && best.map_or(true, |cur| b > cur) {
+                    best = Some(b);
+                }
+            }
+        }
+        best.ok_or_else(|| anyhow::anyhow!("{}: no fwd artifact ≤ batch {want}", self.name))
+    }
+
+    /// All available fwd batch sizes, ascending.
+    pub fn fwd_batches(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .hlo
+            .iter()
+            .filter_map(|(k, _)| k.strip_prefix("fwd_b").and_then(|s| s.parse().ok()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Number of output values per sample (classes, +4 box coords for
+    /// detection).
+    pub fn output_dim(&self) -> usize {
+        self.classes + if self.task == "detect" { 4 } else { 0 }
+    }
+
+    /// Elements per input sample.
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Build the `.pnet` wire manifest for this model under a schedule.
+    pub fn pnet_manifest(&self, flat: &[f32], schedule: Schedule) -> Result<PnetManifest> {
+        let tensors: Vec<(String, Vec<usize>)> = self
+            .tensors
+            .iter()
+            .map(|t| (t.name.clone(), t.shape.clone()))
+            .collect();
+        manifest_from_weights(&self.name, &self.task, &tensors, flat, schedule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("prognet-manifest-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        dir
+    }
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+            "name": "toy", "task": "classify", "classes": 10,
+            "input_shape": [32, 32, 3], "param_count": 6, "k": 16,
+            "default_schedule": [2,2,2,2,2,2,2,2],
+            "tensors": [
+                {"name": "w", "shape": [2,2], "numel": 4, "offset": 0, "min": -1.0, "max": 1.0},
+                {"name": "b", "shape": [2], "numel": 2, "offset": 4, "min": 0.0, "max": 0.5}
+            ],
+            "hlo": {"fwd_b1": "fwd_b1.hlo.txt", "fwd_b32": "fwd_b32.hlo.txt"},
+            "weights": "weights.bin", "accuracy": {"top1": 0.9}, "dataset": "shapes10"
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let w: Vec<f32> = vec![-1.0, 0.5, 0.25, 1.0, 0.0, 0.5];
+        std::fs::write(dir.join("weights.bin"), crate::util::bytes::f32_to_le(&w)).unwrap();
+    }
+
+    #[test]
+    fn load_fixture() {
+        let dir = fixture_dir();
+        write_fixture(&dir);
+        let m = ModelManifest::load(&dir).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.param_count, 6);
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.load_weights().unwrap().len(), 6);
+        assert_eq!(m.best_fwd_batch(100).unwrap(), 32);
+        assert_eq!(m.best_fwd_batch(5).unwrap(), 1);
+        assert!(m.best_fwd_batch(0).is_err());
+        assert_eq!(m.fwd_batches(), vec![1, 32]);
+        assert_eq!(m.output_dim(), 10);
+        assert_eq!(m.input_numel(), 3072);
+        let flat = m.load_weights().unwrap();
+        let pm = m
+            .pnet_manifest(&flat, crate::quant::Schedule::paper_default())
+            .unwrap();
+        assert_eq!(pm.param_count(), 6);
+    }
+}

@@ -1,0 +1,12 @@
+//! Model metadata + artifact loading (the AOT bridge's rust half).
+//!
+//! `python/compile/aot.py` emits, per model, a `manifest.json`, a flat
+//! `weights.bin` and HLO-text executables; this module loads them and
+//! provides the [`Registry`] used by the server, the coordinator and the
+//! evaluation harnesses.
+
+pub mod manifest;
+pub mod registry;
+
+pub use manifest::{ModelManifest, TensorInfo};
+pub use registry::Registry;

@@ -1,0 +1,86 @@
+//! Model registry: discovers every model under `artifacts/models/`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::ModelManifest;
+use crate::util::json::Json;
+
+/// All models known from the artifacts directory.
+pub struct Registry {
+    models: BTreeMap<String, ModelManifest>,
+}
+
+impl Registry {
+    /// Scan `artifacts/models/index.json`.
+    pub fn open(artifacts_root: &Path) -> Result<Self> {
+        let idx = Json::load(&artifacts_root.join("models/index.json"))?;
+        let mut models = BTreeMap::new();
+        for entry in idx.get("models")?.as_arr()? {
+            let name = entry.get("name")?.as_str()?.to_string();
+            let dir = artifacts_root.join("models").join(&name);
+            let manifest = ModelManifest::load(&dir)?;
+            models.insert(name, manifest);
+        }
+        Ok(Self { models })
+    }
+
+    /// Default registry from `artifacts_root()`.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&crate::artifacts_root())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ModelManifest> {
+        self.models.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_real_artifacts_if_present() {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = Registry::open_default().unwrap();
+        assert!(reg.len() >= 3);
+        for name in ["mlp", "cnn", "detector"] {
+            let m = reg.get(name).unwrap();
+            assert!(m.param_count > 1000);
+            let w = m.load_weights().unwrap();
+            assert_eq!(w.len(), m.param_count);
+            // manifest min/max must match the actual weights
+            for t in &m.tensors {
+                let seg = &w[t.offset..t.offset + t.numel];
+                let lo = seg.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                assert!((lo - t.min).abs() < 1e-6);
+                assert!((hi - t.max).abs() < 1e-6);
+            }
+        }
+        assert!(reg.get("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Virtual-time link model (no sleeping) — the basis of the Table I /
+//! Fig 4 timeline computations and of the user-study simulator.
+
+/// A link configuration (paper speeds: 0.1–2.5 MB/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// bandwidth in bytes/second
+    pub bytes_per_sec: f64,
+    /// one-way latency in seconds (applied once per transfer)
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    pub fn mbps(mb_per_sec: f64) -> Self {
+        Self {
+            bytes_per_sec: mb_per_sec * 1024.0 * 1024.0,
+            latency_s: 0.0,
+        }
+    }
+
+    pub fn with_latency(mut self, latency_s: f64) -> Self {
+        self.latency_s = latency_s;
+        self
+    }
+
+    /// Seconds to deliver `bytes` on an idle link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bytes_per_sec
+    }
+}
+
+/// Virtual-time cursor over a link: tracks when each queued byte range
+/// finishes arriving. Deterministic and instantaneous to evaluate.
+#[derive(Debug, Clone)]
+pub struct Link {
+    spec: LinkSpec,
+    /// virtual time at which the link becomes free
+    free_at: f64,
+    delivered_bytes: u64,
+}
+
+impl Link {
+    pub fn new(spec: LinkSpec) -> Self {
+        Self {
+            spec,
+            free_at: spec.latency_s,
+            delivered_bytes: 0,
+        }
+    }
+
+    pub fn spec(&self) -> LinkSpec {
+        self.spec
+    }
+
+    /// Queue `bytes` for transmission; returns the virtual completion time.
+    pub fn send(&mut self, bytes: u64) -> f64 {
+        self.free_at += bytes as f64 / self.spec.bytes_per_sec;
+        self.delivered_bytes += bytes;
+        self.free_at
+    }
+
+    /// Virtual time when everything queued so far has arrived.
+    pub fn now_complete(&self) -> f64 {
+        self.free_at
+    }
+
+    pub fn delivered_bytes(&self) -> u64 {
+        self.delivered_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_matches_rate() {
+        let l = LinkSpec::mbps(1.0);
+        let t = l.transfer_time(7 * 1024 * 1024);
+        assert!((t - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_applied_once() {
+        let l = LinkSpec::mbps(2.0).with_latency(0.05);
+        assert!((l.transfer_time(2 * 1024 * 1024) - 1.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sequential_sends_accumulate() {
+        let mut link = Link::new(LinkSpec::mbps(1.0));
+        let t1 = link.send(512 * 1024);
+        let t2 = link.send(512 * 1024);
+        assert!((t1 - 0.5).abs() < 1e-9);
+        assert!((t2 - 1.0).abs() < 1e-9);
+        assert_eq!(link.delivered_bytes(), 1024 * 1024);
+    }
+
+    #[test]
+    fn paper_configuration_times() {
+        // MobileNetV2 7.1 MB at 1 MB/s ≈ 7.1 s of pure transmission —
+        // the paper's Table I singleton times are dominated by this.
+        let spec = LinkSpec::mbps(1.0);
+        let t = spec.transfer_time((7.1 * 1024.0 * 1024.0) as u64);
+        assert!((t - 7.1).abs() < 0.01);
+    }
+}

@@ -1,0 +1,19 @@
+//! Deterministic network simulator: token-bucket bandwidth shaping with
+//! latency, in two flavours:
+//!
+//! - [`Link`] — a *virtual-time* model used by the analytical harnesses
+//!   (Table I timeline math without wall-clock sleeping).
+//! - [`ThrottledWriter`] / [`pace`] — *real-time* shaping applied to the
+//!   server's socket writes, so end-to-end runs experience the configured
+//!   MB/s on a real TCP connection.
+//!
+//! The paper's experiments use 0.1 / 0.2 / 0.5 / 1.0 / 2.5 MB/s links;
+//! [`LinkSpec`] captures those configurations.
+
+pub mod link;
+pub mod throttle;
+pub mod trace;
+
+pub use link::{Link, LinkSpec};
+pub use trace::{BandwidthTrace, TraceLink};
+pub use throttle::ThrottledWriter;

@@ -1,0 +1,116 @@
+//! Real-time token-bucket shaping for socket writes.
+//!
+//! The server wraps each client connection in a [`ThrottledWriter`] so an
+//! end-to-end run over loopback experiences the configured bandwidth.
+//! Token-bucket with a small burst keeps pacing smooth at low rates
+//! without busy-waiting.
+
+use std::io::{self, Write};
+use std::time::{Duration, Instant};
+
+use super::link::LinkSpec;
+
+/// Maximum chunk written between pacing checks.
+const CHUNK: usize = 16 * 1024;
+
+/// A `Write` adapter that paces bytes at `spec.bytes_per_sec`.
+pub struct ThrottledWriter<W: Write> {
+    inner: W,
+    bytes_per_sec: f64,
+    start: Instant,
+    sent: u64,
+    first_write_latency: Option<Duration>,
+}
+
+impl<W: Write> ThrottledWriter<W> {
+    pub fn new(inner: W, spec: LinkSpec) -> Self {
+        Self {
+            inner,
+            bytes_per_sec: spec.bytes_per_sec,
+            start: Instant::now(),
+            sent: 0,
+            first_write_latency: if spec.latency_s > 0.0 {
+                Some(Duration::from_secs_f64(spec.latency_s))
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Bytes sent so far.
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+
+    fn pace(&mut self) {
+        // Sleep until the virtual schedule catches up with what we sent.
+        let due = Duration::from_secs_f64(self.sent as f64 / self.bytes_per_sec);
+        let elapsed = self.start.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+    }
+}
+
+impl<W: Write> Write for ThrottledWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if let Some(lat) = self.first_write_latency.take() {
+            std::thread::sleep(lat);
+            self.start = Instant::now();
+        }
+        let n = buf.len().min(CHUNK);
+        let written = self.inner.write(&buf[..n])?;
+        self.sent += written as u64;
+        self.pace();
+        Ok(written)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pacing_is_close_to_rate() {
+        // 200 KB at 1 MB/s should take ~0.2 s (±30% slack for CI noise).
+        let spec = LinkSpec::mbps(1.0);
+        let mut w = ThrottledWriter::new(Vec::new(), spec);
+        let data = vec![0u8; 200 * 1024];
+        let t0 = Instant::now();
+        w.write_all(&data).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let expect = 200.0 / 1024.0;
+        assert!(
+            dt > expect * 0.7 && dt < expect * 1.6,
+            "took {dt:.3}s, expected ~{expect:.3}s"
+        );
+        assert_eq!(w.sent(), data.len() as u64);
+        assert_eq!(w.into_inner().len(), data.len());
+    }
+
+    #[test]
+    fn fast_link_is_nearly_instant() {
+        let spec = LinkSpec::mbps(10_000.0);
+        let mut w = ThrottledWriter::new(Vec::new(), spec);
+        let t0 = Instant::now();
+        w.write_all(&vec![0u8; 1024 * 1024]).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.5);
+    }
+
+    #[test]
+    fn latency_delays_first_byte() {
+        let spec = LinkSpec::mbps(10_000.0).with_latency(0.05);
+        let mut w = ThrottledWriter::new(Vec::new(), spec);
+        let t0 = Instant::now();
+        w.write_all(&[1, 2, 3]).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.045);
+    }
+}

@@ -1,0 +1,219 @@
+//! Bandwidth-trace links: piecewise-constant rate playback.
+//!
+//! Real mobile links are not constant-rate; a [`BandwidthTrace`] replays
+//! `(duration, bytes/s)` segments (e.g. a 3G trace) in virtual time, so
+//! the Table I / user-study harnesses can be driven by realistic traces
+//! as well as the paper's fixed speeds.
+
+use anyhow::{bail, Result};
+
+/// Piecewise-constant bandwidth trace. Loops after the last segment.
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// (duration seconds, bytes per second)
+    segments: Vec<(f64, f64)>,
+    total_dur: f64,
+}
+
+impl BandwidthTrace {
+    pub fn new(segments: Vec<(f64, f64)>) -> Result<Self> {
+        if segments.is_empty() {
+            bail!("trace needs at least one segment");
+        }
+        if segments.iter().any(|&(d, r)| d <= 0.0 || r <= 0.0) {
+            bail!("durations and rates must be positive");
+        }
+        let total_dur = segments.iter().map(|s| s.0).sum();
+        Ok(Self {
+            segments,
+            total_dur,
+        })
+    }
+
+    /// Constant-rate trace (equivalent to `LinkSpec::mbps`).
+    pub fn constant(bytes_per_sec: f64) -> Self {
+        Self::new(vec![(f64::INFINITY, bytes_per_sec)]).unwrap_or(Self {
+            segments: vec![(f64::INFINITY, bytes_per_sec)],
+            total_dur: f64::INFINITY,
+        })
+    }
+
+    /// Parse "dur:rate_mbps,dur:rate_mbps,…" (CLI / config format).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut segments = Vec::new();
+        for part in text.split(',').filter(|s| !s.is_empty()) {
+            let (d, r) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("segment '{part}' is not dur:rate"))?;
+            segments.push((
+                d.trim().parse::<f64>()?,
+                r.trim().parse::<f64>()? * 1024.0 * 1024.0,
+            ));
+        }
+        Self::new(segments)
+    }
+
+    /// Rate at virtual time `t` (loops).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut t = if self.total_dur.is_finite() && t >= self.total_dur {
+            t % self.total_dur
+        } else {
+            t
+        };
+        for &(d, r) in &self.segments {
+            if t < d {
+                return r;
+            }
+            t -= d;
+        }
+        self.segments.last().unwrap().1
+    }
+
+    /// Virtual time needed to deliver `bytes` starting at time `t0`.
+    pub fn transfer_time_from(&self, t0: f64, bytes: u64) -> f64 {
+        let mut remaining = bytes as f64;
+        let mut t = t0;
+        let mut guard = 0;
+        while remaining > 1e-9 {
+            let rate = self.rate_at(t);
+            // time left in this segment
+            let seg_left = self.time_to_segment_end(t);
+            let deliverable = rate * seg_left;
+            if deliverable >= remaining {
+                return t + remaining / rate - t0;
+            }
+            remaining -= deliverable;
+            t += seg_left;
+            guard += 1;
+            if guard > 1_000_000 {
+                return f64::INFINITY; // pathological trace
+            }
+        }
+        t - t0
+    }
+
+    fn time_to_segment_end(&self, t: f64) -> f64 {
+        if !self.total_dur.is_finite() {
+            return f64::INFINITY;
+        }
+        let mut local = t % self.total_dur;
+        for &(d, _) in &self.segments {
+            if local < d {
+                return d - local;
+            }
+            local -= d;
+        }
+        self.segments.last().unwrap().0
+    }
+
+    /// Mean rate over one period.
+    pub fn mean_rate(&self) -> f64 {
+        if !self.total_dur.is_finite() {
+            return self.segments[0].1;
+        }
+        let weighted: f64 = self.segments.iter().map(|&(d, r)| d * r).sum();
+        weighted / self.total_dur
+    }
+}
+
+/// Virtual-time cursor over a trace (trace analogue of [`super::Link`]).
+#[derive(Debug, Clone)]
+pub struct TraceLink {
+    trace: BandwidthTrace,
+    now: f64,
+    delivered: u64,
+}
+
+impl TraceLink {
+    pub fn new(trace: BandwidthTrace) -> Self {
+        Self {
+            trace,
+            now: 0.0,
+            delivered: 0,
+        }
+    }
+
+    /// Queue `bytes`; returns virtual completion time.
+    pub fn send(&mut self, bytes: u64) -> f64 {
+        let dt = self.trace.transfer_time_from(self.now, bytes);
+        self.now += dt;
+        self.delivered += bytes;
+        self.now
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_trace_matches_linkspec() {
+        let t = BandwidthTrace::constant(1024.0 * 1024.0);
+        assert!((t.transfer_time_from(0.0, 2 * 1024 * 1024) - 2.0).abs() < 1e-9);
+        assert_eq!(t.rate_at(1234.5), 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn two_segment_split() {
+        // 1s @ 1MB/s then 1s @ 2MB/s, looping; 2.5MB starting at t=0:
+        // 1MB in first second, 1.5MB needs 0.75s of the 2MB/s segment.
+        let mb = 1024.0 * 1024.0;
+        let t = BandwidthTrace::new(vec![(1.0, mb), (1.0, 2.0 * mb)]).unwrap();
+        let dt = t.transfer_time_from(0.0, (2.5 * mb) as u64);
+        assert!((dt - 1.75).abs() < 1e-6, "dt={dt}");
+    }
+
+    #[test]
+    fn looping_and_offset_start() {
+        let mb = 1024.0 * 1024.0;
+        let t = BandwidthTrace::new(vec![(1.0, mb), (1.0, 3.0 * mb)]).unwrap();
+        // starting mid-fast-segment
+        let dt = t.transfer_time_from(1.5, (1.5 * mb) as u64);
+        // 0.5s of 3MB/s → 1.5MB done exactly at segment end
+        assert!((dt - 0.5).abs() < 1e-6, "dt={dt}");
+        // mean rate = 2 MB/s
+        assert!((t.mean_rate() - 2.0 * mb).abs() < 1.0);
+    }
+
+    #[test]
+    fn parse_format() {
+        let t = BandwidthTrace::parse("2:0.5,1:2.0").unwrap();
+        assert_eq!(t.segments.len(), 2);
+        assert!((t.rate_at(0.0) - 0.5 * 1024.0 * 1024.0).abs() < 1e-6);
+        assert!(BandwidthTrace::parse("bad").is_err());
+        assert!(BandwidthTrace::parse("1:-2").is_err());
+        assert!(BandwidthTrace::parse("").is_err());
+    }
+
+    #[test]
+    fn trace_link_accumulates() {
+        let mb = 1024.0 * 1024.0;
+        let mut link = TraceLink::new(BandwidthTrace::new(vec![(1.0, mb)]).unwrap());
+        let t1 = link.send((0.5 * mb) as u64);
+        let t2 = link.send((0.5 * mb) as u64);
+        assert!((t1 - 0.5).abs() < 1e-9);
+        assert!((t2 - 1.0).abs() < 1e-9);
+        assert_eq!(link.delivered(), mb as u64);
+    }
+
+    #[test]
+    fn slow_fast_trace_vs_constant_same_mean() {
+        // A bursty trace with the same mean rate delivers a large file in
+        // approximately the same time (± one period).
+        let mb = 1024.0 * 1024.0;
+        let bursty = BandwidthTrace::new(vec![(1.0, 0.5 * mb), (1.0, 1.5 * mb)]).unwrap();
+        let steady = BandwidthTrace::constant(mb);
+        let size = (20.0 * mb) as u64;
+        let a = bursty.transfer_time_from(0.0, size);
+        let b = steady.transfer_time_from(0.0, size);
+        assert!((a - b).abs() <= 2.0, "bursty {a} vs steady {b}");
+    }
+}

@@ -1,0 +1,239 @@
+//! Eq. 3 — bit division of k-bit codes into fraction planes, with tight
+//! MSB-first bit-packing for the wire (the transmitted representation).
+//!
+//! Packing contract (shared with `python/compile/aot.py::pack_plane_np`
+//! and asserted against `artifacts/golden/plane*.bin`): values are packed
+//! most-significant-bit first, in element order, with the final partial
+//! byte zero-padded on the right. A plane of `n` elements at width `w`
+//! occupies exactly `ceil(n*w / 8)` bytes — so the sum over a schedule's
+//! planes equals the singleton 16-bit size (plus ≤1 ragged byte/plane):
+//! progressive transmission does not inflate the model.
+
+use super::schedule::Schedule;
+
+/// Extract the stage-`m` fraction plane from full codes (Eq. 3), unpacked.
+pub fn split_plane(q: &[u32], sched: &Schedule, stage: usize) -> Vec<u32> {
+    let k = sched.k();
+    let w = sched.widths()[stage];
+    let cum = sched.cum_bits(stage);
+    let mask = (1u32 << w) - 1;
+    let shift = k - cum;
+    q.iter().map(|&v| (v >> shift) & mask).collect()
+}
+
+/// Pack an unpacked plane (values < 2^w) into tight MSB-first bytes.
+pub fn pack_plane(values: &[u32], width: u32) -> Vec<u8> {
+    assert!((1..=16).contains(&width));
+    let total_bits = values.len() * width as usize;
+    let mut out = Vec::with_capacity((total_bits + 7) / 8);
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mask = (1u64 << width) - 1;
+    for &v in values {
+        acc = (acc << width) | (v as u64 & mask);
+        nbits += width;
+        while nbits >= 8 {
+            nbits -= 8;
+            out.push(((acc >> nbits) & 0xFF) as u8);
+        }
+    }
+    if nbits > 0 {
+        out.push(((acc << (8 - nbits)) & 0xFF) as u8);
+    }
+    out
+}
+
+/// Unpack a tight plane back to one value per element.
+pub fn unpack_plane(bytes: &[u8], width: u32, numel: usize) -> Vec<u32> {
+    let mut out = vec![0u32; numel];
+    unpack_plane_into(bytes, width, &mut out);
+    out
+}
+
+/// In-place unpack — part of the client's per-stage hot path.
+pub fn unpack_plane_into(bytes: &[u8], width: u32, out: &mut [u32]) {
+    unpack_or_into(bytes, width, 0, true, out)
+}
+
+/// Fused Eq. 3⁻¹ + Eq. 4 inner loop: unpack the plane and OR each value,
+/// shifted by `shift`, into `out` (or overwrite when `replace`).
+///
+/// This is the client's per-stage hot path; byte-aligned widths (1, 2, 4,
+/// 8, 16) take branch-free unrolled fast paths — one input byte expands
+/// to a fixed number of outputs with no carried bit state — and the
+/// generic path handles ragged widths. See EXPERIMENTS.md §Perf.
+pub fn unpack_or_into(bytes: &[u8], width: u32, shift: u32, replace: bool, out: &mut [u32]) {
+    assert!((1..=16).contains(&width));
+    debug_assert!(bytes.len() >= (out.len() * width as usize + 7) / 8);
+    macro_rules! aligned {
+        ($per_byte:expr, $w:expr) => {{
+            let mut chunks = out.chunks_exact_mut($per_byte);
+            let mask = (1u32 << $w) - 1;
+            for (chunk, &b) in (&mut chunks).zip(bytes) {
+                let b = b as u32;
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    let v = (b >> (8 - $w - j as u32 * $w)) & mask;
+                    if replace {
+                        *o = v << shift;
+                    } else {
+                        *o |= v << shift;
+                    }
+                }
+            }
+            // ragged tail (fewer than $per_byte outputs from the last byte)
+            let rem = chunks.into_remainder();
+            if !rem.is_empty() {
+                let b = bytes[bytes.len() - 1] as u32;
+                for (j, o) in rem.iter_mut().enumerate() {
+                    let v = (b >> (8 - $w - j as u32 * $w)) & mask;
+                    if replace {
+                        *o = v << shift;
+                    } else {
+                        *o |= v << shift;
+                    }
+                }
+            }
+        }};
+    }
+    match width {
+        1 => aligned!(8, 1),
+        2 => aligned!(4, 2),
+        4 => aligned!(2, 4),
+        8 => {
+            for (o, &b) in out.iter_mut().zip(bytes) {
+                let v = b as u32;
+                if replace {
+                    *o = v << shift;
+                } else {
+                    *o |= v << shift;
+                }
+            }
+        }
+        16 => {
+            for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                let v = ((b[0] as u32) << 8) | b[1] as u32;
+                if replace {
+                    *o = v << shift;
+                } else {
+                    *o |= v << shift;
+                }
+            }
+        }
+        _ => {
+            // generic bit-carry path for ragged widths (3, 5, 6, ...)
+            let mask = (1u64 << width) - 1;
+            let mut acc: u64 = 0;
+            let mut nbits: u32 = 0;
+            let mut bi = 0;
+            for o in out.iter_mut() {
+                while nbits < width {
+                    acc = (acc << 8) | bytes[bi] as u64;
+                    bi += 1;
+                    nbits += 8;
+                }
+                nbits -= width;
+                let v = ((acc >> nbits) & mask) as u32;
+                if replace {
+                    *o = v << shift;
+                } else {
+                    *o |= v << shift;
+                }
+            }
+        }
+    }
+}
+
+/// Split + pack all stages of a tensor (the encoder path).
+pub fn encode_planes(q: &[u32], sched: &Schedule) -> Vec<Vec<u8>> {
+    (0..sched.stages())
+        .map(|s| pack_plane(&split_plane(q, sched, s), sched.widths()[s]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize::{quantize, QuantParams, K};
+    use crate::util::rng::Rng;
+
+    fn codes(seed: u64, n: usize) -> Vec<u32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.next_u64() & 0xFFFF) as u32).collect()
+    }
+
+    #[test]
+    fn known_vectors() {
+        // Matches python test_pack_plane_known_vector.
+        assert_eq!(pack_plane(&[0, 1, 2, 3], 2), vec![0x1b]);
+        assert_eq!(pack_plane(&[0xA, 0xB, 0xC], 4), vec![0xAB, 0xC0]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        for width in 1..=16u32 {
+            for n in [1usize, 7, 8, 63, 64, 1000] {
+                let vals: Vec<u32> = codes(width as u64 * 100 + n as u64, n)
+                    .iter()
+                    .map(|v| v & ((1 << width) - 1))
+                    .collect();
+                let packed = pack_plane(&vals, width);
+                assert_eq!(packed.len(), (n * width as usize + 7) / 8);
+                assert_eq!(unpack_plane(&packed, width, n), vals);
+            }
+        }
+    }
+
+    #[test]
+    fn split_planes_reassemble() {
+        let q = codes(5, 4096);
+        for sched in [
+            Schedule::paper_default(),
+            Schedule::new(vec![4; 4], K).unwrap(),
+            Schedule::new(vec![1, 1, 2, 4, 8], K).unwrap(),
+            Schedule::singleton(),
+        ] {
+            let mut acc = vec![0u32; q.len()];
+            for s in 0..sched.stages() {
+                let plane = split_plane(&q, &sched, s);
+                let shift = sched.k() - sched.cum_bits(s);
+                for (a, p) in acc.iter_mut().zip(&plane) {
+                    *a |= p << shift;
+                }
+            }
+            assert_eq!(acc, q, "schedule {sched}");
+        }
+    }
+
+    #[test]
+    fn planes_fit_width() {
+        let q = codes(9, 512);
+        let sched = Schedule::paper_default();
+        for s in 0..sched.stages() {
+            let plane = split_plane(&q, &sched, s);
+            let w = sched.widths()[s];
+            assert!(plane.iter().all(|&v| v < (1 << w)));
+        }
+    }
+
+    #[test]
+    fn encode_planes_sizes() {
+        let data: Vec<f32> = {
+            let mut r = Rng::new(11);
+            (0..10_007).map(|_| r.normal() as f32).collect()
+        };
+        let p = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &p);
+        let sched = Schedule::paper_default();
+        let planes = encode_planes(&q, &sched);
+        let total: usize = planes.iter().map(|p| p.len()).sum();
+        let singleton = (data.len() * 16 + 7) / 8;
+        assert!(total <= singleton + sched.stages());
+    }
+
+    #[test]
+    fn first_plane_is_msbs() {
+        let q = vec![0xFFFFu32, 0x0000, 0x8000, 0x4000];
+        let sched = Schedule::paper_default();
+        assert_eq!(split_plane(&q, &sched, 0), vec![3, 0, 2, 1]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Eq. 4 — incremental bit concatenation on the client.
+//!
+//! The client keeps one [`Accumulator`] per tensor; each arriving packed
+//! plane is unpacked and OR-ed into the k-bit code buffer in place. This
+//! is the first half of the per-stage reconstruct hot path (the second is
+//! Eq. 5 in [`super::dequant`]).
+
+use anyhow::{bail, Result};
+
+use super::bitplane;
+use super::schedule::Schedule;
+
+/// Incremental Eq. 4 state for one tensor.
+#[derive(Debug, Clone)]
+pub struct Accumulator {
+    q: Vec<u32>,
+    sched: Schedule,
+    next_stage: usize,
+}
+
+impl Accumulator {
+    pub fn new(numel: usize, sched: Schedule) -> Self {
+        Self {
+            q: vec![0u32; numel],
+            sched,
+            next_stage: 0,
+        }
+    }
+
+    /// Reset to the empty state (reuse buffers for a fresh download).
+    pub fn reset(&mut self) {
+        self.q.fill(0);
+        self.next_stage = 0;
+    }
+
+    /// Number of stages absorbed so far.
+    pub fn stages_received(&self) -> usize {
+        self.next_stage
+    }
+
+    /// Cumulative bits received.
+    pub fn cum_bits(&self) -> u32 {
+        if self.next_stage == 0 {
+            0
+        } else {
+            self.sched.cum_bits(self.next_stage - 1)
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.next_stage == self.sched.stages()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Absorb the next packed plane (must arrive in schedule order).
+    pub fn absorb(&mut self, packed: &[u8]) -> Result<()> {
+        if self.is_complete() {
+            bail!("all {} stages already received", self.sched.stages());
+        }
+        let stage = self.next_stage;
+        let w = self.sched.widths()[stage];
+        let expect = self.sched.plane_bytes(stage, self.q.len());
+        if packed.len() != expect {
+            bail!(
+                "stage {stage} plane is {} bytes, expected {expect}",
+                packed.len()
+            );
+        }
+        let shift = self.sched.k() - self.sched.cum_bits(stage);
+        // Fused unpack + shift + OR — single pass, no scratch buffer.
+        // Stage 0 can overwrite instead of OR (q is all-zero then).
+        bitplane::unpack_or_into(packed, w, shift, stage == 0, &mut self.q);
+        self.next_stage += 1;
+        Ok(())
+    }
+
+    /// Current (partially filled) k-bit codes.
+    pub fn codes(&self) -> &[u32] {
+        &self.q
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitplane::{encode_planes, split_plane, pack_plane};
+    use crate::quant::quantize::K;
+    use crate::util::rng::Rng;
+
+    fn codes(seed: u64, n: usize) -> Vec<u32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.next_u64() & 0xFFFF) as u32).collect()
+    }
+
+    #[test]
+    fn full_reassembly_matches() {
+        let q = codes(1, 3001);
+        for sched in [
+            Schedule::paper_default(),
+            Schedule::new(vec![8, 8], K).unwrap(),
+            Schedule::singleton(),
+        ] {
+            let planes = encode_planes(&q, &sched);
+            let mut acc = Accumulator::new(q.len(), sched.clone());
+            for p in &planes {
+                acc.absorb(p).unwrap();
+            }
+            assert!(acc.is_complete());
+            assert_eq!(acc.codes(), &q[..]);
+        }
+    }
+
+    #[test]
+    fn partial_has_high_bits_only() {
+        let q = codes(2, 256);
+        let sched = Schedule::paper_default();
+        let planes = encode_planes(&q, &sched);
+        let mut acc = Accumulator::new(q.len(), sched.clone());
+        acc.absorb(&planes[0]).unwrap();
+        acc.absorb(&planes[1]).unwrap();
+        assert_eq!(acc.cum_bits(), 4);
+        for (a, orig) in acc.codes().iter().zip(&q) {
+            assert_eq!(*a, orig & 0xF000);
+        }
+    }
+
+    #[test]
+    fn wrong_size_plane_rejected() {
+        let sched = Schedule::paper_default();
+        let mut acc = Accumulator::new(100, sched);
+        assert!(acc.absorb(&[0u8; 3]).is_err()); // expect ceil(100*2/8)=25
+        assert_eq!(acc.stages_received(), 0);
+    }
+
+    #[test]
+    fn absorb_past_end_rejected() {
+        let q = codes(3, 16);
+        let sched = Schedule::new(vec![16], K).unwrap();
+        let planes = encode_planes(&q, &sched);
+        let mut acc = Accumulator::new(16, sched);
+        acc.absorb(&planes[0]).unwrap();
+        assert!(acc.absorb(&planes[0]).is_err());
+    }
+
+    #[test]
+    fn monotone_code_refinement() {
+        // Each stage can only add lower-order bits: codes are monotonically
+        // non-decreasing and never exceed the final value.
+        let q = codes(4, 512);
+        let sched = Schedule::paper_default();
+        let planes = encode_planes(&q, &sched);
+        let mut acc = Accumulator::new(q.len(), sched);
+        let mut prev = vec![0u32; q.len()];
+        for p in &planes {
+            acc.absorb(p).unwrap();
+            for ((cur, pv), fin) in acc.codes().iter().zip(&prev).zip(&q) {
+                assert!(cur >= pv);
+                assert!(cur <= fin);
+            }
+            prev = acc.codes().to_vec();
+        }
+    }
+
+    #[test]
+    fn stage_planes_independent_of_split_order() {
+        let q = codes(5, 128);
+        let sched = Schedule::new(vec![4, 4, 4, 4], K).unwrap();
+        for s in 0..sched.stages() {
+            let direct = pack_plane(&split_plane(&q, &sched, s), 4);
+            assert_eq!(direct, encode_planes(&q, &sched)[s]);
+        }
+    }
+}

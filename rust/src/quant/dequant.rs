@@ -1,0 +1,167 @@
+//! Eq. 5 — dequantization with the floor-loss / missing-bits revision.
+//!
+//! `M' = (max - min) * (q' + 2^{k-c-1}) / 2^k + min` for `c` received
+//! cumulative bits. At `c == k` the additive term is `0.5` — exactly the
+//! paper's `1/2^{k+1}`-of-range revision for the flooring in Eq. 2; for
+//! `c < k` it is the midpoint estimate of the not-yet-received low bits
+//! (which makes the reconstruction error bound one quantization step *at
+//! the received width*, see tests).
+
+use super::quantize::QuantParams;
+
+/// Scalar parameters of one dequantization pass.
+#[derive(Debug, Clone, Copy)]
+pub struct DequantParams {
+    /// `(max - min) / 2^k`
+    pub scale: f32,
+    /// tensor minimum
+    pub min: f32,
+    /// `2^{k-c-1}` (or `0.5` at full width)
+    pub half: f32,
+}
+
+impl DequantParams {
+    pub fn new(qp: &QuantParams, cum_bits: u32) -> Self {
+        Self {
+            scale: qp.dequant_scale(),
+            min: qp.min,
+            half: half_correction(qp.k, cum_bits),
+        }
+    }
+}
+
+/// The `2^{k-c-1}` midpoint term of Eq. 5.
+pub fn half_correction(k: u32, cum_bits: u32) -> f32 {
+    assert!(cum_bits >= 1 && cum_bits <= k);
+    if cum_bits >= k {
+        0.5
+    } else {
+        (1u64 << (k - cum_bits - 1)) as f32
+    }
+}
+
+/// Eq. 5 into a caller-provided buffer — the per-stage hot path.
+///
+/// A single fused multiply-add per element; the compiler auto-vectorizes
+/// this loop (see EXPERIMENTS.md §Perf).
+pub fn dequantize_into(q: &[u32], p: DequantParams, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    let DequantParams { scale, min, half } = p;
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = (v as f32 + half) * scale + min;
+    }
+}
+
+/// Allocating convenience wrapper.
+pub fn dequantize(q: &[u32], p: DequantParams) -> Vec<f32> {
+    let mut out = vec![0f32; q.len()];
+    dequantize_into(q, p, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitplane::encode_planes;
+    use crate::quant::concat::Accumulator;
+    use crate::quant::quantize::{quantize, QuantParams, K};
+    use crate::quant::schedule::Schedule;
+    use crate::util::rng::Rng;
+
+    fn tensor(seed: u64, n: usize, scale: f64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.normal() * scale) as f32).collect()
+    }
+
+    /// One quantization step at `c` received bits.
+    fn step(qp: &QuantParams, c: u32) -> f32 {
+        ((qp.max as f64 - qp.min as f64 + qp.eps()) / (1u64 << c) as f64) as f32
+    }
+
+    #[test]
+    fn full_roundtrip_error_half_step() {
+        let data = tensor(1, 8192, 0.4);
+        let qp = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &qp);
+        let out = dequantize(&q, DequantParams::new(&qp, K));
+        let max_err = data
+            .iter()
+            .zip(&out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        // half a step plus f32 rounding slack (dequant runs in f32; the
+        // intermediate (q+0.5)*scale is O(range), so allow a few ulps)
+        let slack = (qp.max - qp.min).abs() * 1e-6 + 1e-7;
+        assert!(max_err <= 0.5 * step(&qp, K) + slack, "err {max_err}");
+    }
+
+    #[test]
+    fn progressive_error_decreases() {
+        let data = tensor(2, 4096, 1.3);
+        let qp = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &qp);
+        let sched = Schedule::paper_default();
+        let planes = encode_planes(&q, &sched);
+        let mut acc = Accumulator::new(q.len(), sched.clone());
+        let mut prev = f32::INFINITY;
+        let mut out = vec![0f32; q.len()];
+        for (i, p) in planes.iter().enumerate() {
+            acc.absorb(p).unwrap();
+            let c = sched.cum_bits(i);
+            dequantize_into(acc.codes(), DequantParams::new(&qp, c), &mut out);
+            let max_err = data
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err <= step(&qp, c), "stage {i}: {max_err} > step");
+            assert!(max_err <= prev + 1e-6, "error must not grow");
+            prev = max_err;
+        }
+    }
+
+    #[test]
+    fn half_correction_values() {
+        assert_eq!(half_correction(16, 16), 0.5);
+        assert_eq!(half_correction(16, 2), 8192.0);
+        assert_eq!(half_correction(16, 15), 1.0);
+    }
+
+    #[test]
+    fn midpoint_beats_no_correction_on_average() {
+        // The Eq. 5 revision term must reduce the mean error vs raw
+        // truncation — this is the paper's justification for flooring.
+        let data = tensor(3, 20_000, 0.7);
+        let qp = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &qp);
+        let c = 4u32;
+        let trunc: Vec<u32> = q.iter().map(|v| v & !((1 << (K - c)) - 1)).collect();
+        let with = dequantize(&trunc, DequantParams::new(&qp, c));
+        let without = dequantize(
+            &trunc,
+            DequantParams {
+                half: 0.0,
+                ..DequantParams::new(&qp, c)
+            },
+        );
+        let mean = |xs: &[f32]| -> f64 {
+            xs.iter()
+                .zip(&data)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / xs.len() as f64
+        };
+        assert!(mean(&with) < mean(&without) * 0.6);
+    }
+
+    #[test]
+    fn degenerate_tensor_reconstructs_constant() {
+        let data = vec![-1.25f32; 33];
+        let qp = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &qp);
+        let out = dequantize(&q, DequantParams::new(&qp, K));
+        for v in out {
+            assert!((v - -1.25).abs() < 1e-5);
+        }
+    }
+}

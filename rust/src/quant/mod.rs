@@ -1,0 +1,30 @@
+//! The paper's codec: quantization (Eq. 2), bit division (Eq. 3),
+//! bit concatenation (Eq. 4) and dequantization (Eq. 5), plus bit-width
+//! schedules and the §III-A naive digit-split baseline.
+//!
+//! Specification (mirrored in `python/compile/kernels/ref.py`, and
+//! cross-checked against `artifacts/golden/`):
+//!
+//! - `k = 16` bit unsigned quantization per tensor.
+//! - Eq. 2: `q = floor(2^k * (M - min) / (max - min + eps))` in f64, with
+//!   `eps = max((max-min) * 1e-6, 1e-12)`; constant tensors map to 0.
+//! - Eq. 3: part *m* of schedule widths `b` holds bits
+//!   `[k - c_m, k - c_{m-1})` of `q` (MSB first), `c_m = b_1 + … + b_m`.
+//! - Eq. 4: `q' = OR_m (p_m << (k - c_m))` — implemented incrementally in
+//!   [`concat::Accumulator`].
+//! - Eq. 5: `M' = (max-min) * (q' + 2^{k-c-1}) / 2^k + min` after `c`
+//!   received bits; at `c = k` the additive term is the paper's floor-loss
+//!   revision `(max-min)/2^{k+1}`.
+
+pub mod bitplane;
+pub mod concat;
+pub mod dequant;
+pub mod naive;
+pub mod quantize;
+pub mod schedule;
+
+pub use bitplane::{pack_plane, split_plane, unpack_or_into, unpack_plane};
+pub use concat::Accumulator;
+pub use dequant::{dequantize_into, half_correction, DequantParams};
+pub use quantize::{quantize, QuantParams, K};
+pub use schedule::Schedule;

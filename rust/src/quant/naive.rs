@@ -1,0 +1,223 @@
+//! §III-A — the naive digit-split baseline (Eq. 1).
+//!
+//! Represents each float as decimal significand digits + exponent and
+//! transmits significand digits progressively. This is the strawman the
+//! paper rejects: it is "not efficient in terms of representation space".
+//! We implement it to regenerate that ablation (`ablation_naive_split`
+//! bench): bytes-per-stage vs reconstruction error, compared with the
+//! quantization bit-split codec.
+//!
+//! Encoding: for each value, `d` decimal digits of the significand plus a
+//! shared per-value exponent byte (sign packed into it). A stage carries
+//! `digits_per_stage` digits per value, each digit packed in 4 bits (BCD),
+//! so stage size is `numel * digits/2` bytes plus the one-off exponent
+//! plane — strictly larger than the bit-split's `numel * w / 8`.
+
+use anyhow::{bail, Result};
+
+/// Total significand digits carried (≈ f32 precision).
+pub const TOTAL_DIGITS: usize = 8;
+
+/// Naive-split encoder state for one tensor.
+#[derive(Debug, Clone)]
+pub struct NaiveEncoded {
+    /// per-value sign (1 bit, packed) + exponent (i8) plane
+    pub exponents: Vec<u8>,
+    pub signs: Vec<u8>,
+    /// per-stage BCD digit planes, MSB digit first
+    pub digit_planes: Vec<Vec<u8>>,
+    pub digits_per_stage: usize,
+    pub numel: usize,
+}
+
+/// Encode a tensor with `stages` equal digit groups.
+pub fn encode(data: &[f32], stages: usize) -> Result<NaiveEncoded> {
+    if stages == 0 || TOTAL_DIGITS % stages != 0 {
+        bail!("stages must evenly divide {TOTAL_DIGITS}");
+    }
+    let digits_per_stage = TOTAL_DIGITS / stages;
+    let mut exponents = Vec::with_capacity(data.len());
+    let mut signs = vec![0u8; (data.len() + 7) / 8];
+    let mut all_digits: Vec<[u8; TOTAL_DIGITS]> = Vec::with_capacity(data.len());
+
+    for (i, &v) in data.iter().enumerate() {
+        if v < 0.0 {
+            signs[i / 8] |= 1 << (i % 8);
+        }
+        let a = v.abs() as f64;
+        let exp = if a == 0.0 { 0 } else { a.log10().floor() as i32 };
+        let exp = exp.clamp(-64, 63);
+        exponents.push((exp + 64) as u8);
+        // significand in [1, 10): first digit is the leading digit
+        let mut sig = if a == 0.0 { 0.0 } else { a / 10f64.powi(exp) };
+        let mut digits = [0u8; TOTAL_DIGITS];
+        for d in digits.iter_mut() {
+            let dig = sig.floor().clamp(0.0, 9.0);
+            *d = dig as u8;
+            sig = (sig - dig) * 10.0;
+        }
+        all_digits.push(digits);
+    }
+
+    // BCD-pack each stage's digit group.
+    let mut digit_planes = Vec::with_capacity(stages);
+    for s in 0..stages {
+        let lo = s * digits_per_stage;
+        let mut plane = Vec::with_capacity((data.len() * digits_per_stage + 1) / 2);
+        let mut nibble_pending: Option<u8> = None;
+        for digits in &all_digits {
+            for d in &digits[lo..lo + digits_per_stage] {
+                match nibble_pending.take() {
+                    None => nibble_pending = Some(*d),
+                    Some(hi) => plane.push((hi << 4) | d),
+                }
+            }
+        }
+        if let Some(hi) = nibble_pending {
+            plane.push(hi << 4);
+        }
+        digit_planes.push(plane);
+    }
+
+    Ok(NaiveEncoded {
+        exponents,
+        signs,
+        digit_planes,
+        digits_per_stage,
+        numel: data.len(),
+    })
+}
+
+impl NaiveEncoded {
+    /// Wire bytes of stage `s` (stage 0 additionally carries sign+exponent).
+    pub fn stage_bytes(&self, s: usize) -> usize {
+        let base = self.digit_planes[s].len();
+        if s == 0 {
+            base + self.exponents.len() + self.signs.len()
+        } else {
+            base
+        }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        (0..self.digit_planes.len()).map(|s| self.stage_bytes(s)).sum()
+    }
+
+    /// Reconstruct after receiving the first `stages_received` stages.
+    pub fn decode(&self, stages_received: usize) -> Vec<f32> {
+        let mut out = vec![0f32; self.numel];
+        let ndig = stages_received * self.digits_per_stage;
+        // unpack received digit nibbles per value
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut sig = 0f64;
+            let mut weight = 1f64;
+            for s in 0..stages_received {
+                let plane = &self.digit_planes[s];
+                for d in 0..self.digits_per_stage {
+                    let idx = i * self.digits_per_stage + d;
+                    let byte = plane[idx / 2];
+                    let dig = if idx % 2 == 0 { byte >> 4 } else { byte & 0xF };
+                    sig += dig as f64 * weight;
+                    weight /= 10.0;
+                }
+            }
+            if ndig > 0 {
+                // midpoint of the unreceived digit range
+                sig += 0.5 * weight * 10.0 / 9.0 * 4.5;
+            }
+            let exp = self.exponents[i] as i32 - 64;
+            let neg = (self.signs[i / 8] >> (i % 8)) & 1 == 1;
+            let v = sig * 10f64.powi(exp);
+            *o = if neg { -(v as f32) } else { v as f32 };
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.normal() * 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn full_decode_accurate() {
+        let data = tensor(1, 500);
+        let enc = encode(&data, 4).unwrap();
+        let out = enc.decode(4);
+        for (a, b) in data.iter().zip(&out) {
+            assert!(
+                (a - b).abs() <= a.abs() * 1e-5 + 1e-7,
+                "{a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn progressive_decode_improves() {
+        let data = tensor(2, 1000);
+        let enc = encode(&data, 4).unwrap();
+        let mut prev = f64::INFINITY;
+        for s in 1..=4 {
+            let out = enc.decode(s);
+            let mean: f64 = data
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / data.len() as f64;
+            assert!(mean <= prev, "stage {s}: {mean} > {prev}");
+            prev = mean;
+        }
+    }
+
+    #[test]
+    fn representation_is_larger_than_bitsplit() {
+        // The paper's point: digit splitting wastes representation space.
+        use crate::quant::{quantize, QuantParams, Schedule, K};
+        let data = tensor(3, 10_000);
+        let enc = encode(&data, 4).unwrap();
+        let qp = QuantParams::from_data(&data, K);
+        let q = quantize::quantize(&data, &qp);
+        let sched = Schedule::new(vec![4; 4], K).unwrap();
+        let bitsplit_total: usize = crate::quant::bitplane::encode_planes(&q, &sched)
+            .iter()
+            .map(|p| p.len())
+            .sum();
+        assert!(
+            enc.total_bytes() as f64 > bitsplit_total as f64 * 1.5,
+            "naive {} vs bitsplit {}",
+            enc.total_bytes(),
+            bitsplit_total
+        );
+        let _ = q;
+    }
+
+    #[test]
+    fn stage_sizes_reported() {
+        let data = tensor(4, 128);
+        let enc = encode(&data, 2).unwrap();
+        assert_eq!(enc.total_bytes(), enc.stage_bytes(0) + enc.stage_bytes(1));
+        assert!(enc.stage_bytes(0) > enc.stage_bytes(1)); // exponent plane
+    }
+
+    #[test]
+    fn invalid_stage_counts() {
+        assert!(encode(&[1.0], 3).is_err());
+        assert!(encode(&[1.0], 0).is_err());
+    }
+
+    #[test]
+    fn zero_and_negative_values() {
+        let data = vec![0.0f32, -1.5, 2.25e-3, -7.75e2];
+        let enc = encode(&data, 2).unwrap();
+        let out = enc.decode(2);
+        for (a, b) in data.iter().zip(&out) {
+            assert!((a - b).abs() <= a.abs() * 1e-5 + 1e-7, "{a} vs {b}");
+        }
+    }
+}

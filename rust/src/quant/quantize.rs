@@ -1,0 +1,147 @@
+//! Eq. 2 — floor quantization of a float tensor to k-bit unsigned codes.
+
+/// Fixed quantization depth used throughout the paper (16-bit models show
+/// accuracy equivalent to full precision — §IV-A).
+pub const K: u32 = 16;
+
+/// Per-tensor quantization parameters (stored in manifests / `.pnet`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub min: f32,
+    pub max: f32,
+    pub k: u32,
+}
+
+impl QuantParams {
+    /// Compute min/max from data.
+    pub fn from_data(data: &[f32], k: u32) -> Self {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if data.is_empty() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        Self { min: lo, max: hi, k }
+    }
+
+    /// `eps` of Eq. 2 — keeps the scaled range strictly below `2^k`.
+    pub fn eps(&self) -> f64 {
+        ((self.max as f64 - self.min as f64) * 1e-6).max(1e-12)
+    }
+
+    /// Quantization scale `2^k / (max - min + eps)`.
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.k) as f64 / (self.max as f64 - self.min as f64 + self.eps())
+    }
+
+    /// Dequantization step `(max - min) / 2^k`.
+    pub fn dequant_scale(&self) -> f32 {
+        ((self.max as f64 - self.min as f64) / (1u64 << self.k) as f64) as f32
+    }
+
+    pub fn is_degenerate(&self) -> bool {
+        self.max <= self.min
+    }
+}
+
+/// Eq. 2 over a tensor; returns codes in `[0, 2^k)`.
+///
+/// f64 arithmetic matches the canonical python encoder bit-exactly
+/// (`ref.quantize_np`), which the golden vectors assert.
+pub fn quantize(data: &[f32], p: &QuantParams) -> Vec<u32> {
+    let mut out = vec![0u32; data.len()];
+    quantize_into(data, p, &mut out);
+    out
+}
+
+/// In-place variant for the encode hot path.
+pub fn quantize_into(data: &[f32], p: &QuantParams, out: &mut [u32]) {
+    assert_eq!(data.len(), out.len());
+    if p.is_degenerate() {
+        out.fill(0);
+        return;
+    }
+    let scale = p.scale();
+    let lo = p.min as f64;
+    let top = (1u64 << p.k) as f64 - 1.0;
+    for (o, &v) in out.iter_mut().zip(data) {
+        let q = ((v as f64 - lo) * scale).floor();
+        *o = q.clamp(0.0, top) as u32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_ms(0.0, 0.3) as f32).collect()
+    }
+
+    #[test]
+    fn range_and_extremes() {
+        let data = tensor(1, 4096);
+        let p = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &p);
+        let (imin, _) = data
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let (imax, _) = data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert_eq!(q[imin], 0);
+        assert_eq!(q[imax], (1 << K) - 1);
+        assert!(q.iter().all(|&v| v < (1 << K)));
+    }
+
+    #[test]
+    fn monotone() {
+        let data = tensor(2, 1000);
+        let p = QuantParams::from_data(&data, K);
+        let q = quantize(&data, &p);
+        let mut idx: Vec<usize> = (0..data.len()).collect();
+        idx.sort_by(|&a, &b| data[a].partial_cmp(&data[b]).unwrap());
+        for w in idx.windows(2) {
+            assert!(q[w[0]] <= q[w[1]]);
+        }
+    }
+
+    #[test]
+    fn degenerate_constant() {
+        let data = vec![0.42f32; 64];
+        let p = QuantParams::from_data(&data, K);
+        assert!(p.is_degenerate());
+        assert!(quantize(&data, &p).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn empty() {
+        let p = QuantParams::from_data(&[], K);
+        assert!(quantize(&[], &p).is_empty());
+    }
+
+    #[test]
+    fn k8_vs_k16_consistent_buckets() {
+        let data = tensor(3, 512);
+        let p8 = QuantParams { k: 8, ..QuantParams::from_data(&data, 8) };
+        let p16 = QuantParams::from_data(&data, K);
+        let q8 = quantize(&data, &p8);
+        let q16 = quantize(&data, &p16);
+        // 16-bit codes truncated to 8 bits differ from direct 8-bit codes
+        // by at most 1 (eps differs in the last digit only).
+        for (a, b) in q8.iter().zip(&q16) {
+            let t = b >> 8;
+            assert!((*a as i64 - t as i64).abs() <= 1, "{a} vs {t}");
+        }
+    }
+}

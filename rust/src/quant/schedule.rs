@@ -1,0 +1,138 @@
+//! Bit-width schedules — the user-facing `b` configuration of §III-B.
+//!
+//! A schedule is the list of per-stage bit-widths, e.g. the paper's
+//! default `[2,2,2,2,2,2,2,2]` (2→4→…→16). Widths must sum to `k`.
+
+use anyhow::{bail, Result};
+
+use super::quantize::K;
+
+/// A validated progressive bit-width schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    widths: Vec<u32>,
+    k: u32,
+}
+
+impl Schedule {
+    /// Build and validate a schedule for depth `k`.
+    pub fn new(widths: Vec<u32>, k: u32) -> Result<Self> {
+        if widths.is_empty() {
+            bail!("schedule must have at least one stage");
+        }
+        if widths.iter().any(|&w| w == 0 || w > k) {
+            bail!("stage widths must be in [1, {k}]: {widths:?}");
+        }
+        let total: u32 = widths.iter().sum();
+        if total != k {
+            bail!("schedule widths {widths:?} sum to {total}, expected {k}");
+        }
+        Ok(Self { widths, k })
+    }
+
+    /// The paper's default 8-stage schedule (2→4→…→16).
+    pub fn paper_default() -> Self {
+        Self::new(vec![2; 8], K).unwrap()
+    }
+
+    /// Single-stage schedule == non-progressive ("singleton") transmission.
+    pub fn singleton() -> Self {
+        Self::new(vec![K], K).unwrap()
+    }
+
+    /// Parse "2,2,4,8"-style text (CLI).
+    pub fn parse(text: &str, k: u32) -> Result<Self> {
+        let widths = text
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse::<u32>().map_err(anyhow::Error::from))
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(widths, k)
+    }
+
+    pub fn widths(&self) -> &[u32] {
+        &self.widths
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn stages(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Cumulative bits after stage `i` (0-based).
+    pub fn cum_bits(&self, stage: usize) -> u32 {
+        self.widths[..=stage].iter().sum()
+    }
+
+    /// All cumulative widths, e.g. [2,4,6,...,16].
+    pub fn cum_all(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.widths.len());
+        let mut c = 0;
+        for &w in &self.widths {
+            c += w;
+            out.push(c);
+        }
+        out
+    }
+
+    /// Bytes of stage `i`'s plane for a tensor with `numel` elements
+    /// (tight MSB-first packing).
+    pub fn plane_bytes(&self, stage: usize, numel: usize) -> usize {
+        (numel * self.widths[stage] as usize + 7) / 8
+    }
+
+    /// Total payload bytes across all stages for `numel` elements.
+    pub fn total_bytes(&self, numel: usize) -> usize {
+        (0..self.stages()).map(|s| self.plane_bytes(s, numel)).sum()
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self.cum_all().iter().map(|c| c.to_string()).collect();
+        write!(f, "{}", parts.join("→"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_8_stage() {
+        let s = Schedule::paper_default();
+        assert_eq!(s.stages(), 8);
+        assert_eq!(s.cum_all(), vec![2, 4, 6, 8, 10, 12, 14, 16]);
+        assert_eq!(s.to_string(), "2→4→6→8→10→12→14→16");
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Schedule::new(vec![], K).is_err());
+        assert!(Schedule::new(vec![8, 9], K).is_err());
+        assert!(Schedule::new(vec![0, 16], K).is_err());
+        assert!(Schedule::new(vec![4, 4, 4, 4], K).is_ok());
+    }
+
+    #[test]
+    fn parse_text() {
+        let s = Schedule::parse("1,1,2,4,8", K).unwrap();
+        assert_eq!(s.cum_all(), vec![1, 2, 4, 8, 16]);
+        assert!(Schedule::parse("3,3", K).is_err());
+        assert!(Schedule::parse("a,b", K).is_err());
+    }
+
+    #[test]
+    fn sizes_no_inflation() {
+        // The paper's claim: progressive representation does not increase
+        // total size (up to one ragged byte per stage).
+        let s = Schedule::paper_default();
+        let numel = 10_007;
+        let singleton = (numel * 16 + 7) / 8;
+        assert!(s.total_bytes(numel) <= singleton + s.stages());
+        assert_eq!(s.plane_bytes(0, 4), 1);
+    }
+}

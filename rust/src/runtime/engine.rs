@@ -1,0 +1,221 @@
+//! PJRT CPU client wrapper with an HLO executable cache.
+//!
+//! The `xla` crate's handles are raw pointers (`!Send`); PJRT's CPU client
+//! is internally synchronized, so we wrap everything in a `Mutex` and
+//! assert `Send + Sync` on the wrapper. All executions in this process
+//! share one client (one thread pool, one allocator).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Arc<ExecutableInner>>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compile/execute; all
+// access to the raw handles is serialized through the Engine mutex.
+unsafe impl Send for EngineInner {}
+
+struct ExecutableInner {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for ExecutableInner {}
+unsafe impl Sync for ExecutableInner {}
+
+/// Process-wide PJRT engine. Cheap to clone (shared internally).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<Mutex<EngineInner>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self {
+            inner: Arc::new(Mutex::new(EngineInner {
+                client,
+                cache: HashMap::new(),
+            })),
+        })
+    }
+
+    /// Shared process-wide engine (lazily created).
+    pub fn global() -> Result<Engine> {
+        static GLOBAL: std::sync::OnceLock<Engine> = std::sync::OnceLock::new();
+        if let Some(e) = GLOBAL.get() {
+            return Ok(e.clone());
+        }
+        let e = Engine::cpu()?;
+        let _ = GLOBAL.set(e.clone());
+        Ok(e)
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(exe) = inner.cache.get(path) {
+            return Ok(Executable {
+                inner: exe.clone(),
+                engine: self.inner.clone(),
+            });
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        crate::log_debug!(
+            "compiled {} in {:.2}s",
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+        let arc = Arc::new(ExecutableInner { exe });
+        inner.cache.insert(path.to_path_buf(), arc.clone());
+        Ok(Executable {
+            inner: arc,
+            engine: self.inner.clone(),
+        })
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+}
+
+/// A compiled computation bound to the engine.
+#[derive(Clone)]
+pub struct Executable {
+    inner: Arc<ExecutableInner>,
+    engine: Arc<Mutex<EngineInner>>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the 1-tuple output (aot.py
+    /// lowers with `return_tuple=True`) and returns the flat f32 vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let lit = self.run_literal(inputs)?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Execute and return the raw output literal (un-tupled).
+    pub fn run_literal(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        // Serialize access through the engine mutex: the CPU client is a
+        // single shared thread pool anyway (1-core testbed).
+        let _guard = self.engine.lock().unwrap();
+        let result = self.inner.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+}
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "literal shape {dims:?} wants {numel} elements, got {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a rank-N u32 literal from a flat slice.
+pub fn literal_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "literal shape {dims:?} wants {numel} elements, got {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_smoke_artifact_runs() {
+        // artifacts/kernel_smoke.hlo.txt: f(q[2048] u32, scale, lo, half,
+        // x[8,64]) = x @ dequant(q).reshape(64, 32); Pallas dequant +
+        // Pallas matmul inside.
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::global().unwrap();
+        let exe = engine
+            .compile_hlo_text(&crate::artifacts_root().join("kernel_smoke.hlo.txt"))
+            .unwrap();
+
+        let q: Vec<u32> = (0..2048u32).map(|i| (i * 31) % 65536).collect();
+        let scale = 1.0f32 / 65536.0;
+        let lo = -0.5f32;
+        let half = 0.5f32;
+        let x: Vec<f32> = (0..8 * 64).map(|i| (i % 7) as f32 * 0.1).collect();
+
+        let out = exe
+            .run_f32(&[
+                literal_u32(&q, &[2048]).unwrap(),
+                literal_f32(&[scale], &[1]).unwrap(),
+                literal_f32(&[lo], &[1]).unwrap(),
+                literal_f32(&[half], &[1]).unwrap(),
+                literal_f32(&x, &[8, 64]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 8 * 32);
+
+        // oracle: dequant + matmul in rust
+        let w: Vec<f32> = q.iter().map(|&v| (v as f32 + half) * scale + lo).collect();
+        for i in 0..8 {
+            for j in 0..32 {
+                let mut acc = 0f32;
+                for l in 0..64 {
+                    acc += x[i * 64 + l] * w[l * 32 + j];
+                }
+                let got = out[i * 32 + j];
+                assert!(
+                    (acc - got).abs() < 1e-3,
+                    "({i},{j}): {acc} vs {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let engine = Engine::global().unwrap();
+        let path = crate::artifacts_root().join("kernel_smoke.hlo.txt");
+        let n0 = engine.cached();
+        let _a = engine.compile_hlo_text(&path).unwrap();
+        let _b = engine.compile_hlo_text(&path).unwrap();
+        assert!(engine.cached() >= 1 && engine.cached() <= n0 + 1);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_u32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+}

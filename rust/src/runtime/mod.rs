@@ -1,0 +1,17 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them on
+//! the request path (python is never involved at runtime).
+//!
+//! - [`engine::Engine`] — process-wide PJRT CPU client + executable cache.
+//! - [`session::ModelSession`] — per-model staged execution: feeds images
+//!   plus a flat weight vector (or quantized planes for the fused-dequant
+//!   `qfwd` variant) into the compiled executable at the best batch size.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod session;
+
+pub use engine::{Engine, Executable};
+pub use session::{InferOutput, ModelSession};

@@ -1,0 +1,253 @@
+//! Per-model execution session: batching, padding, fwd/qfwd staging.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::engine::{literal_f32, literal_u32, Engine, Executable};
+use crate::models::ModelManifest;
+use crate::quant::{half_correction, QuantParams};
+
+/// Inference output: `dim` values per sample.
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    pub data: Vec<f32>,
+    pub dim: usize,
+}
+
+impl InferOutput {
+    pub fn n(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Argmax over the first `classes` entries of each row.
+    pub fn argmax_class(&self, i: usize, classes: usize) -> usize {
+        let row = &self.row(i)[..classes];
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap()
+    }
+}
+
+/// A model bound to compiled executables.
+///
+/// `fwd` variants take `(x, flat_weights)`; the [`ModelSession::infer`]
+/// call picks the largest compiled batch ≤ n and loops/pads. The `qfwd`
+/// variant runs the L1 Pallas dequant kernel inside the executable.
+pub struct ModelSession {
+    manifest: ModelManifest,
+    fwd: BTreeMap<usize, Executable>,
+    qfwd: BTreeMap<usize, Executable>,
+}
+
+impl ModelSession {
+    /// Compile the model's fwd executables (and qfwd if present).
+    pub fn load(engine: &Engine, manifest: &ModelManifest) -> Result<Self> {
+        let mut fwd = BTreeMap::new();
+        let mut qfwd = BTreeMap::new();
+        for (key, _) in manifest.hlo.clone() {
+            if let Some(b) = key.strip_prefix("fwd_b").and_then(|s| s.parse::<usize>().ok()) {
+                fwd.insert(b, engine.compile_hlo_text(&manifest.hlo_path(&key)?)?);
+            } else if let Some(b) = key
+                .strip_prefix("qfwd_b")
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                qfwd.insert(b, engine.compile_hlo_text(&manifest.hlo_path(&key)?)?);
+            }
+        }
+        if fwd.is_empty() {
+            bail!("{}: no fwd artifacts", manifest.name);
+        }
+        Ok(Self {
+            manifest: manifest.clone(),
+            fwd,
+            qfwd,
+        })
+    }
+
+    /// Load only specific batch sizes (faster startup for demos).
+    pub fn load_batches(engine: &Engine, manifest: &ModelManifest, batches: &[usize]) -> Result<Self> {
+        let mut fwd = BTreeMap::new();
+        for &b in batches {
+            let key = format!("fwd_b{b}");
+            fwd.insert(b, engine.compile_hlo_text(&manifest.hlo_path(&key)?)?);
+        }
+        Ok(Self {
+            manifest: manifest.clone(),
+            fwd,
+            qfwd: BTreeMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    fn input_dims(&self, batch: usize) -> Vec<i64> {
+        let mut dims = vec![batch as i64];
+        dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+        dims
+    }
+
+    /// Pick the executable batch for `n` samples: the largest compiled
+    /// batch ≤ n, or the smallest one if n is below all of them.
+    fn pick_batch(map: &BTreeMap<usize, Executable>, n: usize) -> usize {
+        let mut best = None;
+        for &b in map.keys() {
+            if b <= n {
+                best = Some(b);
+            }
+        }
+        best.unwrap_or_else(|| *map.keys().next().unwrap())
+    }
+
+    /// Run `n` samples through the float-weights forward path.
+    ///
+    /// `images` is `n * input_numel` floats; `weights` the flat vector
+    /// (any progressive reconstruction). Handles batching + padding.
+    pub fn infer(&self, images: &[f32], n: usize, weights: &[f32]) -> Result<InferOutput> {
+        let ind = self.manifest.input_numel();
+        anyhow::ensure!(images.len() == n * ind, "image buffer size mismatch");
+        anyhow::ensure!(
+            weights.len() == self.manifest.param_count,
+            "weights size mismatch"
+        );
+        let dim = self.manifest.output_dim();
+        let mut out = Vec::with_capacity(n * dim);
+        let mut done = 0;
+        let wlit_cache: Option<xla::Literal> = None;
+        let mut wlit_cache = wlit_cache;
+        let mut cached_batch = usize::MAX;
+        while done < n {
+            let batch = Self::pick_batch(&self.fwd, n - done);
+            let exe = &self.fwd[&batch];
+            let take = batch.min(n - done);
+            let mut chunk = vec![0f32; batch * ind];
+            chunk[..take * ind].copy_from_slice(&images[done * ind..(done + take) * ind]);
+            let xlit = literal_f32(&chunk, &self.input_dims(batch))?;
+            // weights literal is reusable across chunks of the same batch
+            if cached_batch != batch || wlit_cache.is_none() {
+                wlit_cache = Some(literal_f32(weights, &[weights.len() as i64])?);
+                cached_batch = batch;
+            }
+            let res = exe.run_f32(&[xlit, wlit_cache.clone().unwrap()])?;
+            anyhow::ensure!(res.len() == batch * dim, "unexpected output size");
+            out.extend_from_slice(&res[..take * dim]);
+            done += take;
+        }
+        Ok(InferOutput { data: out, dim })
+    }
+
+    /// Fused path: quantized codes in, Pallas dequant inside the HLO.
+    pub fn infer_quantized(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+    ) -> Result<InferOutput> {
+        if self.qfwd.is_empty() {
+            bail!("{}: no qfwd artifacts compiled", self.manifest.name);
+        }
+        let ind = self.manifest.input_numel();
+        anyhow::ensure!(images.len() == n * ind, "image buffer size mismatch");
+        anyhow::ensure!(qflat.len() == self.manifest.param_count, "qflat size mismatch");
+        let k = self.manifest.k;
+        let scales: Vec<f32> = self
+            .manifest
+            .tensors
+            .iter()
+            .map(|t| {
+                QuantParams {
+                    min: t.min,
+                    max: t.max,
+                    k,
+                }
+                .dequant_scale()
+            })
+            .collect();
+        let los: Vec<f32> = self.manifest.tensors.iter().map(|t| t.min).collect();
+        let half = [half_correction(k, cum_bits)];
+        let dim = self.manifest.output_dim();
+        let mut out = Vec::with_capacity(n * dim);
+        let mut done = 0;
+        while done < n {
+            let batch = Self::pick_batch(&self.qfwd, n - done);
+            let exe = &self.qfwd[&batch];
+            let take = batch.min(n - done);
+            let mut chunk = vec![0f32; batch * ind];
+            chunk[..take * ind].copy_from_slice(&images[done * ind..(done + take) * ind]);
+            let res = exe.run_f32(&[
+                literal_f32(&chunk, &self.input_dims(batch))?,
+                literal_u32(qflat, &[qflat.len() as i64])?,
+                literal_f32(&scales, &[scales.len() as i64])?,
+                literal_f32(&los, &[los.len() as i64])?,
+                literal_f32(&half, &[1])?,
+            ])?;
+            anyhow::ensure!(res.len() == batch * dim, "unexpected output size");
+            out.extend_from_slice(&res[..take * dim]);
+            done += take;
+        }
+        Ok(InferOutput { data: out, dim })
+    }
+
+    pub fn has_qfwd(&self) -> bool {
+        !self.qfwd.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn session(name: &str) -> Option<(ModelSession, ModelManifest)> {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let engine = Engine::global().unwrap();
+        let reg = Registry::open_default().unwrap();
+        let m = reg.get(name).unwrap().clone();
+        Some((ModelSession::load_batches(&engine, &m, &[1, 32]).unwrap(), m))
+    }
+
+    #[test]
+    fn infer_shapes_and_padding() {
+        let Some((sess, m)) = session("mlp") else { return };
+        let w = m.load_weights().unwrap();
+        let ind = m.input_numel();
+        // n=5 forces batch-1 fallback or batch-32 padding paths
+        for n in [1usize, 5, 33] {
+            let images = vec![0.3f32; n * ind];
+            let out = sess.infer(&images, n, &w).unwrap();
+            assert_eq!(out.n(), n);
+            assert_eq!(out.dim, 10);
+        }
+    }
+
+    #[test]
+    fn infer_deterministic() {
+        let Some((sess, m)) = session("mlp") else { return };
+        let w = m.load_weights().unwrap();
+        let images = vec![0.5f32; m.input_numel()];
+        let a = sess.infer(&images, 1, &w).unwrap();
+        let b = sess.infer(&images, 1, &w).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn bad_sizes_rejected() {
+        let Some((sess, m)) = session("mlp") else { return };
+        let w = m.load_weights().unwrap();
+        assert!(sess.infer(&[0.0; 10], 1, &w).is_err());
+        let images = vec![0f32; m.input_numel()];
+        assert!(sess.infer(&images, 1, &w[..100]).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! The model-delivery server: repository of progressively encoded models,
+//! a TCP streaming service with per-connection bandwidth shaping, and the
+//! framed request protocol.
+//!
+//! This is the "server-side" half of Fig 1: models are divided
+//! (quantize + bit-divide) once at deploy time and streamed stage-major
+//! to each requesting device. No inference ever happens here (the paper's
+//! argument vs collaborative intelligence: zero server compute, §II-C).
+
+pub mod proto;
+pub mod repository;
+pub mod service;
+
+pub use proto::{read_frame, write_frame, FetchRequest};
+pub use repository::Repository;
+pub use service::Server;

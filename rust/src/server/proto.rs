@@ -1,0 +1,173 @@
+//! Wire protocol: a single length-prefixed JSON request, answered by a
+//! raw `.pnet` byte stream (optionally offset for resume).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::quant::{Schedule, K};
+use crate::util::json::{self, Json};
+
+/// Cap on request frame size.
+const MAX_FRAME: usize = 1 << 20;
+
+/// A model fetch request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FetchRequest {
+    pub model: String,
+    /// None = server default (paper 8-stage)
+    pub schedule: Option<Schedule>,
+    /// None = server default shaping; Some(f) = MB/s override
+    pub speed_mbps: Option<f64>,
+    /// resume offset in bytes
+    pub offset: u64,
+}
+
+impl FetchRequest {
+    pub fn new(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            schedule: None,
+            speed_mbps: None,
+            offset: 0,
+        }
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> Self {
+        self.schedule = Some(s);
+        self
+    }
+
+    pub fn with_speed(mut self, mbps: f64) -> Self {
+        self.speed_mbps = Some(mbps);
+        self
+    }
+
+    pub fn with_offset(mut self, offset: u64) -> Self {
+        self.offset = offset;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("model", json::s(&self.model))];
+        if let Some(s) = &self.schedule {
+            fields.push((
+                "schedule",
+                json::arr(s.widths().iter().map(|&w| json::num(w as f64)).collect()),
+            ));
+        }
+        if let Some(v) = self.speed_mbps {
+            fields.push(("speed_mbps", json::num(v)));
+        }
+        if self.offset > 0 {
+            fields.push(("offset", json::num(self.offset as f64)));
+        }
+        json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let schedule = match j.opt("schedule") {
+            None => None,
+            Some(arr) => {
+                let widths = arr
+                    .as_arr()?
+                    .iter()
+                    .map(|w| Ok(w.as_i64()? as u32))
+                    .collect::<Result<Vec<_>>>()?;
+                Some(Schedule::new(widths, K)?)
+            }
+        };
+        Ok(Self {
+            model: j.get("model")?.as_str()?.to_string(),
+            schedule,
+            speed_mbps: match j.opt("speed_mbps") {
+                None => None,
+                Some(v) => Some(v.as_f64()?),
+            },
+            offset: match j.opt("offset") {
+                None => 0,
+                Some(v) => v.as_i64()? as u64,
+            },
+        })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.to_json().to_string().into_bytes();
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+}
+
+/// Write a length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// Read a length-prefixed frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        bail!("frame too large: {n}");
+    }
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Read + parse a fetch request frame.
+pub fn read_request<R: Read>(r: &mut R) -> Result<FetchRequest> {
+    let body = read_frame(r)?;
+    let text = std::str::from_utf8(&body)?;
+    FetchRequest::from_json(&Json::parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = FetchRequest::new("cnn")
+            .with_schedule(Schedule::paper_default())
+            .with_speed(0.5)
+            .with_offset(1234);
+        let bytes = req.encode();
+        let mut cur = std::io::Cursor::new(bytes);
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn minimal_request() {
+        let req = FetchRequest::new("mlp");
+        let mut cur = std::io::Cursor::new(req.encode());
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back.model, "mlp");
+        assert_eq!(back.schedule, None);
+        assert_eq!(back.offset, 0);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[0; 16]);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+    }
+}

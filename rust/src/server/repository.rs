@@ -1,0 +1,118 @@
+//! Model repository: progressive encodings, computed once per
+//! (model, schedule) and cached — the deploy-time "division" of Fig 1.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::format::PnetWriter;
+use crate::models::Registry;
+use crate::quant::Schedule;
+
+/// Cache key: model name + schedule widths.
+type Key = (String, Vec<u32>);
+
+/// Thread-safe repository of encoded models.
+pub struct Repository {
+    registry: Registry,
+    cache: Mutex<HashMap<Key, Arc<Vec<u8>>>>,
+}
+
+impl Repository {
+    pub fn new(registry: Registry) -> Self {
+        Self {
+            registry,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Registry::open_default()?))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Full `.pnet` container bytes for a model under a schedule
+    /// (encoded on first request, cached afterwards).
+    pub fn container(&self, model: &str, schedule: &Schedule) -> Result<Arc<Vec<u8>>> {
+        let key = (model.to_string(), schedule.widths().to_vec());
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let manifest = self.registry.get(model)?;
+        let flat = manifest.load_weights()?;
+        let pnet_manifest = manifest.pnet_manifest(&flat, schedule.clone())?;
+        let writer = PnetWriter::encode(pnet_manifest, &flat)?;
+        let bytes = Arc::new(writer.to_bytes());
+        crate::log_info!(
+            "encoded {model} [{schedule}]: {} bytes",
+            bytes.len()
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, bytes.clone());
+        Ok(bytes)
+    }
+
+    /// Encoded size without retaining the encoding.
+    pub fn container_size(&self, model: &str, schedule: &Schedule) -> Result<usize> {
+        Ok(self.container(model, schedule)?.len())
+    }
+
+    pub fn cached_encodings(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::PnetReader;
+
+    #[test]
+    fn encodes_and_caches() {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let repo = Repository::open_default().unwrap();
+        let sched = Schedule::paper_default();
+        let a = repo.container("mlp", &sched).unwrap();
+        let b = repo.container("mlp", &sched).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second hit must be cached");
+        assert_eq!(repo.cached_encodings(), 1);
+
+        // container parses and matches the manifest
+        let r = PnetReader::from_bytes(&a).unwrap();
+        let m = repo.registry().get("mlp").unwrap();
+        assert_eq!(r.manifest.param_count(), m.param_count);
+        // payload ≈ 16 bits/param (+ ≤1 ragged byte per tensor-stage)
+        let payload: usize = r.manifest.payload_bytes();
+        let slack = r.manifest.tensors.len() * r.manifest.schedule.stages();
+        assert!(payload >= m.param_count * 2 && payload <= m.param_count * 2 + slack);
+    }
+
+    #[test]
+    fn distinct_schedules_distinct_entries() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let repo = Repository::open_default().unwrap();
+        repo.container("mlp", &Schedule::paper_default()).unwrap();
+        repo.container("mlp", &Schedule::singleton()).unwrap();
+        assert_eq!(repo.cached_encodings(), 2);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let repo = Repository::open_default().unwrap();
+        assert!(repo.container("nope", &Schedule::paper_default()).is_err());
+    }
+}

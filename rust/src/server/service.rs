@@ -1,0 +1,265 @@
+//! TCP streaming service: accepts fetch requests, streams `.pnet` bytes
+//! through a per-connection bandwidth shaper.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::proto::{self, FetchRequest};
+use super::repository::Repository;
+use crate::netsim::{LinkSpec, ThrottledWriter};
+use crate::quant::Schedule;
+use crate::util::pool::ThreadPool;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// default shaping when the request does not override (None = unshaped)
+    pub default_speed_mbps: Option<f64>,
+    /// worker threads for connections
+    pub workers: usize,
+    pub default_schedule: Schedule,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            default_speed_mbps: None,
+            workers: 8,
+            default_schedule: Schedule::paper_default(),
+        }
+    }
+}
+
+/// Running server handle (shuts down on drop).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+}
+
+/// Counters exposed for tests/benches.
+#[derive(Default, Debug)]
+pub struct ServerStats {
+    pub connections: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` (use "127.0.0.1:0" for ephemeral).
+    pub fn start(addr: &str, repo: Arc<Repository>, config: ServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let sd = shutdown.clone();
+        let st = stats.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("prognet-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(config.workers);
+                loop {
+                    if sd.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            st.connections.fetch_add(1, Ordering::SeqCst);
+                            let repo = repo.clone();
+                            let cfg = config.clone();
+                            let st2 = st.clone();
+                            crate::log_debug!("accepted {peer}");
+                            pool.execute(move || {
+                                if let Err(e) = handle_conn(stream, &repo, &cfg, &st2) {
+                                    st2.errors.fetch_add(1, Ordering::SeqCst);
+                                    crate::log_debug!("conn error: {e:#}");
+                                }
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            crate::log_warn!("accept error: {e}");
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+            })?;
+        crate::log_info!("server listening on {local}");
+        Ok(Self {
+            addr: local,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            stats,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    repo: &Repository,
+    config: &ServerConfig,
+    stats: &ServerStats,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true)?;
+    let req = proto::read_request(&mut stream)?;
+    let schedule = req.schedule.clone().unwrap_or_else(|| config.default_schedule.clone());
+    let container = match repo.container(&req.model, &schedule) {
+        Ok(c) => c,
+        Err(e) => {
+            // error frame: status line prefixed with "ERR "
+            let msg = format!("ERR {e}");
+            proto::write_frame(&mut stream, msg.as_bytes())?;
+            return Err(e);
+        }
+    };
+    // OK frame carries the total byte count, then the raw stream follows.
+    let ok = format!("OK {}", container.len());
+    proto::write_frame(&mut stream, ok.as_bytes())?;
+
+    let offset = (req.offset as usize).min(container.len());
+    let body = &container[offset..];
+    let speed = req.speed_mbps.or(config.default_speed_mbps);
+    let sent = match speed {
+        Some(mbps) => {
+            let mut shaped = ThrottledWriter::new(&mut stream, LinkSpec::mbps(mbps));
+            shaped.write_all(body)?;
+            shaped.flush()?;
+            shaped.sent()
+        }
+        None => {
+            stream.write_all(body)?;
+            stream.flush()?;
+            body.len() as u64
+        }
+    };
+    stats.bytes_sent.fetch_add(sent, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Client-side helper: open a fetch stream. Returns the connected socket
+/// positioned at the start of the `.pnet` body and the total body size.
+pub fn open_fetch(addr: &std::net::SocketAddr, req: &FetchRequest) -> Result<(TcpStream, u64)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream.write_all(&req.encode())?;
+    stream.flush()?;
+    let status = proto::read_frame(&mut stream)?;
+    let text = std::str::from_utf8(&status)?;
+    if let Some(size) = text.strip_prefix("OK ") {
+        Ok((stream, size.trim().parse()?))
+    } else {
+        anyhow::bail!("server: {text}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    #[test]
+    fn serve_and_fetch_roundtrip() {
+        if !crate::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let sched = Schedule::paper_default();
+        let expect = repo.container("mlp", &sched).unwrap();
+        let mut server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+
+        let (mut stream, size) =
+            open_fetch(&server.addr(), &FetchRequest::new("mlp")).unwrap();
+        assert_eq!(size as usize, expect.len());
+        let mut got = Vec::new();
+        stream.read_to_end(&mut got).unwrap();
+        assert_eq!(&got[..], &expect[..]);
+        assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn resume_with_offset() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let expect = repo.container("mlp", &Schedule::paper_default()).unwrap();
+        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+        let off = expect.len() as u64 / 2;
+        let (mut stream, _) =
+            open_fetch(&server.addr(), &FetchRequest::new("mlp").with_offset(off)).unwrap();
+        let mut got = Vec::new();
+        stream.read_to_end(&mut got).unwrap();
+        assert_eq!(&got[..], &expect[off as usize..]);
+    }
+
+    #[test]
+    fn unknown_model_gets_error_frame() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+        let err = open_fetch(&server.addr(), &FetchRequest::new("missing")).unwrap_err();
+        assert!(err.to_string().contains("ERR"), "{err}");
+    }
+
+    #[test]
+    fn concurrent_fetches() {
+        if !crate::artifacts_available() {
+            return;
+        }
+        let repo = Arc::new(Repository::open_default().unwrap());
+        let expect = repo.container("mlp", &Schedule::paper_default()).unwrap();
+        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let expect = expect.clone();
+                std::thread::spawn(move || {
+                    let (mut s, _) = open_fetch(&addr, &FetchRequest::new("mlp")).unwrap();
+                    let mut got = Vec::new();
+                    s.read_to_end(&mut got).unwrap();
+                    assert_eq!(got.len(), expect.len());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stats().connections.load(Ordering::SeqCst), 8);
+    }
+}

@@ -1,0 +1,16 @@
+//! Behavioural user-study simulator (Table III + Fig 8 substitution).
+//!
+//! The paper ran 66 human participants through a web labeling task; a
+//! human study cannot be run offline, so this module simulates the same
+//! protocol against the *real* system timing (actual model sizes, the
+//! paper's link speeds, measured inference costs): each synthetic user
+//! has a patience budget and chooses between the deep-model button
+//! ("Find automatically") and manual labeling. See DESIGN.md §2.
+
+pub mod study;
+pub mod survey;
+pub mod user;
+
+pub use study::{StudyConfig, StudyOutcome};
+pub use survey::SurveyDist;
+pub use user::{UserModel, UserParams};

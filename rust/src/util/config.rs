@@ -1,0 +1,163 @@
+//! Launcher configuration: JSON config files with CLI overrides.
+//!
+//! `prognet serve --config serve.json --speed-mbps 2.0` loads the file,
+//! then applies any explicitly passed flags on top — the standard
+//! precedence (defaults < file < CLI).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{Schedule, K};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Full server/launcher configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeFileConfig {
+    pub addr: String,
+    /// default bandwidth shaping (None = unshaped)
+    pub speed_mbps: Option<f64>,
+    pub workers: usize,
+    pub schedule: Schedule,
+    /// models to pre-encode at startup (warm cache)
+    pub preload: Vec<String>,
+}
+
+impl Default for ServeFileConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7070".into(),
+            speed_mbps: None,
+            workers: 8,
+            schedule: Schedule::paper_default(),
+            preload: Vec::new(),
+        }
+    }
+}
+
+impl ServeFileConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        let obj = j.as_obj()?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "addr" => cfg.addr = val.as_str()?.to_string(),
+                "speed_mbps" => {
+                    cfg.speed_mbps = match val {
+                        Json::Null => None,
+                        v => Some(v.as_f64()?),
+                    }
+                }
+                "workers" => cfg.workers = val.as_usize()?,
+                "schedule" => {
+                    let widths = val
+                        .as_arr()?
+                        .iter()
+                        .map(|w| Ok(w.as_i64()? as u32))
+                        .collect::<Result<Vec<_>>>()?;
+                    cfg.schedule = Schedule::new(widths, K)?;
+                }
+                "preload" => {
+                    cfg.preload = val
+                        .as_arr()?
+                        .iter()
+                        .map(|m| Ok(m.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::load(path)?)
+            .with_context(|| format!("in config {}", path.display()))
+    }
+
+    /// Load (optionally) from `--config`, then apply CLI overrides.
+    pub fn resolve(args: &Args) -> Result<Self> {
+        let mut cfg = match args.get("config") {
+            Some(path) => Self::load(Path::new(path))?,
+            None => Self::default(),
+        };
+        if let Some(addr) = args.get("addr") {
+            cfg.addr = addr.to_string();
+        }
+        if let Some(speed) = args.get("speed-mbps") {
+            cfg.speed_mbps = Some(speed.parse()?);
+        }
+        if let Some(w) = args.get("workers") {
+            cfg.workers = w.parse()?;
+        }
+        if let Some(s) = args.get("schedule") {
+            cfg.schedule = Schedule::parse(s, K)?;
+        }
+        if let Some(models) = args.get("preload") {
+            cfg.preload = models
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Args {
+        Args::parse(list.iter().map(|s| s.to_string()), &[]).unwrap()
+    }
+
+    #[test]
+    fn defaults() {
+        let cfg = ServeFileConfig::resolve(&args(&[])).unwrap();
+        assert_eq!(cfg, ServeFileConfig::default());
+    }
+
+    #[test]
+    fn file_then_cli_precedence() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("prognet-cfg-{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"addr": "0.0.0.0:9000", "speed_mbps": 0.5,
+                "schedule": [4,4,4,4], "preload": ["cnn", "mlp"]}"#,
+        )
+        .unwrap();
+        let cfg = ServeFileConfig::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--speed-mbps",
+            "2.0",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:9000"); // from file
+        assert_eq!(cfg.speed_mbps, Some(2.0)); // CLI wins
+        assert_eq!(cfg.schedule.stages(), 4);
+        assert_eq!(cfg.preload, vec!["cnn", "mlp"]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"addres": "typo"}"#).unwrap();
+        assert!(ServeFileConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bad_schedule_rejected() {
+        let j = Json::parse(r#"{"schedule": [3, 3]}"#).unwrap();
+        assert!(ServeFileConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn null_speed_is_unshaped() {
+        let j = Json::parse(r#"{"speed_mbps": null}"#).unwrap();
+        assert_eq!(ServeFileConfig::from_json(&j).unwrap().speed_mbps, None);
+    }
+}

@@ -1,0 +1,412 @@
+//! Minimal JSON parser + writer (RFC 8259 subset, enough for manifests).
+//!
+//! Numbers are parsed as `f64`; integer accessors check exactness.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse a JSON document from text.
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Load and parse a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => Err(anyhow!("expected number, got {self:?}")),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 || n.abs() > 2f64.powi(53) {
+            bail!("not an exact integer: {n}");
+        }
+        Ok(n as i64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_i64()?;
+        usize::try_from(n).map_err(|_| anyhow!("negative index {n}"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(anyhow!("expected string, got {self:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(anyhow!("expected bool, got {self:?}")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => Err(anyhow!("expected array, got {self:?}")),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            _ => Err(anyhow!("expected object")),
+        }
+    }
+
+    /// Object field accessor with a useful error message.
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    /// Optional field accessor.
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    /// Serialize to a compact string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors for building JSON documents.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn arr(items: Vec<Json>) -> Json {
+    Json::Arr(items)
+}
+
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+pub fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => bail!("expected ',' or '}}', got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                c => bail!("expected ',' or ']', got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: copy raw bytes of this code point.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    out.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(text.parse::<f64>().with_context(|| {
+            format!("bad number '{text}' at byte {start}")
+        })?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(Json::parse("-1.5e2").unwrap().as_f64().unwrap(), -150.0);
+        assert_eq!(Json::parse("\"hi\"").unwrap().as_str().unwrap(), "hi");
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[2]
+                .get("b")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "x"
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"arr":[1,2.5,"s\n"],"n":null,"t":true}"#;
+        let j = Json::parse(src).unwrap();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn escapes() {
+        let j = Json::parse(r#""aA\n\t\\b""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "aA\n\t\\b");
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let j = Json::parse("\"héllo→\"").unwrap();
+        assert_eq!(j.as_str().unwrap(), "héllo→");
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn exact_int_check() {
+        assert!(Json::parse("1.5").unwrap().as_i64().is_err());
+        assert!(Json::parse("-3").unwrap().as_usize().is_err());
+    }
+}

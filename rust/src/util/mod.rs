@@ -1,0 +1,16 @@
+//! Self-contained utility layer.
+//!
+//! The offline vendor set has no serde/clap/rand/tokio, so this module
+//! provides the minimal, well-tested equivalents the rest of the crate
+//! builds on: a JSON parser/writer, a CLI argument parser, PRNGs and
+//! distributions, byte codecs, a thread pool, descriptive statistics and
+//! a tiny logger.
+
+pub mod bytes;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod stats;

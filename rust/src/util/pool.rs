@@ -1,0 +1,301 @@
+//! Fixed-size thread pool + a bounded MPMC channel built on std.
+//!
+//! The request path uses explicit threads (download / pipeline / inference)
+//! — see `client::concurrent` — while the server and coordinator use this
+//! pool for per-connection and per-batch work.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// A fixed-size worker pool. Jobs are FIFO; `wait_idle` blocks until the
+/// queue is drained and all workers are parked.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("prognet-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(f));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until no queued or running jobs remain.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_mx.lock().unwrap();
+        loop {
+            let queued = self.shared.queue.lock().unwrap().len();
+            let active = self.shared.active.load(Ordering::SeqCst);
+            if queued == 0 && active == 0 {
+                return;
+            }
+            let (g, _) = self
+                .shared
+                .done_cv
+                .wait_timeout(guard, std::time::Duration::from_millis(20))
+                .unwrap();
+            guard = g;
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        sh.active.fetch_add(1, Ordering::SeqCst);
+        job();
+        sh.active.fetch_sub(1, Ordering::SeqCst);
+        sh.done_cv.notify_all();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A bounded multi-producer multi-consumer channel (blocking send/recv)
+/// used for backpressure between pipeline stages.
+pub struct BoundedQueue<T> {
+    inner: Arc<QueueInner<T>>,
+}
+
+struct QueueInner<T> {
+    buf: Mutex<VecDeque<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+    closed: AtomicBool,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Arc::new(QueueInner {
+                buf: Mutex::new(VecDeque::new()),
+                cap,
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Blocking push; returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut buf = self.inner.buf.lock().unwrap();
+        loop {
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return false;
+            }
+            if buf.len() < self.inner.cap {
+                buf.push_back(item);
+                self.inner.not_empty.notify_one();
+                return true;
+            }
+            buf = self.inner.not_full.wait(buf).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        loop {
+            if let Some(v) = buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            buf = self.inner.not_empty.wait(buf).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        let v = buf.pop_front();
+        if v.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        v
+    }
+
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.buf.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn queue_fifo_and_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(3));
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            // blocks until the consumer pops
+            q2.push(3);
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn queue_multi_consumer_conservation() {
+        let q: BoundedQueue<u64> = BoundedQueue::new(8);
+        let sum = Arc::new(AtomicU64::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let s = sum.clone();
+                std::thread::spawn(move || {
+                    while let Some(v) = q.pop() {
+                        s.fetch_add(v, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        let mut expect = 0;
+        for i in 1..=200u64 {
+            expect += i;
+            q.push(i);
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), expect);
+    }
+}

@@ -1,0 +1,172 @@
+//! Descriptive statistics for benchmark reporting (means, percentiles,
+//! confidence intervals, throughput helpers).
+
+/// Online + batch summary over f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: &[f64]) -> Self {
+        Self {
+            samples: samples.to_vec(),
+        }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Half-width of the 95% CI on the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        1.96 * self.std() / (self.samples.len() as f64).sqrt()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Format seconds human-readably (paper tables use whole seconds).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.1}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Format bytes (MB as in the paper's Size column).
+pub fn fmt_bytes(b: u64) -> String {
+    const MB: f64 = 1024.0 * 1024.0;
+    let bf = b as f64;
+    if bf >= MB {
+        format!("{:.1} MB", bf / MB)
+    } else if bf >= 1024.0 {
+        format!("{:.1} KB", bf / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Relative change `(new - base) / base` as a percent string like "+21%".
+pub fn fmt_delta_pct(base: f64, new: f64) -> String {
+    if base == 0.0 {
+        return "n/a".into();
+    }
+    let pct = (new - base) / base * 100.0;
+    format!("{pct:+.0}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.std() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::from_samples(&(1..=100).map(|x| x as f64).collect::<Vec<_>>());
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.05);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let few = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        let many = Summary::from_samples(&(0..300).map(|i| (i % 3) as f64 + 1.0).collect::<Vec<_>>());
+        assert!(many.ci95() < few.ci95());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(12.0), "12.0s");
+        assert_eq!(fmt_secs(0.5), "500.0ms");
+        assert_eq!(fmt_bytes(7 * 1024 * 1024), "7.0 MB");
+        assert_eq!(fmt_delta_pct(10.0, 12.0), "+20%");
+        assert_eq!(fmt_delta_pct(10.0, 10.0), "+0%");
+    }
+}

@@ -1,0 +1,251 @@
+//! Property-based tests over the codec (Eqs. 2–5) + cross-language golden
+//! vector checks against `artifacts/golden/` (emitted by aot.py).
+
+use prognet::quant::{
+    bitplane, dequantize_into, quantize, Accumulator, DequantParams, QuantParams, Schedule, K,
+};
+use prognet::testutil::prop::{check, Gen};
+use prognet::util::json::Json;
+
+fn random_schedule(g: &mut Gen) -> Schedule {
+    let choices: Vec<Vec<u32>> = vec![
+        vec![2; 8],
+        vec![4; 4],
+        vec![8, 8],
+        vec![1, 1, 2, 4, 8],
+        vec![16],
+        vec![2, 6, 8],
+        vec![1; 16],
+        vec![3, 3, 3, 3, 4],
+    ];
+    Schedule::new(g.pick(&choices).clone(), K).unwrap()
+}
+
+#[test]
+fn prop_quantize_dequantize_error_bound() {
+    check(
+        "quantize→dequantize error ≤ half step",
+        150,
+        |g| g.tensor(4000),
+        |data| {
+            let qp = QuantParams::from_data(&data, K);
+            let q = quantize::quantize(&data, &qp);
+            let mut out = vec![0f32; data.len()];
+            dequantize_into(&q, DequantParams::new(&qp, K), &mut out);
+            let step =
+                ((qp.max as f64 - qp.min as f64 + qp.eps()) / 65536.0) as f32;
+            let slack = (qp.max - qp.min).abs() * 1e-6 + 1e-7;
+            for (a, b) in data.iter().zip(&out) {
+                let err = (a - b).abs();
+                if err > 0.5 * step + slack {
+                    return Err(format!("err {err} > half step {}", 0.5 * step));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_concat_identity_arbitrary_schedules() {
+    check(
+        "Eq.3 → Eq.4 identity for arbitrary schedules",
+        150,
+        |g| (g.codes(3000), random_schedule(g)),
+        |(q, sched)| {
+            let planes = bitplane::encode_planes(&q, &sched);
+            let mut acc = Accumulator::new(q.len(), sched);
+            for p in &planes {
+                acc.absorb(p).map_err(|e| e.to_string())?;
+            }
+            if acc.codes() == &q[..] {
+                Ok(())
+            } else {
+                Err("reassembled codes differ".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check(
+        "bit packing round-trips at every width",
+        200,
+        |g| {
+            let width = g.u32(1, 16);
+            let vals: Vec<u32> = g
+                .codes(2000)
+                .iter()
+                .map(|v| v & ((1u32 << width) - 1))
+                .collect();
+            (vals, width)
+        },
+        |(vals, width)| {
+            let packed = bitplane::pack_plane(&vals, width);
+            let expect_len = (vals.len() * width as usize + 7) / 8;
+            if packed.len() != expect_len {
+                return Err(format!(
+                    "packed {} bytes, expected {expect_len}",
+                    packed.len()
+                ));
+            }
+            let back = bitplane::unpack_plane(&packed, width, vals.len());
+            if back == vals {
+                Ok(())
+            } else {
+                Err("unpack mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_progressive_error_monotone() {
+    check(
+        "reconstruction error never grows with more stages",
+        60,
+        |g| (g.tensor(2500), random_schedule(g)),
+        |(data, sched)| {
+            if data.is_empty() {
+                return Ok(());
+            }
+            let qp = QuantParams::from_data(&data, K);
+            let q = quantize::quantize(&data, &qp);
+            let planes = bitplane::encode_planes(&q, &sched);
+            let mut acc = Accumulator::new(q.len(), sched.clone());
+            let mut out = vec![0f32; q.len()];
+            let mut prev = f32::INFINITY;
+            for (i, p) in planes.iter().enumerate() {
+                acc.absorb(p).map_err(|e| e.to_string())?;
+                dequantize_into(
+                    acc.codes(),
+                    DequantParams::new(&qp, sched.cum_bits(i)),
+                    &mut out,
+                );
+                let err = data
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                if err > prev + 1e-6 {
+                    return Err(format!("stage {i}: error grew {prev} -> {err}"));
+                }
+                prev = err;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_total_size_never_inflated() {
+    check(
+        "progressive payload ≤ singleton + 1 ragged byte per stage",
+        100,
+        |g| (g.usize(1, 50_000), random_schedule(g)),
+        |(numel, sched)| {
+            let singleton = (numel * 16 + 7) / 8;
+            let total = sched.total_bytes(numel);
+            if total <= singleton + sched.stages() {
+                Ok(())
+            } else {
+                Err(format!("{total} > {singleton} + {}", sched.stages()))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors: rust codec vs python reference, bit-exact.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_quantize_matches_python() {
+    if !prognet::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let gd = prognet::artifacts_root().join("golden");
+    let g = Json::load(&gd.join("codec.json")).unwrap();
+    let weights = prognet::util::bytes::read_f32_file(&gd.join("weights.bin")).unwrap();
+    let q_expect: Vec<u32> =
+        prognet::util::bytes::u32_from_le(&std::fs::read(gd.join("q16.bin")).unwrap()).unwrap();
+    assert_eq!(weights.len(), g.get("n").unwrap().as_usize().unwrap());
+
+    let qp = QuantParams::from_data(&weights, K);
+    assert!((qp.min as f64 - g.get("min").unwrap().as_f64().unwrap()).abs() < 1e-6);
+    assert!((qp.max as f64 - g.get("max").unwrap().as_f64().unwrap()).abs() < 1e-6);
+    let q = quantize::quantize(&weights, &qp);
+    assert_eq!(q, q_expect, "rust Eq.2 must match python bit-exactly");
+    let crc = crc32_of_u32(&q);
+    assert_eq!(crc as i64, g.get("q_crc32").unwrap().as_i64().unwrap());
+}
+
+#[test]
+fn golden_planes_and_dequant_match_python() {
+    if !prognet::artifacts_available() {
+        return;
+    }
+    let gd = prognet::artifacts_root().join("golden");
+    let g = Json::load(&gd.join("codec.json")).unwrap();
+    let weights = prognet::util::bytes::read_f32_file(&gd.join("weights.bin")).unwrap();
+    let widths: Vec<u32> = g
+        .get("widths")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| w.as_i64().unwrap() as u32)
+        .collect();
+    let sched = Schedule::new(widths, K).unwrap();
+    let qp = QuantParams::from_data(&weights, K);
+    let q = quantize::quantize(&weights, &qp);
+    let planes = bitplane::encode_planes(&q, &sched);
+
+    let stages = g.get("stages").unwrap().as_arr().unwrap();
+    let mut acc = Accumulator::new(q.len(), sched.clone());
+    let mut out = vec![0f32; q.len()];
+    for (i, st) in stages.iter().enumerate() {
+        // plane bytes match python's pack_plane_np bit-exactly (CRC)
+        let expect_crc = st.get("plane_crc32").unwrap().as_i64().unwrap();
+        let expect_len = st.get("plane_len").unwrap().as_usize().unwrap();
+        assert_eq!(planes[i].len(), expect_len, "stage {i} length");
+        assert_eq!(
+            crc32fast::hash(&planes[i]) as i64,
+            expect_crc,
+            "stage {i} plane CRC"
+        );
+        // golden file plane bytes themselves
+        let file_plane = std::fs::read(gd.join(format!("plane{i}.bin"))).unwrap();
+        assert_eq!(planes[i], file_plane);
+
+        // dequantized heads match python's float64-ref within f32 noise
+        acc.absorb(&planes[i]).unwrap();
+        let cum = st.get("cum_bits").unwrap().as_i64().unwrap() as u32;
+        dequantize_into(acc.codes(), DequantParams::new(&qp, cum), &mut out);
+        for (j, dv) in st
+            .get("deq_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .enumerate()
+        {
+            let expect = dv.as_f64().unwrap() as f32;
+            assert!(
+                (out[j] - expect).abs() <= 1e-6_f32.max(expect.abs() * 1e-5),
+                "stage {i} deq[{j}]: {} vs {expect}",
+                out[j]
+            );
+        }
+    }
+}
+
+fn crc32_of_u32(q: &[u32]) -> u32 {
+    let mut bytes = Vec::with_capacity(q.len() * 4);
+    for v in q {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    crc32fast::hash(&bytes)
+}

@@ -1,0 +1,200 @@
+//! Coordinator invariants, property-tested: conservation (every request
+//! answered exactly once), batch bounds, hot-swap freshness, scheduler
+//! policy laws.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use prognet::coordinator::{
+    Batcher, BatcherConfig, Router, SchedulerDecision, StageScheduler, WeightStore,
+};
+use prognet::models::Registry;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::testutil::prop::check;
+
+fn setup() -> Option<(Arc<ModelSession>, WeightStore, usize)> {
+    if !prognet::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("mlp").unwrap();
+    let session = Arc::new(ModelSession::load_batches(&engine, m, &[1, 32]).unwrap());
+    let ws = WeightStore::empty(m.param_count);
+    ws.publish(&m.load_weights().unwrap(), 16);
+    Some((session, ws, m.input_numel()))
+}
+
+#[test]
+fn conservation_under_concurrent_load() {
+    let Some((session, ws, numel)) = setup() else { return };
+    let batcher = Arc::new(Batcher::start(
+        session,
+        ws,
+        BatcherConfig {
+            max_batch: 16,
+            max_delay: Duration::from_millis(3),
+            queue_cap: 512,
+        },
+    ));
+    // 4 producer threads x 25 requests, all must be answered exactly once
+    let handles: Vec<_> = (0..4)
+        .map(|p| {
+            let b = batcher.clone();
+            std::thread::spawn(move || {
+                let mut got = 0;
+                for i in 0..25 {
+                    let img = vec![((p * 25 + i) % 9) as f32 * 0.1; numel];
+                    let reply = b.infer_blocking(img).unwrap();
+                    assert!(reply.output.is_ok());
+                    got += 1;
+                }
+                got
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 100);
+    assert_eq!(batcher.latency_stats().count(), 100);
+}
+
+#[test]
+fn hot_swap_visible_to_next_batch() {
+    let Some((session, ws, numel)) = setup() else { return };
+    let batcher = Batcher::start(session, ws.clone(), BatcherConfig::default());
+    let r1 = batcher.infer_blocking(vec![0.1; numel]).unwrap();
+    assert_eq!(r1.cum_bits, 16);
+    // publish a "stage 4" refinement; next request must see cum_bits=8
+    let snap = ws.snapshot();
+    ws.publish(&snap.flat, 8);
+    let r2 = batcher.infer_blocking(vec![0.1; numel]).unwrap();
+    assert_eq!(r2.cum_bits, 8);
+}
+
+#[test]
+fn router_serves_while_weights_refine() {
+    let Some(_) = setup() else { return };
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("mlp").unwrap().clone();
+    let numel = m.input_numel();
+    let router = Arc::new(Router::new(engine, reg, BatcherConfig::default()));
+    let flat = m.load_weights().unwrap();
+    router.publish_weights("mlp", &flat, 2).unwrap();
+
+    let publisher = {
+        let router = router.clone();
+        let flat = flat.clone();
+        std::thread::spawn(move || {
+            for bits in [4u32, 6, 8, 10, 12, 14, 16] {
+                std::thread::sleep(Duration::from_millis(5));
+                router.publish_weights("mlp", &flat, bits).unwrap();
+            }
+        })
+    };
+    let mut seen_bits = Vec::new();
+    for _ in 0..40 {
+        let r = router.infer("mlp", vec![0.2; numel]).unwrap();
+        assert!(r.output.is_ok());
+        seen_bits.push(r.cum_bits);
+    }
+    publisher.join().unwrap();
+    // bits observed must be monotone non-decreasing (refinement only)
+    for w in seen_bits.windows(2) {
+        assert!(w[1] >= w[0], "bits went backwards: {seen_bits:?}");
+    }
+    // and the final published state must eventually be observed
+    let last = router.infer("mlp", vec![0.2; numel]).unwrap();
+    assert_eq!(last.cum_bits, 16);
+}
+
+#[test]
+fn prop_scheduler_never_skips_final_stage() {
+    check(
+        "scheduler always infers the final stage",
+        200,
+        |g| {
+            let stages = g.usize(2, 16);
+            let infer_cost = g.f64(0.001, 10.0);
+            let gap = g.f64(0.001, 10.0);
+            (stages, infer_cost, gap)
+        },
+        |(stages, infer_cost, gap)| {
+            let mut s = StageScheduler::new(stages);
+            s.observe_infer_cost(infer_cost);
+            let mut t = 0.0;
+            let mut last = SchedulerDecision::Skip;
+            for i in 0..stages {
+                t += gap;
+                last = s.on_stage_complete(i, t);
+                s.observe_infer_cost(infer_cost);
+            }
+            if last == SchedulerDecision::Infer {
+                Ok(())
+            } else {
+                Err("final stage skipped".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_monotone_in_cost() {
+    // If inference is cheaper, the scheduler must not infer fewer stages.
+    check(
+        "cheaper inference → at least as many Infer decisions",
+        100,
+        |g| {
+            let gap = g.f64(0.05, 2.0);
+            let cheap = g.f64(0.001, 1.0);
+            let factor = g.f64(1.0, 20.0);
+            (gap, cheap, cheap * factor)
+        },
+        |(gap, cheap, expensive)| {
+            let run = |cost: f64| {
+                let mut s = StageScheduler::new(8);
+                s.observe_infer_cost(cost);
+                let mut n = 0;
+                let mut t = 0.0;
+                for i in 0..8 {
+                    t += gap;
+                    if s.on_stage_complete(i, t) == SchedulerDecision::Infer {
+                        n += 1;
+                    }
+                    s.observe_infer_cost(cost);
+                }
+                n
+            };
+            let a = run(cheap);
+            let b = run(expensive);
+            if a >= b {
+                Ok(())
+            } else {
+                Err(format!("cheap {a} < expensive {b}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_weight_store_versions_strictly_increase() {
+    check(
+        "weight store versions strictly increase under publishes",
+        50,
+        |g| g.usize(1, 30),
+        |n| {
+            let ws = WeightStore::empty(16);
+            let mut last = ws.snapshot().version;
+            for i in 0..n {
+                ws.publish(&vec![i as f32; 16], ((i % 16) + 1) as u32);
+                let v = ws.snapshot().version;
+                if v != last + 1 {
+                    return Err(format!("version jumped {last} -> {v}"));
+                }
+                last = v;
+            }
+            Ok(())
+        },
+    );
+}

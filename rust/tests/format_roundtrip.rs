@@ -1,0 +1,171 @@
+//! `.pnet` container integration tests: encode → bytes → stream-parse →
+//! reassemble → dequantize must reproduce the source weights within the
+//! quantization bound, for every model in the registry and for randomized
+//! synthetic models (property test).
+
+use prognet::client::Assembler;
+use prognet::format::header::manifest_from_weights;
+use prognet::format::{FrameParser, ParserEvent, PnetReader, PnetWriter};
+use prognet::quant::Schedule;
+use prognet::testutil::prop::{check, Gen};
+
+fn encode_decode_check(
+    tensors: &[(String, Vec<usize>)],
+    flat: &[f32],
+    sched: Schedule,
+    chunk: usize,
+) -> Result<(), String> {
+    let m = manifest_from_weights("m", "classify", tensors, flat, sched)
+        .map_err(|e| e.to_string())?;
+    let writer = PnetWriter::encode(m.clone(), flat).map_err(|e| e.to_string())?;
+    let bytes = writer.to_bytes();
+
+    // stream through the incremental parser in `chunk`-sized pieces
+    let mut parser = FrameParser::new();
+    let mut asm: Option<Assembler> = None;
+    for piece in bytes.chunks(chunk.max(1)) {
+        for ev in parser.feed(piece).map_err(|e| e.to_string())? {
+            match ev {
+                ParserEvent::Manifest(pm) => asm = Some(Assembler::new(*pm)),
+                ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } => {
+                    asm.as_mut()
+                        .unwrap()
+                        .absorb(stage, tensor, &payload)
+                        .map_err(|e| e.to_string())?;
+                }
+            }
+        }
+    }
+    let asm = asm.ok_or("no manifest parsed")?;
+    if !asm.is_complete() {
+        return Err("stream incomplete".into());
+    }
+    let mut asm = asm;
+    let rec = asm.reconstruct().map_err(|e| e.to_string())?.to_vec();
+    // max error ≤ one step of the largest-range tensor
+    for t in &m.tensors {
+        let range = (t.max - t.min) as f64;
+        // half a quantization step + f32 rounding slack (dequant is f32)
+        let bound = (range / 65536.0 / 2.0 + range * 1.5e-6 + 1e-6) as f32;
+        for i in t.offset..t.offset + t.numel {
+            let err = (rec[i] - flat[i]).abs();
+            if err > bound {
+                return Err(format!("tensor {} elem {i}: err {err} > {bound}", t.name));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_container_roundtrip_random_models() {
+    check(
+        "container round-trips randomized models at odd chunk sizes",
+        40,
+        |g: &mut Gen| {
+            let n_tensors = g.usize(1, 5);
+            let mut tensors = Vec::new();
+            let mut flat = Vec::new();
+            for i in 0..n_tensors {
+                let rows = g.usize(1, 40);
+                let cols = g.usize(1, 40);
+                tensors.push((format!("t{i}"), vec![rows, cols]));
+                for _ in 0..rows * cols {
+                    flat.push(g.f32(-2.0, 2.0));
+                }
+            }
+            let scheds: Vec<Vec<u32>> = vec![vec![2; 8], vec![4; 4], vec![16], vec![1, 1, 2, 4, 8]];
+            let sched = Schedule::new(g.pick(&scheds).clone(), 16).unwrap();
+            let chunk = g.usize(1, 4096);
+            (tensors, flat, sched, chunk)
+        },
+        |(tensors, flat, sched, chunk)| encode_decode_check(&tensors, &flat, sched, chunk),
+    );
+}
+
+#[test]
+fn real_models_roundtrip_through_container() {
+    if !prognet::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let reg = prognet::models::Registry::open_default().unwrap();
+    for m in reg.iter() {
+        let flat = m.load_weights().unwrap();
+        let pm = m
+            .pnet_manifest(&flat, Schedule::paper_default())
+            .unwrap();
+        let writer = PnetWriter::encode(pm, &flat).unwrap();
+        let bytes = writer.to_bytes();
+        let reader = PnetReader::from_bytes(&bytes).unwrap();
+        assert_eq!(reader.manifest.param_count(), m.param_count);
+
+        let mut asm = Assembler::new(reader.manifest.clone());
+        for s in 0..reader.manifest.schedule.stages() {
+            for t in 0..reader.manifest.tensors.len() {
+                asm.absorb(s, t, &reader.fragments[s][t]).unwrap();
+            }
+        }
+        let rec = asm.reconstruct().unwrap();
+        let max_range = reader
+            .manifest
+            .tensors
+            .iter()
+            .map(|t| t.max - t.min)
+            .fold(0f32, f32::max);
+        let worst = rec
+            .iter()
+            .zip(&flat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            worst <= max_range / 65536.0 + 1e-6,
+            "{}: worst err {worst}",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn container_file_io() {
+    if !prognet::artifacts_available() {
+        return;
+    }
+    let reg = prognet::models::Registry::open_default().unwrap();
+    let m = reg.get("mlp").unwrap();
+    let flat = m.load_weights().unwrap();
+    let pm = m.pnet_manifest(&flat, Schedule::paper_default()).unwrap();
+    let writer = PnetWriter::encode(pm, &flat).unwrap();
+    let path = std::env::temp_dir().join(format!("prognet-test-{}.pnet", std::process::id()));
+    let n = writer.write_file(&path).unwrap();
+    assert_eq!(n as usize, std::fs::metadata(&path).unwrap().len() as usize);
+    let reader = PnetReader::from_file(&path).unwrap();
+    assert_eq!(reader.manifest.model, "mlp");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn size_overhead_below_point1_percent_for_real_models() {
+    // Paper claim: progressive transmission does not increase model size.
+    if !prognet::artifacts_available() {
+        return;
+    }
+    let reg = prognet::models::Registry::open_default().unwrap();
+    for m in reg.iter() {
+        let flat = m.load_weights().unwrap();
+        let pm = m.pnet_manifest(&flat, Schedule::paper_default()).unwrap();
+        let singleton_payload = m.param_count * 2; // 16 bits/param
+        let wire = pm.wire_bytes();
+        let overhead = wire as f64 / singleton_payload as f64 - 1.0;
+        assert!(
+            overhead < 0.01,
+            "{}: wire {wire} vs payload {singleton_payload} (+{:.3}%)",
+            m.name,
+            overhead * 100.0
+        );
+    }
+}

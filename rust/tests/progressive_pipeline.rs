@@ -1,0 +1,210 @@
+//! End-to-end progressive pipeline over real sockets + real inference:
+//! the full Fig 1 flow, including failure injection.
+
+use std::sync::Arc;
+
+use prognet::client::{InferencePolicy, ProgressiveClient, ProgressiveOptions};
+use prognet::eval::{accuracy, EvalSet};
+use prognet::models::Registry;
+use prognet::quant::Schedule;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::ServerConfig;
+use prognet::server::{FetchRequest, Repository, Server};
+
+struct Ctx {
+    server: Server,
+    session: ModelSession,
+    eval: EvalSet,
+    classes: usize,
+}
+
+fn ctx(model: &str) -> Option<Ctx> {
+    if !prognet::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let repo = Arc::new(Repository::open_default().unwrap());
+    let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get(model).unwrap();
+    let session = ModelSession::load_batches(&engine, m, &[32]).unwrap();
+    let eval = EvalSet::load_named(&m.dataset).unwrap();
+    Some(Ctx {
+        server,
+        session,
+        eval,
+        classes: m.classes,
+    })
+}
+
+#[test]
+fn accuracy_curve_through_real_pipeline() {
+    // The paper's qualitative Fig 5 claim, measured: accuracy of the
+    // intermediate models rises with stages and the last stage matches
+    // the fully-downloaded model.
+    let Some(c) = ctx("cnn") else { return };
+    let n = 32;
+    let images = c.eval.image_batch(n).to_vec();
+    let client = ProgressiveClient::new(c.server.addr());
+    let out = client
+        .fetch_and_infer(
+            &ProgressiveOptions::concurrent("cnn"),
+            &c.session,
+            &images,
+            n,
+        )
+        .unwrap();
+    assert_eq!(out.results.len(), 8);
+    let accs: Vec<f64> = out
+        .results
+        .iter()
+        .map(|r| accuracy::top1(&r.output, &c.eval.labels[..n], c.classes))
+        .collect();
+    // early stages near-random, final near the trained accuracy
+    assert!(accs[7] > 0.85, "final stage acc {:?}", accs);
+    assert!(
+        accs[7] >= accs[0],
+        "accuracy must not degrade: {accs:?}"
+    );
+    // at least one intermediate stage already useful (paper: 6-8 bits)
+    assert!(
+        accs[2] > 0.3 || accs[3] > 0.5,
+        "mid stages useless: {accs:?}"
+    );
+}
+
+#[test]
+fn serial_and_concurrent_agree_on_outputs() {
+    let Some(c) = ctx("mlp") else { return };
+    let n = 4;
+    let images = c.eval.image_batch(n).to_vec();
+    let client = ProgressiveClient::new(c.server.addr());
+    let a = client
+        .fetch_and_infer(
+            &ProgressiveOptions::concurrent("mlp"),
+            &c.session,
+            &images,
+            n,
+        )
+        .unwrap();
+    let b = client
+        .fetch_and_infer(&ProgressiveOptions::serial("mlp"), &c.session, &images, n)
+        .unwrap();
+    assert_eq!(a.results.len(), b.results.len());
+    for (ra, rb) in a.results.iter().zip(&b.results) {
+        assert_eq!(ra.cum_bits, rb.cum_bits);
+        for (x, y) in ra.output.data.iter().zip(&rb.output.data) {
+            assert!((x - y).abs() < 1e-5, "stage {}: {x} vs {y}", ra.stage);
+        }
+    }
+}
+
+#[test]
+fn latest_only_policy_skips_under_slow_inference() {
+    // With a shaped link fast enough that stages arrive faster than
+    // (reconstruct + infer on 32 images), LatestOnly must produce fewer
+    // results than EveryStage but still end at 16 bits.
+    let Some(c) = ctx("cnn") else { return };
+    let n = 32;
+    let images = c.eval.image_batch(n).to_vec();
+    let client = ProgressiveClient::new(c.server.addr());
+    let mut opts = ProgressiveOptions::concurrent("cnn");
+    opts.policy = InferencePolicy::LatestOnly;
+    let out = client
+        .fetch_and_infer(&opts, &c.session, &images, n)
+        .unwrap();
+    assert!(!out.results.is_empty());
+    assert_eq!(out.results.last().unwrap().cum_bits, 16);
+    // results remain strictly increasing in bits
+    for w in out.results.windows(2) {
+        assert!(w[1].cum_bits > w[0].cum_bits);
+    }
+}
+
+#[test]
+fn shaped_link_first_output_before_transfer_completes() {
+    // The UX claim: with a slow link, the first approximate result is
+    // available long before the download finishes.
+    let Some(c) = ctx("mlp") else { return };
+    let n = 1;
+    let images = c.eval.image_batch(n).to_vec();
+    let client = ProgressiveClient::new(c.server.addr());
+    let mut opts = ProgressiveOptions::concurrent("mlp");
+    opts.request = FetchRequest::new("mlp").with_speed(2.0); // ~0.8 s transfer
+    let out = client
+        .fetch_and_infer(&opts, &c.session, &images, n)
+        .unwrap();
+    let first = out.results.first().unwrap();
+    assert!(
+        first.t_output_ready < out.t_transfer_complete * 0.55,
+        "first output at {:.3}s vs transfer complete {:.3}s",
+        first.t_output_ready,
+        out.t_transfer_complete
+    );
+    // and total time ≈ transfer time (the paper's +0% concurrent column)
+    assert!(
+        out.t_total <= out.t_transfer_complete * 1.35,
+        "total {:.3}s vs transfer {:.3}s",
+        out.t_total,
+        out.t_transfer_complete
+    );
+}
+
+#[test]
+fn corrupted_stream_fails_cleanly() {
+    // A proxy that flips a byte mid-stream: the client must error (CRC),
+    // not silently produce wrong weights.
+    use std::io::{Read, Write};
+    let Some(c) = ctx("mlp") else { return };
+    let upstream = c.server.addr();
+
+    // tiny corrupting proxy
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let proxy_addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let (mut client_sock, _) = listener.accept().unwrap();
+        let mut up = std::net::TcpStream::connect(upstream).unwrap();
+        // forward the request
+        let mut req = vec![0u8; 4];
+        client_sock.read_exact(&mut req).unwrap();
+        let n = u32::from_le_bytes(req.clone().try_into().unwrap()) as usize;
+        let mut body = vec![0u8; n];
+        client_sock.read_exact(&mut body).unwrap();
+        up.write_all(&req).unwrap();
+        up.write_all(&body).unwrap();
+        // stream the response, flipping one byte deep in the stream
+        let mut total = 0usize;
+        let mut buf = [0u8; 4096];
+        loop {
+            let n = match up.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => n,
+            };
+            if total < 200_000 && total + n > 200_000 {
+                buf[200_000 - total] ^= 0xFF;
+            }
+            total += n;
+            if client_sock.write_all(&buf[..n]).is_err() {
+                break;
+            }
+        }
+    });
+
+    let n = 1;
+    let images = c.eval.image_batch(n).to_vec();
+    let client = ProgressiveClient::new(proxy_addr);
+    let err = client
+        .fetch_and_infer(
+            &ProgressiveOptions::concurrent("mlp"),
+            &c.session,
+            &images,
+            n,
+        )
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("CRC") || msg.contains("crc") || msg.contains("closed"),
+        "unexpected error: {msg}"
+    );
+}

@@ -1,0 +1,178 @@
+//! Runtime integration: the compiled HLO executables must agree with the
+//! trained models' recorded accuracy and with each other (fwd vs the
+//! Pallas-fused qfwd).
+
+use prognet::eval::{accuracy, detection, EvalSet};
+use prognet::models::Registry;
+use prognet::quant::{quantize, QuantParams, K};
+use prognet::runtime::{Engine, ModelSession};
+
+fn ready() -> bool {
+    if !prognet::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn classifier_accuracy_matches_manifest() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let eval = EvalSet::load_named("shapes10").unwrap();
+    for name in ["cnn"] {
+        let m = reg.get(name).unwrap();
+        let session = ModelSession::load_batches(&engine, m, &[32]).unwrap();
+        let flat = m.load_weights().unwrap();
+        let n = 128;
+        let out = session.infer(eval.image_batch(n), n, &flat).unwrap();
+        let acc = accuracy::top1(&out, &eval.labels[..n], m.classes);
+        // python-side eval reported ~0.99 on its 512-sample split
+        assert!(acc > 0.9, "{name}: top1 {acc}");
+    }
+}
+
+#[test]
+fn detector_produces_sane_boxes() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("detector").unwrap();
+    let eval = EvalSet::load_named("boxfind").unwrap();
+    let session = ModelSession::load_batches(&engine, m, &[32]).unwrap();
+    let flat = m.load_weights().unwrap();
+    let n = 64;
+    let out = session.infer(eval.image_batch(n), n, &flat).unwrap();
+    let ap = detection::box_ap(&out, &eval.labels[..n], &eval.boxes[..n * 4], m.classes);
+    let miou = detection::mean_iou(&out, &eval.boxes[..n * 4], m.classes);
+    assert!(miou > 0.6, "mean IoU {miou}");
+    assert!(ap > 0.4, "boxAP {ap}");
+    // boxes must be in [0, 1] (sigmoid head)
+    for i in 0..n {
+        for v in &out.row(i)[m.classes..m.classes + 4] {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+}
+
+#[test]
+fn qfwd_pallas_dequant_matches_rust_dequant_path() {
+    // The fused executable (L1 Pallas dequant inside the HLO) and the
+    // rust-dequant + fwd path must agree on real quantized weights.
+    if !ready() {
+        return;
+    }
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("cnn").unwrap();
+    let session = ModelSession::load(&engine, m).unwrap();
+    assert!(session.has_qfwd());
+    let flat = m.load_weights().unwrap();
+    let eval = EvalSet::load_named("shapes10").unwrap();
+    let n = 8;
+
+    // quantize per tensor; build qflat + rust-dequantized weights
+    let mut qflat = vec![0u32; flat.len()];
+    let mut deq = vec![0f32; flat.len()];
+    for t in &m.tensors {
+        let seg = &flat[t.offset..t.offset + t.numel];
+        let qp = QuantParams::from_data(seg, K);
+        let q = quantize::quantize(seg, &qp);
+        qflat[t.offset..t.offset + t.numel].copy_from_slice(&q);
+        prognet::quant::dequantize_into(
+            &q,
+            prognet::quant::DequantParams::new(&qp, K),
+            &mut deq[t.offset..t.offset + t.numel],
+        );
+    }
+
+    let a = session.infer(eval.image_batch(n), n, &deq).unwrap();
+    let b = session
+        .infer_quantized(eval.image_batch(n), n, &qflat, K)
+        .unwrap();
+    assert_eq!(a.n(), b.n());
+    for i in 0..n {
+        for (x, y) in a.row(i).iter().zip(b.row(i)) {
+            assert!(
+                (x - y).abs() < 2e-3,
+                "row {i}: fwd {x} vs qfwd {y}"
+            );
+        }
+    }
+    // and the predictions agree exactly
+    for i in 0..n {
+        assert_eq!(a.argmax_class(i, m.classes), b.argmax_class(i, m.classes));
+    }
+}
+
+#[test]
+fn partial_bits_inference_through_qfwd() {
+    // qfwd with truncated codes + matching half-correction must behave
+    // like the progressive client at that stage.
+    if !ready() {
+        return;
+    }
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("cnn").unwrap();
+    let session = ModelSession::load(&engine, m).unwrap();
+    let flat = m.load_weights().unwrap();
+    let eval = EvalSet::load_named("shapes10").unwrap();
+    let n = 32;
+
+    for cum_bits in [8u32, 16] {
+        let mut qflat = vec![0u32; flat.len()];
+        let mut deq = vec![0f32; flat.len()];
+        for t in &m.tensors {
+            let seg = &flat[t.offset..t.offset + t.numel];
+            let qp = QuantParams::from_data(seg, K);
+            let mut q = quantize::quantize(seg, &qp);
+            if cum_bits < K {
+                let mask = !((1u32 << (K - cum_bits)) - 1);
+                for v in q.iter_mut() {
+                    *v &= mask;
+                }
+            }
+            qflat[t.offset..t.offset + t.numel].copy_from_slice(&q);
+            prognet::quant::dequantize_into(
+                &q,
+                prognet::quant::DequantParams::new(&qp, cum_bits),
+                &mut deq[t.offset..t.offset + t.numel],
+            );
+        }
+        let a = session.infer(eval.image_batch(n), n, &deq).unwrap();
+        let b = session
+            .infer_quantized(eval.image_batch(n), n, &qflat, cum_bits)
+            .unwrap();
+        let acc_a = accuracy::top1(&a, &eval.labels[..n], m.classes);
+        let acc_b = accuracy::top1(&b, &eval.labels[..n], m.classes);
+        assert!(
+            (acc_a - acc_b).abs() < 0.1,
+            "bits {cum_bits}: fwd acc {acc_a} vs qfwd acc {acc_b}"
+        );
+        if cum_bits == 16 {
+            assert!(acc_b > 0.85, "16-bit qfwd accuracy {acc_b}");
+        }
+    }
+}
+
+#[test]
+fn executable_cache_shared_across_sessions() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::global().unwrap();
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("mlp").unwrap();
+    let before = engine.cached();
+    let _s1 = ModelSession::load_batches(&engine, m, &[1]).unwrap();
+    let mid = engine.cached();
+    let _s2 = ModelSession::load_batches(&engine, m, &[1]).unwrap();
+    assert_eq!(engine.cached(), mid);
+    assert!(mid >= before);
+}
