@@ -53,6 +53,11 @@ impl Assembler {
             bail!("stage {stage} out of range");
         }
         let acc = &mut self.accs[tensor];
+        if stage < acc.stages_received() {
+            // duplicate fragment — a stage-boundary resume re-delivers the
+            // partially received stage; the codes are already absorbed
+            return Ok(None);
+        }
         if acc.stages_received() != stage {
             bail!(
                 "tensor {tensor}: expected stage {}, got {stage}",
@@ -198,6 +203,27 @@ mod tests {
         let (w, _) = setup(3);
         let mut asm = Assembler::new(w.manifest().clone());
         assert!(asm.absorb(1, 0, w.fragment(1, 0)).is_err());
+    }
+
+    #[test]
+    fn duplicate_fragment_skipped_not_double_counted() {
+        let (w, _) = setup(6);
+        let mut asm = Assembler::new(w.manifest().clone());
+        for t in 0..3 {
+            asm.absorb(0, t, w.fragment(0, t)).unwrap();
+        }
+        let codes_before = asm.codes_flat();
+        // a stage-boundary resume re-delivers stage 0: must be a no-op
+        for t in 0..3 {
+            assert_eq!(asm.absorb(0, t, w.fragment(0, t)).unwrap(), None);
+        }
+        assert_eq!(asm.stages_complete(), 1);
+        assert_eq!(asm.codes_flat(), codes_before);
+        // and the next stage still completes normally
+        for t in 0..3 {
+            asm.absorb(1, t, w.fragment(1, t)).unwrap();
+        }
+        assert_eq!(asm.stages_complete(), 2);
     }
 
     #[test]

@@ -84,23 +84,23 @@ impl ModelCache {
             Vec::new()
         };
 
-        let mut attempt_req = req.clone().with_offset(existing.len() as u64);
-        let (mut stream, total) = match open_fetch(addr, &attempt_req) {
+        let attempt_req = req.clone().with_offset(existing.len() as u64);
+        let (mut stream, mut resp) = match open_fetch(addr, &attempt_req) {
             Ok(ok) => ok,
             Err(_) if !existing.is_empty() => {
                 // stale partial (e.g. server re-encoded); restart clean
                 existing.clear();
-                attempt_req = req.clone();
-                open_fetch(addr, &attempt_req)?
+                open_fetch(addr, req)?
             }
             Err(e) => return Err(e),
         };
-        if (existing.len() as u64) > total {
+        if (existing.len() as u64) > resp.total {
             // partial longer than the container: stale — restart
             existing.clear();
             drop(stream);
-            let (s2, _) = open_fetch(addr, req)?;
+            let (s2, r2) = open_fetch(addr, req)?;
             stream = s2;
+            resp = r2;
         }
         let resumed_from = existing.len() as u64;
         let mut fetched = 0u64;
@@ -117,10 +117,13 @@ impl ModelCache {
                 self.write_part(&part_path, &existing)?;
             }
         }
+        // the server advertises exactly how many bytes follow a resume
         anyhow::ensure!(
-            existing.len() as u64 == total,
-            "download incomplete: {} of {total}",
-            existing.len()
+            fetched == resp.remaining && existing.len() as u64 == resp.total,
+            "download incomplete: got {fetched} of {} advertised ({} / {} total)",
+            resp.remaining,
+            existing.len(),
+            resp.total
         );
         // validate + promote to final
         PnetReader::from_bytes(&existing).context("downloaded container invalid")?;

@@ -1,5 +1,7 @@
 //! Socket download loop: reads chunks, feeds the incremental `.pnet`
-//! parser, forwards events. Records byte/stage arrival times.
+//! parser, forwards events. Records byte/stage arrival times, and can
+//! resume an interrupted fetch at the last complete stage boundary
+//! (re-requesting only `stages: boundary..end` — no byte-offset guessing).
 
 use std::io::Read;
 use std::net::TcpStream;
@@ -22,45 +24,59 @@ pub struct TimedEvent {
     pub event: ParserEvent,
 }
 
-/// Streaming downloader bound to one fetch.
+/// Streaming downloader bound to one fetch (possibly spanning several
+/// connections after stage-boundary resumes).
 pub struct Downloader {
     stream: TcpStream,
     parser: FrameParser,
     start: Instant,
+    /// bytes of the selected body (the first status frame's `total`)
     pub total_size: u64,
+    addr: std::net::SocketAddr,
+    req: FetchRequest,
+    /// body bytes accounted to earlier connections of a resumed fetch
+    base_consumed: u64,
+    /// re-apply the small SO_RCVBUF to sockets opened by a resume
+    small_recv_buffer: bool,
     buf: Vec<u8>,
 }
 
 impl Downloader {
-    /// Connect and issue the fetch request.
+    /// Connect and issue the fetch request. `req.stages` may select a
+    /// prefix `0..end`; ranges starting later need [`Downloader::resume_at_stage`].
     pub fn connect(addr: &std::net::SocketAddr, req: &FetchRequest) -> Result<Self> {
-        let (stream, total_size) = open_fetch(addr, req)?;
+        anyhow::ensure!(
+            req.offset == 0,
+            "Downloader parses from the container start; resume with stage ranges, not offsets"
+        );
+        let parser = match req.stages {
+            None => FrameParser::new(),
+            Some((0, b)) => FrameParser::for_stage_prefix(b as usize),
+            Some((a, _)) => anyhow::bail!(
+                "initial fetch cannot start at stage {a}; use resume_at_stage"
+            ),
+        };
+        let (stream, resp) = open_fetch(addr, req)?;
         Ok(Self {
             stream,
-            parser: FrameParser::new(),
+            parser,
             start: Instant::now(),
-            total_size,
+            total_size: resp.total,
+            addr: *addr,
+            req: req.clone(),
+            base_consumed: 0,
+            small_recv_buffer: false,
             buf: vec![0u8; CHUNK],
         })
     }
 
     /// Set a small kernel receive buffer so that *not reading* (serial
     /// mode) actually back-pressures the sender, as a busy browser tab
-    /// would stall a slow HTTP stream.
-    pub fn set_small_recv_buffer(&self) -> Result<()> {
-        use std::os::fd::AsRawFd;
-        let fd = self.stream.as_raw_fd();
-        let size: libc::c_int = 16 * 1024;
-        let rc = unsafe {
-            libc::setsockopt(
-                fd,
-                libc::SOL_SOCKET,
-                libc::SO_RCVBUF,
-                &size as *const _ as *const libc::c_void,
-                std::mem::size_of::<libc::c_int>() as libc::socklen_t,
-            )
-        };
-        anyhow::ensure!(rc == 0, "setsockopt(SO_RCVBUF) failed");
+    /// would stall a slow HTTP stream. Sticky: sockets opened by a later
+    /// [`Downloader::resume_at_stage`] get the same treatment.
+    pub fn set_small_recv_buffer(&mut self) -> Result<()> {
+        shrink_recv_buffer(&self.stream)?;
+        self.small_recv_buffer = true;
         Ok(())
     }
 
@@ -73,12 +89,74 @@ impl Downloader {
         self.start
     }
 
+    /// Body bytes received across all connections of this fetch.
     pub fn bytes_received(&self) -> u64 {
-        self.parser.bytes_consumed()
+        self.base_consumed + self.parser.bytes_consumed()
+    }
+
+    /// Fraction of the selected body received, using the server's
+    /// advertised sizes (correct under offset and stage-range resumes).
+    pub fn progress(&self) -> f64 {
+        if self.total_size == 0 {
+            1.0
+        } else {
+            (self.bytes_received() as f64 / self.total_size as f64).min(1.0)
+        }
     }
 
     pub fn is_done(&self) -> bool {
         self.parser.is_done()
+    }
+
+    /// True once the manifest arrived — the precondition for resuming at
+    /// a stage boundary.
+    pub fn can_resume(&self) -> bool {
+        self.parser.manifest().is_some()
+    }
+
+    /// Last fully parsed stage boundary (absolute stage count).
+    pub fn stage_boundary(&self) -> usize {
+        self.parser.stage_boundary()
+    }
+
+    /// Reconnect and continue the fetch from `stage` (a completed stage
+    /// boundary, usually [`Downloader::stage_boundary`]). The new request
+    /// asks for `stages: stage..end`, so the server skips everything
+    /// already delivered; fragments of a partially received stage are
+    /// re-sent and deduplicated by the assembler.
+    pub fn resume_at_stage(&mut self, stage: usize) -> Result<()> {
+        let manifest = self
+            .parser
+            .manifest()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("cannot resume before the manifest arrived"))?;
+        let end = match self.req.stages {
+            Some((_, b)) => b as usize,
+            None => manifest.schedule.stages(),
+        };
+        anyhow::ensure!(stage < end, "resume stage {stage} not before window end {end}");
+        // stage ranges are self-describing: never combine with a byte offset
+        let req = self
+            .req
+            .clone()
+            .with_offset(0)
+            .with_stages(stage as u32, end as u32);
+        let (stream, resp) = open_fetch(&self.addr, &req)?;
+        if self.small_recv_buffer {
+            let _ = shrink_recv_buffer(&stream);
+        }
+        self.parser = if stage == 0 {
+            // the manifest never fully arrived or stage 0 is incomplete:
+            // the range re-includes the preamble
+            FrameParser::for_stage_prefix(end)
+        } else {
+            FrameParser::resume(manifest, stage, Some(end))?
+        };
+        // account the skipped prefix exactly: the server tells us how
+        // many bytes are left of the selected body
+        self.base_consumed = self.total_size.saturating_sub(resp.remaining);
+        self.stream = stream;
+        Ok(())
     }
 
     /// Blocking read of the next chunk; returns timestamped events.
@@ -92,7 +170,7 @@ impl Downloader {
             if n == 0 {
                 anyhow::bail!(
                     "connection closed early at {} / {} bytes",
-                    self.parser.bytes_consumed(),
+                    self.bytes_received(),
                     self.total_size
                 );
             }
@@ -118,48 +196,165 @@ impl Downloader {
     }
 }
 
+/// Shrink a socket's kernel receive buffer so an unread stream actually
+/// stalls the sender.
+fn shrink_recv_buffer(stream: &TcpStream) -> Result<()> {
+    use std::os::fd::AsRawFd;
+    let fd = stream.as_raw_fd();
+    let size: libc::c_int = 16 * 1024;
+    let rc = unsafe {
+        libc::setsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            libc::SO_RCVBUF,
+            &size as *const _ as *const libc::c_void,
+            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+        )
+    };
+    anyhow::ensure!(rc == 0, "setsockopt(SO_RCVBUF) failed");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::Assembler;
+    use crate::models::Registry;
     use crate::quant::Schedule;
-    use crate::server::{Repository, Server};
     use crate::server::service::ServerConfig;
+    use crate::server::{Repository, Server};
+    use crate::testutil::fixture::{fixture_root, write_index, write_model};
     use std::sync::Arc;
+
+    fn synthetic_server(tag: &str) -> (Server, Arc<Repository>) {
+        crate::testutil::fixture::synthetic_server(tag).unwrap()
+    }
+
+    /// Server with one 40 000-param model whose per-stage frame (~10 KB)
+    /// exceeds the 8 KB read chunk, so `stage_boundary()` can only ever
+    /// advance one stage per `next_events` call — no timing races.
+    fn big_model_server(tag: &str) -> (Server, Arc<Repository>) {
+        let root = fixture_root(tag);
+        let _ = std::fs::remove_dir_all(&root);
+        let models_dir = root.join("models");
+        std::fs::create_dir_all(&models_dir).unwrap();
+        write_model(&models_dir, "gamma", &[("w", &[200, 200][..])], 0xB16).unwrap();
+        write_index(&models_dir, &["gamma"]).unwrap();
+        let repo = Arc::new(Repository::new(Registry::open(&root).unwrap()));
+        let server = Server::start("127.0.0.1:0", repo.clone(), ServerConfig::default()).unwrap();
+        (server, repo)
+    }
 
     #[test]
     fn download_all_yields_all_fragments() {
-        if !crate::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let repo = Arc::new(Repository::open_default().unwrap());
-        let server = Server::start("127.0.0.1:0", repo.clone(), ServerConfig::default()).unwrap();
-        let mut dl = Downloader::connect(&server.addr(), &FetchRequest::new("mlp")).unwrap();
+        let (server, repo) = synthetic_server("dl-all");
+        let mut dl = Downloader::connect(&server.addr(), &FetchRequest::new("alpha")).unwrap();
         let events = dl.download_all().unwrap();
-        let m = repo.registry().get("mlp").unwrap();
+        let m = repo.registry().get("alpha").unwrap();
         let frags = events
             .iter()
             .filter(|e| matches!(e.event, ParserEvent::Fragment { .. }))
             .count();
-        assert_eq!(
-            frags,
-            Schedule::paper_default().stages() * m.tensors.len()
-        );
+        assert_eq!(frags, Schedule::paper_default().stages() * m.tensors.len());
         assert!(dl.is_done());
         assert_eq!(dl.bytes_received(), dl.total_size);
+        assert!((dl.progress() - 1.0).abs() < 1e-12);
+        assert_eq!(dl.stage_boundary(), 8);
     }
 
     #[test]
     fn events_are_time_ordered() {
-        if !crate::artifacts_available() {
-            return;
-        }
-        let repo = Arc::new(Repository::open_default().unwrap());
-        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
-        let mut dl = Downloader::connect(&server.addr(), &FetchRequest::new("mlp")).unwrap();
+        let (server, _repo) = synthetic_server("dl-ordered");
+        let mut dl = Downloader::connect(&server.addr(), &FetchRequest::new("alpha")).unwrap();
         let events = dl.download_all().unwrap();
         for w in events.windows(2) {
             assert!(w[0].t <= w[1].t);
         }
+    }
+
+    #[test]
+    fn stage_prefix_fetch_stops_at_window() {
+        let (server, repo) = synthetic_server("dl-prefix");
+        let req = FetchRequest::new("alpha").with_stages(0, 3);
+        let mut dl = Downloader::connect(&server.addr(), &req).unwrap();
+        let events = dl.download_all().unwrap();
+        assert!(dl.is_done());
+        assert_eq!(dl.stage_boundary(), 3);
+        let m = repo.registry().get("alpha").unwrap();
+        let frags = events
+            .iter()
+            .filter(|e| matches!(e.event, ParserEvent::Fragment { .. }))
+            .count();
+        assert_eq!(frags, 3 * m.tensors.len());
+    }
+
+    #[test]
+    fn mid_fetch_resume_reconstructs_identically() {
+        // Pull events until two stages complete, then abandon the
+        // connection and resume at the boundary; the assembled codes must
+        // match an uninterrupted fetch. Uses the big-model fixture so a
+        // single read can never complete more than one stage (the whole
+        // container of a small model fits in one chunk, which would race
+        // the loop below straight to stage 8).
+        let (server, _repo) = big_model_server("dl-resume");
+        let req = FetchRequest::new("gamma");
+
+        // uninterrupted reference
+        let mut dl_ref = Downloader::connect(&server.addr(), &req).unwrap();
+        let mut asm_ref: Option<Assembler> = None;
+        for te in dl_ref.download_all().unwrap() {
+            match te.event {
+                ParserEvent::Manifest(m) => asm_ref = Some(Assembler::new(*m)),
+                ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } => {
+                    asm_ref
+                        .as_mut()
+                        .unwrap()
+                        .absorb(stage, tensor, &payload)
+                        .unwrap();
+                }
+            }
+        }
+        let asm_ref = asm_ref.unwrap();
+
+        // interrupted + resumed fetch
+        let mut dl = Downloader::connect(&server.addr(), &req).unwrap();
+        let mut asm: Option<Assembler> = None;
+        while dl.stage_boundary() < 2 {
+            for te in dl.next_events().unwrap() {
+                match te.event {
+                    ParserEvent::Manifest(m) => asm = Some(Assembler::new(*m)),
+                    ParserEvent::Fragment {
+                        stage,
+                        tensor,
+                        payload,
+                    } => {
+                        asm.as_mut().unwrap().absorb(stage, tensor, &payload).unwrap();
+                    }
+                }
+            }
+        }
+        let boundary = dl.stage_boundary();
+        dl.resume_at_stage(boundary).unwrap();
+        while !dl.is_done() {
+            for te in dl.next_events().unwrap() {
+                if let ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } = te.event
+                {
+                    asm.as_mut().unwrap().absorb(stage, tensor, &payload).unwrap();
+                }
+            }
+        }
+        let asm = asm.unwrap();
+        assert!(asm.is_complete());
+        assert_eq!(asm.codes_flat(), asm_ref.codes_flat());
+        // progress accounting stays exact across the resume
+        assert_eq!(dl.bytes_received(), dl.total_size);
     }
 }

@@ -14,11 +14,13 @@
 pub mod assembler;
 pub mod cache;
 pub mod downloader;
+pub mod multiplex;
 pub mod progressive;
 
 pub use assembler::Assembler;
 pub use cache::{FetchOutcome, ModelCache};
 pub use downloader::Downloader;
+pub use multiplex::{MultiplexClient, MultiplexModel, MultiplexOutcome};
 pub use progressive::{
     ExecMode, InferencePolicy, ProgressiveClient, ProgressiveOptions, SessionOutcome, StageResult,
 };

@@ -1,0 +1,293 @@
+//! Pipelined multi-model delivery: ONE connection, many stage-range
+//! requests, interleaved across models by the coordinator's weighted-fair
+//! plan ([`crate::coordinator::scheduler::interleave_stages`]).
+//!
+//! Phase 1 fetches stage 0 of every model (yielding each manifest, hence
+//! each stage's exact wire size); phase 2 requests the remaining stages
+//! one at a time in plan order, keeping the connection alive between
+//! requests. The whole-body protocol structurally could not express this:
+//! it is what the stage-range extension buys.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use super::assembler::Assembler;
+use crate::coordinator::scheduler::{interleave_stages, InterleaveModel};
+use crate::format::{FrameParser, ParserEvent};
+use crate::quant::Schedule;
+use crate::server::proto::FetchRequest;
+use crate::server::service::request_on;
+
+/// One model of an interleaved fetch.
+#[derive(Debug, Clone)]
+pub struct MultiplexModel {
+    pub model: String,
+    /// None = server default schedule
+    pub schedule: Option<Schedule>,
+    /// relative bandwidth share (> 0)
+    pub priority: f64,
+}
+
+impl MultiplexModel {
+    pub fn new(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            schedule: None,
+            priority: 1.0,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: f64) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+}
+
+/// Outcome of an interleaved fetch: fully assembled models plus transfer
+/// accounting.
+pub struct MultiplexOutcome {
+    /// model name → assembler holding every stage's codes
+    pub assemblers: HashMap<String, Assembler>,
+    /// total body bytes received
+    pub bytes: u64,
+    /// stage-range requests issued (all on one connection)
+    pub requests: usize,
+    /// the executed (model, stage) order, for tests and timelines
+    pub order: Vec<(String, usize)>,
+}
+
+/// Client fetching several models over one connection, stage-interleaved.
+pub struct MultiplexClient {
+    addr: std::net::SocketAddr,
+}
+
+impl MultiplexClient {
+    pub fn new(addr: std::net::SocketAddr) -> Self {
+        Self { addr }
+    }
+
+    /// Fetch all stages of `models`, interleaved by weighted-fair
+    /// priority, over a single keep-alive connection.
+    pub fn fetch_interleaved(&self, models: &[MultiplexModel]) -> Result<MultiplexOutcome> {
+        anyhow::ensure!(!models.is_empty(), "no models requested");
+        let mut seen = std::collections::HashSet::new();
+        for m in models {
+            anyhow::ensure!(
+                seen.insert(m.model.as_str()),
+                "duplicate model '{}' in interleaved fetch",
+                m.model
+            );
+        }
+        let mut stream = TcpStream::connect(self.addr)
+            .with_context(|| format!("connecting {}", self.addr))?;
+        stream.set_nodelay(true)?;
+
+        let mut assemblers: HashMap<String, Assembler> = HashMap::new();
+        let mut parsers: HashMap<String, FrameParser> = HashMap::new();
+        let mut bytes = 0u64;
+        let mut requests = 0usize;
+        let mut order: Vec<(String, usize)> = Vec::new();
+
+        // Phase 1: stage 0 of every model — the manifest arrives with it,
+        // so stage sizes become known and the rest can be planned.
+        for m in models {
+            let req = base_request(m).with_stages(0, 1).with_keep_alive(true);
+            let resp = request_on(&mut stream, &req)?;
+            let mut parser = FrameParser::for_stage_prefix(1);
+            let events = read_body(&mut stream, resp.remaining, &mut parser)?;
+            anyhow::ensure!(parser.is_done(), "stage 0 of {} incomplete", m.model);
+            bytes += resp.remaining;
+            requests += 1;
+            order.push((m.model.clone(), 0));
+            for ev in events {
+                match ev {
+                    ParserEvent::Manifest(man) => {
+                        assemblers.insert(m.model.clone(), Assembler::new(*man));
+                    }
+                    ParserEvent::Fragment {
+                        stage,
+                        tensor,
+                        payload,
+                    } => {
+                        assemblers
+                            .get_mut(&m.model)
+                            .context("manifest precedes fragments")?
+                            .absorb(stage, tensor, &payload)?;
+                    }
+                }
+            }
+            // the parser keeps the manifest; later windows reuse it
+            parsers.insert(m.model.clone(), parser);
+        }
+
+        // Phase 2: weighted-fair plan over the remaining stages.
+        let metas: Vec<InterleaveModel> = models
+            .iter()
+            .map(|m| {
+                let man = parsers[&m.model]
+                    .manifest()
+                    .context("phase 1 always parses the manifest")?;
+                let idx = man.stage_index();
+                let stage_bytes: Vec<u64> = (1..man.schedule.stages())
+                    .map(|s| idx.stage_span(s, s + 1).map(|r| r.len() as u64))
+                    .collect::<Result<_>>()?;
+                Ok(InterleaveModel {
+                    name: m.model.clone(),
+                    first_stage: 1,
+                    stage_bytes,
+                    priority: m.priority,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let plan = interleave_stages(&metas);
+
+        for (i, entry) in plan.iter().enumerate() {
+            let m = models
+                .iter()
+                .find(|m| m.model == entry.model)
+                .expect("plan only contains requested models");
+            let keep = i + 1 < plan.len();
+            let req = base_request(m)
+                .with_stages(entry.stage as u32, entry.stage as u32 + 1)
+                .with_keep_alive(keep);
+            let resp = request_on(&mut stream, &req)?;
+            let parser = parsers
+                .get_mut(&entry.model)
+                .expect("parser created in phase 1");
+            parser.rewindow(entry.stage, entry.stage + 1)?;
+            let events = read_body(&mut stream, resp.remaining, parser)?;
+            anyhow::ensure!(
+                parser.is_done(),
+                "stage {} of {} incomplete",
+                entry.stage,
+                entry.model
+            );
+            bytes += resp.remaining;
+            requests += 1;
+            order.push((entry.model.clone(), entry.stage));
+            for ev in events {
+                if let ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } = ev
+                {
+                    assemblers
+                        .get_mut(&entry.model)
+                        .expect("assembler created in phase 1")
+                        .absorb(stage, tensor, &payload)?;
+                }
+            }
+        }
+
+        Ok(MultiplexOutcome {
+            assemblers,
+            bytes,
+            requests,
+            order,
+        })
+    }
+}
+
+fn base_request(m: &MultiplexModel) -> FetchRequest {
+    let mut req = FetchRequest::new(&m.model);
+    if let Some(s) = &m.schedule {
+        req = req.with_schedule(s.clone());
+    }
+    req
+}
+
+/// Read exactly `remaining` body bytes (never more — the next response's
+/// status frame follows on the same stream) and feed them to the parser.
+fn read_body(
+    stream: &mut TcpStream,
+    remaining: u64,
+    parser: &mut FrameParser,
+) -> Result<Vec<ParserEvent>> {
+    let mut events = Vec::new();
+    let mut left = remaining as usize;
+    let mut buf = [0u8; 8192];
+    while left > 0 {
+        let want = left.min(buf.len());
+        let n = stream.read(&mut buf[..want])?;
+        anyhow::ensure!(n > 0, "connection closed with {left} body bytes left");
+        events.extend(parser.feed(&buf[..n])?);
+        left -= n;
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::PnetReader;
+    use crate::testutil::fixture::synthetic_server;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn two_models_interleaved_on_one_connection() {
+        let (server, repo) = synthetic_server("mux-two").unwrap();
+        let client = MultiplexClient::new(server.addr());
+        let out = client
+            .fetch_interleaved(&[
+                MultiplexModel::new("alpha").with_priority(4.0),
+                MultiplexModel::new("beta"),
+            ])
+            .unwrap();
+
+        // one connection, 2 + 2×7 requests
+        assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
+        assert_eq!(out.requests, 16);
+        // stages genuinely interleave: beta stages appear between alphas
+        let alpha_last = out.order.iter().rposition(|(m, _)| m == "alpha").unwrap();
+        let beta_first_late = out
+            .order
+            .iter()
+            .position(|(m, s)| m == "beta" && *s >= 1)
+            .unwrap();
+        assert!(beta_first_late < alpha_last, "{:?}", out.order);
+
+        // each model reassembles byte-for-byte like a direct decode of
+        // the cached container
+        for name in ["alpha", "beta"] {
+            let asm = &out.assemblers[name];
+            assert!(asm.is_complete(), "{name} incomplete");
+            let container = repo
+                .container(name, &Schedule::paper_default())
+                .unwrap();
+            let r = PnetReader::from_bytes(&container).unwrap();
+            let mut direct = Assembler::new(r.manifest.clone());
+            for s in 0..r.manifest.schedule.stages() {
+                for t in 0..r.manifest.tensors.len() {
+                    direct.absorb(s, t, &r.fragments[s][t]).unwrap();
+                }
+            }
+            assert_eq!(asm.codes_flat(), direct.codes_flat(), "{name}");
+        }
+    }
+
+    #[test]
+    fn priority_shapes_delivery_order() {
+        let (server, _repo) = synthetic_server("mux-prio").unwrap();
+        let client = MultiplexClient::new(server.addr());
+        let out = client
+            .fetch_interleaved(&[
+                MultiplexModel::new("alpha").with_priority(0.25),
+                MultiplexModel::new("beta").with_priority(4.0),
+            ])
+            .unwrap();
+        // beta (high priority) completes before alpha despite being
+        // requested second
+        let beta_done = out.order.iter().rposition(|(m, _)| m == "beta").unwrap();
+        let alpha_done = out.order.iter().rposition(|(m, _)| m == "alpha").unwrap();
+        assert!(beta_done < alpha_done, "{:?}", out.order);
+    }
+}

@@ -48,6 +48,9 @@ pub struct ProgressiveOptions {
     pub mode: ExecMode,
     pub policy: InferencePolicy,
     pub request: FetchRequest,
+    /// On a dropped connection, reconnect at the last complete stage
+    /// boundary up to this many times (0 = fail fast, the old behaviour).
+    pub resume_retries: usize,
 }
 
 impl ProgressiveOptions {
@@ -56,6 +59,7 @@ impl ProgressiveOptions {
             mode: ExecMode::Concurrent,
             policy: InferencePolicy::EveryStage,
             request: FetchRequest::new(model),
+            resume_retries: 2,
         }
     }
 
@@ -64,6 +68,38 @@ impl ProgressiveOptions {
             mode: ExecMode::Serial,
             policy: InferencePolicy::EveryStage,
             request: FetchRequest::new(model),
+            resume_retries: 2,
+        }
+    }
+}
+
+/// Pull the next event batch, transparently resuming at the last complete
+/// stage boundary when the connection drops and retries remain. The
+/// assembler deduplicates any re-delivered fragments of a partial stage.
+fn next_events_resuming(dl: &mut Downloader, retries_left: &mut usize) -> Result<Vec<TimedEvent>> {
+    loop {
+        match dl.next_events() {
+            Ok(events) => return Ok(events),
+            Err(e) => {
+                // a failed reconnect (e.g. the outage that dropped the
+                // stream is still ongoing) also spends a retry rather than
+                // aborting the session while budget remains
+                let mut last = e;
+                loop {
+                    if *retries_left == 0 || !dl.can_resume() {
+                        return Err(last);
+                    }
+                    *retries_left -= 1;
+                    let boundary = dl.stage_boundary();
+                    crate::log_warn!(
+                        "download interrupted ({last:#}); resuming at stage {boundary}"
+                    );
+                    match dl.resume_at_stage(boundary) {
+                        Ok(()) => break,
+                        Err(re) => last = re,
+                    }
+                }
+            }
         }
     }
 }
@@ -133,9 +169,10 @@ impl ProgressiveClient {
         let mut asm: Option<Assembler> = None;
         let mut results = Vec::new();
         let mut t_transfer_complete = 0.0;
+        let mut retries_left = opts.resume_retries;
 
         while !dl.is_done() {
-            for TimedEvent { t, event } in dl.next_events()? {
+            for TimedEvent { t, event } in next_events_resuming(&mut dl, &mut retries_left)? {
                 match event {
                     ParserEvent::Manifest(m) => {
                         asm = Some(Assembler::new(*m));
@@ -189,6 +226,7 @@ impl ProgressiveClient {
         let start = dl.start_instant();
         let queue: BoundedQueue<TimedEvent> = BoundedQueue::new(1024);
         let policy = opts.policy;
+        let resume_retries = opts.resume_retries;
 
         std::thread::scope(|scope| -> Result<SessionOutcome> {
             // ---- download thread: read + parse + forward only
@@ -196,8 +234,9 @@ impl ProgressiveClient {
             let downloader = scope.spawn(move || -> Result<(f64, u64)> {
                 let mut run = || -> Result<(f64, u64)> {
                     let mut t_last = 0.0;
+                    let mut retries_left = resume_retries;
                     while !dl.is_done() {
-                        for te in dl.next_events()? {
+                        for te in next_events_resuming(&mut dl, &mut retries_left)? {
                             t_last = te.t;
                             if !q_prod.push(te) {
                                 anyhow::bail!("event queue closed early");

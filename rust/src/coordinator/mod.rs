@@ -21,5 +21,7 @@ pub mod state;
 
 pub use batcher::{Batcher, BatcherConfig, InferReply};
 pub use router::Router;
-pub use scheduler::{SchedulerDecision, StageScheduler};
+pub use scheduler::{
+    interleave_stages, InterleaveModel, SchedulerDecision, StagePlanEntry, StageScheduler,
+};
 pub use state::{SessionState, SessionTable, WeightStore};

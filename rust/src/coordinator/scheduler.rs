@@ -1,10 +1,15 @@
-//! §III-C stage-scheduling policy.
+//! §III-C stage-scheduling policy, plus multi-model stage interleaving.
 //!
 //! Concurrency makes progressive inference free only while per-stage
 //! reconstruct+infer cost fits inside the transfer gap to the next stage.
 //! The scheduler tracks an EWMA of both and decides, per completed stage,
 //! whether to (a) infer it, (b) skip to the newest stage when lagging, or
 //! (c) defer everything to the final stage (degenerate link).
+//!
+//! [`interleave_stages`] extends the per-stage granularity across models:
+//! with the wire protocol's stage-range requests, one connection can
+//! deliver stage k of model A between stages of model B, so the planner
+//! orders (model, stage) pairs by weighted-fair virtual time.
 
 /// Decision for a newly completed stage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,6 +99,59 @@ impl StageScheduler {
     }
 }
 
+/// One model's stages to schedule onto a shared connection.
+#[derive(Debug, Clone)]
+pub struct InterleaveModel {
+    pub name: String,
+    /// absolute index of the first stage to plan (earlier stages are
+    /// assumed already delivered, e.g. stage 0 fetched to learn sizes)
+    pub first_stage: usize,
+    /// wire bytes of each planned stage, starting at `first_stage`
+    pub stage_bytes: Vec<u64>,
+    /// relative bandwidth share (> 0); 2.0 = twice the share of 1.0
+    pub priority: f64,
+}
+
+/// One step of an interleaved multi-model delivery plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlanEntry {
+    pub model: String,
+    /// absolute stage index to request as `stages: stage..stage+1`
+    pub stage: usize,
+}
+
+/// Weighted-fair interleaving of several models' stages onto one
+/// connection. Each model advances through its stages in order; the next
+/// entry is always the pending model with the least virtual time
+/// (bytes scheduled ÷ priority), so high-priority models reach usable
+/// accuracy sooner without starving the rest — per-stage granularity as
+/// the scheduling unit, as in SLIDE-style simultaneous downloading.
+pub fn interleave_stages(models: &[InterleaveModel]) -> Vec<StagePlanEntry> {
+    let mut next = vec![0usize; models.len()];
+    let mut vtime = vec![0f64; models.len()];
+    let total: usize = models.iter().map(|m| m.stage_bytes.len()).sum();
+    let mut plan = Vec::with_capacity(total);
+    for _ in 0..total {
+        let mut best: Option<usize> = None;
+        for (i, m) in models.iter().enumerate() {
+            if next[i] >= m.stage_bytes.len() {
+                continue;
+            }
+            if best.is_none_or(|b| vtime[i] < vtime[b]) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { break };
+        plan.push(StagePlanEntry {
+            model: models[i].name.clone(),
+            stage: models[i].first_stage + next[i],
+        });
+        vtime[i] += models[i].stage_bytes[next[i]] as f64 / models[i].priority.max(1e-9);
+        next[i] += 1;
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +217,95 @@ mod tests {
             }
             s.observe_infer_cost(1.0);
         }
+    }
+
+    #[test]
+    fn interleave_covers_all_stages_in_order() {
+        let models = vec![
+            InterleaveModel {
+                name: "a".into(),
+                first_stage: 1,
+                stage_bytes: vec![100; 7],
+                priority: 1.0,
+            },
+            InterleaveModel {
+                name: "b".into(),
+                first_stage: 1,
+                stage_bytes: vec![100; 7],
+                priority: 1.0,
+            },
+        ];
+        let plan = interleave_stages(&models);
+        assert_eq!(plan.len(), 14);
+        for name in ["a", "b"] {
+            let stages: Vec<usize> = plan
+                .iter()
+                .filter(|e| e.model == name)
+                .map(|e| e.stage)
+                .collect();
+            assert_eq!(stages, (1..8).collect::<Vec<_>>(), "model {name}");
+        }
+        // equal sizes + priorities → strict alternation
+        for pair in plan.chunks(2) {
+            assert_ne!(pair[0].model, pair[1].model);
+        }
+    }
+
+    #[test]
+    fn interleave_respects_priority() {
+        let models = vec![
+            InterleaveModel {
+                name: "hot".into(),
+                first_stage: 0,
+                stage_bytes: vec![100; 8],
+                priority: 4.0,
+            },
+            InterleaveModel {
+                name: "cold".into(),
+                first_stage: 0,
+                stage_bytes: vec![100; 8],
+                priority: 1.0,
+            },
+        ];
+        let plan = interleave_stages(&models);
+        assert_eq!(plan.len(), 16);
+        // the high-priority model finishes its stages strictly earlier
+        let last = |name: &str| plan.iter().rposition(|e| e.model == name).unwrap();
+        assert!(last("hot") < last("cold"));
+        // and gets more of the early slots
+        let hot_early = plan[..8].iter().filter(|e| e.model == "hot").count();
+        assert!(hot_early >= 6, "hot got only {hot_early} of the first 8 slots");
+    }
+
+    #[test]
+    fn interleave_weighs_stage_sizes() {
+        // a model with tiny stages should slip its stages between the
+        // big ones even at equal priority
+        let models = vec![
+            InterleaveModel {
+                name: "big".into(),
+                first_stage: 0,
+                stage_bytes: vec![1000; 4],
+                priority: 1.0,
+            },
+            InterleaveModel {
+                name: "small".into(),
+                first_stage: 0,
+                stage_bytes: vec![10; 4],
+                priority: 1.0,
+            },
+        ];
+        let plan = interleave_stages(&models);
+        // all small stages are planned before the second big stage
+        let second_big = plan
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.model == "big")
+            .nth(1)
+            .unwrap()
+            .0;
+        let last_small = plan.iter().rposition(|e| e.model == "small").unwrap();
+        assert!(last_small < second_big, "{plan:?}");
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! `.pnet` header and manifest structures.
 
+use std::ops::Range;
+
 use anyhow::{bail, Result};
 
 use crate::quant::{QuantParams, Schedule, K};
@@ -66,6 +68,11 @@ impl PnetManifest {
     pub fn wire_bytes(&self) -> usize {
         let frames = self.schedule.stages() * self.tensors.len() * FRAG_HEADER_LEN;
         8 + 4 + self.to_json().to_string().len() + frames + self.payload_bytes()
+    }
+
+    /// Byte-range index of the container this manifest describes.
+    pub fn stage_index(&self) -> StageIndex {
+        StageIndex::from_manifest(self)
     }
 
     pub fn to_json(&self) -> Json {
@@ -160,6 +167,113 @@ impl PnetManifest {
             schedule,
             tensors,
         })
+    }
+}
+
+/// Derived byte-range index of a stage-major `.pnet` container: where the
+/// preamble ends and where every (stage, tensor) frame lives.
+///
+/// The index is fully determined by the manifest — the JSON serialization
+/// is deterministic and the frame layout is fixed — so it costs no wire
+/// bytes: the server computes it once per encoding to answer stage-range
+/// requests with borrowed slices, and a client can compute it from the
+/// manifest to know exactly which byte every stage starts at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageIndex {
+    preamble_len: usize,
+    /// absolute start of each stage's first frame; one extra final entry
+    /// equals the container's total length
+    stage_starts: Vec<usize>,
+    /// `frame_starts[stage][tensor]`: absolute start of the frame header
+    frame_starts: Vec<Vec<usize>>,
+    /// `payload_lens[stage][tensor]`: packed plane bytes of that fragment
+    payload_lens: Vec<Vec<usize>>,
+}
+
+impl StageIndex {
+    /// Compute the index for a container encoded from `manifest`.
+    pub fn from_manifest(manifest: &PnetManifest) -> Self {
+        let preamble_len = 12 + manifest.to_json().to_string().len();
+        let stages = manifest.schedule.stages();
+        let mut stage_starts = Vec::with_capacity(stages + 1);
+        let mut frame_starts = Vec::with_capacity(stages);
+        let mut payload_lens = Vec::with_capacity(stages);
+        let mut off = preamble_len;
+        for s in 0..stages {
+            stage_starts.push(off);
+            let mut fs = Vec::with_capacity(manifest.tensors.len());
+            let mut pl = Vec::with_capacity(manifest.tensors.len());
+            for t in &manifest.tensors {
+                fs.push(off);
+                let plen = manifest.schedule.plane_bytes(s, t.numel);
+                pl.push(plen);
+                off += FRAG_HEADER_LEN + plen;
+            }
+            frame_starts.push(fs);
+            payload_lens.push(pl);
+        }
+        stage_starts.push(off);
+        Self {
+            preamble_len,
+            stage_starts,
+            frame_starts,
+            payload_lens,
+        }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.frame_starts.len()
+    }
+
+    pub fn tensors(&self) -> usize {
+        self.frame_starts.first().map_or(0, |fs| fs.len())
+    }
+
+    /// Bytes of the preamble (magic + version + flags + manifest).
+    pub fn preamble_len(&self) -> usize {
+        self.preamble_len
+    }
+
+    /// Total container length in bytes.
+    pub fn total_len(&self) -> usize {
+        *self.stage_starts.last().expect("stage_starts never empty")
+    }
+
+    /// One frame (header + payload) of a (stage, tensor) fragment.
+    pub fn frame_range(&self, stage: usize, tensor: usize) -> Range<usize> {
+        let start = self.frame_starts[stage][tensor];
+        start..start + FRAG_HEADER_LEN + self.payload_lens[stage][tensor]
+    }
+
+    /// Payload bytes (without the frame header) of a (stage, tensor) fragment.
+    pub fn payload_range(&self, stage: usize, tensor: usize) -> Range<usize> {
+        let r = self.frame_range(stage, tensor);
+        r.start + FRAG_HEADER_LEN..r.end
+    }
+
+    /// Frames of stages `[a, b)` — contiguous because the container is
+    /// stage-major.
+    pub fn stage_span(&self, a: usize, b: usize) -> Result<Range<usize>> {
+        if a >= b || b > self.stages() {
+            bail!(
+                "invalid stage range [{a}, {b}) for {}-stage container",
+                self.stages()
+            );
+        }
+        Ok(self.stage_starts[a]..self.stage_starts[b])
+    }
+
+    /// Response body for a stage-range request: preamble + frames when the
+    /// range starts at stage 0 (fresh fetch needs the manifest), frames
+    /// only otherwise (a resuming client already holds the manifest).
+    pub fn body_range(&self, stages: Option<(u32, u32)>) -> Result<Range<usize>> {
+        match stages {
+            None => Ok(0..self.total_len()),
+            Some((a, b)) => {
+                let span = self.stage_span(a as usize, b as usize)?;
+                Ok(if a == 0 { 0..span.end } else { span })
+            }
+        }
     }
 }
 
@@ -279,6 +393,54 @@ mod tests {
         assert_eq!(m.payload_bytes(), 80);
         let per_stage: usize = (0..8).map(|s| m.stage_payload_bytes(s)).sum();
         assert_eq!(per_stage, m.payload_bytes());
+    }
+
+    #[test]
+    fn stage_index_accounting() {
+        let m = sample_manifest();
+        let idx = m.stage_index();
+        assert_eq!(idx.stages(), 8);
+        assert_eq!(idx.tensors(), 2);
+        assert_eq!(idx.total_len(), m.wire_bytes());
+        assert_eq!(idx.preamble_len(), 12 + m.to_json().to_string().len());
+        // frames tile the body contiguously, stage-major
+        let mut off = idx.preamble_len();
+        for s in 0..idx.stages() {
+            assert_eq!(idx.stage_span(s, s + 1).unwrap().start, off);
+            for t in 0..idx.tensors() {
+                let fr = idx.frame_range(s, t);
+                assert_eq!(fr.start, off);
+                let pr = idx.payload_range(s, t);
+                assert_eq!(pr.start, fr.start + FRAG_HEADER_LEN);
+                assert_eq!(pr.end, fr.end);
+                assert_eq!(pr.len(), m.schedule.plane_bytes(s, m.tensors[t].numel));
+                off = fr.end;
+            }
+            assert_eq!(idx.stage_span(s, s + 1).unwrap().end, off);
+        }
+        assert_eq!(off, idx.total_len());
+        // spans concatenate
+        let whole = idx.stage_span(0, 8).unwrap();
+        assert_eq!(whole.end, idx.total_len());
+        assert!(idx.stage_span(3, 3).is_err());
+        assert!(idx.stage_span(0, 9).is_err());
+    }
+
+    #[test]
+    fn body_range_semantics() {
+        let m = sample_manifest();
+        let idx = m.stage_index();
+        // full fetch = whole container
+        assert_eq!(idx.body_range(None).unwrap(), 0..idx.total_len());
+        // range from stage 0 includes the preamble
+        let r0 = idx.body_range(Some((0, 2))).unwrap();
+        assert_eq!(r0.start, 0);
+        assert_eq!(r0.end, idx.stage_span(0, 2).unwrap().end);
+        // later ranges are frames only
+        let r1 = idx.body_range(Some((2, 5))).unwrap();
+        assert_eq!(r1, idx.stage_span(2, 5).unwrap());
+        assert!(idx.body_range(Some((5, 5))).is_err());
+        assert!(idx.body_range(Some((0, 99))).is_err());
     }
 
     #[test]

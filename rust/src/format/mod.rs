@@ -23,6 +23,8 @@ pub mod header;
 pub mod reader;
 pub mod writer;
 
-pub use header::{FragmentHeader, PnetManifest, TensorMeta, FRAG_HEADER_LEN, MAGIC, VERSION};
+pub use header::{
+    FragmentHeader, PnetManifest, StageIndex, TensorMeta, FRAG_HEADER_LEN, MAGIC, VERSION,
+};
 pub use reader::{FrameParser, ParserEvent, PnetReader};
 pub use writer::PnetWriter;

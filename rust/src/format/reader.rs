@@ -30,6 +30,13 @@ enum State {
 }
 
 /// Incremental `.pnet` stream parser. Feed it chunks; collect events.
+///
+/// A parser covers a *stage window* `[start_stage, end_stage)` of the
+/// container. The default ([`FrameParser::new`]) covers everything:
+/// preamble + all frames. [`FrameParser::for_stage_prefix`] parses a
+/// stream that stops after stage `end` (a stage-range fetch from 0), and
+/// [`FrameParser::resume`] parses a frames-only stream that starts at a
+/// later stage boundary, with the manifest supplied up front.
 pub struct FrameParser {
     buf: Vec<u8>,
     state: State,
@@ -37,6 +44,9 @@ pub struct FrameParser {
     frames_seen: usize,
     total_frames: usize,
     bytes_consumed: u64,
+    start_stage: usize,
+    /// exclusive end of the stage window; None = through the last stage
+    end_stage: Option<usize>,
 }
 
 impl Default for FrameParser {
@@ -54,7 +64,63 @@ impl FrameParser {
             frames_seen: 0,
             total_frames: 0,
             bytes_consumed: 0,
+            start_stage: 0,
+            end_stage: None,
         }
+    }
+
+    /// Parser for a stream that carries the preamble plus only stages
+    /// `[0, end)` — the body of a `stages: 0..end` fetch.
+    pub fn for_stage_prefix(end: usize) -> Self {
+        let mut p = Self::new();
+        p.end_stage = Some(end);
+        p
+    }
+
+    /// Parser resuming at a stage boundary: the stream carries only the
+    /// frames of stages `[start, end)` (no preamble — the caller already
+    /// holds the manifest from the interrupted fetch).
+    pub fn resume(manifest: PnetManifest, start: usize, end: Option<usize>) -> Result<Self> {
+        let stages = manifest.schedule.stages();
+        let end = end.unwrap_or(stages);
+        if start >= end || end > stages {
+            bail!("invalid resume window [{start}, {end}) for {stages}-stage container");
+        }
+        let total_frames = (end - start) * manifest.tensors.len();
+        Ok(Self {
+            buf: Vec::new(),
+            state: State::FrameHeader,
+            manifest: Some(manifest),
+            frames_seen: 0,
+            total_frames,
+            bytes_consumed: 0,
+            start_stage: start,
+            end_stage: Some(end),
+        })
+    }
+
+    /// Reuse a finished parser for another frames-only stage window of the
+    /// same container. Keeps the manifest — callers fetching many stage
+    /// ranges (the multiplex client) avoid cloning it per request.
+    pub fn rewindow(&mut self, start: usize, end: usize) -> Result<()> {
+        let m = self
+            .manifest
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no manifest to reuse"))?;
+        let stages = m.schedule.stages();
+        if start >= end || end > stages {
+            bail!("invalid resume window [{start}, {end}) for {stages}-stage container");
+        }
+        if !self.buf.is_empty() {
+            bail!("{} unparsed bytes left from the previous window", self.buf.len());
+        }
+        self.total_frames = (end - start) * m.tensors.len();
+        self.frames_seen = 0;
+        self.bytes_consumed = 0;
+        self.start_stage = start;
+        self.end_stage = Some(end);
+        self.state = State::FrameHeader;
+        Ok(())
     }
 
     pub fn manifest(&self) -> Option<&PnetManifest> {
@@ -67,6 +133,19 @@ impl FrameParser {
 
     pub fn bytes_consumed(&self) -> u64 {
         self.bytes_consumed
+    }
+
+    /// Highest stage boundary fully parsed so far, as an absolute stage
+    /// count: a return of `s` means stages `[start_stage, s)` of this
+    /// stream's window arrived completely. Used to pick where a
+    /// disconnected fetch should resume.
+    pub fn stage_boundary(&self) -> usize {
+        match &self.manifest {
+            Some(m) if !m.tensors.is_empty() => {
+                self.start_stage + self.frames_seen / m.tensors.len()
+            }
+            _ => self.start_stage,
+        }
     }
 
     /// Feed a chunk; returns all events that completed.
@@ -107,7 +186,14 @@ impl FrameParser {
                     let text = std::str::from_utf8(&self.buf[..need])?;
                     let manifest = PnetManifest::from_json(&Json::parse(text)?)?;
                     self.buf.drain(..need);
-                    self.total_frames = manifest.schedule.stages() * manifest.tensors.len();
+                    let stages = manifest.schedule.stages();
+                    let end = match self.end_stage {
+                        None => stages,
+                        Some(e) if e >= 1 && e <= stages => e,
+                        Some(e) => bail!("stage window end {e} invalid for {stages} stages"),
+                    };
+                    self.end_stage = Some(end);
+                    self.total_frames = (end - self.start_stage) * manifest.tensors.len();
                     events.push(ParserEvent::Manifest(Box::new(manifest.clone())));
                     self.manifest = Some(manifest);
                     self.state = State::FrameHeader;
@@ -122,8 +208,15 @@ impl FrameParser {
                     }
                     let header = FragmentHeader::decode(&self.buf[..FRAG_HEADER_LEN])?;
                     let m = self.manifest.as_ref().unwrap();
-                    if header.stage as usize >= m.schedule.stages() {
-                        bail!("fragment stage {} out of range", header.stage);
+                    let end = self.end_stage.unwrap_or_else(|| m.schedule.stages());
+                    if (header.stage as usize) < self.start_stage
+                        || header.stage as usize >= end
+                    {
+                        bail!(
+                            "fragment stage {} outside window [{}, {end})",
+                            header.stage,
+                            self.start_stage
+                        );
                     }
                     if header.tensor as usize >= m.tensors.len() {
                         bail!("fragment tensor {} out of range", header.tensor);
@@ -291,6 +384,90 @@ mod tests {
         let expect: Vec<(usize, usize)> =
             (0..8).flat_map(|s| (0..2).map(move |t| (s, t))).collect();
         assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn stage_prefix_then_resume_covers_all_fragments() {
+        let (w, bytes) = sample_bytes();
+        let idx = w.stage_index();
+        let split = idx.stage_span(0, 3).unwrap().end;
+
+        // prefix stream: preamble + stages [0, 3)
+        let mut p1 = FrameParser::for_stage_prefix(3);
+        let ev1 = p1.feed(&bytes[..split]).unwrap();
+        assert!(p1.is_done(), "prefix parser must finish at the window end");
+        assert_eq!(p1.stage_boundary(), 3);
+        let mut order = Vec::new();
+        for ev in &ev1 {
+            if let ParserEvent::Fragment { stage, tensor, .. } = ev {
+                order.push((*stage, *tensor));
+            }
+        }
+        assert_eq!(order.len(), 3 * 2);
+
+        // resume stream: frames only, stages [3, 8)
+        let manifest = p1.manifest().unwrap().clone();
+        let mut p2 = FrameParser::resume(manifest, 3, None).unwrap();
+        assert_eq!(p2.stage_boundary(), 3);
+        let ev2 = p2.feed(&bytes[split..]).unwrap();
+        assert!(p2.is_done());
+        assert_eq!(p2.stage_boundary(), 8);
+        for ev in &ev2 {
+            if let ParserEvent::Fragment { stage, tensor, .. } = ev {
+                order.push((*stage, *tensor));
+            }
+        }
+        let expect: Vec<(usize, usize)> =
+            (0..8).flat_map(|s| (0..2).map(move |t| (s, t))).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn rewindow_reuses_parser_across_ranges() {
+        let (w, bytes) = sample_bytes();
+        let idx = w.stage_index();
+        let mut p = FrameParser::for_stage_prefix(1);
+        let ev0 = p.feed(&bytes[..idx.stage_span(0, 1).unwrap().end]).unwrap();
+        assert!(p.is_done());
+        let mut frags = ev0
+            .iter()
+            .filter(|e| matches!(e, ParserEvent::Fragment { .. }))
+            .count();
+        // walk the rest one stage at a time on the same parser
+        for s in 1..8 {
+            p.rewindow(s, s + 1).unwrap();
+            assert!(!p.is_done());
+            let ev = p.feed(&bytes[idx.stage_span(s, s + 1).unwrap()]).unwrap();
+            assert!(p.is_done(), "stage {s}");
+            assert_eq!(p.stage_boundary(), s + 1);
+            frags += ev.len();
+        }
+        assert_eq!(frags, 16);
+        // a parser with leftover bytes refuses to rewindow
+        let mut q = FrameParser::for_stage_prefix(1);
+        let half = idx.stage_span(0, 1).unwrap().end / 2;
+        q.feed(&bytes[..half]).unwrap();
+        assert!(q.rewindow(1, 2).is_err());
+    }
+
+    #[test]
+    fn resume_window_validation() {
+        let (w, _) = sample_bytes();
+        let m = w.manifest().clone();
+        assert!(FrameParser::resume(m.clone(), 8, None).is_err());
+        assert!(FrameParser::resume(m.clone(), 3, Some(3)).is_err());
+        assert!(FrameParser::resume(m.clone(), 0, Some(9)).is_err());
+        assert!(FrameParser::resume(m, 2, Some(5)).is_ok());
+    }
+
+    #[test]
+    fn out_of_window_fragment_rejected() {
+        let (w, bytes) = sample_bytes();
+        let idx = w.stage_index();
+        // a parser resumed at stage 3 must reject stage-0 frames
+        let mut p = FrameParser::resume(w.manifest().clone(), 3, None).unwrap();
+        let stage0 = &bytes[idx.stage_span(0, 1).unwrap()];
+        assert!(p.feed(stage0).is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@ use std::io::Write;
 
 use anyhow::{bail, Result};
 
-use super::header::{FragmentHeader, PnetManifest, MAGIC, VERSION};
+use super::header::{FragmentHeader, PnetManifest, StageIndex, MAGIC, VERSION};
 use crate::quant::{bitplane, quantize};
 
 /// Progressive model encoder.
@@ -38,6 +38,11 @@ impl PnetWriter {
 
     pub fn manifest(&self) -> &PnetManifest {
         &self.manifest
+    }
+
+    /// Byte-range index of the container `to_bytes`/`write_to` emit.
+    pub fn stage_index(&self) -> StageIndex {
+        self.manifest.stage_index()
     }
 
     /// A single fragment's packed payload.
@@ -152,6 +157,32 @@ mod tests {
         let bytes = w.to_bytes();
         assert_eq!(bytes.len(), m.wire_bytes());
         assert_eq!(&bytes[..4], MAGIC);
+    }
+
+    #[test]
+    fn stage_index_matches_emitted_bytes() {
+        let (m, flat) = sample(4);
+        let w = PnetWriter::encode(m.clone(), &flat).unwrap();
+        let bytes = w.to_bytes();
+        let idx = w.stage_index();
+        assert_eq!(idx.total_len(), bytes.len());
+        assert_eq!(&bytes[..idx.preamble_len()], &w.preamble()[..]);
+        for s in 0..m.schedule.stages() {
+            for t in 0..m.tensors.len() {
+                assert_eq!(
+                    &bytes[idx.frame_range(s, t)],
+                    &w.framed_fragment(s, t)[..],
+                    "frame ({s}, {t})"
+                );
+                assert_eq!(&bytes[idx.payload_range(s, t)], w.fragment(s, t));
+            }
+        }
+        // stage spans concatenate back to the full body
+        let mut rejoined = bytes[..idx.preamble_len()].to_vec();
+        for s in 0..m.schedule.stages() {
+            rejoined.extend_from_slice(&bytes[idx.stage_span(s, s + 1).unwrap()]);
+        }
+        assert_eq!(rejoined, bytes);
     }
 
     #[test]

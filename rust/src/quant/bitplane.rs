@@ -80,10 +80,14 @@ pub fn unpack_or_into(bytes: &[u8], width: u32, shift: u32, replace: bool, out: 
                     }
                 }
             }
-            // ragged tail (fewer than $per_byte outputs from the last byte)
+            // ragged tail (fewer than $per_byte outputs from the last byte).
+            // Index the plane's own tail byte — the one right after the
+            // full chunks — NOT `bytes.len() - 1`: the caller's buffer may
+            // legally extend past the plane (see the debug_assert above),
+            // and the buffer's last byte is then unrelated data.
             let rem = chunks.into_remainder();
             if !rem.is_empty() {
-                let b = bytes[bytes.len() - 1] as u32;
+                let b = bytes[out.len() / $per_byte] as u32;
                 for (j, o) in rem.iter_mut().enumerate() {
                     let v = (b >> (8 - $w - j as u32 * $w)) & mask;
                     if replace {
@@ -179,6 +183,31 @@ mod tests {
                 let packed = pack_plane(&vals, width);
                 assert_eq!(packed.len(), (n * width as usize + 7) / 8);
                 assert_eq!(unpack_plane(&packed, width, n), vals);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tail_uses_plane_byte_not_buffer_tail() {
+        // Regression: with a buffer longer than the exact plane (which the
+        // debug_assert explicitly permits), the ragged-tail fast path read
+        // `bytes[bytes.len() - 1]` — a byte that is not part of the plane.
+        for width in [1u32, 2, 4] {
+            let per_byte = (8 / width) as usize;
+            for extra in [1usize, 3] {
+                let n = per_byte * 3 + 1; // one ragged element in the tail
+                let vals: Vec<u32> = (0..n as u32).map(|v| v & ((1 << width) - 1)).collect();
+                let mut packed = pack_plane(&vals, width);
+                // caller's buffer extends past the plane with unrelated bytes
+                packed.resize(packed.len() + extra, 0xFF);
+                let mut out = vec![0u32; n];
+                unpack_plane_into(&packed, width, &mut out);
+                assert_eq!(out, vals, "width {width}, {extra} trailing bytes");
+                // OR-mode must see the same plane values too
+                let mut acc = vec![0u32; n];
+                unpack_or_into(&packed, width, 4, false, &mut acc);
+                let expect: Vec<u32> = vals.iter().map(|v| v << 4).collect();
+                assert_eq!(acc, expect, "width {width} or-mode");
             }
         }
     }

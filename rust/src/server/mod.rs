@@ -11,6 +11,6 @@ pub mod proto;
 pub mod repository;
 pub mod service;
 
-pub use proto::{read_frame, write_frame, FetchRequest};
-pub use repository::Repository;
+pub use proto::{read_frame, write_frame, FetchRequest, FetchResponse};
+pub use repository::{EncodedContainer, Repository};
 pub use service::Server;

@@ -1,5 +1,7 @@
-//! Wire protocol: a single length-prefixed JSON request, answered by a
-//! raw `.pnet` byte stream (optionally offset for resume).
+//! Wire protocol: length-prefixed JSON request frames answered by a JSON
+//! status frame plus a raw `.pnet` byte stream. Requests can select a
+//! stage range of the container and keep the connection open for further
+//! requests (pipelined multi-model delivery). See `rust/docs/PROTOCOL.md`.
 
 use std::io::{Read, Write};
 
@@ -19,8 +21,14 @@ pub struct FetchRequest {
     pub schedule: Option<Schedule>,
     /// None = server default shaping; Some(f) = MB/s override
     pub speed_mbps: Option<f64>,
-    /// resume offset in bytes
+    /// resume offset in bytes, within the selected body
     pub offset: u64,
+    /// half-open stage range `[start, end)` to fetch; None = whole
+    /// container. A range starting at stage 0 includes the preamble
+    /// (manifest); later ranges are frames only.
+    pub stages: Option<(u32, u32)>,
+    /// keep the connection open for further requests after the body
+    pub keep_alive: bool,
 }
 
 impl FetchRequest {
@@ -30,6 +38,8 @@ impl FetchRequest {
             schedule: None,
             speed_mbps: None,
             offset: 0,
+            stages: None,
+            keep_alive: false,
         }
     }
 
@@ -48,6 +58,16 @@ impl FetchRequest {
         self
     }
 
+    pub fn with_stages(mut self, start: u32, end: u32) -> Self {
+        self.stages = Some((start, end));
+        self
+    }
+
+    pub fn with_keep_alive(mut self, keep: bool) -> Self {
+        self.keep_alive = keep;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fields = vec![("model", json::s(&self.model))];
         if let Some(s) = &self.schedule {
@@ -61,6 +81,15 @@ impl FetchRequest {
         }
         if self.offset > 0 {
             fields.push(("offset", json::num(self.offset as f64)));
+        }
+        if let Some((a, b)) = self.stages {
+            fields.push((
+                "stages",
+                json::arr(vec![json::num(a as f64), json::num(b as f64)]),
+            ));
+        }
+        if self.keep_alive {
+            fields.push(("keep_alive", Json::Bool(true)));
         }
         json::obj(fields)
     }
@@ -77,6 +106,16 @@ impl FetchRequest {
                 Some(Schedule::new(widths, K)?)
             }
         };
+        let stages = match j.opt("stages") {
+            None => None,
+            Some(v) => {
+                let pair = v.as_arr()?;
+                if pair.len() != 2 {
+                    bail!("stages must be a [start, end) pair");
+                }
+                Some((pair[0].as_i64()? as u32, pair[1].as_i64()? as u32))
+            }
+        };
         Ok(Self {
             model: j.get("model")?.as_str()?.to_string(),
             schedule,
@@ -87,6 +126,11 @@ impl FetchRequest {
             offset: match j.opt("offset") {
                 None => 0,
                 Some(v) => v.as_i64()? as u64,
+            },
+            stages,
+            keep_alive: match j.opt("keep_alive") {
+                None => false,
+                Some(v) => v.as_bool()?,
             },
         })
     }
@@ -100,11 +144,75 @@ impl FetchRequest {
     }
 }
 
+/// The status frame answering a fetch: exact sizes of the selected body,
+/// so a resuming client is told how many bytes will actually follow (the
+/// old protocol advertised the full container size even for offset
+/// resumes, corrupting progress accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FetchResponse {
+    /// bytes of the selected body (before any resume offset)
+    pub total: u64,
+    /// bytes that follow this frame (`total - offset`)
+    pub remaining: u64,
+    /// full container length, for cross-range progress display
+    pub container_len: u64,
+    /// echo of the request's stage range
+    pub stages: Option<(u32, u32)>,
+}
+
+impl FetchResponse {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("status", json::s("ok")),
+            ("total", json::num(self.total as f64)),
+            ("remaining", json::num(self.remaining as f64)),
+            ("container", json::num(self.container_len as f64)),
+        ];
+        if let Some((a, b)) = self.stages {
+            fields.push((
+                "stages",
+                json::arr(vec![json::num(a as f64), json::num(b as f64)]),
+            ));
+        }
+        json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let stages = match j.opt("stages") {
+            None => None,
+            Some(v) => {
+                let pair = v.as_arr()?;
+                if pair.len() != 2 {
+                    bail!("stages must be a [start, end) pair");
+                }
+                Some((pair[0].as_i64()? as u32, pair[1].as_i64()? as u32))
+            }
+        };
+        Ok(Self {
+            total: j.get("total")?.as_i64()? as u64,
+            remaining: j.get("remaining")?.as_i64()? as u64,
+            container_len: j.get("container")?.as_i64()? as u64,
+            stages,
+        })
+    }
+}
+
 /// Write a length-prefixed frame.
 pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(body)?;
     Ok(())
+}
+
+/// Write an OK status frame.
+pub fn write_ok<W: Write>(w: &mut W, resp: &FetchResponse) -> Result<()> {
+    write_frame(w, resp.to_json().to_string().as_bytes())
+}
+
+/// Write an error status frame.
+pub fn write_err<W: Write>(w: &mut W, msg: &str) -> Result<()> {
+    let j = json::obj(vec![("status", json::s("err")), ("error", json::s(msg))]);
+    write_frame(w, j.to_string().as_bytes())
 }
 
 /// Read a length-prefixed frame.
@@ -127,6 +235,23 @@ pub fn read_request<R: Read>(r: &mut R) -> Result<FetchRequest> {
     FetchRequest::from_json(&Json::parse(text)?)
 }
 
+/// Read + parse a status frame; an error status becomes an `Err` whose
+/// message carries the server's reason.
+pub fn read_response<R: Read>(r: &mut R) -> Result<FetchResponse> {
+    let body = read_frame(r)?;
+    let j = Json::parse(std::str::from_utf8(&body)?)?;
+    match j.get("status")?.as_str()? {
+        "ok" => FetchResponse::from_json(&j),
+        _ => {
+            let reason = j
+                .opt("error")
+                .and_then(|e| e.as_str().ok())
+                .unwrap_or("unknown error");
+            bail!("server: ERR {reason}");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +269,18 @@ mod tests {
     }
 
     #[test]
+    fn stage_range_request_roundtrip() {
+        let req = FetchRequest::new("cnn")
+            .with_stages(2, 7)
+            .with_keep_alive(true);
+        let mut cur = std::io::Cursor::new(req.encode());
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(back.stages, Some((2, 7)));
+        assert!(back.keep_alive);
+    }
+
+    #[test]
     fn minimal_request() {
         let req = FetchRequest::new("mlp");
         let mut cur = std::io::Cursor::new(req.encode());
@@ -151,6 +288,32 @@ mod tests {
         assert_eq!(back.model, "mlp");
         assert_eq!(back.schedule, None);
         assert_eq!(back.offset, 0);
+        assert_eq!(back.stages, None);
+        assert!(!back.keep_alive);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = FetchResponse {
+            total: 1000,
+            remaining: 400,
+            container_len: 5000,
+            stages: Some((3, 8)),
+        };
+        let mut buf = Vec::new();
+        write_ok(&mut buf, &resp).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_response(&mut cur).unwrap(), resp);
+    }
+
+    #[test]
+    fn error_response_surfaces_reason() {
+        let mut buf = Vec::new();
+        write_err(&mut buf, "unknown model 'x'").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let err = read_response(&mut cur).unwrap_err();
+        assert!(err.to_string().contains("ERR"), "{err}");
+        assert!(err.to_string().contains("unknown model"), "{err}");
     }
 
     #[test]

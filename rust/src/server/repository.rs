@@ -1,22 +1,141 @@
 //! Model repository: progressive encodings, computed once per
 //! (model, schedule) and cached — the deploy-time "division" of Fig 1.
+//!
+//! Encodings are **single-flight**: when N connections miss the cache for
+//! the same (model, schedule) simultaneously, exactly one thread encodes
+//! while the rest wait on the flight and share the resulting `Arc`. The
+//! cached [`EncodedContainer`] carries the container bytes *and* the
+//! derived [`StageIndex`], so the serving hot path answers stage-range
+//! requests with borrowed slices of the cached bytes — zero copies.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::format::PnetWriter;
+use crate::format::{PnetManifest, PnetWriter, StageIndex};
 use crate::models::Registry;
 use crate::quant::Schedule;
 
 /// Cache key: model name + schedule widths.
 type Key = (String, Vec<u32>);
 
+/// A fully encoded `.pnet` container plus its derived stage index.
+///
+/// Handed out as `Arc<EncodedContainer>`; serving slices borrow the
+/// underlying bytes (`Deref<Target = [u8]>`), so no per-request copy of
+/// the body is ever made.
+pub struct EncodedContainer {
+    bytes: Vec<u8>,
+    manifest: PnetManifest,
+    index: StageIndex,
+}
+
+impl EncodedContainer {
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn manifest(&self) -> &PnetManifest {
+        &self.manifest
+    }
+
+    pub fn index(&self) -> &StageIndex {
+        &self.index
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Byte range of the response body for a stage-range request.
+    pub fn body_range(&self, stages: Option<(u32, u32)>) -> Result<Range<usize>> {
+        self.index.body_range(stages)
+    }
+
+    /// A borrowed slice of the container — provenance stays inside the
+    /// cached allocation (asserted by tests), never a copy.
+    pub fn slice(&self, range: Range<usize>) -> &[u8] {
+        &self.bytes[range]
+    }
+}
+
+impl std::ops::Deref for EncodedContainer {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// A pending encode that concurrent requesters wait on.
+struct Flight {
+    done: Mutex<Option<std::result::Result<Arc<EncodedContainer>, String>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Self {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, result: std::result::Result<Arc<EncodedContainer>, String>) {
+        *self.done.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> std::result::Result<Arc<EncodedContainer>, String> {
+        let mut guard = self.done.lock().unwrap();
+        while guard.is_none() {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        guard.clone().unwrap()
+    }
+}
+
+enum Slot {
+    Ready(Arc<EncodedContainer>),
+    Pending(Arc<Flight>),
+}
+
+/// Unwedges a single-flight key if the encoding leader unwinds: without
+/// this, a panic inside encode would leave the `Pending` slot in place and
+/// every follower (and all future requests for the key) blocked forever.
+/// Disarmed by `take()`-ing the key on the normal path.
+struct FlightCleanup<'a> {
+    cache: &'a Mutex<HashMap<Key, Slot>>,
+    key: Option<Key>,
+}
+
+impl Drop for FlightCleanup<'_> {
+    fn drop(&mut self) {
+        let Some(key) = self.key.take() else { return };
+        // avoid unwrap: a poisoned lock during unwind must not double-panic
+        if let Ok(mut cache) = self.cache.lock() {
+            if let Some(Slot::Pending(flight)) = cache.remove(&key) {
+                flight.complete(Err(format!(
+                    "encoding '{}' panicked; request again to retry",
+                    key.0
+                )));
+            }
+        }
+    }
+}
+
 /// Thread-safe repository of encoded models.
 pub struct Repository {
     registry: Registry,
-    cache: Mutex<HashMap<Key, Arc<Vec<u8>>>>,
+    cache: Mutex<HashMap<Key, Slot>>,
+    encodes: AtomicU64,
 }
 
 impl Repository {
@@ -24,6 +143,7 @@ impl Repository {
         Self {
             registry,
             cache: Mutex::new(HashMap::new()),
+            encodes: AtomicU64::new(0),
         }
     }
 
@@ -35,27 +155,73 @@ impl Repository {
         &self.registry
     }
 
-    /// Full `.pnet` container bytes for a model under a schedule
-    /// (encoded on first request, cached afterwards).
-    pub fn container(&self, model: &str, schedule: &Schedule) -> Result<Arc<Vec<u8>>> {
+    /// Full `.pnet` container for a model under a schedule, encoded on
+    /// first request (single-flight under concurrency), cached afterwards.
+    pub fn container(&self, model: &str, schedule: &Schedule) -> Result<Arc<EncodedContainer>> {
         let key = (model.to_string(), schedule.widths().to_vec());
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            return Ok(hit.clone());
+        let existing_flight = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.get(&key) {
+                Some(Slot::Ready(c)) => return Ok(c.clone()),
+                Some(Slot::Pending(f)) => Some(f.clone()),
+                None => {
+                    cache.insert(key.clone(), Slot::Pending(Arc::new(Flight::new())));
+                    None
+                }
+            }
+        };
+
+        if let Some(flight) = existing_flight {
+            // follower: another thread is already encoding this key
+            return flight.wait().map_err(|msg| anyhow::anyhow!(msg));
         }
+
+        // leader: encode outside the cache lock, then publish
+        let mut panic_guard = FlightCleanup {
+            cache: &self.cache,
+            key: Some(key),
+        };
+        let result = self.encode(model, schedule);
+        let key = panic_guard.key.take().expect("guard still armed");
+        let flight = {
+            let mut cache = self.cache.lock().unwrap();
+            let flight = match cache.remove(&key) {
+                Some(Slot::Pending(f)) => Some(f),
+                _ => None,
+            };
+            if let Ok(c) = &result {
+                cache.insert(key, Slot::Ready(c.clone()));
+            }
+            // on error the slot stays removed, so a later request retries
+            flight
+        };
+        if let Some(flight) = flight {
+            flight.complete(
+                result
+                    .as_ref()
+                    .map(Arc::clone)
+                    .map_err(|e| format!("{e:#}")),
+            );
+        }
+        result
+    }
+
+    fn encode(&self, model: &str, schedule: &Schedule) -> Result<Arc<EncodedContainer>> {
         let manifest = self.registry.get(model)?;
         let flat = manifest.load_weights()?;
         let pnet_manifest = manifest.pnet_manifest(&flat, schedule.clone())?;
         let writer = PnetWriter::encode(pnet_manifest, &flat)?;
-        let bytes = Arc::new(writer.to_bytes());
-        crate::log_info!(
-            "encoded {model} [{schedule}]: {} bytes",
-            bytes.len()
-        );
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key, bytes.clone());
-        Ok(bytes)
+        let bytes = writer.to_bytes();
+        let index = writer.stage_index();
+        debug_assert_eq!(index.total_len(), bytes.len());
+        let manifest = writer.manifest().clone();
+        self.encodes.fetch_add(1, Ordering::SeqCst);
+        crate::log_info!("encoded {model} [{schedule}]: {} bytes", bytes.len());
+        Ok(Arc::new(EncodedContainer {
+            bytes,
+            manifest,
+            index,
+        }))
     }
 
     /// Encoded size without retaining the encoding.
@@ -63,8 +229,20 @@ impl Repository {
         Ok(self.container(model, schedule)?.len())
     }
 
+    /// Number of completed cached encodings.
     pub fn cached_encodings(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready(_)))
+            .count()
+    }
+
+    /// Total encodes performed (tests assert single-flight keeps this at
+    /// one per distinct key regardless of request concurrency).
+    pub fn encode_count(&self) -> u64 {
+        self.encodes.load(Ordering::SeqCst)
     }
 }
 
@@ -72,6 +250,7 @@ impl Repository {
 mod tests {
     use super::*;
     use crate::format::PnetReader;
+    use crate::testutil::fixture::synthetic_models;
 
     #[test]
     fn encodes_and_caches() {
@@ -85,6 +264,7 @@ mod tests {
         let b = repo.container("mlp", &sched).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second hit must be cached");
         assert_eq!(repo.cached_encodings(), 1);
+        assert_eq!(repo.encode_count(), 1);
 
         // container parses and matches the manifest
         let r = PnetReader::from_bytes(&a).unwrap();
@@ -109,10 +289,57 @@ mod tests {
 
     #[test]
     fn unknown_model_errors() {
-        if !crate::artifacts_available() {
-            return;
-        }
-        let repo = Repository::open_default().unwrap();
+        let repo = Repository::new(synthetic_models("repo-unknown").unwrap());
         assert!(repo.container("nope", &Schedule::paper_default()).is_err());
+        // a failed encode must not wedge the slot: retry still errors cleanly
+        assert!(repo.container("nope", &Schedule::paper_default()).is_err());
+        assert_eq!(repo.cached_encodings(), 0);
+    }
+
+    #[test]
+    fn concurrent_cold_requests_encode_once() {
+        let repo = Arc::new(Repository::new(synthetic_models("repo-race").unwrap()));
+        let sched = Schedule::paper_default();
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let repo = repo.clone();
+                let sched = sched.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    repo.container("alpha", &sched).unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(
+            repo.encode_count(),
+            1,
+            "cache stampede: {} encodes for one key",
+            repo.encode_count()
+        );
+        for r in &results[1..] {
+            assert!(Arc::ptr_eq(&results[0], r), "all callers share one Arc");
+        }
+    }
+
+    #[test]
+    fn stage_slices_borrow_cached_bytes() {
+        let repo = Repository::new(synthetic_models("repo-zerocopy").unwrap());
+        let c = repo.container("alpha", &Schedule::paper_default()).unwrap();
+        let base = c.bytes().as_ptr() as usize;
+        for stages in [Some((0u32, 3u32)), Some((3, 8)), None] {
+            let range = c.body_range(stages).unwrap();
+            let slice = c.slice(range.clone());
+            // provenance: the slice points into the cached allocation
+            assert_eq!(slice.as_ptr() as usize, base + range.start);
+            assert_eq!(slice.len(), range.len());
+        }
+        // ranges tile the container: full == preamble-range ∪ tail-range
+        let head = c.body_range(Some((0, 3))).unwrap();
+        let tail = c.body_range(Some((3, 8))).unwrap();
+        assert_eq!(head.end, tail.start);
+        assert_eq!(tail.end, c.len());
     }
 }

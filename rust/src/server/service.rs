@@ -1,5 +1,13 @@
 //! TCP streaming service: accepts fetch requests, streams `.pnet` bytes
 //! through a per-connection bandwidth shaper.
+//!
+//! A connection carries a *sequence* of request/response exchanges: each
+//! request selects a stage range of one model's container, the server
+//! answers with a status frame plus exactly the advertised body bytes,
+//! and — when the request set `keep_alive` — waits for the next request.
+//! That lets one connection interleave stages of multiple models
+//! (see `client::multiplex`). Bodies are borrowed slices of the cached
+//! encoding: the hot path copies nothing.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -10,7 +18,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::proto::{self, FetchRequest};
+use super::proto::{self, FetchRequest, FetchResponse};
 use super::repository::Repository;
 use crate::netsim::{LinkSpec, ThrottledWriter};
 use crate::quant::Schedule;
@@ -48,6 +56,7 @@ pub struct Server {
 #[derive(Default, Debug)]
 pub struct ServerStats {
     pub connections: AtomicU64,
+    pub requests: AtomicU64,
     pub bytes_sent: AtomicU64,
     pub errors: AtomicU64,
 }
@@ -56,22 +65,23 @@ impl Server {
     /// Bind and start serving on `addr` (use "127.0.0.1:0" for ephemeral).
     pub fn start(addr: &str, repo: Arc<Repository>, config: ServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
         let sd = shutdown.clone();
         let st = stats.clone();
+        // Blocking accept: no poll interval to burn CPU or delay connects.
+        // `shutdown()` wakes the loop with a throwaway connection.
         let accept_thread = std::thread::Builder::new()
             .name("prognet-accept".into())
             .spawn(move || {
                 let pool = ThreadPool::new(config.workers);
                 loop {
-                    if sd.load(Ordering::SeqCst) {
-                        break;
-                    }
                     match listener.accept() {
                         Ok((stream, peer)) => {
+                            if sd.load(Ordering::SeqCst) {
+                                break; // the shutdown wakeup (or a straggler)
+                            }
                             st.connections.fetch_add(1, Ordering::SeqCst);
                             let repo = repo.clone();
                             let cfg = config.clone();
@@ -84,10 +94,10 @@ impl Server {
                                 }
                             });
                         }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
                         Err(e) => {
+                            if sd.load(Ordering::SeqCst) {
+                                break;
+                            }
                             crate::log_warn!("accept error: {e}");
                             std::thread::sleep(Duration::from_millis(10));
                         }
@@ -114,7 +124,32 @@ impl Server {
     pub fn shutdown(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
+            // Wake the blocking accept with a throwaway connection. A
+            // wildcard bind (0.0.0.0 / ::) is not connectable on every
+            // platform, so aim the wakeup at loopback on the bound port.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match self.addr {
+                    std::net::SocketAddr::V4(_) => {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    }
+                    std::net::SocketAddr::V6(_) => {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    }
+                });
+            }
+            match TcpStream::connect_timeout(&wake, Duration::from_millis(500)) {
+                // the accept loop saw the wakeup (or a racing real
+                // connection) and will observe the flag
+                Ok(_) => {
+                    let _ = h.join();
+                }
+                Err(e) => {
+                    // could not wake the loop; detach instead of hanging
+                    // shutdown (and Drop) on an unbounded join
+                    crate::log_warn!("shutdown wakeup failed ({e}); detaching accept thread");
+                }
+            }
         }
     }
 }
@@ -125,6 +160,22 @@ impl Drop for Server {
     }
 }
 
+/// True for IO errors that mean "the peer is done with this connection"
+/// rather than a protocol violation.
+fn is_disconnect(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::BrokenPipe
+        )
+    })
+}
+
 fn handle_conn(
     mut stream: TcpStream,
     repo: &Repository,
@@ -133,27 +184,67 @@ fn handle_conn(
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;
     stream.set_nodelay(true)?;
-    let req = proto::read_request(&mut stream)?;
-    let schedule = req.schedule.clone().unwrap_or_else(|| config.default_schedule.clone());
+    let mut served_any = false;
+    loop {
+        let req = match proto::read_request(&mut stream) {
+            Ok(r) => r,
+            // after at least one response, a closed or quiet connection
+            // is the normal end of a keep-alive session
+            Err(e) if served_any && is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        serve_request(&mut stream, &req, repo, config, stats)?;
+        served_any = true;
+        if !req.keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn serve_request(
+    stream: &mut TcpStream,
+    req: &FetchRequest,
+    repo: &Repository,
+    config: &ServerConfig,
+    stats: &ServerStats,
+) -> Result<()> {
+    stats.requests.fetch_add(1, Ordering::SeqCst);
+    let schedule = req
+        .schedule
+        .clone()
+        .unwrap_or_else(|| config.default_schedule.clone());
     let container = match repo.container(&req.model, &schedule) {
         Ok(c) => c,
         Err(e) => {
-            // error frame: status line prefixed with "ERR "
-            let msg = format!("ERR {e}");
-            proto::write_frame(&mut stream, msg.as_bytes())?;
+            proto::write_err(stream, &format!("{e}"))?;
             return Err(e);
         }
     };
-    // OK frame carries the total byte count, then the raw stream follows.
-    let ok = format!("OK {}", container.len());
-    proto::write_frame(&mut stream, ok.as_bytes())?;
-
-    let offset = (req.offset as usize).min(container.len());
-    let body = &container[offset..];
+    let body_range = match container.body_range(req.stages) {
+        Ok(r) => r,
+        Err(e) => {
+            proto::write_err(stream, &format!("{e}"))?;
+            return Err(e);
+        }
+    };
+    // Zero-copy hot path: the body is a borrowed slice of the cached
+    // container; only the kernel copies it into the socket.
+    let selected = container.slice(body_range);
+    let offset = (req.offset as usize).min(selected.len());
+    let body = &selected[offset..];
+    proto::write_ok(
+        stream,
+        &FetchResponse {
+            total: selected.len() as u64,
+            remaining: body.len() as u64,
+            container_len: container.len() as u64,
+            stages: req.stages,
+        },
+    )?;
     let speed = req.speed_mbps.or(config.default_speed_mbps);
     let sent = match speed {
         Some(mbps) => {
-            let mut shaped = ThrottledWriter::new(&mut stream, LinkSpec::mbps(mbps));
+            let mut shaped = ThrottledWriter::new(&mut *stream, LinkSpec::mbps(mbps));
             shaped.write_all(body)?;
             shaped.flush()?;
             shaped.sent()
@@ -169,19 +260,24 @@ fn handle_conn(
 }
 
 /// Client-side helper: open a fetch stream. Returns the connected socket
-/// positioned at the start of the `.pnet` body and the total body size.
-pub fn open_fetch(addr: &std::net::SocketAddr, req: &FetchRequest) -> Result<(TcpStream, u64)> {
+/// positioned at the start of the body, plus the status frame with the
+/// exact body sizes (`resp.remaining` bytes follow).
+pub fn open_fetch(
+    addr: &std::net::SocketAddr,
+    req: &FetchRequest,
+) -> Result<(TcpStream, FetchResponse)> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     stream.set_nodelay(true)?;
+    let resp = request_on(&mut stream, req)?;
+    Ok((stream, resp))
+}
+
+/// Issue a (follow-up) request on an already-open connection; the body
+/// (`resp.remaining` bytes) follows on the same stream.
+pub fn request_on(stream: &mut TcpStream, req: &FetchRequest) -> Result<FetchResponse> {
     stream.write_all(&req.encode())?;
     stream.flush()?;
-    let status = proto::read_frame(&mut stream)?;
-    let text = std::str::from_utf8(&status)?;
-    if let Some(size) = text.strip_prefix("OK ") {
-        Ok((stream, size.trim().parse()?))
-    } else {
-        anyhow::bail!("server: {text}");
-    }
+    proto::read_response(stream)
 }
 
 #[cfg(test)]
@@ -189,68 +285,120 @@ mod tests {
     use super::*;
     use std::io::Read;
 
+    fn synthetic_server(tag: &str) -> (Server, Arc<Repository>) {
+        crate::testutil::fixture::synthetic_server(tag).unwrap()
+    }
+
     #[test]
     fn serve_and_fetch_roundtrip() {
-        if !crate::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let repo = Arc::new(Repository::open_default().unwrap());
+        let (server, repo) = synthetic_server("svc-roundtrip");
         let sched = Schedule::paper_default();
-        let expect = repo.container("mlp", &sched).unwrap();
-        let mut server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+        let expect = repo.container("alpha", &sched).unwrap();
 
-        let (mut stream, size) =
-            open_fetch(&server.addr(), &FetchRequest::new("mlp")).unwrap();
-        assert_eq!(size as usize, expect.len());
+        let (mut stream, resp) = open_fetch(&server.addr(), &FetchRequest::new("alpha")).unwrap();
+        assert_eq!(resp.total as usize, expect.len());
+        assert_eq!(resp.remaining, resp.total);
+        assert_eq!(resp.container_len, resp.total);
         let mut got = Vec::new();
         stream.read_to_end(&mut got).unwrap();
         assert_eq!(&got[..], &expect[..]);
         assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
-        server.shutdown();
     }
 
     #[test]
-    fn resume_with_offset() {
-        if !crate::artifacts_available() {
-            return;
-        }
-        let repo = Arc::new(Repository::open_default().unwrap());
-        let expect = repo.container("mlp", &Schedule::paper_default()).unwrap();
-        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+    fn resume_with_offset_advertises_remaining() {
+        // Regression: the old protocol sent the FULL size in the OK frame
+        // even for offset resumes, so a resuming client expected more
+        // bytes than it would ever receive.
+        let (server, repo) = synthetic_server("svc-offset");
+        let expect = repo.container("alpha", &Schedule::paper_default()).unwrap();
         let off = expect.len() as u64 / 2;
-        let (mut stream, _) =
-            open_fetch(&server.addr(), &FetchRequest::new("mlp").with_offset(off)).unwrap();
+        let (mut stream, resp) =
+            open_fetch(&server.addr(), &FetchRequest::new("alpha").with_offset(off)).unwrap();
+        assert_eq!(resp.total, expect.len() as u64);
+        assert_eq!(resp.remaining, expect.len() as u64 - off);
         let mut got = Vec::new();
         stream.read_to_end(&mut got).unwrap();
+        assert_eq!(got.len() as u64, resp.remaining);
         assert_eq!(&got[..], &expect[off as usize..]);
     }
 
     #[test]
-    fn unknown_model_gets_error_frame() {
-        if !crate::artifacts_available() {
-            return;
+    fn stage_range_fetch_returns_indexed_bytes() {
+        let (server, repo) = synthetic_server("svc-stages");
+        let sched = Schedule::paper_default();
+        let container = repo.container("alpha", &sched).unwrap();
+        for (a, b) in [(0u32, 1u32), (0, 8), (2, 5), (7, 8)] {
+            let (mut stream, resp) = open_fetch(
+                &server.addr(),
+                &FetchRequest::new("alpha").with_stages(a, b),
+            )
+            .unwrap();
+            let want = container.slice(container.body_range(Some((a, b))).unwrap());
+            assert_eq!(resp.remaining as usize, want.len(), "range [{a}, {b})");
+            assert_eq!(resp.stages, Some((a, b)));
+            let mut got = Vec::new();
+            stream.read_to_end(&mut got).unwrap();
+            assert_eq!(&got[..], want, "range [{a}, {b})");
         }
-        let repo = Arc::new(Repository::open_default().unwrap());
-        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn invalid_stage_range_gets_error_frame() {
+        let (server, _repo) = synthetic_server("svc-badrange");
+        let err = open_fetch(
+            &server.addr(),
+            &FetchRequest::new("alpha").with_stages(5, 5),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("ERR"), "{err}");
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests_per_connection() {
+        let (server, repo) = synthetic_server("svc-keepalive");
+        let sched = Schedule::paper_default();
+        let alpha = repo.container("alpha", &sched).unwrap();
+        let beta = repo.container("beta", &sched).unwrap();
+
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_nodelay(true).unwrap();
+        for (model, expect, stages) in [
+            ("alpha", &alpha, (0u32, 2u32)),
+            ("beta", &beta, (0, 2)),
+            ("alpha", &alpha, (2, 8)),
+            ("beta", &beta, (2, 8)),
+        ] {
+            let req = FetchRequest::new(model)
+                .with_stages(stages.0, stages.1)
+                .with_keep_alive(true);
+            let resp = request_on(&mut stream, &req).unwrap();
+            let mut body = vec![0u8; resp.remaining as usize];
+            stream.read_exact(&mut body).unwrap();
+            let want = expect.slice(expect.body_range(Some(stages)).unwrap());
+            assert_eq!(&body[..], want, "{model} {stages:?}");
+        }
+        assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
+        assert_eq!(server.stats().requests.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn unknown_model_gets_error_frame() {
+        let (server, _repo) = synthetic_server("svc-unknown");
         let err = open_fetch(&server.addr(), &FetchRequest::new("missing")).unwrap_err();
         assert!(err.to_string().contains("ERR"), "{err}");
     }
 
     #[test]
     fn concurrent_fetches() {
-        if !crate::artifacts_available() {
-            return;
-        }
-        let repo = Arc::new(Repository::open_default().unwrap());
-        let expect = repo.container("mlp", &Schedule::paper_default()).unwrap();
-        let server = Server::start("127.0.0.1:0", repo, ServerConfig::default()).unwrap();
+        let (server, repo) = synthetic_server("svc-concurrent");
+        let expect = repo.container("alpha", &Schedule::paper_default()).unwrap();
         let addr = server.addr();
         let handles: Vec<_> = (0..8)
             .map(|_| {
                 let expect = expect.clone();
                 std::thread::spawn(move || {
-                    let (mut s, _) = open_fetch(&addr, &FetchRequest::new("mlp")).unwrap();
+                    let (mut s, _) = open_fetch(&addr, &FetchRequest::new("alpha")).unwrap();
                     let mut got = Vec::new();
                     s.read_to_end(&mut got).unwrap();
                     assert_eq!(got.len(), expect.len());
@@ -261,5 +409,17 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(server.stats().connections.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn shutdown_is_prompt() {
+        let (mut server, _repo) = synthetic_server("svc-shutdown");
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "blocking accept must wake promptly on shutdown ({:?})",
+            t0.elapsed()
+        );
     }
 }

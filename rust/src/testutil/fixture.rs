@@ -1,0 +1,150 @@
+//! Synthetic model artifacts for tests and benches.
+//!
+//! Writes a minimal artifacts tree (`models/index.json` +
+//! `models/<name>/manifest.json` + `weights.bin`) into a temp directory so
+//! the server/client stack can be exercised end to end without the
+//! Python-built artifacts (which CI does not have). The HLO entries point
+//! at files that are never created — only the runtime layer needs them,
+//! and these fixtures stay on the transport/codec paths.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::models::Registry;
+use crate::util::bytes::f32_to_le;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Write one synthetic model under `models_dir/<name>`.
+pub fn write_model(
+    models_dir: &Path,
+    name: &str,
+    tensors: &[(&str, &[usize])],
+    seed: u64,
+) -> Result<()> {
+    let dir = models_dir.join(name);
+    std::fs::create_dir_all(&dir)?;
+    let mut rng = Rng::new(seed);
+    let mut tensor_json = Vec::new();
+    let mut flat: Vec<f32> = Vec::new();
+    let mut offset = 0usize;
+    for (tname, shape) in tensors {
+        let numel: usize = shape.iter().product();
+        let vals: Vec<f32> = (0..numel)
+            .map(|_| rng.normal_ms(0.0, 0.5) as f32)
+            .collect();
+        let lo = vals.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = vals.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        tensor_json.push(json::obj(vec![
+            ("name", json::s(tname)),
+            (
+                "shape",
+                json::arr(shape.iter().map(|&d| json::num(d as f64)).collect()),
+            ),
+            ("numel", json::num(numel as f64)),
+            ("offset", json::num(offset as f64)),
+            ("min", json::num(lo as f64)),
+            ("max", json::num(hi as f64)),
+        ]));
+        offset += numel;
+        flat.extend_from_slice(&vals);
+    }
+    let manifest = json::obj(vec![
+        ("name", json::s(name)),
+        ("task", json::s("classify")),
+        ("classes", json::num(10.0)),
+        ("input_shape", json::arr(vec![json::num(8.0)])),
+        ("param_count", json::num(offset as f64)),
+        ("k", json::num(16.0)),
+        (
+            "default_schedule",
+            json::arr(vec![json::num(2.0); 8]),
+        ),
+        ("tensors", json::arr(tensor_json)),
+        (
+            "hlo",
+            json::obj(vec![("fwd_b1", json::s("fwd_b1.hlo.txt"))]),
+        ),
+        ("dataset", json::s("shapes10")),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    std::fs::write(dir.join("weights.bin"), f32_to_le(&flat))?;
+    Ok(())
+}
+
+/// Write `models/index.json` listing `names`.
+pub fn write_index(models_dir: &Path, names: &[&str]) -> Result<()> {
+    let entries: Vec<Json> = names
+        .iter()
+        .map(|n| json::obj(vec![("name", json::s(n))]))
+        .collect();
+    let index = json::obj(vec![("models", json::arr(entries))]);
+    std::fs::write(models_dir.join("index.json"), index.to_string())?;
+    Ok(())
+}
+
+/// A fresh artifacts root under the system temp dir, unique per process
+/// and `tag` (tests running in parallel must use distinct tags).
+pub fn fixture_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("prognet-fixture-{}-{tag}", std::process::id()))
+}
+
+/// Write a small two-model artifacts tree ("alpha": 3 tensors /
+/// 1530 params, "beta": 2 tensors / 520 params) and open a Registry on it.
+pub fn synthetic_models(tag: &str) -> Result<Registry> {
+    let root = fixture_root(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    let models_dir = root.join("models");
+    std::fs::create_dir_all(&models_dir)?;
+    write_model(
+        &models_dir,
+        "alpha",
+        &[("w1", &[40, 30][..]), ("b1", &[30][..]), ("w2", &[30, 10][..])],
+        0x5EED_0001,
+    )?;
+    write_model(
+        &models_dir,
+        "beta",
+        &[("w", &[25, 20][..]), ("b", &[20][..])],
+        0x5EED_0002,
+    )?;
+    write_index(&models_dir, &["alpha", "beta"])?;
+    Registry::open(&root)
+}
+
+/// Running server + repository over the two-model fixture — the shared
+/// harness for socket-level tests and benches.
+pub fn synthetic_server(
+    tag: &str,
+) -> Result<(crate::server::Server, std::sync::Arc<crate::server::Repository>)> {
+    let repo = std::sync::Arc::new(crate::server::Repository::new(synthetic_models(tag)?));
+    let server = crate::server::Server::start(
+        "127.0.0.1:0",
+        repo.clone(),
+        crate::server::service::ServerConfig::default(),
+    )?;
+    Ok((server, repo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_registry_loads_and_encodes() {
+        let reg = synthetic_models("fixture-self").unwrap();
+        assert_eq!(reg.names(), vec!["alpha", "beta"]);
+        let m = reg.get("alpha").unwrap();
+        assert_eq!(m.param_count, 40 * 30 + 30 + 30 * 10);
+        let flat = m.load_weights().unwrap();
+        assert_eq!(flat.len(), m.param_count);
+        let pnet = m
+            .pnet_manifest(&flat, crate::quant::Schedule::paper_default())
+            .unwrap();
+        let w = crate::format::PnetWriter::encode(pnet, &flat).unwrap();
+        let bytes = w.to_bytes();
+        assert_eq!(bytes.len(), w.manifest().wire_bytes());
+        assert!(crate::format::PnetReader::from_bytes(&bytes).is_ok());
+    }
+}

@@ -1,4 +1,7 @@
 //! Testing utilities: a minimal property-based testing harness
-//! (`proptest` is not in the offline vendor set) plus shared generators.
+//! (`proptest` is not in the offline vendor set), shared generators, and
+//! synthetic model artifacts so server/client paths are testable without
+//! the Python-built artifacts.
 
+pub mod fixture;
 pub mod prop;

@@ -28,12 +28,12 @@ fn shaped_stream_arrives_at_configured_rate() {
     let size = repo.container_size("mlp", &sched).unwrap() as f64;
     // ~1.6 MB at 4 MB/s ≈ 0.4 s
     let speed = 4.0;
-    let (mut stream, total) = open_fetch(
+    let (mut stream, resp) = open_fetch(
         &server.addr(),
         &FetchRequest::new("mlp").with_speed(speed),
     )
     .unwrap();
-    assert_eq!(total as f64, size);
+    assert_eq!(resp.total as f64, size);
     let t0 = Instant::now();
     let mut buf = Vec::new();
     stream.read_to_end(&mut buf).unwrap();
@@ -87,10 +87,10 @@ fn many_concurrent_shaped_sessions() {
                 } else {
                     FetchRequest::new("mlp")
                 };
-                let (mut s, total) = open_fetch(&addr, &req).unwrap();
+                let (mut s, resp) = open_fetch(&addr, &req).unwrap();
                 let mut buf = Vec::new();
                 s.read_to_end(&mut buf).unwrap();
-                assert_eq!(buf.len() as u64, total);
+                assert_eq!(buf.len() as u64, resp.remaining);
                 buf.len()
             })
         })
@@ -118,13 +118,18 @@ fn resume_after_disconnect_reassembles() {
     s1.read_exact(&mut part1).unwrap();
     drop(s1); // simulate disconnect
 
-    let (mut s2, _) = open_fetch(
+    let (mut s2, resp) = open_fetch(
         &server.addr(),
         &FetchRequest::new("mlp").with_offset(half as u64),
     )
     .unwrap();
+    // regression: the status frame must advertise the remaining bytes,
+    // not the full container size
+    assert_eq!(resp.total, full.len() as u64);
+    assert_eq!(resp.remaining, (full.len() - half) as u64);
     let mut part2 = Vec::new();
     s2.read_to_end(&mut part2).unwrap();
+    assert_eq!(part2.len() as u64, resp.remaining);
 
     let mut rejoined = part1;
     rejoined.extend_from_slice(&part2);

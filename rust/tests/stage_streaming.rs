@@ -1,0 +1,204 @@
+//! Stage-indexed streaming over real sockets, on synthetic models so the
+//! whole suite runs without the Python-built artifacts: stage-range
+//! fetches, the split/reassembly property, resume at stage boundaries,
+//! and pipelined multi-model delivery.
+
+use std::io::Read;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use prognet::client::{Assembler, MultiplexClient, MultiplexModel};
+use prognet::format::{FrameParser, ParserEvent, PnetReader};
+use prognet::quant::Schedule;
+use prognet::server::service::open_fetch;
+use prognet::server::{FetchRequest, Repository, Server};
+use prognet::testutil::prop::check;
+
+fn synthetic_server(tag: &str) -> (Server, Arc<Repository>) {
+    prognet::testutil::fixture::synthetic_server(tag).unwrap()
+}
+
+fn fetch_bytes(addr: &std::net::SocketAddr, req: &FetchRequest) -> Vec<u8> {
+    let (mut stream, resp) = open_fetch(addr, req).unwrap();
+    let mut body = Vec::new();
+    stream.read_to_end(&mut body).unwrap();
+    assert_eq!(body.len() as u64, resp.remaining, "advertised size must match");
+    body
+}
+
+/// Any split of a container into stage-range requests reassembles
+/// byte-identically to a singleton fetch — across the paper schedule, the
+/// singleton schedule, and a ragged-width schedule.
+#[test]
+fn prop_stage_splits_reassemble_byte_identically() {
+    let (server, _repo) = synthetic_server("prop-splits");
+    let addr = server.addr();
+    let schedules = [
+        Schedule::paper_default(),
+        Schedule::singleton(),
+        Schedule::new(vec![3, 5, 8], 16).unwrap(),
+    ];
+
+    check(
+        "stage splits reassemble",
+        25,
+        |g| {
+            let si = g.usize(0, schedules.len() - 1);
+            let stages = schedules[si].stages();
+            // random subset of interior stage boundaries as split points
+            let mut cuts = Vec::new();
+            for s in 1..stages {
+                if g.bool() {
+                    cuts.push(s);
+                }
+            }
+            (si, cuts)
+        },
+        |(si, cuts)| {
+            let sched = schedules[si].clone();
+            let stages = sched.stages();
+            let full = fetch_bytes(
+                &addr,
+                &FetchRequest::new("alpha").with_schedule(sched.clone()),
+            );
+
+            let mut bounds = vec![0usize];
+            bounds.extend(cuts.iter().copied());
+            bounds.push(stages);
+            let mut rejoined = Vec::new();
+            for w in bounds.windows(2) {
+                let part = fetch_bytes(
+                    &addr,
+                    &FetchRequest::new("alpha")
+                        .with_schedule(sched.clone())
+                        .with_stages(w[0] as u32, w[1] as u32),
+                );
+                rejoined.extend_from_slice(&part);
+            }
+            if rejoined != full {
+                return Err(format!(
+                    "split {cuts:?} of schedule {sched} reassembled {} bytes != {} full",
+                    rejoined.len(),
+                    full.len()
+                ));
+            }
+            if PnetReader::from_bytes(&rejoined).is_err() {
+                return Err("reassembled container does not parse".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A client resuming at a stage boundary on a fresh connection
+/// reconstructs codes identical to an uninterrupted fetch.
+#[test]
+fn resume_at_stage_boundary_matches_uninterrupted() {
+    let (server, repo) = synthetic_server("resume-boundary");
+    let addr = server.addr();
+    let sched = Schedule::paper_default();
+
+    // uninterrupted reference via direct container decode
+    let container = repo.container("alpha", &sched).unwrap();
+    let r = PnetReader::from_bytes(&container).unwrap();
+    let mut reference = Assembler::new(r.manifest.clone());
+    for s in 0..r.manifest.schedule.stages() {
+        for t in 0..r.manifest.tensors.len() {
+            reference.absorb(s, t, &r.fragments[s][t]).unwrap();
+        }
+    }
+
+    for boundary in 1..8u32 {
+        // connection 1: stages [0, boundary)
+        let part1 = fetch_bytes(&addr, &FetchRequest::new("alpha").with_stages(0, boundary));
+        let mut p1 = FrameParser::for_stage_prefix(boundary as usize);
+        let mut asm: Option<Assembler> = None;
+        for ev in p1.feed(&part1).unwrap() {
+            match ev {
+                ParserEvent::Manifest(m) => asm = Some(Assembler::new(*m)),
+                ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } => {
+                    asm.as_mut().unwrap().absorb(stage, tensor, &payload).unwrap();
+                }
+            }
+        }
+        assert!(p1.is_done());
+        let mut asm = asm.unwrap();
+        let manifest = p1.manifest().unwrap().clone();
+
+        // connection 2 ("after the disconnect"): stages [boundary, 8)
+        let part2 = fetch_bytes(&addr, &FetchRequest::new("alpha").with_stages(boundary, 8));
+        let mut p2 = FrameParser::resume(manifest, boundary as usize, None).unwrap();
+        for ev in p2.feed(&part2).unwrap() {
+            if let ParserEvent::Fragment {
+                stage,
+                tensor,
+                payload,
+            } = ev
+            {
+                asm.absorb(stage, tensor, &payload).unwrap();
+            }
+        }
+        assert!(p2.is_done());
+        assert!(asm.is_complete(), "boundary {boundary}");
+        assert_eq!(
+            asm.codes_flat(),
+            reference.codes_flat(),
+            "boundary {boundary}"
+        );
+    }
+}
+
+/// Multi-model interleaved delivery over one connection completes both
+/// models and matches direct decodes.
+#[test]
+fn interleaved_models_share_one_connection() {
+    let (server, repo) = synthetic_server("interleave-e2e");
+    let client = MultiplexClient::new(server.addr());
+    let out = client
+        .fetch_interleaved(&[
+            MultiplexModel::new("alpha").with_priority(2.0),
+            MultiplexModel::new("beta"),
+        ])
+        .unwrap();
+    assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
+    assert_eq!(out.requests, 2 + 7 + 7);
+    for name in ["alpha", "beta"] {
+        let asm = &out.assemblers[name];
+        assert!(asm.is_complete());
+        let container = repo.container(name, &Schedule::paper_default()).unwrap();
+        let r = PnetReader::from_bytes(&container).unwrap();
+        let mut direct = Assembler::new(r.manifest.clone());
+        for s in 0..r.manifest.schedule.stages() {
+            for t in 0..r.manifest.tensors.len() {
+                direct.absorb(s, t, &r.fragments[s][t]).unwrap();
+            }
+        }
+        assert_eq!(asm.codes_flat(), direct.codes_flat(), "{name}");
+    }
+    // single-flight on the server side: one encode per (model, schedule)
+    assert_eq!(repo.encode_count(), 2);
+}
+
+/// Ragged-width schedules stream and reassemble through the full client
+/// pipeline (exercising the generic bit-carry unpack path end to end).
+#[test]
+fn ragged_schedule_streams_end_to_end() {
+    let (server, _repo) = synthetic_server("ragged-e2e");
+    let sched = Schedule::new(vec![3, 5, 8], 16).unwrap();
+    let req = FetchRequest::new("beta").with_schedule(sched.clone());
+    let full = fetch_bytes(&server.addr(), &req);
+    let r = PnetReader::from_bytes(&full).unwrap();
+    assert_eq!(r.manifest.schedule, sched);
+    let mut asm = Assembler::new(r.manifest.clone());
+    for s in 0..sched.stages() {
+        for t in 0..r.manifest.tensors.len() {
+            asm.absorb(s, t, &r.fragments[s][t]).unwrap();
+        }
+    }
+    assert!(asm.is_complete());
+    assert!(asm.reconstruct().is_ok());
+}
