@@ -7,6 +7,21 @@
 //! paper, end to end).
 //!
 //! Run with: `cargo run --release --example quickstart`
+//!
+//! ## Picking an inference backend
+//!
+//! Inference goes through `prognet::runtime::Engine`, which wraps one of
+//! the pluggable backends:
+//!
+//! - `reference` (default) — pure-Rust interpreter; needs no native deps.
+//! - `pjrt` — XLA/PJRT CPU client for the AOT HLO artifacts; requires
+//!   building with `--features pjrt` against a real `xla` crate.
+//!
+//! Select one with the `PROGNET_BACKEND` environment variable
+//! (`PROGNET_BACKEND=pjrt cargo run --release --features pjrt --example
+//! quickstart`), or construct explicitly in code:
+//! `Engine::reference()`, `Engine::named("pjrt")`. `Engine::global()`
+//! reads `PROGNET_BACKEND` once and shares the backend process-wide.
 
 use std::sync::Arc;
 
@@ -28,8 +43,10 @@ fn main() -> prognet::Result<()> {
     let server = Server::start("127.0.0.1:0", repo, ServerConfig::default())?;
     println!("server up on {}", server.addr());
 
-    // 2. Client side: compiled executable + eval workload.
+    // 2. Client side: compiled executable + eval workload. The engine
+    // honours PROGNET_BACKEND (reference interpreter unless overridden).
     let engine = Engine::global()?;
+    println!("inference backend: {}", engine.backend_name());
     let registry = Registry::open_default()?;
     let manifest = registry.get("cnn")?;
     let session = ModelSession::load_batches(&engine, manifest, &[32])?;

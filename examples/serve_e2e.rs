@@ -6,8 +6,8 @@
 //!        │                                        │ publishes each stage's
 //!        │                                        ▼ reconstruction
 //!   eval images ──► request load ──► coordinator Router + dynamic Batcher
-//!                                           │ (PJRT executable, hot-swapped
-//!                                           ▼  weights)
+//!                                           │ (backend executable, hot-
+//!                                           ▼  swapped weights)
 //!                        per-request replies tagged with the weight bits
 //!
 //! While the `cnn` model is still downloading at 1 MB/s, three client

@@ -1,5 +1,6 @@
-//! PJRT runtime micro-benchmarks: executable latency per model and batch
-//! size, plus the fused-Pallas-dequant (qfwd) variant.
+//! Runtime micro-benchmarks: executable latency per model and batch
+//! size, plus the fused-dequant (qfwd) variant, on the selected backend
+//! (`PROGNET_BACKEND=reference|pjrt`; reference is the default).
 
 use std::time::Instant;
 
@@ -30,7 +31,7 @@ fn main() -> prognet::Result<()> {
     let registry = Registry::open_default()?;
 
     let mut table = Table::new(
-        "PJRT executable latency (best of 5)",
+        &format!("{} backend latency (best of 5)", engine.backend_name()),
         &["model", "path", "batch", "latency", "images/s"],
     );
     for name in ["mlp", "cnn", "widecnn", "detector"] {
@@ -50,7 +51,8 @@ fn main() -> prognet::Result<()> {
                 format!("{:.0}", n as f64 / t),
             ]);
         }
-        // fused qfwd (Pallas dequant inside the executable) at batch 32
+        // fused qfwd (dequant inside the backend: the Pallas kernel on
+        // pjrt, Eq. 5 in the interpreter) at batch 32
         if session.has_qfwd() {
             let mut qflat = vec![0u32; flat.len()];
             for t in &manifest.tensors {
@@ -67,7 +69,7 @@ fn main() -> prognet::Result<()> {
             )?;
             table.row(vec![
                 name.into(),
-                "qfwd (Pallas dequant)".into(),
+                "qfwd (fused dequant)".into(),
                 "32".into(),
                 format!("{:.2} ms", t * 1e3),
                 format!("{:.0}", n as f64 / t),

@@ -3,7 +3,8 @@
 //! Paper setup: models of 7.1–51.2 MB at 1 MB/s on an M1/Chrome client.
 //! Here: our trained models (0.3–2.8 MB quantized) over the deterministic
 //! virtual link, with *measured* per-stage reconstruct+inference costs
-//! from the real PJRT runtime. The link speed is scaled **per model** so
+//! from the selected runtime backend (`PROGNET_BACKEND`, default:
+//! reference interpreter). The link speed is scaled **per model** so
 //! that total compute is ~50% of transfer time — the regime of the
 //! paper's Table I, where browser inference cost 20–80% of the transfer
 //! (MobileNetV2: 13s vs 8s). EXPERIMENTS.md documents the scaling.
@@ -28,7 +29,11 @@ fn main() -> prognet::Result<()> {
     let workload = 32; // images inferred at each stage
 
     let mut table = Table::new(
-        "Table I — total execution time (32-image workload; link scaled per model, see col. 3)",
+        &format!(
+            "Table I — total execution time (32-image workload, {} backend; \
+             link scaled per model, see col. 3)",
+            engine.backend_name()
+        ),
         &[
             "Model",
             "Size (wire)",

@@ -26,10 +26,11 @@ fn main() -> prognet::Result<()> {
     header.extend(sched.cum_all().iter().map(|c| format!("{c}")));
     header.push("orig.".into());
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut table = Table::new(
-        "Table II — accuracy (%) by cumulative bit-width",
-        &header_refs,
+    let title = format!(
+        "Table II — accuracy (%) by cumulative bit-width ({} backend)",
+        engine.backend_name()
     );
+    let mut table = Table::new(&title, &header_refs);
 
     for name in ["mlp", "cnn", "widecnn", "detector"] {
         let manifest = registry.get(name)?;

@@ -1,0 +1,156 @@
+//! Offline stub of the `xla` (xla-rs) crate API surface that
+//! `prognet::runtime::pjrt` uses.
+//!
+//! The real crate links `xla_extension` (a native PJRT build) and cannot
+//! be resolved or built in an offline container. This stub keeps the
+//! `pjrt` feature *compiling* everywhere: every entry point returns
+//! [`Error::StubOnly`] at runtime, so selecting the PJRT backend in a
+//! stub build fails loudly at client construction — never silently.
+//!
+//! To run on real PJRT, point the `xla` dependency of `prognet` at an
+//! actual `xla-rs` checkout (same API) instead of this path.
+
+use std::fmt;
+
+/// Stub error: the only error this crate ever produces.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// Raised by every operation — this build carries no PJRT runtime.
+    StubOnly,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: this build has no PJRT runtime (replace the `xla` \
+             path dependency with a real xla-rs checkout, or use the \
+             reference backend)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for u32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host-side tensor value (stub: never actually constructed).
+#[derive(Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Rank-1 literal from a slice (stub: the data is dropped — a stub
+    /// literal can never reach a real execution anyway).
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::StubOnly)
+    }
+
+    /// Copy out as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::StubOnly)
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::StubOnly)
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::StubOnly)
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device-resident buffer (stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::StubOnly)
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubOnly)
+    }
+}
+
+/// A PJRT client (stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub, which is the
+    /// single choke point that keeps stub builds honest.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::StubOnly)
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::StubOnly)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = Error::StubOnly.to_string();
+        assert!(msg.contains("stub"));
+    }
+}

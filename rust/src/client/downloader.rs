@@ -198,20 +198,50 @@ impl Downloader {
 
 /// Shrink a socket's kernel receive buffer so an unread stream actually
 /// stalls the sender.
+///
+/// Raw `setsockopt` with the common Linux constants inlined — `anyhow`
+/// is the crate's only dependency, so no `libc`. The constants differ on
+/// mips/sparc, so those arches (and non-Linux platforms) take the no-op
+/// path below: the call is best-effort backpressure shaping for the
+/// serial-mode ablation, not a correctness requirement.
+#[cfg(all(
+    any(target_os = "linux", target_os = "android"),
+    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
+))]
 fn shrink_recv_buffer(stream: &TcpStream) -> Result<()> {
     use std::os::fd::AsRawFd;
+    const SOL_SOCKET: i32 = 1;
+    const SO_RCVBUF: i32 = 8;
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const core::ffi::c_void,
+            optlen: u32,
+        ) -> i32;
+    }
     let fd = stream.as_raw_fd();
-    let size: libc::c_int = 16 * 1024;
+    let size: i32 = 16 * 1024;
     let rc = unsafe {
-        libc::setsockopt(
+        setsockopt(
             fd,
-            libc::SOL_SOCKET,
-            libc::SO_RCVBUF,
-            &size as *const _ as *const libc::c_void,
-            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            SOL_SOCKET,
+            SO_RCVBUF,
+            &size as *const i32 as *const core::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
         )
     };
     anyhow::ensure!(rc == 0, "setsockopt(SO_RCVBUF) failed");
+    Ok(())
+}
+
+/// No-op on platforms where the inlined constants don't apply.
+#[cfg(not(all(
+    any(target_os = "linux", target_os = "android"),
+    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
+)))]
+fn shrink_recv_buffer(_stream: &TcpStream) -> Result<()> {
     Ok(())
 }
 

@@ -1,8 +1,11 @@
 //! Paper-experiment harnesses shared by `cargo bench` targets and the
 //! examples: Table I (execution time), Table II (accuracy vs bit-width),
-//! Fig 4 (timelines). Real compute is measured through the actual PJRT
-//! runtime; transmission is the deterministic virtual-time [`Link`] at
-//! the paper's speeds (see DESIGN.md §2 for why this preserves shape).
+//! Fig 4 (timelines). Real compute is measured through whichever
+//! [`runtime::Backend`](crate::runtime::Backend) the session was compiled
+//! on (PJRT executables or the reference interpreter — the harness only
+//! sees a [`ModelSession`]); transmission is the deterministic
+//! virtual-time [`Link`](crate::netsim::Link) at the paper's speeds (see
+//! DESIGN.md §2 for why this preserves shape).
 
 use std::time::Instant;
 
@@ -94,7 +97,8 @@ pub fn table2_row(
 }
 
 /// Measured per-stage compute costs (reconstruct + inference), using the
-/// real codec and the real PJRT executable on `n_workload` images.
+/// real codec and the session's compiled executable on `n_workload`
+/// images.
 #[derive(Debug, Clone)]
 pub struct ComputeProfile {
     /// seconds of concat+dequant per stage

@@ -240,7 +240,7 @@ impl FrameParser {
                         break;
                     }
                     let payload: Vec<u8> = self.buf.drain(..need).collect();
-                    let crc = crc32fast::hash(&payload);
+                    let crc = crate::util::crc32::hash(&payload);
                     if crc != header.crc32 {
                         bail!(
                             "fragment ({}, {}) CRC mismatch: {:08x} != {:08x}",

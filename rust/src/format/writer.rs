@@ -57,7 +57,7 @@ impl PnetWriter {
             stage: stage as u8,
             tensor: tensor as u16,
             len: payload.len() as u32,
-            crc32: crc32fast::hash(payload),
+            crc32: crate::util::crc32::hash(payload),
         };
         let mut out = Vec::with_capacity(payload.len() + 12);
         out.extend_from_slice(&header.encode());

@@ -16,11 +16,27 @@
 //!   streaming server, progressive client pipeline, multi-client
 //!   coordinator (router + dynamic batcher), network simulator,
 //!   evaluation + user-study harnesses.
-//! - **L2/L1 (build time)** — JAX models + Pallas kernels, AOT-lowered to
-//!   HLO text under `artifacts/` (see `python/compile/`), loaded here via
-//!   the PJRT CPU client ([`runtime`]).
+//! - **Runtime** — pluggable execution backends behind
+//!   [`runtime::Backend`]: a dependency-free pure-Rust reference
+//!   interpreter (the default — builds and runs offline, no artifacts),
+//!   and an XLA/PJRT backend behind the `pjrt` cargo feature.
+//! - **L2/L1 (build time, optional)** — JAX models + Pallas kernels,
+//!   AOT-lowered to HLO text under `artifacts/` (see `python/compile/`),
+//!   executed by the PJRT backend.
 //!
-//! Quickstart: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
+//! Backend selection: `PROGNET_BACKEND=reference|pjrt`, the CLI's
+//! `--backend` option, or [`runtime::Engine`]'s constructors.
+//!
+//! Quickstart: `examples/quickstart.rs`; architecture: `rust/README.md`;
+//! wire protocol: `rust/docs/PROTOCOL.md`.
+
+// Codec, kernel and wire-format code throughout the crate (quant::*,
+// format::*, runtime::ops) indexes buffers and sizes planes with explicit
+// arithmetic so the layouts stay auditable against the paper's equations;
+// these two style lints fight exactly that idiom, so they are allowed
+// crate-wide. Anything sharper (e.g. `too_many_arguments`) is scoped to
+// the module that needs it.
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 
 pub mod client;
 pub mod coordinator;

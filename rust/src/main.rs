@@ -41,11 +41,22 @@ fn usage() -> ! {
            encode  --model NAME [--schedule 2,2,2,2,2,2,2,2] --out FILE\n  \
            inspect --file FILE\n  \
            serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F]\n  \
-           fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F]\n  \
-           eval    --model NAME [--n 256]\n  \
-           study   [--users 29] [--seed 2021]"
+           fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F] [--backend B]\n  \
+           eval    --model NAME [--n 256] [--backend B]\n  \
+           study   [--users 29] [--seed 2021]\n\
+         backends (B): reference (default, pure Rust) | pjrt (needs the\n\
+         `pjrt` build feature + HLO artifacts); also via PROGNET_BACKEND"
     );
     std::process::exit(2);
+}
+
+/// Engine from `--backend`, falling back to `PROGNET_BACKEND`, falling
+/// back to the reference interpreter.
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    match args.get("backend") {
+        Some(name) => Engine::named(name),
+        None => Engine::from_env(),
+    }
 }
 
 fn run() -> Result<()> {
@@ -152,7 +163,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     let addr: std::net::SocketAddr = args.require("addr")?.parse()?;
     let model = args.require("model")?;
     let n = args.get_usize("n", 4)?;
-    let engine = Engine::global()?;
+    let engine = engine_from_args(args)?;
     let reg = Registry::open_default()?;
     let manifest = reg.get(model)?;
     let session =
@@ -171,7 +182,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     let client = ProgressiveClient::new(addr);
     let outcome = client.fetch_and_infer(&opts, &session, &images, n)?;
     let mut t = Table::new(
-        &format!("Progressive fetch: {model}"),
+        &format!("Progressive fetch: {model} ({} backend)", engine.backend_name()),
         &["stage", "bits", "transfer done", "output ready", "top-1 on batch"],
     );
     for r in &outcome.results {
@@ -197,7 +208,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.require("model")?;
     let n = args.get_usize("n", 256)?;
-    let engine = Engine::global()?;
+    let engine = engine_from_args(args)?;
     let reg = Registry::open_default()?;
     let manifest = reg.get(model)?;
     let eval = EvalSet::load_named(&manifest.dataset)?;
@@ -211,7 +222,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
     header.extend(schedule.cum_all().iter().map(|c| format!("{c}-bit")));
     header.push("orig.".into());
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut t = Table::new(&format!("Accuracy ({metric}, n={n})"), &header_refs);
+    let mut t = Table::new(
+        &format!("Accuracy ({metric}, n={n}, {} backend)", engine.backend_name()),
+        &header_refs,
+    );
     let mut row = vec![model.to_string()];
     row.extend(per_stage.iter().map(|a| format!("{:.1}", a * 100.0)));
     row.push(format!("{:.1}", orig * 100.0));

@@ -3,7 +3,7 @@
 //!
 //! - [`Link`] — a *virtual-time* model used by the analytical harnesses
 //!   (Table I timeline math without wall-clock sleeping).
-//! - [`ThrottledWriter`] / [`pace`] — *real-time* shaping applied to the
+//! - [`ThrottledWriter`] — *real-time* shaping applied to the
 //!   server's socket writes, so end-to-end runs experience the configured
 //!   MB/s on a real TCP connection.
 //!

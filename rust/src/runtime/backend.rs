@@ -1,0 +1,118 @@
+//! The pluggable execution-backend abstraction.
+//!
+//! The paper's pipeline needs an *executable runtime on every target
+//! device*: approximate models are inferred **mid-download**, so whatever
+//! executes the forward pass must accept a fresh flat weight vector at
+//! every transmission stage. This module decouples that execution engine
+//! from the rest of the system behind two small traits:
+//!
+//! - [`Backend`] — compiles a model description ([`ModelManifest`]) into an
+//!   executable form, once per model.
+//! - [`CompiledModel`] — executes the compiled forward pass, once per
+//!   stage, against the weights reconstructed so far.
+//!
+//! Two implementations ship with the crate:
+//!
+//! - [`reference::ReferenceBackend`](super::reference::ReferenceBackend) —
+//!   a dependency-free naive interpreter (matmul / conv / relu / softmax
+//!   over the dequantized tensors). Always available; the default.
+//! - `pjrt` (behind the `pjrt` cargo feature) — the XLA/PJRT CPU client
+//!   executing the AOT-lowered HLO artifacts built by `python/compile/`.
+//!
+//! Weight *loading* is deliberately per-execution rather than per-compile:
+//! progressive inference re-feeds the same compiled model with a new
+//! reconstruction after every stage (§III-C of the paper), so weights are
+//! an execute-time input, not a compile-time constant.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::models::ModelManifest;
+
+/// An inference execution engine that can compile models and run them.
+///
+/// Implementations must be cheap to share (`Send + Sync`); the process
+/// typically holds one backend instance behind an
+/// [`Engine`](super::Engine) handle and compiles every served model
+/// through it.
+pub trait Backend: Send + Sync {
+    /// Short stable identifier (`"reference"`, `"pjrt"`), used for CLI
+    /// selection and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Compile `manifest`'s forward pass.
+    ///
+    /// `batches` lists the batch sizes the caller intends to use; an empty
+    /// slice means "every batch size the model's artifacts provide".
+    /// Backends that are batch-size agnostic (the reference interpreter)
+    /// may ignore the hint. Compilation results are cached inside the
+    /// backend, keyed however the backend needs (artifact path, model
+    /// name), so repeated calls are cheap.
+    fn compile(
+        &self,
+        manifest: &ModelManifest,
+        batches: &[usize],
+    ) -> Result<Arc<dyn CompiledModel>>;
+
+    /// Number of distinct compilation cache entries currently held.
+    fn cached(&self) -> usize;
+}
+
+/// A model compiled by a [`Backend`], ready to execute.
+///
+/// All methods take the sample count `n` explicitly and return a flat
+/// `n * output_dim` vector; shape validation against the manifest happens
+/// in [`ModelSession`](super::ModelSession) before the call.
+pub trait CompiledModel: Send + Sync {
+    /// Run `n` samples through the float-weights forward path.
+    ///
+    /// `images` is `n * input_numel` floats, `weights` the flat f32
+    /// parameter vector (any progressive reconstruction — this is called
+    /// once per completed transmission stage with improving weights).
+    fn execute(&self, images: &[f32], n: usize, weights: &[f32]) -> Result<Vec<f32>>;
+
+    /// Fused quantized forward path: raw `k`-bit codes in, Eq. 5
+    /// dequantization inside the backend.
+    ///
+    /// `qflat` holds the bit-concatenated codes for all tensors,
+    /// `cum_bits` the cumulative received bit-width (sets the midpoint
+    /// correction for the not-yet-received low bits). Backends that have
+    /// no fused path report it via [`CompiledModel::supports_quantized`].
+    fn execute_quantized(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+    ) -> Result<Vec<f32>> {
+        let _ = (images, n, qflat, cum_bits);
+        bail!("this backend has no fused quantized execution path");
+    }
+
+    /// Whether [`CompiledModel::execute_quantized`] is implemented.
+    fn supports_quantized(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct NoQuant;
+
+    impl CompiledModel for NoQuant {
+        fn execute(&self, _images: &[f32], n: usize, _weights: &[f32]) -> Result<Vec<f32>> {
+            Ok(vec![0.0; n])
+        }
+    }
+
+    #[test]
+    fn quantized_default_is_unsupported() {
+        let m = NoQuant;
+        assert!(!m.supports_quantized());
+        assert!(m.execute_quantized(&[], 0, &[], 16).is_err());
+        assert_eq!(m.execute(&[], 2, &[]).unwrap().len(), 2);
+    }
+}

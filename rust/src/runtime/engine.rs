@@ -1,151 +1,114 @@
-//! PJRT CPU client wrapper with an HLO executable cache.
+//! Backend selection and the process-wide [`Engine`] handle.
 //!
-//! The `xla` crate's handles are raw pointers (`!Send`); PJRT's CPU client
-//! is internally synchronized, so we wrap everything in a `Mutex` and
-//! assert `Send + Sync` on the wrapper. All executions in this process
-//! share one client (one thread pool, one allocator).
+//! An [`Engine`] is a cheap-to-clone handle on one [`Backend`] instance.
+//! Which backend it wraps is decided once, in order of precedence:
+//!
+//! 1. an explicit constructor ([`Engine::reference`], `Engine::pjrt`),
+//! 2. [`Engine::named`] with a CLI-style name (`--backend reference`),
+//! 3. the `PROGNET_BACKEND` environment variable (`reference` | `pjrt`),
+//! 4. the default: the pure-Rust reference interpreter, which works
+//!    offline on any machine with no artifacts and no native deps.
+//!
+//! The `pjrt` backend is only present when the crate is built with the
+//! `pjrt` cargo feature; selecting it in a default build is an error, not
+//! a silent fallback.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-struct EngineInner {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, Arc<ExecutableInner>>,
-}
+use super::backend::{Backend, CompiledModel};
+use super::reference::ReferenceBackend;
+use crate::models::ModelManifest;
 
-// SAFETY: the PJRT CPU client is thread-safe for compile/execute; all
-// access to the raw handles is serialized through the Engine mutex.
-unsafe impl Send for EngineInner {}
-
-struct ExecutableInner {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-unsafe impl Send for ExecutableInner {}
-unsafe impl Sync for ExecutableInner {}
-
-/// Process-wide PJRT engine. Cheap to clone (shared internally).
+/// Process-wide execution engine handle. Cheap to clone (shared
+/// internally); compilation results are cached inside the backend.
 #[derive(Clone)]
 pub struct Engine {
-    inner: Arc<Mutex<EngineInner>>,
+    backend: Arc<dyn Backend>,
 }
 
 impl Engine {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        crate::log_debug!(
-            "PJRT client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
+    /// An engine over the pure-Rust reference interpreter (always
+    /// available, no artifacts required).
+    pub fn reference() -> Self {
+        Self {
+            backend: Arc::new(ReferenceBackend::new()),
+        }
+    }
+
+    /// An engine over the XLA/PJRT CPU client (requires the `pjrt`
+    /// cargo feature and the AOT HLO artifacts).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Self> {
         Ok(Self {
-            inner: Arc::new(Mutex::new(EngineInner {
-                client,
-                cache: HashMap::new(),
-            })),
+            backend: Arc::new(super::pjrt::PjrtBackend::cpu()?),
         })
     }
 
-    /// Shared process-wide engine (lazily created).
+    /// Build an engine from a backend name (`"reference"` or `"pjrt"`).
+    pub fn named(name: &str) -> Result<Self> {
+        match name {
+            "reference" => Ok(Self::reference()),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Self::pjrt(),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => anyhow::bail!(
+                "backend 'pjrt' is not compiled in; rebuild with `--features pjrt`"
+            ),
+            other => anyhow::bail!("unknown backend '{other}' (have: reference, pjrt)"),
+        }
+    }
+
+    /// Build an engine from `PROGNET_BACKEND`, defaulting to the
+    /// reference interpreter when unset.
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("PROGNET_BACKEND") {
+            Ok(name) => Self::named(name.trim()),
+            Err(_) => Ok(Self::reference()),
+        }
+    }
+
+    /// Shared process-wide engine (lazily created via [`Engine::from_env`]).
     pub fn global() -> Result<Engine> {
         static GLOBAL: std::sync::OnceLock<Engine> = std::sync::OnceLock::new();
         if let Some(e) = GLOBAL.get() {
             return Ok(e.clone());
         }
-        let e = Engine::cpu()?;
-        let _ = GLOBAL.set(e.clone());
-        Ok(e)
+        // Losing the set race must still hand back the winner's engine, or
+        // concurrent first callers would hold distinct backend caches.
+        let e = Engine::from_env()?;
+        Ok(GLOBAL.get_or_init(|| e).clone())
     }
 
-    /// Load + compile an HLO text file (cached by path).
-    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(exe) = inner.cache.get(path) {
-            return Ok(Executable {
-                inner: exe.clone(),
-                engine: self.inner.clone(),
-            });
-        }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = inner
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        crate::log_debug!(
-            "compiled {} in {:.2}s",
-            path.display(),
-            t0.elapsed().as_secs_f64()
-        );
-        let arc = Arc::new(ExecutableInner { exe });
-        inner.cache.insert(path.to_path_buf(), arc.clone());
-        Ok(Executable {
-            inner: arc,
-            engine: self.inner.clone(),
-        })
+    /// Name of the backend this engine wraps.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
-    /// Number of cached executables.
+    /// Compile a model through the backend; an empty `batches` slice means
+    /// "every batch size the artifacts provide" (see [`Backend::compile`]).
+    pub fn compile(
+        &self,
+        manifest: &ModelManifest,
+        batches: &[usize],
+    ) -> Result<Arc<dyn CompiledModel>> {
+        self.backend.compile(manifest, batches)
+    }
+
+    /// Number of compilation cache entries the backend currently holds.
     pub fn cached(&self) -> usize {
-        self.inner.lock().unwrap().cache.len()
+        self.backend.cached()
     }
 }
 
-/// A compiled computation bound to the engine.
-#[derive(Clone)]
-pub struct Executable {
-    inner: Arc<ExecutableInner>,
-    engine: Arc<Mutex<EngineInner>>,
-}
-
-impl Executable {
-    /// Execute with literal inputs; unwraps the 1-tuple output (aot.py
-    /// lowers with `return_tuple=True`) and returns the flat f32 vector.
-    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let lit = self.run_literal(inputs)?;
-        Ok(lit.to_vec::<f32>()?)
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("backend", &self.backend.name())
+            .field("cached", &self.backend.cached())
+            .finish()
     }
-
-    /// Execute and return the raw output literal (un-tupled).
-    pub fn run_literal(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        // Serialize access through the engine mutex: the CPU client is a
-        // single shared thread pool anyway (1-core testbed).
-        let _guard = self.engine.lock().unwrap();
-        let result = self.inner.exe.execute::<xla::Literal>(inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple1()?)
-    }
-}
-
-/// Build a rank-N f32 literal from a flat slice.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let numel: i64 = dims.iter().product();
-    anyhow::ensure!(
-        numel as usize == data.len(),
-        "literal shape {dims:?} wants {numel} elements, got {}",
-        data.len()
-    );
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-/// Build a rank-N u32 literal from a flat slice.
-pub fn literal_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
-    let numel: i64 = dims.iter().product();
-    anyhow::ensure!(
-        numel as usize == data.len(),
-        "literal shape {dims:?} wants {numel} elements, got {}",
-        data.len()
-    );
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
 }
 
 #[cfg(test)]
@@ -153,69 +116,32 @@ mod tests {
     use super::*;
 
     #[test]
-    fn kernel_smoke_artifact_runs() {
-        // artifacts/kernel_smoke.hlo.txt: f(q[2048] u32, scale, lo, half,
-        // x[8,64]) = x @ dequant(q).reshape(64, 32); Pallas dequant +
-        // Pallas matmul inside.
-        if !crate::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let engine = Engine::global().unwrap();
-        let exe = engine
-            .compile_hlo_text(&crate::artifacts_root().join("kernel_smoke.hlo.txt"))
-            .unwrap();
-
-        let q: Vec<u32> = (0..2048u32).map(|i| (i * 31) % 65536).collect();
-        let scale = 1.0f32 / 65536.0;
-        let lo = -0.5f32;
-        let half = 0.5f32;
-        let x: Vec<f32> = (0..8 * 64).map(|i| (i % 7) as f32 * 0.1).collect();
-
-        let out = exe
-            .run_f32(&[
-                literal_u32(&q, &[2048]).unwrap(),
-                literal_f32(&[scale], &[1]).unwrap(),
-                literal_f32(&[lo], &[1]).unwrap(),
-                literal_f32(&[half], &[1]).unwrap(),
-                literal_f32(&x, &[8, 64]).unwrap(),
-            ])
-            .unwrap();
-        assert_eq!(out.len(), 8 * 32);
-
-        // oracle: dequant + matmul in rust
-        let w: Vec<f32> = q.iter().map(|&v| (v as f32 + half) * scale + lo).collect();
-        for i in 0..8 {
-            for j in 0..32 {
-                let mut acc = 0f32;
-                for l in 0..64 {
-                    acc += x[i * 64 + l] * w[l * 32 + j];
-                }
-                let got = out[i * 32 + j];
-                assert!(
-                    (acc - got).abs() < 1e-3,
-                    "({i},{j}): {acc} vs {got}"
-                );
-            }
-        }
+    fn reference_engine_always_constructs() {
+        let e = Engine::reference();
+        assert_eq!(e.backend_name(), "reference");
+        assert_eq!(e.cached(), 0);
+        let clone = e.clone();
+        assert_eq!(clone.backend_name(), "reference");
     }
 
     #[test]
-    fn compile_cache_hits() {
-        if !crate::artifacts_available() {
-            return;
-        }
-        let engine = Engine::global().unwrap();
-        let path = crate::artifacts_root().join("kernel_smoke.hlo.txt");
-        let n0 = engine.cached();
-        let _a = engine.compile_hlo_text(&path).unwrap();
-        let _b = engine.compile_hlo_text(&path).unwrap();
-        assert!(engine.cached() >= 1 && engine.cached() <= n0 + 1);
+    fn named_selection() {
+        assert_eq!(Engine::named("reference").unwrap().backend_name(), "reference");
+        assert!(Engine::named("tpu-v9").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(Engine::named("pjrt").is_err());
     }
 
     #[test]
-    fn literal_shape_mismatch_rejected() {
-        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
-        assert!(literal_u32(&[1, 2, 3], &[2, 2]).is_err());
+    fn global_is_shared() {
+        let a = Engine::global().unwrap();
+        let b = Engine::global().unwrap();
+        assert_eq!(a.backend_name(), b.backend_name());
+        // both handles must wrap the same backend instance: a compile
+        // through one is visible in the other's cache counter
+        let reg = crate::testutil::fixture::executable_models("engine-global").unwrap();
+        let m = reg.get("dense3").unwrap();
+        a.compile(m, &[]).unwrap();
+        assert!(b.cached() >= 1, "global engines hold separate backends");
     }
 }

@@ -1,17 +1,37 @@
-//! PJRT runtime — loads the AOT HLO-text artifacts and executes them on
+//! Pluggable inference runtime — executes progressive reconstructions on
 //! the request path (python is never involved at runtime).
 //!
-//! - [`engine::Engine`] — process-wide PJRT CPU client + executable cache.
-//! - [`session::ModelSession`] — per-model staged execution: feeds images
-//!   plus a flat weight vector (or quantized planes for the fused-dequant
-//!   `qfwd` variant) into the compiled executable at the best batch size.
+//! The runtime is split into a small trait layer and interchangeable
+//! backends:
 //!
-//! Interchange is HLO **text**: jax ≥ 0.5 emits serialized protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! - [`Backend`] / [`CompiledModel`] — the compile / load-weights /
+//!   execute contract every execution engine implements.
+//! - [`ReferenceBackend`] — pure-Rust naive interpreter (matmul, conv,
+//!   relu, softmax over the dequantized tensors). Dependency-free, runs
+//!   offline on any target; the crate default.
+//! - `pjrt` (cargo feature `pjrt`) — the XLA/PJRT CPU client executing
+//!   AOT HLO-text artifacts; interchange is HLO **text** because jax
+//!   ≥ 0.5 emits serialized protos with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects — the text parser reassigns ids.
+//! - [`Engine`] — process-wide backend handle + selection
+//!   (`PROGNET_BACKEND`, `--backend`, or explicit constructors).
+//! - [`ModelSession`] — per-model staged execution: feeds images plus a
+//!   flat weight vector (or quantized planes for the fused-dequant path)
+//!   into the compiled model.
+//!
+//! Weights are an *execute-time* input on purpose: §III-C inference runs
+//! concurrently with the ongoing transmission, so every completed stage
+//! re-executes the same compiled model with an improved reconstruction.
 
+pub mod backend;
 pub mod engine;
+pub mod ops;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod session;
 
-pub use engine::{Engine, Executable};
+pub use backend::{Backend, CompiledModel};
+pub use engine::Engine;
+pub use reference::ReferenceBackend;
 pub use session::{InferOutput, ModelSession};

@@ -1,0 +1,224 @@
+//! Naive tensor primitives for the reference backend.
+//!
+//! Straightforward, allocation-light loops — the point is a correct,
+//! dependency-free executor on any device, not peak throughput. Layouts
+//! match the build-time JAX models (`python/compile/model.py`): activations
+//! are NHWC, convolution weights are HWIO `[3, 3, cin, cout]`, dense
+//! weights are `[cin, cout]`.
+
+// The convolution takes every dimension explicitly rather than a shape
+// struct — it mirrors the JAX op signature it reimplements.
+#![allow(clippy::too_many_arguments)]
+
+/// `y = x @ w + b` for one sample: `x` is `cin` floats, `w` is
+/// `[cin, cout]` row-major, `b` is `cout` floats (or empty for a bias-free
+/// layer). Writes `cout` floats into `out`.
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], cin: usize, cout: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), cin);
+    debug_assert_eq!(w.len(), cin * cout);
+    debug_assert_eq!(out.len(), cout);
+    if b.is_empty() {
+        out.fill(0.0);
+    } else {
+        out.copy_from_slice(b);
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * cout..(i + 1) * cout];
+        for (o, &wij) in out.iter_mut().zip(row) {
+            *o += xi * wij;
+        }
+    }
+}
+
+/// 3×3 SAME convolution over one NHWC sample with fused bias + ReLU.
+///
+/// `x` is `[h, w, cin]`, `wgt` is HWIO `[3, 3, cin, cout]`, `b` is `cout`
+/// floats; writes `[h, w, cout]` into `out`. Mirrors the JAX
+/// `conv_general_dilated(..., "SAME") + relu(x + b)` block.
+pub fn conv3x3_same_bias_relu(
+    x: &[f32],
+    wgt: &[f32],
+    b: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), h * w * cin);
+    debug_assert_eq!(wgt.len(), 9 * cin * cout);
+    debug_assert_eq!(b.len(), cout);
+    debug_assert_eq!(out.len(), h * w * cout);
+    for oy in 0..h {
+        for ox in 0..w {
+            let acc = &mut out[(oy * w + ox) * cout..(oy * w + ox + 1) * cout];
+            acc.copy_from_slice(b);
+            for ky in 0..3usize {
+                let iy = oy as isize + ky as isize - 1;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3usize {
+                    let ix = ox as isize + kx as isize - 1;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let px = &x[((iy as usize) * w + ix as usize) * cin..][..cin];
+                    let wk = &wgt[(ky * 3 + kx) * cin * cout..][..cin * cout];
+                    for (ci, &xv) in px.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wk[ci * cout..(ci + 1) * cout];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            for a in acc.iter_mut() {
+                if *a < 0.0 {
+                    *a = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 max-pool, stride 2, VALID padding over one NHWC sample.
+///
+/// `x` is `[h, w, c]`; writes `[h/2, w/2, c]` into `out` (`h`, `w` even in
+/// every supported architecture; a ragged last row/column is dropped,
+/// matching VALID semantics).
+pub fn maxpool2x2(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    let oh = h / 2;
+    let ow = w / 2;
+    debug_assert_eq!(x.len(), h * w * c);
+    debug_assert_eq!(out.len(), oh * ow * c);
+    for py in 0..oh {
+        for px in 0..ow {
+            for ci in 0..c {
+                let at = |y: usize, x_: usize| x[(y * w + x_) * c + ci];
+                let m = at(2 * py, 2 * px)
+                    .max(at(2 * py, 2 * px + 1))
+                    .max(at(2 * py + 1, 2 * px))
+                    .max(at(2 * py + 1, 2 * px + 1));
+                out[(py * ow + px) * c + ci] = m;
+            }
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Numerically stable in-place softmax over one row.
+pub fn softmax(row: &mut [f32]) {
+    if row.is_empty() {
+        return;
+    }
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_manual() {
+        // x [2], w [2,3], b [3]
+        let x = [1.0, 2.0];
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.5, -0.5, 0.0];
+        let mut out = [0.0; 3];
+        dense(&x, &w, &b, 2, 3, &mut out);
+        assert_eq!(out, [1.0 + 8.0 + 0.5, 2.0 + 10.0 - 0.5, 3.0 + 12.0]);
+    }
+
+    #[test]
+    fn dense_without_bias() {
+        let x = [2.0];
+        let w = [3.0, -1.0];
+        let mut out = [9.9; 2];
+        dense(&x, &w, &[], 1, 2, &mut out);
+        assert_eq!(out, [6.0, -2.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel_is_relu_passthrough() {
+        // 1-channel 4x4 input, kernel = 1 at center, bias 0 → relu(x)
+        let h = 4;
+        let w = 4;
+        let x: Vec<f32> = (0..16).map(|i| i as f32 - 7.5).collect();
+        let mut wgt = vec![0.0f32; 9];
+        wgt[4] = 1.0; // center tap (ky=1, kx=1)
+        let mut out = vec![0.0f32; 16];
+        conv3x3_same_bias_relu(&x, &wgt, &[0.0], h, w, 1, 1, &mut out);
+        for (o, &xi) in out.iter().zip(&x) {
+            assert_eq!(*o, xi.max(0.0));
+        }
+    }
+
+    #[test]
+    fn conv_same_padding_sums_neighbourhood() {
+        // all-ones 3x3 kernel over an all-ones 3x3 input counts the valid
+        // neighbours: corners 4, edges 6, center 9.
+        let x = vec![1.0f32; 9];
+        let wgt = vec![1.0f32; 9];
+        let mut out = vec![0.0f32; 9];
+        conv3x3_same_bias_relu(&x, &wgt, &[0.0], 3, 3, 1, 1, &mut out);
+        assert_eq!(out, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        // 2x2x1 windows over 4x2 input
+        let x = vec![1.0, 5.0, 2.0, 0.0, -3.0, -1.0, -2.0, -9.0];
+        let mut out = vec![0.0; 2];
+        maxpool2x2(&x, 4, 2, 1, &mut out);
+        assert_eq!(out, vec![5.0, -1.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut row = [1.0f32, 2.0, 3.0];
+        softmax(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+        // stability: huge logits must not overflow
+        let mut big = [1000.0f32, 1000.0];
+        softmax(&mut big);
+        assert!((big[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_range_and_symmetry() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        assert!(sigmoid(10.0) > 0.999);
+        assert!(sigmoid(-10.0) < 0.001);
+        assert!((sigmoid(1.3) + sigmoid(-1.3) - 1.0).abs() < 1e-6);
+    }
+}

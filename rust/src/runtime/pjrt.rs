@@ -1,0 +1,315 @@
+//! The XLA/PJRT backend (cargo feature `pjrt`).
+//!
+//! Wraps the `xla` crate's PJRT CPU client behind the [`Backend`] trait:
+//! models are executed from the AOT HLO-text artifacts built by
+//! `python/compile/` (jax ≥ 0.5 emits serialized protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids).
+//!
+//! The `xla` crate's handles are raw pointers (`!Send`); PJRT's CPU
+//! client is internally synchronized, so everything is wrapped in a
+//! `Mutex` and `Send + Sync` is asserted on the wrapper. All executions
+//! in this process share one client (one thread pool, one allocator).
+//!
+//! Offline builds compile this module against the API-compatible stub
+//! crate vendored at `rust/pjrt-stub/`; see `rust/README.md` for pointing
+//! the dependency at a real `xla` checkout instead.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Backend, CompiledModel};
+use crate::models::ModelManifest;
+use crate::quant::{half_correction, QuantParams};
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Arc<ExecutableInner>>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compile/execute; all
+// access to the raw handles is serialized through the backend mutex.
+unsafe impl Send for EngineInner {}
+
+struct ExecutableInner {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for ExecutableInner {}
+unsafe impl Sync for ExecutableInner {}
+
+/// The PJRT execution backend: one shared CPU client plus an HLO
+/// executable cache keyed by artifact path.
+pub struct PjrtBackend {
+    inner: Arc<Mutex<EngineInner>>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self {
+            inner: Arc::new(Mutex::new(EngineInner {
+                client,
+                cache: HashMap::new(),
+            })),
+        })
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(exe) = inner.cache.get(path) {
+            return Ok(Executable {
+                inner: exe.clone(),
+                engine: self.inner.clone(),
+            });
+        }
+        let t0 = Instant::now();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 artifact path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        crate::log_debug!(
+            "compiled {} in {:.2}s",
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+        let arc = Arc::new(ExecutableInner { exe });
+        inner.cache.insert(path.to_path_buf(), arc.clone());
+        Ok(Executable {
+            inner: arc,
+            engine: self.inner.clone(),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(
+        &self,
+        manifest: &ModelManifest,
+        batches: &[usize],
+    ) -> Result<Arc<dyn CompiledModel>> {
+        let mut fwd = BTreeMap::new();
+        let mut qfwd = BTreeMap::new();
+        if batches.is_empty() {
+            // every artifact the manifest provides
+            for (key, _) in manifest.hlo.clone() {
+                if let Some(b) = key.strip_prefix("fwd_b").and_then(|s| s.parse::<usize>().ok()) {
+                    fwd.insert(b, self.compile_hlo_text(&manifest.hlo_path(&key)?)?);
+                } else if let Some(b) = key
+                    .strip_prefix("qfwd_b")
+                    .and_then(|s| s.parse::<usize>().ok())
+                {
+                    qfwd.insert(b, self.compile_hlo_text(&manifest.hlo_path(&key)?)?);
+                }
+            }
+        } else {
+            for &b in batches {
+                let key = format!("fwd_b{b}");
+                fwd.insert(b, self.compile_hlo_text(&manifest.hlo_path(&key)?)?);
+            }
+        }
+        if fwd.is_empty() {
+            bail!("{}: no fwd artifacts", manifest.name);
+        }
+        Ok(Arc::new(PjrtModel {
+            manifest: manifest.clone(),
+            fwd,
+            qfwd,
+        }))
+    }
+
+    fn cached(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+}
+
+/// A compiled computation bound to the backend's client.
+#[derive(Clone)]
+struct Executable {
+    inner: Arc<ExecutableInner>,
+    engine: Arc<Mutex<EngineInner>>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the 1-tuple output (aot.py
+    /// lowers with `return_tuple=True`) and returns the flat f32 vector.
+    fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        // Serialize access through the engine mutex: the CPU client is a
+        // single shared thread pool anyway (1-core testbed).
+        let _guard = self.engine.lock().unwrap();
+        let result = self.inner.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let lit = lit.to_tuple1()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}
+
+/// Build a rank-N f32 literal from a flat slice.
+fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "literal shape {dims:?} wants {numel} elements, got {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a rank-N u32 literal from a flat slice.
+fn literal_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "literal shape {dims:?} wants {numel} elements, got {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// A model bound to compiled executables.
+///
+/// `fwd` variants take `(x, flat_weights)`; execution picks the largest
+/// compiled batch ≤ n and loops/pads. The `qfwd` variant runs the L1
+/// Pallas dequant kernel inside the executable.
+struct PjrtModel {
+    manifest: ModelManifest,
+    fwd: BTreeMap<usize, Executable>,
+    qfwd: BTreeMap<usize, Executable>,
+}
+
+impl PjrtModel {
+    fn input_dims(&self, batch: usize) -> Vec<i64> {
+        let mut dims = vec![batch as i64];
+        dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+        dims
+    }
+
+    /// Pick the executable batch for `n` samples: the largest compiled
+    /// batch ≤ n, or the smallest one if n is below all of them.
+    fn pick_batch(map: &BTreeMap<usize, Executable>, n: usize) -> usize {
+        let mut best = None;
+        for &b in map.keys() {
+            if b <= n {
+                best = Some(b);
+            }
+        }
+        best.unwrap_or_else(|| *map.keys().next().unwrap())
+    }
+}
+
+impl CompiledModel for PjrtModel {
+    fn execute(&self, images: &[f32], n: usize, weights: &[f32]) -> Result<Vec<f32>> {
+        let ind = self.manifest.input_numel();
+        let dim = self.manifest.output_dim();
+        let mut out = Vec::with_capacity(n * dim);
+        let mut done = 0;
+        // weights literal is reusable across chunks of the same batch
+        let mut wlit_cache: Option<xla::Literal> = None;
+        let mut cached_batch = usize::MAX;
+        while done < n {
+            let batch = Self::pick_batch(&self.fwd, n - done);
+            let exe = &self.fwd[&batch];
+            let take = batch.min(n - done);
+            let mut chunk = vec![0f32; batch * ind];
+            chunk[..take * ind].copy_from_slice(&images[done * ind..(done + take) * ind]);
+            let xlit = literal_f32(&chunk, &self.input_dims(batch))?;
+            if cached_batch != batch || wlit_cache.is_none() {
+                wlit_cache = Some(literal_f32(weights, &[weights.len() as i64])?);
+                cached_batch = batch;
+            }
+            let res = exe.run_f32(&[xlit, wlit_cache.clone().unwrap()])?;
+            anyhow::ensure!(res.len() == batch * dim, "unexpected output size");
+            out.extend_from_slice(&res[..take * dim]);
+            done += take;
+        }
+        Ok(out)
+    }
+
+    fn execute_quantized(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+    ) -> Result<Vec<f32>> {
+        if self.qfwd.is_empty() {
+            bail!("{}: no qfwd artifacts compiled", self.manifest.name);
+        }
+        let ind = self.manifest.input_numel();
+        anyhow::ensure!(qflat.len() == self.manifest.param_count, "qflat size mismatch");
+        let k = self.manifest.k;
+        let scales: Vec<f32> = self
+            .manifest
+            .tensors
+            .iter()
+            .map(|t| {
+                QuantParams {
+                    min: t.min,
+                    max: t.max,
+                    k,
+                }
+                .dequant_scale()
+            })
+            .collect();
+        let los: Vec<f32> = self.manifest.tensors.iter().map(|t| t.min).collect();
+        let half = [half_correction(k, cum_bits)];
+        let dim = self.manifest.output_dim();
+        let mut out = Vec::with_capacity(n * dim);
+        let mut done = 0;
+        while done < n {
+            let batch = Self::pick_batch(&self.qfwd, n - done);
+            let exe = &self.qfwd[&batch];
+            let take = batch.min(n - done);
+            let mut chunk = vec![0f32; batch * ind];
+            chunk[..take * ind].copy_from_slice(&images[done * ind..(done + take) * ind]);
+            let res = exe.run_f32(&[
+                literal_f32(&chunk, &self.input_dims(batch))?,
+                literal_u32(qflat, &[qflat.len() as i64])?,
+                literal_f32(&scales, &[scales.len() as i64])?,
+                literal_f32(&los, &[los.len() as i64])?,
+                literal_f32(&half, &[1])?,
+            ])?;
+            anyhow::ensure!(res.len() == batch * dim, "unexpected output size");
+            out.extend_from_slice(&res[..take * dim]);
+            done += take;
+        }
+        Ok(out)
+    }
+
+    fn supports_quantized(&self) -> bool {
+        !self.qfwd.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        // the numel validation fires before any PJRT API is touched, so
+        // this runs (and must keep passing) against the offline stub too
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_u32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,494 @@
+//! The pure-Rust reference backend: a naive interpreter over the
+//! dequantized tensors.
+//!
+//! The backend derives the layer graph from the manifest's tensor list —
+//! the same convention `python/compile/model.py` uses to build every
+//! architecture in the zoo:
+//!
+//! - a rank-4 weight `[3, 3, cin, cout]` followed by a rank-1 bias is a
+//!   conv block (3×3 SAME convolution + bias + ReLU + 2×2 max-pool),
+//! - a rank-2 weight `[cin, cout]` (optionally followed by its rank-1
+//!   bias) is a dense layer — ReLU after every dense layer except the
+//!   final head,
+//! - for detection models the 4 box outputs after the class logits pass
+//!   through a sigmoid, exactly like the JAX head.
+//!
+//! This executes anywhere `rustc` targets — no XLA, no artifacts — which
+//! is what makes mid-download inference testable offline end to end. It
+//! is a correctness baseline, not a speed demon; the feature-gated `pjrt`
+//! backend exists for compiled execution.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Backend, CompiledModel};
+use super::ops;
+use crate::models::{ModelManifest, TensorInfo};
+use crate::quant::{dequantize_into, DequantParams};
+
+/// A contiguous slice of the flat weight vector.
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    offset: usize,
+    len: usize,
+}
+
+impl Seg {
+    fn of<'a>(&self, flat: &'a [f32]) -> &'a [f32] {
+        &flat[self.offset..self.offset + self.len]
+    }
+}
+
+/// One interpreted layer.
+#[derive(Debug, Clone)]
+enum Layer {
+    /// 3×3 SAME conv + bias + ReLU + 2×2 max-pool on an NHWC activation.
+    ConvBlock {
+        w: Seg,
+        b: Seg,
+        h: usize,
+        wd: usize,
+        cin: usize,
+        cout: usize,
+    },
+    /// `x @ w (+ b)`, ReLU unless this is the output head.
+    Dense {
+        w: Seg,
+        b: Option<Seg>,
+        cin: usize,
+        cout: usize,
+        relu: bool,
+    },
+}
+
+/// Activation shape while walking the tensor list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Act {
+    Spatial { h: usize, w: usize, c: usize },
+    Flat(usize),
+}
+
+impl Act {
+    fn numel(self) -> usize {
+        match self {
+            Act::Spatial { h, w, c } => h * w * c,
+            Act::Flat(n) => n,
+        }
+    }
+}
+
+/// The compiled (planned) form of a model for the interpreter.
+struct RefModel {
+    layers: Vec<Layer>,
+    input_numel: usize,
+    output_dim: usize,
+    /// sigmoid over columns `classes..output_dim` of the head (detection)
+    sigmoid_from: Option<usize>,
+    /// per-tensor metadata for the fused quantized path (Eq. 5 inside
+    /// the backend)
+    tensors: Vec<TensorInfo>,
+    k: u32,
+    param_count: usize,
+}
+
+/// Build the layer plan from a manifest, validating that tensor shapes
+/// chain into a well-formed forward pass.
+fn plan(manifest: &ModelManifest) -> Result<RefModel> {
+    let mut act = match manifest.input_shape.len() {
+        3 => Act::Spatial {
+            h: manifest.input_shape[0],
+            w: manifest.input_shape[1],
+            c: manifest.input_shape[2],
+        },
+        _ => Act::Flat(manifest.input_shape.iter().product()),
+    };
+    let input_numel = act.numel();
+    let mut layers = Vec::new();
+    let ts = &manifest.tensors;
+    let mut i = 0;
+    while i < ts.len() {
+        let t = &ts[i];
+        let seg = |t: &TensorInfo| Seg {
+            offset: t.offset,
+            len: t.numel,
+        };
+        match t.shape.len() {
+            4 => {
+                if t.shape[0] != 3 || t.shape[1] != 3 {
+                    bail!(
+                        "{}: tensor '{}' has kernel {:?}; only 3x3 convs are supported",
+                        manifest.name,
+                        t.name,
+                        &t.shape[..2]
+                    );
+                }
+                let (cin, cout) = (t.shape[2], t.shape[3]);
+                let Act::Spatial { h, w, c } = act else {
+                    bail!(
+                        "{}: conv tensor '{}' on a non-spatial activation",
+                        manifest.name,
+                        t.name
+                    );
+                };
+                if c != cin {
+                    bail!(
+                        "{}: conv '{}' expects {cin} input channels, activation has {c}",
+                        manifest.name,
+                        t.name
+                    );
+                }
+                let b = ts
+                    .get(i + 1)
+                    .filter(|b| b.shape.len() == 1 && b.numel == cout)
+                    .with_context(|| {
+                        format!("{}: conv '{}' is missing its bias", manifest.name, t.name)
+                    })?;
+                layers.push(Layer::ConvBlock {
+                    w: seg(t),
+                    b: seg(b),
+                    h,
+                    wd: w,
+                    cin,
+                    cout,
+                });
+                act = Act::Spatial {
+                    h: h / 2,
+                    w: w / 2,
+                    c: cout,
+                };
+                i += 2;
+            }
+            2 => {
+                let (cin, cout) = (t.shape[0], t.shape[1]);
+                // a dense layer flattens a spatial activation (NHWC
+                // row-major, matching `reshape(B, -1)` in the JAX models)
+                if act.numel() != cin {
+                    bail!(
+                        "{}: dense '{}' expects {cin} inputs, activation has {}",
+                        manifest.name,
+                        t.name,
+                        act.numel()
+                    );
+                }
+                let b = ts
+                    .get(i + 1)
+                    .filter(|b| b.shape.len() == 1 && b.numel == cout)
+                    .map(seg);
+                i += if b.is_some() { 2 } else { 1 };
+                layers.push(Layer::Dense {
+                    w: seg(t),
+                    b,
+                    cin,
+                    cout,
+                    relu: true, // fixed up below for the head
+                });
+                act = Act::Flat(cout);
+            }
+            _ => bail!(
+                "{}: tensor '{}' has unsupported rank {}",
+                manifest.name,
+                t.name,
+                t.shape.len()
+            ),
+        }
+    }
+    let Some(Layer::Dense { relu, cout, .. }) = layers.last_mut() else {
+        bail!("{}: model must end in a dense head", manifest.name);
+    };
+    *relu = false;
+    let output_dim = *cout;
+    if output_dim != manifest.output_dim() {
+        bail!(
+            "{}: head produces {output_dim} values, manifest says {}",
+            manifest.name,
+            manifest.output_dim()
+        );
+    }
+    Ok(RefModel {
+        layers,
+        input_numel,
+        output_dim,
+        sigmoid_from: (manifest.task == "detect").then_some(manifest.classes),
+        tensors: manifest.tensors.clone(),
+        k: manifest.k,
+        param_count: manifest.param_count,
+    })
+}
+
+impl RefModel {
+    /// Run one sample through the plan; returns `output_dim` floats.
+    fn forward_one(&self, image: &[f32], weights: &[f32]) -> Vec<f32> {
+        let mut act: Vec<f32> = image.to_vec();
+        for layer in &self.layers {
+            match layer {
+                Layer::ConvBlock {
+                    w,
+                    b,
+                    h,
+                    wd,
+                    cin,
+                    cout,
+                } => {
+                    let mut conv = vec![0f32; h * wd * cout];
+                    ops::conv3x3_same_bias_relu(
+                        &act,
+                        w.of(weights),
+                        b.of(weights),
+                        *h,
+                        *wd,
+                        *cin,
+                        *cout,
+                        &mut conv,
+                    );
+                    let (oh, ow) = (h / 2, wd / 2);
+                    let mut pooled = vec![0f32; oh * ow * cout];
+                    ops::maxpool2x2(&conv, *h, *wd, *cout, &mut pooled);
+                    act = pooled;
+                }
+                Layer::Dense {
+                    w,
+                    b,
+                    cin,
+                    cout,
+                    relu,
+                } => {
+                    let bias = b.map(|s| s.of(weights)).unwrap_or(&[]);
+                    let mut out = vec![0f32; *cout];
+                    ops::dense(&act, w.of(weights), bias, *cin, *cout, &mut out);
+                    if *relu {
+                        ops::relu(&mut out);
+                    }
+                    act = out;
+                }
+            }
+        }
+        if let Some(from) = self.sigmoid_from {
+            for v in &mut act[from..] {
+                *v = ops::sigmoid(*v);
+            }
+        }
+        act
+    }
+}
+
+impl CompiledModel for RefModel {
+    fn execute(&self, images: &[f32], n: usize, weights: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n * self.output_dim);
+        for i in 0..n {
+            let image = &images[i * self.input_numel..(i + 1) * self.input_numel];
+            out.extend_from_slice(&self.forward_one(image, weights));
+        }
+        Ok(out)
+    }
+
+    fn execute_quantized(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(qflat.len() == self.param_count, "qflat size mismatch");
+        // Eq. 5 per tensor, then the plain float path — semantically the
+        // same fusion the PJRT qfwd executable performs in-kernel.
+        let mut weights = vec![0f32; self.param_count];
+        for t in &self.tensors {
+            let qp = crate::quant::QuantParams {
+                min: t.min,
+                max: t.max,
+                k: self.k,
+            };
+            dequantize_into(
+                &qflat[t.offset..t.offset + t.numel],
+                DequantParams::new(&qp, cum_bits),
+                &mut weights[t.offset..t.offset + t.numel],
+            );
+        }
+        self.execute(images, n, &weights)
+    }
+
+    fn supports_quantized(&self) -> bool {
+        true
+    }
+}
+
+/// The dependency-free interpreter backend (the crate default).
+///
+/// Compilation is a shape-checked layer-plan derivation from the
+/// manifest. Plans are cached by model name; each entry carries a
+/// fingerprint of the manifest contents and is *replaced* on mismatch, so
+/// a model re-published under the same name with different tensors (new
+/// shapes or re-quantized min/max) never reuses a stale plan, and
+/// superseded plans don't accumulate.
+#[derive(Default)]
+pub struct ReferenceBackend {
+    cache: Mutex<HashMap<String, (u64, Arc<RefModel>)>>,
+}
+
+impl ReferenceBackend {
+    /// Create an empty backend (no global state, cheap).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Hash of everything the layer plan depends on.
+fn fingerprint(manifest: &ModelManifest) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    manifest.task.hash(&mut h);
+    manifest.classes.hash(&mut h);
+    manifest.input_shape.hash(&mut h);
+    manifest.param_count.hash(&mut h);
+    manifest.k.hash(&mut h);
+    for t in &manifest.tensors {
+        t.name.hash(&mut h);
+        t.shape.hash(&mut h);
+        t.offset.hash(&mut h);
+        t.min.to_bits().hash(&mut h);
+        t.max.to_bits().hash(&mut h);
+    }
+    h.finish()
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn compile(
+        &self,
+        manifest: &ModelManifest,
+        _batches: &[usize],
+    ) -> Result<Arc<dyn CompiledModel>> {
+        let fp = fingerprint(manifest);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some((cached_fp, m)) = cache.get(&manifest.name) {
+            if *cached_fp == fp {
+                let shared: Arc<dyn CompiledModel> = m.clone();
+                return Ok(shared);
+            }
+        }
+        let model = Arc::new(plan(manifest)?);
+        cache.insert(manifest.name.clone(), (fp, model.clone()));
+        Ok(model)
+    }
+
+    fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+    use crate::testutil::fixture;
+
+    fn dense_registry(tag: &str) -> Registry {
+        fixture::executable_models(tag).unwrap()
+    }
+
+    #[test]
+    fn plan_builds_for_dense_chain() {
+        let reg = dense_registry("ref-plan");
+        let m = reg.get("dense3").unwrap();
+        let backend = ReferenceBackend::new();
+        let compiled = backend.compile(m, &[]).unwrap();
+        assert!(compiled.supports_quantized());
+        assert_eq!(backend.cached(), 1);
+        // cache hit
+        backend.compile(m, &[]).unwrap();
+        assert_eq!(backend.cached(), 1);
+    }
+
+    #[test]
+    fn republish_replaces_stale_plan() {
+        let reg = dense_registry("ref-republish");
+        let m = reg.get("dense3").unwrap();
+        let backend = ReferenceBackend::new();
+        backend.compile(m, &[]).unwrap();
+        assert_eq!(backend.cached(), 1);
+        // re-published under the same name with re-quantized weights:
+        // the stale plan must be replaced, not reused and not leaked
+        let mut m2 = m.clone();
+        m2.tensors[0].min -= 0.5;
+        backend.compile(&m2, &[]).unwrap();
+        assert_eq!(backend.cached(), 1);
+        // and dequant params in the new plan reflect the new manifest
+        let fresh = backend.compile(&m2, &[]).unwrap();
+        assert!(fresh.supports_quantized());
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        // input 2 → dense(2,2) relu → dense(2,2) head, all weights known
+        let dir = fixture::fixture_root("ref-hand");
+        let _ = std::fs::remove_dir_all(&dir);
+        let models = dir.join("models");
+        std::fs::create_dir_all(&models).unwrap();
+        // w1 = [[1, -1], [2, 0]], b1 = [0, 1], w2 = [[1, 0], [1, 1]], b2 = [0, 0]
+        let flat = [1.0, -1.0, 2.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 0.0];
+        fixture::write_model_with_weights(
+            &models,
+            "hand",
+            &[
+                ("fc1.w", &[2usize, 2][..]),
+                ("fc1.b", &[2][..]),
+                ("fc2.w", &[2, 2][..]),
+                ("fc2.b", &[2][..]),
+            ],
+            &flat,
+        )
+        .unwrap();
+        fixture::write_index(&models, &["hand"]).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let m = reg.get("hand").unwrap();
+        let backend = ReferenceBackend::new();
+        let compiled = backend.compile(m, &[]).unwrap();
+        // x = [1, 2]: h = relu([1*1+2*2, 1*-1+2*0] + [0,1]) = relu([5, 0]) = [5, 0]
+        // y = [5*1+0*1, 5*0+0*1] + [0,0] = [5, 0]
+        let out = compiled.execute(&[1.0, 2.0], 1, &flat).unwrap();
+        assert_eq!(out, vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn quantized_path_converges_to_float_path() {
+        use crate::quant::{quantize, QuantParams, K};
+        let reg = dense_registry("ref-quant");
+        let m = reg.get("dense3").unwrap();
+        let flat = m.load_weights().unwrap();
+        let backend = ReferenceBackend::new();
+        let compiled = backend.compile(m, &[]).unwrap();
+        let image: Vec<f32> = (0..m.input_numel()).map(|i| (i % 5) as f32 * 0.2).collect();
+        let full = compiled.execute(&image, 1, &flat).unwrap();
+
+        let mut qflat = vec![0u32; flat.len()];
+        for t in &m.tensors {
+            let seg = &flat[t.offset..t.offset + t.numel];
+            let qp = QuantParams::from_data(seg, K);
+            qflat[t.offset..t.offset + t.numel].copy_from_slice(&quantize(seg, &qp));
+        }
+        let q16 = compiled.execute_quantized(&image, 1, &qflat, K).unwrap();
+        for (a, b) in full.iter().zip(&q16) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mismatched_shapes_rejected() {
+        let dir = fixture::fixture_root("ref-bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        let models = dir.join("models");
+        std::fs::create_dir_all(&models).unwrap();
+        // dense expects 4 inputs but input_shape will be [3] (first dim)
+        fixture::write_model(&models, "bad", &[("w", &[3usize, 4][..]), ("w2", &[5, 2][..])], 7)
+            .unwrap();
+        fixture::write_index(&models, &["bad"]).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let m = reg.get("bad").unwrap();
+        assert!(ReferenceBackend::new().compile(m, &[]).is_err());
+    }
+}

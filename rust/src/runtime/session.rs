@@ -1,25 +1,37 @@
-//! Per-model execution session: batching, padding, fwd/qfwd staging.
+//! Per-model execution session: manifest-level validation in front of a
+//! backend-compiled model.
+//!
+//! A [`ModelSession`] binds one [`ModelManifest`] to one
+//! [`CompiledModel`](super::CompiledModel) and is what every consumer —
+//! the progressive client, the coordinator's batcher, the eval harness —
+//! holds to run inference. The session validates buffer sizes against the
+//! manifest; batching/padding strategy is the backend's business.
 
-use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use super::engine::{literal_f32, literal_u32, Engine, Executable};
+use super::backend::CompiledModel;
+use super::engine::Engine;
+use super::ops;
 use crate::models::ModelManifest;
-use crate::quant::{half_correction, QuantParams};
 
 /// Inference output: `dim` values per sample.
 #[derive(Debug, Clone)]
 pub struct InferOutput {
+    /// `n * dim` values, row-major.
     pub data: Vec<f32>,
+    /// Values per sample (classes, +4 box coordinates for detection).
     pub dim: usize,
 }
 
 impl InferOutput {
+    /// Number of samples in this output.
     pub fn n(&self) -> usize {
         self.data.len() / self.dim
     }
 
+    /// The `i`-th sample's output row.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
@@ -33,84 +45,56 @@ impl InferOutput {
             .map(|(j, _)| j)
             .unwrap()
     }
+
+    /// Softmax over the first `classes` logits of row `i` — class
+    /// probabilities of one sample.
+    pub fn probabilities(&self, i: usize, classes: usize) -> Vec<f32> {
+        let mut p = self.row(i)[..classes].to_vec();
+        ops::softmax(&mut p);
+        p
+    }
 }
 
-/// A model bound to compiled executables.
-///
-/// `fwd` variants take `(x, flat_weights)`; the [`ModelSession::infer`]
-/// call picks the largest compiled batch ≤ n and loops/pads. The `qfwd`
-/// variant runs the L1 Pallas dequant kernel inside the executable.
+/// A model compiled by the engine's backend, ready for per-stage
+/// inference.
 pub struct ModelSession {
     manifest: ModelManifest,
-    fwd: BTreeMap<usize, Executable>,
-    qfwd: BTreeMap<usize, Executable>,
+    model: Arc<dyn CompiledModel>,
 }
 
 impl ModelSession {
-    /// Compile the model's fwd executables (and qfwd if present).
+    /// Compile every executable variant the model's artifacts provide
+    /// (backends without artifacts, like the reference interpreter,
+    /// derive the graph from the manifest instead).
     pub fn load(engine: &Engine, manifest: &ModelManifest) -> Result<Self> {
-        let mut fwd = BTreeMap::new();
-        let mut qfwd = BTreeMap::new();
-        for (key, _) in manifest.hlo.clone() {
-            if let Some(b) = key.strip_prefix("fwd_b").and_then(|s| s.parse::<usize>().ok()) {
-                fwd.insert(b, engine.compile_hlo_text(&manifest.hlo_path(&key)?)?);
-            } else if let Some(b) = key
-                .strip_prefix("qfwd_b")
-                .and_then(|s| s.parse::<usize>().ok())
-            {
-                qfwd.insert(b, engine.compile_hlo_text(&manifest.hlo_path(&key)?)?);
-            }
-        }
-        if fwd.is_empty() {
-            bail!("{}: no fwd artifacts", manifest.name);
-        }
         Ok(Self {
             manifest: manifest.clone(),
-            fwd,
-            qfwd,
+            model: engine.compile(manifest, &[])?,
         })
     }
 
-    /// Load only specific batch sizes (faster startup for demos).
-    pub fn load_batches(engine: &Engine, manifest: &ModelManifest, batches: &[usize]) -> Result<Self> {
-        let mut fwd = BTreeMap::new();
-        for &b in batches {
-            let key = format!("fwd_b{b}");
-            fwd.insert(b, engine.compile_hlo_text(&manifest.hlo_path(&key)?)?);
-        }
+    /// Compile only specific batch sizes (faster startup for demos on
+    /// artifact-compiling backends; a no-op hint for the interpreter).
+    pub fn load_batches(
+        engine: &Engine,
+        manifest: &ModelManifest,
+        batches: &[usize],
+    ) -> Result<Self> {
         Ok(Self {
             manifest: manifest.clone(),
-            fwd,
-            qfwd: BTreeMap::new(),
+            model: engine.compile(manifest, batches)?,
         })
     }
 
+    /// The manifest this session was compiled from.
     pub fn manifest(&self) -> &ModelManifest {
         &self.manifest
-    }
-
-    fn input_dims(&self, batch: usize) -> Vec<i64> {
-        let mut dims = vec![batch as i64];
-        dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
-        dims
-    }
-
-    /// Pick the executable batch for `n` samples: the largest compiled
-    /// batch ≤ n, or the smallest one if n is below all of them.
-    fn pick_batch(map: &BTreeMap<usize, Executable>, n: usize) -> usize {
-        let mut best = None;
-        for &b in map.keys() {
-            if b <= n {
-                best = Some(b);
-            }
-        }
-        best.unwrap_or_else(|| *map.keys().next().unwrap())
     }
 
     /// Run `n` samples through the float-weights forward path.
     ///
     /// `images` is `n * input_numel` floats; `weights` the flat vector
-    /// (any progressive reconstruction). Handles batching + padding.
+    /// (any progressive reconstruction).
     pub fn infer(&self, images: &[f32], n: usize, weights: &[f32]) -> Result<InferOutput> {
         let ind = self.manifest.input_numel();
         anyhow::ensure!(images.len() == n * ind, "image buffer size mismatch");
@@ -119,32 +103,14 @@ impl ModelSession {
             "weights size mismatch"
         );
         let dim = self.manifest.output_dim();
-        let mut out = Vec::with_capacity(n * dim);
-        let mut done = 0;
-        let wlit_cache: Option<xla::Literal> = None;
-        let mut wlit_cache = wlit_cache;
-        let mut cached_batch = usize::MAX;
-        while done < n {
-            let batch = Self::pick_batch(&self.fwd, n - done);
-            let exe = &self.fwd[&batch];
-            let take = batch.min(n - done);
-            let mut chunk = vec![0f32; batch * ind];
-            chunk[..take * ind].copy_from_slice(&images[done * ind..(done + take) * ind]);
-            let xlit = literal_f32(&chunk, &self.input_dims(batch))?;
-            // weights literal is reusable across chunks of the same batch
-            if cached_batch != batch || wlit_cache.is_none() {
-                wlit_cache = Some(literal_f32(weights, &[weights.len() as i64])?);
-                cached_batch = batch;
-            }
-            let res = exe.run_f32(&[xlit, wlit_cache.clone().unwrap()])?;
-            anyhow::ensure!(res.len() == batch * dim, "unexpected output size");
-            out.extend_from_slice(&res[..take * dim]);
-            done += take;
-        }
-        Ok(InferOutput { data: out, dim })
+        let data = self.model.execute(images, n, weights)?;
+        anyhow::ensure!(data.len() == n * dim, "unexpected output size");
+        Ok(InferOutput { data, dim })
     }
 
-    /// Fused path: quantized codes in, Pallas dequant inside the HLO.
+    /// Fused path: quantized codes in, Eq. 5 dequantization inside the
+    /// backend (the PJRT `qfwd` executable's Pallas dequant kernel, or
+    /// the interpreter's built-in dequant).
     pub fn infer_quantized(
         &self,
         images: &[f32],
@@ -152,102 +118,83 @@ impl ModelSession {
         qflat: &[u32],
         cum_bits: u32,
     ) -> Result<InferOutput> {
-        if self.qfwd.is_empty() {
-            bail!("{}: no qfwd artifacts compiled", self.manifest.name);
-        }
         let ind = self.manifest.input_numel();
         anyhow::ensure!(images.len() == n * ind, "image buffer size mismatch");
-        anyhow::ensure!(qflat.len() == self.manifest.param_count, "qflat size mismatch");
-        let k = self.manifest.k;
-        let scales: Vec<f32> = self
-            .manifest
-            .tensors
-            .iter()
-            .map(|t| {
-                QuantParams {
-                    min: t.min,
-                    max: t.max,
-                    k,
-                }
-                .dequant_scale()
-            })
-            .collect();
-        let los: Vec<f32> = self.manifest.tensors.iter().map(|t| t.min).collect();
-        let half = [half_correction(k, cum_bits)];
+        anyhow::ensure!(
+            qflat.len() == self.manifest.param_count,
+            "qflat size mismatch"
+        );
         let dim = self.manifest.output_dim();
-        let mut out = Vec::with_capacity(n * dim);
-        let mut done = 0;
-        while done < n {
-            let batch = Self::pick_batch(&self.qfwd, n - done);
-            let exe = &self.qfwd[&batch];
-            let take = batch.min(n - done);
-            let mut chunk = vec![0f32; batch * ind];
-            chunk[..take * ind].copy_from_slice(&images[done * ind..(done + take) * ind]);
-            let res = exe.run_f32(&[
-                literal_f32(&chunk, &self.input_dims(batch))?,
-                literal_u32(qflat, &[qflat.len() as i64])?,
-                literal_f32(&scales, &[scales.len() as i64])?,
-                literal_f32(&los, &[los.len() as i64])?,
-                literal_f32(&half, &[1])?,
-            ])?;
-            anyhow::ensure!(res.len() == batch * dim, "unexpected output size");
-            out.extend_from_slice(&res[..take * dim]);
-            done += take;
-        }
-        Ok(InferOutput { data: out, dim })
+        let data = self.model.execute_quantized(images, n, qflat, cum_bits)?;
+        anyhow::ensure!(data.len() == n * dim, "unexpected output size");
+        Ok(InferOutput { data, dim })
     }
 
+    /// Whether the backend compiled a fused quantized path for this model.
     pub fn has_qfwd(&self) -> bool {
-        !self.qfwd.is_empty()
+        self.model.supports_quantized()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::Registry;
+    use crate::testutil::fixture;
 
-    fn session(name: &str) -> Option<(ModelSession, ModelManifest)> {
-        if !crate::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        let engine = Engine::global().unwrap();
-        let reg = Registry::open_default().unwrap();
-        let m = reg.get(name).unwrap().clone();
-        Some((ModelSession::load_batches(&engine, &m, &[1, 32]).unwrap(), m))
+    fn session(tag: &str) -> (ModelSession, ModelManifest, Vec<f32>) {
+        let reg = fixture::executable_models(tag).unwrap();
+        let m = reg.get("dense3").unwrap().clone();
+        let flat = m.load_weights().unwrap();
+        let engine = Engine::reference();
+        (ModelSession::load(&engine, &m).unwrap(), m, flat)
     }
 
     #[test]
-    fn infer_shapes_and_padding() {
-        let Some((sess, m)) = session("mlp") else { return };
-        let w = m.load_weights().unwrap();
+    fn infer_shapes_over_sample_counts() {
+        let (sess, m, flat) = session("sess-shapes");
         let ind = m.input_numel();
-        // n=5 forces batch-1 fallback or batch-32 padding paths
         for n in [1usize, 5, 33] {
             let images = vec![0.3f32; n * ind];
-            let out = sess.infer(&images, n, &w).unwrap();
+            let out = sess.infer(&images, n, &flat).unwrap();
             assert_eq!(out.n(), n);
-            assert_eq!(out.dim, 10);
+            assert_eq!(out.dim, m.output_dim());
         }
     }
 
     #[test]
     fn infer_deterministic() {
-        let Some((sess, m)) = session("mlp") else { return };
-        let w = m.load_weights().unwrap();
+        let (sess, m, flat) = session("sess-det");
         let images = vec![0.5f32; m.input_numel()];
-        let a = sess.infer(&images, 1, &w).unwrap();
-        let b = sess.infer(&images, 1, &w).unwrap();
+        let a = sess.infer(&images, 1, &flat).unwrap();
+        let b = sess.infer(&images, 1, &flat).unwrap();
         assert_eq!(a.data, b.data);
     }
 
     #[test]
     fn bad_sizes_rejected() {
-        let Some((sess, m)) = session("mlp") else { return };
-        let w = m.load_weights().unwrap();
-        assert!(sess.infer(&[0.0; 10], 1, &w).is_err());
+        let (sess, m, flat) = session("sess-bad");
+        assert!(sess.infer(&[0.0; 3], 1, &flat).is_err());
         let images = vec![0f32; m.input_numel()];
-        assert!(sess.infer(&images, 1, &w[..100]).is_err());
+        assert!(sess.infer(&images, 1, &flat[..4]).is_err());
+        assert!(sess.infer_quantized(&images, 1, &[0u32; 4], 16).is_err());
+    }
+
+    #[test]
+    fn probabilities_normalize() {
+        let (sess, m, flat) = session("sess-prob");
+        let images = vec![0.7f32; m.input_numel()];
+        let out = sess.infer(&images, 1, &flat).unwrap();
+        let p = out.probabilities(0, m.classes);
+        assert_eq!(p.len(), m.classes);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // argmax is preserved by softmax
+        let argmax_p = p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax_p, out.argmax_class(0, m.classes));
     }
 }

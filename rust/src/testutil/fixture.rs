@@ -4,8 +4,10 @@
 //! `models/<name>/manifest.json` + `weights.bin`) into a temp directory so
 //! the server/client stack can be exercised end to end without the
 //! Python-built artifacts (which CI does not have). The HLO entries point
-//! at files that are never created — only the runtime layer needs them,
-//! and these fixtures stay on the transport/codec paths.
+//! at files that are never created — the reference backend derives the
+//! graph from the manifest instead, so fixture models whose tensor shapes
+//! chain (dense `[cin, cout]` layers) are fully *executable* on it, which
+//! is what the mid-download inference tests use.
 
 use std::path::{Path, PathBuf};
 
@@ -16,24 +18,30 @@ use crate::util::bytes::f32_to_le;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
-/// Write one synthetic model under `models_dir/<name>`.
-pub fn write_model(
+/// Write one synthetic model under `models_dir/<name>` with explicit
+/// weight values (`flat` must match the tensors' total numel).
+///
+/// `classes` is derived from the last tensor's trailing dimension and
+/// `input_shape` from the first tensor's leading dimension (rank ≥ 2), so
+/// dense-chain fixtures type-check on the reference backend.
+pub fn write_model_with_weights(
     models_dir: &Path,
     name: &str,
     tensors: &[(&str, &[usize])],
-    seed: u64,
+    flat: &[f32],
 ) -> Result<()> {
     let dir = models_dir.join(name);
     std::fs::create_dir_all(&dir)?;
-    let mut rng = Rng::new(seed);
+    let total: usize = tensors
+        .iter()
+        .map(|(_, shape)| shape.iter().product::<usize>())
+        .sum();
+    anyhow::ensure!(total == flat.len(), "flat weights length mismatch");
     let mut tensor_json = Vec::new();
-    let mut flat: Vec<f32> = Vec::new();
     let mut offset = 0usize;
     for (tname, shape) in tensors {
         let numel: usize = shape.iter().product();
-        let vals: Vec<f32> = (0..numel)
-            .map(|_| rng.normal_ms(0.0, 0.5) as f32)
-            .collect();
+        let vals = &flat[offset..offset + numel];
         let lo = vals.iter().copied().fold(f32::INFINITY, f32::min);
         let hi = vals.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         tensor_json.push(json::obj(vec![
@@ -48,19 +56,26 @@ pub fn write_model(
             ("max", json::num(hi as f64)),
         ]));
         offset += numel;
-        flat.extend_from_slice(&vals);
     }
+    let input_shape: Vec<usize> = match tensors.first() {
+        Some((_, shape)) if shape.len() >= 2 => vec![shape[0]],
+        _ => vec![8],
+    };
+    let classes = tensors
+        .last()
+        .and_then(|(_, shape)| shape.last().copied())
+        .unwrap_or(10);
     let manifest = json::obj(vec![
         ("name", json::s(name)),
         ("task", json::s("classify")),
-        ("classes", json::num(10.0)),
-        ("input_shape", json::arr(vec![json::num(8.0)])),
+        ("classes", json::num(classes as f64)),
+        (
+            "input_shape",
+            json::arr(input_shape.iter().map(|&d| json::num(d as f64)).collect()),
+        ),
         ("param_count", json::num(offset as f64)),
         ("k", json::num(16.0)),
-        (
-            "default_schedule",
-            json::arr(vec![json::num(2.0); 8]),
-        ),
+        ("default_schedule", json::arr(vec![json::num(2.0); 8])),
         ("tensors", json::arr(tensor_json)),
         (
             "hlo",
@@ -69,8 +84,24 @@ pub fn write_model(
         ("dataset", json::s("shapes10")),
     ]);
     std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
-    std::fs::write(dir.join("weights.bin"), f32_to_le(&flat))?;
+    std::fs::write(dir.join("weights.bin"), f32_to_le(flat))?;
     Ok(())
+}
+
+/// Write one synthetic model with seeded normal weights.
+pub fn write_model(
+    models_dir: &Path,
+    name: &str,
+    tensors: &[(&str, &[usize])],
+    seed: u64,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let total: usize = tensors
+        .iter()
+        .map(|(_, shape)| shape.iter().product::<usize>())
+        .sum();
+    let flat: Vec<f32> = (0..total).map(|_| rng.normal_ms(0.0, 0.5) as f32).collect();
+    write_model_with_weights(models_dir, name, tensors, &flat)
 }
 
 /// Write `models/index.json` listing `names`.
@@ -113,6 +144,28 @@ pub fn synthetic_models(tag: &str) -> Result<Registry> {
     Registry::open(&root)
 }
 
+/// A registry with one fully executable dense model ("dense3": input 16 →
+/// 12 hidden → 10 classes, with biases), for reference-backend tests.
+pub fn executable_models(tag: &str) -> Result<Registry> {
+    let root = fixture_root(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    let models_dir = root.join("models");
+    std::fs::create_dir_all(&models_dir)?;
+    write_model(
+        &models_dir,
+        "dense3",
+        &[
+            ("fc1.w", &[16, 12][..]),
+            ("fc1.b", &[12][..]),
+            ("fc2.w", &[12, 10][..]),
+            ("fc2.b", &[10][..]),
+        ],
+        0x5EED_0003,
+    )?;
+    write_index(&models_dir, &["dense3"])?;
+    Registry::open(&root)
+}
+
 /// Running server + repository over the two-model fixture — the shared
 /// harness for socket-level tests and benches.
 pub fn synthetic_server(
@@ -146,5 +199,19 @@ mod tests {
         let bytes = w.to_bytes();
         assert_eq!(bytes.len(), w.manifest().wire_bytes());
         assert!(crate::format::PnetReader::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn executable_fixture_runs_on_reference_backend() {
+        let reg = executable_models("fixture-exec").unwrap();
+        let m = reg.get("dense3").unwrap();
+        assert_eq!(m.input_numel(), 16);
+        assert_eq!(m.classes, 10);
+        let engine = crate::runtime::Engine::reference();
+        let session = crate::runtime::ModelSession::load(&engine, m).unwrap();
+        let flat = m.load_weights().unwrap();
+        let out = session.infer(&[0.1f32; 16 * 2], 2, &flat).unwrap();
+        assert_eq!(out.n(), 2);
+        assert_eq!(out.dim, 10);
     }
 }

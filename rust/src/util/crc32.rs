@@ -1,0 +1,61 @@
+//! CRC-32 (ISO-HDLC / zlib polynomial), vendored so the crate's only
+//! external dependency stays `anyhow`.
+//!
+//! Bit-exact with `crc32fast::hash` and python's `zlib.crc32` — the
+//! golden vectors under `artifacts/golden/` store CRCs computed by the
+//! python encoder, and every `.pnet` fragment header carries one
+//! (`format::FragmentHeader`), so the polynomial and reflection must
+//! match exactly. Table-driven, one byte per step; fragment payloads are
+//! small enough that a slice-by-8 implementation would be over-engineering.
+
+use std::sync::OnceLock;
+
+/// Reflected CRC-32 polynomial (0x04C11DB7 bit-reversed).
+const POLY: u32 = 0xEDB8_8320;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, entry) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `data` (init `0xFFFF_FFFF`, reflected, final xor) — the
+/// classic zlib checksum.
+pub fn hash(data: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the standard CRC-32 check value
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit() {
+        let a = hash(&[0x00, 0x01, 0x02, 0x03]);
+        let b = hash(&[0x00, 0x01, 0x02, 0x07]);
+        assert_ne!(a, b);
+    }
+}

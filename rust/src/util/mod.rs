@@ -9,6 +9,7 @@
 pub mod bytes;
 pub mod cli;
 pub mod config;
+pub mod crc32;
 pub mod json;
 pub mod logging;
 pub mod pool;

@@ -212,7 +212,7 @@ fn golden_planes_and_dequant_match_python() {
         let expect_len = st.get("plane_len").unwrap().as_usize().unwrap();
         assert_eq!(planes[i].len(), expect_len, "stage {i} length");
         assert_eq!(
-            crc32fast::hash(&planes[i]) as i64,
+            prognet::util::crc32::hash(&planes[i]) as i64,
             expect_crc,
             "stage {i} plane CRC"
         );
@@ -247,5 +247,5 @@ fn crc32_of_u32(q: &[u32]) -> u32 {
     for v in q {
         bytes.extend_from_slice(&v.to_le_bytes());
     }
-    crc32fast::hash(&bytes)
+    prognet::util::crc32::hash(&bytes)
 }

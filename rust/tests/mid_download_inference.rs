@@ -1,0 +1,120 @@
+//! Mid-download inference, end to end and offline: assemble stage-k
+//! approximate models via `client::Assembler` and execute each on the
+//! reference backend, asserting the outputs converge toward the
+//! full-precision result as k grows (the paper's core §III-C claim, made
+//! testable without artifacts or a network).
+
+use prognet::client::Assembler;
+use prognet::format::PnetWriter;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::testutil::fixture;
+use prognet::util::rng::Rng;
+
+/// Max absolute elementwise distance between two flat outputs.
+fn max_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max)
+}
+
+#[test]
+fn stage_outputs_converge_to_full_precision() {
+    let reg = fixture::executable_models("mid-download").unwrap();
+    let m = reg.get("dense3").unwrap();
+    let flat = m.load_weights().unwrap();
+
+    let engine = Engine::reference();
+    let session = ModelSession::load(&engine, m).unwrap();
+
+    // a small deterministic image batch
+    let n = 4;
+    let mut rng = Rng::new(0xD0_5EED);
+    let images: Vec<f32> = (0..n * m.input_numel()).map(|_| rng.f32()).collect();
+
+    // full-precision baseline with the original float weights
+    let full = session.infer(&images, n, &flat).unwrap();
+    let scale = full.data.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1.0);
+
+    // encode the container and replay it stage by stage through the
+    // assembler, exactly as the progressive client would
+    let pm = m
+        .pnet_manifest(&flat, prognet::quant::Schedule::paper_default())
+        .unwrap();
+    let writer = PnetWriter::encode(pm.clone(), &flat).unwrap();
+    let mut asm = Assembler::new(pm.clone());
+
+    let mut errs = Vec::new();
+    for s in 0..pm.schedule.stages() {
+        for t in 0..pm.tensors.len() {
+            asm.absorb(s, t, writer.fragment(s, t)).unwrap();
+        }
+        let weights = asm.reconstruct().unwrap();
+        let out = session.infer(&images, n, weights).unwrap();
+        assert_eq!(out.n(), n);
+        errs.push(max_dist(&out.data, &full.data));
+    }
+    assert!(asm.is_complete());
+    assert_eq!(errs.len(), 8);
+
+    // convergence: the 16-bit reconstruction is numerically close to the
+    // full-precision output, and error shrinks by orders of magnitude
+    // from the 2-bit first stage
+    let first = errs[0];
+    let last = *errs.last().unwrap();
+    assert!(
+        last <= 0.02 * scale,
+        "final stage output still far from full precision: {last} (scale {scale})"
+    );
+    assert!(
+        last < first * 0.1 || first == 0.0,
+        "no convergence: first-stage err {first}, final err {last}"
+    );
+    // mid-way (8 cumulative bits) must already improve on 2 bits
+    assert!(
+        errs[3] <= first,
+        "stage 3 err {} worse than stage 0 err {first}",
+        errs[3]
+    );
+
+    // and the quantized fast path agrees with reconstruct+infer at every
+    // cumulative width (the fused-dequant equivalence, backend-side)
+    let qflat = asm.codes_flat();
+    let fused = session
+        .infer_quantized(&images, n, &qflat, asm.cum_bits())
+        .unwrap();
+    let d = max_dist(&fused.data, session.infer(&images, n, asm.flat()).unwrap().data.as_slice());
+    assert!(d < 1e-4 * scale, "fused dequant path diverges: {d}");
+}
+
+#[test]
+fn partial_model_is_usable_before_transfer_completes() {
+    // The paper's user-facing claim: after only the first stage (2 of 16
+    // bits — 1/8th of the payload), the model executes and produces
+    // finite outputs of the right shape.
+    let reg = fixture::executable_models("mid-download-early").unwrap();
+    let m = reg.get("dense3").unwrap();
+    let flat = m.load_weights().unwrap();
+    let engine = Engine::reference();
+    let session = ModelSession::load(&engine, m).unwrap();
+
+    let pm = m
+        .pnet_manifest(&flat, prognet::quant::Schedule::paper_default())
+        .unwrap();
+    let writer = PnetWriter::encode(pm.clone(), &flat).unwrap();
+    let mut asm = Assembler::new(pm.clone());
+    for t in 0..pm.tensors.len() {
+        asm.absorb(0, t, writer.fragment(0, t)).unwrap();
+    }
+    assert_eq!(asm.stages_complete(), 1);
+    assert_eq!(asm.cum_bits(), 2);
+
+    let weights = asm.reconstruct().unwrap();
+    let images = vec![0.25f32; m.input_numel()];
+    let out = session.infer(&images, 1, weights).unwrap();
+    assert_eq!(out.dim, m.output_dim());
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    // class probabilities are well-formed even on the 2-bit model
+    let p = out.probabilities(0, m.classes);
+    assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+}

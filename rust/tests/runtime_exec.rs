@@ -1,6 +1,13 @@
-//! Runtime integration: the compiled HLO executables must agree with the
+//! Runtime integration: the compiled executables must agree with the
 //! trained models' recorded accuracy and with each other (fwd vs the
-//! Pallas-fused qfwd).
+//! fused-dequant qfwd path).
+//!
+//! The suite runs on whatever backend `Engine::global()` selects
+//! (`PROGNET_BACKEND`; reference interpreter by default), so with
+//! artifacts built it validates the interpreter against the trained
+//! models' accuracy — set `PROGNET_BACKEND=pjrt` (with a real `xla`
+//! checkout and `--features pjrt`) to point the same assertions at the
+//! PJRT backend, where the qfwd test exercises the Pallas dequant kernel.
 
 use prognet::eval::{accuracy, detection, EvalSet};
 use prognet::models::Registry;
