@@ -1,10 +1,12 @@
-//! Quickstart: the full progressive-transmission loop in ~40 lines.
+//! Quickstart: the full progressive-transmission loop in ~50 lines.
 //!
-//! Starts an in-process model server, progressively fetches the trained
-//! `cnn` classifier over a bandwidth-shaped loopback connection, and runs
-//! inference on a few evaluation images at every transmission stage —
-//! printing the approximate predictions as they improve (Fig 1 of the
-//! paper, end to end).
+//! Starts an in-process model server, opens a `ProgressiveSession` that
+//! progressively fetches a classifier over a bandwidth-shaped loopback
+//! connection, and walks the typed event stream — printing the
+//! approximate predictions as they improve (Fig 1 of the paper, end to
+//! end). With the Python-built artifacts present it streams the trained
+//! `cnn`; without them it falls back to a synthetic fixture model so the
+//! demo (and the CI smoke job) runs everywhere.
 //!
 //! Run with: `cargo run --release --example quickstart`
 //!
@@ -25,60 +27,81 @@
 
 use std::sync::Arc;
 
-use prognet::client::{ProgressiveClient, ProgressiveOptions};
+use prognet::client::{ProgressiveSession, SessionEvent};
 use prognet::eval::{top1, EvalSet};
-use prognet::models::Registry;
 use prognet::runtime::{Engine, ModelSession};
 use prognet::server::service::ServerConfig;
 use prognet::server::{Repository, Server};
+use prognet::testutil::fixture;
 use prognet::util::stats::{fmt_bytes, fmt_secs};
 
 fn main() -> prognet::Result<()> {
-    anyhow::ensure!(
-        prognet::artifacts_available(),
-        "artifacts not built — run `make artifacts` first"
-    );
     // 1. Server side: repository of progressively encoded models.
-    let repo = Arc::new(Repository::open_default()?);
-    let server = Server::start("127.0.0.1:0", repo, ServerConfig::default())?;
+    let (repo, model) = if prognet::artifacts_available() {
+        (Arc::new(Repository::open_default()?), "cnn")
+    } else {
+        println!("artifacts not built — streaming a synthetic fixture model instead");
+        let reg = fixture::executable_models("example-quickstart")?;
+        (Arc::new(Repository::new(reg)), "dense3")
+    };
+    let server = Server::start("127.0.0.1:0", repo.clone(), ServerConfig::default())?;
     println!("server up on {}", server.addr());
 
     // 2. Client side: compiled executable + eval workload. The engine
     // honours PROGNET_BACKEND (reference interpreter unless overridden).
     let engine = Engine::global()?;
     println!("inference backend: {}", engine.backend_name());
-    let registry = Registry::open_default()?;
-    let manifest = registry.get("cnn")?;
-    let session = ModelSession::load_batches(&engine, manifest, &[32])?;
-    let eval = EvalSet::load_named(&manifest.dataset)?;
+    let manifest = repo.registry().get(model)?.clone();
+    let session = Arc::new(ModelSession::load_batches(&engine, &manifest, &[32])?);
+    let eval = if prognet::artifacts_available() {
+        EvalSet::load_named(&manifest.dataset)?
+    } else {
+        fixture::synthetic_eval(&manifest, 32, 7)
+    };
     let n = 32;
     let images = eval.image_batch(n).to_vec();
 
-    // 3. Progressive fetch at 2 MB/s with concurrent inference (§III-C).
-    let mut opts = ProgressiveOptions::concurrent("cnn");
-    opts.request = opts.request.with_speed(2.0);
-    let client = ProgressiveClient::new(server.addr());
-    let outcome = client.fetch_and_infer(&opts, &session, &images, n)?;
+    // 3. Progressive session at 2 MB/s with concurrent inference
+    // (§III-C): one builder, then a typed event stream.
+    let live = ProgressiveSession::builder(model)
+        .addr(server.addr())
+        .speed_mbps(2.0)
+        .runtime(model, session)
+        .workload(images, n)
+        .start()?;
 
     println!("\nstage  bits  transfer   output    top-1 on {n} images");
-    for r in &outcome.results {
-        let acc = top1(&r.output, &eval.labels[..n], manifest.classes);
-        println!(
-            "  {}    {:>2}   {:>8}  {:>8}   {:>5.1}%",
-            r.stage,
-            r.cum_bits,
-            fmt_secs(r.t_transfer_done),
-            fmt_secs(r.t_output_ready),
-            acc * 100.0
-        );
+    let mut summary = None;
+    while let Some(ev) = live.next_event() {
+        match ev {
+            SessionEvent::Inference { result: r, .. } => {
+                let acc = top1(&r.output, &eval.labels[..n], manifest.classes);
+                println!(
+                    "  {}    {:>2}   {:>8}  {:>8}   {:>5.1}%",
+                    r.stage,
+                    r.cum_bits,
+                    fmt_secs(r.t_transfer_done),
+                    fmt_secs(r.t_output_ready),
+                    acc * 100.0
+                );
+            }
+            SessionEvent::Finished(s) => summary = Some(s),
+            _ => {}
+        }
     }
+    let report = live.finish()?;
+    let s = summary.expect("Finished is always emitted");
+    anyhow::ensure!(report.results.len() == 8, "expected 8 stage results");
+
     println!(
         "\ntransfer {} in {} | total (with 8 intermediate inferences) {}",
-        fmt_bytes(outcome.bytes),
-        fmt_secs(outcome.t_transfer_complete),
-        fmt_secs(outcome.t_total),
+        fmt_bytes(s.bytes),
+        fmt_secs(s.t_transfer_complete),
+        fmt_secs(s.t_total),
     );
-    println!("concurrent overhead vs pure transfer: {:+.1}%",
-        (outcome.t_total / outcome.t_transfer_complete - 1.0) * 100.0);
+    println!(
+        "concurrent overhead vs pure transfer: {:+.1}%",
+        (s.t_total / s.t_transfer_complete - 1.0) * 100.0
+    );
     Ok(())
 }

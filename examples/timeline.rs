@@ -10,17 +10,23 @@ use prognet::models::Registry;
 use prognet::netsim::LinkSpec;
 use prognet::quant::Schedule;
 use prognet::runtime::Engine;
+use prognet::testutil::fixture;
 use prognet::util::stats::fmt_secs;
 
 fn main() -> prognet::Result<()> {
-    anyhow::ensure!(
-        prognet::artifacts_available(),
-        "artifacts not built — run `make artifacts` first"
-    );
     let engine = Engine::global()?;
-    let registry = Registry::open_default()?;
-    let manifest = registry.get("cnn")?;
-    let eval = EvalSet::load_named(&manifest.dataset)?;
+    let (registry, model) = if prognet::artifacts_available() {
+        (Registry::open_default()?, "cnn")
+    } else {
+        println!("artifacts not built — timing a synthetic fixture model instead");
+        (fixture::executable_models_big("example-timeline")?, "dense2b")
+    };
+    let manifest = registry.get(model)?;
+    let eval = if prognet::artifacts_available() {
+        EvalSet::load_named(&manifest.dataset)?
+    } else {
+        fixture::synthetic_eval(manifest, 32, 13)
+    };
     let sched = Schedule::paper_default();
     let link = LinkSpec::mbps(0.25);
 

@@ -59,6 +59,35 @@ impl ModelCache {
         self.key_path(req).with_extension("pnet.part")
     }
 
+    /// Complete cached container for `req`, if present and still valid.
+    /// Corrupt entries are evicted on read.
+    pub fn load_complete(&self, req: &FetchRequest) -> Option<Vec<u8>> {
+        let path = self.key_path(req);
+        let bytes = std::fs::read(&path).ok()?;
+        if PnetReader::from_bytes(&bytes).is_ok() {
+            return Some(bytes);
+        }
+        crate::log_warn!("cache entry {} corrupt; evicting", path.display());
+        let _ = std::fs::remove_file(&path);
+        None
+    }
+
+    /// Raw bytes of a previously persisted partial download, if any.
+    pub fn load_partial(&self, req: &FetchRequest) -> Option<Vec<u8>> {
+        std::fs::read(self.part_path(req))
+            .ok()
+            .filter(|b| !b.is_empty())
+    }
+
+    /// Promote a complete, validated container into the cache and drop
+    /// the partial.
+    pub fn store_complete(&self, req: &FetchRequest, bytes: &[u8]) -> Result<()> {
+        PnetReader::from_bytes(bytes).context("refusing to cache an invalid container")?;
+        std::fs::write(self.key_path(req), bytes)?;
+        let _ = std::fs::remove_file(self.part_path(req));
+        Ok(())
+    }
+
     /// Fetch a container, using cache + resume. Returns the complete
     /// container bytes and how they were obtained.
     pub fn fetch(
@@ -66,16 +95,10 @@ impl ModelCache {
         addr: &std::net::SocketAddr,
         req: &FetchRequest,
     ) -> Result<(Vec<u8>, FetchOutcome)> {
-        let final_path = self.key_path(req);
-        if final_path.exists() {
-            let bytes = std::fs::read(&final_path)?;
-            // integrity: must still parse (evicts corrupt entries)
-            if PnetReader::from_bytes(&bytes).is_ok() {
-                return Ok((bytes, FetchOutcome::CacheHit));
-            }
-            crate::log_warn!("cache entry {} corrupt; refetching", final_path.display());
-            let _ = std::fs::remove_file(&final_path);
+        if let Some(bytes) = self.load_complete(req) {
+            return Ok((bytes, FetchOutcome::CacheHit));
         }
+        let final_path = self.key_path(req);
 
         let part_path = self.part_path(req);
         let mut existing = if part_path.exists() {
@@ -146,8 +169,11 @@ impl ModelCache {
         Ok(())
     }
 
-    /// Simulate an interrupted download: keep only `bytes` of the partial.
-    /// (Used by tests and failure-injection harnesses.)
+    /// Persist a partial download (any canonical byte prefix of the
+    /// container). `client::session::ProgressiveSession` calls this at
+    /// every stage boundary so an interrupted session resumes from the
+    /// last cached complete stage instead of stage 0; tests use it to
+    /// plant interrupted downloads.
     pub fn store_partial(&self, req: &FetchRequest, data: &[u8]) -> Result<()> {
         self.write_part(&self.part_path(req), data)
     }
@@ -253,6 +279,29 @@ mod tests {
         cache.store_partial(&req, &bogus).unwrap();
         let (bytes, _) = cache.fetch(&server.addr(), &req).unwrap();
         assert_eq!(&bytes[..], &full[..]);
+    }
+
+    #[test]
+    fn partial_and_complete_round_trip() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        assert!(cache.load_partial(&req).is_none());
+        assert!(cache.load_complete(&req).is_none());
+        let full = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        cache.store_partial(&req, &full[..full.len() / 3]).unwrap();
+        assert_eq!(
+            cache.load_partial(&req).unwrap().len(),
+            full.len() / 3
+        );
+        // a truncated container is rejected for promotion …
+        assert!(cache.store_complete(&req, &full[..full.len() / 3]).is_err());
+        // … the real thing promotes and clears the partial
+        cache.store_complete(&req, &full).unwrap();
+        assert!(cache.load_partial(&req).is_none());
+        assert_eq!(&cache.load_complete(&req).unwrap()[..], &full[..]);
+        drop(server);
     }
 
     #[test]

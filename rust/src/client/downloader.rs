@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::format::{FrameParser, ParserEvent};
+use crate::format::{FrameParser, ParserEvent, PnetManifest};
 use crate::server::proto::FetchRequest;
 use crate::server::service::open_fetch;
 
@@ -38,6 +38,9 @@ pub struct Downloader {
     base_consumed: u64,
     /// re-apply the small SO_RCVBUF to sockets opened by a resume
     small_recv_buffer: bool,
+    /// canonical container byte prefix received so far (for partial-stage
+    /// cache persistence); None = capture disabled
+    capture: Option<Vec<u8>>,
     buf: Vec<u8>,
 }
 
@@ -66,8 +69,68 @@ impl Downloader {
             req: req.clone(),
             base_consumed: 0,
             small_recv_buffer: false,
+            capture: None,
             buf: vec![0u8; CHUNK],
         })
+    }
+
+    /// Reconnect a fetch whose prefix (preamble + stages `0..start_stage`)
+    /// is already held locally — the cache-aware resume path. Issues a
+    /// `stages: start_stage..end` request; `manifest` comes from the
+    /// locally held prefix and `bytes_already` is that prefix's length
+    /// (counted into [`Downloader::bytes_received`] / progress).
+    pub fn connect_resumed(
+        addr: &std::net::SocketAddr,
+        req: &FetchRequest,
+        manifest: PnetManifest,
+        start_stage: usize,
+        bytes_already: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            req.offset == 0 && req.stages.is_none(),
+            "cache resume takes a whole-container request"
+        );
+        let stages = manifest.schedule.stages();
+        anyhow::ensure!(
+            start_stage > 0 && start_stage < stages,
+            "resume stage {start_stage} out of range (1..{stages})"
+        );
+        let parser = FrameParser::resume(manifest, start_stage, Some(stages))?;
+        let wire_req = req
+            .clone()
+            .with_stages(start_stage as u32, stages as u32);
+        let (stream, resp) = open_fetch(addr, &wire_req)?;
+        Ok(Self {
+            stream,
+            parser,
+            start: Instant::now(),
+            total_size: bytes_already + resp.remaining,
+            addr: *addr,
+            req: wire_req,
+            base_consumed: bytes_already,
+            small_recv_buffer: false,
+            capture: None,
+            buf: vec![0u8; CHUNK],
+        })
+    }
+
+    /// Start recording the canonical container byte prefix, seeded with
+    /// bytes already held (empty for a fresh fetch). A stage-boundary
+    /// resume truncates the record back to the boundary, so it always
+    /// reflects an exact byte prefix of the container — suitable for
+    /// partial-download cache persistence.
+    pub fn enable_capture(&mut self, seed: Vec<u8>) {
+        self.capture = Some(seed);
+    }
+
+    /// The captured canonical byte prefix, if capture is enabled.
+    pub fn captured(&self) -> Option<&[u8]> {
+        self.capture.as_deref()
+    }
+
+    /// Take ownership of the captured prefix (disables further capture).
+    pub fn take_captured(&mut self) -> Option<Vec<u8>> {
+        self.capture.take()
     }
 
     /// Set a small kernel receive buffer so that *not reading* (serial
@@ -145,6 +208,19 @@ impl Downloader {
         if self.small_recv_buffer {
             let _ = shrink_recv_buffer(&stream);
         }
+        if let Some(cap) = &mut self.capture {
+            // keep the record a canonical byte prefix: drop any bytes of
+            // the partially received stage (they will be re-sent)
+            if stage == 0 {
+                cap.clear();
+            } else {
+                let len = manifest
+                    .stage_index()
+                    .body_range(Some((0, stage as u32)))?
+                    .end;
+                cap.truncate(len);
+            }
+        }
         self.parser = if stage == 0 {
             // the manifest never fully arrived or stage 0 is incomplete:
             // the range re-includes the preamble
@@ -173,6 +249,9 @@ impl Downloader {
                     self.bytes_received(),
                     self.total_size
                 );
+            }
+            if let Some(cap) = &mut self.capture {
+                cap.extend_from_slice(&self.buf[..n]);
             }
             let events = self.parser.feed(&self.buf[..n])?;
             if !events.is_empty() {
@@ -386,5 +465,65 @@ mod tests {
         assert_eq!(asm.codes_flat(), asm_ref.codes_flat());
         // progress accounting stays exact across the resume
         assert_eq!(dl.bytes_received(), dl.total_size);
+    }
+
+    #[test]
+    fn capture_stays_canonical_across_resume() {
+        let (server, repo) = big_model_server("dl-capture");
+        let req = FetchRequest::new("gamma");
+        let mut dl = Downloader::connect(&server.addr(), &req).unwrap();
+        dl.enable_capture(Vec::new());
+        while dl.stage_boundary() < 2 {
+            dl.next_events().unwrap();
+        }
+        // abandon the connection mid-stage; the resume truncates the
+        // capture back to the boundary before appending the re-sent frames
+        let boundary = dl.stage_boundary();
+        dl.resume_at_stage(boundary).unwrap();
+        while !dl.is_done() {
+            dl.next_events().unwrap();
+        }
+        let expect = repo
+            .container("gamma", &Schedule::paper_default())
+            .unwrap();
+        let cap = dl.take_captured().unwrap();
+        assert_eq!(&cap[..], &expect[..]);
+        assert!(dl.captured().is_none(), "take_captured disables capture");
+    }
+
+    #[test]
+    fn connect_resumed_completes_a_cached_prefix() {
+        use crate::format::PnetReader;
+        let (server, repo) = big_model_server("dl-connect-resumed");
+        let req = FetchRequest::new("gamma");
+        let full = repo
+            .container("gamma", &Schedule::paper_default())
+            .unwrap();
+        let r = PnetReader::from_bytes(&full).unwrap();
+        let idx = r.manifest.stage_index();
+        // pretend stages 0..3 were already cached locally
+        let prefix_len = idx.body_range(Some((0, 3))).unwrap().end;
+        let mut dl = Downloader::connect_resumed(
+            &server.addr(),
+            &req,
+            r.manifest.clone(),
+            3,
+            prefix_len as u64,
+        )
+        .unwrap();
+        dl.enable_capture(full[..prefix_len].to_vec());
+        let mut frags = 0;
+        while !dl.is_done() {
+            for te in dl.next_events().unwrap() {
+                if let ParserEvent::Fragment { stage, .. } = te.event {
+                    assert!(stage >= 3, "resumed stream re-sent stage {stage}");
+                    frags += 1;
+                }
+            }
+        }
+        assert_eq!(frags, (8 - 3) * r.manifest.tensors.len());
+        assert_eq!(dl.bytes_received(), dl.total_size);
+        // seed + resumed bytes reassemble the exact container
+        assert_eq!(&dl.take_captured().unwrap()[..], &full[..]);
     }
 }

@@ -3,24 +3,38 @@
 //! Pipeline: bytes arrive from the socket ([`downloader`]) → the frame
 //! parser yields fragments → the [`assembler`] OR-accumulates them into
 //! per-tensor code buffers (Eq. 4) → on each completed stage the weights
-//! are dequantized (Eq. 5) and the approximate model is inferred.
+//! are dequantized (Eq. 5), published into a hot-swappable
+//! [`ApproxModel`](crate::runtime::ApproxModel), and (optionally)
+//! inferred.
 //!
-//! [`progressive::ProgressiveClient`] supports both execution modes of
-//! Fig 4: **serial** ("w/o concurrent": reconstruction + inference block
-//! the download) and **concurrent** (§III-C: a separate inference thread
-//! overlaps with the ongoing transfer — the paper's key systems trick
-//! that makes progressive inference free).
+//! The single entry point is [`session::ProgressiveSession`]: a builder
+//! that subsumes fetch, resume, cache and multiplex behind one typed
+//! event stream (`StageComplete` → `ModelReady` → `Inference` …
+//! `Finished`), supporting both execution modes of Fig 4 — **serial**
+//! ("w/o concurrent": reconstruction + inference block the download) and
+//! **concurrent** (§III-C: a separate inference thread overlaps with the
+//! ongoing transfer — the paper's key systems trick that makes
+//! progressive inference free). The pre-session blocking façades,
+//! [`progressive::ProgressiveClient`] and [`multiplex::MultiplexClient`],
+//! survive as thin deprecated wrappers over the session driver.
 
 pub mod assembler;
 pub mod cache;
 pub mod downloader;
 pub mod multiplex;
 pub mod progressive;
+pub mod session;
 
 pub use assembler::Assembler;
 pub use cache::{FetchOutcome, ModelCache};
 pub use downloader::Downloader;
-pub use multiplex::{MultiplexClient, MultiplexModel, MultiplexOutcome};
-pub use progressive::{
-    ExecMode, InferencePolicy, ProgressiveClient, ProgressiveOptions, SessionOutcome, StageResult,
+#[allow(deprecated)]
+pub use multiplex::MultiplexClient;
+pub use multiplex::{MultiplexModel, MultiplexOutcome};
+#[allow(deprecated)]
+pub use progressive::ProgressiveClient;
+pub use progressive::ProgressiveOptions;
+pub use session::{
+    ExecMode, InferencePolicy, ProgressiveSession, ResumeSource, SessionBuilder, SessionEvent,
+    SessionOutcome, SessionReport, SessionSummary, StageResult,
 };

@@ -1,25 +1,24 @@
-//! Pipelined multi-model delivery: ONE connection, many stage-range
-//! requests, interleaved across models by the coordinator's weighted-fair
-//! plan ([`crate::coordinator::scheduler::interleave_stages`]).
+//! Pipelined multi-model delivery, now a thin adapter over a multiplexed
+//! [`session::ProgressiveSession`](super::session::ProgressiveSession).
 //!
-//! Phase 1 fetches stage 0 of every model (yielding each manifest, hence
-//! each stage's exact wire size); phase 2 requests the remaining stages
-//! one at a time in plan order, keeping the connection alive between
-//! requests. The whole-body protocol structurally could not express this:
-//! it is what the stage-range extension buys.
+//! One connection, many stage-range requests, interleaved across models
+//! by the coordinator's weighted-fair plan
+//! ([`crate::coordinator::scheduler::interleave_stages`]). The whole-body
+//! protocol structurally could not express this: it is what the
+//! stage-range extension buys. The mechanics live in the session driver;
+//! [`MultiplexClient::fetch_interleaved`] merely drains the event stream
+//! and repackages the report. New code should build the session directly
+//! (`ProgressiveSession::multiplex()`) to observe per-stage events and
+//! bind runtimes for mid-download serving of every model.
 
 use std::collections::HashMap;
-use std::io::Read;
-use std::net::TcpStream;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::assembler::Assembler;
-use crate::coordinator::scheduler::{interleave_stages, InterleaveModel};
-use crate::format::{FrameParser, ParserEvent};
+use super::session::ProgressiveSession;
 use crate::quant::Schedule;
 use crate::server::proto::FetchRequest;
-use crate::server::service::request_on;
 
 /// One model of an interleaved fetch.
 #[derive(Debug, Clone)]
@@ -49,6 +48,14 @@ impl MultiplexModel {
         self.schedule = Some(schedule);
         self
     }
+
+    fn request(&self) -> FetchRequest {
+        let mut req = FetchRequest::new(&self.model);
+        if let Some(s) = &self.schedule {
+            req = req.with_schedule(s.clone());
+        }
+        req
+    }
 }
 
 /// Outcome of an interleaved fetch: fully assembled models plus transfer
@@ -64,11 +71,18 @@ pub struct MultiplexOutcome {
     pub order: Vec<(String, usize)>,
 }
 
-/// Client fetching several models over one connection, stage-interleaved.
+/// Blocking client fetching several models over one connection,
+/// stage-interleaved.
+#[deprecated(
+    since = "0.3.0",
+    note = "use client::session::ProgressiveSession::multiplex — builder, \
+            typed event stream, and per-model ApproxModel handles"
+)]
 pub struct MultiplexClient {
     addr: std::net::SocketAddr,
 }
 
+#[allow(deprecated)]
 impl MultiplexClient {
     pub fn new(addr: std::net::SocketAddr) -> Self {
         Self { addr }
@@ -77,155 +91,22 @@ impl MultiplexClient {
     /// Fetch all stages of `models`, interleaved by weighted-fair
     /// priority, over a single keep-alive connection.
     pub fn fetch_interleaved(&self, models: &[MultiplexModel]) -> Result<MultiplexOutcome> {
-        anyhow::ensure!(!models.is_empty(), "no models requested");
-        let mut seen = std::collections::HashSet::new();
+        let mut builder = ProgressiveSession::multiplex().addr(self.addr);
         for m in models {
-            anyhow::ensure!(
-                seen.insert(m.model.as_str()),
-                "duplicate model '{}' in interleaved fetch",
-                m.model
-            );
+            builder = builder.add_model(m.request(), m.priority);
         }
-        let mut stream = TcpStream::connect(self.addr)
-            .with_context(|| format!("connecting {}", self.addr))?;
-        stream.set_nodelay(true)?;
-
-        let mut assemblers: HashMap<String, Assembler> = HashMap::new();
-        let mut parsers: HashMap<String, FrameParser> = HashMap::new();
-        let mut bytes = 0u64;
-        let mut requests = 0usize;
-        let mut order: Vec<(String, usize)> = Vec::new();
-
-        // Phase 1: stage 0 of every model — the manifest arrives with it,
-        // so stage sizes become known and the rest can be planned.
-        for m in models {
-            let req = base_request(m).with_stages(0, 1).with_keep_alive(true);
-            let resp = request_on(&mut stream, &req)?;
-            let mut parser = FrameParser::for_stage_prefix(1);
-            let events = read_body(&mut stream, resp.remaining, &mut parser)?;
-            anyhow::ensure!(parser.is_done(), "stage 0 of {} incomplete", m.model);
-            bytes += resp.remaining;
-            requests += 1;
-            order.push((m.model.clone(), 0));
-            for ev in events {
-                match ev {
-                    ParserEvent::Manifest(man) => {
-                        assemblers.insert(m.model.clone(), Assembler::new(*man));
-                    }
-                    ParserEvent::Fragment {
-                        stage,
-                        tensor,
-                        payload,
-                    } => {
-                        assemblers
-                            .get_mut(&m.model)
-                            .context("manifest precedes fragments")?
-                            .absorb(stage, tensor, &payload)?;
-                    }
-                }
-            }
-            // the parser keeps the manifest; later windows reuse it
-            parsers.insert(m.model.clone(), parser);
-        }
-
-        // Phase 2: weighted-fair plan over the remaining stages.
-        let metas: Vec<InterleaveModel> = models
-            .iter()
-            .map(|m| {
-                let man = parsers[&m.model]
-                    .manifest()
-                    .context("phase 1 always parses the manifest")?;
-                let idx = man.stage_index();
-                let stage_bytes: Vec<u64> = (1..man.schedule.stages())
-                    .map(|s| idx.stage_span(s, s + 1).map(|r| r.len() as u64))
-                    .collect::<Result<_>>()?;
-                Ok(InterleaveModel {
-                    name: m.model.clone(),
-                    first_stage: 1,
-                    stage_bytes,
-                    priority: m.priority,
-                })
-            })
-            .collect::<Result<_>>()?;
-        let plan = interleave_stages(&metas);
-
-        for (i, entry) in plan.iter().enumerate() {
-            let m = models
-                .iter()
-                .find(|m| m.model == entry.model)
-                .expect("plan only contains requested models");
-            let keep = i + 1 < plan.len();
-            let req = base_request(m)
-                .with_stages(entry.stage as u32, entry.stage as u32 + 1)
-                .with_keep_alive(keep);
-            let resp = request_on(&mut stream, &req)?;
-            let parser = parsers
-                .get_mut(&entry.model)
-                .expect("parser created in phase 1");
-            parser.rewindow(entry.stage, entry.stage + 1)?;
-            let events = read_body(&mut stream, resp.remaining, parser)?;
-            anyhow::ensure!(
-                parser.is_done(),
-                "stage {} of {} incomplete",
-                entry.stage,
-                entry.model
-            );
-            bytes += resp.remaining;
-            requests += 1;
-            order.push((entry.model.clone(), entry.stage));
-            for ev in events {
-                if let ParserEvent::Fragment {
-                    stage,
-                    tensor,
-                    payload,
-                } = ev
-                {
-                    assemblers
-                        .get_mut(&entry.model)
-                        .expect("assembler created in phase 1")
-                        .absorb(stage, tensor, &payload)?;
-                }
-            }
-        }
-
+        let report = builder.start()?.run()?;
         Ok(MultiplexOutcome {
-            assemblers,
-            bytes,
-            requests,
-            order,
+            assemblers: report.assemblers,
+            bytes: report.summary.bytes,
+            requests: report.requests,
+            order: report.order,
         })
     }
 }
 
-fn base_request(m: &MultiplexModel) -> FetchRequest {
-    let mut req = FetchRequest::new(&m.model);
-    if let Some(s) = &m.schedule {
-        req = req.with_schedule(s.clone());
-    }
-    req
-}
-
-/// Read exactly `remaining` body bytes (never more — the next response's
-/// status frame follows on the same stream) and feed them to the parser.
-fn read_body(
-    stream: &mut TcpStream,
-    remaining: u64,
-    parser: &mut FrameParser,
-) -> Result<Vec<ParserEvent>> {
-    let mut events = Vec::new();
-    let mut left = remaining as usize;
-    let mut buf = [0u8; 8192];
-    while left > 0 {
-        let want = left.min(buf.len());
-        let n = stream.read(&mut buf[..want])?;
-        anyhow::ensure!(n > 0, "connection closed with {left} body bytes left");
-        events.extend(parser.feed(&buf[..n])?);
-        left -= n;
-    }
-    Ok(events)
-}
-
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::format::PnetReader;

@@ -1,46 +1,24 @@
-//! The progressive transmission + inference pipeline (Fig 1, right half;
-//! Fig 4 timelines).
+//! The blocking progressive-fetch convenience layer (Fig 1, right half;
+//! Fig 4 timelines), now a thin adapter over
+//! [`session::ProgressiveSession`](super::session::ProgressiveSession).
 //!
-//! Two execution modes:
-//! - [`ExecMode::Serial`] — "w/o concurrent" in Table I: reconstruct +
-//!   inference run inline on the download thread; the socket is not read
-//!   meanwhile (a small SO_RCVBUF makes the sender actually stall, like a
-//!   single-threaded JS client would stall an HTTP stream).
-//! - [`ExecMode::Concurrent`] — §III-C: the download thread only parses
-//!   frames and forwards them; a worker thread assembles, reconstructs
-//!   and infers while the transfer keeps flowing. With inference shorter
-//!   than the inter-stage transfer gap, total time equals the singleton
-//!   transfer (the paper's +0% column).
+//! [`ProgressiveClient::fetch_and_infer`] keeps the original
+//! run-to-completion calling convention — build the session, drain its
+//! event stream, hand back a [`SessionOutcome`] — while all transfer,
+//! resume and inference mechanics live in the session driver. New code
+//! should use the session builder directly: it exposes the per-stage
+//! events and the hot-swapping
+//! [`ApproxModel`](crate::runtime::ApproxModel) this wrapper discards.
 
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::assembler::Assembler;
-use super::downloader::{Downloader, TimedEvent};
-use crate::format::ParserEvent;
-use crate::metrics::{EventKind, Timeline};
-use crate::runtime::{InferOutput, ModelSession};
+use super::session::ProgressiveSession;
+use crate::runtime::ModelSession;
 use crate::server::proto::FetchRequest;
-use crate::util::pool::BoundedQueue;
 
-/// Serial (paper "w/o concurrent") vs concurrent (§III-C) execution.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ExecMode {
-    Serial,
-    Concurrent,
-}
-
-/// Which completed stages trigger an inference.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum InferencePolicy {
-    /// Infer at every completed stage (the paper's 2→4→…→16 run).
-    EveryStage,
-    /// Skip to the newest complete stage when inference lags the link.
-    LatestOnly,
-    /// Only infer once the final stage arrived (singleton behaviour).
-    FinalOnly,
-}
+pub use super::session::{ExecMode, InferencePolicy, SessionOutcome, StageResult};
 
 /// Options for a progressive fetch.
 #[derive(Debug, Clone)]
@@ -49,7 +27,7 @@ pub struct ProgressiveOptions {
     pub policy: InferencePolicy,
     pub request: FetchRequest,
     /// On a dropped connection, reconnect at the last complete stage
-    /// boundary up to this many times (0 = fail fast, the old behaviour).
+    /// boundary up to this many times (0 = fail fast).
     pub resume_retries: usize,
 }
 
@@ -73,74 +51,25 @@ impl ProgressiveOptions {
     }
 }
 
-/// Pull the next event batch, transparently resuming at the last complete
-/// stage boundary when the connection drops and retries remain. The
-/// assembler deduplicates any re-delivered fragments of a partial stage.
-fn next_events_resuming(dl: &mut Downloader, retries_left: &mut usize) -> Result<Vec<TimedEvent>> {
-    loop {
-        match dl.next_events() {
-            Ok(events) => return Ok(events),
-            Err(e) => {
-                // a failed reconnect (e.g. the outage that dropped the
-                // stream is still ongoing) also spends a retry rather than
-                // aborting the session while budget remains
-                let mut last = e;
-                loop {
-                    if *retries_left == 0 || !dl.can_resume() {
-                        return Err(last);
-                    }
-                    *retries_left -= 1;
-                    let boundary = dl.stage_boundary();
-                    crate::log_warn!(
-                        "download interrupted ({last:#}); resuming at stage {boundary}"
-                    );
-                    match dl.resume_at_stage(boundary) {
-                        Ok(()) => break,
-                        Err(re) => last = re,
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// One intermediate (or final) inference result.
-#[derive(Debug, Clone)]
-pub struct StageResult {
-    pub stage: usize,
-    pub cum_bits: u32,
-    pub output: InferOutput,
-    /// seconds since fetch start when the stage's bytes had arrived
-    pub t_transfer_done: f64,
-    /// seconds since fetch start when this result became visible
-    pub t_output_ready: f64,
-}
-
-/// Outcome of a full progressive session.
-#[derive(Debug, Clone)]
-pub struct SessionOutcome {
-    pub results: Vec<StageResult>,
-    /// wall time until the last byte arrived
-    pub t_transfer_complete: f64,
-    /// wall time until the last output was shown (the paper's "total
-    /// execution time")
-    pub t_total: f64,
-    pub bytes: u64,
-    pub timeline: Timeline,
-}
-
-/// Progressive model client.
+/// Blocking progressive model client.
+#[deprecated(
+    since = "0.3.0",
+    note = "use client::session::ProgressiveSession — builder, typed event \
+            stream, and a hot-swappable ApproxModel handle"
+)]
 pub struct ProgressiveClient {
     addr: std::net::SocketAddr,
 }
 
+#[allow(deprecated)]
 impl ProgressiveClient {
     pub fn new(addr: std::net::SocketAddr) -> Self {
         Self { addr }
     }
 
     /// Fetch `opts.request.model` and run inference on `images` (n
-    /// samples) at every stage dictated by the policy.
+    /// samples) at every stage dictated by the policy, blocking until
+    /// the transfer finishes.
     pub fn fetch_and_infer(
         &self,
         opts: &ProgressiveOptions,
@@ -148,253 +77,23 @@ impl ProgressiveClient {
         images: &[f32],
         n: usize,
     ) -> Result<SessionOutcome> {
-        match opts.mode {
-            ExecMode::Serial => self.run_serial(opts, session, images, n),
-            ExecMode::Concurrent => self.run_concurrent(opts, session, images, n),
-        }
+        let model = opts.request.model.clone();
+        let report = ProgressiveSession::builder(&model)
+            .addr(self.addr)
+            .request(opts.request.clone())
+            .mode(opts.mode)
+            .policy(opts.policy)
+            .resume_retries(opts.resume_retries)
+            .runtime(&model, Arc::new(session.clone()))
+            .workload(images.to_vec(), n)
+            .start()?
+            .run()?;
+        Ok(report.into_outcome())
     }
-
-    fn run_serial(
-        &self,
-        opts: &ProgressiveOptions,
-        session: &ModelSession,
-        images: &[f32],
-        n: usize,
-    ) -> Result<SessionOutcome> {
-        let mut dl = Downloader::connect(&self.addr, &opts.request)?;
-        let _ = dl.set_small_recv_buffer();
-        let start = dl.start_instant();
-        let mut timeline = Timeline::new();
-        timeline.push(0.0, 0, EventKind::StageTransferStart);
-        let mut asm: Option<Assembler> = None;
-        let mut results = Vec::new();
-        let mut t_transfer_complete = 0.0;
-        let mut retries_left = opts.resume_retries;
-
-        while !dl.is_done() {
-            for TimedEvent { t, event } in next_events_resuming(&mut dl, &mut retries_left)? {
-                match event {
-                    ParserEvent::Manifest(m) => {
-                        asm = Some(Assembler::new(*m));
-                    }
-                    ParserEvent::Fragment {
-                        stage,
-                        tensor,
-                        payload,
-                    } => {
-                        let asm = asm.as_mut().expect("manifest precedes fragments");
-                        if let Some(done_stage) = asm.absorb(stage, tensor, &payload)? {
-                            timeline.push(t, done_stage, EventKind::StageTransferDone);
-                            t_transfer_complete = t;
-                            if should_infer(opts.policy, done_stage, asm) {
-                                // Serial: block the download thread.
-                                let r = reconstruct_and_infer(
-                                    asm, session, images, n, start, &mut timeline, t,
-                                )?;
-                                results.push(r);
-                            }
-                            if done_stage + 1 < asm.manifest().schedule.stages() {
-                                timeline.push(t, done_stage + 1, EventKind::StageTransferStart);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        let t_total = results
-            .last()
-            .map(|r: &StageResult| r.t_output_ready)
-            .unwrap_or(t_transfer_complete)
-            .max(t_transfer_complete);
-        Ok(SessionOutcome {
-            results,
-            t_transfer_complete,
-            t_total,
-            bytes: dl.bytes_received(),
-            timeline,
-        })
-    }
-
-    fn run_concurrent(
-        &self,
-        opts: &ProgressiveOptions,
-        session: &ModelSession,
-        images: &[f32],
-        n: usize,
-    ) -> Result<SessionOutcome> {
-        let mut dl = Downloader::connect(&self.addr, &opts.request)?;
-        let start = dl.start_instant();
-        let queue: BoundedQueue<TimedEvent> = BoundedQueue::new(1024);
-        let policy = opts.policy;
-        let resume_retries = opts.resume_retries;
-
-        std::thread::scope(|scope| -> Result<SessionOutcome> {
-            // ---- download thread: read + parse + forward only
-            let q_prod = queue.clone();
-            let downloader = scope.spawn(move || -> Result<(f64, u64)> {
-                let mut run = || -> Result<(f64, u64)> {
-                    let mut t_last = 0.0;
-                    let mut retries_left = resume_retries;
-                    while !dl.is_done() {
-                        for te in next_events_resuming(&mut dl, &mut retries_left)? {
-                            t_last = te.t;
-                            if !q_prod.push(te) {
-                                anyhow::bail!("event queue closed early");
-                            }
-                        }
-                    }
-                    Ok((t_last, dl.bytes_received()))
-                };
-                // Always close the queue — also on error — or the worker
-                // would block forever on pop().
-                let result = run();
-                q_prod.close();
-                result
-            });
-
-            // ---- worker: assemble + reconstruct + infer
-            let mut timeline = Timeline::new();
-            timeline.push(0.0, 0, EventKind::StageTransferStart);
-            let mut asm: Option<Assembler> = None;
-            let mut results: Vec<StageResult> = Vec::new();
-            let mut pending_stage: Option<(usize, f64)> = None;
-
-            // If the worker errors, close the queue so the download
-            // thread cannot block pushing into a full queue.
-            let worker_result = (|| -> Result<()> {
-            loop {
-                // Drain everything available; keep only the newest
-                // completed stage if the policy allows skipping.
-                let next = if pending_stage.is_some() {
-                    queue.try_pop()
-                } else {
-                    queue.pop()
-                };
-                match next {
-                    Some(TimedEvent { t, event }) => match event {
-                        ParserEvent::Manifest(m) => {
-                            asm = Some(Assembler::new(*m));
-                        }
-                        ParserEvent::Fragment {
-                            stage,
-                            tensor,
-                            payload,
-                        } => {
-                            let asm = asm.as_mut().expect("manifest precedes fragments");
-                            if let Some(done) = asm.absorb(stage, tensor, &payload)? {
-                                timeline.push(t, done, EventKind::StageTransferDone);
-                                if done + 1 < asm.manifest().schedule.stages() {
-                                    timeline.push(t, done + 1, EventKind::StageTransferStart);
-                                }
-                                match policy {
-                                    InferencePolicy::LatestOnly => {
-                                        pending_stage = Some((done, t)); // overwrite older
-                                    }
-                                    _ => {
-                                        if should_infer(policy, done, asm) {
-                                            let r = reconstruct_and_infer(
-                                                asm,
-                                                session,
-                                                images,
-                                                n,
-                                                start,
-                                                &mut timeline,
-                                                t,
-                                            )?;
-                                            results.push(r);
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    },
-                    None => {
-                        // Queue idle (or closed): run a pending
-                        // (possibly skipped-to) stage, else finish.
-                        if let Some((_stage, t)) = pending_stage.take() {
-                            let asm_ref = asm.as_mut().expect("manifest precedes fragments");
-                            let r = reconstruct_and_infer(
-                                asm_ref,
-                                session,
-                                images,
-                                n,
-                                start,
-                                &mut timeline,
-                                t,
-                            )?;
-                            results.push(r);
-                            continue;
-                        }
-                        // pending was None, so this None came from a
-                        // blocking pop() on a closed + drained queue.
-                        break;
-                    }
-                }
-            }
-            Ok(())
-            })();
-            if worker_result.is_err() {
-                queue.close();
-            }
-
-            let dl_result = downloader.join().expect("download thread");
-            worker_result?; // a worker error is the root cause — report it
-            let (t_transfer_complete, bytes) = dl_result?;
-            let t_total = results
-                .last()
-                .map(|r| r.t_output_ready)
-                .unwrap_or(t_transfer_complete)
-                .max(t_transfer_complete);
-            Ok(SessionOutcome {
-                results,
-                t_transfer_complete,
-                t_total,
-                bytes,
-                timeline,
-            })
-        })
-    }
-}
-
-fn should_infer(policy: InferencePolicy, done_stage: usize, asm: &Assembler) -> bool {
-    match policy {
-        InferencePolicy::EveryStage => true,
-        InferencePolicy::LatestOnly => true,
-        InferencePolicy::FinalOnly => done_stage + 1 == asm.manifest().schedule.stages(),
-    }
-}
-
-fn reconstruct_and_infer(
-    asm: &mut Assembler,
-    session: &ModelSession,
-    images: &[f32],
-    n: usize,
-    start: Instant,
-    timeline: &mut Timeline,
-    t_transfer_done: f64,
-) -> Result<StageResult> {
-    let stage = asm.stages_complete() - 1;
-    let cum_bits = asm.cum_bits();
-    let t0 = start.elapsed().as_secs_f64();
-    timeline.push(t0, stage, EventKind::ReconstructStart);
-    asm.reconstruct()?;
-    let t1 = start.elapsed().as_secs_f64();
-    timeline.push(t1, stage, EventKind::ReconstructDone);
-    timeline.push(t1, stage, EventKind::InferStart);
-    let output = session.infer(images, n, asm.flat())?;
-    let t2 = start.elapsed().as_secs_f64();
-    timeline.push(t2, stage, EventKind::InferDone);
-    timeline.push(t2, stage, EventKind::OutputReady);
-    Ok(StageResult {
-        stage,
-        cum_bits,
-        output,
-        t_transfer_done,
-        t_output_ready: t2,
-    })
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::models::Registry;

@@ -1,0 +1,1499 @@
+//! `ProgressiveSession` — the unified, event-driven client surface.
+//!
+//! One builder subsumes what used to be four separate entry points
+//! (progressive fetch, resume, cache, multiplex): callers drive a typed
+//! [`SessionEvent`] stream — blocking iteration via
+//! [`ProgressiveSession::next_event`] / [`ProgressiveSession::events`],
+//! or non-blocking polling via [`ProgressiveSession::try_event`] — and,
+//! when a runtime is bound, get an
+//! [`ApproxModel`](crate::runtime::ApproxModel) handle that atomically
+//! upgrades in place as stages complete. That handle is what makes
+//! mid-download serving compose: hand it to
+//! [`Router::bind`](crate::coordinator::Router::bind) and the
+//! coordinator answers inference requests with the stage-*k* model while
+//! stages *k+1…* are still streaming.
+//!
+//! Event order per completed stage `k`:
+//! `StageComplete(k)` → `ModelReady(k)` (weights published) →
+//! `Inference(k)` (if a workload is configured), with `Resumed` markers
+//! wherever the transfer continued from a cache prefix or a reconnect,
+//! and exactly one final `Finished`. Stage indices are strictly
+//! increasing and never duplicated, including across resumes — the
+//! invariants `tests/session_events.rs` property-checks.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use prognet::client::session::{ProgressiveSession, SessionEvent};
+//! use prognet::runtime::{Engine, ModelSession};
+//! use prognet::server::service::ServerConfig;
+//! use prognet::server::{Repository, Server};
+//!
+//! # fn main() -> prognet::Result<()> {
+//! let reg = prognet::testutil::fixture::executable_models("doc-session")?;
+//! let manifest = reg.get("dense3")?.clone();
+//! let server = Server::start(
+//!     "127.0.0.1:0",
+//!     Arc::new(Repository::new(reg)),
+//!     ServerConfig::default(),
+//! )?;
+//! let session = Arc::new(ModelSession::load(&Engine::reference(), &manifest)?);
+//! let images = vec![0.5f32; manifest.input_numel()];
+//!
+//! let handle = ProgressiveSession::builder("dense3")
+//!     .addr(server.addr())
+//!     .runtime("dense3", session)
+//!     .workload(images, 1)
+//!     .start()?;
+//! // the hot-swappable model is available immediately …
+//! let approx = handle.approx_model().expect("runtime bound").clone();
+//! let mut stages = 0;
+//! while let Some(ev) = handle.next_event() {
+//!     if let SessionEvent::StageComplete { stage, .. } = ev {
+//!         stages = stage + 1;
+//!     }
+//! }
+//! assert_eq!(stages, 8);
+//! // … and has been upgraded in place to full precision
+//! assert_eq!(approx.cum_bits(), 16);
+//! let report = handle.finish()?;
+//! assert_eq!(report.results.len(), 8);
+//! # Ok(()) }
+//! ```
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::assembler::Assembler;
+use super::cache::ModelCache;
+use super::downloader::{Downloader, TimedEvent};
+use crate::coordinator::scheduler::{interleave_stages, InterleaveModel};
+use crate::format::{FrameParser, ParserEvent, PnetReader};
+use crate::metrics::{EventKind, Timeline};
+use crate::quant::Schedule;
+use crate::runtime::{ApproxModel, InferOutput, ModelSession};
+use crate::server::proto::FetchRequest;
+use crate::server::service::request_on;
+use crate::util::pool::BoundedQueue;
+
+/// Serial (paper "w/o concurrent") vs concurrent (§III-C) execution.
+///
+/// Serial blocks the socket while each stage reconstructs and infers (a
+/// small `SO_RCVBUF` makes the sender actually stall); concurrent keeps
+/// the transfer flowing while a worker assembles and infers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    Serial,
+    Concurrent,
+}
+
+/// Which completed stages trigger an inference pass over the workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferencePolicy {
+    /// Infer at every completed stage (the paper's 2→4→…→16 run).
+    EveryStage,
+    /// Skip to the newest complete stage when inference lags the link.
+    LatestOnly,
+    /// Only infer once the final stage arrived (singleton behaviour).
+    FinalOnly,
+}
+
+/// One intermediate (or final) inference result.
+#[derive(Debug, Clone)]
+pub struct StageResult {
+    pub stage: usize,
+    pub cum_bits: u32,
+    pub output: InferOutput,
+    /// seconds since fetch start when the stage's bytes had arrived
+    pub t_transfer_done: f64,
+    /// seconds since fetch start when this result became visible
+    pub t_output_ready: f64,
+}
+
+/// Outcome of a full progressive session (the pre-event-stream shape,
+/// still returned by the deprecated wrappers).
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    pub results: Vec<StageResult>,
+    /// wall time until the last byte arrived
+    pub t_transfer_complete: f64,
+    /// wall time until the last output was shown (the paper's "total
+    /// execution time")
+    pub t_total: f64,
+    pub bytes: u64,
+    pub timeline: Timeline,
+}
+
+/// Where a [`SessionEvent::Resumed`] continuation came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResumeSource {
+    /// Stages replayed from the on-disk partial-download cache; the
+    /// network fetch starts at the cached stage boundary.
+    Cache,
+    /// The connection dropped and the session reconnected at the last
+    /// complete stage boundary.
+    Reconnect,
+}
+
+/// Transfer/serving totals reported by [`SessionEvent::Finished`] and
+/// [`SessionReport::summary`].
+#[derive(Debug, Clone)]
+pub struct SessionSummary {
+    /// wall time until the last byte arrived (0 for a pure cache replay)
+    pub t_transfer_complete: f64,
+    /// wall time until the last output was shown
+    pub t_total: f64,
+    /// body bytes received over the network
+    pub bytes: u64,
+    /// resumes performed (cache prefix + reconnects)
+    pub resumed: usize,
+    /// true when the whole container was replayed from the local cache
+    pub cache_hit: bool,
+}
+
+/// Typed events of a running session, in delivery order.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// All fragments of `stage` arrived and were absorbed.
+    StageComplete {
+        model: String,
+        stage: usize,
+        /// cumulative bits after this stage
+        cum_bits: u32,
+        /// seconds since session start
+        t: f64,
+    },
+    /// The stage's reconstruction was published: the session's
+    /// [`ApproxModel`](crate::runtime::ApproxModel) now serves these
+    /// weights. Never precedes the matching `StageComplete`.
+    ModelReady {
+        model: String,
+        stage: usize,
+        cum_bits: u32,
+        /// the handle's publish counter after the upgrade
+        version: u64,
+        t: f64,
+    },
+    /// An inference pass over the configured workload finished.
+    Inference { model: String, result: StageResult },
+    /// The transfer continued from a cache prefix or a reconnect; no
+    /// stage event is ever re-emitted after a resume.
+    Resumed {
+        model: String,
+        /// first stage the continued transfer delivers
+        stage: usize,
+        /// 1-based resume counter within this session
+        attempt: usize,
+        source: ResumeSource,
+    },
+    /// The session is done; always the last event.
+    Finished(SessionSummary),
+}
+
+/// Everything the driver hands back once the event stream closes.
+pub struct SessionReport {
+    /// Per-stage inference results (empty without a workload).
+    pub results: Vec<StageResult>,
+    /// Final assemblers by model name (codes + last reconstruction).
+    pub assemblers: HashMap<String, Assembler>,
+    /// Transfer/reconstruct/infer timeline (single-model sessions).
+    pub timeline: Timeline,
+    /// Totals, identical to the `Finished` event's payload.
+    pub summary: SessionSummary,
+    /// Wire requests issued (1 + reconnects, or one per stage window for
+    /// multiplexed sessions).
+    pub requests: usize,
+    /// Executed (model, stage) delivery order.
+    pub order: Vec<(String, usize)>,
+}
+
+impl SessionReport {
+    /// The final assembler of `model`, if the session completed it.
+    pub fn assembler(&self, model: &str) -> Option<&Assembler> {
+        self.assemblers.get(model)
+    }
+
+    /// Collapse into the legacy [`SessionOutcome`] shape.
+    pub fn into_outcome(self) -> SessionOutcome {
+        SessionOutcome {
+            results: self.results,
+            t_transfer_complete: self.summary.t_transfer_complete,
+            t_total: self.summary.t_total,
+            bytes: self.summary.bytes,
+            timeline: self.timeline,
+        }
+    }
+}
+
+/// One model of a session (multiplexed sessions carry several).
+#[derive(Debug, Clone)]
+struct ModelSpec {
+    request: FetchRequest,
+    /// relative bandwidth share for multiplexed delivery (> 0)
+    priority: f64,
+}
+
+#[derive(Clone)]
+struct Workload {
+    images: Vec<f32>,
+    n: usize,
+}
+
+/// Builder for a [`ProgressiveSession`]. Construct via
+/// [`ProgressiveSession::builder`] (single model) or
+/// [`ProgressiveSession::multiplex`] (several models, one connection).
+pub struct SessionBuilder {
+    addr: Option<SocketAddr>,
+    specs: Vec<ModelSpec>,
+    mode: ExecMode,
+    policy: InferencePolicy,
+    resume_retries: usize,
+    cache_dir: Option<PathBuf>,
+    runtimes: HashMap<String, Arc<ModelSession>>,
+    workload: Option<Workload>,
+    /// applied to every spec at `start()`, so setter order doesn't matter
+    speed_override: Option<f64>,
+    schedule_override: Option<Schedule>,
+    /// stage-interleaved delivery over one keep-alive connection — set by
+    /// [`ProgressiveSession::multiplex`], honoured even for one model so
+    /// the wrapper keeps its per-stage request accounting
+    multiplex: bool,
+}
+
+impl SessionBuilder {
+    fn new(multiplex: bool) -> Self {
+        Self {
+            addr: None,
+            specs: Vec::new(),
+            mode: ExecMode::Concurrent,
+            policy: InferencePolicy::EveryStage,
+            resume_retries: 2,
+            cache_dir: None,
+            runtimes: HashMap::new(),
+            workload: None,
+            speed_override: None,
+            schedule_override: None,
+            multiplex,
+        }
+    }
+
+    /// Server address (required).
+    pub fn addr(mut self, addr: SocketAddr) -> Self {
+        self.addr = Some(addr);
+        self
+    }
+
+    /// Replace the (single) model's fetch request wholesale — schedule,
+    /// speed override, etc. Panics on multiplexed builders; use
+    /// [`SessionBuilder::add_model`] there.
+    pub fn request(mut self, request: FetchRequest) -> Self {
+        assert_eq!(
+            self.specs.len(),
+            1,
+            "request() configures a single-model session"
+        );
+        self.specs[0].request = request;
+        self
+    }
+
+    /// Add one model to a multiplexed session.
+    pub fn add_model(mut self, request: FetchRequest, priority: f64) -> Self {
+        self.specs.push(ModelSpec { request, priority });
+        self
+    }
+
+    /// Serial vs concurrent execution (default concurrent).
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Which stages run workload inference (default every stage).
+    pub fn policy(mut self, policy: InferencePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Server-side bandwidth shaping override, MB/s. Applies to every
+    /// model of the session at `start()`, regardless of whether the
+    /// model was added before or after this call.
+    pub fn speed_mbps(mut self, mbps: f64) -> Self {
+        self.speed_override = Some(mbps);
+        self
+    }
+
+    /// Progressive schedule override. Applies to every model of the
+    /// session at `start()`, regardless of call order.
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule_override = Some(schedule);
+        self
+    }
+
+    /// On a dropped connection, reconnect at the last complete stage
+    /// boundary up to this many times (default 2; 0 = fail fast).
+    /// Single-model sessions only — a multiplexed session fails fast
+    /// (see [`ProgressiveSession::multiplex`]).
+    pub fn resume_retries(mut self, retries: usize) -> Self {
+        self.resume_retries = retries;
+        self
+    }
+
+    /// Enable the on-disk cache: completed containers replay without the
+    /// network, partial downloads persist at every stage boundary, and a
+    /// later session resumes from the last cached complete stage.
+    /// Single-model sessions only.
+    pub fn cache_dir<P: Into<PathBuf>>(mut self, dir: P) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Bind a compiled runtime session for `model`: each completed stage
+    /// is reconstructed and published into an
+    /// [`ApproxModel`](crate::runtime::ApproxModel) (→ `ModelReady`
+    /// events and mid-download serving).
+    pub fn runtime(mut self, model: &str, session: Arc<ModelSession>) -> Self {
+        self.runtimes.insert(model.to_string(), session);
+        self
+    }
+
+    /// Run inference over `images` (`n` samples) per the policy at each
+    /// completed stage (→ `Inference` events). Requires a bound runtime;
+    /// single-model sessions only.
+    pub fn workload(mut self, images: Vec<f32>, n: usize) -> Self {
+        self.workload = Some(Workload { images, n });
+        self
+    }
+
+    /// Spawn the session driver and return the live handle.
+    pub fn start(mut self) -> Result<ProgressiveSession> {
+        anyhow::ensure!(!self.specs.is_empty(), "no models requested");
+        // apply session-wide overrides now, so setter order is irrelevant
+        for s in &mut self.specs {
+            if let Some(mbps) = self.speed_override {
+                s.request = s.request.clone().with_speed(mbps);
+            }
+            if let Some(sched) = &self.schedule_override {
+                s.request = s.request.clone().with_schedule(sched.clone());
+            }
+        }
+        let addr = self
+            .addr
+            .context("server address not set (SessionBuilder::addr)")?;
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.specs {
+            anyhow::ensure!(
+                seen.insert(s.request.model.clone()),
+                "duplicate model '{}' in session",
+                s.request.model
+            );
+            anyhow::ensure!(
+                s.request.offset == 0,
+                "sessions resume by stage range, not byte offset"
+            );
+        }
+        anyhow::ensure!(
+            self.multiplex || self.specs.len() == 1,
+            "use ProgressiveSession::multiplex() for multi-model sessions"
+        );
+        if self.workload.is_some() {
+            anyhow::ensure!(
+                !self.multiplex,
+                "a per-stage inference workload requires a single-model session"
+            );
+            let m = &self.specs[0].request.model;
+            anyhow::ensure!(
+                self.runtimes.contains_key(m),
+                "workload set but no runtime bound for '{m}' (SessionBuilder::runtime)"
+            );
+        }
+        if self.cache_dir.is_some() {
+            anyhow::ensure!(
+                !self.multiplex,
+                "the download cache supports single-model sessions"
+            );
+            anyhow::ensure!(
+                self.specs[0].request.stages.is_none(),
+                "the download cache stores whole containers; drop the stage range"
+            );
+        }
+
+        let mut approx: HashMap<String, ApproxModel> = HashMap::new();
+        for spec in &self.specs {
+            if let Some(sess) = self.runtimes.get(&spec.request.model) {
+                approx.insert(spec.request.model.clone(), ApproxModel::new(sess.clone()));
+            }
+        }
+
+        let events: BoundedQueue<SessionEvent> = BoundedQueue::new(1024);
+        let q = events.clone();
+        let approx2 = approx.clone();
+        let cfg = DriverConfig {
+            addr,
+            specs: self.specs,
+            mode: self.mode,
+            policy: self.policy,
+            resume_retries: self.resume_retries,
+            cache_dir: self.cache_dir,
+            workload: self.workload,
+            multiplex: self.multiplex,
+        };
+        let driver = std::thread::Builder::new()
+            .name("prognet-session".into())
+            .spawn(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    drive(cfg, &q, &approx2)
+                }));
+                // always close the stream — also on error/panic — or the
+                // consumer would block forever on next_event()
+                q.close();
+                match out {
+                    Ok(res) => res,
+                    Err(_) => Err(anyhow::anyhow!("session driver panicked")),
+                }
+            })
+            .expect("spawn session driver");
+        Ok(ProgressiveSession {
+            events,
+            approx,
+            driver: Some(driver),
+        })
+    }
+}
+
+/// A running progressive session: a typed event stream plus hot-swapping
+/// model handles. See the [module docs](crate::client::session) for the
+/// event protocol.
+pub struct ProgressiveSession {
+    events: BoundedQueue<SessionEvent>,
+    approx: HashMap<String, ApproxModel>,
+    driver: Option<JoinHandle<Result<SessionReport>>>,
+}
+
+impl ProgressiveSession {
+    /// Builder for a single-model session.
+    pub fn builder(model: &str) -> SessionBuilder {
+        let mut b = SessionBuilder::new(false);
+        b.specs.push(ModelSpec {
+            request: FetchRequest::new(model),
+            priority: 1.0,
+        });
+        b
+    }
+
+    /// Builder for a multiplexed session: several models interleaved by
+    /// weighted-fair priority over a single keep-alive connection. Add
+    /// models with [`SessionBuilder::add_model`].
+    ///
+    /// Multiplexed limitations (single-model sessions support all of
+    /// these): [`SessionBuilder::mode`] is ignored — delivery is one
+    /// request at a time on one connection; a dropped connection fails
+    /// fast instead of resuming ([`SessionBuilder::resume_retries`] does
+    /// not apply); [`SessionBuilder::policy`] only controls whether
+    /// intermediate stages are published (`FinalOnly` publishes just the
+    /// last stage of each runtime-bound model).
+    pub fn multiplex() -> SessionBuilder {
+        SessionBuilder::new(true)
+    }
+
+    /// Blocking: the next event, or `None` once the stream closed. After
+    /// `None`, call [`ProgressiveSession::finish`] for the report.
+    pub fn next_event(&self) -> Option<SessionEvent> {
+        self.events.pop()
+    }
+
+    /// Non-blocking poll: `None` when no event is currently queued (the
+    /// session may still be running).
+    pub fn try_event(&self) -> Option<SessionEvent> {
+        self.events.try_pop()
+    }
+
+    /// Blocking iterator over the remaining events.
+    pub fn events(&self) -> Events<'_> {
+        Events(self)
+    }
+
+    /// The hot-swappable handle of `model` (present when a runtime was
+    /// bound). Clone it to share with a coordinator.
+    pub fn approx(&self, model: &str) -> Option<&ApproxModel> {
+        self.approx.get(model)
+    }
+
+    /// Single-model convenience accessor for [`ProgressiveSession::approx`].
+    pub fn approx_model(&self) -> Option<&ApproxModel> {
+        if self.approx.len() == 1 {
+            self.approx.values().next()
+        } else {
+            None
+        }
+    }
+
+    /// Drain any unread events, wait for the driver, and return the
+    /// final report (or the driver's error).
+    pub fn finish(mut self) -> Result<SessionReport> {
+        while self.events.pop().is_some() {}
+        let driver = self.driver.take().expect("driver joined once");
+        match driver.join() {
+            Ok(report) => report,
+            Err(_) => anyhow::bail!("session driver panicked"),
+        }
+    }
+
+    /// Drive the session to completion, discarding events. Equivalent to
+    /// [`ProgressiveSession::finish`] right after `start()`.
+    pub fn run(self) -> Result<SessionReport> {
+        self.finish()
+    }
+}
+
+impl Drop for ProgressiveSession {
+    fn drop(&mut self) {
+        // A consumer bailing early closes the stream; the driver notices
+        // at its next event and unwinds instead of blocking forever.
+        self.events.close();
+    }
+}
+
+/// Blocking event iterator returned by [`ProgressiveSession::events`].
+pub struct Events<'a>(&'a ProgressiveSession);
+
+impl Iterator for Events<'_> {
+    type Item = SessionEvent;
+
+    fn next(&mut self) -> Option<SessionEvent> {
+        self.0.next_event()
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+struct DriverConfig {
+    addr: SocketAddr,
+    specs: Vec<ModelSpec>,
+    mode: ExecMode,
+    policy: InferencePolicy,
+    resume_retries: usize,
+    cache_dir: Option<PathBuf>,
+    workload: Option<Workload>,
+    multiplex: bool,
+}
+
+fn emit(q: &BoundedQueue<SessionEvent>, ev: SessionEvent) -> Result<()> {
+    anyhow::ensure!(q.push(ev), "session event stream closed by the consumer");
+    Ok(())
+}
+
+fn should_infer(policy: InferencePolicy, done_stage: usize, asm: &Assembler) -> bool {
+    match policy {
+        InferencePolicy::EveryStage => true,
+        InferencePolicy::LatestOnly => true,
+        InferencePolicy::FinalOnly => done_stage + 1 == asm.manifest().schedule.stages(),
+    }
+}
+
+/// Version-skew guard + reconstruct + publish + `ModelReady` emit,
+/// shared by the single-model and multiplexed paths. Timestamps the
+/// event at reconstruct-done time on `start`'s clock; returns
+/// `(cum_bits, t_reconstruct_done)`.
+fn publish_stage(
+    q: &BoundedQueue<SessionEvent>,
+    approx: &ApproxModel,
+    model: &str,
+    asm: &mut Assembler,
+    start: Instant,
+) -> Result<(u32, f64)> {
+    // registry/server version skew surfaces as an error, not a panic
+    // inside ApproxModel::publish
+    anyhow::ensure!(
+        asm.manifest().param_count() == approx.manifest().param_count,
+        "server container for '{model}' carries {} params but the bound \
+         runtime expects {}",
+        asm.manifest().param_count(),
+        approx.manifest().param_count
+    );
+    let stage = asm.stages_complete() - 1;
+    let cum_bits = asm.cum_bits();
+    asm.reconstruct()?;
+    let t1 = start.elapsed().as_secs_f64();
+    let version = approx.publish(asm.flat(), cum_bits);
+    emit(
+        q,
+        SessionEvent::ModelReady {
+            model: model.to_string(),
+            stage,
+            cum_bits,
+            version,
+            t: t1,
+        },
+    )?;
+    Ok((cum_bits, t1))
+}
+
+fn drive(
+    cfg: DriverConfig,
+    q: &BoundedQueue<SessionEvent>,
+    approx: &HashMap<String, ApproxModel>,
+) -> Result<SessionReport> {
+    if cfg.multiplex {
+        drive_multiplex(cfg, q, approx)
+    } else {
+        drive_single(cfg, q, approx)
+    }
+}
+
+/// Per-stage bookkeeping shared by the serial/concurrent/cache paths of
+/// a single-model session.
+struct StageCtx<'a> {
+    model: String,
+    policy: InferencePolicy,
+    workload: Option<&'a Workload>,
+    approx: Option<&'a ApproxModel>,
+    q: &'a BoundedQueue<SessionEvent>,
+    start: Instant,
+    timeline: Timeline,
+    results: Vec<StageResult>,
+    order: Vec<(String, usize)>,
+    resumed: usize,
+    reconnects: usize,
+}
+
+impl StageCtx<'_> {
+    fn emit(&self, ev: SessionEvent) -> Result<()> {
+        emit(self.q, ev)
+    }
+
+    fn emit_resumed(&mut self, stage: usize, source: ResumeSource) -> Result<()> {
+        self.resumed += 1;
+        if source == ResumeSource::Reconnect {
+            self.reconnects += 1;
+        }
+        let attempt = self.resumed;
+        self.emit(SessionEvent::Resumed {
+            model: self.model.clone(),
+            stage,
+            attempt,
+            source,
+        })
+    }
+
+    /// Timeline + `StageComplete` bookkeeping for a freshly completed
+    /// stage (no reconstruction yet).
+    fn note_stage(&mut self, asm: &Assembler, done: usize, t: f64) -> Result<()> {
+        self.timeline.push(t, done, EventKind::StageTransferDone);
+        if done + 1 < asm.manifest().schedule.stages() {
+            self.timeline.push(t, done + 1, EventKind::StageTransferStart);
+        }
+        self.order.push((self.model.clone(), done));
+        self.emit(SessionEvent::StageComplete {
+            model: self.model.clone(),
+            stage: done,
+            cum_bits: asm.manifest().schedule.cum_bits(done),
+            t,
+        })
+    }
+
+    /// Reconstruct the newest complete stage, publish it into the
+    /// session's `ApproxModel` (→ `ModelReady`), and run the workload if
+    /// one is configured (→ `Inference`). No-op without a bound runtime.
+    fn reconstruct_and_publish(&mut self, asm: &mut Assembler, t_transfer_done: f64) -> Result<()> {
+        let Some(approx) = self.approx else {
+            return Ok(());
+        };
+        let stage = asm.stages_complete() - 1;
+        let t0 = self.start.elapsed().as_secs_f64();
+        self.timeline.push(t0, stage, EventKind::ReconstructStart);
+        let (cum_bits, t1) = publish_stage(self.q, approx, &self.model, asm, self.start)?;
+        self.timeline.push(t1, stage, EventKind::ReconstructDone);
+        if let Some(w) = self.workload {
+            self.timeline.push(t1, stage, EventKind::InferStart);
+            let out = approx.infer(&w.images, w.n)?;
+            let t2 = self.start.elapsed().as_secs_f64();
+            self.timeline.push(t2, stage, EventKind::InferDone);
+            self.timeline.push(t2, stage, EventKind::OutputReady);
+            let result = StageResult {
+                stage,
+                cum_bits,
+                output: out.output,
+                t_transfer_done,
+                t_output_ready: t2,
+            };
+            self.emit(SessionEvent::Inference {
+                model: self.model.clone(),
+                result: result.clone(),
+            })?;
+            self.results.push(result);
+        }
+        Ok(())
+    }
+
+    /// Emit `Finished` and assemble the report. `connects` is the number
+    /// of initial wire connections (0 for a pure cache replay); reconnect
+    /// resumes are added on top.
+    fn finish_report(
+        self,
+        model: &str,
+        asm: Option<Assembler>,
+        t_transfer_complete: f64,
+        bytes: u64,
+        cache_hit: bool,
+        connects: usize,
+    ) -> Result<SessionReport> {
+        let t_total = self
+            .results
+            .last()
+            .map(|r| r.t_output_ready)
+            .unwrap_or(t_transfer_complete)
+            .max(t_transfer_complete);
+        let summary = SessionSummary {
+            t_transfer_complete,
+            t_total,
+            bytes,
+            resumed: self.resumed,
+            cache_hit,
+        };
+        self.emit(SessionEvent::Finished(summary.clone()))?;
+        let mut assemblers = HashMap::new();
+        if let Some(a) = asm {
+            assemblers.insert(model.to_string(), a);
+        }
+        Ok(SessionReport {
+            results: self.results,
+            assemblers,
+            timeline: self.timeline,
+            summary,
+            requests: connects + self.reconnects,
+            order: self.order,
+        })
+    }
+}
+
+/// Items forwarded from the download loop to the stage handler.
+enum WireItem {
+    Event(TimedEvent),
+    Resumed { stage: usize },
+}
+
+/// Read the socket until the window completes, transparently resuming at
+/// the last complete stage boundary while retries remain, and persisting
+/// the captured canonical prefix at every new stage boundary when a
+/// cache is attached. Returns (last event time, body bytes received,
+/// including any warm-start seed counted into the downloader).
+///
+/// Persistence rewrites the whole prefix per boundary (atomic tmp +
+/// rename — crash-safe, never a torn partial on disk) and the capture
+/// buffer holds the container alongside the assembler's code buffers:
+/// caching trades ~stage-count× write amplification and one extra
+/// container copy in RAM for byte-exact resumability. Containers are
+/// model-download sized (MBs), so both are deliberate.
+fn pump<F>(
+    dl: &mut Downloader,
+    retries: usize,
+    persist: Option<(&ModelCache, &FetchRequest)>,
+    mut sink: F,
+) -> Result<(f64, u64)>
+where
+    F: FnMut(WireItem) -> Result<()>,
+{
+    let mut retries_left = retries;
+    let mut t_last = 0.0;
+    let mut persisted = dl.stage_boundary();
+    while !dl.is_done() {
+        let events = loop {
+            match dl.next_events() {
+                Ok(evs) => break evs,
+                Err(e) => {
+                    // a failed reconnect (e.g. the outage is ongoing) also
+                    // spends a retry rather than aborting while budget
+                    // remains
+                    let mut last = e;
+                    loop {
+                        if retries_left == 0 || !dl.can_resume() {
+                            return Err(last);
+                        }
+                        retries_left -= 1;
+                        let boundary = dl.stage_boundary();
+                        crate::log_warn!(
+                            "download interrupted ({last:#}); resuming at stage {boundary}"
+                        );
+                        match dl.resume_at_stage(boundary) {
+                            Ok(()) => {
+                                sink(WireItem::Resumed { stage: boundary })?;
+                                break;
+                            }
+                            Err(re) => last = re,
+                        }
+                    }
+                }
+            }
+        };
+        for te in events {
+            t_last = te.t;
+            sink(WireItem::Event(te))?;
+        }
+        if let Some((cache, req)) = persist {
+            let boundary = dl.stage_boundary();
+            if boundary > persisted {
+                if let Some(cap) = dl.captured() {
+                    if let Err(e) = cache.store_partial(req, cap) {
+                        crate::log_warn!("cache persist failed: {e:#}");
+                    }
+                }
+                persisted = boundary;
+            }
+        }
+    }
+    Ok((t_last, dl.bytes_received()))
+}
+
+/// Replay a complete cached container: the full event stream without the
+/// network.
+fn replay_container(
+    mut ctx: StageCtx<'_>,
+    model: &str,
+    bytes: &[u8],
+) -> Result<SessionReport> {
+    ctx.timeline.push(0.0, 0, EventKind::StageTransferStart);
+    let mut parser = FrameParser::new();
+    let mut asm: Option<Assembler> = None;
+    for ev in parser.feed(bytes)? {
+        match ev {
+            ParserEvent::Manifest(m) => asm = Some(Assembler::new(*m)),
+            ParserEvent::Fragment {
+                stage,
+                tensor,
+                payload,
+            } => {
+                let a = asm.as_mut().context("manifest precedes fragments")?;
+                if let Some(done) = a.absorb(stage, tensor, &payload)? {
+                    let t = ctx.start.elapsed().as_secs_f64();
+                    ctx.note_stage(a, done, t)?;
+                    if should_infer(ctx.policy, done, a) {
+                        ctx.reconstruct_and_publish(a, t)?;
+                    }
+                }
+            }
+        }
+    }
+    anyhow::ensure!(parser.is_done(), "cached container incomplete");
+    let asm = asm.context("cached container had no manifest")?;
+    ctx.finish_report(model, Some(asm), 0.0, 0, true, 0)
+}
+
+/// Try to warm-start from a persisted partial: absorb it silently, and
+/// only if the server accepts a stage-boundary resume emit the cached
+/// stages (each exactly once) followed by a `Resumed(Cache)` marker.
+/// Returns `None` for a cold start.
+/// On success returns the pre-seeded assembler, the resumed downloader,
+/// and the cached prefix length in bytes (already counted into the
+/// downloader's progress accounting, but *not* network traffic).
+fn warm_start(
+    ctx: &mut StageCtx<'_>,
+    cache: &ModelCache,
+    addr: &SocketAddr,
+    req: &FetchRequest,
+) -> Result<Option<(Assembler, Downloader, u64)>> {
+    let Some(part) = cache.load_partial(req) else {
+        return Ok(None);
+    };
+    let mut parser = FrameParser::new();
+    let Ok(events) = parser.feed(&part) else {
+        crate::log_warn!("cached partial for '{}' unreadable; refetching", req.model);
+        return Ok(None);
+    };
+    let mut asm: Option<Assembler> = None;
+    for ev in events {
+        match ev {
+            ParserEvent::Manifest(m) => asm = Some(Assembler::new(*m)),
+            ParserEvent::Fragment {
+                stage,
+                tensor,
+                payload,
+            } => {
+                let Some(a) = asm.as_mut() else {
+                    return Ok(None);
+                };
+                if a.absorb(stage, tensor, &payload).is_err() {
+                    return Ok(None);
+                }
+            }
+        }
+    }
+    let Some(mut asm) = asm else {
+        return Ok(None);
+    };
+    let boundary = asm.stages_complete();
+    if boundary == 0 || boundary >= asm.manifest().schedule.stages() {
+        // nothing usable (complete partials were promoted earlier)
+        return Ok(None);
+    }
+    let manifest = asm.manifest().clone();
+    let prefix_len = manifest
+        .stage_index()
+        .body_range(Some((0, boundary as u32)))?
+        .end;
+    anyhow::ensure!(
+        prefix_len <= part.len(),
+        "partial shorter than its parsed stages"
+    );
+    let mut dl = match Downloader::connect_resumed(addr, req, manifest, boundary, prefix_len as u64)
+    {
+        Ok(dl) => dl,
+        Err(e) => {
+            // stale partial (server re-encoded?) or refused range: restart
+            crate::log_warn!("cache resume failed ({e:#}); refetching '{}'", req.model);
+            return Ok(None);
+        }
+    };
+    dl.enable_capture(part[..prefix_len].to_vec());
+    // all timestamps — cached replays, network stages, reconstruct and
+    // inference — share the downloader's clock, so the timeline stays
+    // monotonic and excludes the pre-connect cache parsing
+    ctx.start = dl.start_instant();
+    // replay the cached stages as events — each stage exactly once …
+    for s in 0..boundary {
+        let t = ctx.start.elapsed().as_secs_f64();
+        ctx.note_stage(&asm, s, t)?;
+    }
+    // … reconstructing once at the boundary (skip-to-newest semantics)
+    let t = ctx.start.elapsed().as_secs_f64();
+    if should_infer(ctx.policy, boundary - 1, &asm) {
+        ctx.reconstruct_and_publish(&mut asm, t)?;
+    }
+    ctx.emit_resumed(boundary, ResumeSource::Cache)?;
+    Ok(Some((asm, dl, prefix_len as u64)))
+}
+
+fn drive_single(
+    cfg: DriverConfig,
+    q: &BoundedQueue<SessionEvent>,
+    approx_map: &HashMap<String, ApproxModel>,
+) -> Result<SessionReport> {
+    let DriverConfig {
+        addr,
+        specs,
+        mode,
+        policy,
+        resume_retries,
+        cache_dir,
+        workload,
+        multiplex: _,
+    } = cfg;
+    let req = specs.into_iter().next().expect("one spec").request;
+    let model = req.model.clone();
+    let mut ctx = StageCtx {
+        model: model.clone(),
+        policy,
+        workload: workload.as_ref(),
+        approx: approx_map.get(&model),
+        q,
+        start: Instant::now(),
+        timeline: Timeline::new(),
+        results: Vec::new(),
+        order: Vec::new(),
+        resumed: 0,
+        reconnects: 0,
+    };
+
+    let cache = match &cache_dir {
+        Some(dir) => Some(ModelCache::open(dir)?),
+        None => None,
+    };
+    if let Some(c) = &cache {
+        // a finished download that crashed before promotion
+        if let Some(part) = c.load_partial(&req) {
+            if PnetReader::from_bytes(&part).is_ok() {
+                let _ = c.store_complete(&req, &part);
+            }
+        }
+        if let Some(bytes) = c.load_complete(&req) {
+            return replay_container(ctx, &model, &bytes);
+        }
+    }
+
+    ctx.timeline.push(0.0, 0, EventKind::StageTransferStart);
+    let mut asm_opt: Option<Assembler> = None;
+    // bytes served from the cached prefix — included in the downloader's
+    // progress accounting but subtracted from the network-bytes summary
+    let mut seeded = 0u64;
+    let mut dl = match &cache {
+        Some(c) => match warm_start(&mut ctx, c, &addr, &req)? {
+            Some((asm, dl, prefix)) => {
+                asm_opt = Some(asm);
+                seeded = prefix;
+                dl
+            }
+            None => {
+                let mut dl = Downloader::connect(&addr, &req)?;
+                dl.enable_capture(Vec::new());
+                dl
+            }
+        },
+        None => Downloader::connect(&addr, &req)?,
+    };
+    // event times (TimedEvent.t) are relative to the downloader's start;
+    // align the reconstruct/infer clock to the same base (idempotent
+    // after a warm start, which already aligned it before emitting)
+    ctx.start = dl.start_instant();
+    let persist: Option<(&ModelCache, &FetchRequest)> = cache.as_ref().map(|c| (c, &req));
+
+    let (t_transfer_complete, bytes, captured) = match mode {
+        ExecMode::Serial => {
+            let _ = dl.set_small_recv_buffer();
+            let (t_last, bytes) = pump(&mut dl, resume_retries, persist, |item| match item {
+                WireItem::Resumed { stage } => ctx.emit_resumed(stage, ResumeSource::Reconnect),
+                WireItem::Event(TimedEvent { t, event }) => match event {
+                    ParserEvent::Manifest(m) => {
+                        asm_opt = Some(Assembler::new(*m));
+                        Ok(())
+                    }
+                    ParserEvent::Fragment {
+                        stage,
+                        tensor,
+                        payload,
+                    } => {
+                        let asm = asm_opt.as_mut().expect("manifest precedes fragments");
+                        if let Some(done) = asm.absorb(stage, tensor, &payload)? {
+                            ctx.note_stage(asm, done, t)?;
+                            if should_infer(ctx.policy, done, asm) {
+                                // Serial: block the download thread.
+                                ctx.reconstruct_and_publish(asm, t)?;
+                            }
+                        }
+                        Ok(())
+                    }
+                },
+            })?;
+            (t_last, bytes, dl.take_captured())
+        }
+        ExecMode::Concurrent => {
+            let wire: BoundedQueue<WireItem> = BoundedQueue::new(1024);
+            std::thread::scope(|scope| -> Result<(f64, u64, Option<Vec<u8>>)> {
+                // ---- download thread: read + parse + forward only
+                let wp = wire.clone();
+                let downloader =
+                    scope.spawn(move || -> (Result<(f64, u64)>, Option<Vec<u8>>) {
+                        let res = pump(&mut dl, resume_retries, persist, |item| {
+                            anyhow::ensure!(wp.push(item), "event queue closed early");
+                            Ok(())
+                        });
+                        // Always close the queue — also on error — or the
+                        // worker would block forever on pop().
+                        wp.close();
+                        (res, dl.take_captured())
+                    });
+
+                // ---- worker (this thread): assemble + reconstruct + infer
+                let mut pending: Option<f64> = None;
+                let worker: Result<()> = (|| {
+                    loop {
+                        // Drain everything available; keep only the newest
+                        // completed stage if the policy allows skipping.
+                        let next = if pending.is_some() {
+                            wire.try_pop()
+                        } else {
+                            wire.pop()
+                        };
+                        match next {
+                            Some(WireItem::Resumed { stage }) => {
+                                ctx.emit_resumed(stage, ResumeSource::Reconnect)?;
+                            }
+                            Some(WireItem::Event(TimedEvent { t, event })) => match event {
+                                ParserEvent::Manifest(m) => {
+                                    asm_opt = Some(Assembler::new(*m));
+                                }
+                                ParserEvent::Fragment {
+                                    stage,
+                                    tensor,
+                                    payload,
+                                } => {
+                                    let asm =
+                                        asm_opt.as_mut().expect("manifest precedes fragments");
+                                    if let Some(done) = asm.absorb(stage, tensor, &payload)? {
+                                        ctx.note_stage(asm, done, t)?;
+                                        if ctx.policy == InferencePolicy::LatestOnly {
+                                            pending = Some(t); // overwrite older
+                                        } else if should_infer(ctx.policy, done, asm) {
+                                            ctx.reconstruct_and_publish(asm, t)?;
+                                        }
+                                    }
+                                }
+                            },
+                            None => {
+                                // Queue idle (or closed): run a pending
+                                // (possibly skipped-to) stage, else finish.
+                                if let Some(t) = pending.take() {
+                                    let asm =
+                                        asm_opt.as_mut().expect("manifest precedes fragments");
+                                    ctx.reconstruct_and_publish(asm, t)?;
+                                    continue;
+                                }
+                                // pending was None, so this None came from
+                                // a blocking pop() on a closed queue.
+                                break;
+                            }
+                        }
+                    }
+                    Ok(())
+                })();
+                // If the worker errors, close the queue so the download
+                // thread cannot block pushing into a full queue.
+                if worker.is_err() {
+                    wire.close();
+                }
+                let (dl_res, captured) = downloader.join().expect("session download thread");
+                worker?; // a worker error is the root cause — report it
+                let (t_last, bytes) = dl_res?;
+                Ok((t_last, bytes, captured))
+            })?
+        }
+    };
+
+    if let (Some(c), Some(cap)) = (&cache, &captured) {
+        if let Err(e) = c.store_complete(&req, cap) {
+            crate::log_warn!("cache promote failed: {e:#}");
+        }
+    }
+    // `bytes` from the downloader counts the cached prefix; the summary
+    // reports genuine network traffic only
+    ctx.finish_report(
+        &model,
+        asm_opt,
+        t_transfer_complete,
+        bytes.saturating_sub(seeded),
+        false,
+        1,
+    )
+}
+
+/// Read exactly `remaining` body bytes (never more — the next response's
+/// status frame follows on the same stream) and feed them to the parser.
+fn read_stage_body(
+    stream: &mut TcpStream,
+    remaining: u64,
+    parser: &mut FrameParser,
+) -> Result<Vec<ParserEvent>> {
+    use std::io::Read;
+    let mut events = Vec::new();
+    let mut left = remaining as usize;
+    let mut buf = [0u8; 8192];
+    while left > 0 {
+        let want = left.min(buf.len());
+        let n = stream.read(&mut buf[..want])?;
+        anyhow::ensure!(n > 0, "connection closed with {left} body bytes left");
+        events.extend(parser.feed(&buf[..n])?);
+        left -= n;
+    }
+    Ok(events)
+}
+
+/// Pipelined multi-model delivery: ONE connection, many stage-range
+/// requests, interleaved across models by the coordinator's weighted-fair
+/// plan. Phase 1 fetches stage 0 of every model (yielding each manifest,
+/// hence each stage's exact wire size); phase 2 requests the remaining
+/// stages one at a time in plan order, keeping the connection alive.
+fn drive_multiplex(
+    cfg: DriverConfig,
+    q: &BoundedQueue<SessionEvent>,
+    approx_map: &HashMap<String, ApproxModel>,
+) -> Result<SessionReport> {
+    let addr = cfg.addr;
+    let specs = cfg.specs;
+    let start = Instant::now();
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true)?;
+
+    let mut assemblers: HashMap<String, Assembler> = HashMap::new();
+    let mut parsers: HashMap<String, FrameParser> = HashMap::new();
+    let mut bytes = 0u64;
+    let mut requests = 0usize;
+    let mut order: Vec<(String, usize)> = Vec::new();
+
+    // completion handler shared by both phases; publishes every stage of
+    // a runtime-bound model (FinalOnly defers to the last stage — the
+    // inference policies beyond that have no workload to govern here)
+    let policy = cfg.policy;
+    let stage_done = |assemblers: &mut HashMap<String, Assembler>,
+                          model: &str,
+                          done: usize,
+                          t: f64|
+     -> Result<()> {
+        let asm = assemblers.get_mut(model).expect("assembler exists");
+        emit(
+            q,
+            SessionEvent::StageComplete {
+                model: model.to_string(),
+                stage: done,
+                cum_bits: asm.manifest().schedule.cum_bits(done),
+                t,
+            },
+        )?;
+        if let Some(approx) = approx_map.get(model) {
+            if should_infer(policy, done, asm) {
+                publish_stage(q, approx, model, asm, start)?;
+            }
+        }
+        Ok(())
+    };
+
+    // Phase 1: stage 0 of every model — the manifest arrives with it,
+    // so stage sizes become known and the rest can be planned.
+    for spec in &specs {
+        let req = spec
+            .request
+            .clone()
+            .with_stages(0, 1)
+            .with_keep_alive(true);
+        let resp = request_on(&mut stream, &req)?;
+        let mut parser = FrameParser::for_stage_prefix(1);
+        let events = read_stage_body(&mut stream, resp.remaining, &mut parser)?;
+        anyhow::ensure!(parser.is_done(), "stage 0 of {} incomplete", req.model);
+        bytes += resp.remaining;
+        requests += 1;
+        order.push((req.model.clone(), 0));
+        let mut completed: Option<usize> = None;
+        for ev in events {
+            match ev {
+                ParserEvent::Manifest(man) => {
+                    assemblers.insert(req.model.clone(), Assembler::new(*man));
+                }
+                ParserEvent::Fragment {
+                    stage,
+                    tensor,
+                    payload,
+                } => {
+                    if let Some(done) = assemblers
+                        .get_mut(&req.model)
+                        .context("manifest precedes fragments")?
+                        .absorb(stage, tensor, &payload)?
+                    {
+                        completed = Some(done);
+                    }
+                }
+            }
+        }
+        if let Some(done) = completed {
+            stage_done(
+                &mut assemblers,
+                &req.model,
+                done,
+                start.elapsed().as_secs_f64(),
+            )?;
+        }
+        // the parser keeps the manifest; later windows reuse it
+        parsers.insert(req.model.clone(), parser);
+    }
+
+    // Phase 2: weighted-fair plan over the remaining stages.
+    let metas: Vec<InterleaveModel> = specs
+        .iter()
+        .map(|spec| {
+            let man = parsers[&spec.request.model]
+                .manifest()
+                .context("phase 1 always parses the manifest")?;
+            let idx = man.stage_index();
+            let stage_bytes: Vec<u64> = (1..man.schedule.stages())
+                .map(|s| idx.stage_span(s, s + 1).map(|r| r.len() as u64))
+                .collect::<Result<_>>()?;
+            Ok(InterleaveModel {
+                name: spec.request.model.clone(),
+                first_stage: 1,
+                stage_bytes,
+                priority: spec.priority,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let plan = interleave_stages(&metas);
+
+    for (i, entry) in plan.iter().enumerate() {
+        let spec = specs
+            .iter()
+            .find(|s| s.request.model == entry.model)
+            .expect("plan only contains requested models");
+        let keep = i + 1 < plan.len();
+        let req = spec
+            .request
+            .clone()
+            .with_stages(entry.stage as u32, entry.stage as u32 + 1)
+            .with_keep_alive(keep);
+        let resp = request_on(&mut stream, &req)?;
+        let parser = parsers
+            .get_mut(&entry.model)
+            .expect("parser created in phase 1");
+        parser.rewindow(entry.stage, entry.stage + 1)?;
+        let events = read_stage_body(&mut stream, resp.remaining, parser)?;
+        anyhow::ensure!(
+            parser.is_done(),
+            "stage {} of {} incomplete",
+            entry.stage,
+            entry.model
+        );
+        bytes += resp.remaining;
+        requests += 1;
+        order.push((entry.model.clone(), entry.stage));
+        let mut completed: Option<usize> = None;
+        for ev in events {
+            if let ParserEvent::Fragment {
+                stage,
+                tensor,
+                payload,
+            } = ev
+            {
+                if let Some(done) = assemblers
+                    .get_mut(&entry.model)
+                    .expect("assembler created in phase 1")
+                    .absorb(stage, tensor, &payload)?
+                {
+                    completed = Some(done);
+                }
+            }
+        }
+        if let Some(done) = completed {
+            stage_done(
+                &mut assemblers,
+                &entry.model,
+                done,
+                start.elapsed().as_secs_f64(),
+            )?;
+        }
+    }
+
+    let t = start.elapsed().as_secs_f64();
+    let summary = SessionSummary {
+        t_transfer_complete: t,
+        t_total: t,
+        bytes,
+        resumed: 0,
+        cache_hit: false,
+    };
+    emit(q, SessionEvent::Finished(summary.clone()))?;
+    Ok(SessionReport {
+        results: Vec::new(),
+        assemblers,
+        timeline: Timeline::new(),
+        summary,
+        requests,
+        order,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::fixture::synthetic_server;
+
+    #[test]
+    fn builder_rejects_inconsistent_configs() {
+        // no address
+        assert!(ProgressiveSession::builder("alpha").start().is_err());
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        // workload without a bound runtime
+        assert!(ProgressiveSession::builder("alpha")
+            .addr(addr)
+            .workload(vec![0.0; 4], 1)
+            .start()
+            .is_err());
+        // duplicate models
+        assert!(ProgressiveSession::multiplex()
+            .addr(addr)
+            .add_model(FetchRequest::new("alpha"), 1.0)
+            .add_model(FetchRequest::new("alpha"), 1.0)
+            .start()
+            .is_err());
+        // multiplexed cache
+        assert!(ProgressiveSession::multiplex()
+            .addr(addr)
+            .add_model(FetchRequest::new("alpha"), 1.0)
+            .add_model(FetchRequest::new("beta"), 1.0)
+            .cache_dir(std::env::temp_dir().join("prognet-nope"))
+            .start()
+            .is_err());
+        // no models at all
+        assert!(ProgressiveSession::multiplex().addr(addr).start().is_err());
+    }
+
+    #[test]
+    fn download_only_session_emits_stages_and_finishes() {
+        let (server, repo) = synthetic_server("sess-dlonly").unwrap();
+        let handle = ProgressiveSession::builder("alpha")
+            .addr(server.addr())
+            .start()
+            .unwrap();
+        let mut stages = Vec::new();
+        let mut finished = 0;
+        for ev in handle.events() {
+            match ev {
+                SessionEvent::StageComplete { stage, .. } => stages.push(stage),
+                SessionEvent::ModelReady { .. } | SessionEvent::Inference { .. } => {
+                    panic!("no runtime bound — no model/inference events")
+                }
+                SessionEvent::Finished(s) => {
+                    finished += 1;
+                    assert!(!s.cache_hit);
+                    assert_eq!(s.resumed, 0);
+                }
+                SessionEvent::Resumed { .. } => panic!("no resume expected"),
+            }
+        }
+        assert_eq!(stages, (0..8).collect::<Vec<_>>());
+        assert_eq!(finished, 1);
+        let report = handle.finish().unwrap();
+        let asm = report.assembler("alpha").unwrap();
+        assert!(asm.is_complete());
+        // assembled codes match a direct decode of the cached container
+        let container = repo
+            .container("alpha", &Schedule::paper_default())
+            .unwrap();
+        let r = PnetReader::from_bytes(&container).unwrap();
+        let mut direct = Assembler::new(r.manifest.clone());
+        for s in 0..r.manifest.schedule.stages() {
+            for t in 0..r.manifest.tensors.len() {
+                direct.absorb(s, t, &r.fragments[s][t]).unwrap();
+            }
+        }
+        assert_eq!(asm.codes_flat(), direct.codes_flat());
+        assert_eq!(report.summary.bytes, container.len() as u64);
+    }
+
+    #[test]
+    fn dropping_the_handle_cancels_the_driver() {
+        let (server, _repo) = synthetic_server("sess-drop").unwrap();
+        let handle = ProgressiveSession::builder("alpha")
+            .addr(server.addr())
+            .start()
+            .unwrap();
+        // read one event, then walk away — must not hang or leak a
+        // blocked driver (it unwinds at its next emit)
+        let _ = handle.next_event();
+        drop(handle);
+    }
+
+    #[test]
+    fn multiplexed_session_interleaves_on_one_connection() {
+        use std::sync::atomic::Ordering;
+        let (server, _repo) = synthetic_server("sess-mux").unwrap();
+        let handle = ProgressiveSession::multiplex()
+            .addr(server.addr())
+            .add_model(FetchRequest::new("alpha"), 4.0)
+            .add_model(FetchRequest::new("beta"), 1.0)
+            .start()
+            .unwrap();
+        let mut per_model: HashMap<String, Vec<usize>> = HashMap::new();
+        for ev in handle.events() {
+            if let SessionEvent::StageComplete { model, stage, .. } = ev {
+                per_model.entry(model).or_default().push(stage);
+            }
+        }
+        let report = handle.finish().unwrap();
+        assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
+        assert_eq!(report.requests, 16);
+        for name in ["alpha", "beta"] {
+            assert_eq!(per_model[name], (0..8).collect::<Vec<_>>(), "{name}");
+            assert!(report.assembler(name).unwrap().is_complete(), "{name}");
+        }
+    }
+}

@@ -1,5 +1,10 @@
 //! Dynamic batching: requests accumulate up to `max_batch` or `max_delay`,
 //! whichever first, then run as one executable call.
+//!
+//! A batcher binds to an [`ApproxModel`], not a finished session: every
+//! batch snapshots the newest published weights at formation time, so a
+//! model that is still downloading serves requests with whatever
+//! approximation has arrived and upgrades transparently (§III-C).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -10,7 +15,7 @@ use anyhow::Result;
 
 use super::state::WeightStore;
 use crate::metrics::Histogram;
-use crate::runtime::ModelSession;
+use crate::runtime::{ApproxModel, ModelSession};
 use crate::util::pool::BoundedQueue;
 
 /// Batching policy.
@@ -38,6 +43,8 @@ pub struct InferReply {
     pub output: Result<Vec<f32>>,
     /// weights version/bits used
     pub cum_bits: u32,
+    /// publish counter of the weight snapshot used
+    pub version: u64,
     /// queueing + execution latency
     pub latency: Duration,
 }
@@ -57,18 +64,19 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the batcher worker. Inference uses the freshest snapshot of
-    /// `weights` at batch formation time.
-    pub fn start(session: Arc<ModelSession>, weights: WeightStore, config: BatcherConfig) -> Self {
+    /// Spawn the batcher worker bound to a hot-swappable model. Each
+    /// batch uses the freshest published snapshot at formation time, so
+    /// the lane serves mid-download and upgrades as stages land.
+    pub fn bind(model: ApproxModel, config: BatcherConfig) -> Self {
         let queue: BoundedQueue<Request> = BoundedQueue::new(config.queue_cap);
         let q = queue.clone();
-        let input_numel = session.manifest().input_numel();
+        let input_numel = model.manifest().input_numel();
         let stats = Arc::new(std::sync::Mutex::new(Histogram::new()));
         let stats2 = stats.clone();
         let worker = std::thread::Builder::new()
-            .name(format!("batcher-{}", session.manifest().name))
+            .name(format!("batcher-{}", model.manifest().name))
             .spawn(move || {
-                batch_loop(q, session, weights, config, stats2);
+                batch_loop(q, model, config, stats2);
             })
             .expect("spawn batcher");
         Self {
@@ -77,6 +85,12 @@ impl Batcher {
             input_numel,
             stats,
         }
+    }
+
+    /// Convenience: bind a finished session plus a standalone
+    /// [`WeightStore`] (the pre-`ApproxModel` calling convention).
+    pub fn start(session: Arc<ModelSession>, weights: WeightStore, config: BatcherConfig) -> Self {
+        Self::bind(weights.bind(session), config)
     }
 
     /// Enqueue one request; the reply arrives on the returned receiver.
@@ -124,13 +138,12 @@ impl Drop for Batcher {
 
 fn batch_loop(
     queue: BoundedQueue<Request>,
-    session: Arc<ModelSession>,
-    weights: WeightStore,
+    model: ApproxModel,
     config: BatcherConfig,
     stats: Arc<std::sync::Mutex<Histogram>>,
 ) {
+    let session = model.session().clone();
     let input_numel = session.manifest().input_numel();
-    let dim = session.manifest().output_dim();
     loop {
         // Block for the first request of the batch.
         let Some(first) = queue.pop() else { break };
@@ -148,7 +161,7 @@ fn batch_loop(
             }
         }
 
-        let snap = weights.snapshot();
+        let snap = model.snapshot();
         let n = batch.len();
         let mut images = vec![0f32; n * input_numel];
         for (i, r) in batch.iter().enumerate() {
@@ -163,6 +176,7 @@ fn batch_loop(
                     let _ = req.reply.send(InferReply {
                         output: Ok(out.row(i).to_vec()),
                         cum_bits: snap.cum_bits,
+                        version: snap.version,
                         latency,
                     });
                 }
@@ -174,12 +188,12 @@ fn batch_loop(
                     let _ = req.reply.send(InferReply {
                         output: Err(anyhow::anyhow!("{msg}")),
                         cum_bits: snap.cum_bits,
+                        version: snap.version,
                         latency,
                     });
                 }
             }
         }
-        let _ = dim;
     }
 }
 
@@ -241,6 +255,28 @@ mod tests {
         }
         assert_eq!(answered, 50);
         assert_eq!(b.latency_stats().count(), 50);
+    }
+
+    #[test]
+    fn bound_batcher_serves_upgrading_weights() {
+        // fixture-backed (runs without artifacts): the batcher answers
+        // with whatever snapshot is published, and upgrades in place
+        let reg = crate::testutil::fixture::executable_models("batch-bind").unwrap();
+        let m = reg.get("dense3").unwrap().clone();
+        let engine = Engine::reference();
+        let session = Arc::new(ModelSession::load(&engine, &m).unwrap());
+        let approx = crate::runtime::ApproxModel::new(session);
+        let b = Batcher::bind(approx.clone(), BatcherConfig::default());
+        let img = vec![0.5f32; m.input_numel()];
+        approx.publish(&vec![0.0; m.param_count], 2);
+        let r1 = b.infer_blocking(img.clone()).unwrap();
+        assert_eq!(r1.cum_bits, 2);
+        assert_eq!(r1.version, 1);
+        approx.publish(&m.load_weights().unwrap(), 16);
+        let r2 = b.infer_blocking(img).unwrap();
+        assert_eq!(r2.cum_bits, 16);
+        assert_eq!(r2.version, 2);
+        assert_eq!(r2.output.unwrap().len(), m.classes);
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //!
 //! - [`state::WeightStore`] — hot-swappable weights (stage refinements
 //!   are published atomically; in-flight batches keep the snapshot they
-//!   started with).
+//!   started with). Binds to a compiled session as an
+//!   [`ApproxModel`](crate::runtime::ApproxModel).
 //! - [`batcher::Batcher`] — dynamic batching per model (max-batch /
-//!   max-delay policy, like vLLM-style serving front-ends).
-//! - [`router::Router`] — routes requests by model id to its batcher.
+//!   max-delay policy, like vLLM-style serving front-ends), bound to an
+//!   `ApproxModel` so batches serve mid-download reconstructions.
+//! - [`router::Router`] — routes requests by model id to its batcher;
+//!   [`Router::bind`] attaches a progressive session's `ApproxModel`.
 //! - [`scheduler::StageScheduler`] — §III-C decision logic: which
 //!   completed stages to run inference on, given measured inference cost
 //!   vs stage inter-arrival time.
@@ -24,4 +27,4 @@ pub use router::Router;
 pub use scheduler::{
     interleave_stages, InterleaveModel, SchedulerDecision, StagePlanEntry, StageScheduler,
 };
-pub use state::{SessionState, SessionTable, WeightStore};
+pub use state::{SessionState, SessionTable, WeightStore, WeightsVersion};

@@ -1,4 +1,11 @@
 //! Request router: model id → its dynamic batcher (lazily started).
+//!
+//! Each lane binds a [`Batcher`] to a hot-swappable
+//! [`ApproxModel`](crate::runtime::ApproxModel): lanes created lazily get
+//! a fresh empty cell fed via [`Router::publish_weights`], while
+//! [`Router::bind`] attaches an externally-driven handle (typically from
+//! a `client::session::ProgressiveSession`) so the router serves a model
+//! that is still downloading and upgrades as stages complete.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -6,9 +13,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig, InferReply};
-use super::state::WeightStore;
 use crate::models::Registry;
-use crate::runtime::{Engine, ModelSession};
+use crate::runtime::{ApproxModel, Engine, ModelSession};
 
 /// Multi-model inference front-end.
 pub struct Router {
@@ -20,7 +26,7 @@ pub struct Router {
 
 struct Lane {
     batcher: Batcher,
-    weights: WeightStore,
+    model: ApproxModel,
 }
 
 impl Router {
@@ -44,18 +50,44 @@ impl Router {
             manifest,
             &manifest.fwd_batches(),
         )?);
-        let weights = WeightStore::empty(manifest.param_count);
-        let batcher = Batcher::start(session, weights.clone(), self.config.clone());
-        let lane = Arc::new(Lane { batcher, weights });
+        let approx = ApproxModel::new(session);
+        let batcher = Batcher::bind(approx.clone(), self.config.clone());
+        let lane = Arc::new(Lane {
+            batcher,
+            model: approx,
+        });
         let mut lanes = self.lanes.lock().unwrap();
         // another thread may have raced us; keep the first
         Ok(lanes.entry(model.to_string()).or_insert(lane).clone())
     }
 
+    /// Bind an externally-driven [`ApproxModel`] as this model's lane: the
+    /// batcher serves every request against the handle's newest snapshot,
+    /// so a progressive session publishing into it makes the lane answer
+    /// mid-download and upgrade in place. Replaces any existing lane.
+    pub fn bind(&self, model: &str, approx: ApproxModel) {
+        let batcher = Batcher::bind(approx.clone(), self.config.clone());
+        let lane = Arc::new(Lane {
+            batcher,
+            model: approx,
+        });
+        self.lanes.lock().unwrap().insert(model.to_string(), lane);
+    }
+
+    /// The hot-swappable handle of an existing lane (lazy lanes are not
+    /// created by this accessor).
+    pub fn approx(&self, model: &str) -> Option<ApproxModel> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .get(model)
+            .map(|l| l.model.clone())
+    }
+
     /// Publish refined weights for a model (from the progressive client).
     pub fn publish_weights(&self, model: &str, flat: &[f32], cum_bits: u32) -> Result<()> {
         let lane = self.lane(model)?;
-        lane.weights.publish(flat, cum_bits);
+        lane.model.publish(flat, cum_bits);
         Ok(())
     }
 
@@ -65,7 +97,7 @@ impl Router {
             .lock()
             .unwrap()
             .get(model)
-            .map(|l| l.weights.ready())
+            .map(|l| l.model.ready())
             .unwrap_or(false)
     }
 
@@ -73,7 +105,7 @@ impl Router {
     pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<InferReply> {
         let lane = self.lane(model)?;
         anyhow::ensure!(
-            lane.weights.ready(),
+            lane.model.ready(),
             "model '{model}' has no published weights yet"
         );
         lane.batcher.infer_blocking(image)
@@ -87,7 +119,7 @@ impl Router {
     ) -> Result<std::sync::mpsc::Receiver<InferReply>> {
         let lane = self.lane(model)?;
         anyhow::ensure!(
-            lane.weights.ready(),
+            lane.model.ready(),
             "model '{model}' has no published weights yet"
         );
         lane.batcher.submit(image)
@@ -136,6 +168,30 @@ mod tests {
         let r = router.infer("mlp", img).unwrap();
         assert_eq!(r.output.unwrap().len(), 10);
         assert!(router.active_models().contains(&"mlp".to_string()));
+    }
+
+    #[test]
+    fn bound_lane_serves_external_approx_model() {
+        // fixture-backed (runs without artifacts): a lane bound to an
+        // external ApproxModel serves whatever its driver publishes
+        let reg = crate::testutil::fixture::executable_models("router-bind").unwrap();
+        let m = reg.get("dense3").unwrap().clone();
+        let engine = Engine::reference();
+        let router = Router::new(
+            engine.clone(),
+            crate::testutil::fixture::executable_models("router-bind2").unwrap(),
+            BatcherConfig::default(),
+        );
+        let session = Arc::new(ModelSession::load(&engine, &m).unwrap());
+        let approx = ApproxModel::new(session);
+        router.bind("dense3", approx.clone());
+        assert!(!router.model_ready("dense3"));
+        assert!(router.approx("dense3").is_some());
+        approx.publish(&m.load_weights().unwrap(), 16);
+        assert!(router.model_ready("dense3"));
+        let r = router.infer("dense3", vec![0.4f32; m.input_numel()]).unwrap();
+        assert_eq!(r.cum_bits, 16);
+        assert_eq!(r.output.unwrap().len(), m.classes);
     }
 
     #[test]

@@ -4,23 +4,20 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-/// Versioned, hot-swappable flat weights.
+use crate::runtime::{ApproxModel, ModelSession};
+
+pub use crate::runtime::WeightsVersion;
+
+/// Versioned, hot-swappable flat weights — a standalone weight cell not
+/// yet bound to a compiled session.
 ///
 /// The progressive client publishes each stage's reconstruction here; the
 /// batcher snapshots an `Arc` per batch, so refinement never blocks
-/// in-flight inference.
+/// in-flight inference. [`WeightStore::bind`] attaches a session, turning
+/// the cell into a servable [`ApproxModel`] that shares the same storage.
 #[derive(Clone)]
 pub struct WeightStore {
     inner: Arc<RwLock<WeightsVersion>>,
-}
-
-#[derive(Clone)]
-pub struct WeightsVersion {
-    pub flat: Arc<Vec<f32>>,
-    /// cumulative quantization bits of this snapshot (0 = none yet)
-    pub cum_bits: u32,
-    /// monotonically increasing publish counter
-    pub version: u64,
 }
 
 impl WeightStore {
@@ -51,6 +48,13 @@ impl WeightStore {
     /// Has any stage been published yet?
     pub fn ready(&self) -> bool {
         self.inner.read().unwrap().version > 0
+    }
+
+    /// Attach a compiled session to this cell: the returned
+    /// [`ApproxModel`] reads and writes the *same* versioned weights, so
+    /// existing `publish` calls keep feeding the bound model.
+    pub fn bind(&self, session: Arc<ModelSession>) -> ApproxModel {
+        ApproxModel::over(session, self.inner.clone())
     }
 }
 
@@ -168,6 +172,25 @@ mod tests {
         t.remove(a);
         assert_eq!(t.len(), 1);
         assert!(t.get(a).is_none());
+    }
+
+    #[test]
+    fn bound_approx_model_shares_the_cell() {
+        let reg = crate::testutil::fixture::executable_models("state-bind").unwrap();
+        let m = reg.get("dense3").unwrap();
+        let engine = crate::runtime::Engine::reference();
+        let session = Arc::new(crate::runtime::ModelSession::load(&engine, m).unwrap());
+        let ws = WeightStore::empty(m.param_count);
+        let approx = ws.bind(session);
+        assert!(!approx.ready());
+        // a publish through the store is visible through the model …
+        ws.publish(&m.load_weights().unwrap(), 16);
+        assert!(approx.ready());
+        assert_eq!(approx.cum_bits(), 16);
+        // … and vice versa
+        approx.publish(&vec![0.0; m.param_count], 2);
+        assert_eq!(ws.snapshot().cum_bits, 2);
+        assert_eq!(ws.snapshot().version, 2);
     }
 
     #[test]

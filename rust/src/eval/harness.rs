@@ -7,6 +7,7 @@
 //! virtual-time [`Link`](crate::netsim::Link) at the paper's speeds (see
 //! DESIGN.md §2 for why this preserves shape).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -269,6 +270,54 @@ pub fn run_exec_time(
     exec_time_row(manifest, &profile, schedule, link)
 }
 
+/// Table I measured **live** over real sockets instead of the virtual
+/// link: runs three `client::session::ProgressiveSession`s against a
+/// running server — singleton (`FinalOnly`), serial ("w/o concurrent"),
+/// and concurrent (§III-C) — and derives the execution-time row from
+/// wall clock. `session` must be able to execute batch `n` (any size on
+/// the reference backend; a compiled `fwd_b{n}` on PJRT).
+pub fn live_exec_row(
+    addr: std::net::SocketAddr,
+    manifest: &ModelManifest,
+    session: Arc<ModelSession>,
+    eval: &EvalSet,
+    n: usize,
+    speed_mbps: f64,
+) -> Result<ExecTimeRow> {
+    use crate::client::session::{ExecMode, InferencePolicy, ProgressiveSession, SessionOutcome};
+    let images = eval.image_batch(n).to_vec();
+    let run = |mode: ExecMode, policy: InferencePolicy| -> Result<SessionOutcome> {
+        let report = ProgressiveSession::builder(&manifest.name)
+            .addr(addr)
+            .mode(mode)
+            .policy(policy)
+            .speed_mbps(speed_mbps)
+            .runtime(&manifest.name, session.clone())
+            .workload(images.clone(), n)
+            .start()?
+            .run()?;
+        Ok(report.into_outcome())
+    };
+    let singleton = run(ExecMode::Concurrent, InferencePolicy::FinalOnly)?;
+    let serial = run(ExecMode::Serial, InferencePolicy::EveryStage)?;
+    let concurrent = run(ExecMode::Concurrent, InferencePolicy::EveryStage)?;
+    let first_output = concurrent
+        .results
+        .first()
+        .map(|r| r.t_output_ready)
+        .unwrap_or(concurrent.t_total);
+    Ok(ExecTimeRow {
+        model: manifest.name.clone(),
+        wire_bytes: concurrent.bytes,
+        singleton: singleton.t_total,
+        progressive_serial: serial.t_total,
+        progressive_concurrent: concurrent.t_total,
+        first_output,
+        timeline_serial: serial.timeline,
+        timeline_concurrent: concurrent.timeline,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +350,26 @@ mod tests {
         assert!((a16 - orig).abs() < 0.05, "16-bit {a16} vs orig {orig}");
         // mlp is the weakest model (manifest reports ~0.63 top-1 on 512)
         assert!(orig > 0.4, "mlp unexpectedly bad: {orig}");
+    }
+
+    #[test]
+    fn live_exec_row_measures_real_sessions() {
+        // fixture-backed (runs without artifacts): three real sessions
+        // against a shaped loopback server
+        let (server, repo) =
+            crate::testutil::fixture::executable_server_big("harness-live").unwrap();
+        let m = repo.registry().get("dense2b").unwrap().clone();
+        let engine = Engine::reference();
+        let session = Arc::new(ModelSession::load(&engine, &m).unwrap());
+        let eval = crate::testutil::fixture::synthetic_eval(&m, 8, 3);
+        let row = live_exec_row(server.addr(), &m, session, &eval, 4, 0.5).unwrap();
+        assert_eq!(row.timeline_concurrent.output_times().len(), 8);
+        assert!(row.first_output < row.progressive_concurrent);
+        assert!(row.progressive_serial > 0.0 && row.singleton > 0.0);
+        let container = repo
+            .container("dense2b", &Schedule::paper_default())
+            .unwrap();
+        assert_eq!(row.wire_bytes as usize, container.len());
     }
 
     #[test]

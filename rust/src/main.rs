@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use anyhow::Result;
-use prognet::client::{ProgressiveClient, ProgressiveOptions};
+use prognet::client::{ExecMode, ProgressiveSession, SessionEvent};
 use prognet::eval::{harness, EvalSet};
 use prognet::format::PnetReader;
 use prognet::metrics::Table;
@@ -40,10 +40,11 @@ fn usage() -> ! {
            models\n  \
            encode  --model NAME [--schedule 2,2,2,2,2,2,2,2] --out FILE\n  \
            inspect --file FILE\n  \
-           serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F]\n  \
-           fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F] [--backend B]\n  \
+           serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F] [--backend B]\n  \
+           fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F] [--backend B]\n          \
+                   [--resume-from-cache] [--cache-dir DIR]\n  \
            eval    --model NAME [--n 256] [--backend B]\n  \
-           study   [--users 29] [--seed 2021]\n\
+           study   [--users 29] [--seed 2021] [--backend B]\n\
          backends (B): reference (default, pure Rust) | pjrt (needs the\n\
          `pjrt` build feature + HLO artifacts); also via PROGNET_BACKEND"
     );
@@ -61,7 +62,7 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
 
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
-    let args = Args::from_env(2, &["serial", "qfwd", "verbose"])?;
+    let args = Args::from_env(2, &["serial", "qfwd", "verbose", "resume-from-cache"])?;
     match cmd.as_str() {
         "models" => cmd_models(),
         "encode" => cmd_encode(&args),
@@ -136,6 +137,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let file_cfg = prognet::util::config::ServeFileConfig::resolve(args)?;
+    // validated here so a typo fails at startup; a co-located coordinator
+    // (serve_e2e-style deployments) executes on this backend
+    let engine = engine_from_args(args)?;
     let repo = Arc::new(Repository::open_default()?);
     // pre-encode requested models so first fetches are warm
     for model in &file_cfg.preload {
@@ -148,15 +152,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server = Server::start(&file_cfg.addr, repo, config)?;
     println!(
-        "serving on {} (shaping: {:?} MB/s, schedule {}, {} preloaded) — Ctrl-C to stop",
+        "serving on {} (shaping: {:?} MB/s, schedule {}, {} preloaded, {} backend) — Ctrl-C to stop",
         server.addr(),
         file_cfg.speed_mbps,
         file_cfg.schedule,
-        file_cfg.preload.len()
+        file_cfg.preload.len(),
+        engine.backend_name()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Default on-disk cache location for `fetch --resume-from-cache`.
+fn default_cache_dir() -> std::path::PathBuf {
+    std::env::temp_dir().join("prognet-cache")
 }
 
 fn cmd_fetch(args: &Args) -> Result<()> {
@@ -166,41 +176,67 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     let engine = engine_from_args(args)?;
     let reg = Registry::open_default()?;
     let manifest = reg.get(model)?;
-    let session =
-        ModelSession::load_batches(&engine, manifest, &[manifest.best_fwd_batch(n)?])?;
+    let session = Arc::new(ModelSession::load_batches(
+        &engine,
+        manifest,
+        &[manifest.best_fwd_batch(n)?],
+    )?);
     let eval = EvalSet::load_named(&manifest.dataset)?;
     let images = eval.image_batch(n).to_vec();
 
-    let mut opts = if args.flag("serial") {
-        ProgressiveOptions::serial(model)
-    } else {
-        ProgressiveOptions::concurrent(model)
-    };
+    let mut builder = ProgressiveSession::builder(model)
+        .addr(addr)
+        .mode(if args.flag("serial") {
+            ExecMode::Serial
+        } else {
+            ExecMode::Concurrent
+        })
+        .runtime(model, session)
+        .workload(images, n);
     if let Some(speed) = args.get("speed-mbps") {
-        opts.request = opts.request.clone().with_speed(speed.parse()?);
+        builder = builder.speed_mbps(speed.parse()?);
     }
-    let client = ProgressiveClient::new(addr);
-    let outcome = client.fetch_and_infer(&opts, &session, &images, n)?;
+    if args.flag("resume-from-cache") || args.get("cache-dir").is_some() {
+        let dir = args
+            .get("cache-dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(default_cache_dir);
+        builder = builder.cache_dir(dir);
+    }
+
+    // drive the typed event stream; rows appear as stages land
+    let live = builder.start()?;
     let mut t = Table::new(
         &format!("Progressive fetch: {model} ({} backend)", engine.backend_name()),
         &["stage", "bits", "transfer done", "output ready", "top-1 on batch"],
     );
-    for r in &outcome.results {
-        let acc = prognet::eval::top1(&r.output, &eval.labels[..n], manifest.classes);
-        t.row(vec![
-            r.stage.to_string(),
-            r.cum_bits.to_string(),
-            fmt_secs(r.t_transfer_done),
-            fmt_secs(r.t_output_ready),
-            format!("{:.1}%", acc * 100.0),
-        ]);
+    while let Some(ev) = live.next_event() {
+        match ev {
+            SessionEvent::Inference { result: r, .. } => {
+                let acc = prognet::eval::top1(&r.output, &eval.labels[..n], manifest.classes);
+                t.row(vec![
+                    r.stage.to_string(),
+                    r.cum_bits.to_string(),
+                    fmt_secs(r.t_transfer_done),
+                    fmt_secs(r.t_output_ready),
+                    format!("{:.1}%", acc * 100.0),
+                ]);
+            }
+            SessionEvent::Resumed { stage, source, .. } => {
+                println!("(resumed at stage {stage}, {source:?})");
+            }
+            _ => {}
+        }
     }
+    let report = live.finish()?;
     println!("{}", t.render());
+    let s = &report.summary;
     println!(
-        "transfer complete {} | total {} | {}",
-        fmt_secs(outcome.t_transfer_complete),
-        fmt_secs(outcome.t_total),
-        fmt_bytes(outcome.bytes)
+        "transfer complete {} | total {} | {}{}",
+        fmt_secs(s.t_transfer_complete),
+        fmt_secs(s.t_total),
+        fmt_bytes(s.bytes),
+        if s.cache_hit { " (cache hit)" } else { "" }
     );
     Ok(())
 }
@@ -235,14 +271,22 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_study(args: &Args) -> Result<()> {
+    // study is a timing simulation, but it accepts --backend like the
+    // other commands so scripted sweeps can pass one set of flags; the
+    // chosen backend is echoed with the results
+    let engine = engine_from_args(args)?;
     let cfg = StudyConfig {
         users_per_group: args.get_usize("users", 29)?,
         seed: args.get_u64("seed", 2021)?,
         ..Default::default()
     };
     let rows = run_table3(&cfg);
+    let title = format!(
+        "Table III — active users of 'Find automatically' ({} backend)",
+        engine.backend_name()
+    );
     let mut t = Table::new(
-        "Table III — active users of 'Find automatically'",
+        &title,
         &["speed", "images/stage", "Group A", "Group B"],
     );
     let mut waits_a = Vec::new();

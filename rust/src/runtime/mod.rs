@@ -18,6 +18,9 @@
 //! - [`ModelSession`] — per-model staged execution: feeds images plus a
 //!   flat weight vector (or quantized planes for the fused-dequant path)
 //!   into the compiled model.
+//! - [`ApproxModel`] — a session plus a versioned, hot-swappable weight
+//!   cell: the progressive client publishes each stage's reconstruction,
+//!   readers serve inference from atomic snapshots mid-download.
 //!
 //! Weights are an *execute-time* input on purpose: §III-C inference runs
 //! concurrently with the ongoing transmission, so every completed stage
@@ -34,4 +37,4 @@ pub mod session;
 pub use backend::{Backend, CompiledModel};
 pub use engine::Engine;
 pub use reference::ReferenceBackend;
-pub use session::{InferOutput, ModelSession};
+pub use session::{ApproxModel, ApproxOutput, InferOutput, ModelSession, WeightsVersion};

@@ -1,13 +1,21 @@
 //! Per-model execution session: manifest-level validation in front of a
-//! backend-compiled model.
+//! backend-compiled model, plus the hot-swappable [`ApproxModel`] handle
+//! that upgrades in place as progressive stages land.
 //!
 //! A [`ModelSession`] binds one [`ModelManifest`] to one
 //! [`CompiledModel`](super::CompiledModel) and is what every consumer —
 //! the progressive client, the coordinator's batcher, the eval harness —
 //! holds to run inference. The session validates buffer sizes against the
 //! manifest; batching/padding strategy is the backend's business.
+//!
+//! An [`ApproxModel`] pairs a session with a versioned weight cell: the
+//! progressive client publishes each stage's reconstruction into it, and
+//! every reader (the coordinator's batcher, an application thread) infers
+//! against an atomic snapshot — so mid-download serving always uses the
+//! newest *complete* stage, and an in-flight batch keeps the weights it
+//! started with.
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
@@ -136,6 +144,133 @@ impl ModelSession {
     }
 }
 
+impl Clone for ModelSession {
+    /// Cheap handle clone: the compiled model is shared, not recompiled.
+    fn clone(&self) -> Self {
+        Self {
+            manifest: self.manifest.clone(),
+            model: self.model.clone(),
+        }
+    }
+}
+
+/// One published weight snapshot of an [`ApproxModel`].
+#[derive(Clone)]
+pub struct WeightsVersion {
+    /// Flat dequantized weights (shared, immutable once published).
+    pub flat: Arc<Vec<f32>>,
+    /// Cumulative quantization bits of this snapshot (0 = none yet).
+    pub cum_bits: u32,
+    /// Monotonically increasing publish counter (0 = never published).
+    pub version: u64,
+}
+
+/// Output of an [`ApproxModel`] inference, tagged with the exact weight
+/// snapshot that produced it.
+#[derive(Debug, Clone)]
+pub struct ApproxOutput {
+    /// The inference result.
+    pub output: InferOutput,
+    /// Cumulative bits of the weights used.
+    pub cum_bits: u32,
+    /// Publish counter of the weights used.
+    pub version: u64,
+}
+
+/// A hot-swappable approximate model: a compiled [`ModelSession`] plus a
+/// versioned weight cell that atomically upgrades as stages complete.
+///
+/// Cloning yields another handle onto the *same* cell, so a
+/// `client::session::ProgressiveSession` can keep publishing refinements
+/// while the coordinator's batcher serves requests from the other end —
+/// the paper's mid-download serving, §III-C.
+#[derive(Clone)]
+pub struct ApproxModel {
+    session: Arc<ModelSession>,
+    cell: Arc<RwLock<WeightsVersion>>,
+}
+
+impl ApproxModel {
+    /// Wrap a compiled session with an empty (version 0) weight cell.
+    pub fn new(session: Arc<ModelSession>) -> Self {
+        let n = session.manifest().param_count;
+        Self {
+            session,
+            cell: Arc::new(RwLock::new(WeightsVersion {
+                flat: Arc::new(vec![0f32; n]),
+                cum_bits: 0,
+                version: 0,
+            })),
+        }
+    }
+
+    /// Bind a session to an existing shared weight cell (the
+    /// `coordinator::state::WeightStore` bridge).
+    pub(crate) fn over(session: Arc<ModelSession>, cell: Arc<RwLock<WeightsVersion>>) -> Self {
+        Self { session, cell }
+    }
+
+    /// The compiled session this handle executes on.
+    pub fn session(&self) -> &Arc<ModelSession> {
+        &self.session
+    }
+
+    /// The model manifest (shortcut for `session().manifest()`).
+    pub fn manifest(&self) -> &ModelManifest {
+        self.session.manifest()
+    }
+
+    /// Publish a refined reconstruction (copies the slice once) and
+    /// return the new version. Panics if the parameter count changes.
+    pub fn publish(&self, flat: &[f32], cum_bits: u32) -> u64 {
+        let mut w = self.cell.write().unwrap();
+        assert_eq!(flat.len(), w.flat.len(), "param count changed");
+        w.flat = Arc::new(flat.to_vec());
+        w.cum_bits = cum_bits;
+        w.version += 1;
+        w.version
+    }
+
+    /// Snapshot the current weights (cheap `Arc` clone; never blocks a
+    /// concurrent publish for long).
+    pub fn snapshot(&self) -> WeightsVersion {
+        self.cell.read().unwrap().clone()
+    }
+
+    /// Has any stage been published yet?
+    pub fn ready(&self) -> bool {
+        self.version() > 0
+    }
+
+    /// Current publish counter.
+    pub fn version(&self) -> u64 {
+        self.cell.read().unwrap().version
+    }
+
+    /// Cumulative bits of the current snapshot (0 before the first
+    /// publish).
+    pub fn cum_bits(&self) -> u32 {
+        self.cell.read().unwrap().cum_bits
+    }
+
+    /// Run `n` samples against the newest published snapshot. Errors
+    /// before the first publish (no approximation exists yet).
+    pub fn infer(&self, images: &[f32], n: usize) -> Result<ApproxOutput> {
+        let snap = self.snapshot();
+        anyhow::ensure!(
+            snap.version > 0,
+            "model '{}' has no published weights yet",
+            self.session.manifest().name
+        );
+        let output = self.session.infer(images, n, &snap.flat)?;
+        Ok(ApproxOutput {
+            output,
+            cum_bits: snap.cum_bits,
+            version: snap.version,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +312,40 @@ mod tests {
         let images = vec![0f32; m.input_numel()];
         assert!(sess.infer(&images, 1, &flat[..4]).is_err());
         assert!(sess.infer_quantized(&images, 1, &[0u32; 4], 16).is_err());
+    }
+
+    #[test]
+    fn approx_model_upgrades_in_place() {
+        let (sess, m, flat) = session("sess-approx");
+        let approx = ApproxModel::new(Arc::new(sess));
+        let images = vec![0.5f32; m.input_numel()];
+        // before any publish: not ready, inference refused
+        assert!(!approx.ready());
+        assert!(approx.infer(&images, 1).is_err());
+        // publish a coarse snapshot through one handle …
+        let handle = approx.clone();
+        let v1 = handle.publish(&vec![0.0; flat.len()], 2);
+        assert_eq!(v1, 1);
+        // … the other handle sees it (shared cell)
+        assert!(approx.ready());
+        let a = approx.infer(&images, 1).unwrap();
+        assert_eq!(a.cum_bits, 2);
+        assert_eq!(a.version, 1);
+        // upgrade to the real weights: output now matches a direct call
+        let v2 = approx.publish(&flat, 16);
+        assert_eq!(v2, 2);
+        let b = approx.infer(&images, 1).unwrap();
+        assert_eq!(b.cum_bits, 16);
+        let direct = approx.session().infer(&images, 1, &flat).unwrap();
+        assert_eq!(b.output.data, direct.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "param count changed")]
+    fn approx_publish_wrong_size_panics() {
+        let (sess, _m, _flat) = session("sess-approx-bad");
+        let approx = ApproxModel::new(Arc::new(sess));
+        approx.publish(&[0.0; 3], 2);
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub mod user;
 
 pub use study::{StudyConfig, StudyOutcome};
 pub use survey::SurveyDist;
-pub use user::{UserModel, UserParams};
+pub use user::{SystemTiming, UserModel, UserParams};

@@ -61,6 +61,43 @@ pub struct SystemTiming {
     pub infer_cost: f64,
 }
 
+impl SystemTiming {
+    /// Derive the study's timing inputs from a *real*
+    /// [`SessionEvent`](crate::client::SessionEvent) stream instead of a
+    /// simulated link: first feedback is the instant the user's
+    /// quality-bar stage became servable (`ModelReady`, falling back to
+    /// `StageComplete` for sessions without a bound runtime), the full
+    /// model instant comes from `Finished`. Returns `None` when the
+    /// stream never reached the quality bar or never finished.
+    pub fn from_session_events(
+        events: &[crate::client::SessionEvent],
+        quality_bar: usize,
+        infer_cost: f64,
+    ) -> Option<Self> {
+        use crate::client::SessionEvent;
+        let mut first_ready: Option<f64> = None;
+        let mut first_complete: Option<f64> = None;
+        let mut full: Option<f64> = None;
+        for ev in events {
+            match ev {
+                SessionEvent::ModelReady { stage, t, .. } if *stage >= quality_bar => {
+                    first_ready.get_or_insert(*t);
+                }
+                SessionEvent::StageComplete { stage, t, .. } if *stage >= quality_bar => {
+                    first_complete.get_or_insert(*t);
+                }
+                SessionEvent::Finished(s) => full = Some(s.t_transfer_complete),
+                _ => {}
+            }
+        }
+        Some(Self {
+            first_feedback_at: first_ready.or(first_complete)?,
+            full_model_at: full?,
+            infer_cost,
+        })
+    }
+}
+
 /// Per-stage decision outcome.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StageChoice {
@@ -194,6 +231,45 @@ mod tests {
         let early = active_count(8.0, 200, 3);
         let late = active_count(90.0, 200, 3);
         assert!(early > late, "early={early} late={late}");
+    }
+
+    #[test]
+    fn timing_derives_from_session_events() {
+        use crate::client::{SessionEvent, SessionSummary};
+        let m = "m".to_string();
+        let ev = vec![
+            SessionEvent::StageComplete { model: m.clone(), stage: 0, cum_bits: 2, t: 1.0 },
+            SessionEvent::ModelReady {
+                model: m.clone(),
+                stage: 0,
+                cum_bits: 2,
+                version: 1,
+                t: 1.1,
+            },
+            SessionEvent::StageComplete { model: m.clone(), stage: 1, cum_bits: 4, t: 2.0 },
+            SessionEvent::ModelReady {
+                model: m.clone(),
+                stage: 1,
+                cum_bits: 4,
+                version: 2,
+                t: 2.2,
+            },
+            SessionEvent::Finished(SessionSummary {
+                t_transfer_complete: 3.0,
+                t_total: 3.5,
+                bytes: 10,
+                resumed: 0,
+                cache_hit: false,
+            }),
+        ];
+        let t0 = SystemTiming::from_session_events(&ev, 0, 0.3).unwrap();
+        assert!((t0.first_feedback_at - 1.1).abs() < 1e-9);
+        assert!((t0.full_model_at - 3.0).abs() < 1e-9);
+        // a pickier user's first feedback is the later stage
+        let t1 = SystemTiming::from_session_events(&ev, 1, 0.3).unwrap();
+        assert!((t1.first_feedback_at - 2.2).abs() < 1e-9);
+        // quality bar never reached ⇒ no timing
+        assert!(SystemTiming::from_session_events(&ev, 5, 0.3).is_none());
     }
 
     #[test]

@@ -166,6 +166,25 @@ pub fn executable_models(tag: &str) -> Result<Registry> {
     Registry::open(&root)
 }
 
+/// A registry with one *larger* executable dense model ("dense2b":
+/// input 120 → 110 classes with bias, ~13 k params ≈ 27 KB wire), big
+/// enough that stage boundaries are observable under sub-MB/s shaping —
+/// what the mid-download serving tests and demos stream.
+pub fn executable_models_big(tag: &str) -> Result<Registry> {
+    let root = fixture_root(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    let models_dir = root.join("models");
+    std::fs::create_dir_all(&models_dir)?;
+    write_model(
+        &models_dir,
+        "dense2b",
+        &[("w", &[120, 110][..]), ("b", &[110][..])],
+        0x5EED_0004,
+    )?;
+    write_index(&models_dir, &["dense2b"])?;
+    Registry::open(&root)
+}
+
 /// Running server + repository over the two-model fixture — the shared
 /// harness for socket-level tests and benches.
 pub fn synthetic_server(
@@ -178,6 +197,59 @@ pub fn synthetic_server(
         crate::server::service::ServerConfig::default(),
     )?;
     Ok((server, repo))
+}
+
+/// Running server + repository over [`executable_models`] ("dense3") —
+/// end-to-end session tests that also need to *execute* the streamed
+/// model on the reference backend.
+pub fn executable_server(
+    tag: &str,
+) -> Result<(crate::server::Server, std::sync::Arc<crate::server::Repository>)> {
+    let repo = std::sync::Arc::new(crate::server::Repository::new(executable_models(tag)?));
+    let server = crate::server::Server::start(
+        "127.0.0.1:0",
+        repo.clone(),
+        crate::server::service::ServerConfig::default(),
+    )?;
+    Ok((server, repo))
+}
+
+/// Running server + repository over [`executable_models_big`]
+/// ("dense2b").
+pub fn executable_server_big(
+    tag: &str,
+) -> Result<(crate::server::Server, std::sync::Arc<crate::server::Repository>)> {
+    let repo = std::sync::Arc::new(crate::server::Repository::new(executable_models_big(tag)?));
+    let server = crate::server::Server::start(
+        "127.0.0.1:0",
+        repo.clone(),
+        crate::server::service::ServerConfig::default(),
+    )?;
+    Ok((server, repo))
+}
+
+/// Synthetic evaluation set matching `manifest`'s input shape and class
+/// count (seeded random images, cyclic labels) — lets the examples run
+/// without the Python-built artifacts. Accuracy numbers over it are
+/// meaningless; timing, event and convergence behaviour are not.
+pub fn synthetic_eval(
+    manifest: &crate::models::ModelManifest,
+    n: usize,
+    seed: u64,
+) -> crate::eval::EvalSet {
+    let mut rng = Rng::new(seed);
+    let numel = manifest.input_numel();
+    crate::eval::EvalSet {
+        name: "synthetic".into(),
+        n,
+        image_shape: manifest.input_shape.clone(),
+        classes: (0..manifest.classes).map(|c| format!("class{c}")).collect(),
+        images: (0..n * numel)
+            .map(|_| rng.range_f64(0.0, 1.0) as f32)
+            .collect(),
+        labels: (0..n).map(|i| (i % manifest.classes) as i32).collect(),
+        boxes: Vec::new(),
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +271,25 @@ mod tests {
         let bytes = w.to_bytes();
         assert_eq!(bytes.len(), w.manifest().wire_bytes());
         assert!(crate::format::PnetReader::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn big_fixture_and_synthetic_eval_line_up() {
+        let reg = executable_models_big("fixture-big").unwrap();
+        let m = reg.get("dense2b").unwrap();
+        assert_eq!(m.input_numel(), 120);
+        assert_eq!(m.classes, 110);
+        let eval = synthetic_eval(m, 16, 42);
+        assert_eq!(eval.n, 16);
+        assert_eq!(eval.image_batch(16).len(), 16 * 120);
+        assert_eq!(eval.classes.len(), 110);
+        // executable end to end on the reference backend
+        let engine = crate::runtime::Engine::reference();
+        let session = crate::runtime::ModelSession::load(&engine, m).unwrap();
+        let out = session
+            .infer(eval.image_batch(2), 2, &m.load_weights().unwrap())
+            .unwrap();
+        assert_eq!(out.n(), 2);
     }
 
     #[test]

@@ -1,5 +1,12 @@
 //! End-to-end progressive pipeline over real sockets + real inference:
 //! the full Fig 1 flow, including failure injection.
+//!
+//! Drives the deprecated `ProgressiveClient` wrapper on purpose: these
+//! tests double as the equivalence suite proving the wrapper's behaviour
+//! over `client::session::ProgressiveSession` matches the original
+//! blocking API (the session itself is covered by `session_events.rs` /
+//! `session_serving.rs`).
+#![allow(deprecated)]
 
 use std::sync::Arc;
 

@@ -1,0 +1,386 @@
+//! Event-stream invariants of `client::session::ProgressiveSession`, on
+//! synthetic executable fixtures so the whole suite runs without the
+//! Python-built artifacts:
+//!
+//! - `StageComplete` stage indices are strictly increasing (and exactly
+//!   once per stage), across every mode × policy combination;
+//! - `ModelReady(k)` never precedes `StageComplete(k)`, and `Inference`
+//!   never precedes `ModelReady` of the same stage;
+//! - resume — from a cached partial at an arbitrary truncation point,
+//!   and from a mid-download connection drop — emits no duplicate stage
+//!   events;
+//! - `ApproxModel` upgrades are atomic under a concurrent inference
+//!   loop: versions and cumulative bits only move forward, every
+//!   snapshot is a consistent (weights, bits, version) triple.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use prognet::client::{
+    ExecMode, InferencePolicy, ModelCache, ProgressiveSession, ResumeSource, SessionEvent,
+};
+use prognet::format::PnetReader;
+use prognet::quant::Schedule;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::FetchRequest;
+use prognet::testutil::fixture;
+use prognet::testutil::prop::check;
+
+/// Collected event stream of a finished session.
+fn collect(handle: &ProgressiveSession) -> Vec<SessionEvent> {
+    let mut events = Vec::new();
+    while let Some(ev) = handle.next_event() {
+        events.push(ev);
+    }
+    events
+}
+
+/// Assert the core ordering invariants over one event stream. Returns
+/// the observed stage sequence.
+fn assert_invariants(events: &[SessionEvent], expect_model: &str) -> Vec<usize> {
+    let mut stages = Vec::new();
+    let mut ready = Vec::new();
+    let mut finished = 0usize;
+    let mut last_version = 0u64;
+    for (i, ev) in events.iter().enumerate() {
+        match ev {
+            SessionEvent::StageComplete { model, stage, .. } => {
+                assert_eq!(model, expect_model);
+                if let Some(&prev) = stages.last() {
+                    assert!(
+                        *stage > prev,
+                        "stages not strictly increasing: {stages:?} then {stage}"
+                    );
+                }
+                stages.push(*stage);
+            }
+            SessionEvent::ModelReady {
+                model,
+                stage,
+                version,
+                ..
+            } => {
+                assert_eq!(model, expect_model);
+                assert!(
+                    stages.contains(stage),
+                    "ModelReady({stage}) before StageComplete({stage})"
+                );
+                assert!(*version > last_version, "versions must increase");
+                last_version = *version;
+                ready.push(*stage);
+            }
+            SessionEvent::Inference { model, result } => {
+                assert_eq!(model, expect_model);
+                assert!(
+                    ready.contains(&result.stage),
+                    "Inference({}) before ModelReady({})",
+                    result.stage,
+                    result.stage
+                );
+            }
+            SessionEvent::Resumed { model, .. } => assert_eq!(model, expect_model),
+            SessionEvent::Finished(_) => {
+                finished += 1;
+                assert_eq!(i, events.len() - 1, "Finished must be the last event");
+            }
+        }
+    }
+    assert_eq!(finished, 1, "exactly one Finished event");
+    // no duplicates (strict increase already implies it; double-check)
+    let mut dedup = stages.clone();
+    dedup.dedup();
+    assert_eq!(dedup, stages);
+    stages
+}
+
+#[test]
+fn stage_events_ordered_across_all_modes_and_policies() {
+    let (server, repo) = fixture::executable_server("sess-inv").unwrap();
+    let manifest = repo.registry().get("dense3").unwrap().clone();
+    let engine = Engine::reference();
+    let session = Arc::new(ModelSession::load(&engine, &manifest).unwrap());
+    let images = vec![0.3f32; 2 * manifest.input_numel()];
+    for mode in [ExecMode::Concurrent, ExecMode::Serial] {
+        for policy in [
+            InferencePolicy::EveryStage,
+            InferencePolicy::LatestOnly,
+            InferencePolicy::FinalOnly,
+        ] {
+            let handle = ProgressiveSession::builder("dense3")
+                .addr(server.addr())
+                .mode(mode)
+                .policy(policy)
+                .runtime("dense3", session.clone())
+                .workload(images.clone(), 2)
+                .start()
+                .unwrap();
+            let events = collect(&handle);
+            let stages = assert_invariants(&events, "dense3");
+            assert_eq!(stages, (0..8).collect::<Vec<_>>(), "{mode:?}/{policy:?}");
+            let report = handle.finish().unwrap();
+            assert!(report.assembler("dense3").unwrap().is_complete());
+            match policy {
+                InferencePolicy::EveryStage => assert_eq!(report.results.len(), 8),
+                InferencePolicy::FinalOnly => assert_eq!(report.results.len(), 1),
+                InferencePolicy::LatestOnly => {
+                    assert!(!report.results.is_empty());
+                    assert_eq!(report.results.last().unwrap().cum_bits, 16);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_resume_emits_each_stage_exactly_once() {
+    // Property: for ANY truncation point of a persisted partial, the
+    // resumed session emits stages 0..8 exactly once, resumes from the
+    // cached boundary, and fetches only the missing bytes.
+    let (server, repo) = fixture::executable_server_big("sess-cache-prop").unwrap();
+    let full = repo
+        .container("dense2b", &Schedule::paper_default())
+        .unwrap();
+    let total = full.len();
+    let idx = PnetReader::from_bytes(&full).unwrap().manifest.stage_index();
+    let case = std::sync::atomic::AtomicUsize::new(0);
+    check(
+        "cache resume is duplicate-free",
+        8,
+        |g| g.usize(1, total - 1),
+        |cut| {
+            let case_id = case.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let dir = std::env::temp_dir().join(format!(
+                "prognet-sess-cache-{}-{case_id}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let req = FetchRequest::new("dense2b");
+            let cache = ModelCache::open(&dir).map_err(|e| e.to_string())?;
+            cache
+                .store_partial(&req, &full[..cut])
+                .map_err(|e| e.to_string())?;
+            // how many full stages does the cut cover?
+            let boundary = (1..=8)
+                .take_while(|&b| idx.body_range(Some((0, b as u32))).unwrap().end <= cut)
+                .count();
+
+            let handle = ProgressiveSession::builder("dense2b")
+                .addr(server.addr())
+                .cache_dir(&dir)
+                .start()
+                .map_err(|e| e.to_string())?;
+            let events = collect(&handle);
+            let stages = assert_invariants(&events, "dense2b");
+            if stages != (0..8).collect::<Vec<_>>() {
+                return Err(format!("stages {stages:?} for cut {cut}"));
+            }
+            let resumes: Vec<_> = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    SessionEvent::Resumed { stage, source, .. } => Some((*stage, *source)),
+                    _ => None,
+                })
+                .collect();
+            let report = handle.finish().map_err(|e| e.to_string())?;
+            if boundary >= 1 {
+                if resumes != vec![(boundary, ResumeSource::Cache)] {
+                    return Err(format!(
+                        "expected cache resume at {boundary}, got {resumes:?} (cut {cut})"
+                    ));
+                }
+                // only the missing suffix crossed the network
+                let prefix = idx.body_range(Some((0, boundary as u32))).unwrap().end;
+                if report.summary.bytes as usize != total - prefix {
+                    return Err(format!(
+                        "fetched {} bytes, expected {} (cut {cut})",
+                        report.summary.bytes,
+                        total - prefix
+                    ));
+                }
+            } else if !resumes.is_empty() {
+                return Err(format!("unusable partial must cold-start, got {resumes:?}"));
+            }
+            // the finished download was promoted: partial gone, replayable
+            if cache.load_partial(&req).is_some() {
+                return Err("partial not cleared after promotion".into());
+            }
+            if cache.load_complete(&req).is_none() {
+                return Err("complete container not promoted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cache_hit_replays_offline() {
+    let (server, repo) = fixture::executable_server_big("sess-cache-hit").unwrap();
+    let dir = std::env::temp_dir().join(format!("prognet-sess-hit-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let full = repo
+        .container("dense2b", &Schedule::paper_default())
+        .unwrap();
+    // first run fills the cache over the network
+    let report1 = ProgressiveSession::builder("dense2b")
+        .addr(server.addr())
+        .cache_dir(&dir)
+        .start()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(!report1.summary.cache_hit);
+    assert_eq!(report1.summary.bytes as usize, full.len());
+    // kill the server: the replay must not touch the network
+    drop(server);
+    let handle = ProgressiveSession::builder("dense2b")
+        .addr("127.0.0.1:1".parse().unwrap())
+        .cache_dir(&dir)
+        .start()
+        .unwrap();
+    let events = collect(&handle);
+    let stages = assert_invariants(&events, "dense2b");
+    assert_eq!(stages, (0..8).collect::<Vec<_>>());
+    let report2 = handle.finish().unwrap();
+    assert!(report2.summary.cache_hit);
+    assert_eq!(report2.summary.bytes, 0);
+    assert_eq!(
+        report2.assembler("dense2b").unwrap().codes_flat(),
+        report1.assembler("dense2b").unwrap().codes_flat()
+    );
+}
+
+#[test]
+fn reconnect_resume_emits_no_duplicate_stages() {
+    // A proxy that cuts the first connection mid-body: the session must
+    // reconnect at the stage boundary (Resumed{Reconnect}) and still
+    // emit every stage exactly once.
+    let (server, _repo) = fixture::executable_server_big("sess-reconnect").unwrap();
+    let upstream = server.addr();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let proxy_addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let mut conn = 0usize;
+        for stream in listener.incoming() {
+            let Ok(mut client) = stream else { break };
+            conn += 1;
+            // first connection: stop after ~12 KB (mid-stage); later
+            // connections forward everything
+            let cap = if conn == 1 { Some(12_000usize) } else { None };
+            let mut up = std::net::TcpStream::connect(upstream).unwrap();
+            let mut len = [0u8; 4];
+            if client.read_exact(&mut len).is_err() {
+                continue;
+            }
+            let n = u32::from_le_bytes(len) as usize;
+            let mut body = vec![0u8; n];
+            client.read_exact(&mut body).unwrap();
+            up.write_all(&len).unwrap();
+            up.write_all(&body).unwrap();
+            let mut sent = 0usize;
+            let mut buf = [0u8; 4096];
+            loop {
+                let k = match up.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(k) => k,
+                };
+                let k = match cap {
+                    Some(c) if sent + k > c => c - sent,
+                    _ => k,
+                };
+                if k == 0 || client.write_all(&buf[..k]).is_err() {
+                    break;
+                }
+                sent += k;
+                if cap == Some(sent) {
+                    break;
+                }
+            }
+        }
+    });
+
+    let handle = ProgressiveSession::builder("dense2b")
+        .addr(proxy_addr)
+        .resume_retries(2)
+        .start()
+        .unwrap();
+    let events = collect(&handle);
+    let stages = assert_invariants(&events, "dense2b");
+    assert_eq!(stages, (0..8).collect::<Vec<_>>());
+    let resumes: Vec<_> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            SessionEvent::Resumed { stage, source, .. } => Some((*stage, *source)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(resumes.len(), 1, "exactly one reconnect: {resumes:?}");
+    assert_eq!(resumes[0].1, ResumeSource::Reconnect);
+    assert!(resumes[0].0 >= 1, "12 KB covers at least one stage");
+    let report = handle.finish().unwrap();
+    assert!(report.assembler("dense2b").unwrap().is_complete());
+    assert_eq!(report.summary.resumed, 1);
+    assert_eq!(report.requests, 2);
+}
+
+#[test]
+fn approx_upgrades_are_atomic_under_concurrent_inference() {
+    let (server, repo) = fixture::executable_server_big("sess-atomic").unwrap();
+    let manifest = repo.registry().get("dense2b").unwrap().clone();
+    let engine = Engine::reference();
+    let session = Arc::new(ModelSession::load(&engine, &manifest).unwrap());
+    let handle = ProgressiveSession::builder("dense2b")
+        .addr(server.addr())
+        .speed_mbps(0.1) // ~270 ms transfer: plenty of mid-download reads
+        .runtime("dense2b", session.clone())
+        .start()
+        .unwrap();
+    let approx = handle.approx_model().unwrap().clone();
+    let img = vec![0.4f32; manifest.input_numel()];
+    let dim = manifest.output_dim();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hammer = {
+        let approx = approx.clone();
+        let img = img.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut seen: Vec<(u64, u32, usize)> = Vec::new();
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                match approx.infer(&img, 1) {
+                    Ok(out) => seen.push((out.version, out.cum_bits, out.output.data.len())),
+                    Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
+                }
+            }
+            seen
+        })
+    };
+
+    let events = collect(&handle);
+    assert_invariants(&events, "dense2b");
+    let report = handle.finish().unwrap();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let seen = hammer.join().unwrap();
+
+    assert!(!seen.is_empty(), "hammer never observed a published model");
+    for w in seen.windows(2) {
+        assert!(w[1].0 >= w[0].0, "versions went backwards: {:?}", w);
+        assert!(w[1].1 >= w[0].1, "cum_bits went backwards: {:?}", w);
+    }
+    for (version, cum_bits, len) in &seen {
+        assert!(*version >= 1 && *version <= 8);
+        assert_eq!(
+            *cum_bits,
+            *version as u32 * 2,
+            "snapshot tore: v{version} with {cum_bits} bits"
+        );
+        assert_eq!(*len, dim);
+    }
+    // after Finished the handle serves the exact final reconstruction
+    let final_out = approx.infer(&img, 1).unwrap();
+    assert_eq!(final_out.cum_bits, 16);
+    assert_eq!(final_out.version, 8);
+    let direct = session
+        .infer(&img, 1, report.assembler("dense2b").unwrap().flat())
+        .unwrap();
+    assert_eq!(final_out.output.data, direct.data);
+}

@@ -1,0 +1,100 @@
+//! Mid-download serving through the coordinator (the paper's §III-C
+//! serving claim, end to end, on synthetic fixtures):
+//!
+//! a `ProgressiveSession` streams a model over a bandwidth-shaped
+//! loopback link and publishes each stage into its `ApproxModel`; the
+//! handle is bound into the `Router`, whose batcher answers inference
+//! requests with the stage-k approximation *while later stages are still
+//! streaming* — and the answer upgrades to the exact full-precision
+//! result once `Finished` fires.
+
+use std::sync::Arc;
+
+use prognet::client::{ProgressiveSession, SessionEvent};
+use prognet::coordinator::{BatcherConfig, Router};
+use prognet::models::Registry;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::testutil::fixture;
+
+#[test]
+fn coordinator_serves_mid_download_and_upgrades_to_full_precision() {
+    let (server, repo) = fixture::executable_server_big("serve-mid").unwrap();
+    let manifest = repo.registry().get("dense2b").unwrap().clone();
+    let engine = Engine::reference();
+    let session = Arc::new(ModelSession::load(&engine, &manifest).unwrap());
+    let router = Router::new(
+        engine.clone(),
+        Registry::open(&fixture::fixture_root("serve-mid")).unwrap(),
+        BatcherConfig::default(),
+    );
+
+    // ~27 KB at 0.03 MB/s ≈ 0.9 s transfer, ~110 ms per stage: the gap
+    // between the first upgrade and the last stage is enormous compared
+    // to one batched inference, so the mid-download read below is
+    // deterministic in practice.
+    let live = ProgressiveSession::builder("dense2b")
+        .addr(server.addr())
+        .speed_mbps(0.03)
+        .runtime("dense2b", session.clone())
+        .start()
+        .unwrap();
+    router.bind("dense2b", live.approx_model().unwrap().clone());
+
+    let img = vec![0.4f32; manifest.input_numel()];
+
+    // before any stage: the lane exists but refuses to serve
+    assert!(!router.model_ready("dense2b"));
+
+    // wait for the first upgrade, then ask the coordinator immediately —
+    // the reply must come from an approximate model, not the final one
+    let mut first_ready_stage = None;
+    while let Some(ev) = live.next_event() {
+        if let SessionEvent::ModelReady { stage, .. } = ev {
+            first_ready_stage = Some(stage);
+            break;
+        }
+    }
+    assert_eq!(first_ready_stage, Some(0));
+    assert!(router.model_ready("dense2b"));
+    let mid = router.infer("dense2b", img.clone()).unwrap();
+    assert!(
+        mid.cum_bits >= 2 && mid.cum_bits < 16,
+        "expected an approximate mid-download reply, got {} bits",
+        mid.cum_bits
+    );
+    let mid_out = mid.output.unwrap();
+    assert_eq!(mid_out.len(), manifest.output_dim());
+
+    // drain the stream; later stages were still in flight above
+    let mut upgrades = 0;
+    let mut finished = false;
+    while let Some(ev) = live.next_event() {
+        match ev {
+            SessionEvent::ModelReady { .. } => upgrades += 1,
+            SessionEvent::Finished(s) => {
+                finished = true;
+                assert!(s.bytes > 0);
+            }
+            _ => {}
+        }
+    }
+    assert!(finished);
+    assert!(upgrades >= 1, "later stages must upgrade the bound model");
+    let report = live.finish().unwrap();
+
+    // the same question now answers at full precision …
+    let fin = router.infer("dense2b", img.clone()).unwrap();
+    assert_eq!(fin.cum_bits, 16);
+    assert!(fin.version > mid.version, "weights must have been swapped in");
+
+    // … matching a direct inference over the final reconstruction
+    let direct = session
+        .infer(&img, 1, report.assembler("dense2b").unwrap().flat())
+        .unwrap();
+    let fin_out = fin.output.unwrap();
+    for (a, b) in fin_out.iter().zip(direct.row(0)) {
+        assert!((a - b).abs() < 1e-4, "routed {a} vs direct {b}");
+    }
+    // and genuinely different from the coarse mid-download answer
+    assert_ne!(mid_out, fin_out, "2-bit and 16-bit replies should differ");
+}

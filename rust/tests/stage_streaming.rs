@@ -2,6 +2,11 @@
 //! whole suite runs without the Python-built artifacts: stage-range
 //! fetches, the split/reassembly property, resume at stage boundaries,
 //! and pipelined multi-model delivery.
+//!
+//! The multiplex tests drive the deprecated `MultiplexClient` wrapper on
+//! purpose — they prove the wrapper over the multiplexed
+//! `client::session::ProgressiveSession` delivers byte-identical models.
+#![allow(deprecated)]
 
 use std::io::Read;
 use std::sync::atomic::Ordering;
