@@ -1,0 +1,97 @@
+//! Fleet SLO bench: the load generator against a self-hosted reactor,
+//! emitting `BENCH_fleet.json` so later PRs can track fleet-scale
+//! serving (clients, throughput mix, accept→first-`ModelReady`
+//! p50/p99) across the trajectory.
+//!
+//! Runs entirely on the synthetic executable fixture (no artifacts).
+//! Scale knobs (for CI smoke vs. local soak):
+//!   PROGNET_FLEET_CLIENTS  total virtual clients (default 200)
+//!   PROGNET_FLEET_WORKERS  reactor shards (default 2)
+//!   PROGNET_BENCH_NO_ASSERT  skip the zero-protocol-error assert
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
+use prognet::fleet::FleetConfig;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::ServerConfig;
+use prognet::server::{Repository, Server};
+use prognet::testutil::fixture;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> prognet::Result<()> {
+    let clients = env_usize("PROGNET_FLEET_CLIENTS", 200);
+    let workers = env_usize("PROGNET_FLEET_WORKERS", 2);
+
+    let reg = fixture::executable_models("bench-fleet")?;
+    let manifest = reg.get("dense3")?.clone();
+    let repo = Arc::new(Repository::new(reg));
+    let server = Server::start_fleet(
+        "127.0.0.1:0",
+        repo,
+        ServerConfig {
+            workers,
+            ..ServerConfig::default()
+        },
+        FleetConfig {
+            write_burst: 1024, // keep the small fixture bodies honestly paced
+            ..FleetConfig::default()
+        },
+    )?;
+    let runtime = Arc::new(ModelSession::load(&Engine::reference(), &manifest)?);
+
+    // the reference mix (70% @0.5 MB/s, 20% @0.1, 10% flaky-reconnect),
+    // shared with `prognet fleet` and CI so BENCH trends stay comparable
+    let scenario = Scenario::mix("dense3", clients);
+    let opts = FleetOptions {
+        ramp: Duration::from_millis(300),
+        // past the manifest of the ~2 KB dense3 container, so the
+        // severed first connection resumes at a stage boundary
+        flaky_cut_bytes: 1500,
+        connect_retries: 5,
+        ..FleetOptions::default()
+    };
+    let mix: Vec<String> = scenario
+        .cohorts
+        .iter()
+        .map(|c| format!("{}×{}", c.clients, c.name))
+        .collect();
+    println!(
+        "fleet_slo: {} clients ({}) on {workers} shards",
+        scenario.total_clients(),
+        mix.join(", ")
+    );
+    let report = run_fleet(server.addr(), &scenario, Some(runtime), &opts)?;
+    println!("{}", report.render());
+    println!("{}", server.stats().table().render());
+
+    std::fs::write("BENCH_fleet.json", report.to_json().to_string())?;
+    println!("wrote BENCH_fleet.json");
+
+    if std::env::var_os("PROGNET_BENCH_NO_ASSERT").is_none() {
+        assert_eq!(report.clients(), scenario.total_clients());
+        assert_eq!(
+            report.protocol_errors(),
+            0,
+            "fleet run hit protocol errors: {:?}",
+            report.sample_errors
+        );
+        assert_eq!(
+            report.overall.finished,
+            scenario.total_clients(),
+            "uncapped server must serve everyone"
+        );
+    }
+    println!(
+        "§Perf target: accept→first-ModelReady p99 stays flat as the client count\n\
+         grows; track accept_to_model_ready in BENCH_fleet.json across PRs."
+    );
+    Ok(())
+}

@@ -52,21 +52,37 @@ impl Downloader {
             req.offset == 0,
             "Downloader parses from the container start; resume with stage ranges, not offsets"
         );
-        let parser = match req.stages {
+        if let Some((a, _)) = req.stages {
+            anyhow::ensure!(a == 0, "initial fetch cannot start at stage {a}; use resume_at_stage");
+        }
+        let (stream, resp) = open_fetch(addr, req)?;
+        // The server may clamp the requested window (degrade-mode load
+        // shedding under `fleet::admission`); the echoed range in the
+        // status frame is authoritative, so build the parser from it and
+        // expect exactly the bytes that will arrive.
+        let parser = match resp.stages.or(req.stages) {
             None => FrameParser::new(),
             Some((0, b)) => FrameParser::for_stage_prefix(b as usize),
             Some((a, _)) => anyhow::bail!(
-                "initial fetch cannot start at stage {a}; use resume_at_stage"
+                "server answered the initial fetch with a window starting at stage {a}"
             ),
         };
-        let (stream, resp) = open_fetch(addr, req)?;
+        // Adopt a clamped window wholesale: stage-boundary resumes must
+        // stay inside it (resuming to the *original* end would bypass
+        // the shed and corrupt the byte accounting).
+        let mut req = req.clone();
+        if resp.stages != req.stages {
+            if let Some((0, b)) = resp.stages {
+                req.stages = Some((0, b));
+            }
+        }
         Ok(Self {
             stream,
             parser,
             start: Instant::now(),
             total_size: resp.total,
             addr: *addr,
-            req: req.clone(),
+            req,
             base_consumed: 0,
             small_recv_buffer: false,
             capture: None,
@@ -205,6 +221,17 @@ impl Downloader {
             .with_offset(0)
             .with_stages(stage as u32, end as u32);
         let (stream, resp) = open_fetch(&self.addr, &req)?;
+        // A stage-0 resume is an *initial* window again, so a degraded
+        // server may clamp it; the echoed range stays authoritative here
+        // too (mid-container resumes pass through unclamped).
+        let mut end = end;
+        if let Some((0, b)) = resp.stages {
+            if stage == 0 && (b as usize) < end {
+                end = b as usize;
+                self.req.stages = Some((0, b));
+                self.total_size = resp.total;
+            }
+        }
         if self.small_recv_buffer {
             let _ = shrink_recv_buffer(&stream);
         }

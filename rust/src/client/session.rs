@@ -1203,8 +1203,8 @@ fn drive_multiplex(
     let addr = cfg.addr;
     let specs = cfg.specs;
     let start = Instant::now();
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("{} {addr}", crate::server::service::CONNECT_CONTEXT))?;
     stream.set_nodelay(true)?;
 
     let mut assemblers: HashMap<String, Assembler> = HashMap::new();

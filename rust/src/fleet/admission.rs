@@ -1,0 +1,220 @@
+//! Admission control: a global connection cap with configurable
+//! load-shedding policies.
+//!
+//! The accept loop consults [`Admission::on_accept`] for every new
+//! connection. Under the cap the connection is admitted; over it the
+//! configured [`ShedPolicy`] decides between rejecting immediately (an
+//! `ERR` status frame naming [`SHED_MARKER`], so load generators can
+//! distinguish shedding from protocol failures), parking the connection
+//! in a bounded-wait queue, or admitting it *degraded* — its stage
+//! windows are clamped to a few coarse stages, trading refinement for
+//! service. Degrading is the shedding action unique to progressive
+//! containers: every admitted client still reaches `ModelReady`, just at
+//! lower precision.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Substring of the `ERR` status frame sent to shed connections.
+/// `fleet::loadgen` classifies session errors containing it as
+/// [`Outcome::Shed`](crate::fleet::slo::Outcome) rather than protocol
+/// errors.
+pub const SHED_MARKER: &str = "at capacity";
+
+/// What to do with a connection that arrives over the cap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShedPolicy {
+    /// Answer with an `ERR … at capacity` frame and close.
+    Reject,
+    /// Park the connection; serve it when a slot frees, shed it when the
+    /// deadline passes first.
+    Queue { deadline: Duration },
+    /// Admit it anyway, but clamp initial stage windows to at most
+    /// `max_stages` stages (≥ 1).
+    Degrade { max_stages: u32 },
+}
+
+impl ShedPolicy {
+    /// Parse the CLI/config forms: `reject`, `queue:<ms>`, `degrade:<stages>`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let (head, arg) = match text.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (text, None),
+        };
+        match (head, arg) {
+            ("reject", None) => Ok(Self::Reject),
+            ("queue", Some(ms)) => {
+                let ms: u64 = ms
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("queue deadline must be ms, got '{ms}'"))?;
+                Ok(Self::Queue {
+                    deadline: Duration::from_millis(ms),
+                })
+            }
+            ("degrade", Some(k)) => {
+                let k: u32 = k
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("degrade stage cap must be an int, got '{k}'"))?;
+                if k == 0 {
+                    bail!("degrade stage cap must be >= 1");
+                }
+                Ok(Self::Degrade { max_stages: k })
+            }
+            _ => bail!(
+                "unknown shed policy '{text}' (expected reject | queue:<ms> | degrade:<stages>)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for ShedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Reject => write!(f, "reject"),
+            Self::Queue { deadline } => write!(f, "queue:{}", deadline.as_millis()),
+            Self::Degrade { max_stages } => write!(f, "degrade:{max_stages}"),
+        }
+    }
+}
+
+/// Outcome of an admission check for one new connection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Under the cap; a slot was claimed (release it when the conn ends).
+    Admit,
+    /// Over the cap, degrade policy: serve with clamped stage windows.
+    /// No slot is held — degraded conns are the overflow.
+    Degrade { max_stages: u32 },
+    /// Over the cap, queue policy: park until a slot frees or `deadline`.
+    Queue { deadline: Duration },
+    /// Over the cap, reject policy: shed now.
+    Reject,
+}
+
+/// Global (cross-shard) admission state.
+#[derive(Debug)]
+pub struct Admission {
+    cap: Option<usize>,
+    policy: ShedPolicy,
+    in_cap: AtomicUsize,
+}
+
+impl Admission {
+    pub fn new(cap: Option<usize>, policy: ShedPolicy) -> Self {
+        Self {
+            cap,
+            policy,
+            in_cap: AtomicUsize::new(0),
+        }
+    }
+
+    /// Claim a slot if one is free.
+    pub fn try_admit(&self) -> bool {
+        let Some(cap) = self.cap else {
+            return true;
+        };
+        self.in_cap
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n < cap {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Admission decision for a newly accepted connection.
+    pub fn on_accept(&self) -> Decision {
+        if self.try_admit() {
+            return Decision::Admit;
+        }
+        match self.policy {
+            ShedPolicy::Reject => Decision::Reject,
+            ShedPolicy::Queue { deadline } => Decision::Queue { deadline },
+            ShedPolicy::Degrade { max_stages } => Decision::Degrade { max_stages },
+        }
+    }
+
+    /// Release a slot claimed by [`Admission::try_admit`] /
+    /// [`Decision::Admit`].
+    pub fn release(&self) {
+        if self.cap.is_some() {
+            self.in_cap.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Currently claimed in-cap slots (diagnostics).
+    pub fn in_cap(&self) -> usize {
+        self.in_cap.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(ShedPolicy::parse("reject").unwrap(), ShedPolicy::Reject);
+        assert_eq!(
+            ShedPolicy::parse("queue:250").unwrap(),
+            ShedPolicy::Queue {
+                deadline: Duration::from_millis(250)
+            }
+        );
+        assert_eq!(
+            ShedPolicy::parse("degrade:3").unwrap(),
+            ShedPolicy::Degrade { max_stages: 3 }
+        );
+        assert!(ShedPolicy::parse("degrade:0").is_err());
+        assert!(ShedPolicy::parse("queue").is_err());
+        assert!(ShedPolicy::parse("nope").is_err());
+        // round-trips through Display
+        for p in ["reject", "queue:250", "degrade:3"] {
+            assert_eq!(ShedPolicy::parse(p).unwrap().to_string(), p);
+        }
+    }
+
+    #[test]
+    fn cap_claims_and_releases() {
+        let a = Admission::new(Some(2), ShedPolicy::Reject);
+        assert_eq!(a.on_accept(), Decision::Admit);
+        assert_eq!(a.on_accept(), Decision::Admit);
+        assert_eq!(a.on_accept(), Decision::Reject);
+        a.release();
+        assert_eq!(a.on_accept(), Decision::Admit);
+        assert_eq!(a.in_cap(), 2);
+    }
+
+    #[test]
+    fn uncapped_always_admits() {
+        let a = Admission::new(None, ShedPolicy::Reject);
+        for _ in 0..100 {
+            assert_eq!(a.on_accept(), Decision::Admit);
+        }
+        // release on an uncapped admission is a no-op, not an underflow
+        a.release();
+        assert_eq!(a.in_cap(), 0);
+    }
+
+    #[test]
+    fn over_cap_policy_selects_decision() {
+        let q = Admission::new(
+            Some(0),
+            ShedPolicy::Queue {
+                deadline: Duration::from_millis(9),
+            },
+        );
+        assert_eq!(
+            q.on_accept(),
+            Decision::Queue {
+                deadline: Duration::from_millis(9)
+            }
+        );
+        let d = Admission::new(Some(0), ShedPolicy::Degrade { max_stages: 2 });
+        assert_eq!(d.on_accept(), Decision::Degrade { max_stages: 2 });
+    }
+}

@@ -1,0 +1,824 @@
+//! Per-connection state machine for the v2 stage-range protocol,
+//! written against nonblocking I/O.
+//!
+//! A connection cycles `ReadRequest → Write(status + body) → …` with
+//! `keep_alive` looping back to `ReadRequest`. All reads and writes are
+//! `WouldBlock`-safe: [`Conn::on_ready`] makes as much progress as the
+//! socket allows and returns, and [`Conn::next_deadline`] tells the
+//! reactor when to come back — either to evict a stalled peer
+//! (slow-loris protection: a client that neither completes its request
+//! frame nor drains its body within the I/O timeout is closed) or to
+//! resume a paced body write when the per-connection
+//! [`TokenBucket`](crate::netsim::TokenBucket) refills. Pacing therefore
+//! costs neither a thread nor a sleep per client.
+//!
+//! Bodies are borrowed slices of the repository's cached
+//! `Arc<EncodedContainer>` — the zero-copy hot path of the blocking
+//! server, preserved.
+//!
+//! The state machine is generic over the stream so tests can drive it
+//! with an in-memory mock; the reactor instantiates it with
+//! `TcpStream`.
+
+use std::io::{Read, Write};
+use std::ops::Range;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::netsim::{LinkSpec, TokenBucket};
+use crate::quant::Schedule;
+use crate::server::proto::{self, FetchRequest, FetchResponse};
+use crate::server::repository::{EncodedContainer, Repository};
+use crate::util::json::Json;
+
+use super::ServerStats;
+
+/// Biggest single body write attempted per readiness wakeup.
+const WRITE_CHUNK: usize = 64 * 1024;
+
+/// I/O error kinds that mean "the peer is done with this connection"
+/// rather than a protocol violation (the blocking server's historical
+/// `is_disconnect` set).
+fn is_disconnect(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+    )
+}
+
+/// Per-connection serving configuration, distilled from
+/// `ServerConfig` + `FleetConfig` by the reactor.
+#[derive(Debug, Clone)]
+pub struct ConnConfig {
+    /// default shaping when the request does not override (None = unshaped)
+    pub default_speed_mbps: Option<f64>,
+    pub default_schedule: Schedule,
+    /// burst the nonblocking pacer may run ahead of its schedule
+    pub write_burst: usize,
+    /// evict a connection making no I/O progress for this long
+    pub io_timeout: Duration,
+    /// close a keep-alive connection idle (between requests) this long
+    pub idle_timeout: Duration,
+}
+
+/// Body being streamed: a borrowed window of the cached container.
+struct BodySlice {
+    container: Arc<EncodedContainer>,
+    range: Range<usize>,
+}
+
+enum State {
+    /// Accumulating a length-prefixed request frame.
+    ReadRequest { buf: Vec<u8> },
+    /// Flushing the status frame, then the (paced) body.
+    Write {
+        head: Vec<u8>,
+        head_sent: usize,
+        body: Option<BodySlice>,
+        body_sent: usize,
+        keep_alive: bool,
+        /// error to surface once the (error) frame is flushed
+        close_error: Option<String>,
+    },
+    Closed,
+}
+
+/// Outcome of servicing a connection.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Still open; wait for readiness or a deadline.
+    Open,
+    /// Ended cleanly.
+    Done,
+    /// Ended with a protocol/I/O error (reactor counts it).
+    Failed(String),
+}
+
+/// Internal control flow of one service pass.
+enum Flow {
+    Continue,
+    Blocked,
+    End(Step),
+}
+
+/// One serving connection.
+pub struct Conn<S> {
+    stream: S,
+    state: State,
+    pacer: Option<TokenBucket>,
+    /// `Some(k)`: admitted over the cap by the degrade policy — initial
+    /// stage windows are clamped to at most `k` stages
+    degrade_stages: Option<u32>,
+    /// `Some(msg)`: a shed connection — read one request frame, answer
+    /// it with `ERR msg`, close cleanly. Reading the request first
+    /// keeps the receive buffer empty at close, so the peer gets a FIN
+    /// after the ERR frame instead of a RST racing it.
+    shed_reply: Option<String>,
+    served_any: bool,
+    last_progress: Instant,
+    /// true when this conn holds an admission slot to release on close
+    pub holds_slot: bool,
+}
+
+impl<S: Read + Write> Conn<S> {
+    pub fn new(stream: S) -> Self {
+        Self {
+            stream,
+            state: State::ReadRequest { buf: Vec::new() },
+            pacer: None,
+            degrade_stages: None,
+            shed_reply: None,
+            served_any: false,
+            last_progress: Instant::now(),
+            holds_slot: false,
+        }
+    }
+
+    /// A connection admitted over the cap by the degrade policy.
+    pub fn degraded(stream: S, max_stages: u32) -> Self {
+        let mut c = Self::new(stream);
+        c.degrade_stages = Some(max_stages.max(1));
+        c
+    }
+
+    /// A connection being shed: reads one request frame, answers it
+    /// with an `ERR` frame, then closes cleanly (shedding is policy,
+    /// not a protocol error).
+    pub fn rejecting(stream: S, msg: &str) -> Self {
+        let mut c = Self::new(stream);
+        c.shed_reply = Some(msg.to_string());
+        c
+    }
+
+    pub fn stream(&self) -> &S {
+        &self.stream
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degrade_stages.is_some()
+    }
+
+    /// Poll interest: read side.
+    pub fn wants_read(&self) -> bool {
+        matches!(self.state, State::ReadRequest { .. })
+    }
+
+    /// Poll interest: write side (suppressed while the pacer is dry —
+    /// the pacer's refill instant feeds [`Conn::next_deadline`] instead).
+    pub fn wants_write(&self, now: Instant) -> bool {
+        match &self.state {
+            State::Write {
+                head,
+                head_sent,
+                body,
+                body_sent,
+                ..
+            } => {
+                if *head_sent < head.len() {
+                    return true;
+                }
+                match body {
+                    Some(b) if *body_sent < b.range.len() => match &self.pacer {
+                        Some(p) => p.ready_in(now).is_none(),
+                        None => true,
+                    },
+                    // nothing pending: still schedule a wakeup to run the
+                    // state transition (flush/keep-alive/close)
+                    _ => true,
+                }
+            }
+            _ => false,
+        }
+    }
+
+    /// Earliest instant the reactor must revisit this connection even
+    /// without socket readiness: pacer refill or stall/idle deadline.
+    pub fn next_deadline(&self, now: Instant, cfg: &ConnConfig) -> Option<Instant> {
+        match &self.state {
+            State::ReadRequest { buf } => {
+                let t = if buf.is_empty() && self.served_any {
+                    cfg.idle_timeout
+                } else {
+                    cfg.io_timeout
+                };
+                Some(self.last_progress + t)
+            }
+            State::Write { .. } => {
+                let stall = self.last_progress + cfg.io_timeout;
+                match self.pacer.as_ref().and_then(|p| p.ready_in(now)) {
+                    Some(wait) => Some((now + wait).min(stall)),
+                    None => Some(stall),
+                }
+            }
+            State::Closed => None,
+        }
+    }
+
+    /// Check stall/idle deadlines. `None` = not expired; `Some(Done)` =
+    /// clean idle close of a keep-alive connection; `Some(Failed)` = the
+    /// peer stalled mid-request or mid-body and was evicted.
+    pub fn on_deadline(&mut self, now: Instant, cfg: &ConnConfig) -> Option<Step> {
+        let (deadline, clean) = match &self.state {
+            State::ReadRequest { buf } => {
+                let idle = buf.is_empty() && self.served_any;
+                let t = if idle { cfg.idle_timeout } else { cfg.io_timeout };
+                // timing out a shed peer that never asked is still policy
+                (self.last_progress + t, idle || self.shed_reply.is_some())
+            }
+            State::Write { .. } => {
+                // A dry pacer is us waiting, not the peer stalling — but
+                // only within reason: `speed_mbps` is client-supplied, and
+                // a rate so low the bucket cannot refill one byte inside
+                // the I/O timeout is a slot-pinning vector, not a pace.
+                if let Some(wait) = self.pacer.as_ref().and_then(|p| p.ready_in(now)) {
+                    if wait < cfg.io_timeout {
+                        return None;
+                    }
+                }
+                (self.last_progress + cfg.io_timeout, false)
+            }
+            State::Closed => return None,
+        };
+        if now < deadline {
+            return None;
+        }
+        self.state = State::Closed;
+        Some(if clean {
+            Step::Done
+        } else {
+            Step::Failed("stalled: I/O deadline exceeded".into())
+        })
+    }
+
+    /// Drive the connection as far as the socket allows.
+    pub fn on_ready(&mut self, repo: &Repository, cfg: &ConnConfig, stats: &ServerStats) -> Step {
+        loop {
+            let flow = match &self.state {
+                State::ReadRequest { .. } => self.step_read(repo, cfg, stats),
+                State::Write { .. } => self.step_write(stats),
+                State::Closed => return Step::Done,
+            };
+            match flow {
+                Flow::Continue => continue,
+                Flow::Blocked => return Step::Open,
+                Flow::End(step) => {
+                    self.state = State::Closed;
+                    return step;
+                }
+            }
+        }
+    }
+
+    fn step_read(&mut self, repo: &Repository, cfg: &ConnConfig, stats: &ServerStats) -> Flow {
+        let frame: Vec<u8>;
+        loop {
+            let State::ReadRequest { buf } = &mut self.state else {
+                return Flow::Continue;
+            };
+            let need = if buf.len() < 4 {
+                4 - buf.len()
+            } else {
+                let n = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+                if n > proto::MAX_FRAME {
+                    return Flow::End(Step::Failed(format!("request frame too large: {n}")));
+                }
+                4 + n - buf.len()
+            };
+            if need == 0 {
+                frame = buf[4..].to_vec();
+                break;
+            }
+            let mut tmp = [0u8; 4096];
+            let want = need.min(tmp.len());
+            // a shed peer that leaves before (or instead of) its request
+            // is a policy outcome, not a protocol error
+            let tolerated = self.served_any || self.shed_reply.is_some();
+            match self.stream.read(&mut tmp[..want]) {
+                Ok(0) => {
+                    return Flow::End(if buf.is_empty() && tolerated {
+                        // normal end of a keep-alive session / shed peer
+                        Step::Done
+                    } else if buf.is_empty() {
+                        Step::Failed("connection closed before any request".into())
+                    } else {
+                        Step::Failed("connection closed mid-request".into())
+                    });
+                }
+                Ok(n) => {
+                    buf.extend_from_slice(&tmp[..n]);
+                    self.last_progress = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Flow::Blocked,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // RST-style endings between requests are how real
+                    // clients leave keep-alive sessions; match the old
+                    // blocking server's is_disconnect leniency
+                    return Flow::End(if buf.is_empty() && tolerated && is_disconnect(&e) {
+                        Step::Done
+                    } else {
+                        Step::Failed(format!("read: {e}"))
+                    });
+                }
+            }
+        }
+        if let Some(msg) = self.shed_reply.take() {
+            // shed: answer the request with ERR and close cleanly (the
+            // request was read, so the close is a FIN, not a RST)
+            let mut head = Vec::new();
+            let _ = proto::write_err(&mut head, &msg);
+            self.pacer = None;
+            self.state = State::Write {
+                head,
+                head_sent: 0,
+                body: None,
+                body_sent: 0,
+                keep_alive: false,
+                close_error: None,
+            };
+            return Flow::Continue;
+        }
+        self.serve(&frame, repo, cfg, stats)
+    }
+
+    /// A complete request frame arrived: parse, resolve the container,
+    /// and queue the status frame + body for writing.
+    fn serve(
+        &mut self,
+        frame: &[u8],
+        repo: &Repository,
+        cfg: &ConnConfig,
+        stats: &ServerStats,
+    ) -> Flow {
+        let req = match std::str::from_utf8(frame)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| FetchRequest::from_json(&Json::parse(text)?))
+        {
+            Ok(r) => r,
+            Err(e) => return Flow::End(Step::Failed(format!("bad request: {e:#}"))),
+        };
+        stats.requests.fetch_add(1, Ordering::SeqCst);
+        let schedule = req
+            .schedule
+            .clone()
+            .unwrap_or_else(|| cfg.default_schedule.clone());
+        let container = match repo.container(&req.model, &schedule) {
+            Ok(c) => c,
+            Err(e) => {
+                self.enter_error_reply(&format!("{e}"));
+                return Flow::Continue;
+            }
+        };
+        let total_stages = container.manifest().schedule.stages() as u32;
+        // Degrade-mode shedding: clamp initial windows (those starting at
+        // stage 0) to at most `max_stages` coarse stages. The status
+        // frame echoes the clamped range, so clients parse exactly what
+        // arrives and still reach `ModelReady` — just at lower precision.
+        let mut stages = req.stages;
+        if let Some(maxs) = self.degrade_stages {
+            let (a, b) = stages.unwrap_or((0, total_stages));
+            let clamp = maxs.min(total_stages);
+            if a == 0 && b > clamp {
+                stages = Some((0, clamp));
+            }
+        }
+        let range = match container.body_range(stages) {
+            Ok(r) => r,
+            Err(e) => {
+                self.enter_error_reply(&format!("{e}"));
+                return Flow::Continue;
+            }
+        };
+        let selected_len = range.len();
+        let off = (req.offset as usize).min(selected_len);
+        let resp = FetchResponse {
+            total: selected_len as u64,
+            remaining: (selected_len - off) as u64,
+            container_len: container.len() as u64,
+            stages,
+        };
+        let mut head = Vec::new();
+        proto::write_ok(&mut head, &resp).expect("status frame into Vec");
+        let stage_count = match stages {
+            Some((a, b)) => b.saturating_sub(a) as u64,
+            None => total_stages as u64,
+        };
+        stats.stages_served.fetch_add(stage_count, Ordering::SeqCst);
+        // `speed_mbps` is client-supplied: zero/negative/NaN rates are
+        // nonsense and would wedge the bucket math, so they serve
+        // unshaped; absurdly-low-but-positive rates are handled by the
+        // I/O-deadline guard in `on_deadline`.
+        self.pacer = req
+            .speed_mbps
+            .or(cfg.default_speed_mbps)
+            .filter(|mbps| mbps.is_finite() && *mbps > 0.0)
+            .map(|mbps| TokenBucket::with_burst(LinkSpec::mbps(mbps), cfg.write_burst));
+        self.state = State::Write {
+            head,
+            head_sent: 0,
+            body: Some(BodySlice {
+                container,
+                range: range.start + off..range.end,
+            }),
+            body_sent: 0,
+            keep_alive: req.keep_alive,
+            close_error: None,
+        };
+        Flow::Continue
+    }
+
+    /// Queue an `ERR` status frame; the connection closes (and the error
+    /// is reported) once the frame is flushed.
+    fn enter_error_reply(&mut self, msg: &str) {
+        let mut head = Vec::new();
+        let _ = proto::write_err(&mut head, msg);
+        self.pacer = None;
+        self.state = State::Write {
+            head,
+            head_sent: 0,
+            body: None,
+            body_sent: 0,
+            keep_alive: false,
+            close_error: Some(msg.to_string()),
+        };
+    }
+
+    fn step_write(&mut self, stats: &ServerStats) -> Flow {
+        let State::Write {
+            head,
+            head_sent,
+            body,
+            body_sent,
+            keep_alive,
+            close_error,
+        } = &mut self.state
+        else {
+            return Flow::Continue;
+        };
+        // status frame first — tiny, never paced
+        while *head_sent < head.len() {
+            match self.stream.write(&head[*head_sent..]) {
+                Ok(0) => return Flow::End(Step::Failed("write: socket closed".into())),
+                Ok(n) => {
+                    *head_sent += n;
+                    self.last_progress = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Flow::Blocked,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Flow::End(Step::Failed(format!("write: {e}"))),
+            }
+        }
+        // paced body: borrowed slice of the cached container
+        if let Some(b) = body {
+            let total = b.range.len();
+            while *body_sent < total {
+                let budget = match &self.pacer {
+                    Some(p) => p.budget(Instant::now()),
+                    None => usize::MAX,
+                };
+                if budget == 0 {
+                    // pacer dry: the refill instant is our next deadline
+                    return Flow::Blocked;
+                }
+                let chunk = budget.min(WRITE_CHUNK).min(total - *body_sent);
+                let at = b.range.start + *body_sent;
+                match self.stream.write(&b.container.bytes()[at..at + chunk]) {
+                    Ok(0) => return Flow::End(Step::Failed("write: socket closed".into())),
+                    Ok(n) => {
+                        *body_sent += n;
+                        self.last_progress = Instant::now();
+                        if let Some(p) = &mut self.pacer {
+                            p.on_sent(n);
+                        }
+                        stats.bytes_sent.fetch_add(n as u64, Ordering::SeqCst);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Flow::Blocked,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Flow::End(Step::Failed(format!("write: {e}"))),
+                }
+            }
+        }
+        // response complete
+        let _ = self.stream.flush();
+        if let Some(msg) = close_error.take() {
+            return Flow::End(Step::Failed(msg));
+        }
+        if *keep_alive {
+            self.served_any = true;
+            self.pacer = None;
+            self.last_progress = Instant::now();
+            self.state = State::ReadRequest { buf: Vec::new() };
+            Flow::Continue
+        } else {
+            Flow::End(Step::Done)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Schedule;
+    use crate::testutil::fixture::synthetic_models;
+    use std::collections::VecDeque;
+
+    /// In-memory nonblocking stream: reads pop from `input` (WouldBlock
+    /// when empty), writes append to `output` (optionally capped per
+    /// call to exercise partial writes).
+    struct MockStream {
+        input: VecDeque<u8>,
+        output: Vec<u8>,
+        write_cap: usize,
+    }
+
+    impl MockStream {
+        fn new() -> Self {
+            Self {
+                input: VecDeque::new(),
+                output: Vec::new(),
+                write_cap: usize::MAX,
+            }
+        }
+
+        fn push_input(&mut self, bytes: &[u8]) {
+            self.input.extend(bytes.iter().copied());
+        }
+    }
+
+    impl Read for MockStream {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.input.is_empty() {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            let n = buf.len().min(self.input.len());
+            for slot in buf.iter_mut().take(n) {
+                *slot = self.input.pop_front().unwrap();
+            }
+            Ok(n)
+        }
+    }
+
+    impl Write for MockStream {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.write_cap);
+            if n == 0 && !buf.is_empty() {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.output.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn test_cfg() -> ConnConfig {
+        ConnConfig {
+            default_speed_mbps: None,
+            default_schedule: Schedule::paper_default(),
+            write_burst: 16 * 1024,
+            io_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(10),
+        }
+    }
+
+    fn repo(tag: &str) -> Repository {
+        Repository::new(synthetic_models(tag).unwrap())
+    }
+
+    /// Split `out` into (status frame json, rest-of-bytes).
+    fn split_status(out: &[u8]) -> (Json, &[u8]) {
+        let n = u32::from_le_bytes([out[0], out[1], out[2], out[3]]) as usize;
+        let j = Json::parse(std::str::from_utf8(&out[4..4 + n]).unwrap()).unwrap();
+        (j, &out[4 + n..])
+    }
+
+    #[test]
+    fn serves_a_full_request() {
+        let repo = repo("conn-full");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        let req = FetchRequest::new("alpha");
+        conn.stream.push_input(&req.encode());
+        let step = conn.on_ready(&repo, &test_cfg(), &stats);
+        assert_eq!(step, Step::Done);
+        let expect = repo.container("alpha", &Schedule::paper_default()).unwrap();
+        let (status, body) = split_status(&conn.stream().output);
+        assert_eq!(status.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(
+            status.get("total").unwrap().as_i64().unwrap() as usize,
+            expect.len()
+        );
+        assert_eq!(body, expect.bytes());
+        assert_eq!(stats.requests.load(Ordering::SeqCst), 1);
+        assert_eq!(stats.bytes_sent.load(Ordering::SeqCst) as usize, expect.len());
+        assert_eq!(stats.stages_served.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn partial_request_blocks_then_completes() {
+        let repo = repo("conn-partial");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        let wire = FetchRequest::new("alpha").encode();
+        conn.stream.push_input(&wire[..3]);
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Open);
+        assert!(conn.wants_read());
+        conn.stream.push_input(&wire[3..]);
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Done);
+        assert_eq!(stats.requests.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn keep_alive_loops_back_to_reading() {
+        let repo = repo("conn-ka");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        let r1 = FetchRequest::new("alpha")
+            .with_stages(0, 2)
+            .with_keep_alive(true);
+        let r2 = FetchRequest::new("beta").with_stages(0, 2);
+        conn.stream.push_input(&r1.encode());
+        conn.stream.push_input(&r2.encode());
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Done);
+        assert_eq!(stats.requests.load(Ordering::SeqCst), 2);
+        assert_eq!(stats.stages_served.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn unknown_model_flushes_err_then_fails() {
+        let repo = repo("conn-unknown");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream.push_input(&FetchRequest::new("missing").encode());
+        let step = conn.on_ready(&repo, &test_cfg(), &stats);
+        assert!(matches!(step, Step::Failed(_)), "{step:?}");
+        let (status, rest) = split_status(&conn.stream().output);
+        assert_eq!(status.get("status").unwrap().as_str().unwrap(), "err");
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn degraded_conn_clamps_initial_window() {
+        let repo = repo("conn-degrade");
+        let stats = ServerStats::default();
+        let mut conn = Conn::degraded(MockStream::new(), 3);
+        conn.stream.push_input(&FetchRequest::new("alpha").encode());
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Done);
+        let container = repo.container("alpha", &Schedule::paper_default()).unwrap();
+        let want = container.slice(container.body_range(Some((0, 3))).unwrap());
+        let (status, body) = split_status(&conn.stream().output);
+        // the echoed range tells the client exactly what it will get
+        let echoed = status.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(echoed[1].as_i64().unwrap(), 3);
+        assert_eq!(body, want);
+        // later windows (client already has the coarse stages) pass through
+        let mut conn2 = Conn::degraded(MockStream::new(), 3);
+        conn2
+            .stream
+            .push_input(&FetchRequest::new("alpha").with_stages(3, 8).encode());
+        assert_eq!(conn2.on_ready(&repo, &test_cfg(), &stats), Step::Done);
+        let (s2, b2) = split_status(&conn2.stream().output);
+        assert_eq!(
+            s2.get("stages").unwrap().as_arr().unwrap()[1]
+                .as_i64()
+                .unwrap(),
+            8
+        );
+        let want2 = container.slice(container.body_range(Some((3, 8))).unwrap());
+        assert_eq!(b2, want2);
+    }
+
+    #[test]
+    fn rejecting_conn_reads_request_then_writes_err_and_closes_cleanly() {
+        let repo = repo("conn-reject");
+        let stats = ServerStats::default();
+        let mut conn = Conn::rejecting(MockStream::new(), "server at capacity (2 connections)");
+        // nothing sent yet: the shed conn waits for the request frame
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Open);
+        assert!(conn.stream().output.is_empty());
+        conn.stream.push_input(&FetchRequest::new("alpha").encode());
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Done);
+        let (status, rest) = split_status(&conn.stream().output);
+        assert_eq!(status.get("status").unwrap().as_str().unwrap(), "err");
+        assert!(status
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("at capacity"));
+        assert!(rest.is_empty());
+        // shed conns are neither protocol errors nor served requests
+        assert_eq!(stats.errors.load(Ordering::SeqCst), 0);
+        assert_eq!(stats.requests.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn stalled_mid_request_evicts_after_io_timeout() {
+        let repo = repo("conn-stall");
+        let stats = ServerStats::default();
+        let mut cfg = test_cfg();
+        cfg.io_timeout = Duration::from_millis(10);
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream.push_input(&[1, 0]); // two bytes of the length prefix
+        assert_eq!(conn.on_ready(&repo, &cfg, &stats), Step::Open);
+        let now = Instant::now();
+        assert!(conn.on_deadline(now, &cfg).is_none(), "not expired yet");
+        let later = now + Duration::from_millis(50);
+        match conn.on_deadline(later, &cfg) {
+            Some(Step::Failed(msg)) => assert!(msg.contains("stalled"), "{msg}"),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_keep_alive_closes_cleanly_at_deadline() {
+        let repo = repo("conn-idle");
+        let stats = ServerStats::default();
+        let mut cfg = test_cfg();
+        cfg.idle_timeout = Duration::from_millis(10);
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream.push_input(
+            &FetchRequest::new("alpha")
+                .with_stages(0, 1)
+                .with_keep_alive(true)
+                .encode(),
+        );
+        assert_eq!(conn.on_ready(&repo, &cfg, &stats), Step::Open);
+        assert!(conn.wants_read(), "waiting for the next request");
+        let later = Instant::now() + Duration::from_millis(50);
+        assert_eq!(conn.on_deadline(later, &cfg), Some(Step::Done));
+    }
+
+    #[test]
+    fn paced_body_respects_budget_and_reports_refill_deadline() {
+        let repo = repo("conn-paced");
+        let stats = ServerStats::default();
+        let mut cfg = test_cfg();
+        cfg.write_burst = 256; // tiny burst so the budget runs dry
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream
+            .push_input(&FetchRequest::new("alpha").with_speed(0.001).encode());
+        // 0.001 MB/s ≈ 1 KB/s: after the burst the budget is dry
+        assert_eq!(conn.on_ready(&repo, &cfg, &stats), Step::Open);
+        let sent_now = conn.stream().output.len();
+        let container = repo.container("alpha", &Schedule::paper_default()).unwrap();
+        assert!(
+            sent_now < container.len() / 2,
+            "burst-limited first pass sent {sent_now} of {}",
+            container.len()
+        );
+        let now = Instant::now();
+        let dl = conn.next_deadline(now, &cfg).expect("refill deadline");
+        assert!(dl > now, "deadline in the future");
+        // a dry or freshly refilled pacer is never an eviction
+        assert!(conn.on_deadline(now, &cfg).is_none());
+    }
+
+    #[test]
+    fn absurdly_slow_client_pace_cannot_pin_a_slot() {
+        // `speed_mbps` is client-supplied: a rate whose bucket cannot
+        // refill one byte within the I/O timeout must not exempt the
+        // connection from stall eviction (slot-pinning guard).
+        let repo = repo("conn-pin");
+        let stats = ServerStats::default();
+        let mut cfg = test_cfg();
+        cfg.io_timeout = Duration::from_millis(50);
+        cfg.write_burst = 0;
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream
+            .push_input(&FetchRequest::new("alpha").with_speed(1e-9).encode());
+        assert_eq!(conn.on_ready(&repo, &cfg, &stats), Step::Open);
+        let later = Instant::now() + Duration::from_millis(200);
+        match conn.on_deadline(later, &cfg) {
+            Some(Step::Failed(msg)) => assert!(msg.contains("stalled"), "{msg}"),
+            other => panic!("slot-pinning pace must be evicted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nonsense_speeds_serve_unshaped() {
+        // zero/negative rates are representable on the wire but would
+        // wedge the bucket math; the server must serve them unshaped
+        // (NaN/inf can't even be encoded as JSON)
+        let repo = repo("conn-badspeed");
+        let stats = ServerStats::default();
+        for speed in [0.0, -1.0] {
+            let mut conn = Conn::new(MockStream::new());
+            conn.stream
+                .push_input(&FetchRequest::new("alpha").with_speed(speed).encode());
+            // must complete immediately (no wedged pacer), full body out
+            assert_eq!(
+                conn.on_ready(&repo, &test_cfg(), &stats),
+                Step::Done,
+                "speed {speed}"
+            );
+        }
+    }
+}

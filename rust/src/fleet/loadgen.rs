@@ -1,0 +1,513 @@
+//! Synthetic fleet driver: N virtual clients, each a real
+//! [`ProgressiveSession`] over a real socket, drawn from cohort
+//! scenarios.
+//!
+//! Cohorts model heterogeneous device populations: a fixed link rate
+//! ([`LinkSpec`](crate::netsim::LinkSpec)-style MB/s, applied as the
+//! per-request server-side pacing override), rates sampled across a
+//! [`BandwidthTrace`](crate::netsim::BandwidthTrace) (each client gets
+//! the rate of a different point of the trace period), and
+//! *flaky-reconnect* clients whose first connection is cut mid-body by a
+//! per-client [`cutting_proxy`] so the session's stage-boundary resume
+//! path runs under load.
+//!
+//! Every virtual client is one OS thread driving its session's event
+//! stream and timestamping `accept → first stage / first ModelReady /
+//! finished` into a [`ClientSample`]; [`run_fleet`] joins them into an
+//! [`SloReport`]. Thread count is `O(clients)` on the load side — the
+//! point of the exercise is that the *server* stays `O(workers)`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::admission::SHED_MARKER;
+use super::slo::{ClientSample, Outcome, SloReport};
+use crate::client::session::{ExecMode, ProgressiveSession, SessionEvent};
+use crate::netsim::BandwidthTrace;
+use crate::runtime::ModelSession;
+use crate::server::proto::MAX_FRAME;
+
+/// One homogeneous slice of the fleet.
+#[derive(Debug, Clone)]
+pub struct Cohort {
+    pub name: String,
+    pub clients: usize,
+    /// server-side pacing override, MB/s (None = unshaped)
+    pub speed_mbps: Option<f64>,
+    /// sample per-client rates across this trace's period instead of a
+    /// single fixed rate
+    pub trace: Option<BandwidthTrace>,
+    /// cut each client's first connection mid-body (exercises
+    /// stage-boundary reconnect-resume)
+    pub flaky: bool,
+}
+
+impl Cohort {
+    /// Fixed-rate cohort (`speed_mbps: None` = unshaped).
+    pub fn fixed(name: &str, clients: usize, speed_mbps: Option<f64>) -> Self {
+        Self {
+            name: name.to_string(),
+            clients,
+            speed_mbps,
+            trace: None,
+            flaky: false,
+        }
+    }
+
+    /// Flaky-reconnect cohort at a fixed rate.
+    pub fn flaky(name: &str, clients: usize, speed_mbps: Option<f64>) -> Self {
+        Self {
+            flaky: true,
+            ..Self::fixed(name, clients, speed_mbps)
+        }
+    }
+
+    /// Cohort whose clients' rates are sampled across `trace`'s period.
+    pub fn traced(name: &str, clients: usize, trace: BandwidthTrace) -> Self {
+        Self {
+            name: name.to_string(),
+            clients,
+            speed_mbps: None,
+            trace: Some(trace),
+            flaky: false,
+        }
+    }
+}
+
+/// A fleet scenario: one model fetched by a mix of cohorts.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub model: String,
+    pub cohorts: Vec<Cohort>,
+}
+
+impl Scenario {
+    /// Single homogeneous cohort.
+    pub fn uniform(model: &str, clients: usize, speed_mbps: Option<f64>) -> Self {
+        Self {
+            model: model.to_string(),
+            cohorts: vec![Cohort::fixed("all", clients, speed_mbps)],
+        }
+    }
+
+    /// The paper-flavoured default mix: 70% at 0.5 MB/s, 20% at
+    /// 0.1 MB/s, 10% flaky-reconnect at 0.5 MB/s.
+    pub fn mix(model: &str, clients: usize) -> Self {
+        let bulk = clients * 7 / 10;
+        let slow = clients * 2 / 10;
+        let flaky = clients - bulk - slow;
+        Self {
+            model: model.to_string(),
+            cohorts: vec![
+                Cohort::fixed("bulk-0.5", bulk, Some(0.5)),
+                Cohort::fixed("slow-0.1", slow, Some(0.1)),
+                Cohort::flaky("flaky-0.5", flaky, Some(0.5)),
+            ],
+        }
+    }
+
+    /// Parse `name:count:speed[:flaky]` entries separated by commas;
+    /// `speed` is MB/s or `max` for unshaped. Example:
+    /// `bulk:35:0.5,slow:10:0.1,edge:5:max:flaky`.
+    pub fn parse(model: &str, spec: &str) -> Result<Self> {
+        let mut cohorts = Vec::new();
+        for part in spec.split(',').filter(|s| !s.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                bail!("cohort '{part}' is not name:count:speed[:flaky]");
+            }
+            let clients: usize = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("cohort '{part}': bad count '{}'", fields[1]))?;
+            let speed = match fields[2] {
+                "max" | "unshaped" => None,
+                s => Some(s.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("cohort '{part}': bad speed '{s}' (MB/s or 'max')")
+                })?),
+            };
+            let flaky = match fields.get(3) {
+                None => false,
+                Some(&"flaky") => true,
+                Some(other) => bail!("cohort '{part}': unknown flag '{other}'"),
+            };
+            cohorts.push(Cohort {
+                name: fields[0].to_string(),
+                clients,
+                speed_mbps: speed,
+                trace: None,
+                flaky,
+            });
+        }
+        if cohorts.is_empty() {
+            bail!("scenario '{spec}' has no cohorts");
+        }
+        Ok(Self {
+            model: model.to_string(),
+            cohorts,
+        })
+    }
+
+    pub fn total_clients(&self) -> usize {
+        self.cohorts.iter().map(|c| c.clients).sum()
+    }
+}
+
+/// Knobs of a fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// session execution mode (Serial keeps the load side at one driver
+    /// thread per client)
+    pub mode: ExecMode,
+    /// reconnect budget per session (flaky cohorts get at least 1)
+    pub resume_retries: usize,
+    /// spread session starts over this window (0 = thundering herd)
+    pub ramp: Duration,
+    /// where the cutting proxy severs a flaky client's first connection
+    pub flaky_cut_bytes: usize,
+    /// whole-session retries on connect refusal (accept backlog under
+    /// herd starts), distinct from protocol errors
+    pub connect_retries: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self {
+            mode: ExecMode::Serial,
+            resume_retries: 2,
+            ramp: Duration::ZERO,
+            flaky_cut_bytes: 12_000,
+            connect_retries: 2,
+        }
+    }
+}
+
+/// One expanded virtual-client spec.
+#[derive(Debug, Clone)]
+struct ClientSpec {
+    cohort: String,
+    speed_mbps: Option<f64>,
+    flaky: bool,
+}
+
+fn client_specs(scenario: &Scenario) -> Vec<ClientSpec> {
+    let mut specs = Vec::with_capacity(scenario.total_clients());
+    for c in &scenario.cohorts {
+        for i in 0..c.clients {
+            let speed = match (&c.trace, c.speed_mbps) {
+                (Some(trace), _) => {
+                    let period = trace.period();
+                    let t = if period.is_finite() && c.clients > 0 {
+                        (i as f64 + 0.5) / c.clients as f64 * period
+                    } else {
+                        0.0
+                    };
+                    Some(trace.rate_at(t) / (1024.0 * 1024.0))
+                }
+                (None, s) => s,
+            };
+            specs.push(ClientSpec {
+                cohort: c.name.clone(),
+                speed_mbps: speed,
+                flaky: c.flaky,
+            });
+        }
+    }
+    specs
+}
+
+/// A tiny TCP proxy that forwards request/response exchanges to
+/// `upstream`, severing the **first** connection after `cut_first_after`
+/// response-body bytes; later connections forward in full. Each flaky
+/// virtual client gets its own proxy, so "first connection" is
+/// per-client. Also used directly by resilience tests.
+pub fn cutting_proxy(upstream: SocketAddr, cut_first_after: usize) -> Result<SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("prognet-flaky-proxy".into())
+        .spawn(move || {
+            let mut conn_no = 0usize;
+            for stream in listener.incoming() {
+                let Ok(mut client) = stream else { break };
+                conn_no += 1;
+                let cap = if conn_no == 1 {
+                    Some(cut_first_after)
+                } else {
+                    None
+                };
+                let Ok(mut up) = TcpStream::connect(upstream) else { break };
+                // forward exactly one request frame upstream …
+                let mut len = [0u8; 4];
+                if client.read_exact(&mut len).is_err() {
+                    continue;
+                }
+                let n = u32::from_le_bytes(len) as usize;
+                if n > MAX_FRAME {
+                    continue;
+                }
+                let mut body = vec![0u8; n];
+                if client.read_exact(&mut body).is_err()
+                    || up.write_all(&len).is_err()
+                    || up.write_all(&body).is_err()
+                {
+                    continue;
+                }
+                // … then pump the response downstream, cutting at `cap`
+                let mut sent = 0usize;
+                let mut cut = false;
+                let mut buf = [0u8; 4096];
+                loop {
+                    let k = match up.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(k) => k,
+                    };
+                    let k = match cap {
+                        Some(c) if sent + k > c => c.saturating_sub(sent),
+                        _ => k,
+                    };
+                    if k == 0 || client.write_all(&buf[..k]).is_err() {
+                        cut = cap.is_some();
+                        break;
+                    }
+                    sent += k;
+                    if cap == Some(sent) {
+                        cut = true;
+                        break;
+                    }
+                }
+                // Exit once no further connection can come, instead of
+                // leaking the listener + thread until process end: after
+                // a full (uncut) forward the client has everything, and a
+                // first connection that ended *before* the cut (response
+                // shorter than the cut point) will not resume either.
+                if !cut {
+                    break;
+                }
+            }
+        })?;
+    Ok(addr)
+}
+
+/// Run the scenario against a serving address and aggregate the SLO
+/// report. `runtime` (a compiled session of the scenario's model) turns
+/// on per-client `ModelReady` measurement via hot-swapped
+/// [`ApproxModel`](crate::runtime::ApproxModel)s; without it the clients
+/// are download-only.
+pub fn run_fleet(
+    addr: SocketAddr,
+    scenario: &Scenario,
+    runtime: Option<Arc<ModelSession>>,
+    opts: &FleetOptions,
+) -> Result<SloReport> {
+    let specs = client_specs(scenario);
+    anyhow::ensure!(!specs.is_empty(), "scenario has no clients");
+    let n = specs.len();
+    let t_run = Instant::now();
+    let handles: Vec<std::thread::JoinHandle<ClientSample>> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let model = scenario.model.clone();
+            let runtime = runtime.clone();
+            let opts = opts.clone();
+            std::thread::Builder::new()
+                .name(format!("prognet-vclient-{i}"))
+                .spawn(move || {
+                    if !opts.ramp.is_zero() && n > 1 {
+                        std::thread::sleep(opts.ramp.mul_f64(i as f64 / n as f64));
+                    }
+                    drive_client(addr, &model, &spec, runtime, &opts)
+                })
+                .expect("spawn virtual client")
+        })
+        .collect();
+    let samples: Vec<ClientSample> = handles
+        .into_iter()
+        .map(|h| {
+            h.join().unwrap_or_else(|_| {
+                let mut s = ClientSample::new("panicked");
+                s.error = Some("virtual client panicked".into());
+                s
+            })
+        })
+        .collect();
+    Ok(SloReport::from_samples(
+        &scenario.model,
+        t_run.elapsed().as_secs_f64(),
+        &samples,
+    ))
+}
+
+/// Drive one virtual client to completion.
+fn drive_client(
+    addr: SocketAddr,
+    model: &str,
+    spec: &ClientSpec,
+    runtime: Option<Arc<ModelSession>>,
+    opts: &FleetOptions,
+) -> ClientSample {
+    let mut sample = ClientSample::new(&spec.cohort);
+    let target = if spec.flaky {
+        match cutting_proxy(addr, opts.flaky_cut_bytes) {
+            Ok(a) => a,
+            Err(e) => {
+                // degraded measurement, not a failed client — but say so
+                crate::log_warn!(
+                    "flaky proxy unavailable ({e:#}); cohort '{}' client runs un-cut",
+                    spec.cohort
+                );
+                addr
+            }
+        }
+    } else {
+        addr
+    };
+    let mut attempt = 0usize;
+    loop {
+        attempt += 1;
+        let t0 = Instant::now();
+        let mut builder = ProgressiveSession::builder(model)
+            .addr(target)
+            .mode(opts.mode)
+            .resume_retries(if spec.flaky {
+                opts.resume_retries.max(1)
+            } else {
+                opts.resume_retries
+            });
+        if let Some(mbps) = spec.speed_mbps {
+            builder = builder.speed_mbps(mbps);
+        }
+        if let Some(rt) = &runtime {
+            builder = builder.runtime(model, rt.clone());
+        }
+        let handle = match builder.start() {
+            Ok(h) => h,
+            Err(e) => {
+                sample.outcome = Outcome::ConnectFailed;
+                sample.error = Some(format!("{e:#}"));
+                return sample;
+            }
+        };
+        // fresh measurements per attempt (connect retries restart)
+        sample.t_first_stage = None;
+        sample.t_model_ready = None;
+        sample.t_finished = None;
+        sample.stages = 0;
+        sample.resumed = 0;
+        while let Some(ev) = handle.next_event() {
+            let t = t0.elapsed().as_secs_f64();
+            match ev {
+                SessionEvent::StageComplete { .. } => {
+                    sample.stages += 1;
+                    if sample.t_first_stage.is_none() {
+                        sample.t_first_stage = Some(t);
+                    }
+                }
+                SessionEvent::ModelReady { .. } => {
+                    if sample.t_model_ready.is_none() {
+                        sample.t_model_ready = Some(t);
+                    }
+                }
+                SessionEvent::Resumed { .. } => sample.resumed += 1,
+                SessionEvent::Inference { .. } => {}
+                SessionEvent::Finished(summary) => {
+                    sample.t_finished = Some(t);
+                    sample.bytes = summary.bytes;
+                }
+            }
+        }
+        match handle.finish() {
+            Ok(_) => {
+                sample.outcome = Outcome::Finished;
+                sample.error = None;
+                if sample.t_finished.is_none() {
+                    sample.t_finished = Some(t0.elapsed().as_secs_f64());
+                }
+                return sample;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains(SHED_MARKER) {
+                    sample.outcome = Outcome::Shed;
+                    sample.error = Some(msg);
+                    return sample;
+                }
+                let is_connect = msg.contains(crate::server::service::CONNECT_CONTEXT);
+                if is_connect && attempt <= opts.connect_retries {
+                    // herd-start backlog refusal: back off briefly, retry
+                    std::thread::sleep(Duration::from_millis(20 * attempt as u64));
+                    continue;
+                }
+                sample.outcome = if is_connect {
+                    Outcome::ConnectFailed
+                } else {
+                    Outcome::ProtocolError
+                };
+                sample.error = Some(msg);
+                return sample;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_cohort_spec() {
+        let s = Scenario::parse("m", "bulk:35:0.5,slow:10:0.1,edge:5:max:flaky").unwrap();
+        assert_eq!(s.total_clients(), 50);
+        assert_eq!(s.cohorts.len(), 3);
+        assert_eq!(s.cohorts[0].speed_mbps, Some(0.5));
+        assert_eq!(s.cohorts[2].speed_mbps, None);
+        assert!(s.cohorts[2].flaky);
+        assert!(!s.cohorts[0].flaky);
+        assert!(Scenario::parse("m", "").is_err());
+        assert!(Scenario::parse("m", "a:b:c").is_err());
+        assert!(Scenario::parse("m", "a:1:0.5:wat").is_err());
+        assert!(Scenario::parse("m", "a:1").is_err());
+    }
+
+    #[test]
+    fn mix_partitions_all_clients() {
+        for n in [1usize, 5, 10, 50, 1000] {
+            let s = Scenario::mix("m", n);
+            assert_eq!(s.total_clients(), n, "mix of {n}");
+        }
+        let s = Scenario::mix("m", 100);
+        assert_eq!(s.cohorts[0].clients, 70);
+        assert_eq!(s.cohorts[1].clients, 20);
+        assert_eq!(s.cohorts[2].clients, 10);
+        assert!(s.cohorts[2].flaky);
+    }
+
+    #[test]
+    fn traced_cohort_samples_across_the_period() {
+        let mb = 1024.0 * 1024.0;
+        let trace = BandwidthTrace::new(vec![(1.0, 0.5 * mb), (1.0, 2.0 * mb)]).unwrap();
+        let s = Scenario {
+            model: "m".into(),
+            cohorts: vec![Cohort::traced("tr", 4, trace)],
+        };
+        let specs = client_specs(&s);
+        assert_eq!(specs.len(), 4);
+        // first half of the period is 0.5 MB/s, second half 2.0 MB/s
+        assert!((specs[0].speed_mbps.unwrap() - 0.5).abs() < 1e-9);
+        assert!((specs[1].speed_mbps.unwrap() - 0.5).abs() < 1e-9);
+        assert!((specs[2].speed_mbps.unwrap() - 2.0).abs() < 1e-9);
+        assert!((specs[3].speed_mbps.unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_expansion() {
+        let s = Scenario::uniform("m", 3, None);
+        let specs = client_specs(&s);
+        assert_eq!(specs.len(), 3);
+        assert!(specs.iter().all(|c| c.speed_mbps.is_none() && !c.flaky));
+    }
+}

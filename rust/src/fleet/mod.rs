@@ -1,0 +1,124 @@
+//! Fleet-scale serving and load generation.
+//!
+//! The paper's value proposition is *user-perceived* latency — an
+//! acceptable approximate model early in the download — which only means
+//! something under populations of concurrent, heterogeneous clients.
+//! This subsystem provides both halves of that demonstration:
+//!
+//! **Serving core.** [`reactor`] replaces the historical
+//! thread-per-connection server with a sharded pool of event-loop
+//! workers driving nonblocking sockets (std `set_nonblocking` plus a
+//! readiness poll — no external deps). Each connection is a [`conn`]
+//! state machine for the v2 stage-range protocol (handshake → stage
+//! bursts → keep-alive), paced by the same token-bucket math as
+//! [`netsim::ThrottledWriter`](crate::netsim::ThrottledWriter) but
+//! without a thread or a sleep per client. [`admission`] caps concurrent
+//! connections and sheds overload by policy: reject, queue with a
+//! deadline, or degrade to fewer stages (the progressive format makes
+//! "serve a coarser model" a first-class shedding action).
+//! `server::service::Server` is now a thin facade over the reactor; the
+//! wire protocol is unchanged.
+//!
+//! **Load & SLO half.** [`loadgen`] spawns N virtual clients — each a
+//! real [`ProgressiveSession`](crate::client::session::ProgressiveSession)
+//! over a real socket — drawn from cohort scenarios (bandwidth mixes
+//! built on [`netsim::LinkSpec`](crate::netsim::LinkSpec) /
+//! [`netsim::BandwidthTrace`](crate::netsim::BandwidthTrace), plus
+//! flaky-reconnect cohorts). [`slo`] aggregates the per-client samples
+//! into p50/p95/p99 for accept→first-stage, accept→first-`ModelReady`
+//! and accept→finished, emitted as JSON for the bench trajectory
+//! (`benches/fleet_slo.rs` → `BENCH_fleet.json`).
+//!
+//! Quickstart: `prognet fleet --clients 200` self-hosts a reactor over
+//! synthetic fixture models and prints the SLO report; see
+//! `rust/README.md` ("Fleet serving & load generation").
+
+pub mod admission;
+pub mod conn;
+pub mod loadgen;
+pub mod poll;
+pub mod reactor;
+pub mod slo;
+
+pub use admission::{Admission, Decision, ShedPolicy, SHED_MARKER};
+pub use conn::Conn;
+pub use loadgen::{Cohort, FleetOptions, Scenario};
+pub use reactor::{FleetConfig, Reactor};
+pub use slo::{ClientSample, Outcome, SloReport};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::metrics::Table;
+
+/// Live serving counters, shared by every reactor shard and exposed via
+/// `Server::stats()`. Monotonic counters unless noted; `active` and
+/// `queued` are gauges.
+#[derive(Default, Debug)]
+pub struct ServerStats {
+    /// TCP connections accepted (including ones later shed)
+    pub connections: AtomicU64,
+    /// protocol requests served (one per stage-range exchange)
+    pub requests: AtomicU64,
+    /// body bytes written to sockets
+    pub bytes_sent: AtomicU64,
+    /// connections that ended in a protocol or I/O error
+    pub errors: AtomicU64,
+    /// gauge: connections currently being served
+    pub active: AtomicU64,
+    /// gauge: connections parked by the queue-with-deadline policy
+    pub queued: AtomicU64,
+    /// connections that were ever parked (monotonic)
+    pub queued_total: AtomicU64,
+    /// connections shed (rejected at the cap or expired in the queue)
+    pub shed: AtomicU64,
+    /// connections admitted over the cap with clamped stage windows
+    pub degraded: AtomicU64,
+    /// stalled connections forcibly evicted (I/O deadline)
+    pub evicted: AtomicU64,
+    /// stages delivered across all responses
+    pub stages_served: AtomicU64,
+}
+
+impl ServerStats {
+    /// Snapshot the counters as a [`metrics::Table`](crate::metrics::Table)
+    /// — what `prognet serve` logs periodically.
+    pub fn table(&self) -> Table {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed).to_string();
+        let mut t = Table::new(
+            "server counters",
+            &[
+                "active", "queued", "conns", "requests", "stages", "bytes", "shed", "degraded",
+                "evicted", "errors",
+            ],
+        );
+        t.row(vec![
+            g(&self.active),
+            g(&self.queued),
+            g(&self.connections),
+            g(&self.requests),
+            g(&self.stages_served),
+            crate::util::stats::fmt_bytes(self.bytes_sent.load(Ordering::Relaxed)),
+            g(&self.shed),
+            g(&self.degraded),
+            g(&self.evicted),
+            g(&self.errors),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_table_renders_all_counters() {
+        let s = ServerStats::default();
+        s.connections.store(3, Ordering::Relaxed);
+        s.bytes_sent.store(2048, Ordering::Relaxed);
+        let rendered = s.table().render();
+        assert!(rendered.contains("active"));
+        assert!(rendered.contains("2.0 KB"));
+        assert!(rendered.contains("3"));
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal readiness polling over raw fds — the reactor's wait
+//! primitive.
+//!
+//! On Linux this is the `poll(2)` syscall with the common constants
+//! inlined (the crate's only dependency is `anyhow`, so no `libc`;
+//! same precedent as the raw `setsockopt` in `client::downloader`). On
+//! other platforms — and the handful of arches whose poll constants
+//! differ — [`wait`] degrades to a bounded sleep that reports every
+//! requested interest as ready: all reactor I/O is nonblocking and
+//! `WouldBlock`-safe, so spurious readiness is merely a little extra
+//! work, never a correctness problem.
+
+use std::time::Duration;
+
+/// One fd's poll interest for a [`wait`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct Interest {
+    /// Raw fd (-1 entries are skipped). Obtain via [`raw_fd`].
+    pub fd: i32,
+    pub read: bool,
+    pub write: bool,
+}
+
+/// Readiness reported for the matching [`Interest`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Readiness {
+    pub read: bool,
+    pub write: bool,
+    /// Peer hung up or the fd errored — service it (reads will observe
+    /// the EOF/error) and expect the connection to end.
+    pub closed: bool,
+}
+
+/// The raw fd of a TCP stream, for [`Interest::fd`].
+#[cfg(unix)]
+pub fn raw_fd(stream: &std::net::TcpStream) -> i32 {
+    use std::os::fd::AsRawFd;
+    stream.as_raw_fd()
+}
+
+/// Non-unix: no raw fds; the fallback [`wait`] ignores them.
+#[cfg(not(unix))]
+pub fn raw_fd(_stream: &std::net::TcpStream) -> i32 {
+    -1
+}
+
+/// Block until an fd with a registered interest is ready, or `timeout`
+/// passes. Returns one [`Readiness`] per input interest, index-aligned.
+#[cfg(all(
+    any(target_os = "linux", target_os = "android"),
+    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
+))]
+pub fn wait(interests: &[Interest], timeout: Duration) -> Vec<Readiness> {
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: core::ffi::c_ulong, timeout_ms: i32) -> i32;
+    }
+
+    let mut fds: Vec<PollFd> = interests
+        .iter()
+        .map(|i| PollFd {
+            fd: if i.fd >= 0 && (i.read || i.write) { i.fd } else { -1 },
+            events: (if i.read { POLLIN } else { 0 }) | (if i.write { POLLOUT } else { 0 }),
+            revents: 0,
+        })
+        .collect();
+    // round sub-millisecond timeouts up, not down: a 0 ms poll in a
+    // deadline loop would busy-spin until the deadline actually passes
+    let mut ms: i32 = timeout.as_millis().min(i32::MAX as u128) as i32;
+    if ms == 0 && !timeout.is_zero() {
+        ms = 1;
+    }
+    let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as core::ffi::c_ulong, ms) };
+    let mut out = vec![Readiness::default(); interests.len()];
+    if rc <= 0 {
+        // timeout or EINTR: nothing ready; the caller re-evaluates
+        // deadlines and polls again
+        return out;
+    }
+    for (r, fd) in out.iter_mut().zip(&fds) {
+        let re = fd.revents;
+        r.read = re & POLLIN != 0;
+        r.write = re & POLLOUT != 0;
+        r.closed = re & (POLLERR | POLLHUP | POLLNVAL) != 0;
+    }
+    out
+}
+
+/// Portable fallback: bounded sleep + report all requested interests as
+/// ready (spurious-wakeup model; safe because all I/O is nonblocking).
+/// The sleep honours the caller's deadline-derived timeout up to 10 ms,
+/// trading a little wakeup latency for not busy-spinning idle shards.
+#[cfg(not(all(
+    any(target_os = "linux", target_os = "android"),
+    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
+)))]
+pub fn wait(interests: &[Interest], timeout: Duration) -> Vec<Readiness> {
+    std::thread::sleep(timeout.min(Duration::from_millis(10)));
+    interests
+        .iter()
+        .map(|i| Readiness {
+            read: i.read,
+            write: i.write,
+            closed: false,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn wait_reports_readable_after_write() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let interests = [Interest {
+            fd: raw_fd(&b),
+            read: true,
+            write: false,
+        }];
+        // nothing written yet: a short wait must time out without read
+        // readiness on real poll (the portable fallback may report it
+        // spuriously, which callers tolerate by design)
+        let _ = wait(&interests, Duration::from_millis(5));
+        a.write_all(b"ping").unwrap();
+        a.flush().unwrap();
+        // readable within a generous window
+        let mut saw = false;
+        for _ in 0..200 {
+            let r = wait(&interests, Duration::from_millis(10));
+            if r[0].read {
+                saw = true;
+                break;
+            }
+        }
+        assert!(saw, "poll never reported the written bytes readable");
+    }
+
+    #[test]
+    fn wait_reports_writable_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (_b, _) = listener.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let interests = [Interest {
+            fd: raw_fd(&a),
+            read: false,
+            write: true,
+        }];
+        let r = wait(&interests, Duration::from_millis(100));
+        assert!(r[0].write, "fresh socket should be writable");
+    }
+
+    #[test]
+    fn wait_with_no_interests_times_out() {
+        let t0 = std::time::Instant::now();
+        let r = wait(&[], Duration::from_millis(20));
+        assert!(r.is_empty());
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+}

@@ -1,0 +1,501 @@
+//! Sharded reactor: the serving core.
+//!
+//! One blocking accept thread classifies every new connection through
+//! [`Admission`] and hands it round-robin to one of `workers` shard
+//! threads. Each shard drives its connections' [`Conn`] state machines
+//! over nonblocking sockets with a readiness poll ([`super::poll`]),
+//! folding three kinds of deadlines into its poll timeout: pacer
+//! refills (token-bucket shaping without a thread per client), I/O
+//! stall eviction (slow-loris protection), and queue-with-deadline
+//! promotion/expiry. Thread count is `O(workers)`, independent of the
+//! number of connections.
+//!
+//! Shards are woken for new work through a loopback socket pair (pure
+//! std — no pipes, no external deps), the same trick the blocking
+//! accept loop has always used for shutdown.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::admission::{Admission, Decision, ShedPolicy, SHED_MARKER};
+use super::conn::{Conn, ConnConfig, Step};
+use super::poll::{self, Interest};
+use super::ServerStats;
+use crate::server::repository::Repository;
+use crate::server::service::ServerConfig;
+
+/// Reactor-level configuration: admission, shedding and timeouts.
+/// Worker count and default shaping/schedule stay in
+/// [`ServerConfig`](crate::server::service::ServerConfig).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// concurrent-connection cap (None = unlimited)
+    pub max_conns: Option<usize>,
+    /// what happens to connections over the cap
+    pub shed_policy: ShedPolicy,
+    /// evict a connection making no I/O progress for this long. Must
+    /// comfortably exceed one pacing interval (chunk / rate) of the
+    /// slowest configured link.
+    pub io_timeout: Duration,
+    /// close keep-alive connections idle between requests for this long
+    pub idle_timeout: Duration,
+    /// bytes a paced connection may run ahead of its schedule
+    pub write_burst: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: None,
+            shed_policy: ShedPolicy::Reject,
+            io_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(10),
+            write_burst: 16 * 1024,
+        }
+    }
+}
+
+/// Work handed from the accept thread to a shard.
+enum Incoming {
+    Admitted {
+        stream: TcpStream,
+        /// Some(max_stages) when admitted over the cap by degrade policy
+        degraded: Option<u32>,
+        /// release an admission slot when this connection ends
+        holds_slot: bool,
+    },
+    Queued {
+        stream: TcpStream,
+        deadline: Instant,
+    },
+    Reject {
+        stream: TcpStream,
+    },
+}
+
+/// Handoff queue between the accept thread and one shard.
+type Inbox = Arc<Mutex<VecDeque<Incoming>>>;
+
+struct ShardHandle {
+    inbox: Inbox,
+    wake: TcpStream,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Running reactor (shuts down on drop).
+pub struct Reactor {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    shards: Vec<ShardHandle>,
+    stats: Arc<ServerStats>,
+}
+
+impl Reactor {
+    /// Bind `addr` and start the accept loop plus `config.workers` shard
+    /// threads.
+    pub fn start(
+        addr: &str,
+        repo: Arc<Repository>,
+        config: ServerConfig,
+        fleet: FleetConfig,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let stats = Arc::new(ServerStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let admission = Arc::new(Admission::new(fleet.max_conns, fleet.shed_policy));
+        let conn_cfg = ConnConfig {
+            default_speed_mbps: config.default_speed_mbps,
+            default_schedule: config.default_schedule.clone(),
+            write_burst: fleet.write_burst,
+            io_timeout: fleet.io_timeout,
+            idle_timeout: fleet.idle_timeout,
+        };
+
+        let workers = config.workers.max(1);
+        let mut shards = Vec::with_capacity(workers);
+        let mut accept_side = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (wake_tx, wake_rx) = wake_pair()?;
+            let inbox: Inbox = Arc::new(Mutex::new(VecDeque::new()));
+            let ctx = ShardCtx {
+                inbox: inbox.clone(),
+                wake_rx,
+                repo: repo.clone(),
+                conn_cfg: conn_cfg.clone(),
+                admission: admission.clone(),
+                stats: stats.clone(),
+                shutdown: shutdown.clone(),
+            };
+            let join = std::thread::Builder::new()
+                .name(format!("prognet-shard-{i}"))
+                .spawn(move || shard_loop(ctx))?;
+            accept_side.push((inbox.clone(), wake_tx.try_clone()?));
+            shards.push(ShardHandle {
+                inbox,
+                wake: wake_tx,
+                join: Some(join),
+            });
+        }
+
+        let sd = shutdown.clone();
+        let st = stats.clone();
+        let accept = std::thread::Builder::new()
+            .name("prognet-accept".into())
+            .spawn(move || accept_loop(listener, admission, st, sd, accept_side))?;
+
+        crate::log_info!("reactor listening on {local} ({workers} shards)");
+        Ok(Self {
+            addr: local,
+            shutdown,
+            accept: Some(accept),
+            shards,
+            stats,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    /// Stop accepting, close every connection, join all threads.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake every shard poll loop with a byte on its wake pair.
+        for s in &self.shards {
+            let _ = (&s.wake).write(&[1]);
+        }
+        if let Some(h) = self.accept.take() {
+            // Wake the blocking accept with a throwaway connection. A
+            // wildcard bind (0.0.0.0 / ::) is not connectable on every
+            // platform, so aim the wakeup at loopback on the bound port.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match self.addr {
+                    SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                    SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+                });
+            }
+            match TcpStream::connect_timeout(&wake, Duration::from_millis(500)) {
+                Ok(_) => {
+                    let _ = h.join();
+                }
+                Err(e) => {
+                    // could not wake the loop; detach instead of hanging
+                    // shutdown (and Drop) on an unbounded join
+                    crate::log_warn!("shutdown wakeup failed ({e}); detaching accept thread");
+                }
+            }
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.join.take() {
+                let _ = h.join();
+            }
+            // drop any work that raced in after the shard exited
+            s.inbox.lock().unwrap().clear();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A connected loopback pair used to wake a shard's poll loop:
+/// (blocking-ish writer held by the reactor/accept side, nonblocking
+/// reader registered in the shard's poll set).
+fn wake_pair() -> Result<(TcpStream, TcpStream)> {
+    for _ in 0..8 {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        let addr = l.local_addr()?;
+        let tx = TcpStream::connect(addr)?;
+        let (rx, peer) = l.accept()?;
+        // guard against a foreign connection racing onto the port
+        if peer == tx.local_addr()? {
+            tx.set_nonblocking(true)?;
+            tx.set_nodelay(true)?;
+            rx.set_nonblocking(true)?;
+            return Ok((tx, rx));
+        }
+    }
+    anyhow::bail!("could not establish a loopback wake pair")
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    admission: Arc<Admission>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    shards: Vec<(Inbox, TcpStream)>,
+) {
+    let mut next = 0usize;
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break; // the shutdown wakeup (or a straggler)
+                }
+                stats.connections.fetch_add(1, Ordering::SeqCst);
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    stats.errors.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                crate::log_debug!("accepted {peer}");
+                let incoming = match admission.on_accept() {
+                    Decision::Admit => Incoming::Admitted {
+                        stream,
+                        degraded: None,
+                        holds_slot: true,
+                    },
+                    Decision::Degrade { max_stages } => {
+                        stats.degraded.fetch_add(1, Ordering::SeqCst);
+                        Incoming::Admitted {
+                            stream,
+                            degraded: Some(max_stages),
+                            holds_slot: false,
+                        }
+                    }
+                    Decision::Queue { deadline } => {
+                        stats.queued.fetch_add(1, Ordering::SeqCst);
+                        stats.queued_total.fetch_add(1, Ordering::SeqCst);
+                        Incoming::Queued {
+                            stream,
+                            deadline: Instant::now() + deadline,
+                        }
+                    }
+                    Decision::Reject => {
+                        stats.shed.fetch_add(1, Ordering::SeqCst);
+                        Incoming::Reject { stream }
+                    }
+                };
+                let (inbox, wake) = &shards[next % shards.len()];
+                next = next.wrapping_add(1);
+                inbox.lock().unwrap().push_back(incoming);
+                let _ = (&*wake).write(&[1]);
+            }
+            Err(e) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                crate::log_warn!("accept error: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+struct ShardCtx {
+    inbox: Inbox,
+    wake_rx: TcpStream,
+    repo: Arc<Repository>,
+    conn_cfg: ConnConfig,
+    admission: Arc<Admission>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// A shard-held connection plus its accounting flags.
+struct Slot {
+    conn: Conn<TcpStream>,
+    /// counted in the `active` gauge (shed-reply conns are not)
+    counted: bool,
+}
+
+fn shard_loop(ctx: ShardCtx) {
+    let mut conns: Vec<Slot> = Vec::new();
+    let mut queued: VecDeque<(TcpStream, Instant)> = VecDeque::new();
+
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+
+        // ---- take new work from the accept thread
+        {
+            let mut inbox = ctx.inbox.lock().unwrap();
+            while let Some(inc) = inbox.pop_front() {
+                match inc {
+                    Incoming::Admitted {
+                        stream,
+                        degraded,
+                        holds_slot,
+                    } => {
+                        let mut conn = match degraded {
+                            Some(k) => Conn::degraded(stream, k),
+                            None => Conn::new(stream),
+                        };
+                        conn.holds_slot = holds_slot;
+                        ctx.stats.active.fetch_add(1, Ordering::SeqCst);
+                        conns.push(Slot { conn, counted: true });
+                    }
+                    Incoming::Queued { stream, deadline } => {
+                        queued.push_back((stream, deadline));
+                    }
+                    Incoming::Reject { stream } => {
+                        conns.push(Slot {
+                            conn: Conn::rejecting(
+                                stream,
+                                &format!("server {SHED_MARKER}: connection limit reached"),
+                            ),
+                            counted: false,
+                        });
+                    }
+                }
+            }
+        }
+
+        // ---- queued conns: expire past-deadline, promote into free slots
+        let now = Instant::now();
+        while let Some((_, deadline)) = queued.front() {
+            if *deadline <= now {
+                let (stream, _) = queued.pop_front().unwrap();
+                ctx.stats.queued.fetch_sub(1, Ordering::SeqCst);
+                ctx.stats.shed.fetch_add(1, Ordering::SeqCst);
+                conns.push(Slot {
+                    conn: Conn::rejecting(
+                        stream,
+                        &format!("server {SHED_MARKER}: queue deadline exceeded"),
+                    ),
+                    counted: false,
+                });
+            } else if ctx.admission.try_admit() {
+                let (stream, _) = queued.pop_front().unwrap();
+                ctx.stats.queued.fetch_sub(1, Ordering::SeqCst);
+                ctx.stats.active.fetch_add(1, Ordering::SeqCst);
+                let mut conn = Conn::new(stream);
+                conn.holds_slot = true;
+                conns.push(Slot { conn, counted: true });
+            } else {
+                break;
+            }
+        }
+
+        // ---- wait for readiness or the nearest deadline
+        let now = Instant::now();
+        let mut interests = Vec::with_capacity(conns.len() + 1);
+        interests.push(Interest {
+            fd: poll::raw_fd(&ctx.wake_rx),
+            read: true,
+            write: false,
+        });
+        let mut timeout = Duration::from_millis(500);
+        for slot in &conns {
+            interests.push(Interest {
+                fd: poll::raw_fd(slot.conn.stream()),
+                read: slot.conn.wants_read(),
+                write: slot.conn.wants_write(now),
+            });
+            if let Some(dl) = slot.conn.next_deadline(now, &ctx.conn_cfg) {
+                timeout = timeout.min(dl.saturating_duration_since(now));
+            }
+        }
+        if let Some((_, dl)) = queued.front() {
+            timeout = timeout.min(dl.saturating_duration_since(now));
+            // bound promotion latency: a slot may free on another shard
+            timeout = timeout.min(Duration::from_millis(20));
+        }
+        let ready = poll::wait(&interests, timeout);
+
+        // drain wake bytes
+        if ready[0].read || ready[0].closed {
+            let mut buf = [0u8; 64];
+            while matches!((&ctx.wake_rx).read(&mut buf), Ok(n) if n > 0) {}
+        }
+
+        // ---- service ready conns, collect the ones that ended
+        let mut closed: Vec<(usize, Step)> = Vec::new();
+        for (i, slot) in conns.iter_mut().enumerate() {
+            let r = ready[i + 1];
+            let now = Instant::now();
+            let mut step = Step::Open;
+            if r.read || r.write || r.closed || slot.conn.wants_write(now) {
+                step = slot.conn.on_ready(&ctx.repo, &ctx.conn_cfg, &ctx.stats);
+            }
+            if step == Step::Open {
+                if let Some(s) = slot.conn.on_deadline(Instant::now(), &ctx.conn_cfg) {
+                    if matches!(s, Step::Failed(_)) {
+                        ctx.stats.evicted.fetch_add(1, Ordering::SeqCst);
+                    }
+                    step = s;
+                }
+            }
+            if step != Step::Open {
+                closed.push((i, step));
+            }
+        }
+        for (i, step) in closed.into_iter().rev() {
+            let slot = conns.swap_remove(i);
+            if slot.counted {
+                ctx.stats.active.fetch_sub(1, Ordering::SeqCst);
+            }
+            if slot.conn.holds_slot {
+                ctx.admission.release();
+            }
+            if let Step::Failed(msg) = step {
+                ctx.stats.errors.fetch_add(1, Ordering::SeqCst);
+                crate::log_debug!("conn error: {msg}");
+            }
+        }
+    }
+
+    // ---- shutdown: release accounting and drop (close) everything
+    for slot in conns.drain(..) {
+        if slot.counted {
+            ctx.stats.active.fetch_sub(1, Ordering::SeqCst);
+        }
+        if slot.conn.holds_slot {
+            ctx.admission.release();
+        }
+    }
+    for (_, _) in queued.drain(..) {
+        ctx.stats.queued.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pair_round_trips_a_byte() {
+        let (tx, rx) = wake_pair().unwrap();
+        (&tx).write_all(&[7]).unwrap();
+        let mut buf = [0u8; 8];
+        // nonblocking read may need a moment for loopback delivery
+        let mut got = 0;
+        for _ in 0..100 {
+            match (&rx).read(&mut buf) {
+                Ok(n) if n > 0 => {
+                    got = n;
+                    break;
+                }
+                _ => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert!(got >= 1);
+        assert_eq!(buf[0], 7);
+    }
+
+    #[test]
+    fn fleet_config_default_is_uncapped_reject() {
+        let cfg = FleetConfig::default();
+        assert_eq!(cfg.max_conns, None);
+        assert_eq!(cfg.shed_policy, ShedPolicy::Reject);
+        assert!(cfg.io_timeout >= Duration::from_secs(1));
+    }
+}

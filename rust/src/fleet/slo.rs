@@ -1,0 +1,355 @@
+//! SLO aggregation for fleet runs: per-client samples → p50/p95/p99
+//! latency quantiles and outcome counts, rendered as a table and emitted
+//! as JSON (`BENCH_fleet.json`) so the bench trajectory can track
+//! fleet-scale serving across PRs.
+//!
+//! The three latencies mirror what a user actually perceives, all
+//! measured from just before the client connects ("accept"):
+//! **accept → first stage** (coarsest model bytes complete),
+//! **accept → first `ModelReady`** (an executable approximate model is
+//! live — the paper's headline moment), and **accept → finished** (full
+//! container delivered).
+
+use crate::metrics::Table;
+use crate::util::json::{self, Json};
+use crate::util::stats::{fmt_bytes, fmt_secs, Summary};
+
+/// How one virtual client's session ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Full event stream including `Finished`.
+    Finished,
+    /// Shed by admission control (`ERR … at capacity`): a policy
+    /// outcome, not a protocol failure.
+    Shed,
+    /// Could not reach the server at all.
+    ConnectFailed,
+    /// Any other session error — the count that must stay zero.
+    ProtocolError,
+}
+
+impl Outcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Finished => "finished",
+            Self::Shed => "shed",
+            Self::ConnectFailed => "connect_failed",
+            Self::ProtocolError => "protocol_error",
+        }
+    }
+}
+
+/// One virtual client's measurements (seconds since just before its
+/// connect).
+#[derive(Debug, Clone)]
+pub struct ClientSample {
+    pub cohort: String,
+    pub outcome: Outcome,
+    pub t_first_stage: Option<f64>,
+    pub t_model_ready: Option<f64>,
+    pub t_finished: Option<f64>,
+    /// stage events observed (may be < schedule stages when degraded)
+    pub stages: usize,
+    /// resume events (cache or reconnect)
+    pub resumed: usize,
+    /// network bytes reported by the session summary
+    pub bytes: u64,
+    pub error: Option<String>,
+}
+
+impl ClientSample {
+    pub fn new(cohort: &str) -> Self {
+        Self {
+            cohort: cohort.to_string(),
+            outcome: Outcome::ProtocolError,
+            t_first_stage: None,
+            t_model_ready: None,
+            t_finished: None,
+            stages: 0,
+            resumed: 0,
+            bytes: 0,
+            error: None,
+        }
+    }
+}
+
+/// Quantile block over one latency metric.
+#[derive(Debug, Clone)]
+pub struct Quantiles {
+    pub n: usize,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Quantiles {
+    fn from_values(values: &[f64]) -> Option<Self> {
+        if values.is_empty() {
+            return None;
+        }
+        let s = Summary::from_samples(values);
+        Some(Self {
+            n: s.n(),
+            p50: s.percentile(50.0),
+            p95: s.percentile(95.0),
+            p99: s.percentile(99.0),
+            mean: s.mean(),
+            max: s.max(),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("n", json::num(self.n as f64)),
+            ("p50_s", json::num(self.p50)),
+            ("p95_s", json::num(self.p95)),
+            ("p99_s", json::num(self.p99)),
+            ("mean_s", json::num(self.mean)),
+            ("max_s", json::num(self.max)),
+        ])
+    }
+}
+
+/// Outcome counts + quantiles for one cohort (or the whole fleet).
+#[derive(Debug, Clone)]
+pub struct SloBlock {
+    pub name: String,
+    pub clients: usize,
+    pub finished: usize,
+    pub shed: usize,
+    pub connect_failed: usize,
+    pub protocol_errors: usize,
+    pub resumes: usize,
+    pub bytes: u64,
+    pub first_stage: Option<Quantiles>,
+    pub model_ready: Option<Quantiles>,
+    pub finished_t: Option<Quantiles>,
+}
+
+impl SloBlock {
+    fn from_samples(name: &str, samples: &[&ClientSample]) -> Self {
+        let count = |o: Outcome| samples.iter().filter(|s| s.outcome == o).count();
+        let collect = |f: fn(&ClientSample) -> Option<f64>| {
+            let vals: Vec<f64> = samples.iter().filter_map(|s| f(s)).collect();
+            Quantiles::from_values(&vals)
+        };
+        Self {
+            name: name.to_string(),
+            clients: samples.len(),
+            finished: count(Outcome::Finished),
+            shed: count(Outcome::Shed),
+            connect_failed: count(Outcome::ConnectFailed),
+            protocol_errors: count(Outcome::ProtocolError),
+            resumes: samples.iter().map(|s| s.resumed).sum(),
+            bytes: samples.iter().map(|s| s.bytes).sum(),
+            first_stage: collect(|s| s.t_first_stage),
+            model_ready: collect(|s| s.t_model_ready),
+            finished_t: collect(|s| s.t_finished),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", json::s(&self.name)),
+            ("clients", json::num(self.clients as f64)),
+            ("finished", json::num(self.finished as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("connect_failed", json::num(self.connect_failed as f64)),
+            ("protocol_errors", json::num(self.protocol_errors as f64)),
+            ("resumes", json::num(self.resumes as f64)),
+            ("bytes", json::num(self.bytes as f64)),
+        ];
+        if let Some(q) = &self.first_stage {
+            fields.push(("accept_to_first_stage", q.to_json()));
+        }
+        if let Some(q) = &self.model_ready {
+            fields.push(("accept_to_model_ready", q.to_json()));
+        }
+        if let Some(q) = &self.finished_t {
+            fields.push(("accept_to_finished", q.to_json()));
+        }
+        json::obj(fields)
+    }
+}
+
+/// The full fleet SLO report.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub model: String,
+    /// wall time of the whole run, seconds
+    pub wall_s: f64,
+    pub overall: SloBlock,
+    pub cohorts: Vec<SloBlock>,
+    /// up to 5 distinct error strings, for debugging failed runs
+    pub sample_errors: Vec<String>,
+}
+
+impl SloReport {
+    pub fn from_samples(model: &str, wall_s: f64, samples: &[ClientSample]) -> Self {
+        let all: Vec<&ClientSample> = samples.iter().collect();
+        let overall = SloBlock::from_samples("overall", &all);
+        let mut cohort_names: Vec<String> = Vec::new();
+        for s in samples {
+            if !cohort_names.contains(&s.cohort) {
+                cohort_names.push(s.cohort.clone());
+            }
+        }
+        let cohorts = cohort_names
+            .iter()
+            .map(|name| {
+                let subset: Vec<&ClientSample> =
+                    samples.iter().filter(|s| &s.cohort == name).collect();
+                SloBlock::from_samples(name, &subset)
+            })
+            .collect();
+        let mut sample_errors = Vec::new();
+        for s in samples {
+            if let Some(e) = &s.error {
+                if sample_errors.len() < 5 && !sample_errors.contains(e) {
+                    sample_errors.push(e.clone());
+                }
+            }
+        }
+        Self {
+            model: model.to_string(),
+            wall_s,
+            overall,
+            cohorts,
+            sample_errors,
+        }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.overall.clients
+    }
+
+    pub fn protocol_errors(&self) -> usize {
+        self.overall.protocol_errors
+    }
+
+    pub fn shed(&self) -> usize {
+        self.overall.shed
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("model", json::s(&self.model)),
+            ("wall_s", json::num(self.wall_s)),
+            ("overall", self.overall.to_json()),
+            (
+                "cohorts",
+                json::arr(self.cohorts.iter().map(|c| c.to_json()).collect()),
+            ),
+        ];
+        if !self.sample_errors.is_empty() {
+            fields.push((
+                "sample_errors",
+                json::arr(self.sample_errors.iter().map(|e| json::s(e)).collect()),
+            ));
+        }
+        json::obj(fields)
+    }
+
+    /// Human-readable table: one row per cohort plus the overall row.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "fleet SLO — {} ({} clients, {})",
+                self.model,
+                self.overall.clients,
+                fmt_secs(self.wall_s)
+            ),
+            &[
+                "cohort", "clients", "ok", "shed", "err", "p50 stage1", "p50 ready", "p99 ready",
+                "p99 done", "bytes",
+            ],
+        );
+        let q = |q: &Option<Quantiles>, f: fn(&Quantiles) -> f64| match q {
+            Some(q) => fmt_secs(f(q)),
+            None => "-".into(),
+        };
+        for b in self.cohorts.iter().chain(std::iter::once(&self.overall)) {
+            t.row(vec![
+                b.name.clone(),
+                b.clients.to_string(),
+                b.finished.to_string(),
+                b.shed.to_string(),
+                (b.protocol_errors + b.connect_failed).to_string(),
+                q(&b.first_stage, |q| q.p50),
+                q(&b.model_ready, |q| q.p50),
+                q(&b.model_ready, |q| q.p99),
+                q(&b.finished_t, |q| q.p99),
+                fmt_bytes(b.bytes),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(cohort: &str, outcome: Outcome, ready: Option<f64>) -> ClientSample {
+        let mut s = ClientSample::new(cohort);
+        s.outcome = outcome;
+        s.t_first_stage = ready.map(|t| t * 0.5);
+        s.t_model_ready = ready;
+        s.t_finished = ready.map(|t| t * 2.0);
+        s.stages = 8;
+        s.bytes = 1000;
+        s
+    }
+
+    #[test]
+    fn aggregates_outcomes_and_quantiles() {
+        let samples: Vec<ClientSample> = (1..=100)
+            .map(|i| sample("bulk", Outcome::Finished, Some(i as f64 / 100.0)))
+            .chain((0..10).map(|_| sample("slow", Outcome::Shed, None)))
+            .collect();
+        let report = SloReport::from_samples("dense3", 3.0, &samples);
+        assert_eq!(report.clients(), 110);
+        assert_eq!(report.overall.finished, 100);
+        assert_eq!(report.shed(), 10);
+        assert_eq!(report.protocol_errors(), 0);
+        assert_eq!(report.cohorts.len(), 2);
+        let ready = report.overall.model_ready.as_ref().unwrap();
+        assert_eq!(ready.n, 100);
+        assert!((ready.p50 - 0.505).abs() < 0.02, "p50={}", ready.p50);
+        assert!(ready.p99 >= ready.p95 && ready.p95 >= ready.p50);
+        assert!((ready.max - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape_parses_back() {
+        let samples = vec![
+            sample("a", Outcome::Finished, Some(0.25)),
+            sample("a", Outcome::ProtocolError, None),
+        ];
+        let report = SloReport::from_samples("m", 1.0, &samples);
+        let text = report.to_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "m");
+        let overall = j.get("overall").unwrap();
+        assert_eq!(overall.get("clients").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(overall.get("protocol_errors").unwrap().as_i64().unwrap(), 1);
+        let q = overall.get("accept_to_model_ready").unwrap();
+        assert!((q.get("p50_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        assert_eq!(j.get("cohorts").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn render_has_cohort_and_overall_rows() {
+        let samples = vec![
+            sample("a", Outcome::Finished, Some(0.1)),
+            sample("b", Outcome::Finished, Some(0.2)),
+        ];
+        let report = SloReport::from_samples("m", 0.5, &samples);
+        let rendered = report.render();
+        assert!(rendered.contains("overall"));
+        assert!(rendered.contains("| a"));
+        assert!(rendered.contains("| b"));
+    }
+}

@@ -13,9 +13,10 @@
 //!
 //! Layer map:
 //! - **L3 (this crate)** — progressive encoder, `.pnet` container,
-//!   streaming server, progressive client pipeline, multi-client
-//!   coordinator (router + dynamic batcher), network simulator,
-//!   evaluation + user-study harnesses.
+//!   streaming server (a sharded nonblocking reactor with admission
+//!   control — [`fleet`]), progressive client pipeline, multi-client
+//!   coordinator (router + dynamic batcher), fleet load generator + SLO
+//!   harness, network simulator, evaluation + user-study harnesses.
 //! - **Runtime** — pluggable execution backends behind
 //!   [`runtime::Backend`]: a dependency-free pure-Rust reference
 //!   interpreter (the default — builds and runs offline, no artifacts),
@@ -41,6 +42,7 @@
 pub mod client;
 pub mod coordinator;
 pub mod eval;
+pub mod fleet;
 pub mod format;
 pub mod metrics;
 pub mod models;

@@ -3,17 +3,21 @@
 //! Subcommands:
 //!   encode   — encode a trained model into a `.pnet` progressive container
 //!   inspect  — print a `.pnet` container's manifest + fragment map
-//!   serve    — run the streaming model server
+//!   serve    — run the streaming model server (sharded reactor)
 //!   fetch    — progressively fetch + infer from a server
+//!   fleet    — multi-client load generation + SLO report
 //!   eval     — Table II style accuracy-vs-bit-width evaluation
 //!   study    — run the simulated user study (Table III / Fig 8)
 //!   models   — list models available in the artifacts registry
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use prognet::client::{ExecMode, ProgressiveSession, SessionEvent};
 use prognet::eval::{harness, EvalSet};
+use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
+use prognet::fleet::{FleetConfig, ShedPolicy};
 use prognet::format::PnetReader;
 use prognet::metrics::Table;
 use prognet::models::Registry;
@@ -40,9 +44,16 @@ fn usage() -> ! {
            models\n  \
            encode  --model NAME [--schedule 2,2,2,2,2,2,2,2] --out FILE\n  \
            inspect --file FILE\n  \
-           serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F] [--backend B]\n  \
+           serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F] [--backend B]\n          \
+                   [--workers N] [--max-conns N] [--shed-policy reject|queue:MS|degrade:K]\n          \
+                   [--log-interval SECS]\n  \
            fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F] [--backend B]\n          \
                    [--resume-from-cache] [--cache-dir DIR]\n  \
+           fleet   [--addr HOST:PORT --model NAME] [--clients 100] [--cohorts SPEC]\n          \
+                   [--workers 4] [--max-conns N] [--shed-policy P] [--ramp-ms 250]\n          \
+                   [--out FILE] [--download-only]\n          \
+                   (no --addr: self-hosts a reactor over fixture models;\n          \
+                    SPEC = name:count:speed_mbps[:flaky],... with speed 'max' = unshaped)\n  \
            eval    --model NAME [--n 256] [--backend B]\n  \
            study   [--users 29] [--seed 2021] [--backend B]\n\
          backends (B): reference (default, pure Rust) | pjrt (needs the\n\
@@ -62,13 +73,17 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
 
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
-    let args = Args::from_env(2, &["serial", "qfwd", "verbose", "resume-from-cache"])?;
+    let args = Args::from_env(
+        2,
+        &["serial", "qfwd", "verbose", "resume-from-cache", "download-only"],
+    )?;
     match cmd.as_str() {
         "models" => cmd_models(),
         "encode" => cmd_encode(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "fetch" => cmd_fetch(&args),
+        "fleet" => cmd_fleet(&args),
         "eval" => cmd_eval(&args),
         "study" => cmd_study(&args),
         _ => usage(),
@@ -150,18 +165,142 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: file_cfg.workers,
         default_schedule: file_cfg.schedule.clone(),
     };
-    let server = Server::start(&file_cfg.addr, repo, config)?;
+    let fleet_cfg = FleetConfig {
+        max_conns: file_cfg.max_conns,
+        shed_policy: file_cfg.shed_policy,
+        ..FleetConfig::default()
+    };
+    let server = Server::start_fleet(&file_cfg.addr, repo, config, fleet_cfg)?;
     println!(
-        "serving on {} (shaping: {:?} MB/s, schedule {}, {} preloaded, {} backend) — Ctrl-C to stop",
+        "serving on {} (shaping: {:?} MB/s, schedule {}, {} preloaded, {} backend, \
+         {} workers, cap {:?} [{}]) — Ctrl-C to stop",
         server.addr(),
         file_cfg.speed_mbps,
         file_cfg.schedule,
         file_cfg.preload.len(),
+        engine.backend_name(),
+        file_cfg.workers,
+        file_cfg.max_conns,
+        file_cfg.shed_policy,
+    );
+    // periodic live counters (active/queued/shed/bytes/stages) via
+    // metrics::report; --log-interval 0 silences them
+    let stats = server.stats_arc();
+    loop {
+        let interval = if file_cfg.log_interval_s == 0 {
+            3600
+        } else {
+            file_cfg.log_interval_s
+        };
+        std::thread::sleep(Duration::from_secs(interval));
+        if file_cfg.log_interval_s > 0 {
+            println!("{}", stats.table().render());
+        }
+    }
+}
+
+/// Multi-client load generation against a running server (or a
+/// self-hosted reactor over synthetic fixture models), ending in an SLO
+/// report. Exits nonzero when any client hit a protocol error — the
+/// CI fleet-smoke contract.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let clients = args.get_usize("clients", 100)?;
+    let workers = args.get_usize("workers", 4)?;
+    let engine = engine_from_args(args)?;
+    let fleet_cfg = FleetConfig {
+        max_conns: match args.get("max-conns") {
+            Some(n) => Some(n.parse()?),
+            None => None,
+        },
+        shed_policy: match args.get("shed-policy") {
+            Some(p) => ShedPolicy::parse(p)?,
+            None => ShedPolicy::Reject,
+        },
+        ..FleetConfig::default()
+    };
+
+    type Target = (
+        std::net::SocketAddr,
+        String,
+        Option<Arc<ModelSession>>,
+        Option<Server>,
+    );
+    let (addr, model, mut runtime, server): Target = if let Some(a) = args.get("addr") {
+        // external server: bind a runtime only when the local registry
+        // knows the model (otherwise download-only measurement)
+        if args.get("workers").is_some()
+            || args.get("max-conns").is_some()
+            || args.get("shed-policy").is_some()
+        {
+            eprintln!(
+                "note: --workers/--max-conns/--shed-policy configure the self-hosted \
+                 server and are ignored with --addr (set them on `prognet serve`)"
+            );
+        }
+        let model = args.require("model")?.to_string();
+        let runtime = Registry::open_default()
+            .ok()
+            .and_then(|reg| reg.get(&model).ok().cloned())
+            .and_then(|m| ModelSession::load(&engine, &m).ok().map(Arc::new));
+        (a.parse()?, model, runtime, None)
+    } else {
+        // self-hosted: reactor over the executable fixture model
+        let reg = prognet::testutil::fixture::executable_models("fleet-cli")?;
+        let manifest = reg.get("dense3")?.clone();
+        let repo = Arc::new(Repository::new(reg));
+        let server = Server::start_fleet(
+            "127.0.0.1:0",
+            repo,
+            ServerConfig {
+                workers,
+                ..ServerConfig::default()
+            },
+            fleet_cfg.clone(),
+        )?;
+        let addr = server.addr();
+        let runtime = Some(Arc::new(ModelSession::load(&engine, &manifest)?));
+        (addr, "dense3".to_string(), runtime, Some(server))
+    };
+    if args.flag("download-only") {
+        runtime = None;
+    }
+
+    let scenario = match args.get("cohorts") {
+        Some(spec) => Scenario::parse(&model, spec)?,
+        None => Scenario::mix(&model, clients),
+    };
+    let opts = FleetOptions {
+        ramp: Duration::from_millis(args.get_u64("ramp-ms", 250)?),
+        // the self-hosted dense3 container is ~2 KB: cut flaky clients
+        // just past its manifest so their reconnect-resume actually runs
+        flaky_cut_bytes: if server.is_some() { 1500 } else { 12_000 },
+        ..FleetOptions::default()
+    };
+    println!(
+        "fleet: {} virtual clients → {addr} (model {model}, {} backend)",
+        scenario.total_clients(),
         engine.backend_name()
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    let report = run_fleet(addr, &scenario, runtime, &opts)?;
+    println!("{}", report.render());
+    if let Some(server) = &server {
+        println!("{}", server.stats().table().render());
     }
+    let json_text = report.to_json().to_string();
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &json_text)?;
+        println!("SLO report written to {path}");
+    } else {
+        println!("{json_text}");
+    }
+    anyhow::ensure!(
+        report.protocol_errors() == 0,
+        "{} of {} clients hit protocol errors: {:?}",
+        report.protocol_errors(),
+        report.clients(),
+        report.sample_errors
+    );
+    Ok(())
 }
 
 /// Default on-disk cache location for `fetch --resume-from-cache`.

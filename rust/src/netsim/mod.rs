@@ -3,9 +3,11 @@
 //!
 //! - [`Link`] — a *virtual-time* model used by the analytical harnesses
 //!   (Table I timeline math without wall-clock sleeping).
-//! - [`ThrottledWriter`] — *real-time* shaping applied to the
-//!   server's socket writes, so end-to-end runs experience the configured
-//!   MB/s on a real TCP connection.
+//! - [`TokenBucket`] — shared *real-time* pacing math: the fleet
+//!   reactor evaluates it nonblockingly so every server connection
+//!   experiences the configured MB/s without a thread per client, and
+//! - [`ThrottledWriter`] — the blocking `Write` adapter over the same
+//!   bucket, for callers that can afford to sleep.
 //!
 //! The paper's experiments use 0.1 / 0.2 / 0.5 / 1.0 / 2.5 MB/s links;
 //! [`LinkSpec`] captures those configurations.
@@ -16,4 +18,4 @@ pub mod trace;
 
 pub use link::{Link, LinkSpec};
 pub use trace::{BandwidthTrace, TraceLink};
-pub use throttle::ThrottledWriter;
+pub use throttle::{ThrottledWriter, TokenBucket};

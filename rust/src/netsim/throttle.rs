@@ -1,9 +1,18 @@
 //! Real-time token-bucket shaping for socket writes.
 //!
-//! The server wraps each client connection in a [`ThrottledWriter`] so an
-//! end-to-end run over loopback experiences the configured bandwidth.
-//! Token-bucket with a small burst keeps pacing smooth at low rates
-//! without busy-waiting.
+//! The bucket math lives in [`TokenBucket`] and is shared by two
+//! consumers with opposite blocking disciplines:
+//!
+//! - [`ThrottledWriter`] — a `Write` adapter that *sleeps* until the
+//!   schedule catches up (the classic blocking write path);
+//! - the fleet reactor (`fleet::conn`) — which never sleeps: it asks the
+//!   bucket for the current byte budget and, when the budget is empty,
+//!   for the instant it refills, and folds that into its poll timeout.
+//!   That is how thousands of paced connections share a handful of
+//!   event-loop threads.
+//!
+//! One-way latency is a property of the blocking writer only (it sleeps
+//! once before the first byte); the bucket itself is pure rate.
 
 use std::io::{self, Write};
 use std::time::{Duration, Instant};
@@ -13,12 +22,88 @@ use super::link::LinkSpec;
 /// Maximum chunk written between pacing checks.
 const CHUNK: usize = 16 * 1024;
 
-/// A `Write` adapter that paces bytes at `spec.bytes_per_sec`.
-pub struct ThrottledWriter<W: Write> {
-    inner: W,
+/// Pure token-bucket pacing state for one shaped stream: `sent` bytes
+/// are due at `sent / bytes_per_sec` seconds after [`TokenBucket::restart`],
+/// and `burst` bytes may run ahead of that schedule (0 = exact pacing).
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
     bytes_per_sec: f64,
     start: Instant,
     sent: u64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// Bucket with an exact schedule (no burst) — what the sleeping
+    /// writer uses.
+    pub fn new(spec: LinkSpec) -> Self {
+        Self::with_burst(spec, 0)
+    }
+
+    /// Bucket allowed to run `burst` bytes ahead of the schedule — what
+    /// the reactor uses so each poll wakeup can write a full chunk.
+    pub fn with_burst(spec: LinkSpec, burst: usize) -> Self {
+        Self {
+            bytes_per_sec: spec.bytes_per_sec,
+            start: Instant::now(),
+            sent: 0,
+            burst: burst as f64,
+        }
+    }
+
+    /// Bytes accounted so far.
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Account `n` bytes against the schedule.
+    pub fn on_sent(&mut self, n: usize) {
+        self.sent += n as u64;
+    }
+
+    /// Restart the schedule clock at `now` (used by the writer after its
+    /// one-off latency sleep, so latency is not charged against rate).
+    pub fn restart(&mut self, now: Instant) {
+        self.start = now;
+    }
+
+    /// Bytes that may be written right now without getting ahead of the
+    /// schedule (plus the configured burst).
+    pub fn budget(&self, now: Instant) -> usize {
+        let elapsed = now.saturating_duration_since(self.start).as_secs_f64();
+        let allowed = elapsed * self.bytes_per_sec + self.burst - self.sent as f64;
+        if allowed <= 0.0 {
+            0
+        } else {
+            allowed as usize
+        }
+    }
+
+    /// How long until at least one byte of budget exists; `None` when
+    /// bytes may be written immediately. Callers that cannot sleep fold
+    /// this into their poll timeout; the fleet reactor also compares it
+    /// against the I/O deadline to spot rates so low they would pin a
+    /// connection forever. Clamped to one hour so the result can always
+    /// be added to an `Instant` without overflow, even for degenerate
+    /// (client-supplied) rates.
+    pub fn ready_in(&self, now: Instant) -> Option<Duration> {
+        if self.budget(now) > 0 {
+            return None;
+        }
+        // time at which `allowed >= 1` byte: (sent + 1 - burst) / rate
+        let deficit = (self.sent as f64 + 1.0 - self.burst).max(0.0);
+        let due_s = (deficit / self.bytes_per_sec).min(3600.0);
+        let due = Duration::from_secs_f64(due_s.max(0.0));
+        let elapsed = now.saturating_duration_since(self.start);
+        Some(due.saturating_sub(elapsed).max(Duration::from_micros(1)))
+    }
+}
+
+/// A `Write` adapter that paces bytes at `spec.bytes_per_sec` by
+/// sleeping on the current thread.
+pub struct ThrottledWriter<W: Write> {
+    inner: W,
+    bucket: TokenBucket,
     first_write_latency: Option<Duration>,
 }
 
@@ -26,9 +111,7 @@ impl<W: Write> ThrottledWriter<W> {
     pub fn new(inner: W, spec: LinkSpec) -> Self {
         Self {
             inner,
-            bytes_per_sec: spec.bytes_per_sec,
-            start: Instant::now(),
-            sent: 0,
+            bucket: TokenBucket::new(spec),
             first_write_latency: if spec.latency_s > 0.0 {
                 Some(Duration::from_secs_f64(spec.latency_s))
             } else {
@@ -39,20 +122,11 @@ impl<W: Write> ThrottledWriter<W> {
 
     /// Bytes sent so far.
     pub fn sent(&self) -> u64 {
-        self.sent
+        self.bucket.sent()
     }
 
     pub fn into_inner(self) -> W {
         self.inner
-    }
-
-    fn pace(&mut self) {
-        // Sleep until the virtual schedule catches up with what we sent.
-        let due = Duration::from_secs_f64(self.sent as f64 / self.bytes_per_sec);
-        let elapsed = self.start.elapsed();
-        if due > elapsed {
-            std::thread::sleep(due - elapsed);
-        }
     }
 }
 
@@ -60,12 +134,15 @@ impl<W: Write> Write for ThrottledWriter<W> {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         if let Some(lat) = self.first_write_latency.take() {
             std::thread::sleep(lat);
-            self.start = Instant::now();
+            self.bucket.restart(Instant::now());
         }
         let n = buf.len().min(CHUNK);
         let written = self.inner.write(&buf[..n])?;
-        self.sent += written as u64;
-        self.pace();
+        self.bucket.on_sent(written);
+        // Sleep until the virtual schedule catches up with what we sent.
+        if let Some(wait) = self.bucket.ready_in(Instant::now()) {
+            std::thread::sleep(wait);
+        }
         Ok(written)
     }
 
@@ -112,5 +189,36 @@ mod tests {
         let t0 = Instant::now();
         w.write_all(&[1, 2, 3]).unwrap();
         assert!(t0.elapsed().as_secs_f64() >= 0.045);
+    }
+
+    #[test]
+    fn bucket_budget_tracks_schedule() {
+        let mut b = TokenBucket::with_burst(LinkSpec::mbps(1.0), 1024);
+        let t0 = Instant::now();
+        // fresh bucket: the burst is immediately available
+        let first = b.budget(t0);
+        assert!(first >= 1024, "burst available at t0, got {first}");
+        b.on_sent(first);
+        // budget exhausted → not ready, and the refill wait is sane
+        assert_eq!(b.budget(t0), 0);
+        let wait = b.ready_in(t0).expect("budget exhausted");
+        assert!(wait <= Duration::from_secs(1), "wait {wait:?}");
+        // after the advertised wait the budget is positive again
+        let later = t0 + wait + Duration::from_millis(2);
+        assert!(b.budget(later) > 0);
+        assert!(b.ready_in(later).is_none());
+    }
+
+    #[test]
+    fn zero_burst_bucket_accrues_with_time() {
+        let b = TokenBucket::new(LinkSpec::mbps(1.0));
+        let t0 = Instant::now();
+        // exact schedule: budget grows with elapsed time even before any send
+        let later = t0 + Duration::from_millis(100);
+        let budget = b.budget(later);
+        assert!(
+            budget >= 90 * 1024 && budget <= 120 * 1024,
+            "0.1s at 1 MB/s ≈ 102 KB, got {budget}"
+        );
     }
 }

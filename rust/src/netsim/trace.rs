@@ -53,6 +53,13 @@ impl BandwidthTrace {
         Self::new(segments)
     }
 
+    /// Duration of one period (`f64::INFINITY` for constant traces) —
+    /// lets cohort builders sample a trace proportionally
+    /// (`fleet::loadgen`).
+    pub fn period(&self) -> f64 {
+        self.total_dur
+    }
+
     /// Rate at virtual time `t` (loops).
     pub fn rate_at(&self, t: f64) -> f64 {
         let mut t = if self.total_dur.is_finite() && t >= self.total_dur {

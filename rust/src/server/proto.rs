@@ -10,8 +10,9 @@ use anyhow::{bail, Result};
 use crate::quant::{Schedule, K};
 use crate::util::json::{self, Json};
 
-/// Cap on request frame size.
-const MAX_FRAME: usize = 1 << 20;
+/// Cap on request frame size (shared with the fleet reactor's
+/// per-connection request accumulator).
+pub const MAX_FRAME: usize = 1 << 20;
 
 /// A model fetch request.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,5 +1,5 @@
 //! TCP streaming service: accepts fetch requests, streams `.pnet` bytes
-//! through a per-connection bandwidth shaper.
+//! through per-connection bandwidth pacing.
 //!
 //! A connection carries a *sequence* of request/response exchanges: each
 //! request selects a stage range of one model's container, the server
@@ -8,28 +8,35 @@
 //! That lets one connection interleave stages of multiple models
 //! (see `client::multiplex`). Bodies are borrowed slices of the cached
 //! encoding: the hot path copies nothing.
+//!
+//! Since the fleet PR, [`Server`] is a thin facade over
+//! [`fleet::Reactor`](crate::fleet::Reactor): a sharded pool of
+//! event-loop workers drives nonblocking sockets, so thread count is
+//! `O(workers)` rather than `O(connections)`, stalled (slow-loris)
+//! clients are evicted on an I/O deadline, and an admission controller
+//! can shed overload (reject / queue-with-deadline / degrade-to-fewer-
+//! stages — see [`fleet::ShedPolicy`](crate::fleet::ShedPolicy)).
+//! Protocol behaviour on the wire is unchanged.
 
 use std::io::Write;
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::net::TcpStream;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::proto::{self, FetchRequest, FetchResponse};
 use super::repository::Repository;
-use crate::netsim::{LinkSpec, ThrottledWriter};
+use crate::fleet::{FleetConfig, Reactor};
 use crate::quant::Schedule;
-use crate::util::pool::ThreadPool;
+
+pub use crate::fleet::ServerStats;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// default shaping when the request does not override (None = unshaped)
     pub default_speed_mbps: Option<f64>,
-    /// worker threads for connections
+    /// reactor shard (event-loop worker) threads
     pub workers: usize,
     pub default_schedule: Schedule,
 }
@@ -46,218 +53,52 @@ impl Default for ServerConfig {
 
 /// Running server handle (shuts down on drop).
 pub struct Server {
-    addr: std::net::SocketAddr,
-    shutdown: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    stats: Arc<ServerStats>,
-}
-
-/// Counters exposed for tests/benches.
-#[derive(Default, Debug)]
-pub struct ServerStats {
-    pub connections: AtomicU64,
-    pub requests: AtomicU64,
-    pub bytes_sent: AtomicU64,
-    pub errors: AtomicU64,
+    reactor: Reactor,
 }
 
 impl Server {
-    /// Bind and start serving on `addr` (use "127.0.0.1:0" for ephemeral).
+    /// Bind and start serving on `addr` (use "127.0.0.1:0" for
+    /// ephemeral) with default fleet behaviour: no connection cap, 10 s
+    /// I/O + idle timeouts.
     pub fn start(addr: &str, repo: Arc<Repository>, config: ServerConfig) -> Result<Self> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let local = listener.local_addr()?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(ServerStats::default());
-        let sd = shutdown.clone();
-        let st = stats.clone();
-        // Blocking accept: no poll interval to burn CPU or delay connects.
-        // `shutdown()` wakes the loop with a throwaway connection.
-        let accept_thread = std::thread::Builder::new()
-            .name("prognet-accept".into())
-            .spawn(move || {
-                let pool = ThreadPool::new(config.workers);
-                loop {
-                    match listener.accept() {
-                        Ok((stream, peer)) => {
-                            if sd.load(Ordering::SeqCst) {
-                                break; // the shutdown wakeup (or a straggler)
-                            }
-                            st.connections.fetch_add(1, Ordering::SeqCst);
-                            let repo = repo.clone();
-                            let cfg = config.clone();
-                            let st2 = st.clone();
-                            crate::log_debug!("accepted {peer}");
-                            pool.execute(move || {
-                                if let Err(e) = handle_conn(stream, &repo, &cfg, &st2) {
-                                    st2.errors.fetch_add(1, Ordering::SeqCst);
-                                    crate::log_debug!("conn error: {e:#}");
-                                }
-                            });
-                        }
-                        Err(e) => {
-                            if sd.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            crate::log_warn!("accept error: {e}");
-                            std::thread::sleep(Duration::from_millis(10));
-                        }
-                    }
-                }
-            })?;
-        crate::log_info!("server listening on {local}");
+        Self::start_fleet(addr, repo, config, FleetConfig::default())
+    }
+
+    /// Start with explicit admission/timeout behaviour.
+    pub fn start_fleet(
+        addr: &str,
+        repo: Arc<Repository>,
+        config: ServerConfig,
+        fleet: FleetConfig,
+    ) -> Result<Self> {
         Ok(Self {
-            addr: local,
-            shutdown,
-            accept_thread: Some(accept_thread),
-            stats,
+            reactor: Reactor::start(addr, repo, config, fleet)?,
         })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.reactor.addr()
     }
 
     pub fn stats(&self) -> &ServerStats {
-        &self.stats
+        self.reactor.stats()
+    }
+
+    /// Shared handle to the live counters (for periodic logging threads).
+    pub fn stats_arc(&self) -> Arc<ServerStats> {
+        self.reactor.stats().clone()
     }
 
     pub fn shutdown(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_thread.take() {
-            // Wake the blocking accept with a throwaway connection. A
-            // wildcard bind (0.0.0.0 / ::) is not connectable on every
-            // platform, so aim the wakeup at loopback on the bound port.
-            let mut wake = self.addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(match self.addr {
-                    std::net::SocketAddr::V4(_) => {
-                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                    }
-                    std::net::SocketAddr::V6(_) => {
-                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                    }
-                });
-            }
-            match TcpStream::connect_timeout(&wake, Duration::from_millis(500)) {
-                // the accept loop saw the wakeup (or a racing real
-                // connection) and will observe the flag
-                Ok(_) => {
-                    let _ = h.join();
-                }
-                Err(e) => {
-                    // could not wake the loop; detach instead of hanging
-                    // shutdown (and Drop) on an unbounded join
-                    crate::log_warn!("shutdown wakeup failed ({e}); detaching accept thread");
-                }
-            }
-        }
+        self.reactor.shutdown();
     }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-/// True for IO errors that mean "the peer is done with this connection"
-/// rather than a protocol violation.
-fn is_disconnect(e: &anyhow::Error) -> bool {
-    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-        matches!(
-            io.kind(),
-            std::io::ErrorKind::UnexpectedEof
-                | std::io::ErrorKind::WouldBlock
-                | std::io::ErrorKind::TimedOut
-                | std::io::ErrorKind::ConnectionReset
-                | std::io::ErrorKind::ConnectionAborted
-                | std::io::ErrorKind::BrokenPipe
-        )
-    })
-}
-
-fn handle_conn(
-    mut stream: TcpStream,
-    repo: &Repository,
-    config: &ServerConfig,
-    stats: &ServerStats,
-) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-    stream.set_nodelay(true)?;
-    let mut served_any = false;
-    loop {
-        let req = match proto::read_request(&mut stream) {
-            Ok(r) => r,
-            // after at least one response, a closed or quiet connection
-            // is the normal end of a keep-alive session
-            Err(e) if served_any && is_disconnect(&e) => return Ok(()),
-            Err(e) => return Err(e),
-        };
-        serve_request(&mut stream, &req, repo, config, stats)?;
-        served_any = true;
-        if !req.keep_alive {
-            return Ok(());
-        }
-    }
-}
-
-fn serve_request(
-    stream: &mut TcpStream,
-    req: &FetchRequest,
-    repo: &Repository,
-    config: &ServerConfig,
-    stats: &ServerStats,
-) -> Result<()> {
-    stats.requests.fetch_add(1, Ordering::SeqCst);
-    let schedule = req
-        .schedule
-        .clone()
-        .unwrap_or_else(|| config.default_schedule.clone());
-    let container = match repo.container(&req.model, &schedule) {
-        Ok(c) => c,
-        Err(e) => {
-            proto::write_err(stream, &format!("{e}"))?;
-            return Err(e);
-        }
-    };
-    let body_range = match container.body_range(req.stages) {
-        Ok(r) => r,
-        Err(e) => {
-            proto::write_err(stream, &format!("{e}"))?;
-            return Err(e);
-        }
-    };
-    // Zero-copy hot path: the body is a borrowed slice of the cached
-    // container; only the kernel copies it into the socket.
-    let selected = container.slice(body_range);
-    let offset = (req.offset as usize).min(selected.len());
-    let body = &selected[offset..];
-    proto::write_ok(
-        stream,
-        &FetchResponse {
-            total: selected.len() as u64,
-            remaining: body.len() as u64,
-            container_len: container.len() as u64,
-            stages: req.stages,
-        },
-    )?;
-    let speed = req.speed_mbps.or(config.default_speed_mbps);
-    let sent = match speed {
-        Some(mbps) => {
-            let mut shaped = ThrottledWriter::new(&mut *stream, LinkSpec::mbps(mbps));
-            shaped.write_all(body)?;
-            shaped.flush()?;
-            shaped.sent()
-        }
-        None => {
-            stream.write_all(body)?;
-            stream.flush()?;
-            body.len() as u64
-        }
-    };
-    stats.bytes_sent.fetch_add(sent, Ordering::SeqCst);
-    Ok(())
-}
+/// Context prefix attached to TCP connect failures by this crate's
+/// client helpers. `fleet::loadgen` matches on it to tell connect-level
+/// failures (retryable under herd starts) apart from protocol errors —
+/// reword it only through this constant.
+pub const CONNECT_CONTEXT: &str = "connecting";
 
 /// Client-side helper: open a fetch stream. Returns the connected socket
 /// positioned at the start of the body, plus the status frame with the
@@ -266,7 +107,8 @@ pub fn open_fetch(
     addr: &std::net::SocketAddr,
     req: &FetchRequest,
 ) -> Result<(TcpStream, FetchResponse)> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("{CONNECT_CONTEXT} {addr}"))?;
     stream.set_nodelay(true)?;
     let resp = request_on(&mut stream, req)?;
     Ok((stream, resp))
@@ -284,6 +126,8 @@ pub fn request_on(stream: &mut TcpStream, req: &FetchRequest) -> Result<FetchRes
 mod tests {
     use super::*;
     use std::io::Read;
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
 
     fn synthetic_server(tag: &str) -> (Server, Arc<Repository>) {
         crate::testutil::fixture::synthetic_server(tag).unwrap()
@@ -418,8 +262,31 @@ mod tests {
         server.shutdown();
         assert!(
             t0.elapsed() < Duration::from_secs(1),
-            "blocking accept must wake promptly on shutdown ({:?})",
+            "shutdown must wake the accept loop and all shards promptly ({:?})",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn active_gauge_returns_to_zero() {
+        let (server, repo) = synthetic_server("svc-gauge");
+        let expect = repo.container("alpha", &Schedule::paper_default()).unwrap();
+        let (mut s, _) = open_fetch(&server.addr(), &FetchRequest::new("alpha")).unwrap();
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(got.len(), expect.len());
+        drop(s);
+        // the shard notices the close asynchronously
+        let t0 = std::time::Instant::now();
+        while server.stats().active.load(Ordering::SeqCst) != 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "active gauge stuck at {}",
+                server.stats().active.load(Ordering::SeqCst)
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(server.stats().bytes_sent.load(Ordering::SeqCst) as usize, expect.len());
+        assert_eq!(server.stats().stages_served.load(Ordering::SeqCst), 8);
     }
 }

@@ -8,6 +8,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fleet::ShedPolicy;
 use crate::quant::{Schedule, K};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -18,10 +19,17 @@ pub struct ServeFileConfig {
     pub addr: String,
     /// default bandwidth shaping (None = unshaped)
     pub speed_mbps: Option<f64>,
+    /// reactor shard (event-loop worker) threads
     pub workers: usize,
     pub schedule: Schedule,
     /// models to pre-encode at startup (warm cache)
     pub preload: Vec<String>,
+    /// admission cap on concurrent connections (None = unlimited)
+    pub max_conns: Option<usize>,
+    /// what happens over the cap: reject | queue:<ms> | degrade:<stages>
+    pub shed_policy: ShedPolicy,
+    /// seconds between live-counter log lines (0 = silent)
+    pub log_interval_s: u64,
 }
 
 impl Default for ServeFileConfig {
@@ -32,6 +40,9 @@ impl Default for ServeFileConfig {
             workers: 8,
             schedule: Schedule::paper_default(),
             preload: Vec::new(),
+            max_conns: None,
+            shed_policy: ShedPolicy::Reject,
+            log_interval_s: 30,
         }
     }
 }
@@ -65,6 +76,14 @@ impl ServeFileConfig {
                         .map(|m| Ok(m.as_str()?.to_string()))
                         .collect::<Result<Vec<_>>>()?;
                 }
+                "max_conns" => {
+                    cfg.max_conns = match val {
+                        Json::Null => None,
+                        v => Some(v.as_usize()?),
+                    }
+                }
+                "shed_policy" => cfg.shed_policy = ShedPolicy::parse(val.as_str()?)?,
+                "log_interval_s" => cfg.log_interval_s = val.as_usize()? as u64,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -100,6 +119,15 @@ impl ServeFileConfig {
                 .filter(|s| !s.is_empty())
                 .map(str::to_string)
                 .collect();
+        }
+        if let Some(n) = args.get("max-conns") {
+            cfg.max_conns = Some(n.parse()?);
+        }
+        if let Some(p) = args.get("shed-policy") {
+            cfg.shed_policy = ShedPolicy::parse(p)?;
+        }
+        if let Some(s) = args.get("log-interval") {
+            cfg.log_interval_s = s.parse()?;
         }
         Ok(cfg)
     }
@@ -141,6 +169,30 @@ mod tests {
         assert_eq!(cfg.schedule.stages(), 4);
         assert_eq!(cfg.preload, vec!["cnn", "mlp"]);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fleet_keys_parse_with_cli_override() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("prognet-cfg-fleet-{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"max_conns": 256, "shed_policy": "queue:500", "log_interval_s": 5}"#,
+        )
+        .unwrap();
+        let cfg = ServeFileConfig::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--shed-policy",
+            "degrade:3",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.max_conns, Some(256)); // from file
+        assert_eq!(cfg.shed_policy, ShedPolicy::Degrade { max_stages: 3 }); // CLI wins
+        assert_eq!(cfg.log_interval_s, 5);
+        std::fs::remove_file(&path).ok();
+        // bad policy strings fail at startup
+        assert!(ServeFileConfig::resolve(&args(&["--shed-policy", "nope"])).is_err());
     }
 
     #[test]

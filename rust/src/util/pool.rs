@@ -1,8 +1,11 @@
 //! Fixed-size thread pool + a bounded MPMC channel built on std.
 //!
-//! The request path uses explicit threads (download / pipeline / inference)
-//! — see `client::concurrent` — while the server and coordinator use this
-//! pool for per-connection and per-batch work.
+//! [`BoundedQueue`] is the backpressure primitive between pipeline
+//! stages (session event streams, the concurrent-mode wire queue).
+//! [`ThreadPool`] powered the server's historical thread-per-connection
+//! loop; since the fleet PR the server is a sharded reactor
+//! (`fleet::reactor`) with no per-connection threads, so the pool is
+//! retained only as a general-purpose utility for batch-style callers.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

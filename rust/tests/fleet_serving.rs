@@ -1,0 +1,379 @@
+//! Fleet integration: the sharded reactor under multi-client load —
+//! slow-loris eviction, clean shutdown with many mid-stream sessions,
+//! admission-control shedding (reject / queue / degrade), and the
+//! 1000-concurrent-client load-generation acceptance run. Everything
+//! runs on synthetic fixture models; no Python artifacts needed.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use prognet::client::{ProgressiveSession, SessionEvent};
+use prognet::fleet::loadgen::{run_fleet, Cohort, FleetOptions, Scenario};
+use prognet::fleet::{FleetConfig, ShedPolicy};
+use prognet::quant::Schedule;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::{open_fetch, ServerConfig};
+use prognet::server::{FetchRequest, Repository, Server};
+use prognet::testutil::fixture;
+use prognet::util::json::Json;
+
+/// Reactor over the small executable model ("dense3", ~2 KB container).
+fn fleet_server(tag: &str, workers: usize, fleet: FleetConfig) -> (Server, Arc<Repository>) {
+    let repo = Arc::new(Repository::new(fixture::executable_models(tag).unwrap()));
+    let server = Server::start_fleet(
+        "127.0.0.1:0",
+        repo.clone(),
+        ServerConfig {
+            workers,
+            ..ServerConfig::default()
+        },
+        fleet,
+    )
+    .unwrap();
+    (server, repo)
+}
+
+/// Reactor over the bigger executable model ("dense2b", ~27 KB), whose
+/// stage boundaries are observable under shaping.
+fn fleet_server_big(tag: &str, workers: usize, fleet: FleetConfig) -> (Server, Arc<Repository>) {
+    let repo = Arc::new(Repository::new(fixture::executable_models_big(tag).unwrap()));
+    let server = Server::start_fleet(
+        "127.0.0.1:0",
+        repo.clone(),
+        ServerConfig {
+            workers,
+            ..ServerConfig::default()
+        },
+        fleet,
+    )
+    .unwrap();
+    (server, repo)
+}
+
+fn runtime_for(repo: &Repository, model: &str) -> Arc<ModelSession> {
+    let manifest = repo.registry().get(model).unwrap().clone();
+    Arc::new(ModelSession::load(&Engine::reference(), &manifest).unwrap())
+}
+
+#[test]
+fn stalled_client_is_evicted_while_others_stream() {
+    // Slow-loris: a client that sends two bytes of a request frame and
+    // then stalls must be evicted on the I/O deadline without pinning a
+    // worker — a healthy client on the same server keeps streaming.
+    let fleet = FleetConfig {
+        io_timeout: Duration::from_millis(300),
+        ..FleetConfig::default()
+    };
+    let (server, repo) = fleet_server_big("fleet-loris", 2, fleet);
+    let mut loris = TcpStream::connect(server.addr()).unwrap();
+    loris.write_all(&[9, 0]).unwrap(); // half a length prefix, then silence
+
+    let expect = repo
+        .container("dense2b", &Schedule::paper_default())
+        .unwrap();
+    let (mut healthy, resp) =
+        open_fetch(&server.addr(), &FetchRequest::new("dense2b")).unwrap();
+    let mut got = Vec::new();
+    healthy.read_to_end(&mut got).unwrap();
+    assert_eq!(got.len() as u64, resp.remaining);
+    assert_eq!(&got[..], &expect[..]);
+
+    // the stalled connection is closed from the server side
+    loris
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let t0 = Instant::now();
+    let mut buf = [0u8; 16];
+    let n = loris.read(&mut buf).unwrap_or(0); // EOF or reset
+    assert_eq!(n, 0, "stalled connection must be closed, got {n} bytes");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "eviction took {:?}",
+        t0.elapsed()
+    );
+    let t1 = Instant::now();
+    while server.stats().evicted.load(Ordering::SeqCst) == 0 {
+        assert!(t1.elapsed() < Duration::from_secs(5), "evicted counter never moved");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn shutdown_with_64_midstream_clients_is_clean() {
+    let (mut server, _repo) = fleet_server_big("fleet-shutdown", 4, FleetConfig::default());
+    let addr = server.addr();
+    // 0.05 MB/s → ~0.5 s per transfer: every session is mid-stream when
+    // the server shuts down 200 ms in
+    let handles: Vec<_> = (0..64)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let handle = ProgressiveSession::builder("dense2b")
+                    .addr(addr)
+                    .speed_mbps(0.05)
+                    .resume_retries(0)
+                    .start()
+                    .unwrap();
+                let mut finished = false;
+                while let Some(ev) = handle.next_event() {
+                    if matches!(ev, SessionEvent::Finished(_)) {
+                        finished = true;
+                    }
+                }
+                match handle.finish() {
+                    Ok(_) => {
+                        assert!(finished, "Ok report implies a Finished event");
+                        true
+                    }
+                    Err(_) => false, // clean error: stream closed, no hang
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(200));
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "shutdown with live clients took {:?}",
+        t0.elapsed()
+    );
+    let mut finished = 0usize;
+    let mut errored = 0usize;
+    for h in handles {
+        if h.join().expect("session thread must not panic/hang") {
+            finished += 1;
+        } else {
+            errored += 1;
+        }
+    }
+    assert_eq!(finished + errored, 64);
+    assert!(errored > 0, "sessions shaped to 0.5 s cannot all finish in 200 ms");
+    assert_eq!(server.stats().active.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn reject_policy_sheds_and_served_clients_reach_model_ready() {
+    let fleet = FleetConfig {
+        max_conns: Some(2),
+        shed_policy: ShedPolicy::Reject,
+        ..FleetConfig::default()
+    };
+    let (server, repo) = fleet_server_big("fleet-shed", 2, fleet);
+    let runtime = runtime_for(&repo, "dense2b");
+    // 16 simultaneous clients against a cap of 2 — most must be shed
+    let scenario = Scenario::uniform("dense2b", 16, Some(1.0));
+    let report = run_fleet(
+        server.addr(),
+        &scenario,
+        Some(runtime),
+        &FleetOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.connect_failed, 0, "{:?}", report.sample_errors);
+    assert!(report.shed() > 0, "cap 2, 16 herd clients: shedding required");
+    assert!(server.stats().shed.load(Ordering::SeqCst) > 0);
+    assert_eq!(report.overall.finished + report.shed(), 16);
+    assert!(report.overall.finished > 0, "someone must be served");
+    // every accepted (finished) client reached ModelReady
+    let ready = report.overall.model_ready.as_ref().unwrap();
+    assert_eq!(ready.n, report.overall.finished);
+}
+
+#[test]
+fn queue_policy_parks_over_cap_then_serves_everyone() {
+    let fleet = FleetConfig {
+        max_conns: Some(1),
+        shed_policy: ShedPolicy::Queue {
+            deadline: Duration::from_secs(10),
+        },
+        ..FleetConfig::default()
+    };
+    let (server, _repo) = fleet_server_big("fleet-queue", 2, fleet);
+    let scenario = Scenario::uniform("dense2b", 4, Some(0.5)); // ~54 ms each
+    let report = run_fleet(server.addr(), &scenario, None, &FleetOptions::default()).unwrap();
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.finished, 4, "generous deadline: all served");
+    assert_eq!(report.shed(), 0);
+    assert!(
+        server.stats().queued_total.load(Ordering::SeqCst) > 0,
+        "cap 1 with 4 herd clients must have parked someone"
+    );
+    assert_eq!(server.stats().queued.load(Ordering::SeqCst), 0, "queue drained");
+}
+
+#[test]
+fn queue_deadline_expiry_sheds_the_parked() {
+    let fleet = FleetConfig {
+        max_conns: Some(1),
+        shed_policy: ShedPolicy::Queue {
+            deadline: Duration::from_millis(30),
+        },
+        ..FleetConfig::default()
+    };
+    let (server, _repo) = fleet_server_big("fleet-queue-expire", 2, fleet);
+    // the occupant takes ~270 ms; parked clients expire at 30 ms
+    let scenario = Scenario::uniform("dense2b", 6, Some(0.1));
+    let report = run_fleet(server.addr(), &scenario, None, &FleetOptions::default()).unwrap();
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert!(report.overall.finished >= 1);
+    assert!(report.shed() >= 1, "30 ms deadline under a 270 ms occupant must shed");
+    assert_eq!(report.overall.finished + report.shed(), 6);
+}
+
+#[test]
+fn degrade_policy_clamps_stages_but_still_reaches_model_ready() {
+    let fleet = FleetConfig {
+        max_conns: Some(0), // everyone is over the cap → everyone degrades
+        shed_policy: ShedPolicy::Degrade { max_stages: 3 },
+        ..FleetConfig::default()
+    };
+    let (server, repo) = fleet_server_big("fleet-degrade", 2, fleet);
+    let session = runtime_for(&repo, "dense2b");
+    let handle = ProgressiveSession::builder("dense2b")
+        .addr(server.addr())
+        .runtime("dense2b", session)
+        .start()
+        .unwrap();
+    let mut stages = Vec::new();
+    let mut ready = 0usize;
+    for ev in handle.events() {
+        match ev {
+            SessionEvent::StageComplete { stage, .. } => stages.push(stage),
+            SessionEvent::ModelReady { .. } => ready += 1,
+            _ => {}
+        }
+    }
+    let report = handle.finish().unwrap();
+    // the session followed the server's clamped window: 3 stages, each
+    // published into the hot-swappable model
+    assert_eq!(stages, vec![0, 1, 2]);
+    assert_eq!(ready, 3);
+    assert!(server.stats().degraded.load(Ordering::SeqCst) >= 1);
+    let container = repo
+        .container("dense2b", &Schedule::paper_default())
+        .unwrap();
+    let clamped = container.body_range(Some((0, 3))).unwrap().len();
+    assert_eq!(report.summary.bytes as usize, clamped);
+}
+
+#[test]
+fn fleet_slo_report_counts_resumes_and_parses_as_json() {
+    let (server, repo) = fleet_server_big("fleet-slo", 2, FleetConfig::default());
+    let runtime = runtime_for(&repo, "dense2b");
+    let scenario = Scenario {
+        model: "dense2b".into(),
+        cohorts: vec![
+            Cohort::fixed("bulk", 6, Some(1.0)),
+            Cohort::flaky("flaky", 2, Some(1.0)),
+        ],
+    };
+    // cut mid-container (~27 KB total): well past the manifest, so the
+    // session resumes at a stage boundary
+    let opts = FleetOptions {
+        flaky_cut_bytes: 12_000,
+        ..FleetOptions::default()
+    };
+    let report = run_fleet(server.addr(), &scenario, Some(runtime), &opts).unwrap();
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.finished, 8);
+    assert!(report.overall.resumes >= 2, "each flaky client resumes once");
+    // per-cohort blocks exist and the JSON parses back
+    assert_eq!(report.cohorts.len(), 2);
+    let j = Json::parse(&report.to_json().to_string()).unwrap();
+    let overall = j.get("overall").unwrap();
+    assert_eq!(overall.get("protocol_errors").unwrap().as_i64().unwrap(), 0);
+    assert_eq!(overall.get("finished").unwrap().as_i64().unwrap(), 8);
+    assert!(overall.opt("accept_to_model_ready").is_some());
+    assert_eq!(j.get("cohorts").unwrap().as_arr().unwrap().len(), 2);
+}
+
+/// Soft `RLIMIT_NOFILE`, read from /proc (Linux); conservative default
+/// elsewhere. The 1000-client run needs ~2 fds per client in this one
+/// process (client socket + accepted server socket).
+fn max_open_files() -> usize {
+    std::fs::read_to_string("/proc/self/limits")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("Max open files"))
+                .and_then(|l| {
+                    let soft = l.split_whitespace().nth(3)?;
+                    if soft == "unlimited" {
+                        Some(usize::MAX)
+                    } else {
+                        soft.parse().ok()
+                    }
+                })
+        })
+        .unwrap_or(1024)
+}
+
+#[test]
+fn loadgen_sustains_1000_concurrent_clients_with_zero_protocol_errors() {
+    // The acceptance run: 1000 virtual clients (each a real
+    // ProgressiveSession with a bound runtime) against a 4-shard
+    // reactor. Server-side thread count is O(workers); the peak of the
+    // `active` gauge proves the population is genuinely concurrent.
+    // On fd-constrained machines (soft nofile < 4096) the same shape
+    // runs scaled down rather than flaking on EMFILE.
+    let clients: usize = if max_open_files() >= 4096 { 1000 } else { 192 };
+    let fleet = FleetConfig {
+        write_burst: 256, // keep small bodies honestly paced
+        ..FleetConfig::default()
+    };
+    let (server, repo) = fleet_server("fleet-1k", 4, fleet);
+    let runtime = runtime_for(&repo, "dense3");
+    let scenario = Scenario {
+        model: "dense3".into(),
+        cohorts: vec![
+            Cohort::fixed("bulk-0.01", clients * 7 / 10, Some(0.01)),
+            Cohort::fixed("slow-0.005", clients * 2 / 10, Some(0.005)),
+            Cohort::fixed("burst-max", clients - clients * 7 / 10 - clients * 2 / 10, None),
+        ],
+    };
+    let opts = FleetOptions {
+        connect_retries: 5,
+        ..FleetOptions::default()
+    };
+    // sample the active-connections gauge while the fleet runs
+    let stats = server.stats_arc();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let monitor = {
+        let stats = stats.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut peak = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                peak = peak.max(stats.active.load(Ordering::SeqCst));
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            peak
+        })
+    };
+    let report = run_fleet(server.addr(), &scenario, Some(runtime), &opts).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let peak_active = monitor.join().unwrap();
+
+    assert_eq!(report.clients(), clients);
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.connect_failed, 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.finished, clients);
+    let ready = report.overall.model_ready.as_ref().unwrap();
+    assert_eq!(ready.n, clients, "every client reached ModelReady");
+    assert!(ready.p50 > 0.0 && ready.p99 >= ready.p50);
+    assert!(
+        peak_active as usize >= clients / 10,
+        "expected a genuinely concurrent population, peak active = {peak_active} of {clients}"
+    );
+    assert!(server.stats().connections.load(Ordering::SeqCst) as usize >= clients);
+    // all sessions drained; the gauge returns to zero
+    let t0 = Instant::now();
+    while server.stats().active.load(Ordering::SeqCst) != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "active gauge stuck");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
