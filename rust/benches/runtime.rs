@@ -1,14 +1,30 @@
-//! Runtime micro-benchmarks: executable latency per model and batch
-//! size, plus the fused-dequant (qfwd) variant, on the selected backend
-//! (`PROGNET_BACKEND=reference|pjrt`; reference is the default).
+//! Runtime fast-path benchmark: batched blocked kernels vs the scalar
+//! oracle interpreter, worker-pool scaling, and per-stage upgrade
+//! latency (incremental delta-dequant vs a full re-dequant), emitting
+//! `BENCH_runtime.json` so the perf trajectory is tracked across PRs.
+//!
+//! Runs entirely on synthetic fixture models (no artifacts needed — the
+//! CI `runtime-smoke` job runs this and asserts speedup ≥ 1); when the
+//! Python-built artifacts are present, the classic per-model latency
+//! table for the real zoo is printed as well.
+//!
+//! Knobs:
+//!   PROGNET_BENCH_BATCH      batch size (default 32)
+//!   PROGNET_BENCH_NO_ASSERT  skip the speedup ≥ 1 assert
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use prognet::eval::EvalSet;
+use prognet::client::Assembler;
+use prognet::format::PnetWriter;
 use prognet::metrics::Table;
 use prognet::models::Registry;
-use prognet::quant::{quantize, QuantParams, K};
-use prognet::runtime::{Engine, ModelSession};
+use prognet::quant::{quantize, QuantParams, Schedule, K};
+use prognet::runtime::{
+    ApproxModel, Backend, CompiledModel, Engine, ModelSession, ReferenceBackend,
+};
+use prognet::testutil::fixture;
+use prognet::util::json;
 
 fn bench<F: FnMut() -> prognet::Result<()>>(mut f: F, reps: usize) -> prognet::Result<f64> {
     // warmup
@@ -22,14 +38,189 @@ fn bench<F: FnMut() -> prognet::Result<()>>(mut f: F, reps: usize) -> prognet::R
     Ok(best)
 }
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// A ~134k-param dense model, big enough that kernel throughput (not
+/// plan overhead) dominates.
+fn bench_registry() -> prognet::Result<Registry> {
+    let root = fixture::fixture_root("bench-runtime");
+    let _ = std::fs::remove_dir_all(&root);
+    let models = root.join("models");
+    std::fs::create_dir_all(&models)?;
+    fixture::write_model(
+        &models,
+        "mlp256",
+        &[
+            ("fc1.w", &[256usize, 256][..]),
+            ("fc1.b", &[256][..]),
+            ("fc2.w", &[256, 256][..]),
+            ("fc2.b", &[256][..]),
+            ("head.w", &[256, 10][..]),
+            ("head.b", &[10][..]),
+        ],
+        0xBE7C_0001,
+    )?;
+    fixture::write_index(&models, &["mlp256"])?;
+    Registry::open(&root)
+}
+
 fn main() -> prognet::Result<()> {
-    if !prognet::artifacts_available() {
-        eprintln!("runtime: artifacts not built, skipping");
-        return Ok(());
+    let batch = env_usize("PROGNET_BENCH_BATCH", 32);
+    let reg = bench_registry()?;
+    let manifest = reg.get("mlp256")?;
+    let flat = manifest.load_weights()?;
+    let images: Vec<f32> = (0..batch * manifest.input_numel())
+        .map(|i| ((i * 2654435761) % 1000) as f32 * 1e-3)
+        .collect();
+
+    // ---- batched (1 worker) vs the pre-PR scalar interpreter ----------
+    let scalar = ReferenceBackend::scalar().compile(manifest, &[])?;
+    let batched = ReferenceBackend::with_threads(1).compile(manifest, &[])?;
+    let t_scalar = bench(|| scalar.execute(&images, batch, &flat).map(|_| ()), 7)?;
+    let t_batched = bench(|| batched.execute(&images, batch, &flat).map(|_| ()), 15)?;
+    let speedup = t_scalar / t_batched;
+
+    // ---- worker-pool scaling ------------------------------------------
+    let threads = prognet::runtime::threads().min(8);
+    let pooled = ReferenceBackend::with_threads(threads).compile(manifest, &[])?;
+    let t_pooled = bench(|| pooled.execute(&images, batch, &flat).map(|_| ()), 15)?;
+
+    let mut table = Table::new(
+        &format!("runtime fast path (mlp256, {} params, batch {batch})", flat.len()),
+        &["path", "latency", "images/s"],
+    );
+    for (name, t) in [
+        ("scalar oracle (pre-PR)".to_string(), t_scalar),
+        ("batched, 1 thread".to_string(), t_batched),
+        (format!("batched, {threads} threads"), t_pooled),
+    ] {
+        table.row(vec![
+            name,
+            format!("{:.3} ms", t * 1e3),
+            format!("{:.0}", batch as f64 / t),
+        ]);
     }
+    println!("{}", table.render());
+    println!("speedup (batched/1-thread vs scalar at batch {batch}): {speedup:.2}x");
+
+    // ---- per-stage upgrade latency: delta dequant vs full re-dequant --
+    let sched = Schedule::paper_default();
+    let pm = manifest.pnet_manifest(&flat, sched.clone())?;
+    let writer = PnetWriter::encode(pm.clone(), &flat)?;
+    let session = Arc::new(ModelSession::load(&Engine::reference(), manifest)?);
+    let approx = ApproxModel::new(session);
+    let tensors = pm.tensors.len();
+
+    let mut delta = Assembler::new(pm.clone());
+    delta.set_eager_dequant(true); // Eq. 5 folded into absorb
+    let mut full = Assembler::new(pm.clone()); // lazy: reconstruct re-dequants
+    let mut delta_us: Vec<f64> = Vec::new();
+    let mut full_us: Vec<f64> = Vec::new();
+    for s in 0..sched.stages() {
+        for t in 0..tensors {
+            delta.absorb(s, t, writer.fragment(s, t))?;
+            full.absorb(s, t, writer.fragment(s, t))?;
+        }
+        // the StageComplete → ModelReady critical path: reconstruct + swap
+        let t0 = Instant::now();
+        delta.reconstruct()?;
+        approx.publish(delta.flat(), delta.cum_bits());
+        delta_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        let t0 = Instant::now();
+        full.reconstruct()?;
+        full_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "stage upgrade (reconstruct+swap, {} params): delta {:.1} us mean / {:.1} us max, \
+         full re-dequant {:.1} us mean",
+        flat.len(),
+        mean(&delta_us),
+        delta_us.iter().cloned().fold(0.0, f64::max),
+        mean(&full_us),
+    );
+
+    // ---- fused qfwd weight-cache: hit vs miss -------------------------
+    let mut qflat = vec![0u32; flat.len()];
+    for t in &manifest.tensors {
+        let seg = &flat[t.offset..t.offset + t.numel];
+        let qp = QuantParams::from_data(seg, K);
+        qflat[t.offset..t.offset + t.numel].copy_from_slice(&quantize(seg, &qp));
+    }
+    let one = &images[..manifest.input_numel()];
+    batched.execute_quantized_versioned(one, 1, &qflat, K, 1)?; // prime
+    let t_hit = bench(
+        || batched.execute_quantized_versioned(one, 1, &qflat, K, 1).map(|_| ()),
+        9,
+    )?;
+    let t_fwd = bench(|| batched.execute(one, 1, &flat).map(|_| ()), 9)?;
+    let miss_extra = {
+        // an unversioned call re-runs Eq. 5 every time
+        let t = bench(|| batched.execute_quantized(one, 1, &qflat, K).map(|_| ()), 9)?;
+        t - t_fwd
+    };
+    println!(
+        "qfwd batch-1: cache hit {:.1} us (plain fwd {:.1} us), Eq.5 re-dequant adds {:.1} us",
+        t_hit * 1e6,
+        t_fwd * 1e6,
+        miss_extra.max(0.0) * 1e6,
+    );
+
+    // ---- BENCH_runtime.json -------------------------------------------
+    let report = json::obj(vec![
+        ("model", json::s("mlp256")),
+        ("params", json::num(flat.len() as f64)),
+        ("batch", json::num(batch as f64)),
+        ("scalar_imgs_per_s", json::num(batch as f64 / t_scalar)),
+        ("batched_imgs_per_s", json::num(batch as f64 / t_batched)),
+        ("speedup", json::num(speedup)),
+        ("threads", json::num(threads as f64)),
+        ("threaded_imgs_per_s", json::num(batch as f64 / t_pooled)),
+        (
+            "stage_upgrade_us",
+            json::obj(vec![
+                ("mean", json::num(mean(&delta_us))),
+                ("max", json::num(delta_us.iter().cloned().fold(0.0, f64::max))),
+                (
+                    "per_stage",
+                    json::arr(delta_us.iter().map(|&v| json::num(v)).collect()),
+                ),
+            ]),
+        ),
+        ("stage_full_redequant_us_mean", json::num(mean(&full_us))),
+        ("qfwd_cache_hit_us", json::num(t_hit * 1e6)),
+        ("qfwd_redequant_extra_us", json::num(miss_extra.max(0.0) * 1e6)),
+    ]);
+    std::fs::write("BENCH_runtime.json", report.to_string())?;
+    println!("wrote BENCH_runtime.json");
+
+    if std::env::var_os("PROGNET_BENCH_NO_ASSERT").is_none() {
+        assert!(
+            speedup >= 1.0,
+            "batched path slower than the scalar oracle: {speedup:.2}x"
+        );
+    }
+
+    // ---- classic per-model table on the real zoo (artifacts only) -----
+    if prognet::artifacts_available() {
+        artifact_table()?;
+    } else {
+        println!("(artifacts not built: skipping the real-zoo latency table)");
+    }
+    Ok(())
+}
+
+/// The original artifact-backed latency table (real models, selected
+/// backend), including the fused-dequant path.
+fn artifact_table() -> prognet::Result<()> {
+    use prognet::eval::EvalSet;
     let engine = Engine::global()?;
     let registry = Registry::open_default()?;
-
     let mut table = Table::new(
         &format!("{} backend latency (best of 5)", engine.backend_name()),
         &["model", "path", "batch", "latency", "images/s"],
@@ -58,8 +249,7 @@ fn main() -> prognet::Result<()> {
             for t in &manifest.tensors {
                 let seg = &flat[t.offset..t.offset + t.numel];
                 let qp = QuantParams::from_data(seg, K);
-                qflat[t.offset..t.offset + t.numel]
-                    .copy_from_slice(&quantize::quantize(seg, &qp));
+                qflat[t.offset..t.offset + t.numel].copy_from_slice(&quantize(seg, &qp));
             }
             let n = 32;
             let images = eval.image_batch(n).to_vec();

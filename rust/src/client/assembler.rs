@@ -1,41 +1,69 @@
-//! Incremental model assembly: per-tensor Eq. 4 accumulators + Eq. 5
-//! dequantization into a reusable flat weight buffer.
+//! Incremental model assembly: Eq. 4 bit-concatenation into one flat
+//! code vector plus Eq. 5 dequantization into a reusable flat weight
+//! buffer, with an incremental stage-delta path.
+//!
+//! # Incremental dequant invariant
+//!
+//! After [`Assembler::reconstruct`] returns, `flat[i]` equals exactly
+//! `(q[i] + 2^{k-c-1}) * scale + min` for the current cumulative bits
+//! `c` — the same expression [`dequantize_into`] evaluates — regardless
+//! of whether the floats were rewritten just now (lazy mode) or tensor
+//! by tensor as each plane landed (eager mode,
+//! [`Assembler::set_eager_dequant`]). Incremental updates are therefore
+//! **bit-exact** with a full re-dequant at every `cum_bits` level; the
+//! property test in `tests/runtime_fastpath.rs` asserts equality of the
+//! raw f32 bits. In eager mode the stage-boundary `reconstruct` is pure
+//! bookkeeping (every tensor is already current), so the
+//! `StageComplete → ModelReady` critical path the fleet SLO measures no
+//! longer contains an `O(param_count)` dequant pass — Eq. 5 runs while
+//! the next bytes are still in flight.
 
 use anyhow::{bail, Result};
 
 use crate::format::header::PnetManifest;
-use crate::quant::{dequantize_into, Accumulator, DequantParams};
+use crate::quant::{bitplane, dequantize_into, DequantParams};
+
+/// `flat_cum` sentinel: the tensor's floats reflect no valid bit-width.
+const STALE: u32 = u32::MAX;
 
 /// Assembles a progressive model from fragments, tensor by tensor.
 pub struct Assembler {
     manifest: PnetManifest,
-    accs: Vec<Accumulator>,
+    /// flat k-bit code vector, all tensors concatenated (Eq. 4 state) —
+    /// borrowed out via [`Assembler::codes_flat`] without copying
+    q: Vec<u32>,
+    /// stages absorbed per tensor
+    recv: Vec<usize>,
     /// number of tensors that completed each stage
     stage_counts: Vec<usize>,
     /// highest stage for which *all* tensors have arrived, +1 (0 = none)
     stages_complete: usize,
     /// reusable dequantized flat weights
     flat: Vec<f32>,
-    /// stage reflected in `flat` (+1), 0 = never dequantized
-    flat_stage: usize,
+    /// cumulative bits reflected in `flat`, per tensor ([`STALE`] = none)
+    flat_cum: Vec<u32>,
+    /// monotone counter identifying the contents of `q` (bumps on every
+    /// absorbed fragment) — the backend's qfwd weight-cache key
+    version: u64,
+    /// fold Eq. 5 into absorb (per-tensor, as planes land)
+    eager: bool,
 }
 
 impl Assembler {
     pub fn new(manifest: PnetManifest) -> Self {
-        let accs = manifest
-            .tensors
-            .iter()
-            .map(|t| Accumulator::new(t.numel, manifest.schedule.clone()))
-            .collect();
+        let tensors = manifest.tensors.len();
+        let params = manifest.param_count();
         let stage_counts = vec![0; manifest.schedule.stages()];
-        let flat = vec![0f32; manifest.param_count()];
         Self {
             manifest,
-            accs,
+            q: vec![0u32; params],
+            recv: vec![0; tensors],
             stage_counts,
             stages_complete: 0,
-            flat,
-            flat_stage: 0,
+            flat: vec![0f32; params],
+            flat_cum: vec![STALE; tensors],
+            version: 0,
+            eager: false,
         }
     }
 
@@ -43,30 +71,76 @@ impl Assembler {
         &self.manifest
     }
 
+    /// Fold Eq. 5 into fragment absorption: each arriving plane updates
+    /// its tensor's dequantized floats in place right after the OR-shift
+    /// into the code vector, so the stage-boundary [`reconstruct`] is
+    /// `O(#tensors)` bookkeeping instead of a full `param_count` dequant
+    /// pass. Off by default — download-only consumers never pay Eq. 5;
+    /// sessions with a bound runtime turn it on.
+    ///
+    /// [`reconstruct`]: Assembler::reconstruct
+    pub fn set_eager_dequant(&mut self, eager: bool) {
+        self.eager = eager;
+    }
+
     /// Absorb one fragment; returns `Some(stage)` when this fragment
     /// completed that stage across all tensors.
     pub fn absorb(&mut self, stage: usize, tensor: usize, payload: &[u8]) -> Result<Option<usize>> {
-        if tensor >= self.accs.len() {
+        if tensor >= self.recv.len() {
             bail!("tensor index {tensor} out of range");
         }
         if stage >= self.manifest.schedule.stages() {
             bail!("stage {stage} out of range");
         }
-        let acc = &mut self.accs[tensor];
-        if stage < acc.stages_received() {
+        if stage < self.recv[tensor] {
             // duplicate fragment — a stage-boundary resume re-delivers the
             // partially received stage; the codes are already absorbed
             return Ok(None);
         }
-        if acc.stages_received() != stage {
+        if self.recv[tensor] != stage {
             bail!(
                 "tensor {tensor}: expected stage {}, got {stage}",
-                acc.stages_received()
+                self.recv[tensor]
             );
         }
-        acc.absorb(payload)?;
+        let t = &self.manifest.tensors[tensor];
+        let sched = &self.manifest.schedule;
+        let width = sched.widths()[stage];
+        let expect = sched.plane_bytes(stage, t.numel);
+        if payload.len() != expect {
+            bail!(
+                "stage {stage} plane is {} bytes, expected {expect}",
+                payload.len()
+            );
+        }
+        let cum = sched.cum_bits(stage);
+        let shift = sched.k() - cum;
+        // Fused unpack + shift + OR straight into the flat code vector —
+        // single pass, no scratch. Stage 0 overwrites (q is all-zero).
+        bitplane::unpack_or_into(
+            payload,
+            width,
+            shift,
+            stage == 0,
+            &mut self.q[t.offset..t.offset + t.numel],
+        );
+        self.recv[tensor] = stage + 1;
+        self.version += 1;
+        if self.eager {
+            // stage-delta dequant: rewrite only this tensor's floats, at
+            // its own new bit-width, while the download keeps flowing
+            let dp = DequantParams::new(&t.quant_params(self.manifest.k), cum);
+            dequantize_into(
+                &self.q[t.offset..t.offset + t.numel],
+                dp,
+                &mut self.flat[t.offset..t.offset + t.numel],
+            );
+            self.flat_cum[tensor] = cum;
+        } else {
+            self.flat_cum[tensor] = STALE;
+        }
         self.stage_counts[stage] += 1;
-        if self.stage_counts[stage] == self.accs.len() && self.stages_complete == stage {
+        if self.stage_counts[stage] == self.recv.len() && self.stages_complete == stage {
             self.stages_complete = stage + 1;
             return Ok(Some(stage));
         }
@@ -94,34 +168,47 @@ impl Assembler {
     /// Dequantize the current state into the internal flat buffer and
     /// return it (Eq. 5 with the midpoint revision for missing bits).
     ///
-    /// This is the per-stage reconstruct hot path. The buffer is reused;
-    /// no allocation happens after construction.
+    /// Only tensors whose floats are stale for the current bit-width are
+    /// rewritten; with [`Assembler::set_eager_dequant`] every tensor was
+    /// updated as its plane landed, and this is `O(#tensors)` bookkeeping.
+    /// Either way the result is bit-exact with a full re-dequant (see the
+    /// module docs). The buffer is reused; no allocation happens after
+    /// construction.
     pub fn reconstruct(&mut self) -> Result<&[f32]> {
         if self.stages_complete == 0 {
             bail!("no complete stage to reconstruct");
         }
         let cum = self.cum_bits();
-        for (t, acc) in self.manifest.tensors.iter().zip(&self.accs) {
-            let qp = t.quant_params(self.manifest.k);
-            let dp = DequantParams::new(&qp, cum);
+        for (i, t) in self.manifest.tensors.iter().enumerate() {
+            if self.flat_cum[i] == cum {
+                continue;
+            }
+            let dp = DequantParams::new(&t.quant_params(self.manifest.k), cum);
             dequantize_into(
-                acc.codes(),
+                &self.q[t.offset..t.offset + t.numel],
                 dp,
                 &mut self.flat[t.offset..t.offset + t.numel],
             );
+            self.flat_cum[i] = cum;
         }
-        self.flat_stage = self.stages_complete;
         Ok(&self.flat)
     }
 
-    /// The current flat code vector concatenated across tensors (for the
-    /// fused `qfwd` path — dequant runs inside the executable instead).
-    pub fn codes_flat(&self) -> Vec<u32> {
-        let mut out = vec![0u32; self.manifest.param_count()];
-        for (t, acc) in self.manifest.tensors.iter().zip(&self.accs) {
-            out[t.offset..t.offset + t.numel].copy_from_slice(acc.codes());
-        }
-        out
+    /// The current flat code vector concatenated across tensors,
+    /// borrowed — the fused `qfwd` path consumes it without copying
+    /// (dequant runs inside the executable instead).
+    pub fn codes_flat(&self) -> &[u32] {
+        &self.q
+    }
+
+    /// Monotone counter identifying the exact contents of
+    /// [`Assembler::codes_flat`]: bumps on every absorbed fragment. Pair
+    /// with [`Assembler::cum_bits`] as the backend's qfwd weight-cache
+    /// key ([`infer_quantized_versioned`]).
+    ///
+    /// [`infer_quantized_versioned`]: crate::runtime::ModelSession::infer_quantized_versioned
+    pub fn codes_version(&self) -> u64 {
+        self.version
     }
 
     /// Last reconstructed weights without re-running dequant.
@@ -161,12 +248,14 @@ mod tests {
         let (w, _) = setup(1);
         let mut asm = Assembler::new(w.manifest().clone());
         assert_eq!(asm.stages_complete(), 0);
+        assert_eq!(asm.codes_version(), 0);
         // stage 0, tensors 0..2
         assert_eq!(asm.absorb(0, 0, w.fragment(0, 0)).unwrap(), None);
         assert_eq!(asm.absorb(0, 1, w.fragment(0, 1)).unwrap(), None);
         assert_eq!(asm.absorb(0, 2, w.fragment(0, 2)).unwrap(), Some(0));
         assert_eq!(asm.stages_complete(), 1);
         assert_eq!(asm.cum_bits(), 2);
+        assert_eq!(asm.codes_version(), 3);
     }
 
     #[test]
@@ -199,6 +288,23 @@ mod tests {
     }
 
     #[test]
+    fn eager_dequant_matches_lazy_bit_for_bit() {
+        let (w, _) = setup(7);
+        let mut eager = Assembler::new(w.manifest().clone());
+        eager.set_eager_dequant(true);
+        let mut lazy = Assembler::new(w.manifest().clone());
+        for s in 0..8 {
+            for t in 0..3 {
+                eager.absorb(s, t, w.fragment(s, t)).unwrap();
+                lazy.absorb(s, t, w.fragment(s, t)).unwrap();
+            }
+            let a: Vec<u32> = eager.reconstruct().unwrap().iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = lazy.reconstruct().unwrap().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "stage {s}");
+        }
+    }
+
+    #[test]
     fn out_of_order_fragment_rejected() {
         let (w, _) = setup(3);
         let mut asm = Assembler::new(w.manifest().clone());
@@ -212,18 +318,21 @@ mod tests {
         for t in 0..3 {
             asm.absorb(0, t, w.fragment(0, t)).unwrap();
         }
-        let codes_before = asm.codes_flat();
+        let codes_before = asm.codes_flat().to_vec();
+        let version_before = asm.codes_version();
         // a stage-boundary resume re-delivers stage 0: must be a no-op
         for t in 0..3 {
             assert_eq!(asm.absorb(0, t, w.fragment(0, t)).unwrap(), None);
         }
         assert_eq!(asm.stages_complete(), 1);
-        assert_eq!(asm.codes_flat(), codes_before);
+        assert_eq!(asm.codes_flat(), &codes_before[..]);
+        assert_eq!(asm.codes_version(), version_before);
         // and the next stage still completes normally
         for t in 0..3 {
             asm.absorb(1, t, w.fragment(1, t)).unwrap();
         }
         assert_eq!(asm.stages_complete(), 2);
+        assert!(asm.codes_version() > version_before);
     }
 
     #[test]
@@ -244,5 +353,16 @@ mod tests {
         assert_eq!(codes.len(), 800);
         // stage 0 = top 2 bits only
         assert!(codes.iter().all(|&c| c & 0x3FFF == 0));
+    }
+
+    #[test]
+    fn wrong_size_plane_rejected() {
+        let (w, _) = setup(8);
+        let mut asm = Assembler::new(w.manifest().clone());
+        assert!(asm.absorb(0, 0, &[0u8; 3]).is_err());
+        assert_eq!(asm.stages_complete(), 0);
+        assert_eq!(asm.codes_version(), 0);
+        // the right-size plane still lands afterwards
+        assert_eq!(asm.absorb(0, 0, w.fragment(0, 0)).unwrap(), None);
     }
 }

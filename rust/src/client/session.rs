@@ -73,6 +73,7 @@ use super::assembler::Assembler;
 use super::cache::ModelCache;
 use super::downloader::{Downloader, TimedEvent};
 use crate::coordinator::scheduler::{interleave_stages, InterleaveModel};
+use crate::format::header::PnetManifest;
 use crate::format::{FrameParser, ParserEvent, PnetReader};
 use crate::metrics::{EventKind, Timeline};
 use crate::quant::Schedule;
@@ -587,6 +588,18 @@ fn emit(q: &BoundedQueue<SessionEvent>, ev: SessionEvent) -> Result<()> {
     Ok(())
 }
 
+/// Assembler for a freshly parsed manifest. When the session will
+/// publish per-stage reconstructions (a runtime is bound and the policy
+/// isn't final-only), Eq. 5 is folded into fragment absorption so the
+/// stage-boundary reconstruct inside [`publish_stage`] is bookkeeping,
+/// not a full dequant pass. `FinalOnly` reconstructs exactly once, so
+/// eager per-stage dequant would be pure wasted work there.
+fn new_assembler(m: PnetManifest, publishes: bool, policy: InferencePolicy) -> Assembler {
+    let mut asm = Assembler::new(m);
+    asm.set_eager_dequant(publishes && policy != InferencePolicy::FinalOnly);
+    asm
+}
+
 fn should_infer(policy: InferencePolicy, done_stage: usize, asm: &Assembler) -> bool {
     match policy {
         InferencePolicy::EveryStage => true,
@@ -861,7 +874,9 @@ fn replay_container(
     let mut asm: Option<Assembler> = None;
     for ev in parser.feed(bytes)? {
         match ev {
-            ParserEvent::Manifest(m) => asm = Some(Assembler::new(*m)),
+            ParserEvent::Manifest(m) => {
+                asm = Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy))
+            }
             ParserEvent::Fragment {
                 stage,
                 tensor,
@@ -907,7 +922,9 @@ fn warm_start(
     let mut asm: Option<Assembler> = None;
     for ev in events {
         match ev {
-            ParserEvent::Manifest(m) => asm = Some(Assembler::new(*m)),
+            ParserEvent::Manifest(m) => {
+                asm = Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy))
+            }
             ParserEvent::Fragment {
                 stage,
                 tensor,
@@ -1047,7 +1064,7 @@ fn drive_single(
                 WireItem::Resumed { stage } => ctx.emit_resumed(stage, ResumeSource::Reconnect),
                 WireItem::Event(TimedEvent { t, event }) => match event {
                     ParserEvent::Manifest(m) => {
-                        asm_opt = Some(Assembler::new(*m));
+                        asm_opt = Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy));
                         Ok(())
                     }
                     ParserEvent::Fragment {
@@ -1103,7 +1120,8 @@ fn drive_single(
                             }
                             Some(WireItem::Event(TimedEvent { t, event })) => match event {
                                 ParserEvent::Manifest(m) => {
-                                    asm_opt = Some(Assembler::new(*m));
+                                    asm_opt =
+                                        Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy));
                                 }
                                 ParserEvent::Fragment {
                                     stage,
@@ -1259,7 +1277,8 @@ fn drive_multiplex(
         for ev in events {
             match ev {
                 ParserEvent::Manifest(man) => {
-                    assemblers.insert(req.model.clone(), Assembler::new(*man));
+                    let publishes = approx_map.contains_key(&req.model);
+                    assemblers.insert(req.model.clone(), new_assembler(*man, publishes, policy));
                 }
                 ParserEvent::Fragment {
                     stage,

@@ -144,11 +144,16 @@ fn batch_loop(
 ) {
     let session = model.session().clone();
     let input_numel = session.manifest().input_numel();
+    // whole batches go to the backend as one execute; the image panel is
+    // preallocated once and reused — no per-batch allocation churn
+    let mut images: Vec<f32> = Vec::with_capacity(config.max_batch * input_numel);
+    let mut batch: Vec<Request> = Vec::with_capacity(config.max_batch);
     loop {
         // Block for the first request of the batch.
         let Some(first) = queue.pop() else { break };
         let deadline = Instant::now() + config.max_delay;
-        let mut batch = vec![first];
+        batch.clear();
+        batch.push(first);
         while batch.len() < config.max_batch {
             match queue.try_pop() {
                 Some(r) => batch.push(r),
@@ -163,14 +168,14 @@ fn batch_loop(
 
         let snap = model.snapshot();
         let n = batch.len();
-        let mut images = vec![0f32; n * input_numel];
-        for (i, r) in batch.iter().enumerate() {
-            images[i * input_numel..(i + 1) * input_numel].copy_from_slice(&r.image);
+        images.clear();
+        for r in batch.iter() {
+            images.extend_from_slice(&r.image);
         }
         let result = session.infer(&images, n, &snap.flat);
         match result {
             Ok(out) => {
-                for (i, req) in batch.into_iter().enumerate() {
+                for (i, req) in batch.drain(..).enumerate() {
                     let latency = req.enqueued.elapsed();
                     stats.lock().unwrap().record(latency.as_secs_f64());
                     let _ = req.reply.send(InferReply {
@@ -183,7 +188,7 @@ fn batch_loop(
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for req in batch {
+                for req in batch.drain(..) {
                     let latency = req.enqueued.elapsed();
                     let _ = req.reply.send(InferReply {
                         output: Err(anyhow::anyhow!("{msg}")),

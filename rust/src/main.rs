@@ -46,18 +46,21 @@ fn usage() -> ! {
            inspect --file FILE\n  \
            serve   [--config FILE] [--addr 127.0.0.1:7070] [--speed-mbps F] [--backend B]\n          \
                    [--workers N] [--max-conns N] [--shed-policy reject|queue:MS|degrade:K]\n          \
-                   [--log-interval SECS]\n  \
+                   [--log-interval SECS] [--threads N]\n  \
            fetch   --addr HOST:PORT --model NAME [--serial] [--speed-mbps F] [--backend B]\n          \
-                   [--resume-from-cache] [--cache-dir DIR]\n  \
+                   [--resume-from-cache] [--cache-dir DIR] [--threads N]\n  \
            fleet   [--addr HOST:PORT --model NAME] [--clients 100] [--cohorts SPEC]\n          \
                    [--workers 4] [--max-conns N] [--shed-policy P] [--ramp-ms 250]\n          \
                    [--out FILE] [--download-only]\n          \
                    (no --addr: self-hosts a reactor over fixture models;\n          \
                     SPEC = name:count:speed_mbps[:flaky],... with speed 'max' = unshaped)\n  \
            eval    --model NAME [--n 256] [--backend B]\n  \
-           study   [--users 29] [--seed 2021] [--backend B]\n\
-         backends (B): reference (default, pure Rust) | pjrt (needs the\n\
-         `pjrt` build feature + HLO artifacts); also via PROGNET_BACKEND"
+           study   [--users 29] [--seed 2021] [--backend B] [--threads N]\n\
+         backends (B): reference (default, pure Rust, batched) |\n\
+         reference-scalar (per-sample oracle) | pjrt (needs the `pjrt`\n\
+         build feature + HLO artifacts); also via PROGNET_BACKEND.\n\
+         --threads N sizes the runtime's batch worker pool (0 = auto\n\
+         from available parallelism); also via PROGNET_THREADS"
     );
     std::process::exit(2);
 }
@@ -69,6 +72,15 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
         Some(name) => Engine::named(name),
         None => Engine::from_env(),
     }
+}
+
+/// Apply `--threads` (0 = auto) to the runtime. Must run before any
+/// engine is constructed — backends snapshot the count at build time.
+fn apply_threads(args: &Args) -> Result<()> {
+    if let Some(t) = args.get("threads") {
+        prognet::runtime::set_threads(t.parse()?);
+    }
+    Ok(())
 }
 
 fn run() -> Result<()> {
@@ -152,6 +164,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let file_cfg = prognet::util::config::ServeFileConfig::resolve(args)?;
+    if let Some(t) = file_cfg.threads {
+        prognet::runtime::set_threads(t);
+    }
     // validated here so a typo fails at startup; a co-located coordinator
     // (serve_e2e-style deployments) executes on this backend
     let engine = engine_from_args(args)?;
@@ -312,6 +327,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     let addr: std::net::SocketAddr = args.require("addr")?.parse()?;
     let model = args.require("model")?;
     let n = args.get_usize("n", 4)?;
+    apply_threads(args)?;
     let engine = engine_from_args(args)?;
     let reg = Registry::open_default()?;
     let manifest = reg.get(model)?;
@@ -410,9 +426,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_study(args: &Args) -> Result<()> {
-    // study is a timing simulation, but it accepts --backend like the
-    // other commands so scripted sweeps can pass one set of flags; the
-    // chosen backend is echoed with the results
+    // study is a timing simulation, but it accepts --backend/--threads
+    // like the other commands so scripted sweeps can pass one set of
+    // flags; the chosen backend is echoed with the results
+    apply_threads(args)?;
     let engine = engine_from_args(args)?;
     let cfg = StudyConfig {
         users_per_group: args.get_usize("users", 29)?,

@@ -13,12 +13,24 @@ use super::schedule::Schedule;
 
 /// Extract the stage-`m` fraction plane from full codes (Eq. 3), unpacked.
 pub fn split_plane(q: &[u32], sched: &Schedule, stage: usize) -> Vec<u32> {
+    let mut out = vec![0u32; q.len()];
+    split_plane_into(q, sched, stage, &mut out);
+    out
+}
+
+/// [`split_plane`] into caller-provided scratch — the encoder's per-stage
+/// loop reuses one buffer across all stages instead of allocating a
+/// fresh plane each time.
+pub fn split_plane_into(q: &[u32], sched: &Schedule, stage: usize, out: &mut [u32]) {
+    debug_assert_eq!(q.len(), out.len());
     let k = sched.k();
     let w = sched.widths()[stage];
     let cum = sched.cum_bits(stage);
     let mask = (1u32 << w) - 1;
     let shift = k - cum;
-    q.iter().map(|&v| (v >> shift) & mask).collect()
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = (v >> shift) & mask;
+    }
 }
 
 /// Pack an unpacked plane (values < 2^w) into tight MSB-first bytes.
@@ -147,10 +159,16 @@ pub fn unpack_or_into(bytes: &[u8], width: u32, shift: u32, replace: bool, out: 
     }
 }
 
-/// Split + pack all stages of a tensor (the encoder path).
+/// Split + pack all stages of a tensor (the encoder path). One unpacked
+/// scratch plane is reused across every stage; the only allocations are
+/// the packed outputs themselves.
 pub fn encode_planes(q: &[u32], sched: &Schedule) -> Vec<Vec<u8>> {
+    let mut scratch = vec![0u32; q.len()];
     (0..sched.stages())
-        .map(|s| pack_plane(&split_plane(q, sched, s), sched.widths()[s]))
+        .map(|s| {
+            split_plane_into(q, sched, s, &mut scratch);
+            pack_plane(&scratch, sched.widths()[s])
+        })
         .collect()
 }
 

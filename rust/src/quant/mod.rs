@@ -23,7 +23,7 @@ pub mod naive;
 pub mod quantize;
 pub mod schedule;
 
-pub use bitplane::{pack_plane, split_plane, unpack_or_into, unpack_plane};
+pub use bitplane::{pack_plane, split_plane, split_plane_into, unpack_or_into, unpack_plane};
 pub use concat::Accumulator;
 pub use dequant::{dequantize_into, half_correction, DequantParams};
 pub use quantize::{quantize, QuantParams, K};

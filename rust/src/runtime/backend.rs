@@ -90,6 +90,28 @@ pub trait CompiledModel: Send + Sync {
         bail!("this backend has no fused quantized execution path");
     }
 
+    /// [`CompiledModel::execute_quantized`] with a caller-supplied
+    /// monotone `version` identifying the exact contents of `qflat`
+    /// (e.g. [`Assembler::codes_version`]): backends may cache the
+    /// dequantized weight buffer under the `(cum_bits, version)` pair
+    /// and skip Eq. 5 entirely when it repeats — the per-stage upgrade
+    /// path of the reference interpreter does. The caller must bump
+    /// `version` whenever `qflat` changes; a stale version yields stale
+    /// weights. Default: ignore the hint.
+    ///
+    /// [`Assembler::codes_version`]: crate::client::Assembler::codes_version
+    fn execute_quantized_versioned(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+        version: u64,
+    ) -> Result<Vec<f32>> {
+        let _ = version;
+        self.execute_quantized(images, n, qflat, cum_bits)
+    }
+
     /// Whether [`CompiledModel::execute_quantized`] is implemented.
     fn supports_quantized(&self) -> bool {
         false

@@ -46,17 +46,25 @@ impl Engine {
         })
     }
 
-    /// Build an engine from a backend name (`"reference"` or `"pjrt"`).
+    /// Build an engine from a backend name (`"reference"`,
+    /// `"reference-scalar"` or `"pjrt"`).
     pub fn named(name: &str) -> Result<Self> {
         match name {
             "reference" => Ok(Self::reference()),
+            // the per-sample oracle interpreter — A/B baseline for the
+            // batched fast path (benches/runtime.rs)
+            "reference-scalar" => Ok(Self {
+                backend: Arc::new(ReferenceBackend::scalar()),
+            }),
             #[cfg(feature = "pjrt")]
             "pjrt" => Self::pjrt(),
             #[cfg(not(feature = "pjrt"))]
             "pjrt" => anyhow::bail!(
                 "backend 'pjrt' is not compiled in; rebuild with `--features pjrt`"
             ),
-            other => anyhow::bail!("unknown backend '{other}' (have: reference, pjrt)"),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (have: reference, reference-scalar, pjrt)"
+            ),
         }
     }
 
@@ -127,6 +135,10 @@ mod tests {
     #[test]
     fn named_selection() {
         assert_eq!(Engine::named("reference").unwrap().backend_name(), "reference");
+        assert_eq!(
+            Engine::named("reference-scalar").unwrap().backend_name(),
+            "reference-scalar"
+        );
         assert!(Engine::named("tpu-v9").is_err());
         #[cfg(not(feature = "pjrt"))]
         assert!(Engine::named("pjrt").is_err());

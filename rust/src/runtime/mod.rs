@@ -6,9 +6,12 @@
 //!
 //! - [`Backend`] / [`CompiledModel`] — the compile / load-weights /
 //!   execute contract every execution engine implements.
-//! - [`ReferenceBackend`] — pure-Rust naive interpreter (matmul, conv,
-//!   relu, softmax over the dequantized tensors). Dependency-free, runs
-//!   offline on any target; the crate default.
+//! - [`ReferenceBackend`] — pure-Rust interpreter over batched,
+//!   cache-blocked kernels ([`ops`]), sharding large batches across a
+//!   scoped worker pool sized by [`threads`] (`PROGNET_THREADS` /
+//!   `--threads`, 0 = auto). Dependency-free, runs offline on any
+//!   target; the crate default. A `reference-scalar` variant keeps the
+//!   original per-sample loops as a benchmark/test oracle.
 //! - `pjrt` (cargo feature `pjrt`) — the XLA/PJRT CPU client executing
 //!   AOT HLO-text artifacts; interchange is HLO **text** because jax
 //!   ≥ 0.5 emits serialized protos with 64-bit instruction ids that
@@ -38,3 +41,42 @@ pub use backend::{Backend, CompiledModel};
 pub use engine::Engine;
 pub use reference::ReferenceBackend;
 pub use session::{ApproxModel, ApproxOutput, InferOutput, ModelSession, WeightsVersion};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Explicit worker override set by [`set_threads`]; `usize::MAX` = unset.
+static THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Set the process-wide worker count for batched execution (`--threads`
+/// on the CLI, `threads` in the serve config; `0` = auto-size from
+/// available parallelism). Takes precedence over `PROGNET_THREADS`.
+///
+/// Backends snapshot the resolved value when they are constructed, so
+/// call this before building an [`Engine`]. Tests wanting a specific
+/// count should prefer [`ReferenceBackend::with_threads`] over mutating
+/// this process-wide knob.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::SeqCst);
+}
+
+/// Resolved worker count for batched execution, in precedence order:
+/// explicit [`set_threads`] value, else `PROGNET_THREADS`, else one
+/// worker per available core. Never returns 0.
+pub fn threads() -> usize {
+    let explicit = THREADS.load(Ordering::SeqCst);
+    let n = if explicit != usize::MAX {
+        explicit
+    } else {
+        std::env::var("PROGNET_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
+    };
+    if n == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        n
+    }
+}

@@ -1,18 +1,190 @@
-//! Naive tensor primitives for the reference backend.
+//! Tensor primitives for the reference backend: batched, cache-blocked
+//! fast-path kernels plus the original scalar loops kept as oracles.
 //!
-//! Straightforward, allocation-light loops — the point is a correct,
-//! dependency-free executor on any device, not peak throughput. Layouts
-//! match the build-time JAX models (`python/compile/model.py`): activations
-//! are NHWC, convolution weights are HWIO `[3, 3, cin, cout]`, dense
-//! weights are `[cin, cout]`.
+//! Layouts match the build-time JAX models (`python/compile/model.py`):
+//! activations are NHWC, convolution weights are HWIO `[3, 3, cin, cout]`,
+//! dense weights are `[cin, cout]`, all row-major.
+//!
+//! # Blocked-kernel layout
+//!
+//! The hot path is [`matmul_bias_relu`]: `Y[n, cout] = X[n, cin] @
+//! W[cin, cout] (+ b)`, built around an `MR × NR` (4 × 16) register
+//! micro-kernel. Each weight row `W[i, j..j+NR]` is streamed from
+//! memory **once per row block** and feeds four accumulator rows that
+//! live in vector registers across the whole `cin` reduction — the
+//! inner loop is a branch-free, bounds-check-free chain of mul-adds the
+//! compiler auto-vectorizes.
+//! Convolution rides the same kernel: [`im2col3x3`] scatters each NHWC
+//! sample into 3×3-patch rows (`(ky, kx, ci)` order — exactly the HWIO
+//! weight layout), turning `conv3x3 + bias + ReLU` into one
+//! `[n·h·w, 9·cin] @ [9·cin, cout]` matmul.
+//!
+//! Accumulation order over the reduction dimension is identical between
+//! the fast kernels and the scalar oracles ([`dense`],
+//! [`conv3x3_same_bias_relu`]), so their outputs are bit-equal — the
+//! equivalence tests in `tests/runtime_fastpath.rs` assert exact
+//! equality, not tolerances.
 
 // The convolution takes every dimension explicitly rather than a shape
 // struct — it mirrors the JAX op signature it reimplements.
 #![allow(clippy::too_many_arguments)]
 
+/// Batch rows per register tile of [`matmul_bias_relu`].
+const MR: usize = 4;
+/// Output columns per register tile: `MR × NR` f32 accumulators live in
+/// vector registers across the whole `cin` reduction.
+const NR: usize = 16;
+
+/// Batched `Y = X @ W (+ b)` with optionally fused ReLU.
+///
+/// `x` is `[n, cin]` row-major, `w` is `[cin, cout]` row-major, `b` is
+/// `cout` floats (or empty for a bias-free layer); writes `[n, cout]`
+/// into `out`. The core is an `MR × NR` register micro-kernel: each
+/// weight row is streamed from memory once per `MR` batch rows, and the
+/// accumulator tile stays in registers across the whole reduction —
+/// fixed-size arrays keep the inner loop free of bounds checks so it
+/// auto-vectorizes. Ragged row/column remainders fall back to plain
+/// accumulation. Bit-equal to running [`dense`] (+ [`relu`]) per row:
+/// both accumulate over `cin` in ascending order.
+pub fn matmul_bias_relu(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    cin: usize,
+    cout: usize,
+    fuse_relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), n * cin);
+    debug_assert_eq!(w.len(), cin * cout);
+    debug_assert_eq!(out.len(), n * cout);
+    debug_assert!(b.is_empty() || b.len() == cout);
+    for row in out.chunks_exact_mut(cout) {
+        if b.is_empty() {
+            row.fill(0.0);
+        } else {
+            row.copy_from_slice(b);
+        }
+    }
+    let jtiles = cout / NR * NR;
+    let mut r = 0;
+    while r + MR <= n {
+        let xrows: [&[f32]; MR] = [
+            &x[r * cin..(r + 1) * cin],
+            &x[(r + 1) * cin..(r + 2) * cin],
+            &x[(r + 2) * cin..(r + 3) * cin],
+            &x[(r + 3) * cin..(r + 4) * cin],
+        ];
+        // MR × NR register tile: load (bias-initialised), reduce, store
+        let mut j0 = 0;
+        while j0 < jtiles {
+            let mut acc = [[0f32; NR]; MR];
+            for (rr, a) in acc.iter_mut().enumerate() {
+                a.copy_from_slice(&out[(r + rr) * cout + j0..][..NR]);
+            }
+            for i in 0..cin {
+                let wr: &[f32; NR] = w[i * cout + j0..i * cout + j0 + NR]
+                    .try_into()
+                    .expect("NR-wide tile");
+                for (rr, a) in acc.iter_mut().enumerate() {
+                    let xv = xrows[rr][i];
+                    for c in 0..NR {
+                        a[c] += xv * wr[c];
+                    }
+                }
+            }
+            for (rr, a) in acc.iter().enumerate() {
+                out[(r + rr) * cout + j0..][..NR].copy_from_slice(a);
+            }
+            j0 += NR;
+        }
+        // ragged column tail for these MR rows
+        if jtiles < cout {
+            let (o0, rest) = out[r * cout..(r + MR) * cout].split_at_mut(cout);
+            let (o1, rest) = rest.split_at_mut(cout);
+            let (o2, o3) = rest.split_at_mut(cout);
+            for i in 0..cin {
+                let (x0, x1, x2, x3) = (xrows[0][i], xrows[1][i], xrows[2][i], xrows[3][i]);
+                let wrow = &w[i * cout + jtiles..(i + 1) * cout];
+                for ((((&wv, v0), v1), v2), v3) in wrow
+                    .iter()
+                    .zip(o0[jtiles..].iter_mut())
+                    .zip(o1[jtiles..].iter_mut())
+                    .zip(o2[jtiles..].iter_mut())
+                    .zip(o3[jtiles..].iter_mut())
+                {
+                    *v0 += x0 * wv;
+                    *v1 += x1 * wv;
+                    *v2 += x2 * wv;
+                    *v3 += x3 * wv;
+                }
+            }
+        }
+        r += MR;
+    }
+    // ragged tail rows (n % MR): plain one-row accumulation
+    for r in r..n {
+        let o = &mut out[r * cout..(r + 1) * cout];
+        let xr = &x[r * cin..(r + 1) * cin];
+        for (i, &xi) in xr.iter().enumerate() {
+            let wrow = &w[i * cout..(i + 1) * cout];
+            for (a, &wv) in o.iter_mut().zip(wrow) {
+                *a += xi * wv;
+            }
+        }
+    }
+    if fuse_relu {
+        relu(out);
+    }
+}
+
+/// Scatter one NHWC sample into 3×3-patch rows ("im2col").
+///
+/// Row `oy*w + ox` of `col` holds the `9*cin` inputs under the kernel
+/// window centred at `(oy, ox)`, in `(ky, kx, ci)` order — the same
+/// order HWIO weights `[3, 3, cin, cout]` are laid out — with zeros
+/// where SAME padding falls outside the image. `x` is `[h, w, cin]`,
+/// `col` must be `h*w*9*cin` long. A conv layer is then one
+/// [`matmul_bias_relu`] over the patch rows.
+pub fn im2col3x3(x: &[f32], h: usize, w: usize, cin: usize, col: &mut [f32]) {
+    let patch = 9 * cin;
+    debug_assert_eq!(x.len(), h * w * cin);
+    debug_assert_eq!(col.len(), h * w * patch);
+    for oy in 0..h {
+        for ky in 0..3usize {
+            let iy = oy as isize + ky as isize - 1;
+            if iy < 0 || iy >= h as isize {
+                // the whole ky tap row is padding for every ox
+                for ox in 0..w {
+                    col[(oy * w + ox) * patch + ky * 3 * cin..][..3 * cin].fill(0.0);
+                }
+                continue;
+            }
+            let xrow = &x[(iy as usize) * w * cin..][..w * cin];
+            for ox in 0..w {
+                let dst = &mut col[(oy * w + ox) * patch + ky * 3 * cin..][..3 * cin];
+                for kx in 0..3usize {
+                    let ix = ox as isize + kx as isize - 1;
+                    let d = &mut dst[kx * cin..(kx + 1) * cin];
+                    if ix < 0 || ix >= w as isize {
+                        d.fill(0.0);
+                    } else {
+                        d.copy_from_slice(&xrow[(ix as usize) * cin..][..cin]);
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// `y = x @ w + b` for one sample: `x` is `cin` floats, `w` is
 /// `[cin, cout]` row-major, `b` is `cout` floats (or empty for a bias-free
 /// layer). Writes `cout` floats into `out`.
+///
+/// Scalar oracle for [`matmul_bias_relu`] — kept (and tested against the
+/// batched kernel) rather than deleted, and still used for 1-sample
+/// remainders where tiling buys nothing.
 pub fn dense(x: &[f32], w: &[f32], b: &[f32], cin: usize, cout: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), cin);
     debug_assert_eq!(w.len(), cin * cout);
@@ -38,6 +210,9 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], cin: usize, cout: usize, out: &mut
 /// `x` is `[h, w, cin]`, `wgt` is HWIO `[3, 3, cin, cout]`, `b` is `cout`
 /// floats; writes `[h, w, cout]` into `out`. Mirrors the JAX
 /// `conv_general_dilated(..., "SAME") + relu(x + b)` block.
+///
+/// Scalar oracle for the [`im2col3x3`] + [`matmul_bias_relu`] fast path;
+/// accumulation order over `(ky, kx, ci)` matches it exactly.
 pub fn conv3x3_same_bias_relu(
     x: &[f32],
     wgt: &[f32],
@@ -212,6 +387,73 @@ mod tests {
         let mut big = [1000.0f32, 1000.0];
         softmax(&mut big);
         assert!((big[0] - 0.5).abs() < 1e-6);
+    }
+
+    fn seeded(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| r.normal_ms(0.0, 0.6) as f32).collect()
+    }
+
+    #[test]
+    fn matmul_matches_dense_oracle_exactly() {
+        // ragged n exercises both the MR-row tile and the tail path;
+        // cout values straddle the NR=16 column tile (8 = tail only,
+        // 32 = tiles only, 1100 = 68 tiles + ragged 12)
+        for (n, cin, cout) in
+            [(1usize, 5usize, 3usize), (4, 8, 8), (5, 6, 32), (7, 16, 10), (9, 3, 1100)]
+        {
+            let x = seeded(n as u64 * 31 + cin as u64, n * cin);
+            let w = seeded(cout as u64, cin * cout);
+            let b = seeded(7, cout);
+            let mut fast = vec![0f32; n * cout];
+            matmul_bias_relu(&x, &w, &b, n, cin, cout, false, &mut fast);
+            let mut slow = vec![0f32; cout];
+            for r in 0..n {
+                dense(&x[r * cin..(r + 1) * cin], &w, &b, cin, cout, &mut slow);
+                assert_eq!(&fast[r * cout..(r + 1) * cout], &slow[..], "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_fused_relu_and_empty_bias() {
+        let (n, cin, cout) = (6, 4, 5);
+        let x = seeded(1, n * cin);
+        let w = seeded(2, cin * cout);
+        let mut with = vec![0f32; n * cout];
+        matmul_bias_relu(&x, &w, &[], n, cin, cout, true, &mut with);
+        let mut plain = vec![0f32; n * cout];
+        matmul_bias_relu(&x, &w, &[], n, cin, cout, false, &mut plain);
+        relu(&mut plain);
+        assert_eq!(with, plain);
+        assert!(with.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn im2col_matmul_matches_conv_oracle_exactly() {
+        for (h, w, cin, cout) in [(4usize, 4usize, 1usize, 3usize), (5, 3, 2, 4), (6, 6, 3, 2)] {
+            let x = seeded(h as u64 * 100 + w as u64, h * w * cin);
+            let wgt = seeded(3, 9 * cin * cout);
+            let b = seeded(4, cout);
+            let mut oracle = vec![0f32; h * w * cout];
+            conv3x3_same_bias_relu(&x, &wgt, &b, h, w, cin, cout, &mut oracle);
+            let mut col = vec![0f32; h * w * 9 * cin];
+            im2col3x3(&x, h, w, cin, &mut col);
+            let mut fast = vec![0f32; h * w * cout];
+            matmul_bias_relu(&col, &wgt, &b, h * w, 9 * cin, cout, true, &mut fast);
+            assert_eq!(fast, oracle, "{h}x{w} cin={cin} cout={cout}");
+        }
+    }
+
+    #[test]
+    fn im2col_center_patch_is_neighbourhood() {
+        // 3x3 single-channel image: the center output row is the whole
+        // image in scan order; the corner row has padding zeros.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut col = vec![f32::NAN; 9 * 9];
+        im2col3x3(&x, 3, 3, 1, &mut col);
+        assert_eq!(&col[4 * 9..5 * 9], &x[..]);
+        assert_eq!(&col[..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]);
     }
 
     #[test]

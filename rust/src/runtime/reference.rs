@@ -1,4 +1,4 @@
-//! The pure-Rust reference backend: a naive interpreter over the
+//! The pure-Rust reference backend: a batched interpreter over the
 //! dequantized tensors.
 //!
 //! The backend derives the layer graph from the manifest's tensor list —
@@ -14,9 +14,24 @@
 //!   through a sigmoid, exactly like the JAX head.
 //!
 //! This executes anywhere `rustc` targets — no XLA, no artifacts — which
-//! is what makes mid-download inference testable offline end to end. It
-//! is a correctness baseline, not a speed demon; the feature-gated `pjrt`
-//! backend exists for compiled execution.
+//! is what makes mid-download inference testable offline end to end.
+//!
+//! # Fast path
+//!
+//! Execution runs whole batches through the blocked kernels in
+//! [`ops`]: dense layers are one register-tiled matmul over all samples,
+//! conv blocks are im2col + the same matmul, and activations ping-pong
+//! between two preallocated scratch buffers drawn from a
+//! [`BufferPool`] — no per-sample or per-layer allocation. Batches of
+//! `≥ 8` samples are sharded across a scoped worker pool of std threads
+//! sized by [`super::threads`] (`PROGNET_THREADS` / `--threads`). The
+//! fused quantized path keeps a per-plan dequantized-weight cache keyed
+//! by `(cum_bits, codes_version)` so repeated calls against the same
+//! stage skip Eq. 5 entirely.
+//!
+//! The pre-batched per-sample interpreter survives as the
+//! `reference-scalar` backend ([`ReferenceBackend::scalar`]) — the
+//! benchmark baseline and bit-exactness oracle for the batched kernels.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -26,7 +41,8 @@ use anyhow::{bail, Context, Result};
 use super::backend::{Backend, CompiledModel};
 use super::ops;
 use crate::models::{ModelManifest, TensorInfo};
-use crate::quant::{dequantize_into, DequantParams};
+use crate::quant::{dequantize_into, DequantParams, QuantParams};
+use crate::util::pool::BufferPool;
 
 /// A contiguous slice of the flat weight vector.
 #[derive(Debug, Clone, Copy)]
@@ -79,6 +95,13 @@ impl Act {
     }
 }
 
+/// Dequantized-weight cache of the fused quantized path: one buffer per
+/// plan, valid while the `(cum_bits, codes_version)` key repeats.
+struct QCache {
+    key: Option<(u32, u64)>,
+    buf: Arc<Vec<f32>>,
+}
+
 /// The compiled (planned) form of a model for the interpreter.
 struct RefModel {
     layers: Vec<Layer>,
@@ -91,11 +114,23 @@ struct RefModel {
     tensors: Vec<TensorInfo>,
     k: u32,
     param_count: usize,
+    /// per-sample capacity each ping-pong activation buffer needs (max
+    /// over the input, every conv output and every layer output)
+    buf_numel: usize,
+    /// per-sample im2col scratch capacity (largest conv layer; 0 for
+    /// pure-dense models)
+    col_numel: usize,
+    /// worker threads for batch sharding (resolved at compile time)
+    threads: usize,
+    /// run the pre-batched per-sample oracle path instead
+    scalar: bool,
+    scratch: BufferPool<f32>,
+    qcache: Mutex<QCache>,
 }
 
 /// Build the layer plan from a manifest, validating that tensor shapes
 /// chain into a well-formed forward pass.
-fn plan(manifest: &ModelManifest) -> Result<RefModel> {
+fn plan(manifest: &ModelManifest, threads: usize, scalar: bool) -> Result<RefModel> {
     let mut act = match manifest.input_shape.len() {
         3 => Act::Spatial {
             h: manifest.input_shape[0],
@@ -206,6 +241,26 @@ fn plan(manifest: &ModelManifest) -> Result<RefModel> {
             manifest.output_dim()
         );
     }
+    // scratch sizing: both ping-pong buffers must hold any activation AND
+    // any pre-pool conv output; the im2col panel must hold the largest
+    // conv layer's patch rows
+    let mut buf_numel = input_numel;
+    let mut col_numel = 0usize;
+    for layer in &layers {
+        match *layer {
+            Layer::ConvBlock {
+                h,
+                wd,
+                cin,
+                cout,
+                ..
+            } => {
+                buf_numel = buf_numel.max(h * wd * cout);
+                col_numel = col_numel.max(h * wd * 9 * cin);
+            }
+            Layer::Dense { cout, .. } => buf_numel = buf_numel.max(cout),
+        }
+    }
     Ok(RefModel {
         layers,
         input_numel,
@@ -214,6 +269,15 @@ fn plan(manifest: &ModelManifest) -> Result<RefModel> {
         tensors: manifest.tensors.clone(),
         k: manifest.k,
         param_count: manifest.param_count,
+        buf_numel,
+        col_numel,
+        threads: threads.max(1),
+        scalar,
+        scratch: BufferPool::default(),
+        qcache: Mutex::new(QCache {
+            key: None,
+            buf: Arc::new(Vec::new()),
+        }),
     })
 }
 
@@ -271,14 +335,202 @@ impl RefModel {
         }
         act
     }
+
+    /// Run `n` samples as one batch through the blocked kernels, writing
+    /// `n * output_dim` floats into `out`. Activations live in two
+    /// pooled ping-pong buffers; the invariant is "current activation in
+    /// `ping`" (conv blocks pool back into `ping`, dense layers swap).
+    fn forward_batch(&self, images: &[f32], n: usize, weights: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(images.len(), n * self.input_numel);
+        debug_assert_eq!(out.len(), n * self.output_dim);
+        let mut ping = self.scratch.take(n * self.buf_numel);
+        let mut pong = self.scratch.take(n * self.buf_numel);
+        let mut col = self.scratch.take(n * self.col_numel);
+        ping[..images.len()].copy_from_slice(images);
+        let mut cur_numel = self.input_numel;
+        for layer in &self.layers {
+            match *layer {
+                Layer::ConvBlock {
+                    w,
+                    b,
+                    h,
+                    wd,
+                    cin,
+                    cout,
+                } => {
+                    let patch = 9 * cin;
+                    let pixels = h * wd;
+                    // whole-batch im2col, then ONE matmul over n·h·w rows
+                    for s in 0..n {
+                        ops::im2col3x3(
+                            &ping[s * cur_numel..][..cur_numel],
+                            h,
+                            wd,
+                            cin,
+                            &mut col[s * pixels * patch..][..pixels * patch],
+                        );
+                    }
+                    ops::matmul_bias_relu(
+                        &col[..n * pixels * patch],
+                        w.of(weights),
+                        b.of(weights),
+                        n * pixels,
+                        patch,
+                        cout,
+                        true,
+                        &mut pong[..n * pixels * cout],
+                    );
+                    // pool back into ping: sample s writes below its own
+                    // (already-consumed) input region, so no aliasing
+                    let pooled = (h / 2) * (wd / 2) * cout;
+                    for s in 0..n {
+                        ops::maxpool2x2(
+                            &pong[s * pixels * cout..][..pixels * cout],
+                            h,
+                            wd,
+                            cout,
+                            &mut ping[s * pooled..][..pooled],
+                        );
+                    }
+                    cur_numel = pooled;
+                }
+                Layer::Dense {
+                    w,
+                    b,
+                    cin,
+                    cout,
+                    relu,
+                } => {
+                    debug_assert_eq!(cin, cur_numel);
+                    let bias = b.map(|s| s.of(weights)).unwrap_or(&[]);
+                    ops::matmul_bias_relu(
+                        &ping[..n * cin],
+                        w.of(weights),
+                        bias,
+                        n,
+                        cin,
+                        cout,
+                        relu,
+                        &mut pong[..n * cout],
+                    );
+                    std::mem::swap(&mut ping, &mut pong);
+                    cur_numel = cout;
+                }
+            }
+        }
+        out.copy_from_slice(&ping[..n * self.output_dim]);
+        if let Some(from) = self.sigmoid_from {
+            for row in out.chunks_exact_mut(self.output_dim) {
+                for v in &mut row[from..] {
+                    *v = ops::sigmoid(*v);
+                }
+            }
+        }
+        self.scratch.put(ping);
+        self.scratch.put(pong);
+        self.scratch.put(col);
+    }
+
+    /// Contiguous shards for a batch of `n`: 1 below the sharding
+    /// threshold, else capped so every worker gets ≥ 4 samples.
+    fn shard_count(&self, n: usize) -> usize {
+        if self.threads <= 1 || n < 8 {
+            1
+        } else {
+            // n ≥ 8 ⇒ n/4 ≥ 2, so this never degenerates to 0 shards
+            self.threads.min(n / 4)
+        }
+    }
+
+    /// Eq. 5 over all tensors into the plan's cached weight buffer.
+    ///
+    /// With a `(cum_bits, version)` key that matches the cache, the
+    /// buffer is reused as-is (zero dequant work). On a miss the dequant
+    /// runs *outside* the cache lock — concurrent callers proceed in
+    /// parallel, exactly like the old per-call allocation path — and the
+    /// retired allocation is recycled whenever no reader still holds it.
+    /// Unversioned calls never evict a live versioned entry.
+    fn dequant_weights(
+        &self,
+        qflat: &[u32],
+        cum_bits: u32,
+        key: Option<(u32, u64)>,
+    ) -> Arc<Vec<f32>> {
+        // steal the cached allocation only when this call will store its
+        // result back; an unversioned call racing a versioned entry must
+        // leave the entry (key AND buffer) untouched
+        let store;
+        let mut buf = {
+            let mut cache = self.qcache.lock().unwrap();
+            if key.is_some() && cache.key == key && cache.buf.len() == self.param_count {
+                return cache.buf.clone();
+            }
+            store = key.is_some() || cache.key.is_none();
+            if store {
+                cache.key = None; // entry is being rebuilt
+                let old = std::mem::replace(&mut cache.buf, Arc::new(Vec::new()));
+                Arc::try_unwrap(old).unwrap_or_default()
+            } else {
+                Vec::new()
+            }
+        };
+        buf.resize(self.param_count, 0.0);
+        for t in &self.tensors {
+            let qp = QuantParams {
+                min: t.min,
+                max: t.max,
+                k: self.k,
+            };
+            dequantize_into(
+                &qflat[t.offset..t.offset + t.numel],
+                DequantParams::new(&qp, cum_bits),
+                &mut buf[t.offset..t.offset + t.numel],
+            );
+        }
+        let arc = Arc::new(buf);
+        if store {
+            let mut cache = self.qcache.lock().unwrap();
+            // re-check under the lock: an unversioned result must not
+            // clobber a versioned entry stored by a concurrent caller
+            // between our two critical sections
+            if key.is_some() || cache.key.is_none() {
+                cache.buf = arc.clone();
+                cache.key = key;
+            }
+        }
+        arc
+    }
 }
 
 impl CompiledModel for RefModel {
     fn execute(&self, images: &[f32], n: usize, weights: &[f32]) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(n * self.output_dim);
-        for i in 0..n {
-            let image = &images[i * self.input_numel..(i + 1) * self.input_numel];
-            out.extend_from_slice(&self.forward_one(image, weights));
+        if self.scalar {
+            // the pre-batched oracle: one sample at a time, per-layer Vecs
+            let mut out = Vec::with_capacity(n * self.output_dim);
+            for i in 0..n {
+                let image = &images[i * self.input_numel..(i + 1) * self.input_numel];
+                out.extend_from_slice(&self.forward_one(image, weights));
+            }
+            return Ok(out);
+        }
+        let mut out = vec![0f32; n * self.output_dim];
+        let shards = self.shard_count(n);
+        if shards <= 1 {
+            self.forward_batch(images, n, weights, &mut out);
+        } else {
+            let per = (n + shards - 1) / shards;
+            std::thread::scope(|scope| {
+                let mut rest = &mut out[..];
+                let mut off = 0;
+                while off < n {
+                    let m = per.min(n - off);
+                    let (o, tail) = rest.split_at_mut(m * self.output_dim);
+                    rest = tail;
+                    let img = &images[off * self.input_numel..(off + m) * self.input_numel];
+                    scope.spawn(move || self.forward_batch(img, m, weights, o));
+                    off += m;
+                }
+            });
         }
         Ok(out)
     }
@@ -292,20 +544,23 @@ impl CompiledModel for RefModel {
     ) -> Result<Vec<f32>> {
         anyhow::ensure!(qflat.len() == self.param_count, "qflat size mismatch");
         // Eq. 5 per tensor, then the plain float path — semantically the
-        // same fusion the PJRT qfwd executable performs in-kernel.
-        let mut weights = vec![0f32; self.param_count];
-        for t in &self.tensors {
-            let qp = crate::quant::QuantParams {
-                min: t.min,
-                max: t.max,
-                k: self.k,
-            };
-            dequantize_into(
-                &qflat[t.offset..t.offset + t.numel],
-                DequantParams::new(&qp, cum_bits),
-                &mut weights[t.offset..t.offset + t.numel],
-            );
-        }
+        // same fusion the PJRT qfwd executable performs in-kernel. The
+        // buffer allocation is recycled, but without a version key the
+        // dequant itself always re-runs.
+        let weights = self.dequant_weights(qflat, cum_bits, None);
+        self.execute(images, n, &weights)
+    }
+
+    fn execute_quantized_versioned(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+        version: u64,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(qflat.len() == self.param_count, "qflat size mismatch");
+        let weights = self.dequant_weights(qflat, cum_bits, Some((cum_bits, version)));
         self.execute(images, n, &weights)
     }
 
@@ -322,15 +577,48 @@ impl CompiledModel for RefModel {
 /// a model re-published under the same name with different tensors (new
 /// shapes or re-quantized min/max) never reuses a stale plan, and
 /// superseded plans don't accumulate.
-#[derive(Default)]
+///
+/// [`ReferenceBackend::new`] builds the batched fast path with the
+/// process-wide worker count ([`super::threads`]);
+/// [`ReferenceBackend::with_threads`] pins an explicit count (tests,
+/// benches); [`ReferenceBackend::scalar`] builds the per-sample oracle
+/// interpreter (`--backend reference-scalar`).
 pub struct ReferenceBackend {
     cache: Mutex<HashMap<String, (u64, Arc<RefModel>)>>,
+    threads: usize,
+    scalar: bool,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ReferenceBackend {
-    /// Create an empty backend (no global state, cheap).
+    /// The batched fast path, worker count snapshotted from
+    /// [`super::threads`] (no other global state, cheap).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_threads(super::threads())
+    }
+
+    /// The batched fast path with an explicit worker count (`0` = 1).
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            cache: Mutex::new(HashMap::new()),
+            threads: threads.max(1),
+            scalar: false,
+        }
+    }
+
+    /// The pre-batched per-sample interpreter — the benchmark baseline
+    /// and bit-exactness oracle for the batched kernels.
+    pub fn scalar() -> Self {
+        Self {
+            cache: Mutex::new(HashMap::new()),
+            threads: 1,
+            scalar: true,
+        }
     }
 }
 
@@ -355,7 +643,11 @@ fn fingerprint(manifest: &ModelManifest) -> u64 {
 
 impl Backend for ReferenceBackend {
     fn name(&self) -> &'static str {
-        "reference"
+        if self.scalar {
+            "reference-scalar"
+        } else {
+            "reference"
+        }
     }
 
     fn compile(
@@ -371,7 +663,7 @@ impl Backend for ReferenceBackend {
                 return Ok(shared);
             }
         }
-        let model = Arc::new(plan(manifest)?);
+        let model = Arc::new(plan(manifest, self.threads, self.scalar)?);
         cache.insert(manifest.name.clone(), (fp, model.clone()));
         Ok(model)
     }
@@ -475,6 +767,67 @@ mod tests {
         for (a, b) in full.iter().zip(&q16) {
             assert!((a - b).abs() < 1e-2, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn batched_path_matches_scalar_oracle() {
+        let reg = dense_registry("ref-batched");
+        let m = reg.get("dense3").unwrap();
+        let flat = m.load_weights().unwrap();
+        let fast = ReferenceBackend::with_threads(2).compile(m, &[]).unwrap();
+        let slow = ReferenceBackend::scalar().compile(m, &[]).unwrap();
+        for n in [1usize, 3, 4, 7, 8, 33] {
+            let images: Vec<f32> = (0..n * m.input_numel())
+                .map(|i| (i % 11) as f32 * 0.1 - 0.5)
+                .collect();
+            let a = fast.execute(&images, n, &flat).unwrap();
+            let b = slow.execute(&images, n, &flat).unwrap();
+            assert_eq!(a, b, "batch {n}");
+        }
+    }
+
+    #[test]
+    fn scalar_backend_is_selectable_and_named() {
+        let backend = ReferenceBackend::scalar();
+        assert_eq!(backend.name(), "reference-scalar");
+        assert_eq!(ReferenceBackend::with_threads(4).name(), "reference");
+    }
+
+    #[test]
+    fn quantized_versioned_reuses_cached_weights() {
+        use crate::quant::{quantize, QuantParams, K};
+        let reg = dense_registry("ref-qcache");
+        let m = reg.get("dense3").unwrap();
+        let flat = m.load_weights().unwrap();
+        let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+        let mut qflat = vec![0u32; flat.len()];
+        for t in &m.tensors {
+            let seg = &flat[t.offset..t.offset + t.numel];
+            let qp = QuantParams::from_data(seg, K);
+            qflat[t.offset..t.offset + t.numel].copy_from_slice(&quantize(seg, &qp));
+        }
+        let image: Vec<f32> = (0..m.input_numel()).map(|i| i as f32 * 0.1).collect();
+        let plain = compiled.execute_quantized(&image, 1, &qflat, K).unwrap();
+        // same (cum_bits, version) twice: second call serves from cache
+        let v1 = compiled
+            .execute_quantized_versioned(&image, 1, &qflat, K, 7)
+            .unwrap();
+        let v2 = compiled
+            .execute_quantized_versioned(&image, 1, &qflat, K, 7)
+            .unwrap();
+        assert_eq!(plain, v1);
+        assert_eq!(v1, v2);
+        // a new version with mutated codes must invalidate the cache
+        let mut qflat2 = qflat.clone();
+        for v in qflat2.iter_mut() {
+            *v = (*v).wrapping_add(1) & 0xFFFF;
+        }
+        let v3 = compiled
+            .execute_quantized_versioned(&image, 1, &qflat2, K, 8)
+            .unwrap();
+        let direct = compiled.execute_quantized(&image, 1, &qflat2, K).unwrap();
+        assert_eq!(v3, direct);
+        assert_ne!(v1, v3);
     }
 
     #[test]

@@ -138,6 +138,33 @@ impl ModelSession {
         Ok(InferOutput { data, dim })
     }
 
+    /// The fused quantized path with a codes-version hint: backends that
+    /// cache the dequantized weights under `(cum_bits, version)` (the
+    /// reference interpreter) skip Eq. 5 when the pair repeats. Pair it
+    /// with [`Assembler::codes_version`](crate::client::Assembler::codes_version);
+    /// the version must change whenever `qflat` does.
+    pub fn infer_quantized_versioned(
+        &self,
+        images: &[f32],
+        n: usize,
+        qflat: &[u32],
+        cum_bits: u32,
+        version: u64,
+    ) -> Result<InferOutput> {
+        let ind = self.manifest.input_numel();
+        anyhow::ensure!(images.len() == n * ind, "image buffer size mismatch");
+        anyhow::ensure!(
+            qflat.len() == self.manifest.param_count,
+            "qflat size mismatch"
+        );
+        let dim = self.manifest.output_dim();
+        let data = self
+            .model
+            .execute_quantized_versioned(images, n, qflat, cum_bits, version)?;
+        anyhow::ensure!(data.len() == n * dim, "unexpected output size");
+        Ok(InferOutput { data, dim })
+    }
+
     /// Whether the backend compiled a fused quantized path for this model.
     pub fn has_qfwd(&self) -> bool {
         self.model.supports_quantized()

@@ -30,6 +30,23 @@ pub fn write_model_with_weights(
     tensors: &[(&str, &[usize])],
     flat: &[f32],
 ) -> Result<()> {
+    let input_shape: Vec<usize> = match tensors.first() {
+        Some((_, shape)) if shape.len() >= 2 => vec![shape[0]],
+        _ => vec![8],
+    };
+    write_model_spec(models_dir, name, &input_shape, tensors, flat)
+}
+
+/// [`write_model_with_weights`] with an explicit input shape — a spatial
+/// `[h, w, c]` shape makes conv-block fixtures executable on the
+/// reference backend.
+pub fn write_model_spec(
+    models_dir: &Path,
+    name: &str,
+    input_shape: &[usize],
+    tensors: &[(&str, &[usize])],
+    flat: &[f32],
+) -> Result<()> {
     let dir = models_dir.join(name);
     std::fs::create_dir_all(&dir)?;
     let total: usize = tensors
@@ -57,10 +74,6 @@ pub fn write_model_with_weights(
         ]));
         offset += numel;
     }
-    let input_shape: Vec<usize> = match tensors.first() {
-        Some((_, shape)) if shape.len() >= 2 => vec![shape[0]],
-        _ => vec![8],
-    };
     let classes = tensors
         .last()
         .and_then(|(_, shape)| shape.last().copied())
@@ -163,6 +176,31 @@ pub fn executable_models(tag: &str) -> Result<Registry> {
         0x5EED_0003,
     )?;
     write_index(&models_dir, &["dense3"])?;
+    Registry::open(&root)
+}
+
+/// A registry with one executable conv+dense model ("conv2d": input
+/// `[8, 8, 2]` → conv3x3(2→8)+ReLU+pool → `[4, 4, 8]` → dense(128→10)
+/// head), exercising the reference backend's im2col conv path.
+pub fn executable_conv_models(tag: &str) -> Result<Registry> {
+    let root = fixture_root(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    let models_dir = root.join("models");
+    std::fs::create_dir_all(&models_dir)?;
+    let tensors: &[(&str, &[usize])] = &[
+        ("conv1.w", &[3, 3, 2, 8][..]),
+        ("conv1.b", &[8][..]),
+        ("head.w", &[128, 10][..]),
+        ("head.b", &[10][..]),
+    ];
+    let total: usize = tensors
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    let mut rng = Rng::new(0x5EED_0005);
+    let flat: Vec<f32> = (0..total).map(|_| rng.normal_ms(0.0, 0.5) as f32).collect();
+    write_model_spec(&models_dir, "conv2d", &[8, 8, 2], tensors, &flat)?;
+    write_index(&models_dir, &["conv2d"])?;
     Registry::open(&root)
 }
 
@@ -290,6 +328,20 @@ mod tests {
             .infer(eval.image_batch(2), 2, &m.load_weights().unwrap())
             .unwrap();
         assert_eq!(out.n(), 2);
+    }
+
+    #[test]
+    fn conv_fixture_runs_on_reference_backend() {
+        let reg = executable_conv_models("fixture-conv").unwrap();
+        let m = reg.get("conv2d").unwrap();
+        assert_eq!(m.input_numel(), 8 * 8 * 2);
+        assert_eq!(m.classes, 10);
+        let engine = crate::runtime::Engine::reference();
+        let session = crate::runtime::ModelSession::load(&engine, m).unwrap();
+        let flat = m.load_weights().unwrap();
+        let out = session.infer(&[0.3f32; 128 * 3], 3, &flat).unwrap();
+        assert_eq!(out.n(), 3);
+        assert_eq!(out.dim, 10);
     }
 
     #[test]

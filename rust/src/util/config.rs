@@ -30,6 +30,9 @@ pub struct ServeFileConfig {
     pub shed_policy: ShedPolicy,
     /// seconds between live-counter log lines (0 = silent)
     pub log_interval_s: u64,
+    /// runtime worker threads for batched execution (0 = auto from
+    /// available parallelism; None = leave `PROGNET_THREADS` in charge)
+    pub threads: Option<usize>,
 }
 
 impl Default for ServeFileConfig {
@@ -43,6 +46,7 @@ impl Default for ServeFileConfig {
             max_conns: None,
             shed_policy: ShedPolicy::Reject,
             log_interval_s: 30,
+            threads: None,
         }
     }
 }
@@ -84,6 +88,7 @@ impl ServeFileConfig {
                 }
                 "shed_policy" => cfg.shed_policy = ShedPolicy::parse(val.as_str()?)?,
                 "log_interval_s" => cfg.log_interval_s = val.as_usize()? as u64,
+                "threads" => cfg.threads = Some(val.as_usize()?),
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -129,6 +134,9 @@ impl ServeFileConfig {
         if let Some(s) = args.get("log-interval") {
             cfg.log_interval_s = s.parse()?;
         }
+        if let Some(t) = args.get("threads") {
+            cfg.threads = Some(t.parse()?);
+        }
         Ok(cfg)
     }
 }
@@ -169,6 +177,15 @@ mod tests {
         assert_eq!(cfg.schedule.stages(), 4);
         assert_eq!(cfg.preload, vec!["cnn", "mlp"]);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn threads_key_and_cli_override() {
+        let j = Json::parse(r#"{"threads": 4}"#).unwrap();
+        assert_eq!(ServeFileConfig::from_json(&j).unwrap().threads, Some(4));
+        let cfg = ServeFileConfig::resolve(&args(&["--threads", "0"])).unwrap();
+        assert_eq!(cfg.threads, Some(0)); // 0 = auto, still explicit
+        assert_eq!(ServeFileConfig::default().threads, None);
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Fixed-size thread pool + a bounded MPMC channel built on std.
+//! Fixed-size thread pool, a bounded MPMC channel, and a scratch-buffer
+//! pool, all built on std.
 //!
 //! [`BoundedQueue`] is the backpressure primitive between pipeline
 //! stages (session event streams, the concurrent-mode wire queue).
-//! [`ThreadPool`] powered the server's historical thread-per-connection
-//! loop; since the fleet PR the server is a sharded reactor
-//! (`fleet::reactor`) with no per-connection threads, so the pool is
-//! retained only as a general-purpose utility for batch-style callers.
+//! [`BufferPool`] recycles large scratch allocations on compute hot
+//! paths (the reference runtime's activation ping-pong and im2col
+//! buffers). [`ThreadPool`] powered the server's historical
+//! thread-per-connection loop; since the fleet PR the server is a
+//! sharded reactor (`fleet::reactor`) with no per-connection threads, so
+//! the pool is retained only as a general-purpose utility for
+//! batch-style callers.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -113,6 +117,60 @@ impl Drop for ThreadPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// A recycling pool of `Vec<T>` scratch buffers.
+///
+/// Concurrency-safe and cheap: [`BufferPool::take`] hands out a buffer
+/// resized to the requested length (contents unspecified — callers
+/// overwrite), [`BufferPool::put`] returns it for reuse. Bounds how many
+/// idle buffers it retains so a one-off huge batch doesn't pin memory
+/// forever.
+pub struct BufferPool<T> {
+    free: Mutex<Vec<Vec<T>>>,
+    max_idle: usize,
+}
+
+impl<T: Copy + Default> BufferPool<T> {
+    /// A pool retaining at most `max_idle` idle buffers.
+    pub fn new(max_idle: usize) -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            max_idle,
+        }
+    }
+
+    /// A buffer with `len()` == `len`; contents are unspecified (reused
+    /// buffers keep stale data — always overwrite before reading).
+    pub fn take(&self, len: usize) -> Vec<T> {
+        let mut buf = self.free.lock().unwrap().pop().unwrap_or_default();
+        if buf.len() < len {
+            buf.resize(len, T::default());
+        } else {
+            buf.truncate(len);
+        }
+        buf
+    }
+
+    /// Return a buffer for reuse (dropped if the pool is full).
+    pub fn put(&self, buf: Vec<T>) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_idle {
+            free.push(buf);
+        }
+    }
+
+    /// Idle buffers currently retained.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+impl<T: Copy + Default> Default for BufferPool<T> {
+    /// A pool sized for a handful of concurrent workers.
+    fn default() -> Self {
+        Self::new(16)
     }
 }
 
@@ -242,6 +300,27 @@ mod tests {
             pool.wait_idle();
         }
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_and_caps() {
+        let pool: BufferPool<f32> = BufferPool::new(2);
+        let a = pool.take(100);
+        assert_eq!(a.len(), 100);
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        // reuse shrinks/grows to the requested length
+        let b = pool.take(10);
+        assert_eq!(b.len(), 10);
+        assert_eq!(pool.idle(), 0);
+        let c = pool.take(1000);
+        assert_eq!(c.len(), 1000);
+        pool.put(b);
+        pool.put(c);
+        assert_eq!(pool.idle(), 2);
+        // over the idle cap: dropped, not retained
+        pool.put(vec![0.0; 4]);
+        assert_eq!(pool.idle(), 2);
     }
 
     #[test]

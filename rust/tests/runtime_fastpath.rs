@@ -1,0 +1,192 @@
+//! Fast-path runtime guarantees:
+//!
+//! 1. the batched blocked kernels (and their worker-pool sharding) are
+//!    **bit-exact** with the per-sample scalar oracle interpreter across
+//!    ragged batch sizes and thread counts, and
+//! 2. incremental stage-delta dequantization in the assembler is
+//!    **bit-exact** with a full `dequantize_into` re-dequant at every
+//!    `cum_bits` level, property-tested over random tensor layouts and
+//!    random bit-width schedules.
+
+use prognet::client::Assembler;
+use prognet::format::header::manifest_from_weights;
+use prognet::format::PnetWriter;
+use prognet::quant::{dequantize_into, DequantParams, Schedule, K};
+use prognet::runtime::{Backend, CompiledModel, ReferenceBackend};
+use prognet::testutil::fixture;
+use prognet::testutil::prop::{check, Gen};
+
+/// Batched path (1 and 4 workers) vs the scalar oracle on a dense chain
+/// and on a conv+dense model, across ragged batch sizes spanning the
+/// tile width (4) and the sharding threshold (8).
+#[test]
+fn batched_kernels_match_scalar_oracle_bit_for_bit() {
+    let cases = [
+        ("dense3", fixture::executable_models("fastpath-dense").unwrap()),
+        ("conv2d", fixture::executable_conv_models("fastpath-conv").unwrap()),
+    ];
+    for (name, reg) in &cases {
+        let m = reg.get(name).unwrap();
+        let flat = m.load_weights().unwrap();
+        let scalar = ReferenceBackend::scalar().compile(m, &[]).unwrap();
+        for threads in [1usize, 4] {
+            let fast = ReferenceBackend::with_threads(threads).compile(m, &[]).unwrap();
+            for n in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 31, 33] {
+                let images: Vec<f32> = (0..n * m.input_numel())
+                    .map(|i| ((i * 2654435761) % 1000) as f32 * 1e-3 - 0.5)
+                    .collect();
+                let a = fast.execute(&images, n, &flat).unwrap();
+                let b = scalar.execute(&images, n, &flat).unwrap();
+                // exact f32 equality (no tolerance); == rather than
+                // to_bits so a ±0.0 from the oracle's skip-zero shortcut
+                // can't produce a spurious sign-of-zero mismatch
+                assert_eq!(a, b, "{name}: batch {n}, {threads} threads");
+            }
+        }
+    }
+}
+
+/// The fused quantized path through a real assembler feed: codes are
+/// consumed as a borrowed slice (no copy), and the versioned call is
+/// identical to the unversioned one at every stage — including repeated
+/// calls that hit the backend's weight cache.
+#[test]
+fn qfwd_versioned_matches_unversioned_across_stages() {
+    let reg = fixture::executable_models("fastpath-qfwd").unwrap();
+    let m = reg.get("dense3").unwrap();
+    let flat = m.load_weights().unwrap();
+    let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+    let pm = m.pnet_manifest(&flat, Schedule::paper_default()).unwrap();
+    let writer = PnetWriter::encode(pm.clone(), &flat).unwrap();
+    let mut asm = Assembler::new(pm);
+    let n = 3usize;
+    let images: Vec<f32> = (0..n * m.input_numel()).map(|i| i as f32 * 0.01).collect();
+    for s in 0..asm.manifest().schedule.stages() {
+        for t in 0..asm.manifest().tensors.len() {
+            asm.absorb(s, t, writer.fragment(s, t)).unwrap();
+        }
+        let cum = asm.cum_bits();
+        let version = asm.codes_version();
+        let plain = compiled
+            .execute_quantized(&images, n, asm.codes_flat(), cum)
+            .unwrap();
+        let versioned = compiled
+            .execute_quantized_versioned(&images, n, asm.codes_flat(), cum, version)
+            .unwrap();
+        let cached = compiled
+            .execute_quantized_versioned(&images, n, asm.codes_flat(), cum, version)
+            .unwrap();
+        assert_eq!(plain, versioned, "stage {s}");
+        assert_eq!(versioned, cached, "stage {s} (cache hit)");
+    }
+}
+
+/// Incremental delta-dequant (eager and lazy) vs a full re-dequant of
+/// the accumulated codes, bit for bit, at every stage boundary of random
+/// schedules over random tensor layouts.
+#[test]
+fn delta_dequant_bit_exact_over_random_schedules() {
+    check(
+        "delta dequant == full dequant",
+        60,
+        |g: &mut Gen| {
+            // random widths summing to K
+            let mut widths = Vec::new();
+            let mut left = K;
+            while left > 0 {
+                let w = g.u32(1, left.min(8));
+                widths.push(w);
+                left -= w;
+            }
+            // random tensor layout
+            let tensors = g.usize(1, 4);
+            let sizes: Vec<usize> = (0..tensors).map(|_| g.usize(1, 257)).collect();
+            let total: usize = sizes.iter().sum();
+            let flat: Vec<f32> = (0..total)
+                .map(|_| g.rng().normal_ms(0.0, 0.8) as f32)
+                .collect();
+            (widths, sizes, flat)
+        },
+        |(widths, sizes, flat)| {
+            let sched = Schedule::new(widths, K).map_err(|e| e.to_string())?;
+            let specs: Vec<(String, Vec<usize>)> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (format!("t{i}"), vec![n]))
+                .collect();
+            let pm = manifest_from_weights("prop", "classify", &specs, &flat, sched.clone())
+                .map_err(|e| e.to_string())?;
+            let writer = PnetWriter::encode(pm.clone(), &flat).map_err(|e| e.to_string())?;
+            let mut eager = Assembler::new(pm.clone());
+            eager.set_eager_dequant(true);
+            let mut lazy = Assembler::new(pm.clone());
+            let mut full = vec![0f32; flat.len()];
+            for s in 0..sched.stages() {
+                for t in 0..pm.tensors.len() {
+                    // tensor delivery order within a stage varies
+                    let t = (t + s) % pm.tensors.len();
+                    eager
+                        .absorb(s, t, writer.fragment(s, t))
+                        .map_err(|e| e.to_string())?;
+                    lazy.absorb(s, t, writer.fragment(s, t))
+                        .map_err(|e| e.to_string())?;
+                }
+                // reference: full Eq. 5 over the accumulated codes
+                let cum = sched.cum_bits(s);
+                for t in &pm.tensors {
+                    dequantize_into(
+                        &eager.codes_flat()[t.offset..t.offset + t.numel],
+                        DequantParams::new(&t.quant_params(pm.k), cum),
+                        &mut full[t.offset..t.offset + t.numel],
+                    );
+                }
+                for (label, asm) in [("eager", &mut eager), ("lazy", &mut lazy)] {
+                    let got = asm.reconstruct().map_err(|e| e.to_string())?;
+                    for (i, (a, b)) in got.iter().zip(&full).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "{label}: stage {s}, param {i}: {a} != {b} (bits differ)"
+                            ));
+                        }
+                    }
+                }
+            }
+            if !eager.is_complete() || !lazy.is_complete() {
+                return Err("assembler did not complete".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A second reconstruct at the same stage is a no-op (every tensor is
+/// current), and absorbing a later stage re-dirties exactly the updated
+/// tensors — the skip bookkeeping never serves stale floats.
+#[test]
+fn reconstruct_is_idempotent_and_never_stale() {
+    let flat: Vec<f32> = (0..600).map(|i| (i as f32 * 0.37).sin()).collect();
+    let pm = manifest_from_weights(
+        "idem",
+        "classify",
+        &[("a".to_string(), vec![200]), ("b".to_string(), vec![400])],
+        &flat,
+        Schedule::paper_default(),
+    )
+    .unwrap();
+    let writer = PnetWriter::encode(pm.clone(), &flat).unwrap();
+    let mut asm = Assembler::new(pm.clone());
+    asm.set_eager_dequant(true);
+    for s in 0..pm.schedule.stages() {
+        for t in 0..2 {
+            asm.absorb(s, t, writer.fragment(s, t)).unwrap();
+        }
+        let once = asm.reconstruct().unwrap().to_vec();
+        let twice = asm.reconstruct().unwrap().to_vec();
+        assert_eq!(
+            once.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            twice.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "stage {s}"
+        );
+    }
+    assert!(asm.is_complete());
+}
