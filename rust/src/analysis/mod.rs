@@ -1,0 +1,28 @@
+//! Concurrency correctness layer: deterministic model checking for the
+//! crate's hand-rolled synchronization protocols.
+//!
+//! Two halves:
+//!
+//! - [`sched`] — a loom-style deterministic scheduler that serializes
+//!   model threads onto a baton, explores interleavings (exhaustive DFS
+//!   with bounded preemptions, or seeded random sampling), runs timeouts
+//!   on virtual time, detects deadlocks and livelocks, and prints
+//!   replayable failing schedules. Always compiled, so the checker's own
+//!   unit tests run in normal builds.
+//! - [`shim`] — instrumented `Mutex`/`Condvar`/`RwLock`/atomic
+//!   replacements that report every operation to the scheduler. Compiled
+//!   only under `--cfg prognet_check` and reached through the
+//!   [`crate::util::sync`] facade, which re-exports plain `std::sync` in
+//!   normal builds (zero overhead, zero behavior change).
+//!
+//! The schedule-exploration suite for the crate's real protocols lives
+//! in `tests/schedules.rs` and runs under
+//! `RUSTFLAGS='--cfg prognet_check' cargo test`. Design notes, the lint
+//! rule catalog and replay instructions: `rust/docs/ANALYSIS.md`.
+
+#![forbid(unsafe_code)]
+
+pub mod sched;
+
+#[cfg(prognet_check)]
+pub mod shim;

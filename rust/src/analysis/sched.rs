@@ -1,0 +1,1315 @@
+//! Deterministic schedule-exploring model checker (loom/CHESS-style).
+//!
+//! A *model run* executes a closure ("the body") on real OS threads that
+//! are serialized by a baton: exactly one model thread runs at a time,
+//! and before every visible operation (lock, unlock, condvar wait/notify,
+//! atomic access, spawn, join, sleep) the thread hands control to the
+//! scheduler, which decides who runs next. Because every context switch
+//! is an explicit recorded *choice*, a whole interleaving is just a
+//! sequence of small integers — which makes schedules enumerable
+//! (bounded-exhaustive DFS), samplable (seeded random), and exactly
+//! replayable (feed the recorded choices back in).
+//!
+//! The instrumentation hooks live in [`crate::analysis::shim`] and are
+//! swapped in for `std::sync` by the [`crate::util::sync`] facade under
+//! `--cfg prognet_check`; outside a model run (and in normal builds) the
+//! shims defer to plain std, so the same test binary can mix model tests
+//! with ordinary ones.
+//!
+//! Design points, and the deliberate limits of the model:
+//!
+//! - **Preemption bounding** (CHESS): schedules with more than
+//!   [`Config::max_preemptions`] involuntary switches are pruned. Most
+//!   concurrency bugs need very few preemptions; the default bound of 2
+//!   keeps exhaustive search tractable.
+//! - **Sequential consistency**: atomics are modeled as `SeqCst`
+//!   regardless of the ordering the code requests. Weak-memory bugs are
+//!   out of scope here and left to the TSan/Miri CI jobs; what this
+//!   checker finds is interleaving bugs (lost updates, torn protocols,
+//!   lost wakeups, deadlocks).
+//! - **Virtual time**: `sleep` and condvar timeouts park the thread
+//!   under a logical clock that only advances when no thread is
+//!   runnable, so timeout paths explore in microseconds of real time.
+//!   The clock is lazy — runnable threads may run past a sleeper's
+//!   deadline before time jumps.
+//! - **Deadlock and livelock detection**: no runnable thread and no
+//!   pending deadline is reported as a deadlock with per-thread wait
+//!   states; runs exceeding [`Config::max_steps`] scheduling points are
+//!   reported as livelocks. Spin loops (rather than condvars) inside a
+//!   model will trip the step budget by design.
+//! - **No spurious wakeups**: condvar waiters wake only by notify or
+//!   timeout. Code relying on spurious wakeups for progress would pass
+//!   here and fail in production — the lint pass's job, not this one.
+//!
+//! See `rust/docs/ANALYSIS.md` for a worked example of writing a
+//! schedule test and reproducing a failure from its printed trace.
+
+#![forbid(unsafe_code)]
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+use std::time::{Duration, Instant};
+
+/// Panic payload used to unwind model threads once a run is being torn
+/// down (failure found, or schedule abandoned). Never reported as a
+/// failure itself.
+const ABORT_SENTINEL: &str = "__prognet_sched_abort__";
+
+/// Process-wide resource id counter. Ids only need to be unique, not
+/// dense — traces normalize them to first-seen order when rendering.
+static NEXT_RESOURCE: AtomicUsize = AtomicUsize::new(1 << 20);
+
+/// A fresh id for a lock/condvar/cell the scheduler should track.
+pub fn new_resource_id() -> usize {
+    NEXT_RESOURCE.fetch_add(1, Ordering::SeqCst)
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<ModelState>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The scheduler handle of the calling thread, when it is a model
+/// thread. The shims use this to decide instrumented vs plain-std paths.
+/// Public for the shim/facade layer only — not a stable API.
+#[doc(hidden)]
+pub fn current() -> Option<(Arc<ModelState>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Is the calling thread part of a model run?
+pub fn in_model() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+// ---------------------------------------------------------------------------
+// Public API surface: configuration, reports, module-level ops
+// ---------------------------------------------------------------------------
+
+/// Exploration strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Depth-first enumeration of all schedules within the preemption
+    /// bound (deterministic; sets [`Report::exhausted`] when complete).
+    Exhaustive,
+    /// Independent runs driven by a splitmix64 PRNG; the per-run seed is
+    /// recorded so any failure is replayable.
+    Random,
+}
+
+/// Model-checking configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub strategy: Strategy,
+    /// Maximum schedules to execute before giving up.
+    pub max_iterations: usize,
+    /// CHESS-style preemption bound (`None` = unbounded).
+    pub max_preemptions: Option<usize>,
+    /// Scheduling points allowed per run before declaring a livelock.
+    pub max_steps: usize,
+    /// Base seed for [`Strategy::Random`].
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::Exhaustive,
+            max_iterations: 2000,
+            max_preemptions: Some(2),
+            max_steps: 20_000,
+            seed: 0x5DEE_CE66_D1CE_CAFE,
+        }
+    }
+}
+
+/// One recorded scheduling step (who did what to which resource).
+/// Resource ids are arbitrary labels, stable within a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStep {
+    pub tid: usize,
+    pub op: &'static str,
+    pub res: usize,
+}
+
+/// A failing schedule: everything needed to reproduce and read it.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    /// Panic/assertion message, or the deadlock/livelock diagnosis.
+    pub message: String,
+    /// The choice sequence that produced the failure — feed to
+    /// [`replay`] (or `PROGNET_SCHED_REPLAY` via [`check`]).
+    pub schedule: Vec<u32>,
+    /// The per-run PRNG seed, when the failing run came from
+    /// [`Strategy::Random`].
+    pub seed: Option<u64>,
+    /// Full step trace of the failing run.
+    pub trace: Vec<TraceStep>,
+}
+
+impl Failure {
+    /// Human-readable report: message, replayable schedule, step trace.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "model check failed: {}", self.message);
+        let sched: Vec<String> = self.schedule.iter().map(|c| c.to_string()).collect();
+        let _ = writeln!(out, "schedule: [{}]", sched.join(","));
+        if let Some(s) = self.seed {
+            let _ = writeln!(out, "seed: {s:#018x}");
+        }
+        let _ = writeln!(
+            out,
+            "replay: sched::replay(&[{}], body) or PROGNET_SCHED_REPLAY={}",
+            sched.join(","),
+            sched.join(",")
+        );
+        let start = self.trace.len().saturating_sub(200);
+        if start > 0 {
+            let _ = writeln!(out, "trace: ({start} earlier steps elided)");
+        } else {
+            let _ = writeln!(out, "trace:");
+        }
+        let mut labels: HashMap<usize, usize> = HashMap::new();
+        for (i, s) in self.trace.iter().enumerate() {
+            let n = labels.len();
+            let label = *labels.entry(s.res).or_insert(n);
+            if i >= start {
+                let _ = writeln!(out, "  #{i:04} t{} {:<16} r{label}", s.tid, s.op);
+            }
+        }
+        out
+    }
+}
+
+/// Result of an exploration.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Schedules executed.
+    pub schedules: usize,
+    /// True when exhaustive search covered the whole bounded space.
+    pub exhausted: bool,
+    /// First failing schedule found, if any (exploration stops there).
+    pub failure: Option<Failure>,
+    /// Choice sequence of every executed schedule, in order.
+    pub schedules_taken: Vec<Vec<u32>>,
+    /// Normalized trace digest of every executed schedule (two runs of
+    /// the same program under the same choices digest identically).
+    pub trace_digests: Vec<u64>,
+}
+
+/// Explore interleavings of `body` under `cfg`. The body runs many
+/// times, once per schedule; it must set up its own state each run and
+/// create its threads via [`spawn`].
+pub fn explore<F>(cfg: Config, body: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let body = Arc::new(body);
+    let mut report = Report {
+        schedules: 0,
+        exhausted: false,
+        failure: None,
+        schedules_taken: Vec::new(),
+        trace_digests: Vec::new(),
+    };
+    match cfg.strategy {
+        Strategy::Exhaustive => {
+            let mut prefix: Vec<u32> = Vec::new();
+            while report.schedules < cfg.max_iterations {
+                let out = run_once(&cfg, std::mem::take(&mut prefix), None, body.clone());
+                record(&mut report, &out);
+                if let Some(msg) = out.failure {
+                    report.failure = Some(make_failure(msg, &out, None));
+                    break;
+                }
+                // Backtrack: deepest choice with an unexplored sibling.
+                let mut ch = out.choices;
+                loop {
+                    match ch.last_mut() {
+                        None => {
+                            report.exhausted = true;
+                            break;
+                        }
+                        Some(last) if last.chosen + 1 < last.options => {
+                            last.chosen += 1;
+                            break;
+                        }
+                        Some(_) => {
+                            ch.pop();
+                        }
+                    }
+                }
+                if report.exhausted {
+                    break;
+                }
+                prefix = ch.iter().map(|c| c.chosen).collect();
+            }
+        }
+        Strategy::Random => {
+            for i in 0..cfg.max_iterations {
+                let seed = mix_seed(cfg.seed, i as u64);
+                let out = run_once(&cfg, Vec::new(), Some(seed), body.clone());
+                record(&mut report, &out);
+                if let Some(msg) = out.failure {
+                    report.failure = Some(make_failure(msg, &out, Some(seed)));
+                    break;
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Run exactly one schedule, following `schedule` while it lasts and
+/// continuing deterministically (first option) past its end. Returns the
+/// failure, if that schedule produces one.
+pub fn replay<F>(schedule: &[u32], body: F) -> Option<Failure>
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let cfg = Config::default();
+    let out = run_once(&cfg, schedule.to_vec(), None, Arc::new(body));
+    let failure = out.failure.clone();
+    failure.map(|msg| make_failure(msg, &out, None))
+}
+
+/// Run exactly one randomly-scheduled run pinned to `seed`.
+pub fn replay_seed<F>(seed: u64, body: F) -> Option<Failure>
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let cfg = Config::default();
+    let out = run_once(&cfg, Vec::new(), Some(seed), Arc::new(body));
+    let failure = out.failure.clone();
+    failure.map(|msg| make_failure(msg, &out, Some(seed)))
+}
+
+/// Explore with defaults and panic with a rendered trace on failure.
+/// `PROGNET_SCHED_REPLAY="0,1,0,2"` switches to single-schedule replay.
+pub fn check<F>(body: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    if let Ok(raw) = std::env::var("PROGNET_SCHED_REPLAY") {
+        let schedule: Vec<u32> = raw
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect();
+        if let Some(f) = replay(&schedule, body) {
+            panic!("{}", f.render());
+        }
+        return;
+    }
+    let report = explore(Config::default(), body);
+    if let Some(f) = report.failure {
+        panic!("{}", f.render());
+    }
+}
+
+/// Spawn a model thread. Must be called from inside a model run; the
+/// returned handle joins through the scheduler (a blocking join is a
+/// visible operation like any other).
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (state, parent) = current().expect("sched::spawn called outside a model run");
+    let tid = state.register_thread(parent);
+    let s2 = state.clone();
+    let real = std::thread::Builder::new()
+        .name(format!("prognet-model-{tid}"))
+        .spawn(move || {
+            CURRENT.with(|c| *c.borrow_mut() = Some((s2.clone(), tid)));
+            let go = {
+                let core = s2.lock_core();
+                matches!(s2.wait_turn(core, tid), Turn::Go)
+            };
+            let result: std::thread::Result<T> = if go {
+                std::panic::catch_unwind(AssertUnwindSafe(f))
+            } else {
+                Err(Box::new(ABORT_SENTINEL) as Box<dyn std::any::Any + Send>)
+            };
+            let msg = result.as_ref().err().map(|p| panic_text(p.as_ref()));
+            s2.thread_finished(tid, msg);
+            CURRENT.with(|c| *c.borrow_mut() = None);
+            result
+        })
+        .expect("spawn model thread");
+    JoinHandle { real, tid }
+}
+
+/// Handle to a model thread (see [`spawn`]).
+pub struct JoinHandle<T> {
+    real: std::thread::JoinHandle<std::thread::Result<T>>,
+    tid: usize,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread through the scheduler, then collect its
+    /// result (the panic payload, if it panicked).
+    pub fn join(self) -> std::thread::Result<T> {
+        let (state, me) = current().expect("JoinHandle::join called outside a model run");
+        state.join_thread(me, self.tid);
+        self.real.join().and_then(|r| r)
+    }
+}
+
+/// Record a scheduling point for the calling model thread (no-op
+/// outside a model). `res` labels the state being touched.
+pub fn point(op: &'static str, res: usize) {
+    if let Some((state, tid)) = current() {
+        state.point(tid, op, res);
+    }
+}
+
+/// Acquire the model-level lock `res` (no-op outside a model). Pairs
+/// with [`release`]; used directly by tests and by the mutex shim.
+pub fn acquire(res: usize) {
+    if let Some((state, tid)) = current() {
+        state.acquire_lock(tid, res);
+    }
+}
+
+/// Release the model-level lock `res` (no-op outside a model).
+pub fn release(res: usize) {
+    if let Some((state, tid)) = current() {
+        state.release_lock(tid, res);
+    }
+}
+
+/// Sleep: virtual inside a model, real outside.
+pub fn sleep(dur: Duration) {
+    match current() {
+        Some((state, tid)) => state.sleep(tid, dur),
+        None => std::thread::sleep(dur),
+    }
+}
+
+/// The model's virtual clock (None outside a model run).
+pub fn virtual_now() -> Option<Instant> {
+    current().map(|(state, _)| state.virtual_now())
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler core
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Wait {
+    Lock(usize),
+    Read(usize),
+    Write(usize),
+    Condvar(usize),
+    CondvarTimed { cv: usize, deadline_ns: u64 },
+    Sleep { until_ns: u64 },
+    Join(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    Blocked(Wait),
+    Finished,
+}
+
+struct ThreadState {
+    status: Status,
+    /// Set when a timed condvar wait was ended by the clock rather than
+    /// a notify; consumed by the shim's `wait_timeout`.
+    timed_out: bool,
+}
+
+impl ThreadState {
+    fn new() -> Self {
+        Self {
+            status: Status::Runnable,
+            timed_out: false,
+        }
+    }
+}
+
+/// Logical ownership state of one lock or rwlock.
+#[derive(Default)]
+struct ResState {
+    owner: Option<usize>,
+    readers: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Choice {
+    chosen: u32,
+    options: u32,
+}
+
+struct SplitMix(u64);
+
+impl SplitMix {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+fn mix_seed(base: u64, i: u64) -> u64 {
+    SplitMix(base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next()
+}
+
+struct Core {
+    threads: Vec<ThreadState>,
+    active: usize,
+    res: HashMap<usize, ResState>,
+    trace: Vec<TraceStep>,
+    choices: Vec<Choice>,
+    prefix: Vec<u32>,
+    rng: Option<SplitMix>,
+    preemptions: usize,
+    max_preemptions: Option<usize>,
+    max_steps: usize,
+    steps: usize,
+    now_ns: u64,
+    abort: bool,
+    failure: Option<String>,
+    running: usize,
+    done: bool,
+}
+
+enum Turn {
+    Go,
+    Abort,
+}
+
+/// Shared state of one model run: the baton (`core` + `cv`) every model
+/// thread synchronizes through. Public for the shim/facade layer only —
+/// not a stable API (hence hidden).
+#[doc(hidden)]
+pub struct ModelState {
+    core: Mutex<Core>,
+    cv: Condvar,
+    base: Instant,
+}
+
+impl ModelState {
+    fn new(cfg: &Config, prefix: Vec<u32>, seed: Option<u64>) -> Self {
+        Self {
+            core: Mutex::new(Core {
+                threads: vec![ThreadState::new()],
+                active: 0,
+                res: HashMap::new(),
+                trace: Vec::new(),
+                choices: Vec::new(),
+                prefix,
+                rng: seed.map(SplitMix),
+                preemptions: 0,
+                max_preemptions: cfg.max_preemptions,
+                max_steps: cfg.max_steps,
+                steps: 0,
+                now_ns: 0,
+                abort: false,
+                failure: None,
+                running: 1,
+                done: false,
+            }),
+            cv: Condvar::new(),
+            base: Instant::now(),
+        }
+    }
+
+    fn lock_core(&self) -> MutexGuard<'_, Core> {
+        self.core.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The virtual clock of this run (monotonic, starts at run launch).
+    pub fn virtual_now(&self) -> Instant {
+        let ns = self.lock_core().now_ns;
+        self.base + Duration::from_nanos(ns)
+    }
+
+    /// A scheduling point: record the upcoming operation, then let the
+    /// strategy pick the next thread to run. Returns when the calling
+    /// thread is scheduled again (possibly immediately).
+    pub fn point(&self, tid: usize, op: &'static str, res: usize) {
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            abort_current_thread();
+            return;
+        }
+        core.steps += 1;
+        if core.steps > core.max_steps {
+            let budget = core.max_steps;
+            self.fail(
+                &mut core,
+                format!("livelock: step budget ({budget}) exceeded"),
+            );
+            drop(core);
+            abort_current_thread();
+            return;
+        }
+        core.trace.push(TraceStep { tid, op, res });
+        self.reschedule(&mut core, tid);
+        if let Turn::Abort = self.wait_turn(core, tid) {
+            abort_current_thread();
+        }
+    }
+
+    /// Blocking lock acquire: a schedule decision, then take the lock or
+    /// park until a release makes it available.
+    pub fn acquire_lock(&self, tid: usize, res: usize) {
+        self.point(tid, "lock", res);
+        loop {
+            let mut core = self.lock_core();
+            if core.abort {
+                drop(core);
+                abort_current_thread();
+                return;
+            }
+            let st = core.res.entry(res).or_default();
+            if st.owner.is_none() && st.readers == 0 {
+                st.owner = Some(tid);
+                return;
+            }
+            core.threads[tid].status = Status::Blocked(Wait::Lock(res));
+            self.reschedule(&mut core, tid);
+            if let Turn::Abort = self.wait_turn(core, tid) {
+                abort_current_thread();
+                return;
+            }
+        }
+    }
+
+    /// Lock release. During unwind/teardown the resource is freed
+    /// without a scheduling point so other threads can drain.
+    pub fn release_lock(&self, tid: usize, res: usize) {
+        if !std::thread::panicking() {
+            self.point(tid, "unlock", res);
+        }
+        let mut core = self.lock_core();
+        if let Some(st) = core.res.get_mut(&res) {
+            if st.owner == Some(tid) {
+                st.owner = None;
+            }
+        }
+        wake_lock_waiters(&mut core, res);
+        self.cv.notify_all();
+    }
+
+    pub fn acquire_read(&self, tid: usize, res: usize) {
+        self.point(tid, "rwlock.read", res);
+        loop {
+            let mut core = self.lock_core();
+            if core.abort {
+                drop(core);
+                abort_current_thread();
+                return;
+            }
+            let st = core.res.entry(res).or_default();
+            if st.owner.is_none() {
+                st.readers += 1;
+                return;
+            }
+            core.threads[tid].status = Status::Blocked(Wait::Read(res));
+            self.reschedule(&mut core, tid);
+            if let Turn::Abort = self.wait_turn(core, tid) {
+                abort_current_thread();
+                return;
+            }
+        }
+    }
+
+    pub fn release_read(&self, tid: usize, res: usize) {
+        if !std::thread::panicking() {
+            self.point(tid, "rwlock.unread", res);
+        }
+        let mut core = self.lock_core();
+        if let Some(st) = core.res.get_mut(&res) {
+            st.readers = st.readers.saturating_sub(1);
+        }
+        wake_lock_waiters(&mut core, res);
+        self.cv.notify_all();
+    }
+
+    pub fn acquire_write(&self, tid: usize, res: usize) {
+        self.point(tid, "rwlock.write", res);
+        loop {
+            let mut core = self.lock_core();
+            if core.abort {
+                drop(core);
+                abort_current_thread();
+                return;
+            }
+            let st = core.res.entry(res).or_default();
+            if st.owner.is_none() && st.readers == 0 {
+                st.owner = Some(tid);
+                return;
+            }
+            core.threads[tid].status = Status::Blocked(Wait::Write(res));
+            self.reschedule(&mut core, tid);
+            if let Turn::Abort = self.wait_turn(core, tid) {
+                abort_current_thread();
+                return;
+            }
+        }
+    }
+
+    pub fn release_write(&self, tid: usize, res: usize) {
+        self.release_lock(tid, res);
+    }
+
+    /// Condvar wait: atomically release `mutex_res` and park on `cv_res`
+    /// (with an optional virtual-time deadline). Returns whether the
+    /// wait ended by timeout. The caller re-acquires the mutex.
+    pub fn condvar_wait(
+        &self,
+        tid: usize,
+        cv_res: usize,
+        mutex_res: usize,
+        timeout: Option<Duration>,
+    ) -> bool {
+        self.point(tid, "cv.wait", cv_res);
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            abort_current_thread();
+            return false;
+        }
+        if let Some(st) = core.res.get_mut(&mutex_res) {
+            if st.owner == Some(tid) {
+                st.owner = None;
+            }
+        }
+        wake_lock_waiters(&mut core, mutex_res);
+        core.threads[tid].timed_out = false;
+        core.threads[tid].status = match timeout {
+            None => Status::Blocked(Wait::Condvar(cv_res)),
+            Some(d) => Status::Blocked(Wait::CondvarTimed {
+                cv: cv_res,
+                deadline_ns: core.now_ns.saturating_add(duration_ns(d)),
+            }),
+        };
+        self.reschedule(&mut core, tid);
+        if let Turn::Abort = self.wait_turn(core, tid) {
+            abort_current_thread();
+            return false;
+        }
+        self.lock_core().threads[tid].timed_out
+    }
+
+    /// Condvar notify (one waiter — the lowest tid — or all).
+    pub fn notify(&self, tid: usize, cv_res: usize, all: bool) {
+        let op = if all { "cv.notify_all" } else { "cv.notify_one" };
+        if !std::thread::panicking() {
+            self.point(tid, op, cv_res);
+        }
+        let mut core = self.lock_core();
+        for t in core.threads.iter_mut() {
+            let waiting = match t.status {
+                Status::Blocked(Wait::Condvar(c)) => c == cv_res,
+                Status::Blocked(Wait::CondvarTimed { cv, .. }) => cv == cv_res,
+                _ => false,
+            };
+            if waiting {
+                t.timed_out = false;
+                t.status = Status::Runnable;
+                if !all {
+                    break;
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Atomic access: one scheduling point; the shim then performs the
+    /// real operation at `SeqCst`.
+    pub fn atomic_op(&self, tid: usize, op: &'static str, res: usize) {
+        self.point(tid, op, res);
+    }
+
+    /// Virtual-time sleep.
+    pub fn sleep(&self, tid: usize, dur: Duration) {
+        self.point(tid, "sleep", 0);
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            abort_current_thread();
+            return;
+        }
+        let until_ns = core.now_ns.saturating_add(duration_ns(dur));
+        core.threads[tid].status = Status::Blocked(Wait::Sleep { until_ns });
+        self.reschedule(&mut core, tid);
+        if let Turn::Abort = self.wait_turn(core, tid) {
+            abort_current_thread();
+        }
+    }
+
+    /// Register a thread spawned by `parent`; returns the new tid.
+    pub fn register_thread(&self, parent: usize) -> usize {
+        self.point(parent, "spawn", 0);
+        let mut core = self.lock_core();
+        let tid = core.threads.len();
+        core.threads.push(ThreadState::new());
+        core.running += 1;
+        tid
+    }
+
+    /// Blocking join on `target`.
+    pub fn join_thread(&self, tid: usize, target: usize) {
+        self.point(tid, "join", target);
+        loop {
+            let mut core = self.lock_core();
+            if core.abort {
+                drop(core);
+                abort_current_thread();
+                return;
+            }
+            if core.threads[target].status == Status::Finished {
+                return;
+            }
+            core.threads[tid].status = Status::Blocked(Wait::Join(target));
+            self.reschedule(&mut core, tid);
+            if let Turn::Abort = self.wait_turn(core, tid) {
+                abort_current_thread();
+                return;
+            }
+        }
+    }
+
+    /// A model thread is done (normally or by panic). Non-sentinel panic
+    /// messages become the run's failure; the run completes when every
+    /// thread has finished.
+    pub fn thread_finished(&self, tid: usize, panic_msg: Option<String>) {
+        let mut core = self.lock_core();
+        core.threads[tid].status = Status::Finished;
+        core.running -= 1;
+        core.trace.push(TraceStep {
+            tid,
+            op: "exit",
+            res: 0,
+        });
+        if let Some(msg) = panic_msg {
+            if msg != ABORT_SENTINEL && core.failure.is_none() {
+                core.failure = Some(msg);
+                core.abort = true;
+            }
+        }
+        for t in core.threads.iter_mut() {
+            if t.status == Status::Blocked(Wait::Join(tid)) {
+                t.status = Status::Runnable;
+            }
+        }
+        if core.running == 0 {
+            core.done = true;
+            self.cv.notify_all();
+            return;
+        }
+        if core.abort {
+            self.cv.notify_all();
+            return;
+        }
+        self.reschedule(&mut core, tid);
+    }
+
+    /// Pick the next active thread: consult the strategy over the
+    /// runnable set, advancing virtual time when everyone is parked on a
+    /// deadline, and declaring deadlock when no wake is possible.
+    fn reschedule(&self, core: &mut Core, from: usize) {
+        loop {
+            if core.abort {
+                self.cv.notify_all();
+                return;
+            }
+            let runnable: Vec<usize> = core
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.status == Status::Runnable)
+                .map(|(i, _)| i)
+                .collect();
+            if !runnable.is_empty() {
+                let from_runnable = core
+                    .threads
+                    .get(from)
+                    .is_some_and(|t| t.status == Status::Runnable);
+                let bound_spent = core
+                    .max_preemptions
+                    .is_some_and(|b| core.preemptions >= b);
+                // Once the preemption budget is spent, a runnable thread
+                // keeps running until it blocks or exits (CHESS).
+                let options: Vec<usize> = if from_runnable && bound_spent {
+                    vec![from]
+                } else {
+                    runnable
+                };
+                let idx = choose(core, options.len() as u32) as usize;
+                let next = options[idx];
+                if from_runnable && next != from {
+                    core.preemptions += 1;
+                }
+                core.active = next;
+                self.cv.notify_all();
+                return;
+            }
+            // Nobody runnable: jump the clock to the earliest deadline.
+            let mut earliest: Option<u64> = None;
+            for t in &core.threads {
+                let due = match t.status {
+                    Status::Blocked(Wait::Sleep { until_ns }) => Some(until_ns),
+                    Status::Blocked(Wait::CondvarTimed { deadline_ns, .. }) => Some(deadline_ns),
+                    _ => None,
+                };
+                if let Some(d) = due {
+                    earliest = Some(earliest.map_or(d, |e| e.min(d)));
+                }
+            }
+            match earliest {
+                Some(ns) => {
+                    core.now_ns = core.now_ns.max(ns);
+                    let now = core.now_ns;
+                    for t in core.threads.iter_mut() {
+                        match t.status {
+                            Status::Blocked(Wait::Sleep { until_ns }) if until_ns <= now => {
+                                t.status = Status::Runnable;
+                            }
+                            Status::Blocked(Wait::CondvarTimed { deadline_ns, .. })
+                                if deadline_ns <= now =>
+                            {
+                                t.timed_out = true;
+                                t.status = Status::Runnable;
+                            }
+                            _ => {}
+                        }
+                    }
+                    // Loop back to choose among the newly runnable.
+                }
+                None => {
+                    if core.running == 0 {
+                        return;
+                    }
+                    let msg = deadlock_message(core);
+                    self.fail(core, msg);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Park until this thread holds the baton (or the run is aborting).
+    /// Consumes (and on return releases) the core guard.
+    fn wait_turn(&self, mut core: MutexGuard<'_, Core>, tid: usize) -> Turn {
+        loop {
+            if core.abort {
+                return Turn::Abort;
+            }
+            if core.active == tid && core.threads[tid].status == Status::Runnable {
+                return Turn::Go;
+            }
+            core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn fail(&self, core: &mut Core, msg: String) {
+        if core.failure.is_none() {
+            core.failure = Some(msg);
+        }
+        core.abort = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Wake every thread parked on lock/rwlock `res`; they re-contend when
+/// scheduled.
+fn wake_lock_waiters(core: &mut Core, res: usize) {
+    for t in core.threads.iter_mut() {
+        let waiting = matches!(
+            t.status,
+            Status::Blocked(Wait::Lock(r) | Wait::Read(r) | Wait::Write(r)) if r == res
+        );
+        if waiting {
+            t.status = Status::Runnable;
+        }
+    }
+}
+
+/// Record and return one scheduling choice among `options` candidates.
+fn choose(core: &mut Core, options: u32) -> u32 {
+    if options <= 1 {
+        return 0;
+    }
+    let depth = core.choices.len();
+    let chosen = if depth < core.prefix.len() {
+        core.prefix[depth].min(options - 1)
+    } else {
+        match &mut core.rng {
+            Some(rng) => (rng.next() % options as u64) as u32,
+            None => 0,
+        }
+    };
+    core.choices.push(Choice { chosen, options });
+    chosen
+}
+
+fn deadlock_message(core: &Core) -> String {
+    use std::fmt::Write as _;
+    let mut msg = String::from("deadlock: no runnable threads —");
+    for (i, t) in core.threads.iter().enumerate() {
+        let state = match t.status {
+            Status::Runnable => continue,
+            Status::Finished => continue,
+            Status::Blocked(Wait::Lock(r)) => format!("lock r{r}"),
+            Status::Blocked(Wait::Read(r)) => format!("rwlock.read r{r}"),
+            Status::Blocked(Wait::Write(r)) => format!("rwlock.write r{r}"),
+            Status::Blocked(Wait::Condvar(r)) => format!("condvar r{r}"),
+            Status::Blocked(Wait::CondvarTimed { cv, .. }) => format!("condvar(timed) r{cv}"),
+            Status::Blocked(Wait::Sleep { .. }) => "sleep".to_string(),
+            Status::Blocked(Wait::Join(t)) => format!("join t{t}"),
+        };
+        let _ = write!(msg, " t{i} waits on {state};");
+    }
+    msg
+}
+
+fn duration_ns(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+fn abort_current_thread() {
+    if !std::thread::panicking() {
+        std::panic::panic_any(ABORT_SENTINEL);
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+struct RunOutcome {
+    failure: Option<String>,
+    choices: Vec<Choice>,
+    trace: Vec<TraceStep>,
+}
+
+fn record(report: &mut Report, out: &RunOutcome) {
+    report.schedules += 1;
+    report
+        .schedules_taken
+        .push(out.choices.iter().map(|c| c.chosen).collect());
+    report.trace_digests.push(trace_digest(&out.trace));
+}
+
+fn make_failure(message: String, out: &RunOutcome, seed: Option<u64>) -> Failure {
+    Failure {
+        message,
+        schedule: out.choices.iter().map(|c| c.chosen).collect(),
+        seed,
+        trace: out.trace.clone(),
+    }
+}
+
+/// FNV-1a over the trace with resource ids normalized to first-seen
+/// order, so the digest is stable across runs and processes.
+fn trace_digest(trace: &[TraceStep]) -> u64 {
+    let mut labels: HashMap<usize, usize> = HashMap::new();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |h: &mut u64, b: u8| {
+        *h = (*h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    };
+    for s in trace {
+        let n = labels.len();
+        let label = *labels.entry(s.res).or_insert(n);
+        for v in [s.tid as u64, label as u64] {
+            for b in v.to_le_bytes() {
+                mix(&mut h, b);
+            }
+        }
+        for b in s.op.bytes() {
+            mix(&mut h, b);
+        }
+    }
+    h
+}
+
+/// Model-thread panics are expected during exploration (that is how
+/// failing schedules surface); suppress their default stderr backtrace
+/// spam once per process, leaving every other thread's hook intact.
+fn install_quiet_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let in_model = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("prognet-model-"));
+            if !in_model {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn run_once<F>(cfg: &Config, prefix: Vec<u32>, seed: Option<u64>, body: Arc<F>) -> RunOutcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_quiet_hook();
+    let state = Arc::new(ModelState::new(cfg, prefix, seed));
+    let s2 = state.clone();
+    let handle = std::thread::Builder::new()
+        .name("prognet-model-0".to_string())
+        .spawn(move || {
+            CURRENT.with(|c| *c.borrow_mut() = Some((s2.clone(), 0)));
+            let go = {
+                let core = s2.lock_core();
+                matches!(s2.wait_turn(core, 0), Turn::Go)
+            };
+            let result: std::thread::Result<()> = if go {
+                std::panic::catch_unwind(AssertUnwindSafe(|| body()))
+            } else {
+                Err(Box::new(ABORT_SENTINEL) as Box<dyn std::any::Any + Send>)
+            };
+            let msg = result.as_ref().err().map(|p| panic_text(p.as_ref()));
+            s2.thread_finished(0, msg);
+            CURRENT.with(|c| *c.borrow_mut() = None);
+        })
+        .expect("spawn model main thread");
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut core = state.lock_core();
+    while !core.done {
+        let (g, _) = state
+            .cv
+            .wait_timeout(core, Duration::from_millis(500))
+            .unwrap_or_else(|p| p.into_inner());
+        core = g;
+        if !core.done && Instant::now() >= deadline {
+            panic!("model run wedged: no completion within 120s (scheduler bug?)");
+        }
+    }
+    let out = RunOutcome {
+        failure: core.failure.clone(),
+        choices: core.choices.clone(),
+        trace: core.trace.clone(),
+    };
+    drop(core);
+    let _ = handle.join();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tests (normal builds too: the scheduler itself is always compiled)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn cfg(iters: usize) -> Config {
+        Config {
+            max_iterations: iters,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn single_thread_exhausts_in_one_schedule() {
+        let r = explore(cfg(100), || {
+            point("a", 1);
+            point("b", 2);
+        });
+        assert!(r.failure.is_none());
+        assert_eq!(r.schedules, 1);
+        assert!(r.exhausted);
+    }
+
+    /// The canonical non-atomic read-modify-write: two threads each do
+    /// load-then-store with a scheduling point between — the checker
+    /// must find the interleaving where one update is lost.
+    fn lost_update_body() {
+        let c = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let c = c.clone();
+                spawn(move || {
+                    point("load", 1);
+                    let v = c.load(Ordering::SeqCst);
+                    point("store", 1);
+                    c.store(v + 1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.load(Ordering::SeqCst), 2, "lost update");
+    }
+
+    #[test]
+    fn exhaustive_finds_lost_update_and_replays_it() {
+        let r = explore(cfg(5000), lost_update_body);
+        let f = r.failure.expect("exhaustive search must find the race");
+        assert!(f.message.contains("lost update"), "{}", f.message);
+        assert!(!f.trace.is_empty());
+        let rendered = f.render();
+        assert!(rendered.contains("schedule:"), "{rendered}");
+        // The recorded schedule is a faithful reproduction.
+        let again = replay(&f.schedule, lost_update_body).expect("replay must fail identically");
+        assert_eq!(again.message, f.message);
+    }
+
+    #[test]
+    fn deadlock_is_detected_with_wait_states() {
+        let r = explore(cfg(5000), || {
+            let t1 = spawn(|| {
+                acquire(101);
+                point("t1-holds-a", 101);
+                acquire(102);
+                release(102);
+                release(101);
+            });
+            acquire(102);
+            point("t0-holds-b", 102);
+            acquire(101);
+            release(101);
+            release(102);
+            let _ = t1.join();
+        });
+        let f = r.failure.expect("lock-order inversion must deadlock");
+        assert!(f.message.contains("deadlock"), "{}", f.message);
+        assert!(f.message.contains("waits on"), "{}", f.message);
+    }
+
+    fn race_free_body() {
+        let c = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let c = c.clone();
+                spawn(move || {
+                    point("add", 7);
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn race_free_body_passes_exhaustively() {
+        let r = explore(cfg(5000), race_free_body);
+        assert!(r.failure.is_none(), "{:?}", r.failure.map(|f| f.message));
+        assert!(r.exhausted, "small space must exhaust");
+        assert!(r.schedules > 1, "must explore more than one interleaving");
+    }
+
+    #[test]
+    fn same_seed_same_schedules_and_traces() {
+        let c = Config {
+            strategy: Strategy::Random,
+            max_iterations: 40,
+            seed: 0xC0FF_EE00,
+            ..Config::default()
+        };
+        let a = explore(c.clone(), race_free_body);
+        let b = explore(c, race_free_body);
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.schedules_taken, b.schedules_taken);
+        assert_eq!(a.trace_digests, b.trace_digests);
+    }
+
+    #[test]
+    fn different_seeds_reach_different_schedules() {
+        let mk = |seed| Config {
+            strategy: Strategy::Random,
+            max_iterations: 40,
+            seed,
+            ..Config::default()
+        };
+        let a = explore(mk(1), race_free_body);
+        let b = explore(mk(2), race_free_body);
+        assert_ne!(
+            a.schedules_taken, b.schedules_taken,
+            "distinct seeds should explore distinct schedule sequences"
+        );
+    }
+
+    #[test]
+    fn virtual_time_advances_without_real_sleep() {
+        let t0 = Instant::now();
+        let r = explore(cfg(100), || {
+            let before = virtual_now().unwrap();
+            sleep(Duration::from_secs(30));
+            let after = virtual_now().unwrap();
+            assert!(after - before >= Duration::from_secs(30), "clock must jump");
+        });
+        assert!(r.failure.is_none(), "{:?}", r.failure.map(|f| f.message));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "virtual sleep must not consume real time"
+        );
+    }
+
+    #[test]
+    fn sleepers_wake_in_deadline_order() {
+        let r = explore(cfg(500), || {
+            let order = Arc::new(AtomicUsize::new(0));
+            let o1 = order.clone();
+            let slow = spawn(move || {
+                sleep(Duration::from_millis(20));
+                // both sleepers parked before either deadline: the
+                // 10ms sleeper must have woken first
+                assert_eq!(o1.fetch_add(1, Ordering::SeqCst), 1, "woke before 10ms sleeper");
+            });
+            let o2 = order.clone();
+            let fast = spawn(move || {
+                sleep(Duration::from_millis(10));
+                o2.fetch_add(1, Ordering::SeqCst);
+            });
+            slow.join().unwrap();
+            fast.join().unwrap();
+        });
+        assert!(r.failure.is_none(), "{:?}", r.failure.map(|f| f.message));
+    }
+
+    #[test]
+    fn step_budget_catches_livelock() {
+        let c = Config {
+            max_steps: 200,
+            max_iterations: 5,
+            ..Config::default()
+        };
+        let r = explore(c, || {
+            for _ in 0..u64::MAX {
+                point("spin", 9);
+            }
+        });
+        let f = r.failure.expect("unbounded spin must trip the budget");
+        assert!(f.message.contains("livelock"), "{}", f.message);
+    }
+
+    #[test]
+    fn outside_model_ops_are_noops() {
+        assert!(!in_model());
+        point("noop", 0);
+        acquire(1);
+        release(1);
+        assert!(virtual_now().is_none());
+    }
+}

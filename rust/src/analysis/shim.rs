@@ -1,0 +1,648 @@
+//! Instrumented drop-in replacements for `std::sync` primitives, wired
+//! to the deterministic scheduler in [`super::sched`].
+//!
+//! Compiled only under `--cfg prognet_check`, and reached only through
+//! the [`crate::util::sync`] facade. Every type is dual-mode:
+//!
+//! - **Inside a model run** (the calling thread has a scheduler handle
+//!   in TLS): operations become scheduling points; blocking is logical
+//!   (the scheduler parks the thread) rather than OS-level, so the
+//!   checker controls every interleaving, detects deadlocks, and runs
+//!   timeouts on virtual time.
+//! - **Outside a model run**: operations defer to the wrapped std
+//!   primitive, so the rest of the test suite behaves normally even
+//!   when built with `--cfg prognet_check`.
+//!
+//! Modeled semantics (see the module docs on `sched` for rationale):
+//! atomics are sequentially consistent regardless of requested ordering;
+//! condvars have no spurious wakeups; `notify_one` wakes the lowest
+//! waiting thread id. A lock/condvar must be used either entirely inside
+//! models or entirely outside — mixing both on one object is unsupported.
+
+#![forbid(unsafe_code)]
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError, TryLockError};
+use std::time::Duration;
+
+use super::sched;
+
+/// Result of a timed condvar wait (mirrors `std::sync::WaitTimeoutResult`,
+/// which has no public constructor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Scheduler-aware mutex. Lock ownership is tracked logically by the
+/// model; the inner std mutex still guards the data itself (so the
+/// borrow rules and poisoning behave exactly like std).
+pub struct Mutex<T> {
+    res: usize,
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Self {
+            res: sched::new_resource_id(),
+            inner: std::sync::Mutex::new(value),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match sched::current() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    lock: self,
+                    inner: Some(g),
+                    model: false,
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    model: false,
+                })),
+            },
+            Some((state, tid)) => {
+                state.acquire_lock(tid, self.res);
+                // Logical ownership is ours; the std mutex can only be
+                // transiently contended (an aborting run unwinding, or a
+                // non-model thread misusing a model lock), so spin.
+                loop {
+                    match self.inner.try_lock() {
+                        Ok(g) => {
+                            return Ok(MutexGuard {
+                                lock: self,
+                                inner: Some(g),
+                                model: true,
+                            })
+                        }
+                        Err(TryLockError::Poisoned(p)) => {
+                            return Err(PoisonError::new(MutexGuard {
+                                lock: self,
+                                inner: Some(p.into_inner()),
+                                model: true,
+                            }))
+                        }
+                        Err(TryLockError::WouldBlock) => std::thread::yield_now(),
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    model: bool,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the std mutex before the logical release: when the
+        // scheduler hands the lock to a waiter, the data is available.
+        self.inner.take();
+        if self.model {
+            if let Some((state, tid)) = sched::current() {
+                state.release_lock(tid, self.lock.res);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+pub struct Condvar {
+    res: usize,
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self {
+            res: sched::new_resource_id(),
+            inner: std::sync::Condvar::new(),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if guard.model {
+            let (state, tid) = sched::current().expect("model guard on non-model thread");
+            let lock = guard.lock;
+            guard.inner.take();
+            guard.model = false; // neutralize Drop's logical release
+            drop(guard);
+            state.condvar_wait(tid, self.res, lock.res, None);
+            lock.lock()
+        } else {
+            let lock = guard.lock;
+            let std_guard = guard.inner.take().expect("guard already released");
+            drop(guard);
+            match self.inner.wait(std_guard) {
+                Ok(g) => Ok(MutexGuard {
+                    lock,
+                    inner: Some(g),
+                    model: false,
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock,
+                    inner: Some(p.into_inner()),
+                    model: false,
+                })),
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.model {
+            let (state, tid) = sched::current().expect("model guard on non-model thread");
+            let lock = guard.lock;
+            guard.inner.take();
+            guard.model = false;
+            drop(guard);
+            let timed_out = state.condvar_wait(tid, self.res, lock.res, Some(dur));
+            match lock.lock() {
+                Ok(g) => Ok((g, WaitTimeoutResult(timed_out))),
+                Err(p) => Err(PoisonError::new((
+                    p.into_inner(),
+                    WaitTimeoutResult(timed_out),
+                ))),
+            }
+        } else {
+            let lock = guard.lock;
+            let std_guard = guard.inner.take().expect("guard already released");
+            drop(guard);
+            match self.inner.wait_timeout(std_guard, dur) {
+                Ok((g, t)) => Ok((
+                    MutexGuard {
+                        lock,
+                        inner: Some(g),
+                        model: false,
+                    },
+                    WaitTimeoutResult(t.timed_out()),
+                )),
+                Err(p) => {
+                    let (g, t) = p.into_inner();
+                    Err(PoisonError::new((
+                        MutexGuard {
+                            lock,
+                            inner: Some(g),
+                            model: false,
+                        },
+                        WaitTimeoutResult(t.timed_out()),
+                    )))
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((state, tid)) = sched::current() {
+            state.notify(tid, self.res, false);
+        }
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((state, tid)) = sched::current() {
+            state.notify(tid, self.res, true);
+        }
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+/// Scheduler-aware reader-writer lock with true shared/exclusive
+/// semantics in the model (readers overlap; a writer excludes all).
+pub struct RwLock<T> {
+    res: usize,
+    inner: std::sync::RwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(value: T) -> Self {
+        Self {
+            res: sched::new_resource_id(),
+            inner: std::sync::RwLock::new(value),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        match sched::current() {
+            None => match self.inner.read() {
+                Ok(g) => Ok(RwLockReadGuard {
+                    lock: self,
+                    inner: Some(g),
+                    model: false,
+                }),
+                Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    model: false,
+                })),
+            },
+            Some((state, tid)) => {
+                state.acquire_read(tid, self.res);
+                loop {
+                    match self.inner.try_read() {
+                        Ok(g) => {
+                            return Ok(RwLockReadGuard {
+                                lock: self,
+                                inner: Some(g),
+                                model: true,
+                            })
+                        }
+                        Err(TryLockError::Poisoned(p)) => {
+                            return Err(PoisonError::new(RwLockReadGuard {
+                                lock: self,
+                                inner: Some(p.into_inner()),
+                                model: true,
+                            }))
+                        }
+                        Err(TryLockError::WouldBlock) => std::thread::yield_now(),
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        match sched::current() {
+            None => match self.inner.write() {
+                Ok(g) => Ok(RwLockWriteGuard {
+                    lock: self,
+                    inner: Some(g),
+                    model: false,
+                }),
+                Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    model: false,
+                })),
+            },
+            Some((state, tid)) => {
+                state.acquire_write(tid, self.res);
+                loop {
+                    match self.inner.try_write() {
+                        Ok(g) => {
+                            return Ok(RwLockWriteGuard {
+                                lock: self,
+                                inner: Some(g),
+                                model: true,
+                            })
+                        }
+                        Err(TryLockError::Poisoned(p)) => {
+                            return Err(PoisonError::new(RwLockWriteGuard {
+                                lock: self,
+                                inner: Some(p.into_inner()),
+                                model: true,
+                            }))
+                        }
+                        Err(TryLockError::WouldBlock) => std::thread::yield_now(),
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+    model: bool,
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        if self.model {
+            if let Some((state, tid)) = sched::current() {
+                state.release_read(tid, self.lock.res);
+            }
+        }
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+    model: bool,
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        if self.model {
+            if let Some((state, tid)) = sched::current() {
+                state.release_write(tid, self.lock.res);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+pub use std::sync::atomic::Ordering;
+
+macro_rules! int_atomic {
+    ($name:ident, $std:ty, $prim:ty) => {
+        /// Scheduler-aware atomic: every access is a scheduling point
+        /// inside a model and executes at `SeqCst` (the model checker
+        /// verifies interleavings, not weak-memory orderings).
+        pub struct $name {
+            inner: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self {
+                    inner: <$std>::new(v),
+                }
+            }
+
+            fn res(&self) -> usize {
+                self as *const Self as usize
+            }
+
+            pub fn load(&self, order: Ordering) -> $prim {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.load", self.res());
+                    self.inner.load(Ordering::SeqCst)
+                } else {
+                    self.inner.load(order)
+                }
+            }
+
+            pub fn store(&self, v: $prim, order: Ordering) {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.store", self.res());
+                    self.inner.store(v, Ordering::SeqCst)
+                } else {
+                    self.inner.store(v, order)
+                }
+            }
+
+            pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.rmw", self.res());
+                    self.inner.swap(v, Ordering::SeqCst)
+                } else {
+                    self.inner.swap(v, order)
+                }
+            }
+
+            pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.rmw", self.res());
+                    self.inner.fetch_add(v, Ordering::SeqCst)
+                } else {
+                    self.inner.fetch_add(v, order)
+                }
+            }
+
+            pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.rmw", self.res());
+                    self.inner.fetch_sub(v, Ordering::SeqCst)
+                } else {
+                    self.inner.fetch_sub(v, order)
+                }
+            }
+
+            pub fn fetch_max(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.rmw", self.res());
+                    self.inner.fetch_max(v, Ordering::SeqCst)
+                } else {
+                    self.inner.fetch_max(v, order)
+                }
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                if let Some((state, tid)) = sched::current() {
+                    state.atomic_op(tid, "atomic.rmw", self.res());
+                    self.inner
+                        .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+                } else {
+                    self.inner
+                        .compare_exchange(current, new, _success, _failure)
+                }
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new(<$prim>::default())
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                self.inner.fmt(f)
+            }
+        }
+    };
+}
+
+int_atomic!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+int_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+/// Scheduler-aware `AtomicBool` (see the int atomics above).
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self {
+            inner: std::sync::atomic::AtomicBool::new(v),
+        }
+    }
+
+    fn res(&self) -> usize {
+        self as *const Self as usize
+    }
+
+    pub fn load(&self, order: Ordering) -> bool {
+        if let Some((state, tid)) = sched::current() {
+            state.atomic_op(tid, "atomic.load", self.res());
+            self.inner.load(Ordering::SeqCst)
+        } else {
+            self.inner.load(order)
+        }
+    }
+
+    pub fn store(&self, v: bool, order: Ordering) {
+        if let Some((state, tid)) = sched::current() {
+            state.atomic_op(tid, "atomic.store", self.res());
+            self.inner.store(v, Ordering::SeqCst)
+        } else {
+            self.inner.store(v, order)
+        }
+    }
+
+    pub fn swap(&self, v: bool, order: Ordering) -> bool {
+        if let Some((state, tid)) = sched::current() {
+            state.atomic_op(tid, "atomic.rmw", self.res());
+            self.inner.swap(v, Ordering::SeqCst)
+        } else {
+            self.inner.swap(v, order)
+        }
+    }
+
+    pub fn fetch_or(&self, v: bool, order: Ordering) -> bool {
+        if let Some((state, tid)) = sched::current() {
+            state.atomic_op(tid, "atomic.rmw", self.res());
+            self.inner.fetch_or(v, Ordering::SeqCst)
+        } else {
+            self.inner.fetch_or(v, order)
+        }
+    }
+
+    pub fn fetch_and(&self, v: bool, order: Ordering) -> bool {
+        if let Some((state, tid)) = sched::current() {
+            state.atomic_op(tid, "atomic.rmw", self.res());
+            self.inner.fetch_and(v, Ordering::SeqCst)
+        } else {
+            self.inner.fetch_and(v, order)
+        }
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        if let Some((state, tid)) = sched::current() {
+            state.atomic_op(tid, "atomic.rmw", self.res());
+            self.inner
+                .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+        } else {
+            self.inner.compare_exchange(current, new, success, failure)
+        }
+    }
+}
+
+impl Default for AtomicBool {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+impl fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}

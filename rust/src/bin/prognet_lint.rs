@@ -1,0 +1,425 @@
+//! `prognet-lint`: zero-dependency, line-oriented enforcement of the
+//! repo's concurrency invariants (the ones the compiler can't check and
+//! review vigilance shouldn't have to).
+//!
+//! Rules (catalog + rationale: `rust/docs/ANALYSIS.md`):
+//!
+//! - `direct-sync-import` — sync primitives must come from the
+//!   `util::sync` facade, not `std::sync`, or the model checker can't
+//!   see them.
+//! - `unsafe-outside-allowlist` — `unsafe` only in the quarantined FFI
+//!   modules; everything else carries `#![forbid(unsafe_code)]`.
+//! - `wall-clock-in-protocol` — protocol code takes time from the clock
+//!   facade / an injected `Clock`, never `Instant::now()` directly.
+//! - `alloc-in-hot-path` — no allocation between `// lint:hot-path` and
+//!   `// lint:end-hot-path` markers.
+//! - `ordering-relaxed-shared` — `Ordering::Relaxed` requires an
+//!   explicit waiver explaining why no ordering is needed.
+//!
+//! Waivers: `// lint:allow <rule>` on the offending line, or a
+//! `<rule> <path>` entry in `lint-allow.txt` (regenerate with
+//! `prognet-lint --fix-allowlist`). Exits nonzero on violations.
+//!
+//! Run from `rust/`: `cargo run --bin prognet-lint`.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+const RULES: [&str; 5] = [
+    "direct-sync-import",
+    "unsafe-outside-allowlist",
+    "wall-clock-in-protocol",
+    "alloc-in-hot-path",
+    "ordering-relaxed-shared",
+];
+
+/// Path prefixes whose non-test code is "protocol code" for the
+/// wall-clock rule: state machines and caches whose timing behavior the
+/// deterministic tests must control.
+const PROTOCOL_PREFIXES: [&str; 5] = [
+    "src/fleet/",
+    "src/client/",
+    "src/server/",
+    "src/coordinator/",
+    "src/netsim/",
+];
+
+/// Source tokens that allocate (scanned only inside hot-path regions).
+const ALLOC_TOKENS: [&str; 8] = [
+    "vec!",
+    "Vec::new",
+    "Vec::with_capacity",
+    "String::new",
+    "Box::new",
+    "to_vec()",
+    "to_string()",
+    "format!",
+];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    text: String,
+}
+
+/// File-level waivers parsed from `lint-allow.txt`.
+#[derive(Default)]
+struct AllowList {
+    entries: BTreeSet<(String, String)>,
+}
+
+impl AllowList {
+    fn parse(text: &str) -> Self {
+        let mut entries = BTreeSet::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((rule, path)) = line.split_once(char::is_whitespace) {
+                entries.insert((rule.trim().to_string(), path.trim().to_string()));
+            }
+        }
+        Self { entries }
+    }
+
+    fn allows(&self, rule: &str, file: &str) -> bool {
+        self.entries
+            .contains(&(rule.to_string(), file.to_string()))
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::from(
+            "# prognet-lint file-level waivers: `<rule> <path>` per line.\n\
+             # Regenerate with `cargo run --bin prognet-lint -- --fix-allowlist`.\n",
+        );
+        for (rule, path) in &self.entries {
+            out.push_str(rule);
+            out.push(' ');
+            out.push_str(path);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Code portion of a source line: strips a trailing `//` comment (which
+/// also drops whole-line `//`/`//!`/`///` comments). A `//` inside a
+/// string literal truncates too — acceptable for a line-oriented lint.
+fn code_of(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Does the line carry an inline waiver for `rule`?
+fn line_waives(line: &str, rule: &str) -> bool {
+    line.find("lint:allow")
+        .map(|i| line[i + "lint:allow".len()..].trim_start().starts_with(rule))
+        .unwrap_or(false)
+}
+
+/// Word-boundary search: `needle` not embedded in a larger identifier.
+fn has_word(code: &str, needle: &str) -> bool {
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut start = 0;
+    while let Some(i) = code[start..].find(needle) {
+        let at = start + i;
+        let before_ok = at == 0 || !code[..at].chars().next_back().is_some_and(is_ident);
+        let after_ok = !code[at + needle.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+fn is_protocol_file(file: &str) -> bool {
+    PROTOCOL_PREFIXES.iter().any(|p| file.starts_with(p))
+}
+
+fn scan_file(file: &str, content: &str, allow: &AllowList) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut in_hot_path = false;
+    let mut in_tests = false;
+    let mut push = |rule: &'static str, lineno: usize, raw: &str| {
+        if !allow.allows(rule, file) && !line_waives(raw, rule) {
+            out.push(Violation {
+                file: file.to_string(),
+                line: lineno,
+                rule,
+                text: raw.trim().to_string(),
+            });
+        }
+    };
+    for (i, raw) in content.lines().enumerate() {
+        let lineno = i + 1;
+        // region / section markers come from the raw line (they live in
+        // comments, which code_of strips); the end marker is checked
+        // first because "lint:hot-path" is a substring of it
+        if raw.contains("lint:end-hot-path") {
+            in_hot_path = false;
+            continue;
+        }
+        if raw.contains("lint:hot-path") {
+            in_hot_path = true;
+            continue;
+        }
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            // repo convention: the test module is the tail of the file
+            in_tests = true;
+        }
+        let code = code_of(raw);
+        if code.trim().is_empty() {
+            continue;
+        }
+        if code.contains("use std::sync::")
+            || code.contains("std::sync::Mutex")
+            || code.contains("std::sync::RwLock")
+            || code.contains("std::sync::Condvar")
+            || code.contains("std::sync::atomic::")
+        {
+            push("direct-sync-import", lineno, raw);
+        }
+        if has_word(code, "unsafe") {
+            push("unsafe-outside-allowlist", lineno, raw);
+        }
+        if !in_tests
+            && is_protocol_file(file)
+            && (code.contains("Instant::now()")
+                || code.contains("SystemTime::now()")
+                || code.contains("thread::sleep"))
+        {
+            push("wall-clock-in-protocol", lineno, raw);
+        }
+        if in_hot_path && ALLOC_TOKENS.iter().any(|t| code.contains(t)) {
+            push("alloc-in-hot-path", lineno, raw);
+        }
+        if !in_tests && code.contains("Ordering::Relaxed") {
+            push("ordering-relaxed-shared", lineno, raw);
+        }
+    }
+    out
+}
+
+fn rust_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join("src")];
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&dir) else {
+            continue;
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn run(args: &[String]) -> i32 {
+    let mut fix = false;
+    let mut root = PathBuf::from(".");
+    let mut allow_path: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--fix-allowlist" => fix = true,
+            "--root" => match it.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("--root needs a path");
+                    return 2;
+                }
+            },
+            "--allowlist" => match it.next() {
+                Some(p) => allow_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--allowlist needs a path");
+                    return 2;
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: prognet-lint [--root DIR] [--allowlist FILE] [--fix-allowlist]");
+                return 0;
+            }
+            other => {
+                eprintln!("unknown argument: {other}");
+                return 2;
+            }
+        }
+    }
+    let allow_path = allow_path.unwrap_or_else(|| root.join("lint-allow.txt"));
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => AllowList::parse(&text),
+        Err(_) => AllowList::default(),
+    };
+
+    let mut violations = Vec::new();
+    for path in rust_files(&root) {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(content) = std::fs::read_to_string(&path) else {
+            continue;
+        };
+        violations.extend(scan_file(&rel, &content, &allow));
+    }
+
+    if fix {
+        let mut next = AllowList {
+            entries: allow.entries.clone(),
+        };
+        for v in &violations {
+            next.entries.insert((v.rule.to_string(), v.file.clone()));
+        }
+        if let Err(e) = std::fs::write(&allow_path, next.render()) {
+            eprintln!("cannot write {}: {e}", allow_path.display());
+            return 2;
+        }
+        println!(
+            "allowlist updated: {} waiver(s) in {}",
+            next.entries.len(),
+            allow_path.display()
+        );
+        return 0;
+    }
+
+    for v in &violations {
+        println!("{}:{}: {} — {}", v.file, v.line, v.rule, v.text);
+    }
+    if violations.is_empty() {
+        println!("prognet-lint: clean ({} rules)", RULES.len());
+        0
+    } else {
+        println!("prognet-lint: {} violation(s)", violations.len());
+        1
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(run(&args));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(file: &str, content: &str) -> Vec<&'static str> {
+        scan_file(file, content, &AllowList::default())
+            .into_iter()
+            .map(|v| v.rule)
+            .collect()
+    }
+
+    #[test]
+    fn flags_direct_sync_import() {
+        let src = "use std::sync::Mutex;\n";
+        assert_eq!(scan("src/foo.rs", src), vec!["direct-sync-import"]);
+        let ok = "use crate::util::sync::Mutex;\n";
+        assert!(scan("src/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn flags_inline_sync_paths_but_not_arc() {
+        let src = "let m = std::sync::Mutex::new(0);\n";
+        assert_eq!(scan("src/foo.rs", src), vec!["direct-sync-import"]);
+        let ok = "let a = std::sync::Arc::new(0);\n";
+        assert!(scan("src/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn flags_unsafe_but_not_in_comments_or_idents() {
+        assert_eq!(
+            scan("src/foo.rs", "let x = unsafe { *p };\n"),
+            vec!["unsafe-outside-allowlist"]
+        );
+        assert!(scan("src/foo.rs", "// unsafe is discussed here\n").is_empty());
+        assert!(scan("src/foo.rs", "#![forbid(unsafe_code)]\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_only_in_protocol_paths_and_not_tests() {
+        let src = "let t = Instant::now();\n";
+        assert_eq!(scan("src/fleet/x.rs", src), vec!["wall-clock-in-protocol"]);
+        assert!(scan("src/util/x.rs", src).is_empty());
+        let tested = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        assert!(scan("src/fleet/x.rs", tested).is_empty());
+    }
+
+    #[test]
+    fn alloc_flagged_only_inside_hot_regions() {
+        let src = "fn f() {\n    let v = vec![1];\n}\n";
+        assert!(scan("src/foo.rs", src).is_empty());
+        let hot =
+            "fn f() {\n    // lint:hot-path\n    let v = vec![1];\n    // lint:end-hot-path\n}\n";
+        assert_eq!(scan("src/foo.rs", hot), vec!["alloc-in-hot-path"]);
+    }
+
+    #[test]
+    fn relaxed_needs_a_waiver() {
+        let src = "x.load(Ordering::Relaxed);\n";
+        assert_eq!(scan("src/foo.rs", src), vec!["ordering-relaxed-shared"]);
+        let waived = "x.load(Ordering::Relaxed); // lint:allow ordering-relaxed-shared\n";
+        assert!(scan("src/foo.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn file_allowlist_waives() {
+        let allow = AllowList::parse("direct-sync-import src/foo.rs\n");
+        let v = scan_file("src/foo.rs", "use std::sync::Mutex;\n", &allow);
+        assert!(v.is_empty());
+        let v = scan_file("src/bar.rs", "use std::sync::Mutex;\n", &allow);
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn allowlist_roundtrips_through_render() {
+        let a = AllowList::parse("b-rule src/b.rs\na-rule src/a.rs\n# comment\n");
+        let b = AllowList::parse(&a.render());
+        assert_eq!(a.entries, b.entries);
+    }
+
+    #[test]
+    fn repo_tree_is_clean() {
+        // the committed tree must lint clean with the committed allowlist
+        // (CI runs the binary; this is the in-process equivalent)
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let allow_text =
+            std::fs::read_to_string(root.join("lint-allow.txt")).unwrap_or_default();
+        let allow = AllowList::parse(&allow_text);
+        let mut violations = Vec::new();
+        for path in rust_files(&root) {
+            let rel = path
+                .strip_prefix(&root)
+                .unwrap()
+                .to_string_lossy()
+                .replace('\\', "/");
+            let content = std::fs::read_to_string(&path).unwrap();
+            violations.extend(scan_file(&rel, &content, &allow));
+        }
+        assert!(
+            violations.is_empty(),
+            "lint violations in tree:\n{}",
+            violations
+                .iter()
+                .map(|v| format!("{}:{}: {} — {}", v.file, v.line, v.rule, v.text))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

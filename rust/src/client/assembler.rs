@@ -18,6 +18,8 @@
 //! longer contains an `O(param_count)` dequant pass — Eq. 5 runs while
 //! the next bytes are still in flight.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::format::header::PnetManifest;
@@ -207,6 +209,13 @@ impl Assembler {
     /// key ([`infer_quantized_versioned`]).
     ///
     /// [`infer_quantized_versioned`]: crate::runtime::ModelSession::infer_quantized_versioned
+    ///
+    /// Publication safety: `version` is a plain field mutated only under
+    /// `&mut self`; cross-thread visibility comes from the lock that owns
+    /// the assembler (e.g. `ApproxModel`'s `RwLock` cell), whose
+    /// release/acquire edge publishes the bump together with the code
+    /// bytes it describes. No atomic is involved, so there is no ordering
+    /// to get wrong here — keep it that way.
     pub fn codes_version(&self) -> u64 {
         self.version
     }

@@ -6,6 +6,8 @@
 //! costs only the missing bytes. Completed containers are reused without
 //! touching the network.
 
+#![forbid(unsafe_code)]
+
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
@@ -193,7 +195,7 @@ mod tests {
     use super::*;
     use crate::server::service::ServerConfig;
     use crate::server::{Repository, Server};
-    use std::sync::Arc;
+    use crate::util::sync::Arc;
 
     fn setup() -> Option<(Server, Arc<Repository>, ModelCache)> {
         if !crate::artifacts_available() {

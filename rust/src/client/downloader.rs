@@ -3,9 +3,12 @@
 //! resume an interrupted fetch at the last complete stage boundary
 //! (re-requesting only `stages: boundary..end` — no byte-offset guessing).
 
+#![forbid(unsafe_code)]
+
 use std::io::Read;
 use std::net::TcpStream;
 use std::time::Instant;
+use crate::util::sync::clock;
 
 use anyhow::Result;
 
@@ -79,7 +82,7 @@ impl Downloader {
         Ok(Self {
             stream,
             parser,
-            start: Instant::now(),
+            start: clock::now(),
             total_size: resp.total,
             addr: *addr,
             req,
@@ -119,7 +122,7 @@ impl Downloader {
         Ok(Self {
             stream,
             parser,
-            start: Instant::now(),
+            start: clock::now(),
             total_size: bytes_already + resp.remaining,
             addr: *addr,
             req: wire_req,
@@ -154,7 +157,7 @@ impl Downloader {
     /// would stall a slow HTTP stream. Sticky: sockets opened by a later
     /// [`Downloader::resume_at_stage`] get the same treatment.
     pub fn set_small_recv_buffer(&mut self) -> Result<()> {
-        shrink_recv_buffer(&self.stream)?;
+        crate::util::sys::shrink_recv_buffer(&self.stream)?;
         self.small_recv_buffer = true;
         Ok(())
     }
@@ -233,7 +236,7 @@ impl Downloader {
             }
         }
         if self.small_recv_buffer {
-            let _ = shrink_recv_buffer(&stream);
+            let _ = crate::util::sys::shrink_recv_buffer(&stream);
         }
         if let Some(cap) = &mut self.capture {
             // keep the record a canonical byte prefix: drop any bytes of
@@ -302,55 +305,6 @@ impl Downloader {
     }
 }
 
-/// Shrink a socket's kernel receive buffer so an unread stream actually
-/// stalls the sender.
-///
-/// Raw `setsockopt` with the common Linux constants inlined — `anyhow`
-/// is the crate's only dependency, so no `libc`. The constants differ on
-/// mips/sparc, so those arches (and non-Linux platforms) take the no-op
-/// path below: the call is best-effort backpressure shaping for the
-/// serial-mode ablation, not a correctness requirement.
-#[cfg(all(
-    any(target_os = "linux", target_os = "android"),
-    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
-))]
-fn shrink_recv_buffer(stream: &TcpStream) -> Result<()> {
-    use std::os::fd::AsRawFd;
-    const SOL_SOCKET: i32 = 1;
-    const SO_RCVBUF: i32 = 8;
-    extern "C" {
-        fn setsockopt(
-            fd: i32,
-            level: i32,
-            optname: i32,
-            optval: *const core::ffi::c_void,
-            optlen: u32,
-        ) -> i32;
-    }
-    let fd = stream.as_raw_fd();
-    let size: i32 = 16 * 1024;
-    let rc = unsafe {
-        setsockopt(
-            fd,
-            SOL_SOCKET,
-            SO_RCVBUF,
-            &size as *const i32 as *const core::ffi::c_void,
-            std::mem::size_of::<i32>() as u32,
-        )
-    };
-    anyhow::ensure!(rc == 0, "setsockopt(SO_RCVBUF) failed");
-    Ok(())
-}
-
-/// No-op on platforms where the inlined constants don't apply.
-#[cfg(not(all(
-    any(target_os = "linux", target_os = "android"),
-    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
-)))]
-fn shrink_recv_buffer(_stream: &TcpStream) -> Result<()> {
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,7 +314,7 @@ mod tests {
     use crate::server::service::ServerConfig;
     use crate::server::{Repository, Server};
     use crate::testutil::fixture::{fixture_root, write_index, write_model};
-    use std::sync::Arc;
+    use crate::util::sync::Arc;
 
     fn synthetic_server(tag: &str) -> (Server, Arc<Repository>) {
         crate::testutil::fixture::synthetic_server(tag).unwrap()

@@ -18,6 +18,8 @@
 //! [`progressive::ProgressiveClient`] and [`multiplex::MultiplexClient`],
 //! survive as thin deprecated wrappers over the session driver.
 
+#![forbid(unsafe_code)]
+
 pub mod assembler;
 pub mod cache;
 pub mod downloader;

@@ -11,6 +11,8 @@
 //! (`ProgressiveSession::multiplex()`) to observe per-stage events and
 //! bind runtimes for mid-download serving of every model.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::Result;
@@ -111,7 +113,7 @@ mod tests {
     use super::*;
     use crate::format::PnetReader;
     use crate::testutil::fixture::synthetic_server;
-    use std::sync::atomic::Ordering;
+    use crate::util::sync::atomic::Ordering;
 
     #[test]
     fn two_models_interleaved_on_one_connection() {

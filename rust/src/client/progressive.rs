@@ -10,7 +10,9 @@
 //! events and the hot-swapping
 //! [`ApproxModel`](crate::runtime::ApproxModel) this wrapper discards.
 
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::Arc;
 
 use anyhow::Result;
 
@@ -100,7 +102,7 @@ mod tests {
     use crate::runtime::Engine;
     use crate::server::service::ServerConfig;
     use crate::server::{Repository, Server};
-    use std::sync::Arc;
+    use crate::util::sync::Arc;
 
     fn setup() -> Option<(Server, ModelSession, Vec<f32>)> {
         if !crate::artifacts_available() {

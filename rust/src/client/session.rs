@@ -60,10 +60,13 @@
 //! # Ok(()) }
 //! ```
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
-use std::sync::Arc;
+use crate::util::sync::clock;
+use crate::util::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -1007,7 +1010,7 @@ fn drive_single(
         workload: workload.as_ref(),
         approx: approx_map.get(&model),
         q,
-        start: Instant::now(),
+        start: clock::now(),
         timeline: Timeline::new(),
         results: Vec::new(),
         order: Vec::new(),
@@ -1220,7 +1223,7 @@ fn drive_multiplex(
 ) -> Result<SessionReport> {
     let addr = cfg.addr;
     let specs = cfg.specs;
-    let start = Instant::now();
+    let start = clock::now();
     let mut stream = TcpStream::connect(addr)
         .with_context(|| format!("{} {addr}", crate::server::service::CONNECT_CONTEXT))?;
     stream.set_nodelay(true)?;
@@ -1493,7 +1496,7 @@ mod tests {
 
     #[test]
     fn multiplexed_session_interleaves_on_one_connection() {
-        use std::sync::atomic::Ordering;
+        use crate::util::sync::atomic::Ordering;
         let (server, _repo) = synthetic_server("sess-mux").unwrap();
         let handle = ProgressiveSession::multiplex()
             .addr(server.addr())

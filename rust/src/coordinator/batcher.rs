@@ -6,8 +6,11 @@
 //! model that is still downloading serves requests with whatever
 //! approximation has arrived and upgrades transparently (§III-C).
 
-use std::sync::mpsc;
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::mpsc;
+use crate::util::sync::clock;
+use crate::util::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -60,7 +63,7 @@ pub struct Batcher {
     queue: BoundedQueue<Request>,
     worker: Option<JoinHandle<()>>,
     input_numel: usize,
-    stats: Arc<std::sync::Mutex<Histogram>>,
+    stats: Arc<crate::util::sync::Mutex<Histogram>>,
 }
 
 impl Batcher {
@@ -71,7 +74,7 @@ impl Batcher {
         let queue: BoundedQueue<Request> = BoundedQueue::new(config.queue_cap);
         let q = queue.clone();
         let input_numel = model.manifest().input_numel();
-        let stats = Arc::new(std::sync::Mutex::new(Histogram::new()));
+        let stats = Arc::new(crate::util::sync::Mutex::new(Histogram::new()));
         let stats2 = stats.clone();
         let worker = std::thread::Builder::new()
             .name(format!("batcher-{}", model.manifest().name))
@@ -104,7 +107,7 @@ impl Batcher {
         let (tx, rx) = mpsc::channel();
         let ok = self.queue.push(Request {
             image,
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
             reply: tx,
         });
         anyhow::ensure!(ok, "batcher is shut down");
@@ -140,7 +143,7 @@ fn batch_loop(
     queue: BoundedQueue<Request>,
     model: ApproxModel,
     config: BatcherConfig,
-    stats: Arc<std::sync::Mutex<Histogram>>,
+    stats: Arc<crate::util::sync::Mutex<Histogram>>,
 ) {
     let session = model.session().clone();
     let input_numel = session.manifest().input_numel();
@@ -151,17 +154,17 @@ fn batch_loop(
     loop {
         // Block for the first request of the batch.
         let Some(first) = queue.pop() else { break };
-        let deadline = Instant::now() + config.max_delay;
+        let deadline = clock::now() + config.max_delay;
         batch.clear();
         batch.push(first);
         while batch.len() < config.max_batch {
             match queue.try_pop() {
                 Some(r) => batch.push(r),
                 None => {
-                    if Instant::now() >= deadline {
+                    if clock::now() >= deadline {
                         break;
                     }
-                    std::thread::sleep(Duration::from_micros(200));
+                    clock::sleep(Duration::from_micros(200));
                 }
             }
         }

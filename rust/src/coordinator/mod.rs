@@ -17,6 +17,8 @@
 //!   completed stages to run inference on, given measured inference cost
 //!   vs stage inter-arrival time.
 
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod router;
 pub mod scheduler;

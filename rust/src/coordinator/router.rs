@@ -7,8 +7,10 @@
 //! a `client::session::ProgressiveSession`) so the router serves a model
 //! that is still downloading and upgrades as stages complete.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::util::sync::{Arc, Mutex};
 
 use anyhow::Result;
 

@@ -12,6 +12,8 @@
 //! orders (model, stage) pairs by weighted-fair virtual time.
 
 /// Decision for a newly completed stage.
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerDecision {
     /// Run inference on this stage.

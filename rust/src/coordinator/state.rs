@@ -1,8 +1,10 @@
 //! Shared coordinator state: hot-swappable weights + client session table.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex, RwLock};
 
 use crate::runtime::{ApproxModel, ModelSession};
 

@@ -1,5 +1,7 @@
 //! Classification metrics.
 
+#![forbid(unsafe_code)]
+
 use crate::runtime::InferOutput;
 
 /// Top-1 accuracy of `out` (class logits in the first `classes` columns)

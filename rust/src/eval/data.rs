@@ -1,5 +1,7 @@
 //! Evaluation dataset loader (`artifacts/data/<name>/`).
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 
 use anyhow::{bail, Result};

@@ -7,6 +7,8 @@
 //! averaged over thresholds. Same saturation behaviour vs bit-width as
 //! COCO boxAP, with far less machinery.
 
+#![forbid(unsafe_code)]
+
 use crate::runtime::InferOutput;
 
 /// IoU of two (cx, cy, w, h) boxes.

@@ -7,7 +7,9 @@
 //! virtual-time [`Link`](crate::netsim::Link) at the paper's speeds (see
 //! DESIGN.md §2 for why this preserves shape).
 
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;

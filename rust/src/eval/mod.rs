@@ -1,6 +1,8 @@
 //! Evaluation: eval-set loading, classification/detection metrics, and
 //! the paper-table harnesses shared by benches and examples.
 
+#![forbid(unsafe_code)]
+
 pub mod accuracy;
 pub mod data;
 pub mod detection;

@@ -12,7 +12,9 @@
 //! containers: every admitted client still reaches `ModelReady`, just at
 //! lower precision.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+#![forbid(unsafe_code)]
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use anyhow::{bail, Result};

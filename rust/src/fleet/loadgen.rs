@@ -17,9 +17,11 @@
 //! [`SloReport`]. Thread count is `O(clients)` on the load side — the
 //! point of the exercise is that the *server* stays `O(workers)`.
 
+#![forbid(unsafe_code)]
+
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};

@@ -46,7 +46,7 @@ pub use loadgen::{Cohort, FleetOptions, Scenario};
 pub use reactor::{FleetConfig, Reactor};
 pub use slo::{ClientSample, Outcome, SloReport};
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 use crate::metrics::Table;
 
@@ -83,7 +83,11 @@ impl ServerStats {
     /// Snapshot the counters as a [`metrics::Table`](crate::metrics::Table)
     /// — what `prognet serve` logs periodically.
     pub fn table(&self) -> Table {
-        let g = |c: &AtomicU64| c.load(Ordering::Relaxed).to_string();
+        // SeqCst to match the shard-side writers: a snapshot taken after a
+        // connection completes must observe all of that connection's
+        // counter bumps (tests assert exact totals across shard threads,
+        // which Relaxed reads would not guarantee).
+        let g = |c: &AtomicU64| c.load(Ordering::SeqCst).to_string();
         let mut t = Table::new(
             "server counters",
             &[
@@ -97,7 +101,7 @@ impl ServerStats {
             g(&self.connections),
             g(&self.requests),
             g(&self.stages_served),
-            crate::util::stats::fmt_bytes(self.bytes_sent.load(Ordering::Relaxed)),
+            crate::util::stats::fmt_bytes(self.bytes_sent.load(Ordering::SeqCst)),
             g(&self.shed),
             g(&self.degraded),
             g(&self.evicted),
@@ -114,8 +118,8 @@ mod tests {
     #[test]
     fn stats_table_renders_all_counters() {
         let s = ServerStats::default();
-        s.connections.store(3, Ordering::Relaxed);
-        s.bytes_sent.store(2048, Ordering::Relaxed);
+        s.connections.store(3, Ordering::SeqCst);
+        s.bytes_sent.store(2048, Ordering::SeqCst);
         let rendered = s.table().render();
         assert!(rendered.contains("active"));
         assert!(rendered.contains("2.0 KB"));

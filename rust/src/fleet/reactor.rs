@@ -14,11 +14,14 @@
 //! std — no pipes, no external deps), the same trick the blocking
 //! accept loop has always used for shutdown.
 
+#![forbid(unsafe_code)]
+
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::clock;
+use crate::util::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -275,7 +278,7 @@ fn accept_loop(
                         stats.queued_total.fetch_add(1, Ordering::SeqCst);
                         Incoming::Queued {
                             stream,
-                            deadline: Instant::now() + deadline,
+                            deadline: clock::now() + deadline,
                         }
                     }
                     Decision::Reject => {
@@ -293,7 +296,7 @@ fn accept_loop(
                     break;
                 }
                 crate::log_warn!("accept error: {e}");
-                std::thread::sleep(Duration::from_millis(10));
+                clock::sleep(Duration::from_millis(10));
             }
         }
     }
@@ -360,7 +363,7 @@ fn shard_loop(ctx: ShardCtx) {
         }
 
         // ---- queued conns: expire past-deadline, promote into free slots
-        let now = Instant::now();
+        let now = clock::now();
         while let Some((_, deadline)) = queued.front() {
             if *deadline <= now {
                 let (stream, _) = queued.pop_front().unwrap();
@@ -386,7 +389,7 @@ fn shard_loop(ctx: ShardCtx) {
         }
 
         // ---- wait for readiness or the nearest deadline
-        let now = Instant::now();
+        let now = clock::now();
         let mut interests = Vec::with_capacity(conns.len() + 1);
         interests.push(Interest {
             fd: poll::raw_fd(&ctx.wake_rx),
@@ -421,13 +424,13 @@ fn shard_loop(ctx: ShardCtx) {
         let mut closed: Vec<(usize, Step)> = Vec::new();
         for (i, slot) in conns.iter_mut().enumerate() {
             let r = ready[i + 1];
-            let now = Instant::now();
+            let now = clock::now();
             let mut step = Step::Open;
             if r.read || r.write || r.closed || slot.conn.wants_write(now) {
                 step = slot.conn.on_ready(&ctx.repo, &ctx.conn_cfg, &ctx.stats);
             }
             if step == Step::Open {
-                if let Some(s) = slot.conn.on_deadline(Instant::now(), &ctx.conn_cfg) {
+                if let Some(s) = slot.conn.on_deadline(clock::now(), &ctx.conn_cfg) {
                     if matches!(s, Step::Failed(_)) {
                         ctx.stats.evicted.fetch_add(1, Ordering::SeqCst);
                     }

@@ -10,6 +10,8 @@
 //! live — the paper's headline moment), and **accept → finished** (full
 //! container delivered).
 
+#![forbid(unsafe_code)]
+
 use crate::metrics::Table;
 use crate::util::json::{self, Json};
 use crate::util::stats::{fmt_bytes, fmt_secs, Summary};

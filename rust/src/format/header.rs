@@ -1,5 +1,7 @@
 //! `.pnet` header and manifest structures.
 
+#![forbid(unsafe_code)]
+
 use std::ops::Range;
 
 use anyhow::{bail, Result};

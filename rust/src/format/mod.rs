@@ -19,6 +19,8 @@
 //! itself is exactly the singleton quantized size (paper §III-B: no model
 //! size inflation).
 
+#![forbid(unsafe_code)]
+
 pub mod header;
 pub mod reader;
 pub mod writer;

@@ -2,6 +2,8 @@
 //! parser that consumes arbitrary byte chunks as they arrive from the
 //! network — the entry point of the progressive client pipeline.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use super::header::{FragmentHeader, PnetManifest, FRAG_HEADER_LEN, MAGIC, VERSION};

@@ -1,5 +1,7 @@
 //! `.pnet` encoder: float weights → quantize → bit-divide → framed bytes.
 
+#![forbid(unsafe_code)]
+
 use std::io::Write;
 
 use anyhow::{bail, Result};

@@ -39,6 +39,7 @@
 // the module that needs it.
 #![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 
+pub mod analysis;
 pub mod client;
 pub mod coordinator;
 pub mod eval;

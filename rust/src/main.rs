@@ -10,7 +10,9 @@
 //!   study    — run the simulated user study (Table III / Fig 8)
 //!   models   — list models available in the artifacts registry
 
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;

@@ -1,6 +1,8 @@
 //! Fixed-bucket latency histogram (log-spaced), for serving metrics.
 
 /// Log-spaced histogram from 1µs to ~100s.
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone)]
 pub struct Histogram {
     buckets: Vec<u64>,

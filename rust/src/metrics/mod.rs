@@ -1,5 +1,7 @@
 //! Metrics: event timelines (Fig 4), histograms and table reporters.
 
+#![forbid(unsafe_code)]
+
 pub mod hist;
 pub mod report;
 pub mod timeline;

@@ -2,6 +2,8 @@
 //! bench harnesses report (Tables I–III).
 
 /// Simple column-aligned table builder.
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone, Default)]
 pub struct Table {
     title: String,

@@ -4,6 +4,8 @@
 //! the same event stream; the Fig 4 bench renders it as ASCII lanes.
 
 /// What happened at a point in (virtual or wall) time.
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
     /// transfer of stage `i`'s bytes started

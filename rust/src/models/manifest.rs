@@ -1,5 +1,7 @@
 //! Per-model artifact manifest (`artifacts/models/<name>/manifest.json`).
 
+#![forbid(unsafe_code)]
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};

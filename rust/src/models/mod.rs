@@ -5,6 +5,8 @@
 //! provides the [`Registry`] used by the server, the coordinator and the
 //! evaluation harnesses.
 
+#![forbid(unsafe_code)]
+
 pub mod manifest;
 pub mod registry;
 

@@ -1,5 +1,7 @@
 //! Model registry: discovers every model under `artifacts/models/`.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::path::Path;
 

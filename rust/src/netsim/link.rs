@@ -2,6 +2,8 @@
 //! Fig 4 timeline computations and of the user-study simulator.
 
 /// A link configuration (paper speeds: 0.1–2.5 MB/s).
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinkSpec {
     /// bandwidth in bytes/second

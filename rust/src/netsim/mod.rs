@@ -12,6 +12,8 @@
 //! The paper's experiments use 0.1 / 0.2 / 0.5 / 1.0 / 2.5 MB/s links;
 //! [`LinkSpec`] captures those configurations.
 
+#![forbid(unsafe_code)]
+
 pub mod link;
 pub mod throttle;
 pub mod trace;

@@ -14,10 +14,13 @@
 //! One-way latency is a property of the blocking writer only (it sleeps
 //! once before the first byte); the bucket itself is pure rate.
 
+#![forbid(unsafe_code)]
+
 use std::io::{self, Write};
 use std::time::{Duration, Instant};
 
 use super::link::LinkSpec;
+use crate::util::sync::{clock, Clock};
 
 /// Maximum chunk written between pacing checks.
 const CHUNK: usize = 16 * 1024;
@@ -43,9 +46,17 @@ impl TokenBucket {
     /// Bucket allowed to run `burst` bytes ahead of the schedule — what
     /// the reactor uses so each poll wakeup can write a full chunk.
     pub fn with_burst(spec: LinkSpec, burst: usize) -> Self {
+        Self::with_burst_at(spec, burst, clock::now())
+    }
+
+    /// Like [`TokenBucket::with_burst`], with an explicit schedule start —
+    /// callers running on an injected [`Clock`](crate::util::sync::Clock)
+    /// pass their own reading so the whole schedule lives on that
+    /// timeline.
+    pub fn with_burst_at(spec: LinkSpec, burst: usize, now: Instant) -> Self {
         Self {
             bytes_per_sec: spec.bytes_per_sec,
-            start: Instant::now(),
+            start: now,
             sent: 0,
             burst: burst as f64,
         }
@@ -105,18 +116,30 @@ pub struct ThrottledWriter<W: Write> {
     inner: W,
     bucket: TokenBucket,
     first_write_latency: Option<Duration>,
+    clock: Clock,
 }
 
 impl<W: Write> ThrottledWriter<W> {
     pub fn new(inner: W, spec: LinkSpec) -> Self {
+        Self::with_clock(inner, spec, Clock::real())
+    }
+
+    /// Writer paced against an injected time source. With
+    /// [`Clock::manual`] the pacing math runs unchanged but "sleeping"
+    /// advances the clock instead of blocking, so shaping tests assert
+    /// exact virtual timelines at full speed.
+    pub fn with_clock(inner: W, spec: LinkSpec, clock: Clock) -> Self {
+        let mut bucket = TokenBucket::new(spec);
+        bucket.restart(clock.now());
         Self {
             inner,
-            bucket: TokenBucket::new(spec),
+            bucket,
             first_write_latency: if spec.latency_s > 0.0 {
                 Some(Duration::from_secs_f64(spec.latency_s))
             } else {
                 None
             },
+            clock,
         }
     }
 
@@ -133,15 +156,15 @@ impl<W: Write> ThrottledWriter<W> {
 impl<W: Write> Write for ThrottledWriter<W> {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         if let Some(lat) = self.first_write_latency.take() {
-            std::thread::sleep(lat);
-            self.bucket.restart(Instant::now());
+            self.clock.sleep(lat);
+            self.bucket.restart(self.clock.now());
         }
         let n = buf.len().min(CHUNK);
         let written = self.inner.write(&buf[..n])?;
         self.bucket.on_sent(written);
         // Sleep until the virtual schedule catches up with what we sent.
-        if let Some(wait) = self.bucket.ready_in(Instant::now()) {
-            std::thread::sleep(wait);
+        if let Some(wait) = self.bucket.ready_in(self.clock.now()) {
+            self.clock.sleep(wait);
         }
         Ok(written)
     }
@@ -189,6 +212,33 @@ mod tests {
         let t0 = Instant::now();
         w.write_all(&[1, 2, 3]).unwrap();
         assert!(t0.elapsed().as_secs_f64() >= 0.045);
+    }
+
+    #[test]
+    fn manual_clock_pacing_runs_on_the_virtual_timeline() {
+        // 10 MB at 1 MB/s = ~10 virtual seconds, asserted exactly-ish,
+        // while wall time stays near zero: "sleeps" advance the clock.
+        let clock = Clock::manual();
+        let mut w = ThrottledWriter::with_clock(Vec::new(), LinkSpec::mbps(1.0), clock.clone());
+        let t0 = clock.now();
+        let wall = Instant::now();
+        w.write_all(&vec![0u8; 10 * 1024 * 1024]).unwrap();
+        let virt = clock.now() - t0;
+        assert!(
+            virt >= Duration::from_secs_f64(9.5) && virt <= Duration::from_secs_f64(11.0),
+            "virtual elapsed {virt:?}, expected ~10s"
+        );
+        assert!(wall.elapsed() < Duration::from_secs(5), "must not really sleep");
+    }
+
+    #[test]
+    fn manual_clock_charges_latency_before_first_byte() {
+        let clock = Clock::manual();
+        let spec = LinkSpec::mbps(1000.0).with_latency(0.25);
+        let mut w = ThrottledWriter::with_clock(Vec::new(), spec, clock.clone());
+        let t0 = clock.now();
+        w.write_all(&[1, 2, 3]).unwrap();
+        assert!(clock.now() - t0 >= Duration::from_millis(250));
     }
 
     #[test]

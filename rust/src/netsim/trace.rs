@@ -5,6 +5,8 @@
 //! the Table I / user-study harnesses can be driven by realistic traces
 //! as well as the paper's fixed speeds.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 /// Piecewise-constant bandwidth trace. Loops after the last segment.

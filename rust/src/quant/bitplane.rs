@@ -9,6 +9,8 @@
 //! planes equals the singleton 16-bit size (plus ≤1 ragged byte/plane):
 //! progressive transmission does not inflate the model.
 
+#![forbid(unsafe_code)]
+
 use super::schedule::Schedule;
 
 /// Extract the stage-`m` fraction plane from full codes (Eq. 3), unpacked.

@@ -5,6 +5,8 @@
 //! is the first half of the per-stage reconstruct hot path (the second is
 //! Eq. 5 in [`super::dequant`]).
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use super::bitplane;

@@ -7,6 +7,8 @@
 //! (which makes the reconstruction error bound one quantization step *at
 //! the received width*, see tests).
 
+#![forbid(unsafe_code)]
+
 use super::quantize::QuantParams;
 
 /// Scalar parameters of one dequantization pass.

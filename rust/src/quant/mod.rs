@@ -16,6 +16,8 @@
 //!   received bits; at `c = k` the additive term is the paper's floor-loss
 //!   revision `(max-min)/2^{k+1}`.
 
+#![forbid(unsafe_code)]
+
 pub mod bitplane;
 pub mod concat;
 pub mod dequant;

@@ -13,6 +13,8 @@
 //! so stage size is `numel * digits/2` bytes plus the one-off exponent
 //! plane — strictly larger than the bit-split's `numel * w / 8`.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 /// Total significand digits carried (≈ f32 precision).

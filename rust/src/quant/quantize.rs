@@ -2,6 +2,8 @@
 
 /// Fixed quantization depth used throughout the paper (16-bit models show
 /// accuracy equivalent to full precision — §IV-A).
+
+#![forbid(unsafe_code)]
 pub const K: u32 = 16;
 
 /// Per-tensor quantization parameters (stored in manifests / `.pnet`).

@@ -3,6 +3,8 @@
 //! A schedule is the list of per-stage bit-widths, e.g. the paper's
 //! default `[2,2,2,2,2,2,2,2]` (2→4→…→16). Widths must sum to `k`.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use super::quantize::K;

@@ -24,7 +24,9 @@
 //! reconstruction after every stage (§III-C of the paper), so weights are
 //! an execute-time input, not a compile-time constant.
 
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::Arc;
 
 use anyhow::{bail, Result};
 

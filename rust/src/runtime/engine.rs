@@ -13,7 +13,9 @@
 //! `pjrt` cargo feature; selecting it in a default build is an error, not
 //! a silent fallback.
 
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::Arc;
 
 use anyhow::Result;
 

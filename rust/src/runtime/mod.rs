@@ -42,7 +42,7 @@ pub use engine::Engine;
 pub use reference::ReferenceBackend;
 pub use session::{ApproxModel, ApproxOutput, InferOutput, ModelSession, WeightsVersion};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
 
 /// Explicit worker override set by [`set_threads`]; `usize::MAX` = unset.
 static THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);

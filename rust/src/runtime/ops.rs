@@ -30,6 +30,8 @@
 #![allow(clippy::too_many_arguments)]
 
 /// Batch rows per register tile of [`matmul_bias_relu`].
+
+#![forbid(unsafe_code)]
 const MR: usize = 4;
 /// Output columns per register tile: `MR × NR` f32 accumulators live in
 /// vector registers across the whole `cin` reduction.
@@ -60,6 +62,7 @@ pub fn matmul_bias_relu(
     debug_assert_eq!(w.len(), cin * cout);
     debug_assert_eq!(out.len(), n * cout);
     debug_assert!(b.is_empty() || b.len() == cout);
+    // lint:hot-path — the whole kernel works in caller-provided buffers
     for row in out.chunks_exact_mut(cout) {
         if b.is_empty() {
             row.fill(0.0);
@@ -137,6 +140,7 @@ pub fn matmul_bias_relu(
     if fuse_relu {
         relu(out);
     }
+    // lint:end-hot-path
 }
 
 /// Scatter one NHWC sample into 3×3-patch rows ("im2col").

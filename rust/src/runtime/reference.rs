@@ -33,8 +33,10 @@
 //! `reference-scalar` backend ([`ReferenceBackend::scalar`]) — the
 //! benchmark baseline and bit-exactness oracle for the batched kernels.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::util::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -348,6 +350,8 @@ impl RefModel {
         let mut col = self.scratch.take(n * self.col_numel);
         ping[..images.len()].copy_from_slice(images);
         let mut cur_numel = self.input_numel;
+        // lint:hot-path — layer loop runs entirely in pooled scratch;
+        // all allocation happened in the `scratch.take` calls above
         for layer in &self.layers {
             match *layer {
                 Layer::ConvBlock {
@@ -418,6 +422,7 @@ impl RefModel {
                 }
             }
         }
+        // lint:end-hot-path
         out.copy_from_slice(&ping[..n * self.output_dim]);
         if let Some(from) = self.sigmoid_from {
             for row in out.chunks_exact_mut(self.output_dim) {

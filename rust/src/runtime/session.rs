@@ -15,7 +15,9 @@
 //! newest *complete* stage, and an in-flight batch keeps the weights it
 //! started with.
 
-use std::sync::{Arc, RwLock};
+#![forbid(unsafe_code)]
+
+use crate::util::sync::{Arc, RwLock};
 
 use anyhow::Result;
 

@@ -7,6 +7,8 @@
 //! to each requesting device. No inference ever happens here (the paper's
 //! argument vs collaborative intelligence: zero server compute, §II-C).
 
+#![forbid(unsafe_code)]
+
 pub mod proto;
 pub mod repository;
 pub mod service;

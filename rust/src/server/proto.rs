@@ -3,6 +3,8 @@
 //! stage range of the container and keep the connection open for further
 //! requests (pipelined multi-model delivery). See `rust/docs/PROTOCOL.md`.
 
+#![forbid(unsafe_code)]
+
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};

@@ -8,12 +8,15 @@
 //! derived [`StageIndex`], so the serving hot path answers stage-range
 //! requests with borrowed slices of the cached bytes — zero copies.
 
-use std::collections::HashMap;
+#![forbid(unsafe_code)]
+
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
+
+use crate::util::flight::SingleFlight;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
 
 use crate::format::{PnetManifest, PnetWriter, StageIndex};
 use crate::models::Registry;
@@ -74,67 +77,10 @@ impl std::ops::Deref for EncodedContainer {
     }
 }
 
-/// A pending encode that concurrent requesters wait on.
-struct Flight {
-    done: Mutex<Option<std::result::Result<Arc<EncodedContainer>, String>>>,
-    cv: Condvar,
-}
-
-impl Flight {
-    fn new() -> Self {
-        Self {
-            done: Mutex::new(None),
-            cv: Condvar::new(),
-        }
-    }
-
-    fn complete(&self, result: std::result::Result<Arc<EncodedContainer>, String>) {
-        *self.done.lock().unwrap() = Some(result);
-        self.cv.notify_all();
-    }
-
-    fn wait(&self) -> std::result::Result<Arc<EncodedContainer>, String> {
-        let mut guard = self.done.lock().unwrap();
-        while guard.is_none() {
-            guard = self.cv.wait(guard).unwrap();
-        }
-        guard.clone().unwrap()
-    }
-}
-
-enum Slot {
-    Ready(Arc<EncodedContainer>),
-    Pending(Arc<Flight>),
-}
-
-/// Unwedges a single-flight key if the encoding leader unwinds: without
-/// this, a panic inside encode would leave the `Pending` slot in place and
-/// every follower (and all future requests for the key) blocked forever.
-/// Disarmed by `take()`-ing the key on the normal path.
-struct FlightCleanup<'a> {
-    cache: &'a Mutex<HashMap<Key, Slot>>,
-    key: Option<Key>,
-}
-
-impl Drop for FlightCleanup<'_> {
-    fn drop(&mut self) {
-        let Some(key) = self.key.take() else { return };
-        // avoid unwrap: a poisoned lock during unwind must not double-panic
-        if let Ok(mut cache) = self.cache.lock() {
-            if let Some(Slot::Pending(flight)) = cache.remove(&key) {
-                flight.complete(Err(format!(
-                    "encoding '{}' panicked; request again to retry",
-                    key.0
-                )));
-            }
-        }
-    }
-}
-
 /// Thread-safe repository of encoded models.
 pub struct Repository {
     registry: Registry,
-    cache: Mutex<HashMap<Key, Slot>>,
+    cache: SingleFlight<Key, Arc<EncodedContainer>>,
     encodes: AtomicU64,
 }
 
@@ -142,7 +88,7 @@ impl Repository {
     pub fn new(registry: Registry) -> Self {
         Self {
             registry,
-            cache: Mutex::new(HashMap::new()),
+            cache: SingleFlight::new(),
             encodes: AtomicU64::new(0),
         }
     }
@@ -159,51 +105,11 @@ impl Repository {
     /// first request (single-flight under concurrency), cached afterwards.
     pub fn container(&self, model: &str, schedule: &Schedule) -> Result<Arc<EncodedContainer>> {
         let key = (model.to_string(), schedule.widths().to_vec());
-        let existing_flight = {
-            let mut cache = self.cache.lock().unwrap();
-            match cache.get(&key) {
-                Some(Slot::Ready(c)) => return Ok(c.clone()),
-                Some(Slot::Pending(f)) => Some(f.clone()),
-                None => {
-                    cache.insert(key.clone(), Slot::Pending(Arc::new(Flight::new())));
-                    None
-                }
-            }
-        };
-
-        if let Some(flight) = existing_flight {
-            // follower: another thread is already encoding this key
-            return flight.wait().map_err(|msg| anyhow::anyhow!(msg));
-        }
-
-        // leader: encode outside the cache lock, then publish
-        let mut panic_guard = FlightCleanup {
-            cache: &self.cache,
-            key: Some(key),
-        };
-        let result = self.encode(model, schedule);
-        let key = panic_guard.key.take().expect("guard still armed");
-        let flight = {
-            let mut cache = self.cache.lock().unwrap();
-            let flight = match cache.remove(&key) {
-                Some(Slot::Pending(f)) => Some(f),
-                _ => None,
-            };
-            if let Ok(c) = &result {
-                cache.insert(key, Slot::Ready(c.clone()));
-            }
-            // on error the slot stays removed, so a later request retries
-            flight
-        };
-        if let Some(flight) = flight {
-            flight.complete(
-                result
-                    .as_ref()
-                    .map(Arc::clone)
-                    .map_err(|e| format!("{e:#}")),
-            );
-        }
-        result
+        self.cache
+            .get_or_compute(key, || {
+                self.encode(model, schedule).map_err(|e| format!("{e:#}"))
+            })
+            .map_err(|msg| anyhow::anyhow!(msg))
     }
 
     fn encode(&self, model: &str, schedule: &Schedule) -> Result<Arc<EncodedContainer>> {
@@ -231,12 +137,7 @@ impl Repository {
 
     /// Number of completed cached encodings.
     pub fn cached_encodings(&self) -> usize {
-        self.cache
-            .lock()
-            .unwrap()
-            .values()
-            .filter(|s| matches!(s, Slot::Ready(_)))
-            .count()
+        self.cache.ready_len()
     }
 
     /// Total encodes performed (tests assert single-flight keeps this at

@@ -18,9 +18,11 @@
 //! stages — see [`fleet::ShedPolicy`](crate::fleet::ShedPolicy)).
 //! Protocol behaviour on the wire is unchanged.
 
+#![forbid(unsafe_code)]
+
 use std::io::Write;
 use std::net::TcpStream;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -126,7 +128,7 @@ pub fn request_on(stream: &mut TcpStream, req: &FetchRequest) -> Result<FetchRes
 mod tests {
     use super::*;
     use std::io::Read;
-    use std::sync::atomic::Ordering;
+    use crate::util::sync::atomic::Ordering;
     use std::time::Duration;
 
     fn synthetic_server(tag: &str) -> (Server, Arc<Repository>) {

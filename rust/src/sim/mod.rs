@@ -7,6 +7,8 @@
 //! has a patience budget and chooses between the deep-model button
 //! ("Find automatically") and manual labeling. See DESIGN.md §2.
 
+#![forbid(unsafe_code)]
+
 pub mod study;
 pub mod survey;
 pub mod user;

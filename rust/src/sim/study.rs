@@ -7,6 +7,8 @@
 //! right (~6-bit, matching the paper's Fig 5 observation that accuracy is
 //! meaningful from 6 bits).
 
+#![forbid(unsafe_code)]
+
 use crate::netsim::LinkSpec;
 use crate::quant::Schedule;
 use crate::util::rng::Rng;

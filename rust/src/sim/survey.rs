@@ -5,6 +5,8 @@
 //! Shorter perceived waits → more satisfied — exactly the mechanism the
 //! paper attributes the Fig 8 gap to.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Rng;
 
 /// Likert-scale histogram (index 0 = very dissatisfied … 4 = very satisfied).

@@ -18,6 +18,8 @@
 //! entire difference the study measures, and it reproduces Table III's
 //! 45%-vs-71% split and its near-flatness across speeds for Group A.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Rng;
 
 /// Static parameters of one user.

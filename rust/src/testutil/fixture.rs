@@ -9,6 +9,8 @@
 //! chain (dense `[cin, cout]` layers) are fully *executable* on it, which
 //! is what the mid-download inference tests use.
 
+#![forbid(unsafe_code)]
+
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;

@@ -3,5 +3,7 @@
 //! synthetic model artifacts so server/client paths are testable without
 //! the Python-built artifacts.
 
+#![forbid(unsafe_code)]
+
 pub mod fixture;
 pub mod prop;

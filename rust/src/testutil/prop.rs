@@ -7,6 +7,8 @@
 //!       |(a, b)| if a + b == b + a { Ok(()) } else { Err("nope".into()) });
 //! ```
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Rng;
 
 /// Random-value source handed to generators.

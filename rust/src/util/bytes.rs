@@ -1,5 +1,7 @@
 //! Little-endian byte codecs for binary artifacts and the wire protocol.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 /// Reinterpret a little-endian byte buffer as `f32`s.

@@ -4,6 +4,8 @@
 //! then applies any explicitly passed flags on top — the standard
 //! precedence (defaults < file < CLI).
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};

@@ -8,7 +8,9 @@
 //! match exactly. Table-driven, one byte per step; fragment payloads are
 //! small enough that a slice-by-8 implementation would be over-engineering.
 
-use std::sync::OnceLock;
+#![forbid(unsafe_code)]
+
+use crate::util::sync::OnceLock;
 
 /// Reflected CRC-32 polynomial (0x04C11DB7 bit-reversed).
 const POLY: u32 = 0xEDB8_8320;

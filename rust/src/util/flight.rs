@@ -1,0 +1,238 @@
+//! Generic single-flight computation cache.
+//!
+//! `get_or_compute(key, f)` guarantees that when N threads miss the
+//! cache for the same key simultaneously, exactly one (the *leader*)
+//! runs `f` while the rest (*followers*) wait on the flight and share
+//! the leader's result. Successes are cached; errors are returned to
+//! every waiter of that flight but **not** cached, so a later request
+//! retries. A leader that panics unwedges the key on unwind (followers
+//! get an error instead of blocking forever).
+//!
+//! Built on the [`crate::util::sync`] facade, so the whole protocol is
+//! explorable by the model checker (`tests/schedules.rs` hammers it with
+//! a concurrent stampede under `--cfg prognet_check`).
+
+#![forbid(unsafe_code)]
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+use crate::util::sync::{Arc, Condvar, Mutex};
+
+/// A pending computation that concurrent requesters wait on.
+struct Flight<V> {
+    done: Mutex<Option<Result<V, String>>>,
+    cv: Condvar,
+}
+
+impl<V: Clone> Flight<V> {
+    fn new() -> Self {
+        Self {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, result: Result<V, String>) {
+        *self.done.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<V, String> {
+        let mut guard = self.done.lock().unwrap();
+        while guard.is_none() {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        guard.clone().unwrap()
+    }
+}
+
+enum Slot<V> {
+    Ready(V),
+    Pending(Arc<Flight<V>>),
+}
+
+/// Unwedges a single-flight key if the leader unwinds: without this, a
+/// panic inside the compute closure would leave the `Pending` slot in
+/// place and every follower (and all future requests for the key)
+/// blocked forever. Disarmed by `take()`-ing the key on the normal path.
+struct FlightCleanup<'a, K: Eq + Hash, V: Clone> {
+    slots: &'a Mutex<HashMap<K, Slot<V>>>,
+    key: Option<K>,
+}
+
+impl<K: Eq + Hash, V: Clone> Drop for FlightCleanup<'_, K, V> {
+    fn drop(&mut self) {
+        let Some(key) = self.key.take() else { return };
+        // avoid unwrap: a poisoned lock during unwind must not double-panic
+        if let Ok(mut slots) = self.slots.lock() {
+            if let Some(Slot::Pending(flight)) = slots.remove(&key) {
+                flight.complete(Err(
+                    "single-flight compute panicked; request again to retry".to_string()
+                ));
+            }
+        }
+    }
+}
+
+/// Keyed single-flight cache. `V` is typically an `Arc<...>` so all
+/// callers share one allocation.
+pub struct SingleFlight<K, V> {
+    slots: Mutex<HashMap<K, Slot<V>>>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
+    pub fn new() -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Cached value for `key`, or run `compute` (exactly once across all
+    /// concurrent callers of the same key) and cache its success.
+    pub fn get_or_compute<F>(&self, key: K, compute: F) -> Result<V, String>
+    where
+        F: FnOnce() -> Result<V, String>,
+    {
+        let existing_flight = {
+            let mut slots = self.slots.lock().unwrap();
+            match slots.get(&key) {
+                Some(Slot::Ready(v)) => return Ok(v.clone()),
+                Some(Slot::Pending(f)) => Some(f.clone()),
+                None => {
+                    slots.insert(key.clone(), Slot::Pending(Arc::new(Flight::new())));
+                    None
+                }
+            }
+        };
+
+        if let Some(flight) = existing_flight {
+            // follower: another thread is already computing this key
+            return flight.wait();
+        }
+
+        // leader: compute outside the slot lock, then publish
+        let mut panic_guard = FlightCleanup {
+            slots: &self.slots,
+            key: Some(key),
+        };
+        let result = compute();
+        let key = panic_guard.key.take().expect("guard still armed");
+        let flight = {
+            let mut slots = self.slots.lock().unwrap();
+            let flight = match slots.remove(&key) {
+                Some(Slot::Pending(f)) => Some(f),
+                _ => None,
+            };
+            if let Ok(v) = &result {
+                slots.insert(key, Slot::Ready(v.clone()));
+            }
+            // on error the slot stays removed, so a later request retries
+            flight
+        };
+        if let Some(flight) = flight {
+            flight.complete(result.clone());
+        }
+        result
+    }
+
+    /// Number of completed (cached) entries.
+    pub fn ready_len(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready(_)))
+            .count()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for SingleFlight<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::Barrier;
+
+    #[test]
+    fn stampede_computes_once() {
+        let sf = Arc::new(SingleFlight::<u32, Arc<Vec<u8>>>::new());
+        let computes = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let sf = sf.clone();
+                let computes = computes.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    sf.get_or_compute(7, || {
+                        computes.fetch_add(1, Ordering::SeqCst);
+                        Ok(Arc::new(vec![1, 2, 3]))
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "cache stampede");
+        for r in &results[1..] {
+            assert!(Arc::ptr_eq(&results[0], r), "all callers share one Arc");
+        }
+        assert_eq!(sf.ready_len(), 1);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let sf = SingleFlight::<u32, u32>::new();
+        let computes = AtomicUsize::new(0);
+        let r = sf.get_or_compute(1, || {
+            computes.fetch_add(1, Ordering::SeqCst);
+            Err("boom".to_string())
+        });
+        assert_eq!(r, Err("boom".to_string()));
+        assert_eq!(sf.ready_len(), 0);
+        let r = sf.get_or_compute(1, || {
+            computes.fetch_add(1, Ordering::SeqCst);
+            Ok(42)
+        });
+        assert_eq!(r, Ok(42));
+        assert_eq!(computes.load(Ordering::SeqCst), 2, "error must retry");
+        assert_eq!(sf.ready_len(), 1);
+    }
+
+    #[test]
+    fn leader_panic_unwedges_the_key() {
+        let sf = Arc::new(SingleFlight::<u32, u32>::new());
+        let entered = Arc::new(Barrier::new(2));
+        let leader = {
+            let sf = sf.clone();
+            let entered = entered.clone();
+            std::thread::spawn(move || {
+                let _ = sf.get_or_compute(5, || {
+                    entered.wait();
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    panic!("injected leader panic");
+                });
+            })
+        };
+        entered.wait(); // leader holds the Pending slot from here on
+        // follower either waits out the flight (gets the panic error) or
+        // arrives after cleanup and becomes a fresh leader (gets Ok)
+        let r = sf.get_or_compute(5, || Ok(99));
+        match r {
+            Err(msg) => assert!(msg.contains("panicked"), "unexpected error: {msg}"),
+            Ok(v) => assert_eq!(v, 99),
+        }
+        assert!(leader.join().is_err(), "leader must have panicked");
+        // key is not wedged: a retry returns the cached follower value or
+        // computes fresh
+        let retry = sf.get_or_compute(5, || Ok(11)).unwrap();
+        assert!(retry == 11 || retry == 99, "key wedged after panic");
+    }
+}

@@ -2,6 +2,8 @@
 //!
 //! Numbers are parsed as `f64`; integer accessors check exactness.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -1,7 +1,9 @@
 //! Minimal leveled logger writing to stderr, controlled by `PROGNET_LOG`
 //! (`error|warn|info|debug|trace`, default `info`).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+#![forbid(unsafe_code)]
+
+use crate::util::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
@@ -17,7 +19,10 @@ pub enum Level {
 }
 
 fn level() -> u8 {
-    let v = LEVEL.load(Ordering::Relaxed);
+    // Relaxed is deliberate: LEVEL caches an idempotent parse of an env
+    // var, so the worst a stale read costs is one redundant re-parse —
+    // there is no data published alongside the flag to order against.
+    let v = LEVEL.load(Ordering::Relaxed); // lint:allow ordering-relaxed-shared
     if v != 255 {
         return v;
     }
@@ -28,13 +33,13 @@ fn level() -> u8 {
         Ok("trace") => 4,
         _ => 2,
     };
-    LEVEL.store(parsed, Ordering::Relaxed);
+    LEVEL.store(parsed, Ordering::Relaxed); // lint:allow ordering-relaxed-shared
     parsed
 }
 
 /// Force a level programmatically (tests, benches).
 pub fn set_level(l: Level) {
-    LEVEL.store(l as u8, Ordering::Relaxed);
+    LEVEL.store(l as u8, Ordering::Relaxed); // lint:allow ordering-relaxed-shared
 }
 
 pub fn enabled(l: Level) -> bool {

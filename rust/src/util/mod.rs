@@ -10,8 +10,11 @@ pub mod bytes;
 pub mod cli;
 pub mod config;
 pub mod crc32;
+pub mod flight;
 pub mod json;
 pub mod logging;
 pub mod pool;
 pub mod rng;
 pub mod stats;
+pub mod sync;
+pub mod sys;

@@ -11,9 +11,11 @@
 //! the pool is retained only as a general-purpose utility for
 //! batch-style callers.
 
+#![forbid(unsafe_code)]
+
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -269,7 +271,7 @@ impl<T> BoundedQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use crate::util::sync::atomic::AtomicU64;
 
     #[test]
     fn pool_runs_all_jobs() {

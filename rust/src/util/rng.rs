@@ -3,6 +3,8 @@
 //! crate; these match the published reference implementations.
 
 /// SplitMix64 — used to expand a single `u64` seed into xoshiro state.
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
     state: u64,

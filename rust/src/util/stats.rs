@@ -2,6 +2,8 @@
 //! confidence intervals, throughput helpers).
 
 /// Online + batch summary over f64 samples.
+
+#![forbid(unsafe_code)]
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
     samples: Vec<f64>,

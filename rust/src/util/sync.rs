@@ -1,0 +1,193 @@
+//! Synchronization facade: the single import point for sync primitives
+//! and time sources crate-wide.
+//!
+//! In normal builds every item is a verbatim re-export of `std::sync` /
+//! `std::time` — zero overhead, zero behavior change. Under
+//! `--cfg prognet_check` the lock, condvar and atomic types are swapped
+//! for the instrumented shims in [`crate::analysis::shim`], which report
+//! every operation to the deterministic scheduler so the model-check
+//! suite (`tests/schedules.rs`) can explore interleavings.
+//!
+//! Repo invariant (enforced by `prognet-lint` rule `direct-sync-import`):
+//! concurrency-touching modules import `Mutex`/`Condvar`/`RwLock`/atomics
+//! from here, never from `std::sync` directly. `Arc`, `Barrier`,
+//! `OnceLock` and `mpsc` pass through unchanged in both modes (`Arc` is
+//! memory management, not a schedule-relevant operation; channels are not
+//! yet modeled — schedule tests use locks and condvars).
+//!
+//! Time goes through [`clock`]: `clock::now()` / `clock::sleep()` follow
+//! the model's virtual clock inside a checked run, and the injectable
+//! [`Clock`] handle lets timing-sensitive components (connection
+//! deadlines, token-bucket pacing) run tests on manual virtual time in
+//! ordinary builds too.
+
+#![forbid(unsafe_code)]
+
+pub use std::sync::{mpsc, Arc, Barrier, LockResult, OnceLock, PoisonError, TryLockError, Weak};
+
+#[cfg(not(prognet_check))]
+pub use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+
+#[cfg(prognet_check)]
+pub use crate::analysis::shim::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+
+/// Atomics facade: `util::sync::atomic::{AtomicU64, Ordering, ...}`.
+pub mod atomic {
+    #[cfg(not(prognet_check))]
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+
+    #[cfg(prognet_check)]
+    pub use crate::analysis::shim::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+/// Time facade: wall-clock reads and sleeps that follow the model
+/// checker's virtual clock inside a checked run.
+pub mod clock {
+    use std::time::{Duration, Instant};
+
+    /// Current time. Inside a model run this is the scheduler's virtual
+    /// clock (starts at the run's base instant, advances only when every
+    /// model thread is parked on a deadline); otherwise `Instant::now()`.
+    pub fn now() -> Instant {
+        crate::analysis::sched::virtual_now().unwrap_or_else(Instant::now)
+    }
+
+    /// Sleep. Inside a model run the thread parks on the virtual clock
+    /// (no real time passes); otherwise `std::thread::sleep`.
+    pub fn sleep(dur: Duration) {
+        crate::analysis::sched::sleep(dur);
+    }
+}
+
+use std::time::{Duration, Instant};
+
+/// Injectable time source for components whose pacing/eviction logic
+/// should be testable without real sleeps even in normal builds.
+///
+/// [`Clock::real`] delegates to [`clock::now`] / [`clock::sleep`] (and so
+/// still follows the model's virtual clock under `prognet_check`).
+/// [`Clock::manual`] is a shared virtual clock that only moves when
+/// advanced — `sleep` advances it instead of blocking, so a pacing loop
+/// runs at full speed while observing exactly the timeline the test
+/// scripted.
+#[derive(Clone, Debug)]
+pub struct Clock(ClockInner);
+
+#[derive(Clone, Debug)]
+enum ClockInner {
+    Real,
+    Manual(Arc<ManualClock>),
+}
+
+#[derive(Debug)]
+struct ManualClock {
+    base: Instant,
+    // Plain std atomic on purpose: the clock is test scaffolding, not a
+    // protocol under check, and must not perturb explored schedules.
+    offset_ns: std::sync::atomic::AtomicU64,
+}
+
+impl Clock {
+    /// Wall-clock time (virtual inside a model run).
+    pub fn real() -> Self {
+        Clock(ClockInner::Real)
+    }
+
+    /// A virtual clock starting at `now()`; clones share the timeline.
+    pub fn manual() -> Self {
+        Clock(ClockInner::Manual(Arc::new(ManualClock {
+            base: clock::now(),
+            offset_ns: std::sync::atomic::AtomicU64::new(0),
+        })))
+    }
+
+    pub fn now(&self) -> Instant {
+        match &self.0 {
+            ClockInner::Real => clock::now(),
+            ClockInner::Manual(m) => {
+                let ns = m.offset_ns.load(std::sync::atomic::Ordering::SeqCst);
+                m.base + Duration::from_nanos(ns)
+            }
+        }
+    }
+
+    /// Real clock: blocks. Manual clock: advances the shared timeline
+    /// instead (a paced writer "waits out" its budget instantly).
+    pub fn sleep(&self, dur: Duration) {
+        match &self.0 {
+            ClockInner::Real => clock::sleep(dur),
+            ClockInner::Manual(_) => self.advance(dur),
+        }
+    }
+
+    /// Move a manual clock forward. No-op on a real clock (tests that
+    /// accept either kind can advance unconditionally).
+    pub fn advance(&self, dur: Duration) {
+        if let ClockInner::Manual(m) = &self.0 {
+            let ns = u64::try_from(dur.as_nanos()).unwrap_or(u64::MAX);
+            m.offset_ns
+                .fetch_add(ns, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::real()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_advances_without_blocking() {
+        let c = Clock::manual();
+        let t0 = c.now();
+        let wall = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert_eq!(c.now() - t0, Duration::from_secs(3600));
+        assert!(wall.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn manual_clock_clones_share_the_timeline() {
+        let a = Clock::manual();
+        let b = a.clone();
+        b.advance(Duration::from_millis(250));
+        assert_eq!(a.now(), b.now());
+        assert_eq!(a.now() - b.now(), Duration::ZERO);
+    }
+
+    #[test]
+    fn real_clock_advance_is_a_noop() {
+        let c = Clock::real();
+        let before = c.now();
+        c.advance(Duration::from_secs(3600));
+        let after = c.now();
+        assert!(after.saturating_duration_since(before) < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn facade_types_are_usable() {
+        let m = Mutex::new(1u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 2);
+        let rw = RwLock::new(vec![1, 2]);
+        assert_eq!(rw.read().unwrap().len(), 2);
+        rw.write().unwrap().push(3);
+        assert_eq!(rw.read().unwrap().len(), 3);
+        let a = atomic::AtomicU64::new(7);
+        a.fetch_add(1, atomic::Ordering::SeqCst);
+        assert_eq!(a.load(atomic::Ordering::SeqCst), 8);
+    }
+}

@@ -1,0 +1,73 @@
+//! The crate's quarantine for raw OS calls that need `unsafe`.
+//!
+//! Everything `unsafe` outside FFI-backend code lives either here or in
+//! [`crate::fleet::poll`] (the `poll(2)` wrapper) — the allowlist
+//! enforced by `prognet-lint` rule `unsafe-outside-allowlist` and by
+//! `#![forbid(unsafe_code)]` on every other module.
+
+use std::net::TcpStream;
+
+use anyhow::Result;
+
+/// Shrink a socket's kernel receive buffer so an unread stream actually
+/// stalls the sender.
+///
+/// Raw `setsockopt` with the common Linux constants inlined — `anyhow`
+/// is the crate's only dependency, so no `libc`. The constants differ on
+/// mips/sparc, so those arches (and non-Linux platforms) take the no-op
+/// path below: the call is best-effort backpressure shaping for the
+/// serial-mode ablation, not a correctness requirement.
+#[cfg(all(
+    any(target_os = "linux", target_os = "android"),
+    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
+))]
+pub fn shrink_recv_buffer(stream: &TcpStream) -> Result<()> {
+    use std::os::fd::AsRawFd;
+    const SOL_SOCKET: i32 = 1;
+    const SO_RCVBUF: i32 = 8;
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const core::ffi::c_void,
+            optlen: u32,
+        ) -> i32;
+    }
+    let fd = stream.as_raw_fd();
+    let size: i32 = 16 * 1024;
+    let rc = unsafe {
+        setsockopt(
+            fd,
+            SOL_SOCKET,
+            SO_RCVBUF,
+            &size as *const i32 as *const core::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
+        )
+    };
+    anyhow::ensure!(rc == 0, "setsockopt(SO_RCVBUF) failed");
+    Ok(())
+}
+
+/// No-op on platforms where the inlined constants don't apply.
+#[cfg(not(all(
+    any(target_os = "linux", target_os = "android"),
+    not(any(target_arch = "mips", target_arch = "mips64", target_arch = "sparc64"))
+)))]
+pub fn shrink_recv_buffer(_stream: &TcpStream) -> Result<()> {
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrink_applies_to_a_live_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stream = TcpStream::connect(addr).unwrap();
+        let _accepted = listener.accept().unwrap();
+        shrink_recv_buffer(&stream).unwrap();
+    }
+}
