@@ -1,0 +1,89 @@
+//! Time-to-first-inference: layer-granular streaming vs the
+//! stage-granular baseline, on the netsim virtual clock, emitting
+//! `BENCH_stream.json` so the latency trajectory is tracked across PRs.
+//!
+//! For each bandwidth trace the harness replays the same annotated
+//! container and reports:
+//!
+//! - `ttfi_stream_s`  — pipelined executor: first dispatch the moment
+//!   layer 0's stage-0 bits are down ([`run_pipelined`]);
+//! - `ttfi_stage_s`   — baseline: inference waits for stage 0 to
+//!   complete across all tensors;
+//! - `layer0_pure_s`  — pure transmission of preamble + layer 0's
+//!   stage-0 frames (the physical lower bound).
+//!
+//! Being virtual-time, the numbers are exact and machine-independent —
+//! the assert is a protocol property, not a perf lottery. Env:
+//!
+//!   PROGNET_BENCH_NO_ASSERT  skip the pipelined-beats-baseline assert
+
+use prognet::netsim::BandwidthTrace;
+use prognet::runtime::{Backend, ReferenceBackend};
+use prognet::testutil::stream::{annotated_writer, run_pipelined, stream_fixture};
+use prognet::util::json::{self, Json};
+
+fn main() -> prognet::Result<()> {
+    let reg = stream_fixture("bench-stream-ttfi")?;
+    let m = reg.get("stream3")?;
+    let (w, _) = annotated_writer(m)?;
+    let compiled = ReferenceBackend::with_threads(1).compile(m, &[])?;
+    let n = 4;
+    let images: Vec<f32> = (0..n * m.input_numel()).map(|i| (i % 13) as f32 * 0.07).collect();
+
+    // three trace shapes (dur_s:rate_MBps): a paper-style slow mobile
+    // link, a ramp-up from near-stall, and a bursty loop
+    let traces = [
+        ("slow-flat-0.1MBps", "4:0.1"),
+        ("rampup-0.05-to-1", "1:0.05,1:0.25,2:1.0"),
+        ("bursty-loop", "0.4:0.08,0.2:0.9"),
+    ];
+
+    let wire = w.to_bytes().len();
+    println!(
+        "stream_ttfi: '{}' {} params, {} B wire, {} layers\n",
+        w.manifest().model,
+        w.manifest().param_count(),
+        wire,
+        w.manifest().stage_index().layers()
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut all_ahead = true;
+    for (name, spec) in traces {
+        let trace = BandwidthTrace::parse(spec)?;
+        let run = run_pipelined(&w, &trace, compiled.as_ref(), &images, n, 0)?;
+        let speedup = run.ttfi_stage / run.ttfi_pipelined;
+        all_ahead &= run.ttfi_pipelined < run.ttfi_stage;
+        println!(
+            "{name:>20}: stream {:.3} s  stage {:.3} s  layer0-pure {:.3} s  ({speedup:.2}x earlier)",
+            run.ttfi_pipelined, run.ttfi_stage, run.layer0_pure
+        );
+        rows.push(json::obj(vec![
+            ("trace", json::s(name)),
+            ("spec", json::s(spec)),
+            ("ttfi_stream_s", json::num(run.ttfi_pipelined)),
+            ("ttfi_stage_s", json::num(run.ttfi_stage)),
+            ("layer0_pure_s", json::num(run.layer0_pure)),
+            ("speedup", json::num(speedup)),
+            ("total_transfer_s", json::num(run.schedule.total_done)),
+        ]));
+    }
+
+    let report = json::obj(vec![
+        ("model", json::s("stream3")),
+        ("params", json::num(w.manifest().param_count() as f64)),
+        ("wire_bytes", json::num(wire as f64)),
+        ("layers", json::num(w.manifest().stage_index().layers() as f64)),
+        ("traces", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_stream.json", report.to_string())?;
+    println!("\nwrote BENCH_stream.json");
+
+    if std::env::var_os("PROGNET_BENCH_NO_ASSERT").is_none() {
+        assert!(
+            all_ahead,
+            "pipelined TTFI failed to beat the stage baseline on some trace"
+        );
+    }
+    Ok(())
+}

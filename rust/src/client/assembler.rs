@@ -49,6 +49,15 @@ pub struct Assembler {
     version: u64,
     /// fold Eq. 5 into absorb (per-tensor, as planes land)
     eager: bool,
+    /// `LayerMajor` boundaries: tensor index where each layer starts,
+    /// plus one final entry = tensor count; empty when unannotated
+    layer_bounds: Vec<usize>,
+    /// per-tensor layer index (empty when unannotated)
+    tensor_layer: Vec<usize>,
+    /// highest stage announced per layer (+1; 0 = none announced)
+    layer_done: Vec<usize>,
+    /// `(layer, stage)` completions not yet drained, in completion order
+    pending_layers: Vec<(usize, usize)>,
 }
 
 impl Assembler {
@@ -56,6 +65,22 @@ impl Assembler {
         let tensors = manifest.tensors.len();
         let params = manifest.param_count();
         let stage_counts = vec![0; manifest.schedule.stages()];
+        let (layer_bounds, tensor_layer) = match &manifest.layers {
+            None => (Vec::new(), Vec::new()),
+            Some(counts) => {
+                let mut bounds = Vec::with_capacity(counts.len() + 1);
+                let mut map = Vec::with_capacity(tensors);
+                let mut at = 0;
+                bounds.push(0);
+                for (l, &c) in counts.iter().enumerate() {
+                    at += c;
+                    bounds.push(at);
+                    map.extend(std::iter::repeat(l).take(c));
+                }
+                (bounds, map)
+            }
+        };
+        let layers = layer_bounds.len().saturating_sub(1);
         Self {
             manifest,
             q: vec![0u32; params],
@@ -66,6 +91,10 @@ impl Assembler {
             flat_cum: vec![STALE; tensors],
             version: 0,
             eager: false,
+            layer_bounds,
+            tensor_layer,
+            layer_done: vec![0; layers],
+            pending_layers: Vec::new(),
         }
     }
 
@@ -141,12 +170,54 @@ impl Assembler {
         } else {
             self.flat_cum[tensor] = STALE;
         }
+        if !self.layer_bounds.is_empty() {
+            // layer completion: the layer's lowest per-tensor stage just
+            // caught up (absorption is in-order per tensor, so the min
+            // rises by at most one per fragment)
+            let l = self.tensor_layer[tensor];
+            let span = self.layer_bounds[l]..self.layer_bounds[l + 1];
+            let min = self.recv[span].iter().copied().min().expect("non-empty layer");
+            while self.layer_done[l] < min {
+                self.pending_layers.push((l, self.layer_done[l]));
+                self.layer_done[l] += 1;
+            }
+        }
         self.stage_counts[stage] += 1;
         if self.stage_counts[stage] == self.recv.len() && self.stages_complete == stage {
             self.stages_complete = stage + 1;
             return Ok(Some(stage));
         }
         Ok(None)
+    }
+
+    /// Number of annotated layers (0 when the manifest carries no
+    /// `LayerMajor` annotation — per-layer events are then never emitted).
+    pub fn layer_count(&self) -> usize {
+        self.layer_done.len()
+    }
+
+    /// Stages fully received for `layer` (every tensor in the layer), as
+    /// a count: `k` means stages `0..k` of this layer have landed.
+    pub fn layer_stages_complete(&self, layer: usize) -> usize {
+        self.layer_done[layer]
+    }
+
+    /// Flat-weight element range covered by `layer`'s tensors.
+    pub fn layer_weight_range(&self, layer: usize) -> std::ops::Range<usize> {
+        let first = &self.manifest.tensors[self.layer_bounds[layer]];
+        let last = &self.manifest.tensors[self.layer_bounds[layer + 1] - 1];
+        first.offset..last.offset + last.numel
+    }
+
+    /// Drain `(layer, stage)` completions recorded since the last drain,
+    /// in completion order. A `(l, s)` entry means every tensor of layer
+    /// `l` has absorbed stage `s` — under eager dequant
+    /// ([`Assembler::set_eager_dequant`]) the layer's slice of
+    /// [`Assembler::flat`] already reflects those bits, so the drained
+    /// event is immediately actionable by a streaming executor.
+    /// Duplicate fragments (resume/reconnect re-delivery) never re-emit.
+    pub fn drain_layer_events(&mut self) -> Vec<(usize, usize)> {
+        std::mem::take(&mut self.pending_layers)
     }
 
     /// Number of fully received stages.
@@ -362,6 +433,93 @@ mod tests {
         assert_eq!(codes.len(), 800);
         // stage 0 = top 2 bits only
         assert!(codes.iter().all(|&c| c & 0x3FFF == 0));
+    }
+
+    /// 2-layer model: (w1 [20,30] + b1 [30]) then w2 [17,10], 800 params.
+    fn setup_layered(seed: u64) -> PnetWriter {
+        let mut r = Rng::new(seed);
+        let flat: Vec<f32> = (0..800).map(|_| r.normal() as f32).collect();
+        let m = manifest_from_weights(
+            "toy",
+            "classify",
+            &[
+                ("w1".to_string(), vec![20, 30]),
+                ("b1".to_string(), vec![30]),
+                ("w2".to_string(), vec![17, 10]),
+            ],
+            &flat,
+            Schedule::paper_default(),
+        )
+        .unwrap()
+        .with_inferred_layers();
+        assert_eq!(m.layers, Some(vec![2, 1]));
+        PnetWriter::encode(m, &flat).unwrap()
+    }
+
+    #[test]
+    fn layer_events_emitted_as_layers_complete() {
+        let w = setup_layered(10);
+        let mut asm = Assembler::new(w.manifest().clone());
+        assert_eq!(asm.layer_count(), 2);
+        assert_eq!(asm.layer_weight_range(0), 0..630);
+        assert_eq!(asm.layer_weight_range(1), 630..800);
+        // stage-major delivery: layer 0 fires once both its tensors land,
+        // layer 1 (single tensor) right after — before the stage event
+        assert_eq!(asm.absorb(0, 0, w.fragment(0, 0)).unwrap(), None);
+        assert!(asm.drain_layer_events().is_empty());
+        assert_eq!(asm.absorb(0, 1, w.fragment(0, 1)).unwrap(), None);
+        assert_eq!(asm.drain_layer_events(), vec![(0, 0)]);
+        assert_eq!(asm.absorb(0, 2, w.fragment(0, 2)).unwrap(), Some(0));
+        assert_eq!(asm.drain_layer_events(), vec![(1, 0)]);
+        assert_eq!(asm.layer_stages_complete(0), 1);
+        assert_eq!(asm.layer_stages_complete(1), 1);
+        // draining is destructive: nothing left
+        assert!(asm.drain_layer_events().is_empty());
+        // next stage fires both layers again, in completion order
+        for t in 0..3 {
+            asm.absorb(1, t, w.fragment(1, t)).unwrap();
+        }
+        assert_eq!(asm.drain_layer_events(), vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn layer_events_tolerate_within_stage_permutation() {
+        let w = setup_layered(11);
+        let mut asm = Assembler::new(w.manifest().clone());
+        // layer 1's tensor first: it completes before layer 0
+        assert_eq!(asm.absorb(0, 2, w.fragment(0, 2)).unwrap(), None);
+        assert_eq!(asm.drain_layer_events(), vec![(1, 0)]);
+        asm.absorb(0, 1, w.fragment(0, 1)).unwrap();
+        assert!(asm.drain_layer_events().is_empty());
+        assert_eq!(asm.absorb(0, 0, w.fragment(0, 0)).unwrap(), Some(0));
+        assert_eq!(asm.drain_layer_events(), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn duplicate_fragments_never_reemit_layer_events() {
+        let w = setup_layered(12);
+        let mut asm = Assembler::new(w.manifest().clone());
+        for t in 0..3 {
+            asm.absorb(0, t, w.fragment(0, t)).unwrap();
+        }
+        assert_eq!(asm.drain_layer_events().len(), 2);
+        // resume re-delivers stage 0: no events resurface
+        for t in 0..3 {
+            asm.absorb(0, t, w.fragment(0, t)).unwrap();
+        }
+        assert!(asm.drain_layer_events().is_empty());
+    }
+
+    #[test]
+    fn unannotated_manifest_emits_no_layer_events() {
+        let (w, _) = setup(13);
+        assert!(w.manifest().layers.is_none());
+        let mut asm = Assembler::new(w.manifest().clone());
+        assert_eq!(asm.layer_count(), 0);
+        for t in 0..3 {
+            asm.absorb(0, t, w.fragment(0, t)).unwrap();
+        }
+        assert!(asm.drain_layer_events().is_empty());
     }
 
     #[test]

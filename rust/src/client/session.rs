@@ -21,6 +21,16 @@
 //! increasing and never duplicated, including across resumes — the
 //! invariants `tests/session_events.rs` property-checks.
 //!
+//! Layer-annotated (`LayerMajor`) containers additionally emit
+//! [`SessionEvent::LayerReady`] as each layer finishes a stage —
+//! interleaved *ahead* of that stage's `StageComplete`, strictly
+//! increasing and duplicate-free per layer — and an attached
+//! [`LayerGate`] ([`SessionBuilder::layer_gate`]) receives each layer's
+//! dequantized weights the moment they land, which is what lets a
+//! pipelined executor
+//! ([`execute_streaming`](crate::runtime::CompiledModel::execute_streaming))
+//! start inference before stage 0 has fully arrived.
+//!
 //! ```
 //! use std::sync::Arc;
 //! use prognet::client::session::{ProgressiveSession, SessionEvent};
@@ -80,6 +90,7 @@ use crate::format::header::PnetManifest;
 use crate::format::{FrameParser, ParserEvent, PnetReader};
 use crate::metrics::{EventKind, Timeline};
 use crate::quant::Schedule;
+use crate::runtime::stream::LayerGate;
 use crate::runtime::{ApproxModel, InferOutput, ModelSession};
 use crate::server::proto::FetchRequest;
 use crate::server::service::request_on;
@@ -183,6 +194,26 @@ pub enum SessionEvent {
         version: u64,
         t: f64,
     },
+    /// Every tensor of `layer` has absorbed `stage`'s bit-planes: the
+    /// layer is executable at `cum_bits` precision while later layers of
+    /// the same stage are still in flight (`LayerMajor` containers only —
+    /// unannotated containers never produce these). For each stage `s`,
+    /// every `LayerReady { stage: s, .. }` precedes that stage's
+    /// `StageComplete`; per layer, `stage` is strictly increasing and
+    /// duplicate-free, including across cache resumes and reconnects
+    /// (re-delivered fragments never re-emit). When a streaming gate is
+    /// attached ([`SessionBuilder::layer_gate`]), the layer's dequantized
+    /// weights were published into the gate just before this event.
+    LayerReady {
+        model: String,
+        layer: usize,
+        /// stage this layer just completed
+        stage: usize,
+        /// cumulative bits of the layer's tensors after `stage`
+        cum_bits: u32,
+        /// seconds since session start
+        t: f64,
+    },
     /// An inference pass over the configured workload finished.
     Inference { model: String, result: StageResult },
     /// The transfer continued from a cache prefix or a reconnect; no
@@ -267,6 +298,7 @@ pub struct SessionBuilder {
     /// [`ProgressiveSession::multiplex`], honoured even for one model so
     /// the wrapper keeps its per-stage request accounting
     multiplex: bool,
+    layer_gate: Option<Arc<LayerGate>>,
 }
 
 impl SessionBuilder {
@@ -283,6 +315,7 @@ impl SessionBuilder {
             speed_override: None,
             schedule_override: None,
             multiplex,
+            layer_gate: None,
         }
     }
 
@@ -373,6 +406,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach a streaming [`LayerGate`]: every per-layer completion
+    /// publishes the layer's dequantized weight segment (plus its arrival
+    /// time) into the gate just before the matching
+    /// [`SessionEvent::LayerReady`], so a pipelined executor
+    /// ([`execute_streaming`](crate::runtime::CompiledModel::execute_streaming))
+    /// on another thread overlaps inference with the ongoing download.
+    /// Forces eager (per-fragment) dequantization. The driver closes the
+    /// gate on every exit path — success, error, or panic — releasing any
+    /// blocked executor. Requires a layer-annotated container;
+    /// single-model sessions only.
+    pub fn layer_gate(mut self, gate: Arc<LayerGate>) -> Self {
+        self.layer_gate = Some(gate);
+        self
+    }
+
     /// Spawn the session driver and return the live handle.
     pub fn start(mut self) -> Result<ProgressiveSession> {
         anyhow::ensure!(!self.specs.is_empty(), "no models requested");
@@ -415,6 +463,12 @@ impl SessionBuilder {
                 "workload set but no runtime bound for '{m}' (SessionBuilder::runtime)"
             );
         }
+        if self.layer_gate.is_some() {
+            anyhow::ensure!(
+                !self.multiplex,
+                "a streaming layer gate requires a single-model session"
+            );
+        }
         if self.cache_dir.is_some() {
             anyhow::ensure!(
                 !self.multiplex,
@@ -436,6 +490,7 @@ impl SessionBuilder {
         let events: BoundedQueue<SessionEvent> = BoundedQueue::new(1024);
         let q = events.clone();
         let approx2 = approx.clone();
+        let gate = self.layer_gate.clone();
         let cfg = DriverConfig {
             addr,
             specs: self.specs,
@@ -445,6 +500,7 @@ impl SessionBuilder {
             cache_dir: self.cache_dir,
             workload: self.workload,
             multiplex: self.multiplex,
+            layer_gate: self.layer_gate,
         };
         let driver = std::thread::Builder::new()
             .name("prognet-session".into())
@@ -453,7 +509,11 @@ impl SessionBuilder {
                     drive(cfg, &q, &approx2)
                 }));
                 // always close the stream — also on error/panic — or the
-                // consumer would block forever on next_event()
+                // consumer would block forever on next_event(); same for
+                // the streaming gate and its blocked executor
+                if let Some(g) = &gate {
+                    g.close();
+                }
                 q.close();
                 match out {
                     Ok(res) => res,
@@ -584,6 +644,7 @@ struct DriverConfig {
     cache_dir: Option<PathBuf>,
     workload: Option<Workload>,
     multiplex: bool,
+    layer_gate: Option<Arc<LayerGate>>,
 }
 
 fn emit(q: &BoundedQueue<SessionEvent>, ev: SessionEvent) -> Result<()> {
@@ -597,10 +658,62 @@ fn emit(q: &BoundedQueue<SessionEvent>, ev: SessionEvent) -> Result<()> {
 /// stage-boundary reconstruct inside [`publish_stage`] is bookkeeping,
 /// not a full dequant pass. `FinalOnly` reconstructs exactly once, so
 /// eager per-stage dequant would be pure wasted work there.
-fn new_assembler(m: PnetManifest, publishes: bool, policy: InferencePolicy) -> Assembler {
+fn new_assembler(
+    m: PnetManifest,
+    publishes: bool,
+    policy: InferencePolicy,
+    gated: bool,
+) -> Assembler {
     let mut asm = Assembler::new(m);
-    asm.set_eager_dequant(publishes && policy != InferencePolicy::FinalOnly);
+    // a streaming gate consumes per-layer reconstructions mid-stage, so
+    // it needs eager dequant regardless of the publish policy
+    asm.set_eager_dequant(gated || (publishes && policy != InferencePolicy::FinalOnly));
     asm
+}
+
+/// Emit one `LayerReady` — publishing the layer's dequantized segment
+/// into the streaming gate first, so by the time a consumer observes the
+/// event the weights are already waitable.
+fn emit_layer_ready(
+    q: &BoundedQueue<SessionEvent>,
+    gate: Option<&LayerGate>,
+    asm: &Assembler,
+    model: &str,
+    layer: usize,
+    stage: usize,
+    t: f64,
+) -> Result<()> {
+    if let Some(g) = gate {
+        let range = asm.layer_weight_range(layer);
+        g.publish_layer(layer, stage, t, range.clone(), &asm.flat()[range]);
+    }
+    emit(
+        q,
+        SessionEvent::LayerReady {
+            model: model.to_string(),
+            layer,
+            stage,
+            cum_bits: asm.manifest().schedule.cum_bits(stage),
+            t,
+        },
+    )
+}
+
+/// Drain and emit every per-layer completion recorded since the last
+/// drain. Call after each absorbed fragment, *before* any stage-level
+/// event, so `LayerReady { stage: s }` always precedes
+/// `StageComplete { stage: s }`.
+fn drain_layers(
+    q: &BoundedQueue<SessionEvent>,
+    gate: Option<&LayerGate>,
+    asm: &mut Assembler,
+    model: &str,
+    t: f64,
+) -> Result<()> {
+    for (layer, stage) in asm.drain_layer_events() {
+        emit_layer_ready(q, gate, asm, model, layer, stage, t)?;
+    }
+    Ok(())
 }
 
 fn should_infer(policy: InferencePolicy, done_stage: usize, asm: &Assembler) -> bool {
@@ -668,6 +781,7 @@ struct StageCtx<'a> {
     policy: InferencePolicy,
     workload: Option<&'a Workload>,
     approx: Option<&'a ApproxModel>,
+    gate: Option<&'a LayerGate>,
     q: &'a BoundedQueue<SessionEvent>,
     start: Instant,
     timeline: Timeline,
@@ -680,6 +794,34 @@ struct StageCtx<'a> {
 impl StageCtx<'_> {
     fn emit(&self, ev: SessionEvent) -> Result<()> {
         emit(self.q, ev)
+    }
+
+    /// Build the model's assembler for a freshly parsed manifest and,
+    /// when a streaming gate is attached, validate the container's layer
+    /// annotation against it — a missing annotation would silently never
+    /// publish and leave the executor blocked until close.
+    fn make_assembler(&self, m: PnetManifest) -> Result<Assembler> {
+        let asm = new_assembler(m, self.approx.is_some(), self.policy, self.gate.is_some());
+        if let Some(g) = self.gate {
+            anyhow::ensure!(
+                asm.layer_count() > 0,
+                "streaming gate for '{}' requires a layer-annotated (LayerMajor) container",
+                self.model
+            );
+            anyhow::ensure!(
+                g.layers() == asm.layer_count(),
+                "streaming gate for '{}' is sized for {} layers, container has {}",
+                self.model,
+                g.layers(),
+                asm.layer_count()
+            );
+        }
+        Ok(asm)
+    }
+
+    /// Drain per-layer completions (→ `LayerReady`, gate publications).
+    fn emit_layers(&self, asm: &mut Assembler, t: f64) -> Result<()> {
+        drain_layers(self.q, self.gate, asm, &self.model, t)
     }
 
     fn emit_resumed(&mut self, stage: usize, source: ResumeSource) -> Result<()> {
@@ -877,17 +1019,17 @@ fn replay_container(
     let mut asm: Option<Assembler> = None;
     for ev in parser.feed(bytes)? {
         match ev {
-            ParserEvent::Manifest(m) => {
-                asm = Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy))
-            }
+            ParserEvent::Manifest(m) => asm = Some(ctx.make_assembler(*m)?),
             ParserEvent::Fragment {
                 stage,
                 tensor,
                 payload,
             } => {
                 let a = asm.as_mut().context("manifest precedes fragments")?;
-                if let Some(done) = a.absorb(stage, tensor, &payload)? {
-                    let t = ctx.start.elapsed().as_secs_f64();
+                let done = a.absorb(stage, tensor, &payload)?;
+                let t = ctx.start.elapsed().as_secs_f64();
+                ctx.emit_layers(a, t)?;
+                if let Some(done) = done {
                     ctx.note_stage(a, done, t)?;
                     if should_infer(ctx.policy, done, a) {
                         ctx.reconstruct_and_publish(a, t)?;
@@ -925,9 +1067,7 @@ fn warm_start(
     let mut asm: Option<Assembler> = None;
     for ev in events {
         match ev {
-            ParserEvent::Manifest(m) => {
-                asm = Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy))
-            }
+            ParserEvent::Manifest(m) => asm = Some(ctx.make_assembler(*m)?),
             ParserEvent::Fragment {
                 stage,
                 tensor,
@@ -973,15 +1113,28 @@ fn warm_start(
     // inference — share the downloader's clock, so the timeline stays
     // monotonic and excludes the pre-connect cache parsing
     ctx.start = dl.start_instant();
-    // replay the cached stages as events — each stage exactly once …
+    // replay the cached stages as events — each stage exactly once, its
+    // layer completions (recorded during the silent absorb above) ahead
+    // of it, exactly as a live transfer would have interleaved them …
+    let cached_layers = asm.drain_layer_events();
     for s in 0..boundary {
         let t = ctx.start.elapsed().as_secs_f64();
+        for &(layer, stage) in cached_layers.iter().filter(|&&(_, st)| st == s) {
+            emit_layer_ready(ctx.q, ctx.gate, &asm, &ctx.model, layer, stage, t)?;
+        }
         ctx.note_stage(&asm, s, t)?;
     }
     // … reconstructing once at the boundary (skip-to-newest semantics)
     let t = ctx.start.elapsed().as_secs_f64();
     if should_infer(ctx.policy, boundary - 1, &asm) {
         ctx.reconstruct_and_publish(&mut asm, t)?;
+    }
+    // layers already completed inside the partially cached stage
+    // `boundary` announce now — the wire re-delivers those fragments, but
+    // duplicates never re-emit, so each (layer, stage) fires exactly once
+    let t = ctx.start.elapsed().as_secs_f64();
+    for &(layer, stage) in cached_layers.iter().filter(|&&(_, st)| st >= boundary) {
+        emit_layer_ready(ctx.q, ctx.gate, &asm, &ctx.model, layer, stage, t)?;
     }
     ctx.emit_resumed(boundary, ResumeSource::Cache)?;
     Ok(Some((asm, dl, prefix_len as u64)))
@@ -1001,6 +1154,7 @@ fn drive_single(
         cache_dir,
         workload,
         multiplex: _,
+        layer_gate,
     } = cfg;
     let req = specs.into_iter().next().expect("one spec").request;
     let model = req.model.clone();
@@ -1009,6 +1163,7 @@ fn drive_single(
         policy,
         workload: workload.as_ref(),
         approx: approx_map.get(&model),
+        gate: layer_gate.as_deref(),
         q,
         start: clock::now(),
         timeline: Timeline::new(),
@@ -1067,7 +1222,7 @@ fn drive_single(
                 WireItem::Resumed { stage } => ctx.emit_resumed(stage, ResumeSource::Reconnect),
                 WireItem::Event(TimedEvent { t, event }) => match event {
                     ParserEvent::Manifest(m) => {
-                        asm_opt = Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy));
+                        asm_opt = Some(ctx.make_assembler(*m)?);
                         Ok(())
                     }
                     ParserEvent::Fragment {
@@ -1076,7 +1231,9 @@ fn drive_single(
                         payload,
                     } => {
                         let asm = asm_opt.as_mut().expect("manifest precedes fragments");
-                        if let Some(done) = asm.absorb(stage, tensor, &payload)? {
+                        let done = asm.absorb(stage, tensor, &payload)?;
+                        ctx.emit_layers(asm, t)?;
+                        if let Some(done) = done {
                             ctx.note_stage(asm, done, t)?;
                             if should_infer(ctx.policy, done, asm) {
                                 // Serial: block the download thread.
@@ -1123,8 +1280,7 @@ fn drive_single(
                             }
                             Some(WireItem::Event(TimedEvent { t, event })) => match event {
                                 ParserEvent::Manifest(m) => {
-                                    asm_opt =
-                                        Some(new_assembler(*m, ctx.approx.is_some(), ctx.policy));
+                                    asm_opt = Some(ctx.make_assembler(*m)?);
                                 }
                                 ParserEvent::Fragment {
                                     stage,
@@ -1133,7 +1289,9 @@ fn drive_single(
                                 } => {
                                     let asm =
                                         asm_opt.as_mut().expect("manifest precedes fragments");
-                                    if let Some(done) = asm.absorb(stage, tensor, &payload)? {
+                                    let done = asm.absorb(stage, tensor, &payload)?;
+                                    ctx.emit_layers(asm, t)?;
+                                    if let Some(done) = done {
                                         ctx.note_stage(asm, done, t)?;
                                         if ctx.policy == InferencePolicy::LatestOnly {
                                             pending = Some(t); // overwrite older
@@ -1281,20 +1439,23 @@ fn drive_multiplex(
             match ev {
                 ParserEvent::Manifest(man) => {
                     let publishes = approx_map.contains_key(&req.model);
-                    assemblers.insert(req.model.clone(), new_assembler(*man, publishes, policy));
+                    assemblers.insert(
+                        req.model.clone(),
+                        new_assembler(*man, publishes, policy, false),
+                    );
                 }
                 ParserEvent::Fragment {
                     stage,
                     tensor,
                     payload,
                 } => {
-                    if let Some(done) = assemblers
+                    let asm = assemblers
                         .get_mut(&req.model)
-                        .context("manifest precedes fragments")?
-                        .absorb(stage, tensor, &payload)?
-                    {
+                        .context("manifest precedes fragments")?;
+                    if let Some(done) = asm.absorb(stage, tensor, &payload)? {
                         completed = Some(done);
                     }
+                    drain_layers(q, None, asm, &req.model, start.elapsed().as_secs_f64())?;
                 }
             }
         }
@@ -1365,13 +1526,13 @@ fn drive_multiplex(
                 payload,
             } = ev
             {
-                if let Some(done) = assemblers
+                let asm = assemblers
                     .get_mut(&entry.model)
-                    .expect("assembler created in phase 1")
-                    .absorb(stage, tensor, &payload)?
-                {
+                    .expect("assembler created in phase 1");
+                if let Some(done) = asm.absorb(stage, tensor, &payload)? {
                     completed = Some(done);
                 }
+                drain_layers(q, None, asm, &entry.model, start.elapsed().as_secs_f64())?;
             }
         }
         if let Some(done) = completed {
@@ -1446,10 +1607,16 @@ mod tests {
             .start()
             .unwrap();
         let mut stages = Vec::new();
+        let mut layers = Vec::new();
         let mut finished = 0;
         for ev in handle.events() {
             match ev {
                 SessionEvent::StageComplete { stage, .. } => stages.push(stage),
+                SessionEvent::LayerReady { layer, stage, .. } => {
+                    // every LayerReady of a stage precedes its StageComplete
+                    assert!(!stages.contains(&stage), "layer {layer} late for {stage}");
+                    layers.push((layer, stage));
+                }
                 SessionEvent::ModelReady { .. } | SessionEvent::Inference { .. } => {
                     panic!("no runtime bound — no model/inference events")
                 }
@@ -1462,6 +1629,10 @@ mod tests {
             }
         }
         assert_eq!(stages, (0..8).collect::<Vec<_>>());
+        // "alpha" is (w1+b1)(w2) = 2 layers; stage-major delivery
+        // completes them in order within every stage
+        let want: Vec<(usize, usize)> = (0..8).flat_map(|s| [(0, s), (1, s)]).collect();
+        assert_eq!(layers, want);
         assert_eq!(finished, 1);
         let report = handle.finish().unwrap();
         let asm = report.assembler("alpha").unwrap();

@@ -16,6 +16,13 @@
 //! `Arc<EncodedContainer>` — the zero-copy hot path of the blocking
 //! server, preserved.
 //!
+//! Layer granularity is invisible here: the `layers` manifest key rides
+//! inside the preamble the repository already serves, the body stays
+//! stage-major, and clients carve per-layer progress out of the byte
+//! stream on their side (`client::Assembler`, `runtime::LayerGate`).
+//! The echoed stage range in the status frame remains the authoritative
+//! description of what this connection transfers.
+//!
 //! The state machine is generic over the stream so tests can drive it
 //! with an in-memory mock; the reactor instantiates it with
 //! `TcpStream`.

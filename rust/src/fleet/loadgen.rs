@@ -415,7 +415,7 @@ fn drive_client(
                     }
                 }
                 SessionEvent::Resumed { .. } => sample.resumed += 1,
-                SessionEvent::Inference { .. } => {}
+                SessionEvent::Inference { .. } | SessionEvent::LayerReady { .. } => {}
                 SessionEvent::Finished(summary) => {
                     sample.t_finished = Some(t);
                     sample.bytes = summary.bytes;

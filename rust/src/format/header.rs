@@ -43,6 +43,15 @@ pub struct PnetManifest {
     pub k: u32,
     pub schedule: Schedule,
     pub tensors: Vec<TensorMeta>,
+    /// Layer-granular ordering annotation (`LayerMajor`): tensors per
+    /// layer, in tensor order. `Some(counts)` marks the ragged layer
+    /// boundaries inside each stage — tensors are already laid out layer
+    /// by layer, so the fragment wire order is unchanged and the body
+    /// stays byte-identical to an unannotated (v1 stage-major) container;
+    /// only the manifest JSON in the preamble grows by this key. Clients
+    /// use it to emit `LayerReady` events and to begin executing layer 0
+    /// while later layers are still in flight. `None` = v1 stage-major.
+    pub layers: Option<Vec<usize>>,
 }
 
 impl PnetManifest {
@@ -78,7 +87,7 @@ impl PnetManifest {
     }
 
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut pairs = vec![
             ("model", json::s(&self.model)),
             ("task", json::s(&self.task)),
             ("k", json::num(self.k as f64)),
@@ -115,7 +124,14 @@ impl PnetManifest {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(layers) = &self.layers {
+            pairs.push((
+                "layers",
+                json::arr(layers.iter().map(|&n| json::num(n as f64)).collect()),
+            ));
+        }
+        json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -162,14 +178,64 @@ impl PnetManifest {
             }
             off += t.numel;
         }
+        let layers = match j.opt("layers") {
+            None => None,
+            Some(l) => {
+                let counts = l
+                    .as_arr()?
+                    .iter()
+                    .map(|c| c.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                if counts.iter().any(|&c| c == 0) {
+                    bail!("layer annotation contains an empty layer");
+                }
+                if counts.iter().sum::<usize>() != tensors.len() {
+                    bail!(
+                        "layer annotation covers {} tensors, manifest has {}",
+                        counts.iter().sum::<usize>(),
+                        tensors.len()
+                    );
+                }
+                Some(counts)
+            }
+        };
         Ok(Self {
             model: j.get("model")?.as_str()?.to_string(),
             task: j.get("task")?.as_str()?.to_string(),
             k,
             schedule,
             tensors,
+            layers,
         })
     }
+
+    /// Annotate this manifest with inferred layer groups
+    /// ([`infer_layer_groups`]), switching it to `LayerMajor` ordering.
+    pub fn with_inferred_layers(mut self) -> Self {
+        let shapes: Vec<&[usize]> = self.tensors.iter().map(|t| t.shape.as_slice()).collect();
+        self.layers = Some(infer_layer_groups(&shapes));
+        self
+    }
+}
+
+/// Group a tensor sequence into model layers by shape rank: a tensor of
+/// rank ≥ 2 (dense / conv kernel) starts a new layer, and rank-≤1
+/// tensors (biases) join the layer in progress. This matches how the
+/// reference runtime derives its layer graph (`runtime::reference::plan`:
+/// kernel + optional bias per layer), so the groups line up one-to-one
+/// with executable layers for plannable models.
+///
+/// Returns tensors-per-layer counts (the `layers` manifest field).
+pub fn infer_layer_groups(shapes: &[&[usize]]) -> Vec<usize> {
+    let mut counts: Vec<usize> = Vec::new();
+    for shape in shapes {
+        if shape.len() >= 2 || counts.is_empty() {
+            counts.push(1);
+        } else {
+            *counts.last_mut().expect("non-empty") += 1;
+        }
+    }
+    counts
 }
 
 /// Derived byte-range index of a stage-major `.pnet` container: where the
@@ -190,6 +256,10 @@ pub struct StageIndex {
     frame_starts: Vec<Vec<usize>>,
     /// `payload_lens[stage][tensor]`: packed plane bytes of that fragment
     payload_lens: Vec<Vec<usize>>,
+    /// `LayerMajor` ragged boundaries: tensor index where each layer
+    /// starts, plus one final entry = tensor count. Empty when the
+    /// manifest carries no layer annotation (v1 stage-major).
+    layer_bounds: Vec<usize>,
 }
 
 impl StageIndex {
@@ -215,11 +285,26 @@ impl StageIndex {
             payload_lens.push(pl);
         }
         stage_starts.push(off);
+        let layer_bounds = match &manifest.layers {
+            None => Vec::new(),
+            Some(counts) => {
+                let mut bounds = Vec::with_capacity(counts.len() + 1);
+                let mut at = 0;
+                bounds.push(0);
+                for &c in counts {
+                    at += c;
+                    bounds.push(at);
+                }
+                debug_assert_eq!(at, manifest.tensors.len());
+                bounds
+            }
+        };
         Self {
             preamble_len,
             stage_starts,
             frame_starts,
             payload_lens,
+            layer_bounds,
         }
     }
 
@@ -263,6 +348,35 @@ impl StageIndex {
             );
         }
         Ok(self.stage_starts[a]..self.stage_starts[b])
+    }
+
+    /// Number of annotated layers; 0 for an unannotated (v1) container.
+    pub fn layers(&self) -> usize {
+        self.layer_bounds.len().saturating_sub(1)
+    }
+
+    /// Tensor indices belonging to `layer` (layers are contiguous tensor
+    /// runs, so this is a range).
+    pub fn layer_tensor_range(&self, layer: usize) -> Result<Range<usize>> {
+        if layer + 1 >= self.layer_bounds.len() {
+            bail!("layer {layer} out of range for {}-layer index", self.layers());
+        }
+        Ok(self.layer_bounds[layer]..self.layer_bounds[layer + 1])
+    }
+
+    /// Byte run of one layer's frames within one stage. Contiguous
+    /// because layers are contiguous tensor runs and frames within a
+    /// stage follow tensor order — this is the slice whose arrival makes
+    /// `(layer, stage)` executable, and the unit the streaming executor
+    /// blocks on.
+    pub fn layer_span(&self, stage: usize, layer: usize) -> Result<Range<usize>> {
+        if stage >= self.stages() {
+            bail!("stage {stage} out of range");
+        }
+        let tensors = self.layer_tensor_range(layer)?;
+        let start = self.frame_starts[stage][tensors.start];
+        let end = self.frame_range(stage, tensors.end - 1).end;
+        Ok(start..end)
     }
 
     /// Response body for a stage-range request: preamble + frames when the
@@ -347,6 +461,7 @@ pub fn manifest_from_weights(
         k: K,
         schedule,
         tensors: metas,
+        layers: None,
     })
 }
 
@@ -443,6 +558,90 @@ mod tests {
         assert_eq!(r1, idx.stage_span(2, 5).unwrap());
         assert!(idx.body_range(Some((5, 5))).is_err());
         assert!(idx.body_range(Some((0, 99))).is_err());
+    }
+
+    #[test]
+    fn layer_groups_inferred_by_rank() {
+        // kernel starts a layer, bias joins it; a leading bias still
+        // forms a group of its own
+        assert_eq!(
+            infer_layer_groups(&[&[3, 3, 2, 8][..], &[8], &[128, 10], &[10]]),
+            vec![2, 2]
+        );
+        assert_eq!(infer_layer_groups(&[&[16, 12][..], &[12, 10]]), vec![1, 1]);
+        assert_eq!(infer_layer_groups(&[&[8][..], &[8, 4]]), vec![1, 1]);
+        assert_eq!(infer_layer_groups(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn layer_annotation_roundtrips_and_validates() {
+        let m = sample_manifest().with_inferred_layers();
+        assert_eq!(m.layers, Some(vec![2])); // a.w [4,8] + a.b [8]
+        let j = m.to_json();
+        let m2 = PnetManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(m, m2);
+        // annotation must tile the tensor list exactly
+        let bad = j.to_string().replace("\"layers\":[2]", "\"layers\":[1]");
+        assert!(PnetManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        let empty = j.to_string().replace("\"layers\":[2]", "\"layers\":[0,2]");
+        assert!(PnetManifest::from_json(&Json::parse(&empty).unwrap()).is_err());
+    }
+
+    #[test]
+    fn layer_annotation_changes_only_the_preamble() {
+        let plain = sample_manifest();
+        let annotated = plain.clone().with_inferred_layers();
+        // identical fragment geometry: same payloads, same frame layout
+        assert_eq!(plain.payload_bytes(), annotated.payload_bytes());
+        let ip = plain.stage_index();
+        let ia = annotated.stage_index();
+        let delta = ia.preamble_len() - ip.preamble_len();
+        assert!(delta > 0, "layers key must serialize");
+        assert_eq!(ia.total_len() - ip.total_len(), delta);
+        for s in 0..ip.stages() {
+            for t in 0..ip.tensors() {
+                let fp = ip.frame_range(s, t);
+                let fa = ia.frame_range(s, t);
+                assert_eq!(fa.start - fp.start, delta);
+                assert_eq!(fa.len(), fp.len());
+            }
+        }
+    }
+
+    #[test]
+    fn layer_spans_tile_each_stage() {
+        let m = manifest_from_weights(
+            "lm",
+            "classify",
+            &[
+                ("c1.w".to_string(), vec![3, 3, 1, 4]),
+                ("c1.b".to_string(), vec![4]),
+                ("h.w".to_string(), vec![16, 5]),
+                ("h.b".to_string(), vec![5]),
+            ],
+            &(0..(36 + 4 + 80 + 5)).map(|i| i as f32 * 0.01).collect::<Vec<_>>(),
+            Schedule::paper_default(),
+        )
+        .unwrap()
+        .with_inferred_layers();
+        let idx = m.stage_index();
+        assert_eq!(idx.layers(), 2);
+        assert_eq!(idx.layer_tensor_range(0).unwrap(), 0..2);
+        assert_eq!(idx.layer_tensor_range(1).unwrap(), 2..4);
+        for s in 0..idx.stages() {
+            let span = idx.stage_span(s, s + 1).unwrap();
+            let l0 = idx.layer_span(s, 0).unwrap();
+            let l1 = idx.layer_span(s, 1).unwrap();
+            assert_eq!(l0.start, span.start);
+            assert_eq!(l0.end, l1.start, "layer spans tile stage {s}");
+            assert_eq!(l1.end, span.end);
+        }
+        assert!(idx.layer_span(0, 2).is_err());
+        assert!(idx.layer_span(99, 0).is_err());
+        // unannotated index exposes no layers
+        let plain = sample_manifest().stage_index();
+        assert_eq!(plain.layers(), 0);
+        assert!(plain.layer_span(0, 0).is_err());
     }
 
     #[test]

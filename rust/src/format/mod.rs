@@ -18,6 +18,17 @@
 //! `16 B × stages × tensors` of framing plus one manifest — the payload
 //! itself is exactly the singleton quantized size (paper §III-B: no model
 //! size inflation).
+//!
+//! **Layer-granular ordering (`LayerMajor`).** A manifest may carry a
+//! `layers` annotation (tensors-per-layer counts, see
+//! [`header::infer_layer_groups`]). Within each stage, a layer's frames
+//! then form a contiguous run whose boundary the [`StageIndex`] exposes
+//! (`layer_span`), letting clients emit per-layer readiness events and
+//! start executing layer 0 while later layers of the same stage are
+//! still in flight. The fragment wire order is unchanged — tensors are
+//! already laid out layer by layer — so the body is byte-identical to an
+//! unannotated container and v1 readers simply ignore the extra manifest
+//! key.
 
 #![forbid(unsafe_code)]
 
@@ -26,7 +37,8 @@ pub mod reader;
 pub mod writer;
 
 pub use header::{
-    FragmentHeader, PnetManifest, StageIndex, TensorMeta, FRAG_HEADER_LEN, MAGIC, VERSION,
+    infer_layer_groups, FragmentHeader, PnetManifest, StageIndex, TensorMeta, FRAG_HEADER_LEN,
+    MAGIC, VERSION,
 };
 pub use reader::{FrameParser, ParserEvent, PnetReader};
 pub use writer::PnetWriter;

@@ -112,10 +112,24 @@ impl PnetWriter {
 
     /// Bytes that arrive before the first full stage is available
     /// (preamble + stage 0 frames).
+    ///
+    /// Derived from the [`StageIndex`] rather than re-summed from the
+    /// schedule, so it tracks the active ordering mode's framing: a
+    /// `LayerMajor` (layer-annotated) manifest serializes a longer
+    /// preamble, which the old hand-summed formula silently ignored.
     pub fn first_stage_wire_bytes(&self) -> usize {
-        self.preamble().len()
-            + self.manifest.stage_payload_bytes(0)
-            + self.manifest.tensors.len() * super::header::FRAG_HEADER_LEN
+        self.stage_index()
+            .body_range(Some((0, 1)))
+            .expect("stage 0 always exists")
+            .end
+    }
+
+    /// Bytes that arrive before layer 0 first becomes executable
+    /// (preamble + layer 0's stage-0 frames). This is the transfer the
+    /// streaming executor's time-to-first-inference is bounded by.
+    /// Errors unless the manifest carries a layer annotation.
+    pub fn first_layer_wire_bytes(&self) -> Result<usize> {
+        Ok(self.stage_index().layer_span(0, 0)?.end)
     }
 }
 
@@ -185,6 +199,59 @@ mod tests {
             rejoined.extend_from_slice(&bytes[idx.stage_span(s, s + 1).unwrap()]);
         }
         assert_eq!(rejoined, bytes);
+    }
+
+    #[test]
+    fn first_stage_wire_bytes_tracks_the_ordering_mode() {
+        // Regression: the old formula hand-summed preamble + stage-0
+        // payload + tensor framing, which is only right for a bare
+        // stage-major manifest — a layer annotation lengthens the
+        // preamble and the count must follow.
+        let (m, flat) = sample(7);
+        let plain = PnetWriter::encode(m.clone(), &flat).unwrap();
+        let annotated = PnetWriter::encode(m.clone().with_inferred_layers(), &flat).unwrap();
+        let hand_summed = |w: &PnetWriter| {
+            w.preamble().len()
+                + m.stage_payload_bytes(0)
+                + m.tensors.len() * crate::format::header::FRAG_HEADER_LEN
+        };
+        // both modes: the reported count is exactly where stage 0 ends
+        // in the emitted bytes
+        for w in [&plain, &annotated] {
+            assert_eq!(w.first_stage_wire_bytes(), hand_summed(w));
+            assert_eq!(
+                w.first_stage_wire_bytes(),
+                w.stage_index().stage_span(0, 1).unwrap().end
+            );
+        }
+        // the two modes differ by exactly the manifest growth
+        let delta = annotated.preamble().len() - plain.preamble().len();
+        assert!(delta > 0);
+        assert_eq!(
+            annotated.first_stage_wire_bytes() - plain.first_stage_wire_bytes(),
+            delta
+        );
+        // layer accounting: first layer needs strictly fewer bytes than
+        // the full first stage, and only exists under LayerMajor
+        let first_layer = annotated.first_layer_wire_bytes().unwrap();
+        assert!(first_layer > annotated.preamble().len());
+        assert!(first_layer < annotated.first_stage_wire_bytes());
+        assert!(plain.first_layer_wire_bytes().is_err());
+    }
+
+    #[test]
+    fn layer_annotated_body_is_byte_identical() {
+        // LayerMajor reorders nothing on the wire: tensors already sit
+        // in layer order, so only the preamble (manifest JSON) differs.
+        let (m, flat) = sample(8);
+        let plain = PnetWriter::encode(m.clone(), &flat).unwrap();
+        let annotated = PnetWriter::encode(m.with_inferred_layers(), &flat).unwrap();
+        let pb = plain.to_bytes();
+        let ab = annotated.to_bytes();
+        assert_eq!(
+            &pb[plain.stage_index().preamble_len()..],
+            &ab[annotated.stage_index().preamble_len()..],
+        );
     }
 
     #[test]

@@ -157,13 +157,23 @@ impl ModelManifest {
     }
 
     /// Build the `.pnet` wire manifest for this model under a schedule.
+    ///
+    /// The manifest is layer-annotated (`LayerMajor`): every container
+    /// the server/fleet encodes from a registry model carries ragged
+    /// per-layer boundaries in its preamble, so clients can stream
+    /// execution layer by layer (`SessionEvent::LayerReady`,
+    /// `runtime::reference::RefModel::forward_streaming`). The body
+    /// bytes are identical to the unannotated encoding.
     pub fn pnet_manifest(&self, flat: &[f32], schedule: Schedule) -> Result<PnetManifest> {
         let tensors: Vec<(String, Vec<usize>)> = self
             .tensors
             .iter()
             .map(|t| (t.name.clone(), t.shape.clone()))
             .collect();
-        manifest_from_weights(&self.name, &self.task, &tensors, flat, schedule)
+        Ok(
+            manifest_from_weights(&self.name, &self.task, &tensors, flat, schedule)?
+                .with_inferred_layers(),
+        )
     }
 }
 
@@ -214,5 +224,7 @@ mod tests {
             .pnet_manifest(&flat, crate::quant::Schedule::paper_default())
             .unwrap();
         assert_eq!(pm.param_count(), 6);
+        // registry manifests are layer-annotated: w [2,2] + b [2] = 1 layer
+        assert_eq!(pm.layers, Some(vec![2]));
     }
 }

@@ -118,6 +118,27 @@ pub trait CompiledModel: Send + Sync {
     fn supports_quantized(&self) -> bool {
         false
     }
+
+    /// Pipelined (layer-granular streaming) forward pass: block on
+    /// `gate` per layer and execute each layer the moment its weights
+    /// arrive, so inference overlaps the ongoing transfer instead of
+    /// waiting for a full stage. `min_stage` is the lowest stage a layer
+    /// must have absorbed before dispatch (0 = run on first arrival);
+    /// when more stages have landed by dispatch time the newest is used.
+    /// Returns the outputs plus the per-layer dispatch record
+    /// ([`StreamStats`](super::stream::StreamStats)). Errors if the gate
+    /// closes before every layer reached `min_stage`. Default:
+    /// unsupported.
+    fn execute_streaming(
+        &self,
+        images: &[f32],
+        n: usize,
+        gate: &super::stream::LayerGate,
+        min_stage: usize,
+    ) -> Result<(Vec<f32>, super::stream::StreamStats)> {
+        let _ = (images, n, gate, min_stage);
+        bail!("this backend has no streaming (layer-granular) execution path");
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +159,11 @@ mod tests {
         assert!(!m.supports_quantized());
         assert!(m.execute_quantized(&[], 0, &[], 16).is_err());
         assert_eq!(m.execute(&[], 2, &[]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn streaming_default_is_unsupported() {
+        let gate = crate::runtime::stream::LayerGate::new(1);
+        assert!(NoQuant.execute_streaming(&[], 0, &gate, 0).is_err());
     }
 }

@@ -24,6 +24,11 @@
 //! - [`ApproxModel`] — a session plus a versioned, hot-swappable weight
 //!   cell: the progressive client publishes each stage's reconstruction,
 //!   readers serve inference from atomic snapshots mid-download.
+//! - [`LayerGate`] / [`StreamStats`] ([`stream`]) — layer-granular
+//!   streaming: the download publishes each layer's weights the moment
+//!   they land, and a pipelined executor
+//!   ([`CompiledModel::execute_streaming`]) blocks per layer on arrival,
+//!   so inference begins once layer 0 is down.
 //!
 //! Weights are an *execute-time* input on purpose: §III-C inference runs
 //! concurrently with the ongoing transmission, so every completed stage
@@ -36,11 +41,13 @@ pub mod ops;
 pub mod pjrt;
 pub mod reference;
 pub mod session;
+pub mod stream;
 
 pub use backend::{Backend, CompiledModel};
 pub use engine::Engine;
 pub use reference::ReferenceBackend;
 pub use session::{ApproxModel, ApproxOutput, InferOutput, ModelSession, WeightsVersion};
+pub use stream::{LayerDispatch, LayerGate, LayerUpdate, StreamStats};
 
 use crate::util::sync::atomic::{AtomicUsize, Ordering};
 

@@ -42,6 +42,7 @@ use anyhow::{bail, Context, Result};
 
 use super::backend::{Backend, CompiledModel};
 use super::ops;
+use super::stream::{LayerDispatch, LayerGate, StreamStats};
 use crate::models::{ModelManifest, TensorInfo};
 use crate::quant::{dequantize_into, DequantParams, QuantParams};
 use crate::util::pool::BufferPool;
@@ -350,79 +351,10 @@ impl RefModel {
         let mut col = self.scratch.take(n * self.col_numel);
         ping[..images.len()].copy_from_slice(images);
         let mut cur_numel = self.input_numel;
-        // lint:hot-path — layer loop runs entirely in pooled scratch;
-        // all allocation happened in the `scratch.take` calls above
         for layer in &self.layers {
-            match *layer {
-                Layer::ConvBlock {
-                    w,
-                    b,
-                    h,
-                    wd,
-                    cin,
-                    cout,
-                } => {
-                    let patch = 9 * cin;
-                    let pixels = h * wd;
-                    // whole-batch im2col, then ONE matmul over n·h·w rows
-                    for s in 0..n {
-                        ops::im2col3x3(
-                            &ping[s * cur_numel..][..cur_numel],
-                            h,
-                            wd,
-                            cin,
-                            &mut col[s * pixels * patch..][..pixels * patch],
-                        );
-                    }
-                    ops::matmul_bias_relu(
-                        &col[..n * pixels * patch],
-                        w.of(weights),
-                        b.of(weights),
-                        n * pixels,
-                        patch,
-                        cout,
-                        true,
-                        &mut pong[..n * pixels * cout],
-                    );
-                    // pool back into ping: sample s writes below its own
-                    // (already-consumed) input region, so no aliasing
-                    let pooled = (h / 2) * (wd / 2) * cout;
-                    for s in 0..n {
-                        ops::maxpool2x2(
-                            &pong[s * pixels * cout..][..pixels * cout],
-                            h,
-                            wd,
-                            cout,
-                            &mut ping[s * pooled..][..pooled],
-                        );
-                    }
-                    cur_numel = pooled;
-                }
-                Layer::Dense {
-                    w,
-                    b,
-                    cin,
-                    cout,
-                    relu,
-                } => {
-                    debug_assert_eq!(cin, cur_numel);
-                    let bias = b.map(|s| s.of(weights)).unwrap_or(&[]);
-                    ops::matmul_bias_relu(
-                        &ping[..n * cin],
-                        w.of(weights),
-                        bias,
-                        n,
-                        cin,
-                        cout,
-                        relu,
-                        &mut pong[..n * cout],
-                    );
-                    std::mem::swap(&mut ping, &mut pong);
-                    cur_numel = cout;
-                }
-            }
+            cur_numel =
+                self.layer_step(layer, n, cur_numel, weights, &mut ping, &mut pong, &mut col);
         }
-        // lint:end-hot-path
         out.copy_from_slice(&ping[..n * self.output_dim]);
         if let Some(from) = self.sigmoid_from {
             for row in out.chunks_exact_mut(self.output_dim) {
@@ -434,6 +366,153 @@ impl RefModel {
         self.scratch.put(ping);
         self.scratch.put(pong);
         self.scratch.put(col);
+    }
+
+    /// One planned layer over the whole batch, upholding the ping-pong
+    /// invariant ("current activation in `ping`"). Shared by the batch
+    /// and streaming paths. Returns the new per-sample activation numel.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_step(
+        &self,
+        layer: &Layer,
+        n: usize,
+        cur_numel: usize,
+        weights: &[f32],
+        ping: &mut Vec<f32>,
+        pong: &mut Vec<f32>,
+        col: &mut Vec<f32>,
+    ) -> usize {
+        // lint:hot-path — runs entirely in pooled scratch; all
+        // allocation happened in the callers' `scratch.take` calls
+        match *layer {
+            Layer::ConvBlock {
+                w,
+                b,
+                h,
+                wd,
+                cin,
+                cout,
+            } => {
+                let patch = 9 * cin;
+                let pixels = h * wd;
+                // whole-batch im2col, then ONE matmul over n·h·w rows
+                for s in 0..n {
+                    ops::im2col3x3(
+                        &ping[s * cur_numel..][..cur_numel],
+                        h,
+                        wd,
+                        cin,
+                        &mut col[s * pixels * patch..][..pixels * patch],
+                    );
+                }
+                ops::matmul_bias_relu(
+                    &col[..n * pixels * patch],
+                    w.of(weights),
+                    b.of(weights),
+                    n * pixels,
+                    patch,
+                    cout,
+                    true,
+                    &mut pong[..n * pixels * cout],
+                );
+                // pool back into ping: sample s writes below its own
+                // (already-consumed) input region, so no aliasing
+                let pooled = (h / 2) * (wd / 2) * cout;
+                for s in 0..n {
+                    ops::maxpool2x2(
+                        &pong[s * pixels * cout..][..pixels * cout],
+                        h,
+                        wd,
+                        cout,
+                        &mut ping[s * pooled..][..pooled],
+                    );
+                }
+                pooled
+            }
+            Layer::Dense {
+                w,
+                b,
+                cin,
+                cout,
+                relu,
+            } => {
+                debug_assert_eq!(cin, cur_numel);
+                let bias = b.map(|s| s.of(weights)).unwrap_or(&[]);
+                ops::matmul_bias_relu(
+                    &ping[..n * cin],
+                    w.of(weights),
+                    bias,
+                    n,
+                    cin,
+                    cout,
+                    relu,
+                    &mut pong[..n * cout],
+                );
+                std::mem::swap(ping, pong);
+                cout
+            }
+        }
+        // lint:end-hot-path
+    }
+
+    /// Pipelined forward pass: block on `gate` per layer and run each
+    /// layer the moment its weights arrive ([`LayerGate::wait`]), so
+    /// inference begins once layer 0 lands while later layers are still
+    /// in flight. Weights accumulate segment by segment in a pooled
+    /// buffer; each layer reads only its own (already-copied) segment.
+    /// The plan's layer list and the gate's layer annotation derive from
+    /// the same rank convention ([`crate::format::header::infer_layer_groups`]),
+    /// which the count check below enforces.
+    fn forward_streaming(
+        &self,
+        images: &[f32],
+        n: usize,
+        gate: &LayerGate,
+        min_stage: usize,
+        out: &mut [f32],
+    ) -> Result<StreamStats> {
+        anyhow::ensure!(
+            gate.layers() == self.layers.len(),
+            "gate announces {} layers, plan has {}",
+            gate.layers(),
+            self.layers.len()
+        );
+        debug_assert_eq!(images.len(), n * self.input_numel);
+        debug_assert_eq!(out.len(), n * self.output_dim);
+        let mut weights = self.scratch.take(self.param_count);
+        let mut ping = self.scratch.take(n * self.buf_numel);
+        let mut pong = self.scratch.take(n * self.buf_numel);
+        let mut col = self.scratch.take(n * self.col_numel);
+        ping[..images.len()].copy_from_slice(images);
+        let mut cur_numel = self.input_numel;
+        let mut stats = StreamStats::default();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let up = gate.wait(li, min_stage).with_context(|| {
+                format!("gate closed before layer {li} reached stage {min_stage}")
+            })?;
+            weights[up.range.clone()].copy_from_slice(&up.seg);
+            stats.dispatches.push(LayerDispatch {
+                layer: li,
+                stage: up.stage,
+                t: up.t,
+            });
+            cur_numel =
+                self.layer_step(layer, n, cur_numel, &weights, &mut ping, &mut pong, &mut col);
+        }
+        debug_assert_eq!(cur_numel, self.output_dim);
+        out.copy_from_slice(&ping[..n * self.output_dim]);
+        if let Some(from) = self.sigmoid_from {
+            for row in out.chunks_exact_mut(self.output_dim) {
+                for v in &mut row[from..] {
+                    *v = ops::sigmoid(*v);
+                }
+            }
+        }
+        self.scratch.put(weights);
+        self.scratch.put(ping);
+        self.scratch.put(pong);
+        self.scratch.put(col);
+        Ok(stats)
     }
 
     /// Contiguous shards for a batch of `n`: 1 below the sharding
@@ -571,6 +650,24 @@ impl CompiledModel for RefModel {
 
     fn supports_quantized(&self) -> bool {
         true
+    }
+
+    fn execute_streaming(
+        &self,
+        images: &[f32],
+        n: usize,
+        gate: &LayerGate,
+        min_stage: usize,
+    ) -> Result<(Vec<f32>, StreamStats)> {
+        anyhow::ensure!(
+            images.len() == n * self.input_numel,
+            "streaming batch is {} floats, expected {}",
+            images.len(),
+            n * self.input_numel
+        );
+        let mut out = vec![0f32; n * self.output_dim];
+        let stats = self.forward_streaming(images, n, gate, min_stage, &mut out)?;
+        Ok((out, stats))
     }
 }
 
@@ -833,6 +930,92 @@ mod tests {
         let direct = compiled.execute_quantized(&image, 1, &qflat2, K).unwrap();
         assert_eq!(v3, direct);
         assert_ne!(v1, v3);
+    }
+
+    /// (layer, flat range) pairs per the manifest's rank convention —
+    /// the same grouping `plan` and `infer_layer_groups` derive.
+    fn layer_ranges(m: &ModelManifest) -> Vec<std::ops::Range<usize>> {
+        let shapes: Vec<&[usize]> = m.tensors.iter().map(|t| t.shape.as_slice()).collect();
+        let groups = crate::format::header::infer_layer_groups(&shapes);
+        let mut out = Vec::new();
+        let mut ti = 0;
+        for &c in &groups {
+            let first = &m.tensors[ti];
+            let last = &m.tensors[ti + c - 1];
+            out.push(first.offset..last.offset + last.numel);
+            ti += c;
+        }
+        out
+    }
+
+    #[test]
+    fn streaming_matches_batch_when_all_layers_published() {
+        use crate::runtime::stream::LayerGate;
+        let reg = dense_registry("ref-stream");
+        let m = reg.get("dense3").unwrap();
+        let flat = m.load_weights().unwrap();
+        let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+        let ranges = layer_ranges(m);
+        let gate = LayerGate::new(ranges.len());
+        for (l, r) in ranges.iter().enumerate() {
+            gate.publish_layer(l, 0, l as f64 * 0.5, r.clone(), &flat[r.clone()]);
+        }
+        let n = 3;
+        let images: Vec<f32> = (0..n * m.input_numel())
+            .map(|i| (i % 7) as f32 * 0.1)
+            .collect();
+        let (got, stats) = compiled.execute_streaming(&images, n, &gate, 0).unwrap();
+        let want = compiled.execute(&images, n, &flat).unwrap();
+        assert_eq!(got, want);
+        // dispatch record carries the publish timestamps, in layer order
+        assert_eq!(stats.dispatches.len(), ranges.len());
+        assert_eq!(stats.t_first_dispatch(), 0.0);
+        assert_eq!(stats.t_last_dispatch(), (ranges.len() - 1) as f64 * 0.5);
+        for (l, d) in stats.dispatches.iter().enumerate() {
+            assert_eq!((d.layer, d.stage), (l, 0));
+        }
+    }
+
+    #[test]
+    fn streaming_blocks_until_each_layer_arrives() {
+        use crate::runtime::stream::LayerGate;
+        let reg = dense_registry("ref-stream-late");
+        let m = reg.get("dense3").unwrap();
+        let flat = m.load_weights().unwrap();
+        let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+        let ranges = layer_ranges(m);
+        let gate = Arc::new(LayerGate::new(ranges.len()));
+        let images: Vec<f32> = (0..m.input_numel()).map(|i| (i % 5) as f32 * 0.2).collect();
+        let publisher = {
+            let gate = gate.clone();
+            let flat = flat.clone();
+            let ranges = ranges.clone();
+            std::thread::spawn(move || {
+                for (l, r) in ranges.iter().enumerate() {
+                    gate.publish_layer(l, 0, l as f64, r.clone(), &flat[r.clone()]);
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let (got, _) = compiled.execute_streaming(&images, 1, &gate, 0).unwrap();
+        publisher.join().unwrap();
+        assert_eq!(got, compiled.execute(&images, 1, &flat).unwrap());
+    }
+
+    #[test]
+    fn streaming_errors_on_closed_gate_and_bad_sizing() {
+        use crate::runtime::stream::LayerGate;
+        let reg = dense_registry("ref-stream-err");
+        let m = reg.get("dense3").unwrap();
+        let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+        let images: Vec<f32> = vec![0.0; m.input_numel()];
+        // a gate sized for a different plan is a config error
+        let wrong = LayerGate::new(layer_ranges(m).len() + 1);
+        assert!(compiled.execute_streaming(&images, 1, &wrong, 0).is_err());
+        // a closed, undelivered gate errors out instead of hanging
+        let closed = LayerGate::new(layer_ranges(m).len());
+        closed.close();
+        assert!(compiled.execute_streaming(&images, 1, &closed, 0).is_err());
     }
 
     #[test]

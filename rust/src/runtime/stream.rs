@@ -1,0 +1,283 @@
+//! Layer-granular streaming execution support: the [`LayerGate`]
+//! hand-off between a progressive download and a pipelined forward pass.
+//!
+//! The paper's concurrency model overlaps transmission with inference at
+//! stage granularity: infer with stage `k` while stage `k+1` streams.
+//! A `LayerMajor`-annotated container (see [`crate::format::header`])
+//! sharpens that to *layer* granularity — layer 0's stage-0 bits land
+//! long before the rest of the stage, so the forward pass can start as
+//! soon as the first layer's weights exist. The gate is the
+//! synchronization point: the download side publishes each layer's
+//! dequantized segment the moment the layer completes a stage
+//! ([`LayerGate::publish_layer`]); the executor blocks per layer on
+//! arrival ([`LayerGate::wait`]) and otherwise never synchronizes.
+//!
+//! Timestamps ride along with each publication, so an executor replaying
+//! a virtual-time schedule (tests, benches) reports when each dispatch
+//! *became possible* rather than when the executor thread happened to
+//! run — that determinism is what `tests/layer_streaming.rs` pins.
+
+#![forbid(unsafe_code)]
+
+use std::ops::Range;
+
+use crate::util::sync::{Condvar, Mutex};
+
+/// What [`LayerGate::wait`] hands the executor: the newest published
+/// state of one layer.
+#[derive(Debug, Clone)]
+pub struct LayerUpdate {
+    /// highest stage this layer has fully absorbed
+    pub stage: usize,
+    /// publisher-supplied timestamp of that stage's arrival (seconds on
+    /// the publisher's clock — virtual time in the test harness)
+    pub t: f64,
+    /// flat-weight element range the segment covers
+    pub range: Range<usize>,
+    /// dequantized weights for the layer at `stage`'s cumulative bits
+    pub seg: Vec<f32>,
+}
+
+/// One layer's slot inside the gate.
+#[derive(Debug, Default)]
+struct Slot {
+    /// stages published (+1 semantics; 0 = nothing yet)
+    stages: usize,
+    stage: usize,
+    t: f64,
+    range: Range<usize>,
+    seg: Vec<f32>,
+}
+
+#[derive(Debug)]
+struct GateState {
+    slots: Vec<Slot>,
+    closed: bool,
+}
+
+/// Rendezvous between a layer-granular download and a streaming
+/// executor.
+///
+/// The publisher calls [`LayerGate::publish_layer`] once per completed
+/// `(layer, stage)` — strictly in stage order per layer — and
+/// [`LayerGate::close`] when the transfer ends (normally or not). The
+/// executor calls [`LayerGate::wait`] per layer; it blocks until the
+/// layer has at least the requested stage, and sees the *newest*
+/// published stage (skip-to-latest, mirroring `InferencePolicy::LatestOnly`).
+///
+/// The gate snapshots each segment at publish time, so the executor
+/// reads a consistent per-layer reconstruction even while the
+/// assembler's flat buffer keeps mutating under later fragments.
+#[derive(Debug)]
+pub struct LayerGate {
+    layers: usize,
+    state: Mutex<GateState>,
+    arrived: Condvar,
+}
+
+impl LayerGate {
+    /// A gate for a model with `layers` annotated layers.
+    pub fn new(layers: usize) -> Self {
+        let slots = (0..layers).map(|_| Slot::default()).collect();
+        Self {
+            layers,
+            state: Mutex::new(GateState {
+                slots,
+                closed: false,
+            }),
+            arrived: Condvar::new(),
+        }
+    }
+
+    /// Number of layers the gate was sized for.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Publish layer `layer` at `stage`: `seg` is the layer's dequantized
+    /// flat-weight segment covering `range`, `t` the arrival timestamp on
+    /// the publisher's clock. Stages must be published in order per layer
+    /// (the assembler's in-order absorption guarantees this; duplicates
+    /// never re-emit). Publishing after [`LayerGate::close`] is a no-op.
+    pub fn publish_layer(
+        &self,
+        layer: usize,
+        stage: usize,
+        t: f64,
+        range: Range<usize>,
+        seg: &[f32],
+    ) {
+        assert_eq!(seg.len(), range.len(), "segment/range size mismatch");
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return;
+        }
+        let slot = &mut st.slots[layer];
+        assert_eq!(
+            stage, slot.stages,
+            "layer {layer}: stages must be published in order"
+        );
+        // lint:hot-path — the segment is snapshotted under the gate lock
+        // so a waiting executor never observes a half-published layer;
+        // `clear` + `extend` reuses the slot's allocation after the first
+        // stage (see the lint-allow entry for this file)
+        slot.seg.clear();
+        slot.seg.extend_from_slice(seg);
+        // lint:end-hot-path
+        slot.stage = stage;
+        slot.t = t;
+        slot.range = range;
+        slot.stages = stage + 1;
+        drop(st);
+        self.arrived.notify_all();
+    }
+
+    /// Block until `layer` has absorbed at least `min_stage`, then return
+    /// its newest published state. Returns `None` once the gate is closed
+    /// and the requirement can no longer be met.
+    pub fn wait(&self, layer: usize, min_stage: usize) -> Option<LayerUpdate> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.slots[layer].stages > min_stage {
+                let slot = &st.slots[layer];
+                // lint:hot-path — the per-wait snapshot copy keeps the
+                // executor lock-free while it computes; the allocation is
+                // waived for this file (see lint-allow.txt)
+                return Some(LayerUpdate {
+                    stage: slot.stage,
+                    t: slot.t,
+                    range: slot.range.clone(),
+                    seg: slot.seg.to_vec(),
+                });
+                // lint:end-hot-path
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.arrived.wait(st).unwrap();
+        }
+    }
+
+    /// Close the gate: wakes every waiter; [`LayerGate::wait`] calls that
+    /// cannot be satisfied return `None` from now on. Idempotent. Call on
+    /// every transfer exit path — otherwise a streaming executor waiting
+    /// on an undelivered layer blocks forever.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    /// Whether [`LayerGate::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+/// One executed layer of a streaming forward pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerDispatch {
+    pub layer: usize,
+    /// the stage whose weights the layer ran with
+    pub stage: usize,
+    /// publish timestamp of that `(layer, stage)` — when the dispatch
+    /// became *possible*, on the publisher's clock
+    pub t: f64,
+}
+
+/// What a pipelined forward pass reports: the per-layer dispatch record,
+/// in execution order.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub dispatches: Vec<LayerDispatch>,
+}
+
+impl StreamStats {
+    /// When inference *began*: the publish time of the first executed
+    /// layer. This is the streaming pipeline's time-to-first-inference —
+    /// compute is free in virtual time, so TTFI is bounded by when layer
+    /// 0's first stage finished transferring.
+    pub fn t_first_dispatch(&self) -> f64 {
+        self.dispatches.first().map(|d| d.t).unwrap_or(f64::NAN)
+    }
+
+    /// Publish time of the last executed layer — when the pipeline's
+    /// final blocking wait was satisfied.
+    pub fn t_last_dispatch(&self) -> f64 {
+        self.dispatches.last().map(|d| d.t).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::Arc;
+
+    #[test]
+    fn publish_then_wait_returns_the_update() {
+        let gate = LayerGate::new(2);
+        gate.publish_layer(0, 0, 0.5, 4..8, &[1.0, 2.0, 3.0, 4.0]);
+        let up = gate.wait(0, 0).unwrap();
+        assert_eq!(up.stage, 0);
+        assert_eq!(up.t, 0.5);
+        assert_eq!(up.range, 4..8);
+        assert_eq!(up.seg, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn wait_skips_to_the_newest_stage() {
+        let gate = LayerGate::new(1);
+        gate.publish_layer(0, 0, 0.1, 0..1, &[1.0]);
+        gate.publish_layer(0, 1, 0.2, 0..1, &[2.0]);
+        let up = gate.wait(0, 0).unwrap();
+        assert_eq!((up.stage, up.t), (1, 0.2));
+        assert_eq!(up.seg, vec![2.0]);
+    }
+
+    #[test]
+    fn wait_blocks_until_publish() {
+        let gate = Arc::new(LayerGate::new(1));
+        let g2 = gate.clone();
+        let waiter = std::thread::spawn(move || g2.wait(0, 1));
+        // two stages must land before the waiter is satisfied
+        gate.publish_layer(0, 0, 0.1, 0..1, &[1.0]);
+        gate.publish_layer(0, 1, 0.2, 0..1, &[2.0]);
+        let up = waiter.join().unwrap().unwrap();
+        assert_eq!(up.stage, 1);
+    }
+
+    #[test]
+    fn close_releases_unsatisfiable_waits() {
+        let gate = Arc::new(LayerGate::new(2));
+        gate.publish_layer(0, 0, 0.1, 0..1, &[1.0]);
+        let g2 = gate.clone();
+        let waiter = std::thread::spawn(move || g2.wait(1, 0));
+        gate.close();
+        assert!(waiter.join().unwrap().is_none());
+        assert!(gate.is_closed());
+        // satisfied waits still succeed after close
+        assert_eq!(gate.wait(0, 0).unwrap().stage, 0);
+        // and late publishes are dropped, not applied
+        gate.publish_layer(1, 0, 0.2, 1..2, &[2.0]);
+        assert!(gate.wait(1, 0).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "published in order")]
+    fn out_of_order_publish_panics() {
+        let gate = LayerGate::new(1);
+        gate.publish_layer(0, 1, 0.1, 0..1, &[1.0]);
+    }
+
+    #[test]
+    fn stats_report_first_and_last_dispatch() {
+        let stats = StreamStats {
+            dispatches: vec![
+                LayerDispatch { layer: 0, stage: 0, t: 0.25 },
+                LayerDispatch { layer: 1, stage: 0, t: 0.75 },
+            ],
+        };
+        assert_eq!(stats.t_first_dispatch(), 0.25);
+        assert_eq!(stats.t_last_dispatch(), 0.75);
+        assert!(StreamStats::default().t_first_dispatch().is_nan());
+    }
+}

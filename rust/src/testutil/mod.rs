@@ -7,3 +7,4 @@
 
 pub mod fixture;
 pub mod prop;
+pub mod stream;

@@ -1,0 +1,301 @@
+//! Virtual-time streaming harness: replay a `LayerMajor` container over
+//! a [`netsim`](crate::netsim) bandwidth trace and drive the pipelined
+//! executor off the resulting layer-arrival schedule — no sockets, no
+//! sleeps, fully deterministic.
+//!
+//! The walk models the wire exactly: the preamble, then every
+//! `(stage, tensor)` frame in container order, each "sent" through a
+//! [`TraceLink`] whose virtual clock yields the fragment's arrival
+//! time. An eager [`Assembler`] absorbs each fragment on arrival, and
+//! every drained `(layer, stage)` completion becomes a timestamped
+//! [`LayerEvent`] — the same event stream a live
+//! `ProgressiveSession` emits as `SessionEvent::LayerReady`, but on a
+//! scripted timeline. [`run_pipelined`] additionally publishes those
+//! events into a [`LayerGate`] and runs
+//! [`CompiledModel::execute_streaming`] against it, so a test can pin
+//! the pipeline's time-to-first-inference to the byte-level transfer
+//! math (`tests/layer_streaming.rs`, `benches/stream_ttfi.rs`).
+//!
+//! Compute is free in virtual time: the executor's dispatch timestamps
+//! are the *publish* times riding on the gate, so the reported TTFI is
+//! "when layer 0's bits were down", independent of how fast the test
+//! machine happens to run the forward pass.
+
+#![forbid(unsafe_code)]
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::client::Assembler;
+use crate::format::header::FRAG_HEADER_LEN;
+use crate::format::PnetWriter;
+use crate::models::{ModelManifest, Registry};
+use crate::netsim::{BandwidthTrace, TraceLink};
+use crate::quant::Schedule;
+use crate::runtime::{CompiledModel, LayerGate, StreamStats};
+use crate::util::sync::Clock;
+
+/// One `(layer, stage)` completion on the virtual timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerEvent {
+    pub layer: usize,
+    pub stage: usize,
+    /// virtual arrival time of the fragment that completed it (seconds)
+    pub t: f64,
+}
+
+/// The full virtual-time arrival schedule of one container over one
+/// trace.
+#[derive(Debug, Clone)]
+pub struct StreamSchedule {
+    /// when the preamble (magic + manifest) finished transferring
+    pub preamble_done: f64,
+    /// every layer completion, in arrival order (all stages)
+    pub events: Vec<LayerEvent>,
+    /// per stage: virtual time its last fragment arrived
+    pub stage_done: Vec<f64>,
+    /// when the whole container finished transferring
+    pub total_done: f64,
+    /// elapsed seconds on the manual [`Clock`] advanced alongside the
+    /// link — ties the two virtual-time facades together; equals
+    /// `total_done` up to `Duration` rounding
+    pub clock_elapsed: f64,
+}
+
+/// Walk the container's wire layout through `trace`, absorbing each
+/// fragment on virtual arrival and invoking `on_event` for every layer
+/// completion (with the assembler's eager-dequantized state at that
+/// moment).
+fn walk(
+    w: &PnetWriter,
+    trace: &BandwidthTrace,
+    mut on_event: impl FnMut(usize, usize, f64, &Assembler),
+) -> Result<StreamSchedule> {
+    let m = w.manifest();
+    let idx = m.stage_index();
+    let mut link = TraceLink::new(trace.clone());
+    let clock = Clock::manual();
+    let t0 = clock.now();
+    let preamble_done = link.send(idx.preamble_len() as u64);
+    clock.advance(Duration::from_secs_f64(preamble_done));
+    let mut asm = Assembler::new(m.clone());
+    asm.set_eager_dequant(true);
+    let mut events = Vec::new();
+    let mut stage_done = Vec::with_capacity(idx.stages());
+    for s in 0..idx.stages() {
+        for t in 0..m.tensors.len() {
+            let frame = (FRAG_HEADER_LEN + w.fragment(s, t).len()) as u64;
+            let before = link.now();
+            let at = link.send(frame);
+            clock.advance(Duration::from_secs_f64(at - before));
+            asm.absorb(s, t, w.fragment(s, t))?;
+            for (l, st) in asm.drain_layer_events() {
+                events.push(LayerEvent {
+                    layer: l,
+                    stage: st,
+                    t: at,
+                });
+                on_event(l, st, at, &asm);
+            }
+        }
+        stage_done.push(link.now());
+    }
+    Ok(StreamSchedule {
+        preamble_done,
+        events,
+        stage_done,
+        total_done: link.now(),
+        clock_elapsed: (clock.now() - t0).as_secs_f64(),
+    })
+}
+
+/// The arrival schedule alone (no execution) — event-invariant tests.
+pub fn schedule_events(w: &PnetWriter, trace: &BandwidthTrace) -> Result<StreamSchedule> {
+    walk(w, trace, |_, _, _, _| {})
+}
+
+/// A pipelined run's outcome, with the latency numbers the streaming
+/// design is judged by.
+#[derive(Debug, Clone)]
+pub struct StreamRun {
+    pub schedule: StreamSchedule,
+    /// streaming forward-pass outputs (`n * classes`)
+    pub outputs: Vec<f32>,
+    pub stats: StreamStats,
+    /// flat weights composed from exactly the segments the executor
+    /// dispatched (each layer at `min_stage`): batch execution over this
+    /// vector must reproduce `outputs` bit for bit
+    pub composite: Vec<f32>,
+    /// when pipelined inference *began*: publish time of layer 0's
+    /// dispatched stage
+    pub ttfi_pipelined: f64,
+    /// stage-granular baseline: inference cannot start before stage
+    /// `min_stage` completes across all tensors
+    pub ttfi_stage: f64,
+    /// pure transmission of preamble + layer 0's stage-0 frames — the
+    /// physical lower bound on any layer-granular start
+    pub layer0_pure: f64,
+}
+
+/// Stream `w` over `trace`, publishing each layer's weights into a
+/// [`LayerGate`] as its stage-`min_stage` bits arrive, then run the
+/// pipelined executor against the gate.
+///
+/// Per layer, only stages `0..=min_stage` are published, so the
+/// executor's skip-to-latest wait deterministically dispatches stage
+/// `min_stage` with its exact virtual publish time — the dispatch
+/// record is a pure function of (container, trace, `min_stage`).
+pub fn run_pipelined(
+    w: &PnetWriter,
+    trace: &BandwidthTrace,
+    compiled: &dyn CompiledModel,
+    images: &[f32],
+    n: usize,
+    min_stage: usize,
+) -> Result<StreamRun> {
+    let m = w.manifest();
+    let layers = m.stage_index().layers();
+    ensure!(
+        layers > 0,
+        "run_pipelined needs a LayerMajor (layer-annotated) container"
+    );
+    ensure!(
+        min_stage < m.schedule.stages(),
+        "min_stage {min_stage} out of range"
+    );
+    let gate = LayerGate::new(layers);
+    let mut composite = vec![0f32; m.param_count()];
+    let schedule = walk(w, trace, |layer, stage, t, asm| {
+        if stage <= min_stage {
+            let range = asm.layer_weight_range(layer);
+            let seg = &asm.flat()[range.clone()];
+            if stage == min_stage {
+                composite[range.clone()].copy_from_slice(seg);
+            }
+            gate.publish_layer(layer, stage, t, range, seg);
+        }
+    })?;
+    // every needed publish happened during the walk; close so a missing
+    // layer errors instead of hanging
+    gate.close();
+    let (outputs, stats) = compiled.execute_streaming(images, n, &gate, min_stage)?;
+    let ttfi_pipelined = stats.t_first_dispatch();
+    let ttfi_stage = schedule.stage_done[min_stage];
+    let layer0_pure = trace.transfer_time_from(0.0, w.first_layer_wire_bytes()? as u64);
+    Ok(StreamRun {
+        schedule,
+        outputs,
+        stats,
+        composite,
+        ttfi_pipelined,
+        ttfi_stage,
+        layer0_pure,
+    })
+}
+
+/// A 3-layer executable dense fixture ("stream3": 256 → 128 → 32 → 10
+/// with biases, ~37 k params ≈ 75 KB wire) — big enough that per-layer
+/// arrival times differ visibly under sub-MB/s traces.
+pub fn stream_fixture(tag: &str) -> Result<Registry> {
+    let root = super::fixture::fixture_root(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    let models_dir = root.join("models");
+    std::fs::create_dir_all(&models_dir)?;
+    super::fixture::write_model(
+        &models_dir,
+        "stream3",
+        &[
+            ("fc1.w", &[256, 128][..]),
+            ("fc1.b", &[128][..]),
+            ("fc2.w", &[128, 32][..]),
+            ("fc2.b", &[32][..]),
+            ("head.w", &[32, 10][..]),
+            ("head.b", &[10][..]),
+        ],
+        0x5EED_0006,
+    )?;
+    super::fixture::write_index(&models_dir, &["stream3"])?;
+    Registry::open(&root)
+}
+
+/// Encode `m` into a layer-annotated writer (the server's encode path:
+/// [`ModelManifest::pnet_manifest`] annotates every container).
+pub fn annotated_writer(m: &ModelManifest) -> Result<(PnetWriter, Vec<f32>)> {
+    let flat = m.load_weights()?;
+    let pm = m.pnet_manifest(&flat, Schedule::paper_default())?;
+    Ok((PnetWriter::encode(pm, &flat)?, flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ReferenceBackend;
+
+    #[test]
+    fn schedule_walk_matches_transfer_math() {
+        let reg = stream_fixture("stream-harness-walk").unwrap();
+        let m = reg.get("stream3").unwrap();
+        let (w, _) = annotated_writer(m).unwrap();
+        let trace = BandwidthTrace::parse("1:0.25,1:1.0").unwrap();
+        let sched = schedule_events(&w, &trace).unwrap();
+        // total time is exactly the whole-container transfer time
+        let total = trace.transfer_time_from(0.0, w.to_bytes().len() as u64);
+        assert!((sched.total_done - total).abs() < 1e-9);
+        assert!((sched.clock_elapsed - sched.total_done).abs() < 1e-6);
+        // first event is layer 0 stage 0, at exactly the byte bound
+        let first = sched.events.first().unwrap();
+        assert_eq!((first.layer, first.stage), (0, 0));
+        let l0 = trace.transfer_time_from(0.0, w.first_layer_wire_bytes().unwrap() as u64);
+        assert!((first.t - l0).abs() < 1e-9);
+        // 3 layers × 8 stages, arrival times monotone
+        assert_eq!(sched.events.len(), 3 * 8);
+        for pair in sched.events.windows(2) {
+            assert!(pair[0].t <= pair[1].t);
+        }
+        assert_eq!(sched.stage_done.len(), 8);
+    }
+
+    #[test]
+    fn pipelined_run_is_deterministic_and_correct() {
+        let reg = stream_fixture("stream-harness-run").unwrap();
+        let m = reg.get("stream3").unwrap();
+        let (w, _) = annotated_writer(m).unwrap();
+        let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+        let trace = BandwidthTrace::parse("2:0.5").unwrap();
+        let n = 2;
+        let images: Vec<f32> = (0..n * m.input_numel()).map(|i| (i % 9) as f32 * 0.1).collect();
+        let r1 = run_pipelined(&w, &trace, compiled.as_ref(), &images, n, 0).unwrap();
+        let r2 = run_pipelined(&w, &trace, compiled.as_ref(), &images, n, 0).unwrap();
+        assert_eq!(r1.outputs, r2.outputs);
+        assert_eq!(r1.stats.dispatches, r2.stats.dispatches);
+        // the streamed pass equals batch execution over the dispatched
+        // segments — bit for bit
+        let batch = compiled.execute(&images, n, &r1.composite).unwrap();
+        assert_eq!(r1.outputs, batch);
+        // pipelined TTFI is the layer-0 byte bound, ahead of the stage
+        // baseline
+        assert!((r1.ttfi_pipelined - r1.layer0_pure).abs() < 1e-9);
+        assert!(r1.ttfi_pipelined < r1.ttfi_stage);
+    }
+
+    #[test]
+    fn min_stage_caps_the_published_schedule() {
+        let reg = stream_fixture("stream-harness-min").unwrap();
+        let m = reg.get("stream3").unwrap();
+        let (w, _) = annotated_writer(m).unwrap();
+        let compiled = ReferenceBackend::with_threads(1).compile(m, &[]).unwrap();
+        let trace = BandwidthTrace::constant(64.0 * 1024.0);
+        let images: Vec<f32> = vec![0.2; m.input_numel()];
+        let r = run_pipelined(&w, &trace, compiled.as_ref(), &images, 1, 2).unwrap();
+        for d in &r.stats.dispatches {
+            assert_eq!(d.stage, 2);
+        }
+        // higher fidelity floor ⇒ later start, still before its stage
+        // baseline
+        let r0 = run_pipelined(&w, &trace, compiled.as_ref(), &images, 1, 0).unwrap();
+        assert!(r.ttfi_pipelined > r0.ttfi_pipelined);
+        assert!(r.ttfi_pipelined < r.ttfi_stage);
+        assert!(run_pipelined(&w, &trace, compiled.as_ref(), &images, 1, 99).is_err());
+    }
+}

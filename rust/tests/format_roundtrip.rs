@@ -88,6 +88,100 @@ fn prop_container_roundtrip_random_models() {
 }
 
 #[test]
+fn prop_layer_major_is_byte_and_bit_identical_to_stage_major() {
+    // Ordering-mode property: annotating a container `LayerMajor`
+    // changes ONLY the manifest JSON — total payload bytes are equal,
+    // the post-preamble body is byte-identical, and the reconstructed
+    // tensors are bit-identical at EVERY cumulative bit-width.
+    check(
+        "LayerMajor vs stage-major: same bytes, same bits",
+        30,
+        |g: &mut Gen| {
+            // random dense chain with optional rank-1 biases, so the
+            // inferred layer grouping is non-trivial
+            let n_layers = g.usize(1, 4);
+            let mut tensors = Vec::new();
+            let mut flat = Vec::new();
+            for i in 0..n_layers {
+                let rows = g.usize(1, 30);
+                let cols = g.usize(1, 30);
+                tensors.push((format!("l{i}.w"), vec![rows, cols]));
+                for _ in 0..rows * cols {
+                    flat.push(g.f32(-2.0, 2.0));
+                }
+                if g.bool() {
+                    tensors.push((format!("l{i}.b"), vec![cols]));
+                    for _ in 0..cols {
+                        flat.push(g.f32(-2.0, 2.0));
+                    }
+                }
+            }
+            let scheds: Vec<Vec<u32>> = vec![vec![2; 8], vec![4; 4], vec![1, 1, 2, 4, 8]];
+            let sched = Schedule::new(g.pick(&scheds).clone(), 16).unwrap();
+            (tensors, flat, sched)
+        },
+        |(tensors, flat, sched)| {
+            let plain_m = manifest_from_weights("m", "classify", &tensors, &flat, sched)
+                .map_err(|e| e.to_string())?;
+            let ann_m = plain_m.clone().with_inferred_layers();
+            let plain = PnetWriter::encode(plain_m.clone(), &flat).map_err(|e| e.to_string())?;
+            let ann = PnetWriter::encode(ann_m.clone(), &flat).map_err(|e| e.to_string())?;
+            // identical total payload; wire grows only by the manifest key
+            if plain_m.payload_bytes() != ann_m.payload_bytes() {
+                return Err("payload bytes differ across ordering modes".into());
+            }
+            let pb = plain.to_bytes();
+            let ab = ann.to_bytes();
+            let growth = ann.preamble().len() - plain.preamble().len();
+            if ab.len() != pb.len() + growth {
+                return Err(format!(
+                    "wire {} vs {} + manifest growth {growth}",
+                    ab.len(),
+                    pb.len()
+                ));
+            }
+            // body is byte-identical
+            let (pi, ai) = (plain_m.stage_index(), ann_m.stage_index());
+            if pb[pi.preamble_len()..] != ab[ai.preamble_len()..] {
+                return Err("ordering mode changed body bytes".into());
+            }
+            // the annotation survives a reader roundtrip …
+            let reader = PnetReader::from_bytes(&ab).map_err(|e| e.to_string())?;
+            if reader.manifest.layers != ann_m.layers {
+                return Err("layer annotation lost in decode".into());
+            }
+            // … and reconstruction is bit-identical at every cum_bits
+            let mut asm_p = Assembler::new(plain_m.clone());
+            let mut asm_a = Assembler::new(reader.manifest.clone());
+            for s in 0..plain_m.schedule.stages() {
+                for t in 0..plain_m.tensors.len() {
+                    asm_p.absorb(s, t, plain.fragment(s, t)).map_err(|e| e.to_string())?;
+                    asm_a
+                        .absorb(s, t, &reader.fragments[s][t])
+                        .map_err(|e| e.to_string())?;
+                }
+                let bits_p: Vec<u32> = asm_p
+                    .reconstruct()
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                let bits_a: Vec<u32> = asm_a
+                    .reconstruct()
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                if bits_p != bits_a {
+                    return Err(format!("tensors diverge at stage {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn real_models_roundtrip_through_container() {
     if !prognet::artifacts_available() {
         eprintln!("skipping: artifacts not built");

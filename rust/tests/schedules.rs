@@ -4,13 +4,14 @@
 //! condvar wait, and atomic op inside the crate becomes a scheduling
 //! point for `analysis::sched` (design: `rust/docs/ANALYSIS.md`).
 //!
-//! Four real protocols are explored to exhaustion of the bounded
+//! Five real protocols are explored to exhaustion of the bounded
 //! interleaving space (or ≥1000 distinct schedules):
 //!
 //! 1. `ApproxModel` publish-vs-snapshot (mid-download hot swap)
 //! 2. `BufferPool` take/put inventory
 //! 3. `SingleFlight` encode stampede + leader-error retry
 //! 4. reactor-style shutdown wakeup (sticky wake bit under the lock)
+//! 5. `LayerGate` publish/wait/close handshake (streaming executor)
 //!
 //! Two deliberately broken protocols verify the checker's teeth: a
 //! lost atomic update and a lost condvar wakeup must both be caught,
@@ -264,6 +265,49 @@ fn reactor_shutdown_wakeup_is_never_lost() {
 }
 
 // ---------------------------------------------------------------------------
+// Protocol 5: LayerGate publish / wait / close handshake
+// ---------------------------------------------------------------------------
+
+/// The streaming-executor rendezvous in miniature: a downloader
+/// publishes two layers and closes; the executor blocks per layer, must
+/// see exactly the published segments, and an unsatisfiable wait must
+/// observe the close instead of sleeping forever — no matter how the
+/// two threads interleave.
+fn layer_gate_body() {
+    let gate = Arc::new(prognet::runtime::LayerGate::new(2));
+    let publisher = {
+        let gate = gate.clone();
+        sched::spawn(move || {
+            gate.publish_layer(0, 0, 0.1, 0..1, &[1.0]);
+            gate.publish_layer(1, 0, 0.2, 1..2, &[2.0]);
+            gate.close();
+        })
+    };
+    let executor = {
+        let gate = gate.clone();
+        sched::spawn(move || {
+            let a = gate.wait(0, 0).expect("layer 0 published before close");
+            assert_eq!((a.stage, a.range.clone()), (0, 0..1), "torn publish");
+            assert_eq!(a.seg, vec![1.0]);
+            let b = gate.wait(1, 0).expect("layer 1 published before close");
+            assert_eq!(b.seg, vec![2.0]);
+            // stage 5 never arrives: the close must release this wait
+            assert!(gate.wait(0, 5).is_none(), "unsatisfiable wait not released");
+        })
+    };
+    publisher.join().unwrap();
+    executor.join().unwrap();
+    assert!(gate.is_closed());
+}
+
+#[test]
+fn layer_gate_handshake_is_race_free() {
+    let _g = guard();
+    let report = sched::explore(Config::default(), layer_gate_body);
+    assert_explored(&report);
+}
+
+// ---------------------------------------------------------------------------
 // Injected races: the checker must catch these and render a replay
 // ---------------------------------------------------------------------------
 
@@ -372,13 +416,21 @@ fn pinned_replays_stay_clean() {
         ("buffer-pool", Box::new(buffer_pool_body)),
         ("single-flight", Box::new(single_flight_body)),
         ("shutdown-wakeup", Box::new(shutdown_wakeup_body)),
+        ("layer-gate", Box::new(layer_gate_body)),
     ];
-    const PINNED_SCHEDULES: [&[u32]; 4] = [&[0, 1, 0], &[1, 0, 1], &[0, 0, 1, 1], &[1, 1, 0]];
-    const PINNED_SEEDS: [u64; 4] = [
+    const PINNED_SCHEDULES: [&[u32]; 5] = [
+        &[0, 1, 0],
+        &[1, 0, 1],
+        &[0, 0, 1, 1],
+        &[1, 1, 0],
+        &[0, 1, 1, 0],
+    ];
+    const PINNED_SEEDS: [u64; 5] = [
         0x0001_F0C5_0000_0001,
         0x0001_F0C5_0000_0002,
         0x0001_F0C5_0000_0003,
         0x0001_F0C5_0000_0004,
+        0x0001_F0C5_0000_0005,
     ];
     for (i, (name, body)) in bodies.into_iter().enumerate() {
         let body = Arc::new(body);

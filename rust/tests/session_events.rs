@@ -42,8 +42,25 @@ fn assert_invariants(events: &[SessionEvent], expect_model: &str) -> Vec<usize> 
     let mut ready = Vec::new();
     let mut finished = 0usize;
     let mut last_version = 0u64;
+    let mut layer_next: std::collections::BTreeMap<usize, usize> = Default::default();
     for (i, ev) in events.iter().enumerate() {
         match ev {
+            SessionEvent::LayerReady { model, layer, stage, .. } => {
+                assert_eq!(model, expect_model);
+                // a layer completion always precedes its stage's close
+                assert!(
+                    !stages.contains(stage),
+                    "LayerReady({layer}, {stage}) after StageComplete({stage})"
+                );
+                // per layer: contiguous from 0, so also strictly
+                // increasing and duplicate-free across resumes
+                let next = layer_next.entry(*layer).or_insert(0);
+                assert_eq!(
+                    *stage, *next,
+                    "layer {layer} emitted stage {stage}, expected {next}"
+                );
+                *next += 1;
+            }
             SessionEvent::StageComplete { model, stage, .. } => {
                 assert_eq!(model, expect_model);
                 if let Some(&prev) = stages.last() {
@@ -90,7 +107,22 @@ fn assert_invariants(events: &[SessionEvent], expect_model: &str) -> Vec<usize> 
     let mut dedup = stages.clone();
     dedup.dedup();
     assert_eq!(dedup, stages);
+    // every announced layer kept pace with the completed stages
+    for (layer, n) in &layer_next {
+        assert_eq!(*n, stages.len(), "layer {layer} missed a stage");
+    }
     stages
+}
+
+/// The `(layer, stage)` sequence of a stream's `LayerReady` events.
+fn layer_seq(events: &[SessionEvent]) -> Vec<(usize, usize)> {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            SessionEvent::LayerReady { layer, stage, .. } => Some((*layer, *stage)),
+            _ => None,
+        })
+        .collect()
 }
 
 #[test]
@@ -142,6 +174,20 @@ fn cache_resume_emits_each_stage_exactly_once() {
         .unwrap();
     let total = full.len();
     let idx = PnetReader::from_bytes(&full).unwrap().manifest.stage_index();
+    // an uncut cold run fixes the canonical LayerReady sequence; every
+    // resumed run below must replay it identically (cache replay + wire
+    // suffix together re-announce each (layer, stage) exactly once)
+    let baseline_layers = {
+        let handle = ProgressiveSession::builder("dense2b")
+            .addr(server.addr())
+            .start()
+            .unwrap();
+        let events = collect(&handle);
+        handle.finish().unwrap();
+        let seq = layer_seq(&events);
+        assert_eq!(seq.len(), idx.layers() * 8);
+        seq
+    };
     let case = std::sync::atomic::AtomicUsize::new(0);
     check(
         "cache resume is duplicate-free",
@@ -173,6 +219,12 @@ fn cache_resume_emits_each_stage_exactly_once() {
             let stages = assert_invariants(&events, "dense2b");
             if stages != (0..8).collect::<Vec<_>>() {
                 return Err(format!("stages {stages:?} for cut {cut}"));
+            }
+            let layers = layer_seq(&events);
+            if layers != baseline_layers {
+                return Err(format!(
+                    "resume replayed {layers:?}, cold run emitted {baseline_layers:?} (cut {cut})"
+                ));
             }
             let resumes: Vec<_> = events
                 .iter()
