@@ -1,29 +1,67 @@
-//! Fleet SLO bench: the load generator against a self-hosted reactor,
-//! emitting `BENCH_fleet.json` so later PRs can track fleet-scale
-//! serving (clients, throughput mix, accept→first-`ModelReady`
-//! p50/p99) across the trajectory.
+//! Fleet SLO bench: the load generator against a self-hosted serving
+//! tier, emitting `BENCH_fleet.json` so later PRs can track fleet-scale
+//! serving across the trajectory.
+//!
+//! Three phases, same client mix each time:
+//!   direct        — clients → a sharded origin reactor (the pre-cluster
+//!                   baseline, kept for trend continuity)
+//!   cluster_cold  — clients → router → edge prefix caches → origin,
+//!                   edges empty (the first fetch pays the fill)
+//!   cluster_warm  — same cluster again, edges warm: stage-prefix bytes
+//!                   are served from the edges, the origin only streams
+//!                   tails
+//!
+//! The JSON carries all three SLO reports (cluster ones with per-tier
+//! counter rows), a `tiered_ttfi` summary (accept→first-ModelReady p50
+//! per phase) and `warm_prefix_offload` — the warm-phase fraction of
+//! stage-prefix bytes served from edge caches, the PR's >= 50%
+//! acceptance number.
 //!
 //! Runs entirely on the synthetic executable fixture (no artifacts).
 //! Scale knobs (for CI smoke vs. local soak):
-//!   PROGNET_FLEET_CLIENTS  total virtual clients (default 200)
+//!   PROGNET_FLEET_CLIENTS  total virtual clients per phase (default 200)
 //!   PROGNET_FLEET_WORKERS  reactor shards (default 2)
-//!   PROGNET_BENCH_NO_ASSERT  skip the zero-protocol-error assert
+//!   PROGNET_BENCH_NO_ASSERT  skip the acceptance asserts
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use prognet::fleet::cluster::{Cluster, ClusterConfig};
 use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
+use prognet::fleet::slo::{SloReport, TierStats};
 use prognet::fleet::FleetConfig;
 use prognet::runtime::{Engine, ModelSession};
 use prognet::server::service::ServerConfig;
 use prognet::server::{Repository, Server};
 use prognet::testutil::fixture;
+use prognet::util::json;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name)
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn ttfi_p50(report: &SloReport) -> f64 {
+    report
+        .overall
+        .model_ready
+        .as_ref()
+        .map(|q| q.p50)
+        .unwrap_or(f64::NAN)
+}
+
+/// Warm-phase offload: of the stage-prefix bytes sourced during the warm
+/// run (edge-cache-served + origin fills), the cached fraction.
+fn delta_offload(before: &TierStats, after: &TierStats) -> Option<f64> {
+    let cache = after.cache_bytes - before.cache_bytes;
+    let fill = after.fill_bytes - before.fill_bytes;
+    if cache + fill == 0 {
+        None
+    } else {
+        Some(cache as f64 / (cache + fill) as f64)
+    }
 }
 
 fn main() -> prognet::Result<()> {
@@ -33,18 +71,6 @@ fn main() -> prognet::Result<()> {
     let reg = fixture::executable_models("bench-fleet")?;
     let manifest = reg.get("dense3")?.clone();
     let repo = Arc::new(Repository::new(reg));
-    let server = Server::start_fleet(
-        "127.0.0.1:0",
-        repo,
-        ServerConfig {
-            workers,
-            ..ServerConfig::default()
-        },
-        FleetConfig {
-            write_burst: 1024, // keep the small fixture bodies honestly paced
-            ..FleetConfig::default()
-        },
-    )?;
     let runtime = Arc::new(ModelSession::load(&Engine::reference(), &manifest)?);
 
     // the reference mix (70% @0.5 MB/s, 20% @0.1, 10% flaky-reconnect),
@@ -64,34 +90,117 @@ fn main() -> prognet::Result<()> {
         .map(|c| format!("{}×{}", c.clients, c.name))
         .collect();
     println!(
-        "fleet_slo: {} clients ({}) on {workers} shards",
+        "fleet_slo: {} clients ({}) per phase, {workers} shards",
         scenario.total_clients(),
         mix.join(", ")
     );
-    let report = run_fleet(server.addr(), &scenario, Some(runtime), &opts)?;
-    println!("{}", report.render());
-    println!("{}", server.stats().table().render());
 
-    std::fs::write("BENCH_fleet.json", report.to_json().to_string())?;
+    // ---- phase 1: direct to a single origin reactor -------------------
+    let server = Server::start_fleet(
+        "127.0.0.1:0",
+        repo.clone(),
+        ServerConfig {
+            workers,
+            ..ServerConfig::default()
+        },
+        FleetConfig {
+            write_burst: 1024, // keep the small fixture bodies honestly paced
+            ..FleetConfig::default()
+        },
+    )?;
+    println!("\n== phase: direct (clients -> origin) ==");
+    let direct = run_fleet(server.addr(), &scenario, Some(runtime.clone()), &opts)?;
+    println!("{}", direct.render());
+    println!("{}", server.stats().table().render());
+    drop(server);
+
+    // ---- phases 2+3: through the cluster tier -------------------------
+    let cluster = Cluster::start(
+        repo,
+        ClusterConfig {
+            origins: 1,
+            edges: 2,
+            workers_per_origin: workers,
+            prefix_stages: 2,
+            fleet: FleetConfig {
+                write_burst: 1024,
+                ..FleetConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )?;
+    println!("\n== phase: cluster_cold (clients -> router -> edges -> origin) ==");
+    let cold = run_fleet(cluster.addr(), &scenario, Some(runtime.clone()), &opts)?
+        .with_tiers(cluster.tiers());
+    println!("{}", cold.render());
+    let tiers_after_cold = cluster.tiers();
+
+    println!("\n== phase: cluster_warm (edges pre-filled) ==");
+    let warm =
+        run_fleet(cluster.addr(), &scenario, Some(runtime), &opts)?.with_tiers(cluster.tiers());
+    println!("{}", warm.render());
+
+    let edge_cold = tiers_after_cold.iter().find(|t| t.name == "edge").unwrap();
+    let edge_warm = warm.tiers.iter().find(|t| t.name == "edge").unwrap();
+    let warm_offload = delta_offload(edge_cold, edge_warm);
+
+    let ttfi = json::obj(vec![
+        ("direct_s", json::num(ttfi_p50(&direct))),
+        ("cluster_cold_s", json::num(ttfi_p50(&cold))),
+        ("cluster_warm_s", json::num(ttfi_p50(&warm))),
+    ]);
+    println!(
+        "tiered TTFI p50: direct {:.4}s | cluster cold {:.4}s | cluster warm {:.4}s",
+        ttfi_p50(&direct),
+        ttfi_p50(&cold),
+        ttfi_p50(&warm)
+    );
+    if let Some(v) = warm_offload {
+        println!("warm stage-prefix offload: {:.1}% served from edges", v * 100.0);
+    }
+
+    let mut fields = vec![
+        ("direct", direct.to_json()),
+        ("cluster_cold", cold.to_json()),
+        ("cluster_warm", warm.to_json()),
+        ("tiered_ttfi", ttfi),
+    ];
+    if let Some(v) = warm_offload {
+        fields.push(("warm_prefix_offload", json::num(v)));
+    }
+    std::fs::write("BENCH_fleet.json", json::obj(fields).to_string())?;
     println!("wrote BENCH_fleet.json");
 
     if std::env::var_os("PROGNET_BENCH_NO_ASSERT").is_none() {
-        assert_eq!(report.clients(), scenario.total_clients());
-        assert_eq!(
-            report.protocol_errors(),
-            0,
-            "fleet run hit protocol errors: {:?}",
-            report.sample_errors
-        );
-        assert_eq!(
-            report.overall.finished,
-            scenario.total_clients(),
-            "uncapped server must serve everyone"
+        let phases = [
+            ("direct", &direct),
+            ("cluster_cold", &cold),
+            ("cluster_warm", &warm),
+        ];
+        for (phase, report) in phases {
+            assert_eq!(report.clients(), scenario.total_clients(), "{phase}");
+            assert_eq!(
+                report.protocol_errors(),
+                0,
+                "{phase} hit protocol errors: {:?}",
+                report.sample_errors
+            );
+            assert_eq!(
+                report.overall.finished,
+                scenario.total_clients(),
+                "{phase}: uncapped serving tier must serve everyone"
+            );
+        }
+        let v = warm_offload.expect("warm phase served stage-prefix bytes");
+        assert!(
+            v >= 0.5,
+            "warm edges must offload >= 50% of stage-prefix bytes, got {v:.3}"
         );
     }
     println!(
         "§Perf target: accept→first-ModelReady p99 stays flat as the client count\n\
-         grows; track accept_to_model_ready in BENCH_fleet.json across PRs."
+         grows, and cluster_warm TTFI tracks direct while the origin streams only\n\
+         tails; track tiered_ttfi + warm_prefix_offload in BENCH_fleet.json across PRs."
     );
     Ok(())
 }

@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::format::PnetReader;
+use crate::format::{validated_prefix, PnetReader};
 use crate::server::proto::FetchRequest;
 use crate::server::service::open_fetch;
 
@@ -92,6 +92,12 @@ impl ModelCache {
 
     /// Fetch a container, using cache + resume. Returns the complete
     /// container bytes and how they were obtained.
+    ///
+    /// A damaged partial — truncated mid-frame, stale CRC, or outright
+    /// garbage — never surfaces as an error: it is first truncated to its
+    /// last CRC-valid stage boundary ([`validated_prefix`]), and if the
+    /// resumed download still fails to validate the fetch restarts once
+    /// from byte zero.
     pub fn fetch(
         &self,
         addr: &std::net::SocketAddr,
@@ -100,14 +106,44 @@ impl ModelCache {
         if let Some(bytes) = self.load_complete(req) {
             return Ok((bytes, FetchOutcome::CacheHit));
         }
-        let final_path = self.key_path(req);
-
         let part_path = self.part_path(req);
         let mut existing = if part_path.exists() {
             std::fs::read(&part_path)?
         } else {
             Vec::new()
         };
+        if !existing.is_empty() {
+            let (valid, stages) = validated_prefix(&existing);
+            if valid < existing.len() {
+                crate::log_warn!(
+                    "partial {} invalid past byte {valid} ({stages} complete stages); truncating",
+                    part_path.display()
+                );
+                existing.truncate(valid);
+            }
+        }
+        let resumed = !existing.is_empty();
+        match self.attempt(addr, req, existing) {
+            Ok(ok) => Ok(ok),
+            Err(e) if resumed => {
+                crate::log_warn!("resume failed ({e:#}); retrying with a clean fetch");
+                let _ = std::fs::remove_file(&part_path);
+                self.attempt(addr, req, Vec::new())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// One download attempt starting from `existing` (possibly empty)
+    /// already-validated bytes.
+    fn attempt(
+        &self,
+        addr: &std::net::SocketAddr,
+        req: &FetchRequest,
+        mut existing: Vec<u8>,
+    ) -> Result<(Vec<u8>, FetchOutcome)> {
+        let final_path = self.key_path(req);
+        let part_path = self.part_path(req);
 
         let attempt_req = req.clone().with_offset(existing.len() as u64);
         let (mut stream, mut resp) = match open_fetch(addr, &attempt_req) {
@@ -239,16 +275,77 @@ mod tests {
         let full = repo
             .container("mlp", &crate::quant::Schedule::paper_default())
             .unwrap();
-        // plant a half-downloaded partial
+        // plant a half-downloaded partial; resume restarts from the last
+        // complete stage boundary within it
         let half = full.len() / 2;
+        let (boundary, stages) = crate::format::validated_prefix(&full[..half]);
+        assert!(boundary > 0 && stages > 0, "fixture too small for resume");
         cache.store_partial(&req, &full[..half]).unwrap();
         let (bytes, outcome) = cache.fetch(&server.addr(), &req).unwrap();
         match outcome {
             FetchOutcome::Resumed { fetched } => {
-                assert_eq!(fetched as usize, full.len() - half);
+                assert_eq!(fetched as usize, full.len() - boundary);
             }
             o => panic!("expected resume, got {o:?}"),
         }
+        assert_eq!(&bytes[..], &full[..]);
+    }
+
+    #[test]
+    fn truncated_mid_frame_partial_falls_back_cleanly() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        let full = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        // cut inside the very first fragment: no complete stage survives,
+        // so the fetch must restart from byte zero rather than error
+        let (preamble_only, stages) = crate::format::validated_prefix(&full[..full.len() / 8]);
+        cache
+            .store_partial(&req, &full[..full.len() / 8])
+            .unwrap();
+        let (bytes, outcome) = cache.fetch(&server.addr(), &req).unwrap();
+        if stages == 0 {
+            assert!(
+                matches!(outcome, FetchOutcome::Downloaded { .. })
+                    || preamble_only > 0 && matches!(outcome, FetchOutcome::Resumed { .. }),
+                "got {outcome:?}"
+            );
+        }
+        assert_eq!(&bytes[..], &full[..]);
+    }
+
+    #[test]
+    fn stale_crc_partial_falls_back_cleanly() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        let full = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        // corrupt a byte in the middle of a planted half-container: the
+        // CRC mismatch must truncate the resume point, never surface as
+        // "downloaded container invalid"
+        let half = full.len() / 2;
+        let mut bad = full[..half].to_vec();
+        bad[half / 2] ^= 0xFF;
+        cache.store_partial(&req, &bad).unwrap();
+        let (bytes, _outcome) = cache.fetch(&server.addr(), &req).unwrap();
+        assert_eq!(&bytes[..], &full[..]);
+        // and the promoted entry is clean
+        assert_eq!(&cache.load_complete(&req).unwrap()[..], &full[..]);
+    }
+
+    #[test]
+    fn garbage_partial_falls_back_cleanly() {
+        let Some((server, repo, cache)) = setup() else { return };
+        let req = FetchRequest::new("mlp");
+        let full = repo
+            .container("mlp", &crate::quant::Schedule::paper_default())
+            .unwrap();
+        // unparseable preamble: sanitizer drops the whole partial
+        cache.store_partial(&req, &[0xAB; 512]).unwrap();
+        let (bytes, outcome) = cache.fetch(&server.addr(), &req).unwrap();
+        assert!(matches!(outcome, FetchOutcome::Downloaded { .. }));
         assert_eq!(&bytes[..], &full[..]);
     }
 

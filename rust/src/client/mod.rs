@@ -14,28 +14,20 @@
 //! ("w/o concurrent": reconstruction + inference block the download) and
 //! **concurrent** (§III-C: a separate inference thread overlaps with the
 //! ongoing transfer — the paper's key systems trick that makes
-//! progressive inference free). The pre-session blocking façades,
-//! [`progressive::ProgressiveClient`] and [`multiplex::MultiplexClient`],
-//! survive as thin deprecated wrappers over the session driver.
+//! progressive inference free). Single-model blocking fetches are
+//! `builder(model) … .start()?.run()?`; interleaved multi-model delivery
+//! is `multiplex() … .add_model(req, priority) … .start()?.run()?`.
 
 #![forbid(unsafe_code)]
 
 pub mod assembler;
 pub mod cache;
 pub mod downloader;
-pub mod multiplex;
-pub mod progressive;
 pub mod session;
 
 pub use assembler::Assembler;
 pub use cache::{FetchOutcome, ModelCache};
 pub use downloader::Downloader;
-#[allow(deprecated)]
-pub use multiplex::MultiplexClient;
-pub use multiplex::{MultiplexModel, MultiplexOutcome};
-#[allow(deprecated)]
-pub use progressive::ProgressiveClient;
-pub use progressive::ProgressiveOptions;
 pub use session::{
     ExecMode, InferencePolicy, ProgressiveSession, ResumeSource, SessionBuilder, SessionEvent,
     SessionOutcome, SessionReport, SessionSummary, StageResult,

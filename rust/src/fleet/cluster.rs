@@ -1,0 +1,262 @@
+//! `fleet::cluster` — the composed multi-node serving tier:
+//! N origin reactors, M edge prefix caches, one router.
+//!
+//! ```text
+//!                      ┌── edge 0 ──┐
+//! clients ── router ───┤            ├── origin 0..N  (sharded reactors,
+//!   (consistent hash)  └── edge 1 ──┘   admission control, pacing)
+//!                        stage-prefix
+//!                        caches [0,k)
+//! ```
+//!
+//! Everything runs in-process behind real sockets speaking the v2 wire
+//! protocol, so the tree exercises exactly what separate processes
+//! would — and the load generator ([`super::loadgen`]) drives it
+//! unchanged by pointing clients at [`Cluster::addr`]. Per-tier counters
+//! are exported as [`crate::fleet::slo::TierStats`] rows for
+//! `BENCH_fleet.json` (edge hit rates, origin byte offload, drains).
+//!
+//! Shutdown order is front-to-back (router, edges, origins) so no tier
+//! ever dials a peer that is already gone.
+
+#![forbid(unsafe_code)]
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::quant::Schedule;
+use crate::server::repository::Repository;
+use crate::server::service::{Server, ServerConfig};
+use crate::util::sync::Arc;
+
+use super::edge::{Edge, EdgeConfig};
+use super::router::{Router, RouterConfig};
+use super::slo::TierStats;
+use super::{FleetConfig, ServerStats};
+
+/// Cluster topology + per-tier tuning.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub origins: usize,
+    pub edges: usize,
+    /// reactor shard threads per origin
+    pub workers_per_origin: usize,
+    /// stages `[0, k)` cached on every edge
+    pub prefix_stages: u32,
+    /// shaping for edge→origin fetches (None = unshaped)
+    pub origin_speed_mbps: Option<f64>,
+    pub default_schedule: Schedule,
+    /// admission/timeouts for the origin reactors
+    pub fleet: FleetConfig,
+    pub health_interval: Duration,
+    pub io_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            origins: 1,
+            edges: 2,
+            workers_per_origin: 2,
+            prefix_stages: 2,
+            origin_speed_mbps: None,
+            default_schedule: Schedule::paper_default(),
+            fleet: FleetConfig::default(),
+            health_interval: Duration::from_millis(250),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// A running cluster (shuts down front-to-back on drop).
+pub struct Cluster {
+    router: Router,
+    edges: Vec<Edge>,
+    origins: Vec<Server>,
+}
+
+impl Cluster {
+    /// Boot origins, edges and the router on ephemeral loopback ports.
+    /// All origins share `repo` (one in-process model repository), which
+    /// mirrors N server processes mounted on the same artifact store.
+    pub fn start(repo: Arc<Repository>, cfg: ClusterConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.origins >= 1, "cluster needs at least one origin");
+        anyhow::ensure!(cfg.edges >= 1, "cluster needs at least one edge");
+        let mut origins = Vec::with_capacity(cfg.origins);
+        for _ in 0..cfg.origins {
+            origins.push(Server::start_fleet(
+                "127.0.0.1:0",
+                repo.clone(),
+                ServerConfig {
+                    default_speed_mbps: None,
+                    workers: cfg.workers_per_origin,
+                    default_schedule: cfg.default_schedule.clone(),
+                },
+                cfg.fleet.clone(),
+            )?);
+        }
+        let origin_addrs: Vec<_> = origins.iter().map(|o| o.addr()).collect();
+
+        let mut edges = Vec::with_capacity(cfg.edges);
+        for _ in 0..cfg.edges {
+            edges.push(Edge::start(
+                "127.0.0.1:0",
+                origin_addrs.clone(),
+                EdgeConfig {
+                    prefix_stages: cfg.prefix_stages,
+                    origin_speed_mbps: cfg.origin_speed_mbps,
+                    io_timeout: cfg.io_timeout,
+                },
+            )?);
+        }
+        let edge_addrs: Vec<_> = edges.iter().map(|e| e.addr()).collect();
+
+        let router = Router::start(
+            "127.0.0.1:0",
+            edge_addrs,
+            RouterConfig {
+                health_interval: cfg.health_interval,
+                io_timeout: cfg.io_timeout,
+                ..RouterConfig::default()
+            },
+        )?;
+        Ok(Self {
+            router,
+            edges,
+            origins,
+        })
+    }
+
+    /// Client-facing address (the router).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.router.addr()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn origin_stats(&self) -> Vec<Arc<ServerStats>> {
+        self.origins.iter().map(|o| o.stats_arc()).collect()
+    }
+
+    /// Begin draining edge `i` (rolling restart); see [`Router::drain`].
+    pub fn drain_edge(&self, i: usize) {
+        self.router.drain(i);
+    }
+
+    pub fn undrain_edge(&self, i: usize) {
+        self.router.undrain(i);
+    }
+
+    /// Per-tier counter snapshot for SLO reports: one row per tier, edges
+    /// and origins aggregated across their instances.
+    pub fn tiers(&self) -> Vec<TierStats> {
+        let edge_stats: Vec<&ServerStats> = self.edges.iter().map(|e| e.stats().as_ref()).collect();
+        let origin_stats: Vec<&ServerStats> = self.origins.iter().map(|o| o.stats()).collect();
+        vec![
+            TierStats::from_stats("router", &[self.router.stats().as_ref()]),
+            TierStats::from_stats("edge", &edge_stats),
+            TierStats::from_stats("origin", &origin_stats),
+        ]
+    }
+
+    pub fn shutdown(&mut self) {
+        self.router.shutdown();
+        for e in &mut self.edges {
+            e.shutdown();
+        }
+        for o in &mut self.origins {
+            o.shutdown();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    use crate::server::proto::FetchRequest;
+    use crate::server::service::open_fetch;
+    use crate::testutil::fixture;
+
+    #[test]
+    fn one_router_two_edges_one_origin_roundtrip() {
+        let repo = Arc::new(Repository::new(
+            fixture::executable_models("cluster-basic").unwrap(),
+        ));
+        let cluster = Cluster::start(repo.clone(), ClusterConfig::default()).unwrap();
+        let expect = repo
+            .container("dense3", &Schedule::paper_default())
+            .unwrap();
+        for _ in 0..3 {
+            let (mut s, resp) = open_fetch(&cluster.addr(), &FetchRequest::new("dense3")).unwrap();
+            assert_eq!(resp.total as usize, expect.len());
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            assert_eq!(&got[..], &expect[..]);
+        }
+        let tiers = cluster.tiers();
+        assert_eq!(tiers.len(), 3);
+        let edge = tiers.iter().find(|t| t.name == "edge").unwrap();
+        assert_eq!(edge.origin_fills, 1, "one single-flight fill");
+        assert!(edge.edge_hits >= 3, "every fetch hit the cached prefix");
+    }
+
+    #[test]
+    fn warm_cluster_offloads_stage0_traffic_from_the_origin() {
+        let repo = Arc::new(Repository::new(
+            fixture::executable_models("cluster-offload").unwrap(),
+        ));
+        let cluster = Cluster::start(repo, ClusterConfig::default()).unwrap();
+        let prefix_req = FetchRequest::new("dense3").with_stages(0, 2);
+        // warm pass, then measure
+        for _ in 0..2 {
+            let (mut s, _) = open_fetch(&cluster.addr(), &prefix_req).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+        }
+        for _ in 0..8 {
+            let (mut s, _) = open_fetch(&cluster.addr(), &prefix_req).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+        }
+        let edge = cluster
+            .tiers()
+            .into_iter()
+            .find(|t| t.name == "edge")
+            .unwrap();
+        let offload = edge.offload().expect("prefix traffic was served");
+        assert!(
+            offload >= 0.5,
+            "warm edge should offload >=50% of stage-prefix bytes, got {offload:.2}"
+        );
+    }
+
+    #[test]
+    fn shutdown_is_prompt_and_ordered() {
+        let repo = Arc::new(Repository::new(
+            fixture::executable_models("cluster-shutdown").unwrap(),
+        ));
+        let mut cluster = Cluster::start(repo, ClusterConfig::default()).unwrap();
+        let t0 = std::time::Instant::now();
+        cluster.shutdown();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(3),
+            "cluster shutdown took {:?}",
+            t0.elapsed()
+        );
+    }
+}

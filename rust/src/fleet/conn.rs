@@ -320,16 +320,14 @@ impl<S: Read + Write> Conn<S> {
             }
             let mut tmp = [0u8; 4096];
             let want = need.min(tmp.len());
-            // a shed peer that leaves before (or instead of) its request
-            // is a policy outcome, not a protocol error
-            let tolerated = self.served_any || self.shed_reply.is_some();
             match self.stream.read(&mut tmp[..want]) {
                 Ok(0) => {
-                    return Flow::End(if buf.is_empty() && tolerated {
-                        // normal end of a keep-alive session / shed peer
+                    // an EOF on a request boundary is always a clean
+                    // close: the end of a keep-alive session, a shed peer
+                    // leaving, or a router/load-balancer health probe
+                    // that connects and hangs up without a request
+                    return Flow::End(if buf.is_empty() {
                         Step::Done
-                    } else if buf.is_empty() {
-                        Step::Failed("connection closed before any request".into())
                     } else {
                         Step::Failed("connection closed mid-request".into())
                     });
@@ -341,10 +339,11 @@ impl<S: Read + Write> Conn<S> {
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Flow::Blocked,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => {
-                    // RST-style endings between requests are how real
-                    // clients leave keep-alive sessions; match the old
-                    // blocking server's is_disconnect leniency
-                    return Flow::End(if buf.is_empty() && tolerated && is_disconnect(&e) {
+                    // RST-style endings between requests (and probes that
+                    // reset instead of FIN) are how real clients leave;
+                    // match the old blocking server's is_disconnect
+                    // leniency whenever no request is in flight
+                    return Flow::End(if buf.is_empty() && is_disconnect(&e) {
                         Step::Done
                     } else {
                         Step::Failed(format!("read: {e}"))
@@ -565,6 +564,8 @@ mod tests {
         input: VecDeque<u8>,
         output: Vec<u8>,
         write_cap: usize,
+        /// drained input reads as EOF (peer closed) instead of WouldBlock
+        eof: bool,
     }
 
     impl MockStream {
@@ -573,6 +574,7 @@ mod tests {
                 input: VecDeque::new(),
                 output: Vec::new(),
                 write_cap: usize::MAX,
+                eof: false,
             }
         }
 
@@ -584,6 +586,9 @@ mod tests {
     impl Read for MockStream {
         fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
             if self.input.is_empty() {
+                if self.eof {
+                    return Ok(0);
+                }
                 return Err(std::io::ErrorKind::WouldBlock.into());
             }
             let n = buf.len().min(self.input.len());
@@ -628,6 +633,35 @@ mod tests {
         let n = u32::from_le_bytes([out[0], out[1], out[2], out[3]]) as usize;
         let j = Json::parse(std::str::from_utf8(&out[4..4 + n]).unwrap()).unwrap();
         (j, &out[4 + n..])
+    }
+
+    #[test]
+    fn probe_eof_before_any_request_is_a_clean_close() {
+        // a router health probe connects and hangs up without sending a
+        // request: that must be Step::Done, not an error (regression —
+        // it used to be "connection closed before any request")
+        let repo = repo("conn-probe");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream.eof = true;
+        let step = conn.on_ready(&repo, &test_cfg(), &stats);
+        assert_eq!(step, Step::Done);
+    }
+
+    #[test]
+    fn eof_mid_request_is_still_an_error() {
+        let repo = repo("conn-midreq");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        let mut bytes = FetchRequest::new("alpha").encode();
+        bytes.truncate(bytes.len() / 2);
+        conn.stream.push_input(&bytes);
+        conn.stream.eof = true;
+        let step = conn.on_ready(&repo, &test_cfg(), &stats);
+        assert!(
+            matches!(step, Step::Failed(ref m) if m.contains("mid-request")),
+            "{step:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,588 @@
+//! Edge node: a v2-protocol server that caches **stage prefixes** and
+//! relays the rest from an origin.
+//!
+//! The progressive container makes a uniquely cheap edge cache possible:
+//! because any byte prefix covering the first `k` stages is a usable
+//! approximate model, an edge that holds only stages `[0, k)` (a few
+//! percent of the container) can serve the latency-critical head of
+//! every fetch locally — TTFI traffic never leaves the edge — while the
+//! long tail streams from the origin over the same stage-range protocol
+//! the clients speak.
+//!
+//! Serving math per request (all offsets are absolute container bytes):
+//!
+//! ```text
+//! sel        = body_range(req.stages)         selected body
+//! serve_from = sel.start + req.offset         resume point
+//! cached     = serve_from .. min(prefix_len, sel.end)   from the cache
+//! tail       = cached.end .. sel.end                    relayed from origin
+//! ```
+//!
+//! The client sees one status frame and one contiguous body — it cannot
+//! tell an edge from an origin (property-tested for bit-identity in
+//! `tests/cluster_serving.rs`).
+//!
+//! Cache fills are **single-flight** ([`crate::util::flight`]): a cold
+//! stampede on one model performs exactly one origin fill. A fill is a
+//! two-step fetch on one keep-alive connection — stages `[0, 1)` first
+//! (never clamped by origin admission degrade, which guarantees at least
+//! one stage), learn the stage count from the manifest, then `[1, k)` —
+//! and the assembled prefix is re-validated frame-by-frame (CRC) before
+//! it is published. If an origin's `container` length ever disagrees
+//! with the cached entry (model re-encoded), the entry is invalidated
+//! and the request retried against a fresh fill.
+//!
+//! Concurrency model: blocking sockets, one thread per connection with a
+//! small stack. That is deliberately simpler than the origin's sharded
+//! reactor — an edge's fan-in is bounded by the router in front of it,
+//! and the relay path spends its life blocked on two sockets anyway.
+
+#![forbid(unsafe_code)]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::format::{validated_prefix, FrameParser, StageIndex};
+use crate::netsim::{LinkSpec, ThrottledWriter};
+use crate::server::proto::{self, FetchRequest, FetchResponse};
+use crate::server::service::{open_fetch, request_on};
+use crate::util::flight::SingleFlight;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
+
+use super::placement::{HashRing, DEFAULT_VNODES};
+use super::ServerStats;
+
+/// Cache key: model name + requested schedule widths (None = origin
+/// default). Mirrors the origin repository's encoding key, so an edge
+/// never serves a prefix encoded under a different schedule.
+type Key = (String, Option<Vec<u32>>);
+
+/// Edge configuration.
+#[derive(Debug, Clone)]
+pub struct EdgeConfig {
+    /// stages `[0, prefix_stages)` are cached; clamped per model to its
+    /// actual stage count
+    pub prefix_stages: u32,
+    /// shaping for origin-side fetches (None = unshaped); client-side
+    /// shaping always honours the client's own `speed_mbps`
+    pub origin_speed_mbps: Option<f64>,
+    /// per-socket read timeout so handler threads cannot outlive a hung
+    /// peer forever
+    pub io_timeout: Duration,
+}
+
+impl Default for EdgeConfig {
+    fn default() -> Self {
+        Self {
+            prefix_stages: 2,
+            origin_speed_mbps: None,
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One cached, validated stage prefix of a container.
+struct PrefixEntry {
+    /// container bytes `[0, prefix_len)`: preamble + stages `[0, k)`,
+    /// where k is `prefix_stages` clamped to the model's stage count
+    bytes: Vec<u8>,
+    index: StageIndex,
+    prefix_len: usize,
+    container_len: u64,
+}
+
+/// Running edge node (shuts down on drop).
+pub struct Edge {
+    addr: SocketAddr,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+struct Inner {
+    origins: Vec<SocketAddr>,
+    ring: HashRing,
+    cfg: EdgeConfig,
+    cache: SingleFlight<Key, Arc<PrefixEntry>>,
+    stats: Arc<ServerStats>,
+}
+
+impl Edge {
+    /// Bind `addr` (use `"127.0.0.1:0"` for ephemeral) and serve,
+    /// fetching misses from `origins` (selected per model via the same
+    /// consistent-hash placement the router uses).
+    pub fn start(addr: &str, origins: Vec<SocketAddr>, cfg: EdgeConfig) -> Result<Self> {
+        anyhow::ensure!(!origins.is_empty(), "edge needs at least one origin");
+        anyhow::ensure!(cfg.prefix_stages >= 1, "prefix_stages must be >= 1");
+        let listener = TcpListener::bind(addr).context("binding edge listener")?;
+        let local = listener.local_addr()?;
+        let stats = Arc::new(ServerStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let labels: Vec<String> = (0..origins.len()).map(|i| format!("origin-{i}")).collect();
+        let inner = Arc::new(Inner {
+            ring: HashRing::new(&labels, DEFAULT_VNODES),
+            origins,
+            cfg,
+            cache: SingleFlight::new(),
+            stats: stats.clone(),
+        });
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("prognet-edge-accept".into())
+                .spawn(move || accept_loop(listener, inner, stop))?
+        };
+        Ok(Self {
+            addr: local,
+            stats,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Edge {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        inner.stats.connections.fetch_add(1, Ordering::SeqCst);
+        inner.stats.active.fetch_add(1, Ordering::SeqCst);
+        let inner = inner.clone();
+        // small stacks: a handler is two sockets and a 16 KB relay buffer
+        let spawned = std::thread::Builder::new()
+            .name("prognet-edge-conn".into())
+            .stack_size(256 * 1024)
+            .spawn(move || {
+                let stats = inner.stats.clone();
+                if serve_conn(stream, &inner).is_err() {
+                    stats.errors.fetch_add(1, Ordering::SeqCst);
+                }
+                stats.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            inner.stats.errors.fetch_add(1, Ordering::SeqCst);
+            inner.stats.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Serve one client connection until it closes or a request declines
+/// keep-alive. A clean EOF before any request (health probe) is Ok.
+fn serve_conn(mut stream: TcpStream, inner: &Inner) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(inner.cfg.io_timeout))?;
+    loop {
+        let req = match proto::read_request(&mut stream) {
+            Ok(req) => req,
+            // EOF / reset between requests is how clients (and the
+            // router's health prober) hang up — not an error
+            Err(_) => return Ok(()),
+        };
+        inner.stats.requests.fetch_add(1, Ordering::SeqCst);
+        let keep_alive = req.keep_alive;
+        match serve_request(&mut stream, inner, &req) {
+            Ok(()) => {}
+            Err(e) => {
+                // best effort: the client may already be gone
+                let _ = proto::write_err(&mut stream, &format!("{e:#}"));
+                bail!("serving {}: {e:#}", req.model);
+            }
+        }
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn serve_request(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> Result<()> {
+    // one retry after invalidating a stale entry (origin re-encoded)
+    match serve_attempt(stream, inner, req) {
+        Err(e) if e.to_string().contains(STALE_MARKER) => {
+            inner.cache.invalidate(&cache_key(req));
+            serve_attempt(stream, inner, req)
+        }
+        other => other,
+    }
+}
+
+/// Error marker for a cached prefix that no longer matches the origin's
+/// container (checked against the tail fetch's `container` field).
+const STALE_MARKER: &str = "edge cache stale";
+
+fn cache_key(req: &FetchRequest) -> Key {
+    (
+        req.model.clone(),
+        req.schedule.as_ref().map(|s| s.widths().to_vec()),
+    )
+}
+
+fn serve_attempt(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> Result<()> {
+    let entry = inner
+        .cache
+        .get_or_compute(cache_key(req), || {
+            fill_prefix(inner, req).map_err(|e| format!("{e:#}"))
+        })
+        .map_err(|msg| anyhow::anyhow!(msg))?;
+
+    let sel: Range<usize> = entry.index.body_range(req.stages)?;
+    let total = sel.len() as u64;
+    if req.offset > total {
+        bail!("offset {} beyond selected body ({total} bytes)", req.offset);
+    }
+    let serve_from = sel.start + req.offset as usize;
+    let cached_upto = entry.prefix_len.min(sel.end).max(serve_from);
+    let cache_part = serve_from..cached_upto;
+    let tail = cached_upto..sel.end;
+
+    // open the origin tail *before* the status frame so a dead origin
+    // becomes a clean error frame, not a truncated body
+    let mut origin_tail = if tail.is_empty() {
+        None
+    } else {
+        let mut treq = req.clone().with_offset((tail.start - sel.start) as u64);
+        treq.speed_mbps = inner.cfg.origin_speed_mbps;
+        treq.keep_alive = false;
+        let origin = pick_origin(inner, &req.model)?;
+        let (tstream, tresp) = open_fetch(&origin, &treq).context("edge->origin tail")?;
+        if tresp.container_len != entry.container_len {
+            bail!(
+                "{STALE_MARKER}: origin container {} != cached {}",
+                tresp.container_len,
+                entry.container_len
+            );
+        }
+        if tresp.remaining != tail.len() as u64 {
+            bail!(
+                "origin tail advertises {} bytes, expected {}",
+                tresp.remaining,
+                tail.len()
+            );
+        }
+        Some(tstream)
+    };
+
+    proto::write_ok(
+        stream,
+        &FetchResponse {
+            total,
+            remaining: total - req.offset,
+            container_len: entry.container_len,
+            stages: req.stages,
+        },
+    )?;
+
+    // client-side shaping honours the client's requested link speed
+    let shaped = req
+        .speed_mbps
+        .filter(|mbps| mbps.is_finite() && *mbps > 0.0);
+    let mut out: Box<dyn Write + '_> = match shaped {
+        Some(mbps) => Box::new(ThrottledWriter::new(&mut *stream, LinkSpec::mbps(mbps))),
+        None => Box::new(&mut *stream),
+    };
+
+    if !cache_part.is_empty() {
+        out.write_all(&entry.bytes[cache_part.clone()])?;
+        inner
+            .stats
+            .cache_bytes
+            .fetch_add(cache_part.len() as u64, Ordering::SeqCst);
+        inner.stats.edge_hits.fetch_add(1, Ordering::SeqCst);
+    }
+    if let Some(tstream) = origin_tail.as_mut() {
+        tstream.set_read_timeout(Some(inner.cfg.io_timeout))?;
+        let mut left = tail.len();
+        let mut buf = [0u8; 16 * 1024];
+        while left > 0 {
+            let n = tstream.read(&mut buf[..left.min(buf.len())])?;
+            if n == 0 {
+                bail!("origin closed mid-tail with {left} bytes left");
+            }
+            out.write_all(&buf[..n])?;
+            left -= n;
+        }
+        inner
+            .stats
+            .relay_bytes
+            .fetch_add(tail.len() as u64, Ordering::SeqCst);
+        inner.stats.edge_misses.fetch_add(1, Ordering::SeqCst);
+    }
+    out.flush()?;
+    drop(out);
+    inner
+        .stats
+        .bytes_sent
+        .fetch_add((total - req.offset) as u64, Ordering::SeqCst);
+    Ok(())
+}
+
+fn pick_origin(inner: &Inner, model: &str) -> Result<SocketAddr> {
+    let i = inner
+        .ring
+        .place(model)
+        .ok_or_else(|| anyhow::anyhow!("no origin configured"))?;
+    Ok(inner.origins[i])
+}
+
+/// Fetch and validate stages `[0, k)` from the origin (single-flight
+/// leader path). Two requests on one keep-alive connection: `[0, 1)` to
+/// learn the manifest, then `[1, k)` for the rest of the prefix.
+fn fill_prefix(inner: &Inner, req: &FetchRequest) -> Result<Arc<PrefixEntry>> {
+    let origin = pick_origin(inner, &req.model)?;
+    let mut first = FetchRequest::new(&req.model).with_stages(0, 1).with_keep_alive(true);
+    first.schedule = req.schedule.clone();
+    first.speed_mbps = inner.cfg.origin_speed_mbps;
+    let (mut stream, resp) = open_fetch(&origin, &first).context("edge->origin fill")?;
+    if resp.stages != Some((0, 1)) {
+        bail!("origin rewrote fill range to {:?}", resp.stages);
+    }
+    stream.set_read_timeout(Some(inner.cfg.io_timeout))?;
+    let container_len = resp.container_len;
+    let mut bytes = read_exactly(&mut stream, resp.remaining as usize)?;
+
+    // the stage-0 body carries the preamble: parse it for the manifest
+    let mut probe = FrameParser::for_stage_prefix(1);
+    probe.feed(&bytes).context("parsing fill head")?;
+    let manifest = probe
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("fill head lacked a manifest"))?
+        .clone();
+    let total_stages = manifest.schedule.stages() as u32;
+    let k = inner.cfg.prefix_stages.min(total_stages);
+
+    if k > 1 {
+        let mut rest = FetchRequest::new(&req.model).with_stages(1, k);
+        rest.schedule = req.schedule.clone();
+        rest.speed_mbps = inner.cfg.origin_speed_mbps;
+        let rresp = request_on(&mut stream, &rest).context("edge->origin fill tail")?;
+        if rresp.stages != Some((1, k)) {
+            bail!("origin rewrote fill range to {:?}", rresp.stages);
+        }
+        if rresp.container_len != container_len {
+            bail!("origin container length changed mid-fill");
+        }
+        bytes.extend_from_slice(&read_exactly(&mut stream, rresp.remaining as usize)?);
+    }
+
+    // re-validate the assembled prefix end to end (frame CRCs included)
+    // before publishing it to every future request on this edge
+    let (valid_len, valid_stages) = validated_prefix(&bytes);
+    if valid_stages != k as usize || valid_len != bytes.len() {
+        bail!(
+            "fill validation failed: {}/{} bytes, {}/{} stages usable",
+            valid_len,
+            bytes.len(),
+            valid_stages,
+            k
+        );
+    }
+    let index = StageIndex::from_manifest(&manifest);
+    if index.total_len() as u64 != container_len {
+        bail!(
+            "manifest says {} container bytes, origin advertised {container_len}",
+            index.total_len()
+        );
+    }
+    let prefix_len = bytes.len();
+    inner.stats.origin_fills.fetch_add(1, Ordering::SeqCst);
+    inner
+        .stats
+        .fill_bytes
+        .fetch_add(prefix_len as u64, Ordering::SeqCst);
+    crate::log_info!(
+        "edge filled {} [0, {k}): {prefix_len} of {container_len} bytes",
+        req.model
+    );
+    Ok(Arc::new(PrefixEntry {
+        bytes,
+        index,
+        prefix_len,
+        container_len,
+    }))
+}
+
+fn read_exactly(stream: &mut TcpStream, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf).context("reading origin body")?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Schedule;
+    use crate::testutil::fixture;
+    use crate::util::sync::atomic::Ordering;
+
+    fn edge_over(tag: &str) -> (Edge, crate::server::Server, Arc<crate::server::Repository>) {
+        let (server, repo) = fixture::executable_server(tag).unwrap();
+        let edge = Edge::start(
+            "127.0.0.1:0",
+            vec![server.addr()],
+            EdgeConfig::default(),
+        )
+        .unwrap();
+        (edge, server, repo)
+    }
+
+    #[test]
+    fn cold_fetch_is_bit_identical_to_origin() {
+        let (edge, _server, repo) = edge_over("edge-cold");
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        let (mut s, resp) = open_fetch(&edge.addr(), &FetchRequest::new("dense3")).unwrap();
+        assert_eq!(resp.total as usize, expect.len());
+        assert_eq!(resp.container_len as usize, expect.len());
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(&got[..], &expect[..], "edge body must match origin exactly");
+        let st = edge.stats();
+        assert_eq!(st.origin_fills.load(Ordering::SeqCst), 1);
+        assert_eq!(st.edge_hits.load(Ordering::SeqCst), 1);
+        assert_eq!(st.edge_misses.load(Ordering::SeqCst), 1, "tail was relayed");
+    }
+
+    #[test]
+    fn warm_prefix_requests_never_touch_the_origin() {
+        let (edge, server, _repo) = edge_over("edge-warm");
+        // warm the cache
+        let (mut s, resp) =
+            open_fetch(&edge.addr(), &FetchRequest::new("dense3").with_stages(0, 2)).unwrap();
+        let mut first = Vec::new();
+        s.read_to_end(&mut first).unwrap();
+        assert_eq!(first.len() as u64, resp.remaining);
+        let origin_bytes = server.stats().bytes_sent.load(Ordering::SeqCst);
+        let fills = edge.stats().origin_fills.load(Ordering::SeqCst);
+        assert_eq!(fills, 1);
+        // ten warm prefix fetches: origin byte counter must not move
+        for _ in 0..10 {
+            let (mut s, _) =
+                open_fetch(&edge.addr(), &FetchRequest::new("dense3").with_stages(0, 2)).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            assert_eq!(got, first);
+        }
+        assert_eq!(
+            server.stats().bytes_sent.load(Ordering::SeqCst),
+            origin_bytes,
+            "warm prefix hits must be served entirely from the edge"
+        );
+        assert_eq!(edge.stats().origin_fills.load(Ordering::SeqCst), fills);
+        assert_eq!(edge.stats().edge_misses.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn concurrent_cold_clients_fill_once() {
+        let (edge, _server, _repo) = edge_over("edge-flight");
+        let addr = edge.addr();
+        let barrier = Arc::new(crate::util::sync::Barrier::new(6));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let (mut s, _) =
+                        open_fetch(&addr, &FetchRequest::new("dense3").with_stages(0, 2)).unwrap();
+                    let mut got = Vec::new();
+                    s.read_to_end(&mut got).unwrap();
+                    got
+                })
+            })
+            .collect();
+        let bodies: Vec<Vec<u8>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for b in &bodies[1..] {
+            assert_eq!(b, &bodies[0]);
+        }
+        assert_eq!(
+            edge.stats().origin_fills.load(Ordering::SeqCst),
+            1,
+            "cold stampede must single-flight the fill"
+        );
+    }
+
+    #[test]
+    fn offset_resume_through_the_edge() {
+        let (edge, _server, repo) = edge_over("edge-resume");
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        // resume points on both sides of the prefix/tail seam
+        let seam = expect.body_range(Some((0, 2))).unwrap().end as u64;
+        for off in [1, seam / 2, seam, seam + 1, expect.len() as u64 - 1] {
+            let (mut s, resp) =
+                open_fetch(&edge.addr(), &FetchRequest::new("dense3").with_offset(off)).unwrap();
+            assert_eq!(resp.remaining, expect.len() as u64 - off, "offset {off}");
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            assert_eq!(&got[..], &expect[off as usize..], "offset {off}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_propagates_an_error_frame() {
+        let (edge, _server, _repo) = edge_over("edge-unknown");
+        let err = open_fetch(&edge.addr(), &FetchRequest::new("missing")).unwrap_err();
+        assert!(err.to_string().contains("ERR"), "{err}");
+    }
+
+    #[test]
+    fn keep_alive_serves_ranges_back_to_back() {
+        let (edge, _server, repo) = edge_over("edge-keepalive");
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        let mut stream = TcpStream::connect(edge.addr()).unwrap();
+        stream.set_nodelay(true).unwrap();
+        for stages in [(0u32, 2u32), (2, 8), (0, 8)] {
+            let req = FetchRequest::new("dense3")
+                .with_stages(stages.0, stages.1)
+                .with_keep_alive(true);
+            let resp = request_on(&mut stream, &req).unwrap();
+            let mut body = vec![0u8; resp.remaining as usize];
+            stream.read_exact(&mut body).unwrap();
+            let want = expect.slice(expect.body_range(Some(stages)).unwrap());
+            assert_eq!(&body[..], want, "{stages:?}");
+        }
+    }
+
+    #[test]
+    fn probe_connect_and_close_is_not_an_error() {
+        let (edge, _server, _repo) = edge_over("edge-probe");
+        for _ in 0..3 {
+            drop(TcpStream::connect(edge.addr()).unwrap());
+        }
+        // give the handler threads a moment to run down
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while edge.stats().active.load(Ordering::SeqCst) != 0 {
+            assert!(std::time::Instant::now() < deadline, "handlers stuck");
+            std::thread::yield_now();
+        }
+        assert_eq!(edge.stats().errors.load(Ordering::SeqCst), 0);
+    }
+}

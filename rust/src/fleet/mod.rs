@@ -29,22 +29,39 @@
 //! and accept→finished, emitted as JSON for the bench trajectory
 //! (`benches/fleet_slo.rs` → `BENCH_fleet.json`).
 //!
+//! **Cluster tier.** [`cluster`] composes the pieces into a multi-node
+//! serving tree: origin reactors behind [`edge`] nodes that cache stage
+//! prefixes `[0, k)` (single-flight fills, byte-validated, serving the
+//! latency-critical head of every fetch locally while relaying the tail)
+//! and a [`router`] that places models on edges via [`placement`]
+//! consistent hashing with health probes and connection draining for
+//! rolling restarts. See `docs/PROTOCOL.md` ("Cluster tier").
+//!
 //! Quickstart: `prognet fleet --clients 200` self-hosts a reactor over
-//! synthetic fixture models and prints the SLO report; see
+//! synthetic fixture models and prints the SLO report; `prognet cluster`
+//! does the same through a router/edge/origin tree; see
 //! `rust/README.md` ("Fleet serving & load generation").
 
 pub mod admission;
+pub mod cluster;
 pub mod conn;
+pub mod edge;
 pub mod loadgen;
+pub mod placement;
 pub mod poll;
 pub mod reactor;
+pub mod router;
 pub mod slo;
 
 pub use admission::{Admission, Decision, ShedPolicy, SHED_MARKER};
+pub use cluster::{Cluster, ClusterConfig};
 pub use conn::Conn;
+pub use edge::{Edge, EdgeConfig};
 pub use loadgen::{Cohort, FleetOptions, Scenario};
+pub use placement::HashRing;
 pub use reactor::{FleetConfig, Reactor};
-pub use slo::{ClientSample, Outcome, SloReport};
+pub use router::{Router, RouterConfig};
+pub use slo::{ClientSample, Outcome, SloReport, TierStats};
 
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 
@@ -77,6 +94,20 @@ pub struct ServerStats {
     pub evicted: AtomicU64,
     /// stages delivered across all responses
     pub stages_served: AtomicU64,
+    /// edge: requests that served bytes from the cached stage prefix
+    pub edge_hits: AtomicU64,
+    /// edge: requests that needed any bytes beyond the cached prefix
+    pub edge_misses: AtomicU64,
+    /// edge: single-flight prefix fills performed against an origin
+    pub origin_fills: AtomicU64,
+    /// edge: body bytes served from the local prefix cache
+    pub cache_bytes: AtomicU64,
+    /// edge: bytes fetched from origins to fill prefix caches
+    pub fill_bytes: AtomicU64,
+    /// edge: tail bytes relayed from origins to clients
+    pub relay_bytes: AtomicU64,
+    /// router: connections to a draining backend that ran to completion
+    pub drained: AtomicU64,
 }
 
 impl ServerStats {
@@ -88,11 +119,12 @@ impl ServerStats {
         // counter bumps (tests assert exact totals across shard threads,
         // which Relaxed reads would not guarantee).
         let g = |c: &AtomicU64| c.load(Ordering::SeqCst).to_string();
+        let b = |c: &AtomicU64| crate::util::stats::fmt_bytes(c.load(Ordering::SeqCst));
         let mut t = Table::new(
             "server counters",
             &[
                 "active", "queued", "conns", "requests", "stages", "bytes", "shed", "degraded",
-                "evicted", "errors",
+                "evicted", "errors", "ehits", "emiss", "fills", "cbytes", "rbytes", "drained",
             ],
         );
         t.row(vec![
@@ -101,11 +133,17 @@ impl ServerStats {
             g(&self.connections),
             g(&self.requests),
             g(&self.stages_served),
-            crate::util::stats::fmt_bytes(self.bytes_sent.load(Ordering::SeqCst)),
+            b(&self.bytes_sent),
             g(&self.shed),
             g(&self.degraded),
             g(&self.evicted),
             g(&self.errors),
+            g(&self.edge_hits),
+            g(&self.edge_misses),
+            g(&self.origin_fills),
+            b(&self.cache_bytes),
+            b(&self.relay_bytes),
+            g(&self.drained),
         ]);
         t
     }
@@ -124,5 +162,18 @@ mod tests {
         assert!(rendered.contains("active"));
         assert!(rendered.contains("2.0 KB"));
         assert!(rendered.contains("3"));
+    }
+
+    #[test]
+    fn stats_table_includes_tier_counters() {
+        let s = ServerStats::default();
+        s.edge_hits.store(7, Ordering::SeqCst);
+        s.cache_bytes.store(4096, Ordering::SeqCst);
+        s.drained.store(2, Ordering::SeqCst);
+        let rendered = s.table().render();
+        for col in ["ehits", "emiss", "fills", "cbytes", "rbytes", "drained"] {
+            assert!(rendered.contains(col), "missing column {col}");
+        }
+        assert!(rendered.contains("4.0 KB"));
     }
 }

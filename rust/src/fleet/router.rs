@@ -1,0 +1,474 @@
+//! Cluster front door: places each connection on a backend via
+//! consistent hashing and proxies the v2 protocol byte-for-byte.
+//!
+//! Placement is per **connection**, keyed by the first request's model
+//! name ([`super::placement::HashRing`]): all stage-range requests of one
+//! progressive session land on the same edge, so its prefix cache sees
+//! the whole fetch. Follow-up keep-alive requests (possibly for other
+//! models) stay on the chosen backend — every edge can serve every model,
+//! placement only concentrates cache locality.
+//!
+//! The router never re-frames traffic: it forwards the client's encoded
+//! request frames upstream and relays the status frame + exactly the
+//! advertised body bytes back. Error frames are forwarded verbatim (the
+//! router must not translate an upstream `ERR` into a connection drop
+//! before the client has seen the reason).
+//!
+//! Health and drains:
+//! * a prober thread TCP-connects to every backend each interval;
+//!   backends that refuse are taken out of placement until they accept
+//!   again (placement walks the ring past them — minimal remapping);
+//! * [`Router::drain`] marks a backend as draining for a rolling
+//!   restart: new connections avoid it, established ones run to
+//!   completion and are counted in `stats.drained` as they finish. The
+//!   probe-and-drop connections the prober makes are tolerated as clean
+//!   closes by both the edge and the origin reactor.
+
+#![forbid(unsafe_code)]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::server::proto;
+use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{clock, Arc};
+
+use super::placement::{HashRing, DEFAULT_VNODES};
+use super::ServerStats;
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// backend health-probe period
+    pub health_interval: Duration,
+    /// TCP connect timeout for probes and upstream dials
+    pub connect_timeout: Duration,
+    /// per-socket read timeout (client and upstream sides)
+    pub io_timeout: Duration,
+    /// virtual nodes per backend on the placement ring
+    pub vnodes: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            health_interval: Duration::from_millis(250),
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(10),
+            vnodes: DEFAULT_VNODES,
+        }
+    }
+}
+
+struct Backend {
+    addr: SocketAddr,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    active: AtomicU64,
+}
+
+struct Inner {
+    backends: Vec<Backend>,
+    ring: HashRing,
+    cfg: RouterConfig,
+    stats: Arc<ServerStats>,
+}
+
+impl Inner {
+    fn placeable(&self, i: usize) -> bool {
+        self.backends[i].healthy.load(Ordering::SeqCst)
+            && !self.backends[i].draining.load(Ordering::SeqCst)
+    }
+}
+
+/// Running router (shuts down on drop).
+pub struct Router {
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `addr` and route to `backends` (labelled `edge-0..n` on the
+    /// placement ring, in the given order).
+    pub fn start(addr: &str, backends: Vec<SocketAddr>, cfg: RouterConfig) -> Result<Self> {
+        anyhow::ensure!(!backends.is_empty(), "router needs at least one backend");
+        let listener = TcpListener::bind(addr).context("binding router listener")?;
+        let local = listener.local_addr()?;
+        let labels: Vec<String> = (0..backends.len()).map(|i| format!("edge-{i}")).collect();
+        let inner = Arc::new(Inner {
+            ring: HashRing::new(&labels, cfg.vnodes),
+            backends: backends
+                .into_iter()
+                .map(|addr| Backend {
+                    addr,
+                    // optimistic until the first probe says otherwise
+                    healthy: AtomicBool::new(true),
+                    draining: AtomicBool::new(false),
+                    active: AtomicU64::new(0),
+                })
+                .collect(),
+            cfg,
+            stats: Arc::new(ServerStats::default()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+        {
+            let inner = inner.clone();
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("prognet-router-accept".into())
+                    .spawn(move || accept_loop(listener, inner, stop))?,
+            );
+        }
+        {
+            let inner = inner.clone();
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("prognet-router-health".into())
+                    .spawn(move || health_loop(inner, stop))?,
+            );
+        }
+        Ok(Self {
+            addr: local,
+            inner,
+            stop,
+            threads,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.inner.stats
+    }
+
+    /// Begin draining backend `i`: it leaves placement immediately;
+    /// in-flight connections finish and are counted in `stats.drained`.
+    pub fn drain(&self, i: usize) {
+        self.inner.backends[i].draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Put a drained backend back into placement (restart finished).
+    pub fn undrain(&self, i: usize) {
+        self.inner.backends[i].draining.store(false, Ordering::SeqCst);
+    }
+
+    /// Probe result for backend `i` (tests and the CLI status line).
+    pub fn backend_healthy(&self, i: usize) -> bool {
+        self.inner.backends[i].healthy.load(Ordering::SeqCst)
+    }
+
+    /// Connections currently proxied to backend `i`.
+    pub fn backend_active(&self, i: usize) -> u64 {
+        self.inner.backends[i].active.load(Ordering::SeqCst)
+    }
+
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = TcpStream::connect(self.addr);
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn health_loop(inner: Arc<Inner>, stop: Arc<AtomicBool>) {
+    // short slices keep shutdown prompt without a wakeup channel
+    let slice = Duration::from_millis(25);
+    loop {
+        for b in &inner.backends {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let up = TcpStream::connect_timeout(&b.addr, inner.cfg.connect_timeout).is_ok();
+            b.healthy.store(up, Ordering::SeqCst);
+        }
+        let mut waited = Duration::ZERO;
+        while waited < inner.cfg.health_interval {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            clock::sleep(slice);
+            waited += slice;
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        inner.stats.connections.fetch_add(1, Ordering::SeqCst);
+        inner.stats.active.fetch_add(1, Ordering::SeqCst);
+        let inner = inner.clone();
+        let spawned = std::thread::Builder::new()
+            .name("prognet-router-conn".into())
+            .stack_size(128 * 1024)
+            .spawn(move || {
+                let stats = inner.stats.clone();
+                if proxy_conn(stream, &inner).is_err() {
+                    stats.errors.fetch_add(1, Ordering::SeqCst);
+                }
+                stats.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            inner.stats.errors.fetch_add(1, Ordering::SeqCst);
+            inner.stats.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Releases the backend's active slot on scope exit and counts the close
+/// against `drained` when the backend is mid-drain.
+struct BackendLease<'a> {
+    inner: &'a Inner,
+    idx: usize,
+}
+
+impl Drop for BackendLease<'_> {
+    fn drop(&mut self) {
+        let b = &self.inner.backends[self.idx];
+        b.active.fetch_sub(1, Ordering::SeqCst);
+        if b.draining.load(Ordering::SeqCst) {
+            self.inner.stats.drained.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn proxy_conn(mut client: TcpStream, inner: &Inner) -> Result<()> {
+    client.set_nodelay(true)?;
+    client.set_read_timeout(Some(inner.cfg.io_timeout))?;
+    let mut upstream: Option<(TcpStream, BackendLease)> = None;
+    loop {
+        let req = match proto::read_request(&mut client) {
+            Ok(req) => req,
+            // EOF between requests (or a health probe) is a clean close
+            Err(_) => return Ok(()),
+        };
+        inner.stats.requests.fetch_add(1, Ordering::SeqCst);
+
+        if upstream.is_none() {
+            let Some(idx) = inner.ring.place_where(&req.model, |i| inner.placeable(i)) else {
+                let _ = proto::write_err(&mut client, "no healthy backend");
+                bail!("no healthy backend for {}", req.model);
+            };
+            let b = &inner.backends[idx];
+            let up = TcpStream::connect_timeout(&b.addr, inner.cfg.connect_timeout)
+                .with_context(|| format!("dialing backend {idx}"))?;
+            up.set_nodelay(true)?;
+            up.set_read_timeout(Some(inner.cfg.io_timeout))?;
+            b.active.fetch_add(1, Ordering::SeqCst);
+            upstream = Some((up, BackendLease { inner, idx }));
+        }
+        let (up, _lease) = upstream.as_mut().expect("upstream just placed");
+
+        // forward the request frame verbatim and relay the status frame
+        up.write_all(&req.encode())?;
+        up.flush()?;
+        let frame = proto::read_frame(up).context("upstream status frame")?;
+        let status = Json::parse(std::str::from_utf8(&frame)?)?;
+        let ok = status.get("status")?.as_str()? == "ok";
+        let remaining = if ok {
+            status.get("remaining")?.as_i64()? as u64
+        } else {
+            0
+        };
+        proto::write_frame(&mut client, &frame)?;
+        if !ok {
+            // upstream error frames are terminal on the upstream side;
+            // the client has the reason, close out cleanly
+            client.flush()?;
+            return Ok(());
+        }
+
+        // relay exactly the advertised body
+        let mut left = remaining;
+        let mut buf = [0u8; 16 * 1024];
+        while left > 0 {
+            let n = up.read(&mut buf[..(left as usize).min(buf.len())])?;
+            if n == 0 {
+                bail!("backend closed with {left} body bytes left");
+            }
+            client.write_all(&buf[..n])?;
+            left -= n as u64;
+        }
+        client.flush()?;
+        inner.stats.bytes_sent.fetch_add(remaining, Ordering::SeqCst);
+
+        if !req.keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Schedule;
+    use crate::server::proto::FetchRequest;
+    use crate::server::service::open_fetch;
+    use crate::testutil::fixture;
+
+    fn quick_cfg() -> RouterConfig {
+        RouterConfig {
+            health_interval: Duration::from_millis(50),
+            ..RouterConfig::default()
+        }
+    }
+
+    #[test]
+    fn routes_a_fetch_end_to_end() {
+        let (server, repo) = fixture::executable_server("router-basic").unwrap();
+        let router = Router::start("127.0.0.1:0", vec![server.addr()], quick_cfg()).unwrap();
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        let (mut s, resp) = open_fetch(&router.addr(), &FetchRequest::new("dense3")).unwrap();
+        assert_eq!(resp.total as usize, expect.len());
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(&got[..], &expect[..]);
+        assert_eq!(router.stats().requests.load(Ordering::SeqCst), 1);
+        assert_eq!(
+            router.stats().bytes_sent.load(Ordering::SeqCst) as usize,
+            expect.len()
+        );
+    }
+
+    #[test]
+    fn error_frames_are_forwarded_not_swallowed() {
+        let (server, _repo) = fixture::executable_server("router-err").unwrap();
+        let router = Router::start("127.0.0.1:0", vec![server.addr()], quick_cfg()).unwrap();
+        let err = open_fetch(&router.addr(), &FetchRequest::new("missing")).unwrap_err();
+        assert!(err.to_string().contains("ERR"), "{err}");
+        assert!(err.to_string().contains("missing"), "reason lost: {err}");
+    }
+
+    #[test]
+    fn draining_backend_stops_receiving_new_connections() {
+        let (server_a, repo) = fixture::executable_server("router-drain-a").unwrap();
+        let (server_b, _repo_b) = fixture::executable_server("router-drain-b").unwrap();
+        let router = Router::start(
+            "127.0.0.1:0",
+            vec![server_a.addr(), server_b.addr()],
+            quick_cfg(),
+        )
+        .unwrap();
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        let fetch = || {
+            let (mut s, _) = open_fetch(&router.addr(), &FetchRequest::new("dense3")).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            got
+        };
+        // hold a keep-alive connection open on the placed backend
+        let held_req = FetchRequest::new("dense3").with_stages(0, 2).with_keep_alive(true);
+        let (mut held, hresp) = open_fetch(&router.addr(), &held_req).unwrap();
+        let mut body = vec![0u8; hresp.remaining as usize];
+        held.read_exact(&mut body).unwrap();
+        let placed = usize::from(server_b.stats().connections.load(Ordering::SeqCst) > 0);
+
+        // drain it: new connections must land on the other backend while
+        // the held connection stays up
+        router.drain(placed);
+        let before = [
+            server_a.stats().connections.load(Ordering::SeqCst),
+            server_b.stats().connections.load(Ordering::SeqCst),
+        ];
+        for _ in 0..3 {
+            assert_eq!(fetch().len(), expect.len());
+        }
+        let after = [
+            server_a.stats().connections.load(Ordering::SeqCst),
+            server_b.stats().connections.load(Ordering::SeqCst),
+        ];
+        assert_eq!(
+            after[placed], before[placed],
+            "draining backend got a new connection"
+        );
+        assert_eq!(after[1 - placed], before[1 - placed] + 3);
+
+        // closing the held connection completes the drain
+        drop(held);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while router.stats().drained.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "drain never counted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        router.undrain(placed);
+        assert_eq!(fetch().len(), expect.len());
+    }
+
+    #[test]
+    fn dead_backend_is_probed_out() {
+        let (server_a, repo) = fixture::executable_server("router-health-a").unwrap();
+        let (mut server_b, _repo_b) = fixture::executable_server("router-health-b").unwrap();
+        let router = Router::start(
+            "127.0.0.1:0",
+            vec![server_a.addr(), server_b.addr()],
+            quick_cfg(),
+        )
+        .unwrap();
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        server_b.shutdown();
+        // wait for the prober to notice
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while router.backend_healthy(1) {
+            assert!(std::time::Instant::now() < deadline, "probe never failed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // every model must still be served (by backend 0)
+        for _ in 0..4 {
+            let (mut s, _) = open_fetch(&router.addr(), &FetchRequest::new("dense3")).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            assert_eq!(got.len(), expect.len());
+        }
+        assert_eq!(server_a.stats().errors.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn all_backends_down_yields_an_error_frame() {
+        let (mut server, _repo) = fixture::executable_server("router-alldown").unwrap();
+        let router = Router::start("127.0.0.1:0", vec![server.addr()], quick_cfg()).unwrap();
+        server.shutdown();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while router.backend_healthy(0) {
+            assert!(std::time::Instant::now() < deadline, "probe never failed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let err = open_fetch(&router.addr(), &FetchRequest::new("dense3")).unwrap_err();
+        assert!(err.to_string().contains("no healthy backend"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_is_prompt() {
+        let (server, _repo) = fixture::executable_server("router-shutdown").unwrap();
+        let mut router = Router::start("127.0.0.1:0", vec![server.addr()], quick_cfg()).unwrap();
+        let t0 = std::time::Instant::now();
+        router.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "router shutdown took {:?}",
+            t0.elapsed()
+        );
+    }
+}

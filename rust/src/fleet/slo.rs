@@ -176,6 +176,98 @@ impl SloBlock {
     }
 }
 
+/// Counter snapshot for one serving tier of a cluster run (router /
+/// edges / origins), aggregated across the tier's instances. The
+/// interesting derived number is [`TierStats::offload`]: the fraction of
+/// stage-prefix bytes the edges served from cache instead of pulling
+/// from an origin.
+#[derive(Debug, Clone, Default)]
+pub struct TierStats {
+    pub name: String,
+    pub connections: u64,
+    pub requests: u64,
+    pub bytes_sent: u64,
+    pub errors: u64,
+    pub edge_hits: u64,
+    pub edge_misses: u64,
+    pub origin_fills: u64,
+    pub cache_bytes: u64,
+    pub fill_bytes: u64,
+    pub relay_bytes: u64,
+    pub drained: u64,
+}
+
+impl TierStats {
+    /// Sum the live counters of every instance of a tier.
+    pub fn from_stats(name: &str, stats: &[&super::ServerStats]) -> Self {
+        use crate::util::sync::atomic::{AtomicU64, Ordering};
+        let sum = |f: fn(&super::ServerStats) -> &AtomicU64| -> u64 {
+            stats.iter().map(|s| f(s).load(Ordering::SeqCst)).sum()
+        };
+        Self {
+            name: name.to_string(),
+            connections: sum(|s| &s.connections),
+            requests: sum(|s| &s.requests),
+            bytes_sent: sum(|s| &s.bytes_sent),
+            errors: sum(|s| &s.errors),
+            edge_hits: sum(|s| &s.edge_hits),
+            edge_misses: sum(|s| &s.edge_misses),
+            origin_fills: sum(|s| &s.origin_fills),
+            cache_bytes: sum(|s| &s.cache_bytes),
+            fill_bytes: sum(|s| &s.fill_bytes),
+            relay_bytes: sum(|s| &s.relay_bytes),
+            drained: sum(|s| &s.drained),
+        }
+    }
+
+    /// Of the bytes this tier sourced for stage-prefix traffic
+    /// (cache-served + origin fills), the cached fraction — the "origin
+    /// byte offload" acceptance number. None until any prefix traffic.
+    pub fn offload(&self) -> Option<f64> {
+        let denom = self.cache_bytes + self.fill_bytes;
+        if denom == 0 {
+            None
+        } else {
+            Some(self.cache_bytes as f64 / denom as f64)
+        }
+    }
+
+    /// Of the requests that touched this (edge) tier, the fraction whose
+    /// prefix came from cache. None until any request.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let denom = self.edge_hits + self.edge_misses;
+        if denom == 0 {
+            None
+        } else {
+            Some(self.edge_hits as f64 / denom as f64)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", json::s(&self.name)),
+            ("connections", json::num(self.connections as f64)),
+            ("requests", json::num(self.requests as f64)),
+            ("bytes_sent", json::num(self.bytes_sent as f64)),
+            ("errors", json::num(self.errors as f64)),
+            ("edge_hits", json::num(self.edge_hits as f64)),
+            ("edge_misses", json::num(self.edge_misses as f64)),
+            ("origin_fills", json::num(self.origin_fills as f64)),
+            ("cache_bytes", json::num(self.cache_bytes as f64)),
+            ("fill_bytes", json::num(self.fill_bytes as f64)),
+            ("relay_bytes", json::num(self.relay_bytes as f64)),
+            ("drained", json::num(self.drained as f64)),
+        ];
+        if let Some(v) = self.offload() {
+            fields.push(("offload", json::num(v)));
+        }
+        if let Some(v) = self.hit_rate() {
+            fields.push(("hit_rate", json::num(v)));
+        }
+        json::obj(fields)
+    }
+}
+
 /// The full fleet SLO report.
 #[derive(Debug, Clone)]
 pub struct SloReport {
@@ -186,6 +278,10 @@ pub struct SloReport {
     pub cohorts: Vec<SloBlock>,
     /// up to 5 distinct error strings, for debugging failed runs
     pub sample_errors: Vec<String>,
+    /// per-tier counters for cluster runs (empty for direct-origin runs;
+    /// omitted from the JSON when empty so single-tier reports are
+    /// unchanged)
+    pub tiers: Vec<TierStats>,
 }
 
 impl SloReport {
@@ -220,7 +316,14 @@ impl SloReport {
             overall,
             cohorts,
             sample_errors,
+            tiers: Vec::new(),
         }
+    }
+
+    /// Attach per-tier counter snapshots (cluster runs).
+    pub fn with_tiers(mut self, tiers: Vec<TierStats>) -> Self {
+        self.tiers = tiers;
+        self
     }
 
     pub fn clients(&self) -> usize {
@@ -249,6 +352,12 @@ impl SloReport {
             fields.push((
                 "sample_errors",
                 json::arr(self.sample_errors.iter().map(|e| json::s(e)).collect()),
+            ));
+        }
+        if !self.tiers.is_empty() {
+            fields.push((
+                "tiers",
+                json::arr(self.tiers.iter().map(|t| t.to_json()).collect()),
             ));
         }
         json::obj(fields)
@@ -284,6 +393,41 @@ impl SloReport {
                 q(&b.model_ready, |q| q.p99),
                 q(&b.finished_t, |q| q.p99),
                 fmt_bytes(b.bytes),
+            ]);
+        }
+        let mut out = t.render();
+        if !self.tiers.is_empty() {
+            out.push('\n');
+            out.push_str(&self.render_tiers());
+        }
+        out
+    }
+
+    /// Per-tier counter table (cluster runs).
+    pub fn render_tiers(&self) -> String {
+        let mut t = Table::new(
+            "cluster tiers",
+            &[
+                "tier", "conns", "requests", "bytes", "hits", "misses", "fills", "offload",
+                "drained", "errors",
+            ],
+        );
+        let pct = |v: Option<f64>| match v {
+            Some(v) => format!("{:.0}%", v * 100.0),
+            None => "-".into(),
+        };
+        for tier in &self.tiers {
+            t.row(vec![
+                tier.name.clone(),
+                tier.connections.to_string(),
+                tier.requests.to_string(),
+                fmt_bytes(tier.bytes_sent),
+                tier.edge_hits.to_string(),
+                tier.edge_misses.to_string(),
+                tier.origin_fills.to_string(),
+                pct(tier.offload()),
+                tier.drained.to_string(),
+                tier.errors.to_string(),
             ]);
         }
         t.render()
@@ -340,6 +484,50 @@ mod tests {
         let q = overall.get("accept_to_model_ready").unwrap();
         assert!((q.get("p50_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
         assert_eq!(j.get("cohorts").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn tier_stats_aggregate_offload_and_json() {
+        use crate::util::sync::atomic::Ordering;
+        let a = super::super::ServerStats::default();
+        let b = super::super::ServerStats::default();
+        a.cache_bytes.store(300, Ordering::SeqCst);
+        a.fill_bytes.store(100, Ordering::SeqCst);
+        a.edge_hits.store(3, Ordering::SeqCst);
+        b.cache_bytes.store(100, Ordering::SeqCst);
+        b.edge_misses.store(1, Ordering::SeqCst);
+        let t = TierStats::from_stats("edge", &[&a, &b]);
+        assert_eq!(t.cache_bytes, 400);
+        assert_eq!(t.fill_bytes, 100);
+        assert!((t.offload().unwrap() - 0.8).abs() < 1e-9);
+        assert!((t.hit_rate().unwrap() - 0.75).abs() < 1e-9);
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "edge");
+        assert!((j.get("offload").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+        // empty tier: derived rates absent, not NaN
+        let empty = TierStats::from_stats("router", &[]);
+        assert!(empty.offload().is_none());
+        assert!(Json::parse(&empty.to_json().to_string()).is_ok());
+    }
+
+    #[test]
+    fn report_with_tiers_emits_and_renders_them() {
+        let samples = vec![sample("a", Outcome::Finished, Some(0.1))];
+        let mut tier = TierStats::from_stats("edge", &[]);
+        tier.cache_bytes = 500;
+        tier.fill_bytes = 500;
+        let report = SloReport::from_samples("m", 0.5, &samples).with_tiers(vec![tier]);
+        let j = Json::parse(&report.to_json().to_string()).unwrap();
+        let tiers = j.get("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 1);
+        assert!((tiers[0].get("offload").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert!(report.render().contains("cluster tiers"));
+        // reports without tiers keep the legacy JSON shape
+        let plain = SloReport::from_samples("m", 0.5, &samples);
+        assert!(Json::parse(&plain.to_json().to_string())
+            .unwrap()
+            .opt("tiers")
+            .is_none());
     }
 
     #[test]

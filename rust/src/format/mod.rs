@@ -40,5 +40,5 @@ pub use header::{
     infer_layer_groups, FragmentHeader, PnetManifest, StageIndex, TensorMeta, FRAG_HEADER_LEN,
     MAGIC, VERSION,
 };
-pub use reader::{FrameParser, ParserEvent, PnetReader};
+pub use reader::{validated_prefix, FrameParser, ParserEvent, PnetReader};
 pub use writer::PnetWriter;

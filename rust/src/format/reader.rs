@@ -272,6 +272,43 @@ impl FrameParser {
     }
 }
 
+/// Largest trustworthy prefix of a (possibly damaged) container byte
+/// stream, as `(valid_len, complete_stages)`.
+///
+/// Feeds the bytes through a fresh [`FrameParser`] and stops at the first
+/// parse/CRC failure or mid-frame truncation, then rounds *down* to the
+/// last complete stage boundary — the only resume points the wire
+/// protocol offers. A stream whose preamble doesn't parse is worth
+/// nothing (`(0, 0)`); one with a valid manifest but no complete stage is
+/// worth only the preamble. Used by `client::cache` to sanitize partial
+/// cache files before resuming and by `fleet::edge` to validate fills.
+pub fn validated_prefix(bytes: &[u8]) -> (usize, usize) {
+    let mut parser = FrameParser::new();
+    // an Err mid-feed leaves everything parsed *before* the failure
+    // counted in the parser state, which is exactly what we want
+    let _ = parser.feed(bytes);
+    let Some(manifest) = parser.manifest() else {
+        return (0, 0);
+    };
+    let stages = parser.stage_boundary();
+    let index = super::header::StageIndex::from_manifest(manifest);
+    let valid_len = if stages > 0 {
+        match index.body_range(Some((0, stages as u32))) {
+            Ok(r) => r.end,
+            Err(_) => return (0, 0),
+        }
+    } else {
+        index.preamble_len()
+    };
+    // never claim more than we were given (body_range is manifest-derived;
+    // a truncated final stage must not round up past the actual bytes)
+    if valid_len > bytes.len() {
+        (0, 0)
+    } else {
+        (valid_len, stages)
+    }
+}
+
 /// Whole-file reader (validates everything eagerly).
 pub struct PnetReader {
     pub manifest: PnetManifest,
@@ -470,6 +507,57 @@ mod tests {
         let mut p = FrameParser::resume(w.manifest().clone(), 3, None).unwrap();
         let stage0 = &bytes[idx.stage_span(0, 1).unwrap()];
         assert!(p.feed(stage0).is_err());
+    }
+
+    #[test]
+    fn validated_prefix_full_container() {
+        let (w, bytes) = sample_bytes();
+        let (len, stages) = validated_prefix(&bytes);
+        assert_eq!(len, bytes.len());
+        assert_eq!(stages, w.manifest().schedule.stages());
+    }
+
+    #[test]
+    fn validated_prefix_rounds_down_to_stage_boundary() {
+        let (w, bytes) = sample_bytes();
+        let idx = w.stage_index();
+        let b3 = idx.stage_span(0, 3).unwrap().end;
+        // truncate mid-way through stage 3: only stages [0, 3) are usable
+        let cut = b3 + 5;
+        let (len, stages) = validated_prefix(&bytes[..cut]);
+        assert_eq!(stages, 3);
+        assert_eq!(len, b3);
+    }
+
+    #[test]
+    fn validated_prefix_stops_at_crc_damage() {
+        let (w, mut bytes) = sample_bytes();
+        let idx = w.stage_index();
+        let b2 = idx.stage_span(0, 2).unwrap().end;
+        // flip a payload byte inside stage 2: stages [0, 2) stay valid
+        bytes[b2 + idx.stage_span(2, 3).unwrap().len() / 2] ^= 0xFF;
+        let (len, stages) = validated_prefix(&bytes);
+        assert_eq!(stages, 2);
+        assert_eq!(len, b2);
+    }
+
+    #[test]
+    fn validated_prefix_worthless_without_manifest() {
+        let (_, mut bytes) = sample_bytes();
+        bytes[0] = b'X';
+        assert_eq!(validated_prefix(&bytes), (0, 0));
+        assert_eq!(validated_prefix(&[]), (0, 0));
+        assert_eq!(validated_prefix(&bytes[..6]), (0, 0));
+    }
+
+    #[test]
+    fn validated_prefix_preamble_only() {
+        let (w, bytes) = sample_bytes();
+        let pre = w.stage_index().preamble_len();
+        // a few bytes into stage 0 but no complete stage yet
+        let (len, stages) = validated_prefix(&bytes[..pre + 3]);
+        assert_eq!(stages, 0);
+        assert_eq!(len, pre);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   serve    — run the streaming model server (sharded reactor)
 //!   fetch    — progressively fetch + infer from a server
 //!   fleet    — multi-client load generation + SLO report
+//!   cluster  — self-hosted router/edge/origin tier under load
 //!   eval     — Table II style accuracy-vs-bit-width evaluation
 //!   study    — run the simulated user study (Table III / Fig 8)
 //!   models   — list models available in the artifacts registry
@@ -19,7 +20,7 @@ use anyhow::Result;
 use prognet::client::{ExecMode, ProgressiveSession, SessionEvent};
 use prognet::eval::{harness, EvalSet};
 use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
-use prognet::fleet::{FleetConfig, ShedPolicy};
+use prognet::fleet::{Cluster, ClusterConfig, FleetConfig, ShedPolicy};
 use prognet::format::PnetReader;
 use prognet::metrics::Table;
 use prognet::models::Registry;
@@ -56,6 +57,11 @@ fn usage() -> ! {
                    [--out FILE] [--download-only]\n          \
                    (no --addr: self-hosts a reactor over fixture models;\n          \
                     SPEC = name:count:speed_mbps[:flaky],... with speed 'max' = unshaped)\n  \
+           cluster [--clients 50] [--edges 2] [--origins 1] [--prefix-stages 2]\n          \
+                   [--workers 2] [--cohorts SPEC] [--ramp-ms 250] [--out FILE]\n          \
+                   [--download-only]\n          \
+                   (self-hosts router -> edge prefix caches -> origin reactors\n          \
+                    over fixture models; report includes per-tier counters)\n  \
            eval    --model NAME [--n 256] [--backend B]\n  \
            study   [--users 29] [--seed 2021] [--backend B] [--threads N]\n\
          backends (B): reference (default, pure Rust, batched) |\n\
@@ -98,6 +104,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "fetch" => cmd_fetch(&args),
         "fleet" => cmd_fleet(&args),
+        "cluster" => cmd_cluster(&args),
         "eval" => cmd_eval(&args),
         "study" => cmd_study(&args),
         _ => usage(),
@@ -316,6 +323,86 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.protocol_errors(),
         report.clients(),
         report.sample_errors
+    );
+    Ok(())
+}
+
+/// Self-hosted cluster tier under load: router → edge prefix caches →
+/// origin reactors, over the synthetic fixture models. Exits nonzero on
+/// any protocol error or a cold edge cache — the CI cluster-smoke
+/// contract.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let clients = args.get_usize("clients", 50)?;
+    let origins = args.get_usize("origins", 1)?;
+    let edges = args.get_usize("edges", 2)?;
+    let workers = args.get_usize("workers", 2)?;
+    let prefix_stages = args.get_usize("prefix-stages", 2)? as u32;
+    let engine = engine_from_args(args)?;
+
+    let reg = prognet::testutil::fixture::executable_models("cluster-cli")?;
+    let manifest = reg.get("dense3")?.clone();
+    let repo = Arc::new(Repository::new(reg));
+    let cluster = Cluster::start(
+        repo,
+        ClusterConfig {
+            origins,
+            edges,
+            workers_per_origin: workers,
+            prefix_stages,
+            ..ClusterConfig::default()
+        },
+    )?;
+    let runtime = if args.flag("download-only") {
+        None
+    } else {
+        Some(Arc::new(ModelSession::load(&engine, &manifest)?))
+    };
+
+    let scenario = match args.get("cohorts") {
+        Some(spec) => Scenario::parse("dense3", spec)?,
+        None => Scenario::mix("dense3", clients),
+    };
+    let opts = FleetOptions {
+        ramp: Duration::from_millis(args.get_u64("ramp-ms", 250)?),
+        // the fixture dense3 container is ~2 KB: cut flaky clients just
+        // past its manifest so their reconnect-resume actually runs
+        flaky_cut_bytes: 1500,
+        connect_retries: 5,
+        ..FleetOptions::default()
+    };
+    println!(
+        "cluster: {} virtual clients → router {} ({edges} edges, {origins} origins, \
+         prefix k={prefix_stages}, {} backend)",
+        scenario.total_clients(),
+        cluster.addr(),
+        engine.backend_name()
+    );
+    let report = run_fleet(cluster.addr(), &scenario, runtime, &opts)?.with_tiers(cluster.tiers());
+    println!("{}", report.render());
+    let json_text = report.to_json().to_string();
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &json_text)?;
+        println!("SLO report written to {path}");
+    } else {
+        println!("{json_text}");
+    }
+    anyhow::ensure!(
+        report.protocol_errors() == 0,
+        "{} of {} clients hit protocol errors: {:?}",
+        report.protocol_errors(),
+        report.clients(),
+        report.sample_errors
+    );
+    let edge = report
+        .tiers
+        .iter()
+        .find(|t| t.name == "edge")
+        .expect("cluster report has an edge tier");
+    anyhow::ensure!(
+        edge.hit_rate().unwrap_or(0.0) > 0.0,
+        "edge caches never served a prefix (hits {}, misses {})",
+        edge.edge_hits,
+        edge.edge_misses
     );
     Ok(())
 }

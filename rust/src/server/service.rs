@@ -6,7 +6,8 @@
 //! answers with a status frame plus exactly the advertised body bytes,
 //! and — when the request set `keep_alive` — waits for the next request.
 //! That lets one connection interleave stages of multiple models
-//! (see `client::multiplex`). Bodies are borrowed slices of the cached
+//! (see `client::session::ProgressiveSession::multiplex`). Bodies are
+//! borrowed slices of the cached
 //! encoding: the hot path copies nothing.
 //!
 //! Since the fleet PR, [`Server`] is a thin facade over

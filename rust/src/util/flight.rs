@@ -136,6 +136,23 @@ impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
         result
     }
 
+    /// Drop a cached value so the next request recomputes it. Only
+    /// `Ready` slots are removed: an in-flight `Pending` computation is
+    /// left alone (removing it would orphan the leader's publish step and
+    /// wedge followers), so a racing invalidate simply lets the flight
+    /// land and a later invalidate can flush it. Returns whether a cached
+    /// value was dropped.
+    pub fn invalidate(&self, key: &K) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get(key) {
+            Some(Slot::Ready(_)) => {
+                slots.remove(key);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Number of completed (cached) entries.
     pub fn ready_len(&self) -> usize {
         self.slots
@@ -204,6 +221,18 @@ mod tests {
         assert_eq!(r, Ok(42));
         assert_eq!(computes.load(Ordering::SeqCst), 2, "error must retry");
         assert_eq!(sf.ready_len(), 1);
+    }
+
+    #[test]
+    fn invalidate_drops_ready_but_not_pending() {
+        let sf = SingleFlight::<u32, u32>::new();
+        assert!(!sf.invalidate(&1), "nothing cached yet");
+        sf.get_or_compute(1, || Ok(10)).unwrap();
+        assert_eq!(sf.ready_len(), 1);
+        assert!(sf.invalidate(&1));
+        assert_eq!(sf.ready_len(), 0);
+        // next request recomputes
+        assert_eq!(sf.get_or_compute(1, || Ok(20)), Ok(20));
     }
 
     #[test]

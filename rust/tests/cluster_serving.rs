@@ -1,0 +1,186 @@
+//! Cluster-tier integration: router → edge prefix caches → origin
+//! reactors, on synthetic fixture models (no Python artifacts needed).
+//!
+//! The load-bearing property: a fetch through the cluster — the edge
+//! serving cached `[0, k)` bytes and relaying the tail from an origin —
+//! is **bit-identical** to fetching the same stage range directly from
+//! the origin's container, across random prefix depths, stage ranges,
+//! and resume offsets. Plus: the load generator drives the full tree
+//! with zero protocol errors, and the SLO report carries per-tier
+//! counters.
+
+use std::io::Read;
+use std::sync::Arc;
+
+use prognet::fleet::cluster::{Cluster, ClusterConfig};
+use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
+use prognet::quant::Schedule;
+use prognet::server::service::open_fetch;
+use prognet::server::{FetchRequest, Repository};
+use prognet::testutil::fixture;
+use prognet::testutil::prop::check;
+use prognet::util::json::Json;
+
+fn cluster(tag: &str, edges: usize, prefix_stages: u32) -> (Cluster, Arc<Repository>) {
+    let repo = Arc::new(Repository::new(fixture::executable_models(tag).unwrap()));
+    let cluster = Cluster::start(
+        repo.clone(),
+        ClusterConfig {
+            edges,
+            prefix_stages,
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
+    (cluster, repo)
+}
+
+/// Read exactly `resp.remaining` advertised bytes.
+fn fetch_all(addr: &std::net::SocketAddr, req: &FetchRequest) -> Vec<u8> {
+    let (mut stream, resp) = open_fetch(addr, req).unwrap();
+    let mut body = Vec::new();
+    stream.read_to_end(&mut body).unwrap();
+    assert_eq!(body.len() as u64, resp.remaining, "advertised size must match");
+    body
+}
+
+/// The satellite property: edge-served prefix bytes + origin tail
+/// reassemble bit-identically to a direct read of the origin container,
+/// for random prefix depths k, random stage ranges [a, b), and random
+/// resume split points (an interrupted fetch finished on a second
+/// connection via `offset`).
+#[test]
+fn prop_edge_prefix_plus_origin_tail_is_bit_identical() {
+    // one cluster per prefix depth, shared across cases (a fill is
+    // per-(model, schedule), so reuse exercises warm-cache serving too)
+    let depths: Vec<u32> = vec![1, 2, 4];
+    let built: Vec<(Cluster, Arc<Repository>)> = depths
+        .iter()
+        .map(|k| cluster(&format!("cluster-prop-k{k}"), 1, *k))
+        .collect();
+    let stages = Schedule::paper_default().stages() as u32;
+
+    check(
+        "edge prefix + origin tail reassembles",
+        40,
+        |g| {
+            let ki = g.usize(0, depths.len() - 1);
+            let a = g.usize(0, stages as usize - 1) as u32;
+            let b = g.usize(a as usize + 1, stages as usize) as u32;
+            // split point within the selected range, as a per-mille
+            // fraction (the byte length varies per (a, b))
+            let cut_ppm = g.usize(0, 1000);
+            (ki, a, b, cut_ppm)
+        },
+        |(ki, a, b, cut_ppm)| {
+            let (cl, repo) = &built[ki];
+            let container = repo
+                .container("dense3", &Schedule::paper_default())
+                .map_err(|e| format!("encode: {e:#}"))?;
+            let sel = container
+                .body_range(Some((a, b)))
+                .map_err(|e| format!("range: {e:#}"))?;
+            let expect = &container[sel.clone()];
+            let req = FetchRequest::new("dense3").with_stages(a, b);
+
+            // whole-range fetch through router + edge
+            let whole = fetch_all(&cl.addr(), &req);
+            if whole != expect {
+                return Err(format!(
+                    "k={} [{a},{b}): whole fetch {} bytes != direct {}",
+                    depths[ki],
+                    whole.len(),
+                    expect.len()
+                ));
+            }
+
+            // interrupted + resumed fetch: [0, cut) then offset=cut
+            let cut = (expect.len() * cut_ppm / 1000).min(expect.len());
+            let mut rejoined = Vec::with_capacity(expect.len());
+            if cut > 0 {
+                let (mut s1, _) = open_fetch(&cl.addr(), &req)
+                    .map_err(|e| format!("open 1: {e:#}"))?;
+                let mut part1 = vec![0u8; cut];
+                s1.read_exact(&mut part1)
+                    .map_err(|e| format!("read 1: {e:#}"))?;
+                rejoined.extend_from_slice(&part1);
+                drop(s1); // abandon mid-body
+            }
+            let tail = fetch_all(&cl.addr(), &req.clone().with_offset(cut as u64));
+            rejoined.extend_from_slice(&tail);
+            if rejoined != expect {
+                return Err(format!(
+                    "k={} [{a},{b}) cut={cut}: resumed fetch differs",
+                    depths[ki]
+                ));
+            }
+            Ok(())
+        },
+    );
+
+    // with the caches warm, the prefix traffic was genuinely offloaded
+    for (cl, _) in &built {
+        let edge = cl.tiers().into_iter().find(|t| t.name == "edge").unwrap();
+        assert!(edge.edge_hits > 0, "no edge hits across 40 cases");
+        assert!(
+            edge.origin_fills as usize <= 2,
+            "single-flight: one fill per (model, schedule), got {}",
+            edge.origin_fills
+        );
+    }
+}
+
+#[test]
+fn loadgen_through_cluster_has_zero_protocol_errors_and_tier_counters() {
+    let (cl, _repo) = cluster("cluster-loadgen", 2, 2);
+    let scenario = Scenario::uniform("dense3", 50, None);
+    let report = run_fleet(cl.addr(), &scenario, None, &FleetOptions::default())
+        .unwrap()
+        .with_tiers(cl.tiers());
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.connect_failed, 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.finished, 50);
+
+    let edge = report.tiers.iter().find(|t| t.name == "edge").unwrap();
+    assert!(edge.edge_hits > 0, "warm cluster must hit the edge cache");
+    assert!(
+        edge.hit_rate().unwrap() > 0.5,
+        "50 full fetches after one fill: hit rate {:?}",
+        edge.hit_rate()
+    );
+
+    // the tier rows survive the JSON round trip (what BENCH_fleet.json
+    // and the cluster-smoke CI job parse)
+    let j = Json::parse(&report.to_json().to_string()).unwrap();
+    let tiers = j.get("tiers").unwrap().as_arr().unwrap();
+    assert_eq!(tiers.len(), 3);
+    let edge_row = tiers
+        .iter()
+        .find(|t| t.get("name").unwrap().as_str().unwrap() == "edge")
+        .unwrap();
+    assert!(edge_row.get("edge_hits").unwrap().as_i64().unwrap() > 0);
+}
+
+#[test]
+fn draining_an_edge_keeps_the_cluster_serving() {
+    let (cl, repo) = cluster("cluster-drain", 2, 2);
+    let expect = repo
+        .container("dense3", &Schedule::paper_default())
+        .unwrap();
+    // warm both edges through the router
+    for _ in 0..4 {
+        let got = fetch_all(&cl.addr(), &FetchRequest::new("dense3"));
+        assert_eq!(&got[..], &expect[..]);
+    }
+    // rolling restart: drain edge 0 — everything lands on edge 1
+    cl.drain_edge(0);
+    for _ in 0..4 {
+        let got = fetch_all(&cl.addr(), &FetchRequest::new("dense3"));
+        assert_eq!(&got[..], &expect[..]);
+    }
+    cl.undrain_edge(0);
+    let got = fetch_all(&cl.addr(), &FetchRequest::new("dense3"));
+    assert_eq!(&got[..], &expect[..]);
+    let router = cl.tiers().into_iter().find(|t| t.name == "router").unwrap();
+    assert_eq!(router.errors, 0, "drain must not surface client errors");
+}

@@ -1,8 +1,9 @@
 //! Fleet integration: the sharded reactor under multi-client load —
 //! slow-loris eviction, clean shutdown with many mid-stream sessions,
 //! admission-control shedding (reject / queue / degrade), and the
-//! 1000-concurrent-client load-generation acceptance run. Everything
-//! runs on synthetic fixture models; no Python artifacts needed.
+//! 10 000-virtual-client acceptance run through the full cluster tier
+//! (router → edge prefix caches → origin). Everything runs on synthetic
+//! fixture models; no Python artifacts needed.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -12,29 +13,13 @@ use std::time::{Duration, Instant};
 
 use prognet::client::{ProgressiveSession, SessionEvent};
 use prognet::fleet::loadgen::{run_fleet, Cohort, FleetOptions, Scenario};
-use prognet::fleet::{FleetConfig, ShedPolicy};
+use prognet::fleet::{Cluster, ClusterConfig, FleetConfig, ShedPolicy};
 use prognet::quant::Schedule;
 use prognet::runtime::{Engine, ModelSession};
 use prognet::server::service::{open_fetch, ServerConfig};
 use prognet::server::{FetchRequest, Repository, Server};
 use prognet::testutil::fixture;
 use prognet::util::json::Json;
-
-/// Reactor over the small executable model ("dense3", ~2 KB container).
-fn fleet_server(tag: &str, workers: usize, fleet: FleetConfig) -> (Server, Arc<Repository>) {
-    let repo = Arc::new(Repository::new(fixture::executable_models(tag).unwrap()));
-    let server = Server::start_fleet(
-        "127.0.0.1:0",
-        repo.clone(),
-        ServerConfig {
-            workers,
-            ..ServerConfig::default()
-        },
-        fleet,
-    )
-    .unwrap();
-    (server, repo)
-}
 
 /// Reactor over the bigger executable model ("dense2b", ~27 KB), whose
 /// stage boundaries are observable under shaping.
@@ -292,8 +277,10 @@ fn fleet_slo_report_counts_resumes_and_parses_as_json() {
 }
 
 /// Soft `RLIMIT_NOFILE`, read from /proc (Linux); conservative default
-/// elsewhere. The 1000-client run needs ~2 fds per client in this one
-/// process (client socket + accepted server socket).
+/// elsewhere. A client fetching through the cluster holds up to ~6 fds
+/// in this one process (client socket, router in/out, edge in/out,
+/// origin accept), so the acceptance run scales its population to the
+/// fd budget rather than flaking on EMFILE.
 fn max_open_files() -> usize {
     std::fs::read_to_string("/proc/self/limits")
         .ok()
@@ -313,50 +300,59 @@ fn max_open_files() -> usize {
 }
 
 #[test]
-fn loadgen_sustains_1000_concurrent_clients_with_zero_protocol_errors() {
-    // The acceptance run: 1000 virtual clients (each a real
-    // ProgressiveSession with a bound runtime) against a 4-shard
-    // reactor. Server-side thread count is O(workers); the peak of the
-    // `active` gauge proves the population is genuinely concurrent.
-    // On fd-constrained machines (soft nofile < 4096) the same shape
-    // runs scaled down rather than flaking on EMFILE.
-    let clients: usize = if max_open_files() >= 4096 { 1000 } else { 192 };
-    let fleet = FleetConfig {
-        write_burst: 256, // keep small bodies honestly paced
-        ..FleetConfig::default()
-    };
-    let (server, repo) = fleet_server("fleet-1k", 4, fleet);
+fn loadgen_sustains_10k_clients_through_the_cluster_with_zero_protocol_errors() {
+    // The acceptance run: 10 000 virtual clients (each a real
+    // ProgressiveSession with a bound runtime) through the full cluster
+    // tier — router → 2 edge prefix caches → a 4-shard origin reactor.
+    // Every client must finish with zero protocol errors and reach
+    // ModelReady, and the warm edges must absorb the stage-prefix
+    // traffic (>= 50% byte offload of [0, k) bytes). The population is
+    // ramped so connections turn over instead of all 10k holding fds
+    // simultaneously, and fd-constrained machines run the same shape
+    // scaled to their budget (PROGNET_CLUSTER_CLIENTS overrides).
+    let desired: usize = std::env::var("PROGNET_CLUSTER_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    let budget = max_open_files().saturating_sub(128) / 6;
+    let clients = desired.min(budget.max(64));
+
+    let repo = Arc::new(Repository::new(fixture::executable_models("cluster-10k").unwrap()));
+    let cluster = Cluster::start(
+        repo.clone(),
+        ClusterConfig {
+            origins: 1,
+            edges: 2,
+            workers_per_origin: 4,
+            prefix_stages: 2,
+            fleet: FleetConfig {
+                write_burst: 256, // keep small bodies honestly paced
+                ..FleetConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
     let runtime = runtime_for(&repo, "dense3");
-    let scenario = Scenario {
-        model: "dense3".into(),
-        cohorts: vec![
-            Cohort::fixed("bulk-0.01", clients * 7 / 10, Some(0.01)),
-            Cohort::fixed("slow-0.005", clients * 2 / 10, Some(0.005)),
-            Cohort::fixed("burst-max", clients - clients * 7 / 10 - clients * 2 / 10, None),
-        ],
-    };
+
+    // warm both edge caches through the router before the herd arrives,
+    // so the offload measurement is over warm-edge serving
+    for _ in 0..4 {
+        let (mut s, _) = open_fetch(&cluster.addr(), &FetchRequest::new("dense3")).unwrap();
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+    }
+
+    let scenario = Scenario::uniform("dense3", clients, None);
     let opts = FleetOptions {
         connect_retries: 5,
+        // spread arrivals: ~1.25k connects/s at the full population
+        ramp: Duration::from_millis((clients as u64 / 5).max(200).min(8_000)),
         ..FleetOptions::default()
     };
-    // sample the active-connections gauge while the fleet runs
-    let stats = server.stats_arc();
-    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let monitor = {
-        let stats = stats.clone();
-        let stop = stop.clone();
-        std::thread::spawn(move || {
-            let mut peak = 0u64;
-            while !stop.load(Ordering::Relaxed) {
-                peak = peak.max(stats.active.load(Ordering::SeqCst));
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            peak
-        })
-    };
-    let report = run_fleet(server.addr(), &scenario, Some(runtime), &opts).unwrap();
-    stop.store(true, Ordering::Relaxed);
-    let peak_active = monitor.join().unwrap();
+    let report = run_fleet(cluster.addr(), &scenario, Some(runtime), &opts)
+        .unwrap()
+        .with_tiers(cluster.tiers());
 
     assert_eq!(report.clients(), clients);
     assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
@@ -365,15 +361,30 @@ fn loadgen_sustains_1000_concurrent_clients_with_zero_protocol_errors() {
     let ready = report.overall.model_ready.as_ref().unwrap();
     assert_eq!(ready.n, clients, "every client reached ModelReady");
     assert!(ready.p50 > 0.0 && ready.p99 >= ready.p50);
+
+    // per-tier accounting: the router saw the whole population, the warm
+    // edges offloaded the stage-prefix bytes from the origin
+    let router = report.tiers.iter().find(|t| t.name == "router").unwrap();
+    assert!(router.connections as usize >= clients);
+    let edge = report.tiers.iter().find(|t| t.name == "edge").unwrap();
+    assert!(edge.edge_hits as usize >= clients, "prefix head served per fetch");
+    let offload = edge.offload().expect("stage-prefix bytes were served");
     assert!(
-        peak_active as usize >= clients / 10,
-        "expected a genuinely concurrent population, peak active = {peak_active} of {clients}"
+        offload >= 0.5,
+        "warm edges must offload >= 50% of stage-prefix bytes from the origin, got {offload:.3}"
     );
-    assert!(server.stats().connections.load(Ordering::SeqCst) as usize >= clients);
-    // all sessions drained; the gauge returns to zero
+
+    // all tiers drained: every gauge returns to zero
     let t0 = Instant::now();
-    while server.stats().active.load(Ordering::SeqCst) != 0 {
-        assert!(t0.elapsed() < Duration::from_secs(5), "active gauge stuck");
+    let drained = |stats: &prognet::fleet::ServerStats| stats.active.load(Ordering::SeqCst) == 0;
+    loop {
+        let all = drained(cluster.router().stats())
+            && cluster.edges().iter().all(|e| drained(e.stats()))
+            && cluster.origin_stats().iter().all(|s| drained(s));
+        if all {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "active gauge stuck");
         std::thread::sleep(Duration::from_millis(10));
     }
 }

@@ -1,19 +1,18 @@
 //! End-to-end progressive pipeline over real sockets + real inference:
 //! the full Fig 1 flow, including failure injection.
 //!
-//! Drives the deprecated `ProgressiveClient` wrapper on purpose: these
-//! tests double as the equivalence suite proving the wrapper's behaviour
-//! over `client::session::ProgressiveSession` matches the original
-//! blocking API (the session itself is covered by `session_events.rs` /
-//! `session_serving.rs`).
-#![allow(deprecated)]
+//! Drives `client::session::ProgressiveSession` directly — the one
+//! blocking entry point since the deprecated `ProgressiveClient` wrapper
+//! was removed. Event-level behaviour is covered by `session_events.rs` /
+//! `session_serving.rs`; these tests check the run-to-completion
+//! outcomes: accuracy curves, mode equivalence, policies, and corruption
+//! handling.
 
 use std::sync::Arc;
 
-use prognet::client::{InferencePolicy, ProgressiveClient, ProgressiveOptions};
+use prognet::client::{ExecMode, InferencePolicy, ProgressiveSession, SessionOutcome};
 use prognet::eval::{accuracy, EvalSet};
 use prognet::models::Registry;
-use prognet::quant::Schedule;
 use prognet::runtime::{Engine, ModelSession};
 use prognet::server::service::ServerConfig;
 use prognet::server::{FetchRequest, Repository, Server};
@@ -45,6 +44,31 @@ fn ctx(model: &str) -> Option<Ctx> {
     })
 }
 
+/// Run a session to completion: the old `ProgressiveClient::fetch_and_infer`
+/// calling convention, expressed on the builder.
+fn fetch_and_infer(
+    addr: std::net::SocketAddr,
+    request: FetchRequest,
+    mode: ExecMode,
+    policy: InferencePolicy,
+    session: &ModelSession,
+    images: &[f32],
+    n: usize,
+) -> anyhow::Result<SessionOutcome> {
+    let model = request.model.clone();
+    let report = ProgressiveSession::builder(&model)
+        .addr(addr)
+        .request(request)
+        .mode(mode)
+        .policy(policy)
+        .resume_retries(2)
+        .runtime(&model, Arc::new(session.clone()))
+        .workload(images.to_vec(), n)
+        .start()?
+        .run()?;
+    Ok(report.into_outcome())
+}
+
 #[test]
 fn accuracy_curve_through_real_pipeline() {
     // The paper's qualitative Fig 5 claim, measured: accuracy of the
@@ -53,15 +77,16 @@ fn accuracy_curve_through_real_pipeline() {
     let Some(c) = ctx("cnn") else { return };
     let n = 32;
     let images = c.eval.image_batch(n).to_vec();
-    let client = ProgressiveClient::new(c.server.addr());
-    let out = client
-        .fetch_and_infer(
-            &ProgressiveOptions::concurrent("cnn"),
-            &c.session,
-            &images,
-            n,
-        )
-        .unwrap();
+    let out = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("cnn"),
+        ExecMode::Concurrent,
+        InferencePolicy::EveryStage,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
     assert_eq!(out.results.len(), 8);
     let accs: Vec<f64> = out
         .results
@@ -86,24 +111,93 @@ fn serial_and_concurrent_agree_on_outputs() {
     let Some(c) = ctx("mlp") else { return };
     let n = 4;
     let images = c.eval.image_batch(n).to_vec();
-    let client = ProgressiveClient::new(c.server.addr());
-    let a = client
-        .fetch_and_infer(
-            &ProgressiveOptions::concurrent("mlp"),
-            &c.session,
-            &images,
-            n,
-        )
-        .unwrap();
-    let b = client
-        .fetch_and_infer(&ProgressiveOptions::serial("mlp"), &c.session, &images, n)
-        .unwrap();
+    let a = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("mlp"),
+        ExecMode::Concurrent,
+        InferencePolicy::EveryStage,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
+    let b = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("mlp"),
+        ExecMode::Serial,
+        InferencePolicy::EveryStage,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
     assert_eq!(a.results.len(), b.results.len());
     for (ra, rb) in a.results.iter().zip(&b.results) {
         assert_eq!(ra.cum_bits, rb.cum_bits);
         for (x, y) in ra.output.data.iter().zip(&rb.output.data) {
             assert!((x - y).abs() < 1e-5, "stage {}: {x} vs {y}", ra.stage);
         }
+    }
+    // stage outputs are ordered in time within each mode
+    for w in b.results.windows(2) {
+        assert!(w[0].t_output_ready <= w[1].t_output_ready);
+    }
+}
+
+#[test]
+fn final_only_policy_runs_once() {
+    let Some(c) = ctx("mlp") else { return };
+    let n = 1;
+    let images = c.eval.image_batch(n).to_vec();
+    let out = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("mlp"),
+        ExecMode::Concurrent,
+        InferencePolicy::FinalOnly,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
+    assert_eq!(out.results.len(), 1);
+    assert_eq!(out.results[0].cum_bits, 16);
+}
+
+#[test]
+fn final_stage_matches_direct_inference() {
+    let Some(c) = ctx("mlp") else { return };
+    let n = 1;
+    let images = c.eval.image_batch(n).to_vec();
+    let out = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("mlp"),
+        ExecMode::Concurrent,
+        InferencePolicy::EveryStage,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
+    // Direct inference with fully dequantized weights == last stage.
+    let reg = Registry::open_default().unwrap();
+    let m = reg.get("mlp").unwrap();
+    let flat = m.load_weights().unwrap();
+    use prognet::quant::{quantize, DequantParams, QuantParams, K};
+    let mut deq = vec![0f32; flat.len()];
+    for t in &m.tensors {
+        let seg = &flat[t.offset..t.offset + t.numel];
+        let qp = QuantParams::from_data(seg, K);
+        let q = quantize::quantize(seg, &qp);
+        prognet::quant::dequantize_into(
+            &q,
+            DequantParams::new(&qp, K),
+            &mut deq[t.offset..t.offset + t.numel],
+        );
+    }
+    let direct = c.session.infer(&images, n, &deq).unwrap();
+    let last = &out.results.last().unwrap().output;
+    for (a, b) in direct.data.iter().zip(&last.data) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
     }
 }
 
@@ -115,12 +209,16 @@ fn latest_only_policy_skips_under_slow_inference() {
     let Some(c) = ctx("cnn") else { return };
     let n = 32;
     let images = c.eval.image_batch(n).to_vec();
-    let client = ProgressiveClient::new(c.server.addr());
-    let mut opts = ProgressiveOptions::concurrent("cnn");
-    opts.policy = InferencePolicy::LatestOnly;
-    let out = client
-        .fetch_and_infer(&opts, &c.session, &images, n)
-        .unwrap();
+    let out = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("cnn"),
+        ExecMode::Concurrent,
+        InferencePolicy::LatestOnly,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
     assert!(!out.results.is_empty());
     assert_eq!(out.results.last().unwrap().cum_bits, 16);
     // results remain strictly increasing in bits
@@ -136,12 +234,16 @@ fn shaped_link_first_output_before_transfer_completes() {
     let Some(c) = ctx("mlp") else { return };
     let n = 1;
     let images = c.eval.image_batch(n).to_vec();
-    let client = ProgressiveClient::new(c.server.addr());
-    let mut opts = ProgressiveOptions::concurrent("mlp");
-    opts.request = FetchRequest::new("mlp").with_speed(2.0); // ~0.8 s transfer
-    let out = client
-        .fetch_and_infer(&opts, &c.session, &images, n)
-        .unwrap();
+    let out = fetch_and_infer(
+        c.server.addr(),
+        FetchRequest::new("mlp").with_speed(2.0), // ~0.8 s transfer
+        ExecMode::Concurrent,
+        InferencePolicy::EveryStage,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap();
     let first = out.results.first().unwrap();
     assert!(
         first.t_output_ready < out.t_transfer_complete * 0.55,
@@ -200,15 +302,16 @@ fn corrupted_stream_fails_cleanly() {
 
     let n = 1;
     let images = c.eval.image_batch(n).to_vec();
-    let client = ProgressiveClient::new(proxy_addr);
-    let err = client
-        .fetch_and_infer(
-            &ProgressiveOptions::concurrent("mlp"),
-            &c.session,
-            &images,
-            n,
-        )
-        .unwrap_err();
+    let err = fetch_and_infer(
+        proxy_addr,
+        FetchRequest::new("mlp"),
+        ExecMode::Concurrent,
+        InferencePolicy::EveryStage,
+        &c.session,
+        &images,
+        n,
+    )
+    .unwrap_err();
     let msg = format!("{err:#}");
     assert!(
         msg.contains("CRC") || msg.contains("crc") || msg.contains("closed"),

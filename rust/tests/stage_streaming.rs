@@ -3,16 +3,16 @@
 //! fetches, the split/reassembly property, resume at stage boundaries,
 //! and pipelined multi-model delivery.
 //!
-//! The multiplex tests drive the deprecated `MultiplexClient` wrapper on
-//! purpose — they prove the wrapper over the multiplexed
-//! `client::session::ProgressiveSession` delivers byte-identical models.
-#![allow(deprecated)]
+//! The multiplex tests drive
+//! `client::session::ProgressiveSession::multiplex` — one keep-alive
+//! connection, stage-range requests interleaved across models by
+//! weighted-fair priority — and prove it delivers byte-identical models.
 
 use std::io::Read;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use prognet::client::{Assembler, MultiplexClient, MultiplexModel};
+use prognet::client::{Assembler, ProgressiveSession};
 use prognet::format::{FrameParser, ParserEvent, PnetReader};
 use prognet::quant::Schedule;
 use prognet::server::service::open_fetch;
@@ -162,12 +162,13 @@ fn resume_at_stage_boundary_matches_uninterrupted() {
 #[test]
 fn interleaved_models_share_one_connection() {
     let (server, repo) = synthetic_server("interleave-e2e");
-    let client = MultiplexClient::new(server.addr());
-    let out = client
-        .fetch_interleaved(&[
-            MultiplexModel::new("alpha").with_priority(2.0),
-            MultiplexModel::new("beta"),
-        ])
+    let out = ProgressiveSession::multiplex()
+        .addr(server.addr())
+        .add_model(FetchRequest::new("alpha"), 2.0)
+        .add_model(FetchRequest::new("beta"), 1.0)
+        .start()
+        .unwrap()
+        .run()
         .unwrap();
     assert_eq!(server.stats().connections.load(Ordering::SeqCst), 1);
     assert_eq!(out.requests, 2 + 7 + 7);
@@ -186,6 +187,32 @@ fn interleaved_models_share_one_connection() {
     }
     // single-flight on the server side: one encode per (model, schedule)
     assert_eq!(repo.encode_count(), 2);
+}
+
+/// Weighted-fair priority shapes the interleaved delivery order: the
+/// high-priority model completes first even when requested second.
+#[test]
+fn priority_shapes_delivery_order() {
+    let (server, _repo) = synthetic_server("interleave-prio");
+    let out = ProgressiveSession::multiplex()
+        .addr(server.addr())
+        .add_model(FetchRequest::new("alpha"), 0.25)
+        .add_model(FetchRequest::new("beta"), 4.0)
+        .start()
+        .unwrap()
+        .run()
+        .unwrap();
+    let beta_done = out.order.iter().rposition(|(m, _)| m == "beta").unwrap();
+    let alpha_done = out.order.iter().rposition(|(m, _)| m == "alpha").unwrap();
+    assert!(beta_done < alpha_done, "{:?}", out.order);
+    // stages genuinely interleave: a late beta stage lands before the
+    // last alpha stage
+    let beta_first_late = out
+        .order
+        .iter()
+        .position(|(m, s)| m == "beta" && *s >= 1)
+        .unwrap();
+    assert!(beta_first_late < alpha_done, "{:?}", out.order);
 }
 
 /// Ragged-width schedules stream and reassemble through the full client
