@@ -15,6 +15,9 @@
 //!   `// lint:end-hot-path` markers.
 //! - `ordering-relaxed-shared` — `Ordering::Relaxed` requires an
 //!   explicit waiver explaining why no ordering is needed.
+//! - `span-not-closed` — a span guard from `obs::begin`/`begin_child`
+//!   must be bound, not discarded where it is made (RAII ends the span
+//!   immediately, so a discarded guard records a zero-length span).
 //!
 //! Waivers: `// lint:allow <rule>` on the offending line, or a
 //! `<rule> <path>` entry in `lint-allow.txt` (regenerate with
@@ -27,12 +30,13 @@
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-const RULES: [&str; 5] = [
+const RULES: [&str; 6] = [
     "direct-sync-import",
     "unsafe-outside-allowlist",
     "wall-clock-in-protocol",
     "alloc-in-hot-path",
     "ordering-relaxed-shared",
+    "span-not-closed",
 ];
 
 /// Path prefixes whose non-test code is "protocol code" for the
@@ -144,6 +148,24 @@ fn is_protocol_file(file: &str) -> bool {
     PROTOCOL_PREFIXES.iter().any(|p| file.starts_with(p))
 }
 
+/// A span guard discarded at birth. Two line shapes, both of which drop
+/// the guard — and therefore end the span — on the same statement:
+/// a bare statement-position begin call (`obs::begin("x");` — no `=`
+/// anywhere, so nothing binds the result), and an explicit `let _ =`
+/// throwaway. Guards bound to names (including `_sp`) live to scope end
+/// and are fine.
+fn span_discarded(code: &str) -> bool {
+    let has_begin = code.contains("obs::begin") || code.contains("span::begin");
+    if !has_begin {
+        return false;
+    }
+    let t = code.trim();
+    if t.starts_with("let _ =") {
+        return true;
+    }
+    t.ends_with(';') && !t.contains('=')
+}
+
 fn scan_file(file: &str, content: &str, allow: &AllowList) -> Vec<Violation> {
     let mut out = Vec::new();
     let mut in_hot_path = false;
@@ -203,6 +225,9 @@ fn scan_file(file: &str, content: &str, allow: &AllowList) -> Vec<Violation> {
         }
         if !in_tests && code.contains("Ordering::Relaxed") {
             push("ordering-relaxed-shared", lineno, raw);
+        }
+        if !in_tests && span_discarded(code) {
+            push("span-not-closed", lineno, raw);
         }
     }
     out
@@ -376,6 +401,42 @@ mod tests {
         assert_eq!(scan("src/foo.rs", src), vec!["ordering-relaxed-shared"]);
         let waived = "x.load(Ordering::Relaxed); // lint:allow ordering-relaxed-shared\n";
         assert!(scan("src/foo.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn span_guard_discards_are_flagged() {
+        assert_eq!(
+            scan("src/foo.rs", "    obs::begin(\"client.request\");\n"),
+            vec!["span-not-closed"]
+        );
+        assert_eq!(
+            scan("src/foo.rs", "    crate::obs::begin_child(\"edge.cache\", ctx);\n"),
+            vec!["span-not-closed"]
+        );
+        assert_eq!(
+            scan("src/foo.rs", "    let _ = obs::begin(\"x\");\n"),
+            vec!["span-not-closed"]
+        );
+        // a map that throws the guards away is still a discard
+        assert_eq!(
+            scan("src/foo.rs", "    req.trace.map(|ctx| obs::begin_child(\"n\", ctx));\n"),
+            vec!["span-not-closed"]
+        );
+        // bound guards (even `_sp`) and expression-position begins are fine
+        assert!(scan("src/foo.rs", "    let sp = obs::begin(\"x\");\n").is_empty());
+        assert!(scan("src/foo.rs", "    let _sp = obs::begin(\"x\");\n").is_empty());
+        assert!(scan(
+            "src/foo.rs",
+            "    let s = req.trace.map(|ctx| obs::begin_child(\"n\", ctx));\n"
+        )
+        .is_empty());
+        assert!(
+            scan("src/foo.rs", "        span.map(|ctx| obs::begin_child(\"edge.relay\", ctx))\n")
+                .is_empty()
+        );
+        // test modules may discard guards deliberately
+        let tested = "#[cfg(test)]\nmod tests {\n    fn f() { obs::begin(\"t\"); }\n}\n";
+        assert!(scan("src/foo.rs", tested).is_empty());
     }
 
     #[test]

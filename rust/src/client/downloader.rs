@@ -13,6 +13,7 @@ use crate::util::sync::clock;
 use anyhow::Result;
 
 use crate::format::{FrameParser, ParserEvent, PnetManifest};
+use crate::obs;
 use crate::server::proto::FetchRequest;
 use crate::server::service::open_fetch;
 
@@ -58,7 +59,14 @@ impl Downloader {
         if let Some((a, _)) = req.stages {
             anyhow::ensure!(a == 0, "initial fetch cannot start at stage {a}; use resume_at_stage");
         }
+        // The download loop may run on its own thread, so the span parent
+        // comes from the request's wire context, not the TLS stack.
+        let conn_span = req.trace.map(|ctx| obs::begin_child("client.connect", ctx));
         let (stream, resp) = open_fetch(addr, req)?;
+        if let Some(mut sp) = conn_span {
+            sp.attr("total", resp.total);
+            sp.end();
+        }
         // The server may clamp the requested window (degrade-mode load
         // shedding under `fleet::admission`); the echoed range in the
         // status frame is authoritative, so build the parser from it and
@@ -118,7 +126,12 @@ impl Downloader {
         let wire_req = req
             .clone()
             .with_stages(start_stage as u32, stages as u32);
+        let conn_span = wire_req.trace.map(|ctx| obs::begin_child("client.connect", ctx));
         let (stream, resp) = open_fetch(addr, &wire_req)?;
+        if let Some(mut sp) = conn_span {
+            sp.attr("resume_stage", start_stage);
+            sp.end();
+        }
         Ok(Self {
             stream,
             parser,
@@ -223,7 +236,12 @@ impl Downloader {
             .clone()
             .with_offset(0)
             .with_stages(stage as u32, end as u32);
+        let conn_span = req.trace.map(|ctx| obs::begin_child("client.connect", ctx));
         let (stream, resp) = open_fetch(&self.addr, &req)?;
+        if let Some(mut sp) = conn_span {
+            sp.attr("resume_stage", stage);
+            sp.end();
+        }
         // A stage-0 resume is an *initial* window again, so a degraded
         // server may clamp it; the echoed range stays authoritative here
         // too (mid-container resumes pass through unclamped).

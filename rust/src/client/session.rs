@@ -89,6 +89,7 @@ use crate::coordinator::scheduler::{interleave_stages, InterleaveModel};
 use crate::format::header::PnetManifest;
 use crate::format::{FrameParser, ParserEvent, PnetReader};
 use crate::metrics::{EventKind, Timeline};
+use crate::obs::{self, TraceCtx};
 use crate::quant::Schedule;
 use crate::runtime::stream::LayerGate;
 use crate::runtime::{ApproxModel, InferOutput, ModelSession};
@@ -789,6 +790,10 @@ struct StageCtx<'a> {
     order: Vec<(String, usize)>,
     resumed: usize,
     reconnects: usize,
+    /// the session's `client.request` span context, if tracing is active
+    trace: Option<TraceCtx>,
+    /// span covering the currently transferring stage
+    cur_stage: Option<obs::SpanGuard>,
 }
 
 impl StageCtx<'_> {
@@ -800,7 +805,7 @@ impl StageCtx<'_> {
     /// when a streaming gate is attached, validate the container's layer
     /// annotation against it — a missing annotation would silently never
     /// publish and leave the executor blocked until close.
-    fn make_assembler(&self, m: PnetManifest) -> Result<Assembler> {
+    fn make_assembler(&mut self, m: PnetManifest) -> Result<Assembler> {
         let asm = new_assembler(m, self.approx.is_some(), self.policy, self.gate.is_some());
         if let Some(g) = self.gate {
             anyhow::ensure!(
@@ -815,6 +820,10 @@ impl StageCtx<'_> {
                 g.layers(),
                 asm.layer_count()
             );
+        }
+        // the manifest opens stage 0's transfer window
+        if self.cur_stage.is_none() {
+            self.cur_stage = self.trace.map(|ctx| obs::begin_child("client.stage", ctx));
         }
         Ok(asm)
     }
@@ -841,9 +850,14 @@ impl StageCtx<'_> {
     /// Timeline + `StageComplete` bookkeeping for a freshly completed
     /// stage (no reconstruction yet).
     fn note_stage(&mut self, asm: &Assembler, done: usize, t: f64) -> Result<()> {
+        if let Some(mut sp) = self.cur_stage.take() {
+            sp.attr("stage", done);
+            sp.end();
+        }
         self.timeline.push(t, done, EventKind::StageTransferDone);
         if done + 1 < asm.manifest().schedule.stages() {
             self.timeline.push(t, done + 1, EventKind::StageTransferStart);
+            self.cur_stage = self.trace.map(|ctx| obs::begin_child("client.stage", ctx));
         }
         self.order.push((self.model.clone(), done));
         self.emit(SessionEvent::StageComplete {
@@ -864,11 +878,23 @@ impl StageCtx<'_> {
         let stage = asm.stages_complete() - 1;
         let t0 = self.start.elapsed().as_secs_f64();
         self.timeline.push(t0, stage, EventKind::ReconstructStart);
+        let recon_span = self.trace.map(|ctx| {
+            let mut sp = obs::begin_child("client.reconstruct", ctx);
+            sp.attr("stage", stage);
+            sp
+        });
         let (cum_bits, t1) = publish_stage(self.q, approx, &self.model, asm, self.start)?;
+        drop(recon_span);
         self.timeline.push(t1, stage, EventKind::ReconstructDone);
         if let Some(w) = self.workload {
             self.timeline.push(t1, stage, EventKind::InferStart);
+            let infer_span = self.trace.map(|ctx| {
+                let mut sp = obs::begin_child("client.infer", ctx);
+                sp.attr("stage", stage);
+                sp
+            });
             let out = approx.infer(&w.images, w.n)?;
+            drop(infer_span);
             let t2 = self.start.elapsed().as_secs_f64();
             self.timeline.push(t2, stage, EventKind::InferDone);
             self.timeline.push(t2, stage, EventKind::OutputReady);
@@ -1156,8 +1182,20 @@ fn drive_single(
         multiplex: _,
         layer_gate,
     } = cfg;
-    let req = specs.into_iter().next().expect("one spec").request;
+    let mut req = specs.into_iter().next().expect("one spec").request;
     let model = req.model.clone();
+    // Root span for the whole request. With tracing disabled (the
+    // default) the guard is disarmed and the wire frame stays
+    // byte-identical to an untraced v1 request.
+    let mut root_span = obs::begin("client.request");
+    root_span.attr("model", &model);
+    let trace = root_span.armed().then(|| root_span.ctx());
+    if let Some(tc) = trace {
+        req = req.with_trace(tc);
+        if let Some(g) = &layer_gate {
+            g.set_trace(tc);
+        }
+    }
     let mut ctx = StageCtx {
         model: model.clone(),
         policy,
@@ -1171,6 +1209,8 @@ fn drive_single(
         order: Vec::new(),
         resumed: 0,
         reconnects: 0,
+        trace,
+        cur_stage: None,
     };
 
     let cache = match &cache_dir {
@@ -1336,6 +1376,7 @@ fn drive_single(
             crate::log_warn!("cache promote failed: {e:#}");
         }
     }
+    root_span.attr("bytes", bytes.saturating_sub(seeded));
     // `bytes` from the downloader counts the cached prefix; the summary
     // reports genuine network traffic only
     ctx.finish_report(

@@ -36,6 +36,7 @@ use crate::util::sync::{Arc, Clock};
 use std::time::{Duration, Instant};
 
 use crate::netsim::{LinkSpec, TokenBucket};
+use crate::obs;
 use crate::quant::Schedule;
 use crate::server::proto::{self, FetchRequest, FetchResponse};
 use crate::server::repository::{EncodedContainer, Repository};
@@ -136,6 +137,11 @@ pub struct Conn<S> {
     /// clock's reading).
     clock: Clock,
     last_progress: Instant,
+    /// Span covering the in-flight request (traced requests only). RAII:
+    /// held here so every exit path — completion, eviction, error —
+    /// closes it; explicitly ended (with a bytes attr) when a response
+    /// finishes, so keep-alive requests get one span each.
+    req_span: Option<obs::SpanGuard>,
     /// true when this conn holds an admission slot to release on close
     pub holds_slot: bool,
 }
@@ -153,6 +159,7 @@ impl<S: Read + Write> Conn<S> {
             served_any: false,
             clock,
             last_progress,
+            req_span: None,
             holds_slot: false,
         }
     }
@@ -292,6 +299,7 @@ impl<S: Read + Write> Conn<S> {
                 Flow::Continue => continue,
                 Flow::Blocked => return Step::Open,
                 Flow::End(step) => {
+                    self.req_span = None; // close the request span now, not at reactor teardown
                     self.state = State::Closed;
                     return step;
                 }
@@ -387,11 +395,45 @@ impl<S: Read + Write> Conn<S> {
             Err(e) => return Flow::End(Step::Failed(format!("bad request: {e:#}"))),
         };
         stats.requests.fetch_add(1, Ordering::SeqCst);
+        let mut req_span = req.trace.map(|ctx| obs::begin_child("origin.request", ctx));
+        if let Some(sp) = req_span.as_mut() {
+            sp.attr("model", &req.model);
+        }
+        self.req_span = req_span;
+        if let Some(verb) = req.verb.as_deref() {
+            // non-fetch verbs: the whole reply (status frame + text body)
+            // is unpaced and rides in `head`
+            match verb {
+                "stats" => {
+                    let body = obs::exposition(&[("origin", stats)], &[]).into_bytes();
+                    let resp = FetchResponse {
+                        total: body.len() as u64,
+                        remaining: body.len() as u64,
+                        container_len: body.len() as u64,
+                        stages: None,
+                    };
+                    let mut head = Vec::new();
+                    proto::write_ok(&mut head, &resp).expect("status frame into Vec");
+                    head.extend_from_slice(&body);
+                    self.pacer = None;
+                    self.state = State::Write {
+                        head,
+                        head_sent: 0,
+                        body: None,
+                        body_sent: 0,
+                        keep_alive: req.keep_alive,
+                        close_error: None,
+                    };
+                }
+                other => self.enter_error_reply(&format!("unknown verb '{other}'")),
+            }
+            return Flow::Continue;
+        }
         let schedule = req
             .schedule
             .clone()
             .unwrap_or_else(|| cfg.default_schedule.clone());
-        let container = match repo.container(&req.model, &schedule) {
+        let container = match repo.container_traced(&req.model, &schedule, req.trace) {
             Ok(c) => c,
             Err(e) => {
                 self.enter_error_reply(&format!("{e}"));
@@ -535,6 +577,10 @@ impl<S: Read + Write> Conn<S> {
         // lint:end-hot-path
         // response complete
         let _ = self.stream.flush();
+        if let Some(mut sp) = self.req_span.take() {
+            sp.attr("bytes", *body_sent);
+            sp.end();
+        }
         if let Some(msg) = close_error.take() {
             return Flow::End(Step::Failed(msg));
         }
@@ -886,6 +932,43 @@ mod tests {
             Some(Step::Failed(msg)) => assert!(msg.contains("stalled"), "{msg}"),
             other => panic!("expected virtual-time eviction, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn stats_verb_returns_metrics_exposition() {
+        let repo = repo("conn-stats");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream
+            .push_input(&FetchRequest::new("_").with_verb("stats").encode());
+        assert_eq!(conn.on_ready(&repo, &test_cfg(), &stats), Step::Done);
+        let (status, body) = split_status(&conn.stream().output);
+        assert_eq!(status.get("status").unwrap().as_str().unwrap(), "ok");
+        let text = std::str::from_utf8(body).unwrap();
+        // the verb itself counts as a request, and every counter is present
+        assert!(text.contains("prognet_requests{tier=\"origin\"} 1"), "{text}");
+        for c in ["prognet_connections", "prognet_bytes_sent", "prognet_drained"] {
+            assert!(text.contains(c), "missing {c} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn unknown_verb_is_an_error_reply() {
+        let repo = repo("conn-verb");
+        let stats = ServerStats::default();
+        let mut conn = Conn::new(MockStream::new());
+        conn.stream
+            .push_input(&FetchRequest::new("_").with_verb("reboot").encode());
+        let step = conn.on_ready(&repo, &test_cfg(), &stats);
+        assert!(matches!(step, Step::Failed(_)), "{step:?}");
+        let (status, _) = split_status(&conn.stream().output);
+        assert_eq!(status.get("status").unwrap().as_str().unwrap(), "err");
+        assert!(status
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("unknown verb"));
     }
 
     #[test]

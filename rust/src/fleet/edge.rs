@@ -48,6 +48,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::format::{validated_prefix, FrameParser, StageIndex};
 use crate::netsim::{LinkSpec, ThrottledWriter};
+use crate::obs::{self, TraceCtx};
 use crate::server::proto::{self, FetchRequest, FetchResponse};
 use crate::server::service::{open_fetch, request_on};
 use crate::util::flight::SingleFlight;
@@ -212,7 +213,27 @@ fn serve_conn(mut stream: TcpStream, inner: &Inner) -> Result<()> {
         };
         inner.stats.requests.fetch_add(1, Ordering::SeqCst);
         let keep_alive = req.keep_alive;
-        match serve_request(&mut stream, inner, &req) {
+        // per-request span, parented on the client's wire-carried context;
+        // RAII closes it on every path out of this iteration
+        let mut req_span = req.trace.map(|ctx| obs::begin_child("edge.request", ctx));
+        if let Some(sp) = req_span.as_mut() {
+            sp.attr("model", &req.model);
+        }
+        let span_ctx = req_span.as_ref().map(|sp| sp.ctx());
+        if let Some(verb) = req.verb.as_deref() {
+            match verb {
+                "stats" => serve_stats(&mut stream, &inner.stats)?,
+                other => {
+                    let _ = proto::write_err(&mut stream, &format!("unknown verb '{other}'"));
+                    bail!("unknown verb '{other}'");
+                }
+            }
+            if !keep_alive {
+                return Ok(());
+            }
+            continue;
+        }
+        match serve_request(&mut stream, inner, &req, span_ctx) {
             Ok(()) => {}
             Err(e) => {
                 // best effort: the client may already be gone
@@ -226,12 +247,33 @@ fn serve_conn(mut stream: TcpStream, inner: &Inner) -> Result<()> {
     }
 }
 
-fn serve_request(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> Result<()> {
+/// Answer a `stats` verb with the metrics exposition as the raw body.
+fn serve_stats(stream: &mut TcpStream, stats: &ServerStats) -> Result<()> {
+    let body = obs::exposition(&[("edge", stats)], &[]).into_bytes();
+    proto::write_ok(
+        stream,
+        &FetchResponse {
+            total: body.len() as u64,
+            remaining: body.len() as u64,
+            container_len: body.len() as u64,
+            stages: None,
+        },
+    )?;
+    stream.write_all(&body)?;
+    Ok(())
+}
+
+fn serve_request(
+    stream: &mut TcpStream,
+    inner: &Inner,
+    req: &FetchRequest,
+    span: Option<TraceCtx>,
+) -> Result<()> {
     // one retry after invalidating a stale entry (origin re-encoded)
-    match serve_attempt(stream, inner, req) {
+    match serve_attempt(stream, inner, req, span) {
         Err(e) if e.to_string().contains(STALE_MARKER) => {
             inner.cache.invalidate(&cache_key(req));
-            serve_attempt(stream, inner, req)
+            serve_attempt(stream, inner, req, span)
         }
         other => other,
     }
@@ -248,11 +290,16 @@ fn cache_key(req: &FetchRequest) -> Key {
     )
 }
 
-fn serve_attempt(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> Result<()> {
+fn serve_attempt(
+    stream: &mut TcpStream,
+    inner: &Inner,
+    req: &FetchRequest,
+    span: Option<TraceCtx>,
+) -> Result<()> {
     let entry = inner
         .cache
         .get_or_compute(cache_key(req), || {
-            fill_prefix(inner, req).map_err(|e| format!("{e:#}"))
+            fill_prefix(inner, req, span).map_err(|e| format!("{e:#}"))
         })
         .map_err(|msg| anyhow::anyhow!(msg))?;
 
@@ -267,13 +314,22 @@ fn serve_attempt(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> R
     let tail = cached_upto..sel.end;
 
     // open the origin tail *before* the status frame so a dead origin
-    // becomes a clean error frame, not a truncated body
+    // becomes a clean error frame, not a truncated body. The relay span
+    // covers the whole phase — origin connect through the last tail byte.
+    let mut relay_span = if tail.is_empty() {
+        None
+    } else {
+        span.map(|ctx| obs::begin_child("edge.relay", ctx))
+    };
     let mut origin_tail = if tail.is_empty() {
         None
     } else {
         let mut treq = req.clone().with_offset((tail.start - sel.start) as u64);
         treq.speed_mbps = inner.cfg.origin_speed_mbps;
         treq.keep_alive = false;
+        // re-parent the origin leg under the relay span so the origin's
+        // own request span nests inside this phase in the waterfall
+        treq.trace = relay_span.as_ref().map(|sp| sp.ctx()).or(req.trace);
         let origin = pick_origin(inner, &req.model)?;
         let (tstream, tresp) = open_fetch(&origin, &treq).context("edge->origin tail")?;
         if tresp.container_len != entry.container_len {
@@ -313,12 +369,16 @@ fn serve_attempt(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> R
     };
 
     if !cache_part.is_empty() {
+        let mut cache_span = span.map(|ctx| obs::begin_child("edge.cache", ctx));
         out.write_all(&entry.bytes[cache_part.clone()])?;
         inner
             .stats
             .cache_bytes
             .fetch_add(cache_part.len() as u64, Ordering::SeqCst);
         inner.stats.edge_hits.fetch_add(1, Ordering::SeqCst);
+        if let Some(sp) = cache_span.as_mut() {
+            sp.attr("bytes", cache_part.len());
+        }
     }
     if let Some(tstream) = origin_tail.as_mut() {
         tstream.set_read_timeout(Some(inner.cfg.io_timeout))?;
@@ -337,6 +397,10 @@ fn serve_attempt(stream: &mut TcpStream, inner: &Inner, req: &FetchRequest) -> R
             .relay_bytes
             .fetch_add(tail.len() as u64, Ordering::SeqCst);
         inner.stats.edge_misses.fetch_add(1, Ordering::SeqCst);
+        if let Some(mut sp) = relay_span.take() {
+            sp.attr("bytes", tail.len());
+            sp.end();
+        }
     }
     out.flush()?;
     drop(out);
@@ -358,11 +422,20 @@ fn pick_origin(inner: &Inner, model: &str) -> Result<SocketAddr> {
 /// Fetch and validate stages `[0, k)` from the origin (single-flight
 /// leader path). Two requests on one keep-alive connection: `[0, 1)` to
 /// learn the manifest, then `[1, k)` for the rest of the prefix.
-fn fill_prefix(inner: &Inner, req: &FetchRequest) -> Result<Arc<PrefixEntry>> {
+fn fill_prefix(
+    inner: &Inner,
+    req: &FetchRequest,
+    span: Option<TraceCtx>,
+) -> Result<Arc<PrefixEntry>> {
+    // fills are single-flight: the span (and hence the trace) belongs to
+    // the request that won the flight and actually performed the fill
+    let mut fill_span = span.map(|ctx| obs::begin_child("edge.fill", ctx));
+    let fill_ctx = fill_span.as_ref().map(|sp| sp.ctx());
     let origin = pick_origin(inner, &req.model)?;
     let mut first = FetchRequest::new(&req.model).with_stages(0, 1).with_keep_alive(true);
     first.schedule = req.schedule.clone();
     first.speed_mbps = inner.cfg.origin_speed_mbps;
+    first.trace = fill_ctx;
     let (mut stream, resp) = open_fetch(&origin, &first).context("edge->origin fill")?;
     if resp.stages != Some((0, 1)) {
         bail!("origin rewrote fill range to {:?}", resp.stages);
@@ -385,6 +458,7 @@ fn fill_prefix(inner: &Inner, req: &FetchRequest) -> Result<Arc<PrefixEntry>> {
         let mut rest = FetchRequest::new(&req.model).with_stages(1, k);
         rest.schedule = req.schedule.clone();
         rest.speed_mbps = inner.cfg.origin_speed_mbps;
+        rest.trace = fill_ctx;
         let rresp = request_on(&mut stream, &rest).context("edge->origin fill tail")?;
         if rresp.stages != Some((1, k)) {
             bail!("origin rewrote fill range to {:?}", rresp.stages);
@@ -415,6 +489,10 @@ fn fill_prefix(inner: &Inner, req: &FetchRequest) -> Result<Arc<PrefixEntry>> {
         );
     }
     let prefix_len = bytes.len();
+    if let Some(sp) = fill_span.as_mut() {
+        sp.attr("bytes", prefix_len);
+        sp.attr("stages", k);
+    }
     inner.stats.origin_fills.fetch_add(1, Ordering::SeqCst);
     inner
         .stats

@@ -32,6 +32,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs;
 use crate::server::proto;
 use crate::util::json::Json;
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -260,12 +261,20 @@ fn proxy_conn(mut client: TcpStream, inner: &Inner) -> Result<()> {
     client.set_read_timeout(Some(inner.cfg.io_timeout))?;
     let mut upstream: Option<(TcpStream, BackendLease)> = None;
     loop {
-        let req = match proto::read_request(&mut client) {
+        let mut req = match proto::read_request(&mut client) {
             Ok(req) => req,
             // EOF between requests (or a health probe) is a clean close
             Err(_) => return Ok(()),
         };
         inner.stats.requests.fetch_add(1, Ordering::SeqCst);
+        // per-request span, parented on the client's wire context; the
+        // forwarded frame is re-parented under it so the backend's span
+        // nests inside the router hop in the stitched waterfall
+        let mut req_span = req.trace.map(|ctx| obs::begin_child("router.request", ctx));
+        if let Some(sp) = req_span.as_mut() {
+            sp.attr("model", &req.model);
+            req.trace = Some(sp.ctx());
+        }
 
         if upstream.is_none() {
             let Some(idx) = inner.ring.place_where(&req.model, |i| inner.placeable(i)) else {
@@ -282,7 +291,8 @@ fn proxy_conn(mut client: TcpStream, inner: &Inner) -> Result<()> {
         }
         let (up, _lease) = upstream.as_mut().expect("upstream just placed");
 
-        // forward the request frame verbatim and relay the status frame
+        // forward the request frame (byte-identical except for the
+        // re-parented trace ids) and relay the status frame
         up.write_all(&req.encode())?;
         up.flush()?;
         let frame = proto::read_frame(up).context("upstream status frame")?;
@@ -314,6 +324,10 @@ fn proxy_conn(mut client: TcpStream, inner: &Inner) -> Result<()> {
         }
         client.flush()?;
         inner.stats.bytes_sent.fetch_add(remaining, Ordering::SeqCst);
+        if let Some(mut sp) = req_span.take() {
+            sp.attr("bytes", remaining);
+            sp.end();
+        }
 
         if !req.keep_alive {
             return Ok(());

@@ -48,6 +48,7 @@ pub mod format;
 pub mod metrics;
 pub mod models;
 pub mod netsim;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod server;

@@ -7,6 +7,7 @@
 //!   fetch    — progressively fetch + infer from a server
 //!   fleet    — multi-client load generation + SLO report
 //!   cluster  — self-hosted router/edge/origin tier under load
+//!   trace    — capture an end-to-end trace of cluster requests
 //!   eval     — Table II style accuracy-vs-bit-width evaluation
 //!   study    — run the simulated user study (Table III / Fig 8)
 //!   models   — list models available in the artifacts registry
@@ -62,6 +63,13 @@ fn usage() -> ! {
                    [--download-only]\n          \
                    (self-hosts router -> edge prefix caches -> origin reactors\n          \
                     over fixture models; report includes per-tier counters)\n  \
+           trace   [--requests 4] [--slowest 3] [--edges 2] [--origins 1]\n          \
+                   [--prefix-stages 2] [--workers 2] [--out FILE]\n          \
+                   [--metrics-out FILE]\n          \
+                   (self-hosts a warm cluster, runs traced requests through\n          \
+                    it, prints a waterfall per slow request; --out writes\n          \
+                    Chrome trace-event JSON, --metrics-out the Prometheus\n          \
+                    exposition)\n  \
            eval    --model NAME [--n 256] [--backend B]\n  \
            study   [--users 29] [--seed 2021] [--backend B] [--threads N]\n\
          backends (B): reference (default, pure Rust, batched) |\n\
@@ -105,6 +113,7 @@ fn run() -> Result<()> {
         "fetch" => cmd_fetch(&args),
         "fleet" => cmd_fleet(&args),
         "cluster" => cmd_cluster(&args),
+        "trace" => cmd_trace(&args),
         "eval" => cmd_eval(&args),
         "study" => cmd_study(&args),
         _ => usage(),
@@ -403,6 +412,149 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "edge caches never served a prefix (hits {}, misses {})",
         edge.edge_hits,
         edge.edge_misses
+    );
+    Ok(())
+}
+
+/// Capture an end-to-end trace: self-host a router → edge prefix cache →
+/// origin cluster over the fixture models, warm the edges, run traced
+/// progressive sessions through the router, then stitch and export —
+/// Chrome trace-event JSON (`--out`), a Prometheus-style metrics
+/// exposition covering every tier (`--metrics-out`), and a waterfall
+/// table for the slowest `--slowest` requests on stdout. Exits nonzero
+/// unless at least one request stitched across all four tiers with the
+/// cache-hit and relayed-tail phases visible — the CI obs-smoke contract.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use std::io::Read;
+
+    use prognet::fleet::ServerStats;
+    use prognet::server::proto::FetchRequest;
+    use prognet::server::service::request_on;
+
+    let requests = args.get_usize("requests", 4)?;
+    let slowest = args.get_usize("slowest", 3)?;
+    let origins = args.get_usize("origins", 1)?;
+    let edges = args.get_usize("edges", 2)?;
+    let workers = args.get_usize("workers", 2)?;
+    let prefix_stages = args.get_usize("prefix-stages", 2)? as u32;
+
+    prognet::obs::set_enabled(true);
+
+    let reg = prognet::testutil::fixture::executable_models("trace-cli")?;
+    let repo = Arc::new(Repository::new(reg));
+    let cluster = Cluster::start(
+        repo,
+        ClusterConfig {
+            origins,
+            edges,
+            workers_per_origin: workers,
+            prefix_stages,
+            ..ClusterConfig::default()
+        },
+    )?;
+
+    // Warm every edge's stage-prefix cache (the router consistent-hashes
+    // per connection, so a few passes cover all edges), then drop the
+    // warmup spans: the captured traces should show steady-state serving
+    // with cache-hit bytes and relayed-tail bytes as separate phases.
+    for _ in 0..edges.max(1) * 2 {
+        let warm = ProgressiveSession::builder("dense3")
+            .addr(cluster.addr())
+            .start()?;
+        while warm.next_event().is_some() {}
+        warm.finish()?;
+    }
+    prognet::obs::reset();
+
+    println!(
+        "trace: {requests} traced requests → router {} ({edges} edges, {origins} origins, \
+         prefix k={prefix_stages})",
+        cluster.addr()
+    );
+    for _ in 0..requests {
+        let session = ProgressiveSession::builder("dense3")
+            .addr(cluster.addr())
+            .start()?;
+        while session.next_event().is_some() {}
+        session.finish()?;
+    }
+
+    // `stats` wire verb through the router: proves the verb survives
+    // proxying and that a live scrape works (the router forwards the
+    // frame to an edge, which answers with its own exposition).
+    let mut stream = std::net::TcpStream::connect(cluster.addr())?;
+    let resp = request_on(&mut stream, &FetchRequest::new("dense3").with_verb("stats"))?;
+    let mut scraped = vec![0u8; resp.remaining as usize];
+    stream.read_exact(&mut scraped)?;
+    let scraped = String::from_utf8(scraped)?;
+    anyhow::ensure!(
+        scraped.contains("prognet_requests"),
+        "stats verb scrape returned no counters"
+    );
+    drop(stream);
+
+    let spans = prognet::obs::drain();
+    let dropped = prognet::obs::dropped();
+    let traces = prognet::obs::stitch(&spans);
+    let all_tiers = ["client", "router", "edge", "origin"];
+    let stitched = traces
+        .iter()
+        .filter(|t| {
+            let tiers = t.tiers();
+            all_tiers.iter().all(|n| tiers.contains(n))
+        })
+        .count();
+    println!(
+        "captured {} spans in {} traces ({stitched} spanning all four tiers, {dropped} dropped)",
+        spans.len(),
+        traces.len()
+    );
+    for t in traces.iter().take(slowest) {
+        println!("{}", prognet::obs::waterfall(t));
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, prognet::obs::chrome_trace(&spans).to_string())?;
+        println!("chrome trace written to {path}");
+    }
+    let router_stats = cluster.router().stats().clone();
+    let mut sections: Vec<(String, Arc<ServerStats>)> =
+        vec![("router".to_string(), router_stats)];
+    for (i, e) in cluster.edges().iter().enumerate() {
+        sections.push((format!("edge{i}"), e.stats().clone()));
+    }
+    for (i, o) in cluster.origin_stats().into_iter().enumerate() {
+        sections.push((format!("origin{i}"), o));
+    }
+    let section_refs: Vec<(&str, &ServerStats)> = sections
+        .iter()
+        .map(|(name, stats)| (name.as_str(), stats.as_ref()))
+        .collect();
+    let metrics = prognet::obs::exposition(&section_refs, &[]);
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, &metrics)?;
+        println!("metrics exposition written to {path}");
+    }
+
+    anyhow::ensure!(
+        stitched >= 1,
+        "no request stitched across client, router, edge and origin \
+         ({} traces captured)",
+        traces.len()
+    );
+    let full = traces
+        .iter()
+        .find(|t| all_tiers.iter().all(|n| t.tiers().contains(n)))
+        .expect("stitched >= 1");
+    anyhow::ensure!(
+        full.spans.len() >= 8,
+        "cross-tier trace has only {} spans",
+        full.spans.len()
+    );
+    anyhow::ensure!(
+        full.spans.iter().any(|s| s.name == "edge.cache")
+            && full.spans.iter().any(|s| s.name == "edge.relay"),
+        "warm-edge trace is missing the cache-hit / tail-relay phases"
     );
     Ok(())
 }

@@ -59,20 +59,10 @@ impl Histogram {
         self.max
     }
 
-    /// Approximate quantile from bucket upper bounds.
+    /// Approximate quantile from bucket upper bounds (the shared
+    /// [`bucket_quantile`](crate::util::stats::bucket_quantile) walk).
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let target = (q * self.count as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return self.bounds.get(i).copied().unwrap_or(self.max);
-            }
-        }
-        self.max
+        crate::util::stats::bucket_quantile(&self.buckets, &self.bounds, self.count, self.max, q)
     }
 
     pub fn merge(&mut self, other: &Histogram) {

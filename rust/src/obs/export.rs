@@ -1,0 +1,346 @@
+//! Export: Chrome trace-event JSON, Prometheus-style metrics text, and
+//! stitched waterfall tables.
+//!
+//! Three consumers, three formats, one span model:
+//!
+//! - [`chrome_trace`] — the drained [`SpanRecord`]s as a Chrome
+//!   trace-event document (complete `"ph":"X"` events, microsecond
+//!   timestamps). Load it in Perfetto / `chrome://tracing` to see the
+//!   cross-node download/compute overlap as lanes per tier.
+//! - [`exposition`] — every [`ServerStats`] counter (and optional
+//!   [`Histogram`] timers) as a Prometheus-style text page, labelled by
+//!   tier. This is what the `stats` wire verb and
+//!   `prognet trace --metrics-out` serve.
+//! - [`stitch`] + [`waterfall`] — group spans by trace id and render
+//!   the slowest requests as an indented table: where one request spent
+//!   its time across client → router → edge → origin.
+
+#![forbid(unsafe_code)]
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::fleet::ServerStats;
+use crate::metrics::Histogram;
+use crate::util::json::{self, Json};
+use crate::util::stats::fmt_secs;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+use super::span::{SpanRecord, TraceCtx};
+
+/// Every `ServerStats` counter, in struct order, with its Prometheus
+/// type. Adding a field to `ServerStats` without extending this table
+/// fails the `exposition_covers_every_counter` test below.
+const COUNTERS: [(&str, &str, for<'a> fn(&'a ServerStats) -> &'a AtomicU64); 18] = [
+    ("connections", "counter", |s| &s.connections),
+    ("requests", "counter", |s| &s.requests),
+    ("bytes_sent", "counter", |s| &s.bytes_sent),
+    ("errors", "counter", |s| &s.errors),
+    ("active", "gauge", |s| &s.active),
+    ("queued", "gauge", |s| &s.queued),
+    ("queued_total", "counter", |s| &s.queued_total),
+    ("shed", "counter", |s| &s.shed),
+    ("degraded", "counter", |s| &s.degraded),
+    ("evicted", "counter", |s| &s.evicted),
+    ("stages_served", "counter", |s| &s.stages_served),
+    ("edge_hits", "counter", |s| &s.edge_hits),
+    ("edge_misses", "counter", |s| &s.edge_misses),
+    ("origin_fills", "counter", |s| &s.origin_fills),
+    ("cache_bytes", "counter", |s| &s.cache_bytes),
+    ("fill_bytes", "counter", |s| &s.fill_bytes),
+    ("relay_bytes", "counter", |s| &s.relay_bytes),
+    ("drained", "counter", |s| &s.drained),
+];
+
+/// Tier prefix of a span name (`"edge.relay"` → `"edge"`).
+pub fn tier_of(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+fn tier_pid(name: &str) -> u64 {
+    match tier_of(name) {
+        "client" => 1,
+        "router" => 2,
+        "edge" => 3,
+        "origin" => 4,
+        _ => 9,
+    }
+}
+
+/// Render drained spans as a Chrome trace-event JSON document
+/// (Perfetto-loadable). Tiers map to pids so each node gets its own
+/// track group; `tid` is the recording ring's registration index.
+pub fn chrome_trace(records: &[SpanRecord]) -> Json {
+    let events = records.iter().map(chrome_event).collect();
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+fn chrome_event(r: &SpanRecord) -> Json {
+    let mut args = vec![
+        ("trace", json::s(&TraceCtx::hex(r.trace))),
+        ("span", json::s(&TraceCtx::hex(r.id))),
+        ("parent", json::s(&TraceCtx::hex(r.parent))),
+    ];
+    for (k, v) in &r.attrs {
+        args.push((k, json::s(v)));
+    }
+    json::obj(vec![
+        ("name", json::s(r.name)),
+        ("cat", json::s("prognet")),
+        ("ph", json::s("X")),
+        ("ts", json::num(r.start_us as f64)),
+        ("dur", json::num(r.dur_us as f64)),
+        ("pid", json::num(tier_pid(r.name) as f64)),
+        ("tid", json::num(r.tid as f64)),
+        ("args", json::obj(args)),
+    ])
+}
+
+/// One request's spans, stitched across threads and nodes by trace id.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub trace: u64,
+    /// sorted by `(start_us, id)`
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Trace {
+    /// Distinct tier prefixes among this trace's span names.
+    pub fn tiers(&self) -> BTreeSet<&'static str> {
+        self.spans.iter().map(|s| tier_of(s.name)).collect()
+    }
+
+    /// Wall span of the whole trace: latest end minus earliest start.
+    pub fn duration_us(&self) -> u64 {
+        let start = self.spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+        let end = self
+            .spans
+            .iter()
+            .map(|s| s.start_us + s.dur_us)
+            .max()
+            .unwrap_or(0);
+        end.saturating_sub(start)
+    }
+
+    /// The root span (parent 0), if it was drained.
+    pub fn root(&self) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.parent == 0)
+    }
+}
+
+/// Group records by trace id, slowest trace first.
+pub fn stitch(records: &[SpanRecord]) -> Vec<Trace> {
+    let mut by_trace: BTreeMap<u64, Vec<SpanRecord>> = BTreeMap::new();
+    for r in records {
+        by_trace.entry(r.trace).or_default().push(r.clone());
+    }
+    let mut traces: Vec<Trace> = by_trace
+        .into_iter()
+        .map(|(trace, mut spans)| {
+            spans.sort_by_key(|s| (s.start_us, s.id));
+            Trace { trace, spans }
+        })
+        .collect();
+    traces.sort_by_key(|t| std::cmp::Reverse(t.duration_us()));
+    traces
+}
+
+/// Render one stitched trace as an indented waterfall table: start
+/// offsets relative to the trace's earliest span, children indented
+/// under their parents.
+pub fn waterfall(t: &Trace) -> String {
+    let t0 = t.spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let by_id: BTreeMap<u64, &SpanRecord> = t.spans.iter().map(|s| (s.id, s)).collect();
+    let depth_of = |span: &SpanRecord| -> usize {
+        let mut depth = 0;
+        let mut parent = span.parent;
+        while parent != 0 {
+            match by_id.get(&parent) {
+                Some(p) => {
+                    depth += 1;
+                    parent = p.parent;
+                }
+                None => break,
+            }
+        }
+        depth
+    };
+    let mut table = crate::metrics::Table::new(
+        &format!("trace {} ({} spans)", TraceCtx::hex(t.trace), t.spans.len()),
+        &["span", "tier", "start", "dur", "attrs"],
+    );
+    for s in &t.spans {
+        let indent = "  ".repeat(depth_of(s));
+        let attrs = s
+            .attrs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        table.row(vec![
+            format!("{indent}{}", s.name),
+            tier_of(s.name).to_string(),
+            format!("+{}", fmt_secs(s.start_us.saturating_sub(t0) as f64 / 1e6)),
+            fmt_secs(s.dur_us as f64 / 1e6),
+            attrs,
+        ]);
+    }
+    table.render()
+}
+
+/// Prometheus-style text exposition: every [`ServerStats`] counter for
+/// every `(tier, stats)` section, plus optional latency [`Histogram`]s
+/// as summaries. With no sections, every counter is still emitted once,
+/// unlabelled and zero-valued, so scrapers always see the full set.
+pub fn exposition(sections: &[(&str, &ServerStats)], hists: &[(&str, &Histogram)]) -> String {
+    let mut out = String::new();
+    let default_stats = ServerStats::default();
+    for (name, kind, get) in COUNTERS {
+        out.push_str(&format!("# TYPE prognet_{name} {kind}\n"));
+        if sections.is_empty() {
+            let v = get(&default_stats).load(Ordering::SeqCst);
+            out.push_str(&format!("prognet_{name} {v}\n"));
+        }
+        for (tier, stats) in sections {
+            let v = get(stats).load(Ordering::SeqCst);
+            out.push_str(&format!("prognet_{name}{{tier=\"{tier}\"}} {v}\n"));
+        }
+    }
+    for (name, h) in hists {
+        out.push_str(&format!("# TYPE prognet_{name}_seconds summary\n"));
+        for q in [0.5, 0.95, 0.99] {
+            out.push_str(&format!(
+                "prognet_{name}_seconds{{quantile=\"{q}\"}} {:.6}\n",
+                h.quantile(q)
+            ));
+        }
+        out.push_str(&format!(
+            "prognet_{name}_seconds_sum {:.6}\n",
+            h.mean() * h.count() as f64
+        ));
+        out.push_str(&format!("prognet_{name}_seconds_count {}\n", h.count()));
+        out.push_str(&format!("# TYPE prognet_{name}_seconds_max gauge\n"));
+        out.push_str(&format!("prognet_{name}_seconds_max {:.6}\n", h.max()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        name: &'static str,
+        trace: u64,
+        id: u64,
+        parent: u64,
+        start_us: u64,
+        dur_us: u64,
+    ) -> SpanRecord {
+        SpanRecord {
+            name,
+            trace,
+            id,
+            parent,
+            start_us,
+            dur_us,
+            tid: 0,
+            attrs: Vec::new(),
+        }
+    }
+
+    fn sample_records() -> Vec<SpanRecord> {
+        vec![
+            rec("client.request", 7, 1, 0, 0, 100),
+            rec("router.request", 7, 2, 1, 10, 80),
+            rec("edge.request", 7, 3, 2, 20, 60),
+            rec("edge.cache", 7, 4, 3, 25, 10),
+            rec("edge.relay", 7, 5, 3, 40, 30),
+            rec("origin.request", 7, 6, 5, 45, 20),
+            rec("client.request", 8, 9, 0, 5, 400),
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_one_event_per_span() {
+        let records = sample_records();
+        let doc = chrome_trace(&records);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), records.len());
+        let e0 = &events[0];
+        assert_eq!(e0.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e0.get("cat").unwrap().as_str().unwrap(), "prognet");
+        assert_eq!(e0.get("pid").unwrap().as_i64().unwrap(), 1); // client tier
+        let args = e0.get("args").unwrap();
+        assert_eq!(
+            args.get("trace").unwrap().as_str().unwrap(),
+            &TraceCtx::hex(7)
+        );
+    }
+
+    #[test]
+    fn stitch_groups_by_trace_slowest_first() {
+        let traces = stitch(&sample_records());
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].trace, 8); // 400µs beats 145µs
+        assert_eq!(traces[1].trace, 7);
+        let t7 = &traces[1];
+        assert_eq!(t7.spans.len(), 6);
+        assert_eq!(t7.root().unwrap().id, 1);
+        assert_eq!(t7.duration_us(), 100);
+        let tiers = t7.tiers();
+        for tier in ["client", "router", "edge", "origin"] {
+            assert!(tiers.contains(tier), "missing tier {tier}");
+        }
+    }
+
+    #[test]
+    fn waterfall_indents_children() {
+        let traces = stitch(&sample_records());
+        let text = waterfall(&traces[1]);
+        assert!(text.contains("client.request"));
+        assert!(text.contains("  router.request"), "{text}");
+        assert!(text.contains("      edge.cache"), "{text}");
+        assert!(text.contains("      edge.relay"), "{text}");
+    }
+
+    #[test]
+    fn exposition_covers_every_counter() {
+        use crate::util::sync::atomic::Ordering;
+        let stats = ServerStats::default();
+        stats.edge_hits.store(3, Ordering::SeqCst);
+        let text = exposition(&[("edge", &stats)], &[]);
+        // one line per counter, tier-labelled
+        for (name, _, _) in COUNTERS {
+            assert!(
+                text.contains(&format!("prognet_{name}{{tier=\"edge\"}}")),
+                "missing counter {name} in:\n{text}"
+            );
+        }
+        assert!(text.contains("prognet_edge_hits{tier=\"edge\"} 3"));
+        assert!(text.contains("# TYPE prognet_active gauge"));
+        // the COUNTERS table stays in lockstep with the struct: render
+        // the canonical table and check arity
+        assert_eq!(COUNTERS.len(), 18);
+        // no sections → still every counter, unlabelled
+        let bare = exposition(&[], &[]);
+        for (name, _, _) in COUNTERS {
+            assert!(bare.contains(&format!("prognet_{name} 0")), "{name}");
+        }
+    }
+
+    #[test]
+    fn exposition_renders_histograms() {
+        let mut h = Histogram::new();
+        h.record(0.010);
+        h.record(0.020);
+        let text = exposition(&[], &[("ttfi", &h)]);
+        assert!(text.contains("# TYPE prognet_ttfi_seconds summary"));
+        assert!(text.contains("prognet_ttfi_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("prognet_ttfi_seconds_count 2"));
+        assert!(text.contains("prognet_ttfi_seconds_max"));
+    }
+}

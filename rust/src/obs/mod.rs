@@ -1,0 +1,28 @@
+//! Observability: request-scoped spans, wire trace propagation, export.
+//!
+//! The paper's claim is a *latency-shape* claim — an approximate model
+//! becomes usable mid-transfer — and aggregate SLO percentiles can't
+//! show *where* one request spent its time once the cluster tier
+//! (router → edge → origin) is in the path. This subsystem records
+//! request-scoped [`span`]s into per-thread bounded rings, propagates a
+//! trace id through the v2 request frame (see
+//! `server::proto::FetchRequest::with_trace` and `docs/PROTOCOL.md`),
+//! and [`export`]s the stitched result as Chrome trace-event JSON, a
+//! Prometheus-style metrics page, and waterfall tables
+//! (`prognet trace`).
+//!
+//! The recorder is **disabled by default** and the disabled path is one
+//! atomic load — see `docs/OBSERVABILITY.md` for the overhead
+//! guarantees and the span naming scheme (`client.*`, `router.*`,
+//! `edge.*`, `origin.*`).
+
+#![forbid(unsafe_code)]
+
+pub mod export;
+pub mod span;
+
+pub use export::{chrome_trace, exposition, stitch, tier_of, waterfall, Trace};
+pub use span::{
+    attach, begin, begin_child, current, drain, dropped, enabled, new_trace_id, reset, set_clock,
+    set_enabled, AttachGuard, SpanGuard, SpanRecord, SpanRing, TraceCtx,
+};

@@ -1,0 +1,633 @@
+//! Request-scoped spans recorded into per-thread rings.
+//!
+//! The recorder is **off by default**: [`begin`] on the disabled path is
+//! one `SeqCst` load plus a stack-allocated disarmed guard — no TLS
+//! touch, no clock read, no heap traffic — which is what keeps tracing
+//! out of `BENCH_runtime.json` / `BENCH_fleet.json` when nobody asked
+//! for it. Enabled, every span is one clock read at [`begin`] and one
+//! clock read + one ring push when the [`SpanGuard`] drops.
+//!
+//! # Model
+//!
+//! A span is `(name, trace, id, parent, start, duration, attrs)`. Trace
+//! ids correlate spans *across* threads and processes (they ride the v2
+//! request frame — see `server::proto::FetchRequest::with_trace`); span
+//! ids parent spans *within* a trace. Two parenting modes:
+//!
+//! - [`begin`] — stack parenting: the new span's parent is the top of
+//!   the calling thread's context stack (pushed by `begin` itself and by
+//!   [`attach`]). Natural for straight-line client code.
+//! - [`begin_child`] — explicit parenting from a wire-carried
+//!   [`TraceCtx`]. Server-side state machines use this because one
+//!   reactor thread interleaves many requests, so a thread-local stack
+//!   would lie about ancestry. `begin_child` deliberately does **not**
+//!   touch the stack.
+//!
+//! Ends are RAII: dropping the guard records the span, so every exit
+//! path — early return, `?`, panic unwind — closes it. The
+//! `span-not-closed` lint rule flags library code that discards the
+//! guard immediately.
+//!
+//! # Recording
+//!
+//! Each thread lazily registers one [`SpanRing`] — a bounded
+//! single-producer/single-consumer ring of slots — in a global registry.
+//! The owning thread is the only pusher; [`drain`] (serialized by the
+//! registry lock) is the only consumer. A full ring counts a drop and
+//! never blocks: tracing sheds itself before it can backpressure the
+//! serving path. The writer/flusher handoff is model-checked in
+//! `tests/schedules.rs` (no lost or torn spans under preemption).
+//!
+//! Time comes from an injectable [`Clock`] ([`set_clock`]) so span tests
+//! assert exact durations on a manual virtual timeline.
+
+#![forbid(unsafe_code)]
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{clock, Arc, Clock, Mutex, OnceLock};
+
+/// Spans buffered per thread before the recorder starts shedding.
+const RING_CAPACITY: usize = 4096;
+
+/// Wire-propagated correlation context: a trace id shared by every span
+/// of one request, plus the span id that acts as the remote parent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceCtx {
+    pub trace: u64,
+    pub span: u64,
+}
+
+impl TraceCtx {
+    /// Canonical wire encoding of an id: 16 lowercase hex digits.
+    pub fn hex(id: u64) -> String {
+        format!("{id:016x}")
+    }
+
+    /// Parse the wire encoding (up to 16 hex digits; case-insensitive).
+    pub fn parse_hex(s: &str) -> Option<u64> {
+        if s.is_empty() || s.len() > 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok()
+    }
+}
+
+/// One recorded span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    pub trace: u64,
+    pub id: u64,
+    /// parent span id within the trace (0 = root)
+    pub parent: u64,
+    /// microseconds since the recorder epoch
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// registration index of the ring that recorded the span
+    pub tid: u64,
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+/// Bounded single-producer / single-consumer span buffer.
+///
+/// Protocol: the producer fills the slot at `tail`, then publishes by
+/// advancing `tail`; the consumer reads only slots in `[head, tail)`,
+/// then frees them by advancing `head`. The per-slot mutexes are
+/// uncontended by that sequencing (a slot is touched by at most one
+/// side at a time) — they exist so the handoff is expressible in safe
+/// Rust and checkable by the deterministic scheduler.
+pub struct SpanRing {
+    slots: Vec<Mutex<Option<SpanRecord>>>,
+    /// consumer cursor: slots below it are free for reuse
+    head: AtomicUsize,
+    /// producer cursor: slots below it are published
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "ring capacity must be positive");
+        Self {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side (owning thread only). Returns `false` — and counts
+    /// the drop — when the ring is full; never blocks.
+    pub fn push(&self, rec: SpanRecord) -> bool {
+        let tail = self.tail.load(Ordering::SeqCst);
+        let head = self.head.load(Ordering::SeqCst);
+        if tail.wrapping_sub(head) >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+        *self.slots[tail % self.slots.len()].lock().unwrap() = Some(rec);
+        self.tail.store(tail.wrapping_add(1), Ordering::SeqCst);
+        true
+    }
+
+    /// Consumer side (one consumer at a time). Takes every published
+    /// record in publication order.
+    pub fn drain_into(&self, out: &mut Vec<SpanRecord>) {
+        let tail = self.tail.load(Ordering::SeqCst);
+        let mut head = self.head.load(Ordering::SeqCst);
+        while head != tail {
+            if let Some(rec) = self.slots[head % self.slots.len()].lock().unwrap().take() {
+                out.push(rec);
+            }
+            head = head.wrapping_add(1);
+        }
+        self.head.store(head, Ordering::SeqCst);
+    }
+
+    /// Published-but-undrained record count.
+    pub fn len(&self) -> usize {
+        self.tail
+            .load(Ordering::SeqCst)
+            .wrapping_sub(self.head.load(Ordering::SeqCst))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans shed because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+
+    fn reset_dropped(&self) {
+        self.dropped.store(0, Ordering::SeqCst);
+    }
+}
+
+// ------------------------------------------------------------- recorder
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+#[derive(Clone)]
+struct TimeBase {
+    clock: Clock,
+    epoch: Instant,
+}
+
+struct Registry {
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    time: Mutex<TimeBase>,
+    next_id: AtomicU64,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(|| Registry {
+        rings: Mutex::new(Vec::new()),
+        time: Mutex::new(TimeBase {
+            clock: Clock::real(),
+            epoch: clock::now(),
+        }),
+        next_id: AtomicU64::new(1),
+    })
+}
+
+fn timebase() -> TimeBase {
+    registry().time.lock().unwrap().clone()
+}
+
+struct ThreadState {
+    ring: Option<(u64, Arc<SpanRing>)>,
+    stack: Vec<TraceCtx>,
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadState> = RefCell::new(ThreadState {
+        ring: None,
+        stack: Vec::new(),
+    });
+}
+
+fn with_ring<F: FnOnce(u64, &SpanRing)>(f: F) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        if t.ring.is_none() {
+            let ring = Arc::new(SpanRing::new(RING_CAPACITY));
+            let mut rings = registry().rings.lock().unwrap();
+            let tid = rings.len() as u64;
+            rings.push(ring.clone());
+            drop(rings);
+            t.ring = Some((tid, ring));
+        }
+        let (tid, ring) = t.ring.as_ref().expect("ring registered above");
+        f(*tid, ring);
+    });
+}
+
+/// Turn the recorder on/off process-wide (default off). Spans begun
+/// while disabled record nothing even if the recorder is enabled before
+/// they end.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::SeqCst)
+}
+
+/// Inject the recorder's time source and reset its epoch to that
+/// clock's `now()`. With a [`Clock::manual`], span durations are exact
+/// functions of `advance()` calls — no real time leaks in.
+pub fn set_clock(clock: Clock) {
+    let epoch = clock.now();
+    *registry().time.lock().unwrap() = TimeBase { clock, epoch };
+}
+
+fn mix(x: u64) -> u64 {
+    // splitmix64 finalizer: spreads the sequential counter over the id
+    // space so ids from different processes are unlikely to collide
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A fresh nonzero id (trace or span).
+pub fn new_trace_id() -> u64 {
+    let id = mix(registry().next_id.fetch_add(1, Ordering::SeqCst));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Begin a span parented on the calling thread's context stack (a fresh
+/// root trace when the stack is empty). The returned guard records the
+/// span when dropped; bind it — discarding it ends the span immediately
+/// (the `span-not-closed` lint flags that).
+#[must_use = "dropping the guard ends the span immediately"]
+pub fn begin(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::disarmed();
+    }
+    let parent = TLS.with(|t| t.borrow().stack.last().copied());
+    let (trace, parent_span) = match parent {
+        Some(p) => (p.trace, p.span),
+        None => (new_trace_id(), 0),
+    };
+    arm(name, trace, parent_span, true)
+}
+
+/// Begin a span with an explicit parent (typically a wire-carried
+/// [`TraceCtx`]). Does not touch the thread's context stack — correct
+/// for event-loop threads that interleave many requests.
+#[must_use = "dropping the guard ends the span immediately"]
+pub fn begin_child(name: &'static str, parent: TraceCtx) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::disarmed();
+    }
+    arm(name, parent.trace, parent.span, false)
+}
+
+fn arm(name: &'static str, trace: u64, parent: u64, on_stack: bool) -> SpanGuard {
+    let ctx = TraceCtx {
+        trace,
+        span: new_trace_id(),
+    };
+    if on_stack {
+        TLS.with(|t| t.borrow_mut().stack.push(ctx));
+    }
+    SpanGuard {
+        armed: true,
+        on_stack,
+        name,
+        ctx,
+        parent,
+        start: Some(timebase().clock.now()),
+        attrs: Vec::new(),
+    }
+}
+
+/// Push `ctx` onto the calling thread's context stack for the guard's
+/// lifetime without recording a span — lends a remote context to
+/// stack-parented [`begin`] calls further down.
+pub fn attach(ctx: TraceCtx) -> AttachGuard {
+    if !enabled() {
+        return AttachGuard { ctx: None };
+    }
+    TLS.with(|t| t.borrow_mut().stack.push(ctx));
+    AttachGuard { ctx: Some(ctx) }
+}
+
+/// Top of the calling thread's context stack, if any.
+pub fn current() -> Option<TraceCtx> {
+    if !enabled() {
+        return None;
+    }
+    TLS.with(|t| t.borrow().stack.last().copied())
+}
+
+/// Take every recorded span from every thread's ring, sorted by
+/// `(trace, start, id)`. One consumer at a time (serialized internally).
+pub fn drain() -> Vec<SpanRecord> {
+    let mut out = Vec::new();
+    let rings = registry().rings.lock().unwrap();
+    for r in rings.iter() {
+        r.drain_into(&mut out);
+    }
+    drop(rings);
+    out.sort_by_key(|r| (r.trace, r.start_us, r.id));
+    out
+}
+
+/// Total spans shed across all rings since the last [`reset`].
+pub fn dropped() -> u64 {
+    let rings = registry().rings.lock().unwrap();
+    rings.iter().map(|r| r.dropped()).sum()
+}
+
+/// Discard all recorded spans, zero the drop counters, and re-base the
+/// epoch on the current clock (test isolation).
+pub fn reset() {
+    let rings = registry().rings.lock().unwrap();
+    let mut sink = Vec::new();
+    for r in rings.iter() {
+        r.drain_into(&mut sink);
+        r.reset_dropped();
+    }
+    drop(rings);
+    let mut tb = registry().time.lock().unwrap();
+    tb.epoch = tb.clock.now();
+}
+
+/// RAII span: records on drop. Obtain via [`begin`] / [`begin_child`].
+pub struct SpanGuard {
+    armed: bool,
+    on_stack: bool,
+    name: &'static str,
+    ctx: TraceCtx,
+    parent: u64,
+    start: Option<Instant>,
+    attrs: Vec<(&'static str, String)>,
+}
+
+impl SpanGuard {
+    fn disarmed() -> Self {
+        Self {
+            armed: false,
+            on_stack: false,
+            name: "",
+            ctx: TraceCtx { trace: 0, span: 0 },
+            parent: 0,
+            start: None,
+            attrs: Vec::new(),
+        }
+    }
+
+    /// False when the recorder was disabled at [`begin`] time.
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// This span's context — hand it to [`begin_child`] / the wire.
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    /// Attach a typed attribute (no-op on a disarmed guard).
+    pub fn attr(&mut self, key: &'static str, value: impl std::fmt::Display) {
+        if self.armed {
+            self.attrs.push((key, value.to_string()));
+        }
+    }
+
+    /// End the span now (sugar for dropping the guard).
+    pub fn end(self) {}
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let tb = timebase();
+        let start = self.start.expect("armed span has a start");
+        let end = tb.clock.now();
+        if self.on_stack {
+            TLS.with(|t| {
+                let mut t = t.borrow_mut();
+                if let Some(pos) = t.stack.iter().rposition(|c| c.span == self.ctx.span) {
+                    t.stack.remove(pos);
+                }
+            });
+        }
+        let mut rec = SpanRecord {
+            name: self.name,
+            trace: self.ctx.trace,
+            id: self.ctx.span,
+            parent: self.parent,
+            start_us: start.saturating_duration_since(tb.epoch).as_micros() as u64,
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+            tid: 0,
+            attrs: std::mem::take(&mut self.attrs),
+        };
+        with_ring(move |tid, ring| {
+            rec.tid = tid;
+            ring.push(rec);
+        });
+    }
+}
+
+/// RAII context attachment: pops on drop. Obtain via [`attach`].
+pub struct AttachGuard {
+    ctx: Option<TraceCtx>,
+}
+
+impl AttachGuard {
+    pub fn ctx(&self) -> Option<TraceCtx> {
+        self.ctx
+    }
+}
+
+impl Drop for AttachGuard {
+    fn drop(&mut self) {
+        if let Some(ctx) = self.ctx {
+            TLS.with(|t| {
+                let mut t = t.borrow_mut();
+                if let Some(pos) = t
+                    .stack
+                    .iter()
+                    .rposition(|c| c.span == ctx.span && c.trace == ctx.trace)
+                {
+                    t.stack.remove(pos);
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    // The recorder is process-global; serialize the tests that toggle it
+    // so parallel test threads don't observe each other's spans.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| std::sync::Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn drain_trace(trace: u64) -> Vec<SpanRecord> {
+        drain().into_iter().filter(|r| r.trace == trace).collect()
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let _l = test_lock();
+        set_enabled(false);
+        reset();
+        let mut g = begin("noop");
+        assert!(!g.armed());
+        g.attr("k", "v");
+        drop(g);
+        assert!(drain().is_empty());
+        assert_eq!(dropped(), 0);
+    }
+
+    #[test]
+    fn stack_parenting_nests_and_wire_ids_roundtrip() {
+        let _l = test_lock();
+        set_enabled(true);
+        reset();
+        let root = begin("root");
+        let rctx = root.ctx();
+        let child = begin("child");
+        let cctx = child.ctx();
+        assert_eq!(cctx.trace, rctx.trace);
+        assert_eq!(current(), Some(cctx));
+        child.end();
+        root.end();
+        set_enabled(false);
+        let recs = drain_trace(rctx.trace);
+        assert_eq!(recs.len(), 2);
+        let child_rec = recs.iter().find(|r| r.name == "child").unwrap();
+        assert_eq!(child_rec.parent, rctx.span);
+        let root_rec = recs.iter().find(|r| r.name == "root").unwrap();
+        assert_eq!(root_rec.parent, 0);
+        // hex wire encoding roundtrips
+        let hex = TraceCtx::hex(rctx.trace);
+        assert_eq!(hex.len(), 16);
+        assert_eq!(TraceCtx::parse_hex(&hex), Some(rctx.trace));
+        assert_eq!(TraceCtx::parse_hex("zz"), None);
+        assert_eq!(TraceCtx::parse_hex(""), None);
+    }
+
+    #[test]
+    fn begin_child_and_attach_carry_remote_contexts() {
+        let _l = test_lock();
+        set_enabled(true);
+        reset();
+        let remote = TraceCtx {
+            trace: 0xabc0_0000_0000_0001,
+            span: 77,
+        };
+        let mut sp = begin_child("server.request", remote);
+        sp.attr("model", "toy");
+        let spc = sp.ctx();
+        sp.end();
+        // attach lends the context to stack-parented begins
+        let att = attach(remote);
+        assert_eq!(att.ctx(), Some(remote));
+        let nested = begin("nested");
+        let nctx = nested.ctx();
+        nested.end();
+        drop(att);
+        assert_eq!(current(), None);
+        set_enabled(false);
+        let recs = drain_trace(remote.trace);
+        assert_eq!(recs.len(), 2);
+        let s = recs.iter().find(|r| r.name == "server.request").unwrap();
+        assert_eq!((s.trace, s.parent, s.id), (remote.trace, 77, spc.span));
+        assert_eq!(s.attrs, vec![("model", "toy".to_string())]);
+        let n = recs.iter().find(|r| r.name == "nested").unwrap();
+        assert_eq!((n.trace, n.parent), (remote.trace, 77));
+        assert_eq!(nctx.trace, remote.trace);
+    }
+
+    #[test]
+    fn manual_clock_durations_are_exact() {
+        let _l = test_lock();
+        let clk = Clock::manual();
+        set_clock(clk.clone());
+        set_enabled(true);
+        reset();
+        let outer = begin("outer");
+        clk.advance(Duration::from_millis(3));
+        let inner = begin("inner");
+        clk.advance(Duration::from_millis(7));
+        inner.end();
+        clk.advance(Duration::from_millis(5));
+        let t = outer.ctx().trace;
+        outer.end();
+        set_enabled(false);
+        set_clock(Clock::real());
+        let recs = drain_trace(t);
+        let outer_rec = recs.iter().find(|r| r.name == "outer").unwrap();
+        let inner_rec = recs.iter().find(|r| r.name == "inner").unwrap();
+        assert_eq!(outer_rec.start_us, 0);
+        assert_eq!(outer_rec.dur_us, 15_000);
+        assert_eq!(inner_rec.start_us, 3_000);
+        assert_eq!(inner_rec.dur_us, 7_000);
+        // child nests strictly inside the parent
+        assert!(inner_rec.start_us >= outer_rec.start_us);
+        assert!(
+            inner_rec.start_us + inner_rec.dur_us <= outer_rec.start_us + outer_rec.dur_us
+        );
+    }
+
+    #[test]
+    fn full_ring_sheds_instead_of_blocking() {
+        let ring = SpanRing::new(2);
+        let rec = |i: u64| SpanRecord {
+            name: "r",
+            trace: 1,
+            id: i,
+            parent: 0,
+            start_us: i,
+            dur_us: 0,
+            tid: 0,
+            attrs: Vec::new(),
+        };
+        assert!(ring.push(rec(1)));
+        assert!(ring.push(rec(2)));
+        assert!(!ring.push(rec(3)));
+        assert_eq!(ring.dropped(), 1);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        // freed capacity is reusable
+        assert!(ring.push(rec(4)));
+        out.clear();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 4);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let a = new_trace_id();
+        let b = new_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+}

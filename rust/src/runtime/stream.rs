@@ -21,6 +21,7 @@
 
 use std::ops::Range;
 
+use crate::obs::{self, TraceCtx};
 use crate::util::sync::{Condvar, Mutex};
 
 /// What [`LayerGate::wait`] hands the executor: the newest published
@@ -73,6 +74,9 @@ pub struct LayerGate {
     layers: usize,
     state: Mutex<GateState>,
     arrived: Condvar,
+    /// parent context for `client.gate_wait` spans; set by the session
+    /// driver when its request is traced, never touched otherwise
+    trace: Mutex<Option<TraceCtx>>,
 }
 
 impl LayerGate {
@@ -86,7 +90,15 @@ impl LayerGate {
                 closed: false,
             }),
             arrived: Condvar::new(),
+            trace: Mutex::new(None),
         }
+    }
+
+    /// Parent every subsequent [`LayerGate::wait`] under `ctx` (the
+    /// session's `client.request` span): each wait records a
+    /// `client.gate_wait` child span covering its blocking time.
+    pub fn set_trace(&self, ctx: TraceCtx) {
+        *self.trace.lock().unwrap() = Some(ctx);
     }
 
     /// Number of layers the gate was sized for.
@@ -136,6 +148,28 @@ impl LayerGate {
     /// its newest published state. Returns `None` once the gate is closed
     /// and the requirement can no longer be met.
     pub fn wait(&self, layer: usize, min_stage: usize) -> Option<LayerUpdate> {
+        // With tracing disabled (the default) this is one atomic load —
+        // the trace mutex is never even touched.
+        let span = if obs::enabled() {
+            self.trace.lock().unwrap().map(|ctx| {
+                let mut sp = obs::begin_child("client.gate_wait", ctx);
+                sp.attr("layer", layer);
+                sp
+            })
+        } else {
+            None
+        };
+        let update = self.wait_update(layer, min_stage);
+        if let Some(mut sp) = span {
+            if let Some(up) = &update {
+                sp.attr("stage", up.stage);
+            }
+            sp.end();
+        }
+        update
+    }
+
+    fn wait_update(&self, layer: usize, min_stage: usize) -> Option<LayerUpdate> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.slots[layer].stages > min_stage {

@@ -1,7 +1,11 @@
 //! Wire protocol: length-prefixed JSON request frames answered by a JSON
 //! status frame plus a raw `.pnet` byte stream. Requests can select a
 //! stage range of the container and keep the connection open for further
-//! requests (pipelined multi-model delivery). See `rust/docs/PROTOCOL.md`.
+//! requests (pipelined multi-model delivery). Requests may carry an
+//! optional trace context (`trace`/`span`, 16-hex ids) that servers echo
+//! into their own spans, and an optional `verb` selecting a non-fetch
+//! exchange (currently `"stats"`). Both ride the same JSON frame, so old
+//! readers simply ignore them. See `rust/docs/PROTOCOL.md`.
 
 #![forbid(unsafe_code)]
 
@@ -9,6 +13,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
+use crate::obs::TraceCtx;
 use crate::quant::{Schedule, K};
 use crate::util::json::{self, Json};
 
@@ -32,6 +37,12 @@ pub struct FetchRequest {
     pub stages: Option<(u32, u32)>,
     /// keep the connection open for further requests after the body
     pub keep_alive: bool,
+    /// optional trace context propagated from the client's root span;
+    /// servers parent their request spans on it (`None` = untraced)
+    pub trace: Option<TraceCtx>,
+    /// optional non-fetch verb (`"stats"` = answer with a metrics
+    /// exposition body instead of container bytes); `None` = fetch
+    pub verb: Option<String>,
 }
 
 impl FetchRequest {
@@ -43,6 +54,8 @@ impl FetchRequest {
             offset: 0,
             stages: None,
             keep_alive: false,
+            trace: None,
+            verb: None,
         }
     }
 
@@ -71,6 +84,16 @@ impl FetchRequest {
         self
     }
 
+    pub fn with_trace(mut self, ctx: TraceCtx) -> Self {
+        self.trace = Some(ctx);
+        self
+    }
+
+    pub fn with_verb(mut self, verb: &str) -> Self {
+        self.verb = Some(verb.to_string());
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fields = vec![("model", json::s(&self.model))];
         if let Some(s) = &self.schedule {
@@ -93,6 +116,13 @@ impl FetchRequest {
         }
         if self.keep_alive {
             fields.push(("keep_alive", Json::Bool(true)));
+        }
+        if let Some(ctx) = self.trace {
+            fields.push(("trace", json::s(&TraceCtx::hex(ctx.trace))));
+            fields.push(("span", json::s(&TraceCtx::hex(ctx.span))));
+        }
+        if let Some(v) = &self.verb {
+            fields.push(("verb", json::s(v)));
         }
         json::obj(fields)
     }
@@ -134,6 +164,25 @@ impl FetchRequest {
             keep_alive: match j.opt("keep_alive") {
                 None => false,
                 Some(v) => v.as_bool()?,
+            },
+            trace: match j.opt("trace") {
+                None => None,
+                Some(t) => {
+                    // Malformed ids are treated as absent rather than
+                    // failing the fetch: tracing is best-effort metadata.
+                    TraceCtx::parse_hex(t.as_str()?).map(|trace| TraceCtx {
+                        trace,
+                        span: j
+                            .opt("span")
+                            .and_then(|s| s.as_str().ok())
+                            .and_then(TraceCtx::parse_hex)
+                            .unwrap_or(0),
+                    })
+                }
+            },
+            verb: match j.opt("verb") {
+                None => None,
+                Some(v) => Some(v.as_str()?.to_string()),
             },
         })
     }
@@ -293,6 +342,59 @@ mod tests {
         assert_eq!(back.offset, 0);
         assert_eq!(back.stages, None);
         assert!(!back.keep_alive);
+    }
+
+    #[test]
+    fn traced_request_roundtrip() {
+        let ctx = TraceCtx {
+            trace: 0x0123_4567_89ab_cdef,
+            span: 0xfeed_f00d_0000_0042,
+        };
+        let req = FetchRequest::new("cnn").with_stages(0, 4).with_trace(ctx);
+        let mut cur = std::io::Cursor::new(req.encode());
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(back.trace, Some(ctx));
+        // the wire form is the documented 16-hex pair
+        let text = req.to_json().to_string();
+        assert!(text.contains("\"trace\":\"0123456789abcdef\""), "{text}");
+        assert!(text.contains("\"span\":\"feedf00d00000042\""), "{text}");
+    }
+
+    #[test]
+    fn v1_request_without_trace_still_parses() {
+        // a frame hand-built with only v1 fields — what an old client sends
+        let body = br#"{"model":"mlp","stages":[0,2]}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(body);
+        let mut cur = std::io::Cursor::new(buf);
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back.trace, None);
+        assert_eq!(back.verb, None);
+        assert_eq!(back.stages, Some((0, 2)));
+        // and untraced requests don't emit the fields at all
+        assert!(!FetchRequest::new("mlp").to_json().to_string().contains("trace"));
+    }
+
+    #[test]
+    fn malformed_trace_ids_degrade_to_untraced() {
+        let body = br#"{"model":"mlp","trace":"not-hex","span":"zz"}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(body);
+        let mut cur = std::io::Cursor::new(buf);
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back.trace, None, "bad ids must not fail the fetch");
+    }
+
+    #[test]
+    fn stats_verb_roundtrip() {
+        let req = FetchRequest::new("_").with_verb("stats");
+        let mut cur = std::io::Cursor::new(req.encode());
+        let back = read_request(&mut cur).unwrap();
+        assert_eq!(back.verb.as_deref(), Some("stats"));
+        assert_eq!(back, req);
     }
 
     #[test]

@@ -112,6 +112,30 @@ impl Repository {
             .map_err(|msg| anyhow::anyhow!(msg))
     }
 
+    /// [`container`](Self::container) with the encode attributed to a
+    /// request trace: cache misses show up as an `origin.encode` child
+    /// span (with model + byte-size attrs), cache hits record nothing.
+    pub fn container_traced(
+        &self,
+        model: &str,
+        schedule: &Schedule,
+        parent: Option<crate::obs::TraceCtx>,
+    ) -> Result<Arc<EncodedContainer>> {
+        let key = (model.to_string(), schedule.widths().to_vec());
+        self.cache
+            .get_or_compute(key, || {
+                let mut span = match parent {
+                    Some(ctx) => crate::obs::begin_child("origin.encode", ctx),
+                    None => crate::obs::begin("origin.encode"),
+                };
+                span.attr("model", model);
+                let encoded = self.encode(model, schedule).map_err(|e| format!("{e:#}"))?;
+                span.attr("bytes", encoded.len());
+                Ok(encoded)
+            })
+            .map_err(|msg| anyhow::anyhow!(msg))
+    }
+
     fn encode(&self, model: &str, schedule: &Schedule) -> Result<Arc<EncodedContainer>> {
         let manifest = self.registry.get(model)?;
         let flat = manifest.load_weights()?;

@@ -1,13 +1,20 @@
 //! Minimal leveled logger writing to stderr, controlled by `PROGNET_LOG`
-//! (`error|warn|info|debug|trace`, default `info`).
+//! (`error|warn|info|debug|trace`, default `info`). An unrecognized
+//! value warns once and falls back to `info` rather than silently
+//! defaulting. Timestamps go through the injectable
+//! [`Clock`](crate::util::sync::Clock) ([`set_clock`]), so tests and the
+//! model checker see deterministic log times.
 
 #![forbid(unsafe_code)]
 
 use crate::util::sync::atomic::{AtomicU8, Ordering};
+use crate::util::sync::{Clock, Mutex, OnceLock};
 use std::time::Instant;
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
-static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+/// Timestamp base: the clock log lines read and the epoch they are
+/// relative to. Installed lazily (real clock) or via [`set_clock`].
+static TIME: OnceLock<Mutex<(Clock, Instant)>> = OnceLock::new();
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -18,6 +25,20 @@ pub enum Level {
     Trace = 4,
 }
 
+/// Parse a `PROGNET_LOG` value: `(level, recognized)`. Unset (`None`)
+/// is the silent default; an unrecognized string is `info` + a warning.
+fn parse_level(value: Option<&str>) -> (u8, bool) {
+    match value {
+        None => (2, true),
+        Some("error") => (0, true),
+        Some("warn") => (1, true),
+        Some("info") => (2, true),
+        Some("debug") => (3, true),
+        Some("trace") => (4, true),
+        Some(_) => (2, false),
+    }
+}
+
 fn level() -> u8 {
     // Relaxed is deliberate: LEVEL caches an idempotent parse of an env
     // var, so the worst a stale read costs is one redundant re-parse —
@@ -26,14 +47,22 @@ fn level() -> u8 {
     if v != 255 {
         return v;
     }
-    let parsed = match std::env::var("PROGNET_LOG").as_deref() {
-        Ok("error") => 0,
-        Ok("warn") => 1,
-        Ok("debug") => 3,
-        Ok("trace") => 4,
-        _ => 2,
-    };
+    let raw = std::env::var("PROGNET_LOG").ok();
+    let (parsed, recognized) = parse_level(raw.as_deref());
+    // store before warning: the warning routes through `log` → `enabled`
+    // → `level`, which must hit the cached value, not re-enter the parse
     LEVEL.store(parsed, Ordering::Relaxed); // lint:allow ordering-relaxed-shared
+    if !recognized {
+        log(
+            Level::Warn,
+            module_path!(),
+            &format!(
+                "unrecognized PROGNET_LOG value '{}' (expected \
+                 error|warn|info|debug|trace); using info",
+                raw.unwrap_or_default()
+            ),
+        );
+    }
     parsed
 }
 
@@ -46,12 +75,33 @@ pub fn enabled(l: Level) -> bool {
     (l as u8) <= level()
 }
 
+fn time_cell() -> &'static Mutex<(Clock, Instant)> {
+    TIME.get_or_init(|| {
+        let clock = Clock::real();
+        let epoch = clock.now();
+        Mutex::new((clock, epoch))
+    })
+}
+
+/// Route log timestamps through `clock`, re-based to its current
+/// instant: lines logged from now on show seconds on that clock —
+/// virtual time when the clock is manual.
+pub fn set_clock(clock: Clock) {
+    let epoch = clock.now();
+    *time_cell().lock().unwrap() = (clock, epoch);
+}
+
+/// Seconds since the logger's epoch on the installed clock.
+fn timestamp() -> f64 {
+    let t = time_cell().lock().unwrap();
+    t.0.now().saturating_duration_since(t.1).as_secs_f64()
+}
+
 pub fn log(l: Level, module: &str, msg: &str) {
     if !enabled(l) {
         return;
     }
-    let t0 = START.get_or_init(Instant::now);
-    let secs = t0.elapsed().as_secs_f64();
+    let secs = timestamp();
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",
@@ -103,5 +153,35 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn every_documented_level_parses() {
+        assert_eq!(parse_level(Some("error")), (0, true));
+        assert_eq!(parse_level(Some("warn")), (1, true));
+        assert_eq!(parse_level(Some("info")), (2, true));
+        assert_eq!(parse_level(Some("debug")), (3, true));
+        assert_eq!(parse_level(Some("trace")), (4, true));
+    }
+
+    #[test]
+    fn unset_is_a_silent_info_default() {
+        assert_eq!(parse_level(None), (2, true));
+    }
+
+    #[test]
+    fn unrecognized_values_fall_back_to_info_with_a_warning() {
+        assert_eq!(parse_level(Some("INFO")), (2, false));
+        assert_eq!(parse_level(Some("verbose")), (2, false));
+        assert_eq!(parse_level(Some("")), (2, false));
+    }
+
+    #[test]
+    fn manual_clock_drives_timestamps() {
+        let c = Clock::manual();
+        set_clock(c.clone());
+        assert_eq!(timestamp(), 0.0);
+        c.advance(std::time::Duration::from_millis(1500));
+        assert!((timestamp() - 1.5).abs() < 1e-9);
     }
 }

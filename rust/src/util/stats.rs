@@ -63,19 +63,9 @@ impl Summary {
 
     /// Percentile via linear interpolation on the sorted samples.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        if lo == hi {
-            sorted[lo]
-        } else {
-            sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
-        }
+        percentile_sorted(&sorted, p)
     }
 
     pub fn median(&self) -> f64 {
@@ -97,6 +87,46 @@ impl Summary {
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
+}
+
+/// Percentile `p` (0–100) of already **sorted** samples via linear
+/// interpolation — the one shared implementation behind
+/// [`Summary::percentile`] (and through it the fleet SLO quantile
+/// blocks). Empty input is `NaN`; a single sample is every percentile of
+/// itself.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Quantile `q` (0–1) of a bucketed distribution: walk `buckets`
+/// (`bounds.len() + 1` entries, the last catching overflow) to the
+/// target rank and report that bucket's upper bound, with `max` standing
+/// in for the unbounded overflow bucket. Empty (`count == 0`) is `0.0`.
+/// The shared implementation behind
+/// [`Histogram::quantile`](crate::metrics::Histogram::quantile).
+pub fn bucket_quantile(buckets: &[u64], bounds: &[f64], count: u64, max: f64, q: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let target = (q * count as f64).ceil() as u64;
+    let mut seen = 0;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return bounds.get(i).copied().unwrap_or(max);
+        }
+    }
+    max
 }
 
 /// Format seconds human-readably (paper tables use whole seconds).
@@ -161,6 +191,35 @@ mod tests {
         let few = Summary::from_samples(&[1.0, 2.0, 3.0]);
         let many = Summary::from_samples(&(0..300).map(|i| (i % 3) as f64 + 1.0).collect::<Vec<_>>());
         assert!(many.ci95() < few.ci95());
+    }
+
+    #[test]
+    fn shared_percentile_pins_known_distribution() {
+        let sorted: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile_sorted(&sorted, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile_sorted(&sorted, 95.0) - 95.05).abs() < 1e-9);
+        assert!((percentile_sorted(&sorted, 99.0) - 99.01).abs() < 1e-9);
+        // n = 1: every percentile is the sample itself
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile_sorted(&[7.5], p), 7.5);
+        }
+        // empty: NaN, matching Summary::percentile on no samples
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn bucket_quantile_walks_bounds() {
+        // 10 samples at ≤1.0, 90 at ≤2.0, empty overflow bucket
+        let buckets = [10u64, 90, 0];
+        let bounds = [1.0, 2.0];
+        assert_eq!(bucket_quantile(&buckets, &bounds, 100, 1.7, 0.05), 1.0);
+        assert_eq!(bucket_quantile(&buckets, &bounds, 100, 1.7, 0.5), 2.0);
+        assert_eq!(bucket_quantile(&buckets, &bounds, 100, 1.7, 0.99), 2.0);
+        // the overflow bucket reports the observed max
+        assert_eq!(bucket_quantile(&[0, 0, 3], &bounds, 3, 9.9, 0.5), 9.9);
+        // n = 1 and empty edge cases
+        assert_eq!(bucket_quantile(&[1, 0, 0], &bounds, 1, 0.4, 0.5), 1.0);
+        assert_eq!(bucket_quantile(&[0, 0, 0], &bounds, 0, 0.0, 0.5), 0.0);
     }
 
     #[test]

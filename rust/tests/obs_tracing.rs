@@ -1,0 +1,270 @@
+//! End-to-end tracing invariants over the cluster tier.
+//!
+//! A traced client request through router → edge → origin must produce
+//! one stitched trace whose spans are properly nested (every non-root
+//! parent resolves to another span of the same trace), whose trace id
+//! survives the edge's cache fill and tail relay, and whose durations
+//! are exact functions of the injected [`Clock`] under virtual time.
+//! And the flip side: a v1 request that carries no trace id is served
+//! bit-for-bit normally and records no server-side spans at all.
+//!
+//! The recorder is process-global, so every test takes `lock()` and
+//! starts from `obs::reset()`.
+
+use std::io::Read;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use prognet::client::ProgressiveSession;
+use prognet::fleet::cluster::{Cluster, ClusterConfig};
+use prognet::obs::{self, SpanRecord};
+use prognet::quant::Schedule;
+use prognet::server::service::open_fetch;
+use prognet::server::{FetchRequest, Repository};
+use prognet::testutil::fixture;
+use prognet::util::sync::Clock;
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn cluster(tag: &str) -> (Cluster, Arc<Repository>) {
+    let repo = Arc::new(Repository::new(fixture::executable_models(tag).unwrap()));
+    let cl = Cluster::start(
+        repo.clone(),
+        ClusterConfig {
+            edges: 1,
+            prefix_stages: 2,
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
+    (cl, repo)
+}
+
+fn run_session(cl: &Cluster) {
+    let session = ProgressiveSession::builder("dense3")
+        .addr(cl.addr())
+        .start()
+        .unwrap();
+    while session.next_event().is_some() {}
+    session.finish().unwrap();
+}
+
+/// Server threads close their request spans a beat after the client has
+/// read the last body byte, so drains poll briefly instead of racing.
+fn drain_until(ok: impl Fn(&[SpanRecord]) -> bool) -> Vec<SpanRecord> {
+    let mut spans = Vec::new();
+    for _ in 0..200 {
+        spans.extend(obs::drain());
+        if ok(&spans) {
+            return spans;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    spans
+}
+
+/// The traces that include a `client.request` root.
+fn client_traces(spans: &[SpanRecord]) -> Vec<obs::Trace> {
+    obs::stitch(spans)
+        .into_iter()
+        .filter(|t| t.spans.iter().any(|s| s.name == "client.request"))
+        .collect()
+}
+
+fn has_all_tiers(t: &obs::Trace) -> bool {
+    ["client", "router", "edge", "origin"]
+        .iter()
+        .all(|n| t.tiers().contains(n))
+}
+
+/// Inner spans are recorded before the enclosing guard drops (a child
+/// ends first), so "complete" means every parent link already resolves.
+fn complete(t: &obs::Trace) -> bool {
+    has_all_tiers(t)
+        && t.spans.len() >= 8
+        && t.spans
+            .iter()
+            .all(|s| s.parent == 0 || t.spans.iter().any(|p| p.id == s.parent))
+}
+
+#[test]
+fn traced_request_stitches_all_tiers_with_proper_nesting() {
+    let _l = lock();
+    obs::set_enabled(true);
+    obs::reset();
+    let (cl, _repo) = cluster("obs-nesting");
+    run_session(&cl);
+    run_session(&cl);
+    obs::set_enabled(false);
+
+    let spans = drain_until(|s| client_traces(s).iter().filter(|t| complete(t)).count() >= 2);
+    let traces = client_traces(&spans);
+    let full: Vec<&obs::Trace> = traces.iter().filter(|t| complete(t)).collect();
+    assert!(
+        full.len() >= 2,
+        "expected 2 four-tier traces, stitched {} from {} spans",
+        full.len(),
+        spans.len()
+    );
+
+    for t in full {
+        // exactly one root, and it is the client request
+        let roots: Vec<&SpanRecord> = t.spans.iter().filter(|s| s.parent == 0).collect();
+        assert_eq!(roots.len(), 1, "trace {:x} has {} roots", t.trace, roots.len());
+        assert_eq!(roots[0].name, "client.request");
+        assert!(t.spans.len() >= 8, "four-tier trace has only {} spans", t.spans.len());
+
+        // every non-root parent resolves within the trace, and every
+        // child starts inside its parent's window (virtual of the same
+        // clock, so ≥ start is the guaranteed half of containment)
+        for s in &t.spans {
+            assert_eq!(s.trace, t.trace, "span {} leaked into trace {:x}", s.name, t.trace);
+            if s.parent == 0 {
+                continue;
+            }
+            let parent = t
+                .spans
+                .iter()
+                .find(|p| p.id == s.parent)
+                .unwrap_or_else(|| panic!("span {} has dangling parent {:x}", s.name, s.parent));
+            assert!(
+                s.start_us >= parent.start_us,
+                "{} starts before its parent {}",
+                s.name,
+                parent.name
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_id_survives_edge_fill_and_tail_relay() {
+    let _l = lock();
+    obs::set_enabled(true);
+    obs::reset();
+    let (cl, _repo) = cluster("obs-fill-relay");
+
+    // cold edge: the first traced request triggers the prefix fill AND
+    // the tail relay, all under the client's trace id
+    const COLD_PHASES: [&str; 5] = [
+        "edge.request",
+        "edge.fill",
+        "edge.cache",
+        "edge.relay",
+        "origin.request",
+    ];
+    run_session(&cl);
+    let spans = drain_until(|s| {
+        client_traces(s)
+            .iter()
+            .any(|t| COLD_PHASES.iter().all(|n| t.spans.iter().any(|x| x.name == *n)))
+    });
+    let traces = client_traces(&spans);
+    let cold = traces
+        .iter()
+        .find(|t| t.spans.iter().any(|s| s.name == "edge.fill"))
+        .expect("cold request produced no edge.fill span");
+    for name in COLD_PHASES {
+        assert!(
+            cold.spans.iter().any(|s| s.name == name),
+            "cold trace {:x} is missing {name}",
+            cold.trace
+        );
+    }
+
+    // warm edge: the prefix is cached, so the second request shows
+    // cache-hit bytes and relayed-tail bytes — and no second fill
+    run_session(&cl);
+    obs::set_enabled(false);
+    let spans = drain_until(|s| client_traces(s).iter().any(complete));
+    let traces = client_traces(&spans);
+    let warm = traces
+        .iter()
+        .find(|t| complete(t))
+        .expect("warm request did not stitch");
+    assert!(warm.spans.iter().any(|s| s.name == "edge.cache"));
+    assert!(warm.spans.iter().any(|s| s.name == "edge.relay"));
+    assert!(
+        !warm.spans.iter().any(|s| s.name == "edge.fill"),
+        "warm trace {:x} refilled the prefix cache",
+        warm.trace
+    );
+}
+
+#[test]
+fn virtual_time_makes_span_durations_exact() {
+    let _l = lock();
+    let clk = Clock::manual();
+    obs::set_clock(clk.clone());
+    obs::set_enabled(true);
+    obs::reset();
+
+    let request = obs::begin("client.request");
+    clk.advance(Duration::from_micros(250));
+    let connect = obs::begin_child("client.connect", request.ctx());
+    clk.advance(Duration::from_micros(1_750));
+    connect.end();
+    let mut stage = obs::begin_child("client.stage", request.ctx());
+    stage.attr("stage", 0);
+    clk.advance(Duration::from_millis(4));
+    stage.end();
+    let trace = request.ctx().trace;
+    request.end();
+
+    obs::set_enabled(false);
+    obs::set_clock(Clock::real());
+    let spans: Vec<SpanRecord> = obs::drain().into_iter().filter(|s| s.trace == trace).collect();
+    assert_eq!(spans.len(), 3);
+    let by_name = |n: &str| spans.iter().find(|s| s.name == n).unwrap();
+    assert_eq!(by_name("client.request").start_us, 0);
+    assert_eq!(by_name("client.request").dur_us, 6_000);
+    assert_eq!(by_name("client.connect").start_us, 250);
+    assert_eq!(by_name("client.connect").dur_us, 1_750);
+    assert_eq!(by_name("client.stage").start_us, 2_000);
+    assert_eq!(by_name("client.stage").dur_us, 4_000);
+    assert_eq!(
+        by_name("client.stage").attrs,
+        vec![("stage", "0".to_string())]
+    );
+
+    // the chrome export carries the same exact microsecond timeline
+    let json = obs::chrome_trace(&spans).to_string();
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("client.stage"));
+}
+
+#[test]
+fn v1_request_without_trace_id_is_served_and_records_nothing() {
+    let _l = lock();
+    obs::set_enabled(true);
+    obs::reset();
+    let (cl, repo) = cluster("obs-v1-compat");
+
+    // a pre-tracing client: plain fetch frame, no trace field at all
+    let req = FetchRequest::new("dense3");
+    assert!(req.trace.is_none());
+    let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+    let (mut stream, resp) = open_fetch(&cl.addr(), &req).unwrap();
+    let mut body = Vec::new();
+    stream.read_to_end(&mut body).unwrap();
+    assert_eq!(body.len() as u64, resp.remaining);
+    assert_eq!(&body[..], &expect[..], "untraced fetch must stay bit-identical");
+    drop(stream);
+
+    obs::set_enabled(false);
+    // give the server threads the same grace period the other tests get,
+    // then require silence: no trace id on the wire → no spans anywhere
+    std::thread::sleep(Duration::from_millis(50));
+    let spans = obs::drain();
+    assert!(
+        spans.is_empty(),
+        "untraced request recorded {} spans (first: {})",
+        spans.len(),
+        spans[0].name
+    );
+}

@@ -4,7 +4,7 @@
 //! condvar wait, and atomic op inside the crate becomes a scheduling
 //! point for `analysis::sched` (design: `rust/docs/ANALYSIS.md`).
 //!
-//! Five real protocols are explored to exhaustion of the bounded
+//! Six real protocols are explored to exhaustion of the bounded
 //! interleaving space (or ≥1000 distinct schedules):
 //!
 //! 1. `ApproxModel` publish-vs-snapshot (mid-download hot swap)
@@ -12,6 +12,7 @@
 //! 3. `SingleFlight` encode stampede + leader-error retry
 //! 4. reactor-style shutdown wakeup (sticky wake bit under the lock)
 //! 5. `LayerGate` publish/wait/close handshake (streaming executor)
+//! 6. `obs::SpanRing` writer/flusher handoff (trace recorder drain)
 //!
 //! Two deliberately broken protocols verify the checker's teeth: a
 //! lost atomic update and a lost condvar wakeup must both be caught,
@@ -308,6 +309,81 @@ fn layer_gate_handshake_is_race_free() {
 }
 
 // ---------------------------------------------------------------------------
+// Protocol 6: SpanRing writer / flusher handoff
+// ---------------------------------------------------------------------------
+
+/// A self-consistent record: any preemption mid-write shows up as a
+/// field mismatch in the assertions below.
+fn span_record(i: u64) -> prognet::obs::SpanRecord {
+    prognet::obs::SpanRecord {
+        name: "check",
+        trace: 42,
+        id: i + 1,
+        parent: 0,
+        start_us: i * 100,
+        dur_us: i * 100 + 7,
+        tid: 0,
+        attrs: Vec::new(),
+    }
+}
+
+/// The trace recorder's ring handoff in miniature: a writer pushes three
+/// spans into a capacity-2 ring while a flusher drains concurrently.
+/// However the two threads interleave, every span is either drained
+/// intact and in order or counted as shed — never lost, never torn.
+fn span_ring_body() {
+    let ring = Arc::new(prognet::obs::SpanRing::new(2));
+    let writer = {
+        let ring = ring.clone();
+        sched::spawn(move || {
+            let mut pushed = 0u64;
+            for i in 0..3 {
+                if ring.push(span_record(i)) {
+                    pushed += 1;
+                }
+            }
+            pushed
+        })
+    };
+    let flusher = {
+        let ring = ring.clone();
+        sched::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..3 {
+                ring.drain_into(&mut got);
+            }
+            got
+        })
+    };
+    let pushed = writer.join().unwrap();
+    let mut got = flusher.join().unwrap();
+    // the writer is done: one final drain empties the ring
+    ring.drain_into(&mut got);
+    assert!(ring.is_empty());
+    assert_eq!(got.len() as u64, pushed, "accepted spans not all drained");
+    assert_eq!(
+        got.len() as u64 + ring.dropped(),
+        3,
+        "spans lost without being counted as shed"
+    );
+    let mut last = 0;
+    for r in &got {
+        assert_eq!((r.name, r.trace), ("check", 42), "torn span record");
+        assert_eq!(r.dur_us, r.start_us + 7, "torn span record");
+        assert_eq!(r.id, r.start_us / 100 + 1, "torn span record");
+        assert!(r.id > last, "ring reordered spans");
+        last = r.id;
+    }
+}
+
+#[test]
+fn span_ring_handoff_never_loses_or_tears() {
+    let _g = guard();
+    let report = sched::explore(Config::default(), span_ring_body);
+    assert_explored(&report);
+}
+
+// ---------------------------------------------------------------------------
 // Injected races: the checker must catch these and render a replay
 // ---------------------------------------------------------------------------
 
@@ -417,20 +493,23 @@ fn pinned_replays_stay_clean() {
         ("single-flight", Box::new(single_flight_body)),
         ("shutdown-wakeup", Box::new(shutdown_wakeup_body)),
         ("layer-gate", Box::new(layer_gate_body)),
+        ("span-ring", Box::new(span_ring_body)),
     ];
-    const PINNED_SCHEDULES: [&[u32]; 5] = [
+    const PINNED_SCHEDULES: [&[u32]; 6] = [
         &[0, 1, 0],
         &[1, 0, 1],
         &[0, 0, 1, 1],
         &[1, 1, 0],
         &[0, 1, 1, 0],
+        &[1, 0, 0, 1],
     ];
-    const PINNED_SEEDS: [u64; 5] = [
+    const PINNED_SEEDS: [u64; 6] = [
         0x0001_F0C5_0000_0001,
         0x0001_F0C5_0000_0002,
         0x0001_F0C5_0000_0003,
         0x0001_F0C5_0000_0004,
         0x0001_F0C5_0000_0005,
+        0x0001_F0C5_0000_0006,
     ];
     for (i, (name, body)) in bodies.into_iter().enumerate() {
         let body = Arc::new(body);
