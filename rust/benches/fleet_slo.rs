@@ -2,7 +2,7 @@
 //! tier, emitting `BENCH_fleet.json` so later PRs can track fleet-scale
 //! serving across the trajectory.
 //!
-//! Three phases, same client mix each time:
+//! Four phases, same client mix each time:
 //!   direct        — clients → a sharded origin reactor (the pre-cluster
 //!                   baseline, kept for trend continuity)
 //!   cluster_cold  — clients → router → edge prefix caches → origin,
@@ -10,8 +10,13 @@
 //!   cluster_warm  — same cluster again, edges warm: stage-prefix bytes
 //!                   are served from the edges, the origin only streams
 //!                   tails
+//!   cluster_chaos — a warm *faultable* cluster (2 origins, 2 edges)
+//!                   with a scripted kill/restart of the hot origin and
+//!                   the hot edge landing mid-run: every client must
+//!                   still finish, and accept→ModelReady p99 must stay
+//!                   within 3× the fault-free warm phase
 //!
-//! The JSON carries all three SLO reports (cluster ones with per-tier
+//! The JSON carries all four SLO reports (cluster ones with per-tier
 //! counter rows), a `tiered_ttfi` summary (accept→first-ModelReady p50
 //! per phase) and `warm_prefix_offload` — the warm-phase fraction of
 //! stage-prefix bytes served from edge caches, the PR's >= 50%
@@ -26,15 +31,18 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use prognet::fleet::chaos::{self, ChaosScript};
 use prognet::fleet::cluster::{Cluster, ClusterConfig};
 use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
+use prognet::fleet::placement::{HashRing, DEFAULT_VNODES};
 use prognet::fleet::slo::{SloReport, TierStats};
 use prognet::fleet::FleetConfig;
 use prognet::runtime::{Engine, ModelSession};
-use prognet::server::service::ServerConfig;
-use prognet::server::{Repository, Server};
+use prognet::server::service::{open_fetch, ServerConfig};
+use prognet::server::{FetchRequest, Repository, Server};
 use prognet::testutil::fixture;
 use prognet::util::json;
+use prognet::util::sync::Clock;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name)
@@ -49,6 +57,15 @@ fn ttfi_p50(report: &SloReport) -> f64 {
         .model_ready
         .as_ref()
         .map(|q| q.p50)
+        .unwrap_or(f64::NAN)
+}
+
+fn ttfi_p99(report: &SloReport) -> f64 {
+    report
+        .overall
+        .model_ready
+        .as_ref()
+        .map(|q| q.p99)
         .unwrap_or(f64::NAN)
 }
 
@@ -116,7 +133,7 @@ fn main() -> prognet::Result<()> {
 
     // ---- phases 2+3: through the cluster tier -------------------------
     let cluster = Cluster::start(
-        repo,
+        repo.clone(),
         ClusterConfig {
             origins: 1,
             edges: 2,
@@ -136,9 +153,63 @@ fn main() -> prognet::Result<()> {
     let tiers_after_cold = cluster.tiers();
 
     println!("\n== phase: cluster_warm (edges pre-filled) ==");
-    let warm =
-        run_fleet(cluster.addr(), &scenario, Some(runtime), &opts)?.with_tiers(cluster.tiers());
+    let warm = run_fleet(cluster.addr(), &scenario, Some(runtime.clone()), &opts)?
+        .with_tiers(cluster.tiers());
     println!("{}", warm.render());
+    drop(cluster);
+
+    // ---- phase 4: warm faultable cluster under scripted chaos ---------
+    let chaos_cluster = Cluster::start(
+        repo,
+        ClusterConfig {
+            origins: 2,
+            edges: 2,
+            workers_per_origin: workers,
+            prefix_stages: 2,
+            faultable: true,
+            // tier retries back off on virtual time; recovery comes from
+            // failover, not from sleeping out the outage
+            clock: Clock::manual(),
+            fleet: FleetConfig {
+                write_burst: 1024,
+                ..FleetConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )?;
+    // pre-warm so the script hits a serving tree, then aim the kills at
+    // the instances that actually carry dense3 (placement is model-keyed)
+    for _ in 0..4 {
+        let (mut s, _) = open_fetch(&chaos_cluster.addr(), &FetchRequest::new("dense3"))?;
+        let mut sink = Vec::new();
+        std::io::Read::read_to_end(&mut s, &mut sink)?;
+    }
+    let hot = |prefix: &str| {
+        let labels: Vec<String> = (0..2).map(|i| format!("{prefix}-{i}")).collect();
+        HashRing::new(&labels, DEFAULT_VNODES).place("dense3").unwrap()
+    };
+    let (ho, he) = (hot("origin"), hot("edge"));
+    let script = ChaosScript::parse(&format!(
+        "kill:origin:{ho}@150,restart:origin:{ho}@600,kill:edge:{he}@800,restart:edge:{he}@1100"
+    ))?;
+    let chaos_opts = FleetOptions {
+        // arrivals span every outage window in the script
+        ramp: Duration::from_millis(1500),
+        ..opts.clone()
+    };
+    println!("\n== phase: cluster_chaos (scripted origin/edge kill + restart) ==");
+    let chaos_report = std::thread::scope(|s| -> prognet::Result<SloReport> {
+        let cl = &chaos_cluster;
+        let sc = &script;
+        let h = s.spawn(move || chaos::apply(cl, sc, &Clock::real()));
+        let report = run_fleet(cl.addr(), &scenario, Some(runtime), &chaos_opts)?;
+        for line in h.join().expect("chaos thread panicked")? {
+            println!("chaos: {line}");
+        }
+        Ok(report)
+    })?
+    .with_tiers(chaos_cluster.tiers());
+    println!("{}", chaos_report.render());
 
     let edge_cold = tiers_after_cold.iter().find(|t| t.name == "edge").unwrap();
     let edge_warm = warm.tiers.iter().find(|t| t.name == "edge").unwrap();
@@ -148,12 +219,20 @@ fn main() -> prognet::Result<()> {
         ("direct_s", json::num(ttfi_p50(&direct))),
         ("cluster_cold_s", json::num(ttfi_p50(&cold))),
         ("cluster_warm_s", json::num(ttfi_p50(&warm))),
+        ("cluster_chaos_s", json::num(ttfi_p50(&chaos_report))),
     ]);
     println!(
-        "tiered TTFI p50: direct {:.4}s | cluster cold {:.4}s | cluster warm {:.4}s",
+        "tiered TTFI p50: direct {:.4}s | cluster cold {:.4}s | cluster warm {:.4}s \
+         | cluster chaos {:.4}s",
         ttfi_p50(&direct),
         ttfi_p50(&cold),
-        ttfi_p50(&warm)
+        ttfi_p50(&warm),
+        ttfi_p50(&chaos_report)
+    );
+    println!(
+        "chaos TTFI p99 {:.4}s vs warm p99 {:.4}s",
+        ttfi_p99(&chaos_report),
+        ttfi_p99(&warm)
     );
     if let Some(v) = warm_offload {
         println!("warm stage-prefix offload: {:.1}% served from edges", v * 100.0);
@@ -163,6 +242,7 @@ fn main() -> prognet::Result<()> {
         ("direct", direct.to_json()),
         ("cluster_cold", cold.to_json()),
         ("cluster_warm", warm.to_json()),
+        ("cluster_chaos", chaos_report.to_json()),
         ("tiered_ttfi", ttfi),
     ];
     if let Some(v) = warm_offload {
@@ -176,6 +256,7 @@ fn main() -> prognet::Result<()> {
             ("direct", &direct),
             ("cluster_cold", &cold),
             ("cluster_warm", &warm),
+            ("cluster_chaos", &chaos_report),
         ];
         for (phase, report) in phases {
             assert_eq!(report.clients(), scenario.total_clients(), "{phase}");
@@ -196,11 +277,25 @@ fn main() -> prognet::Result<()> {
             v >= 0.5,
             "warm edges must offload >= 50% of stage-prefix bytes, got {v:.3}"
         );
+        // the chaos script must genuinely land (and be recovered from) …
+        let retries: u64 = chaos_report.tiers.iter().map(|t| t.retries).sum();
+        let failovers: u64 = chaos_report.tiers.iter().map(|t| t.failovers).sum();
+        assert!(
+            retries + failovers >= 1,
+            "chaos phase exercised no tier retries or failovers"
+        );
+        // … without blowing the latency budget: p99 within 3× fault-free warm
+        let (chaos_p99, warm_p99) = (ttfi_p99(&chaos_report), ttfi_p99(&warm));
+        assert!(
+            chaos_p99 <= 3.0 * warm_p99,
+            "chaos TTFI p99 {chaos_p99:.4}s exceeds 3x warm p99 {warm_p99:.4}s"
+        );
     }
     println!(
         "§Perf target: accept→first-ModelReady p99 stays flat as the client count\n\
-         grows, and cluster_warm TTFI tracks direct while the origin streams only\n\
-         tails; track tiered_ttfi + warm_prefix_offload in BENCH_fleet.json across PRs."
+         grows, cluster_warm TTFI tracks direct while the origin streams only\n\
+         tails, and cluster_chaos p99 stays within 3x warm despite scripted\n\
+         kill/restarts; track tiered_ttfi + warm_prefix_offload in BENCH_fleet.json."
     );
     Ok(())
 }

@@ -18,6 +18,10 @@
 //! - `span-not-closed` — a span guard from `obs::begin`/`begin_child`
 //!   must be bound, not discarded where it is made (RAII ends the span
 //!   immediately, so a discarded guard records a zero-length span).
+//! - `raw-retry-loop` — hand-rolled retry loops (a `for`/`while` header
+//!   iterating over attempts/retries) are banned in protocol code; use
+//!   `util::retry::RetryPolicy` so every reconnect shares one budgeted,
+//!   jittered, clock-injected backoff schedule.
 //!
 //! Waivers: `// lint:allow <rule>` on the offending line, or a
 //! `<rule> <path>` entry in `lint-allow.txt` (regenerate with
@@ -30,13 +34,14 @@
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-const RULES: [&str; 6] = [
+const RULES: [&str; 7] = [
     "direct-sync-import",
     "unsafe-outside-allowlist",
     "wall-clock-in-protocol",
     "alloc-in-hot-path",
     "ordering-relaxed-shared",
     "span-not-closed",
+    "raw-retry-loop",
 ];
 
 /// Path prefixes whose non-test code is "protocol code" for the
@@ -148,6 +153,22 @@ fn is_protocol_file(file: &str) -> bool {
     PROTOCOL_PREFIXES.iter().any(|p| file.starts_with(p))
 }
 
+/// A hand-rolled retry loop: a `for`/`while` header driven by an
+/// attempt/retry counter. Protocol code must route reconnects through
+/// `util::retry::RetryPolicy` instead, so backoff schedules stay
+/// budgeted, jittered and clock-injected (plain `loop {}` bodies whose
+/// exits come from a `Retry::backoff()` call are fine — the header
+/// carries no attempt arithmetic).
+fn raw_retry_loop(code: &str) -> bool {
+    let t = code.trim_start();
+    if !(t.starts_with("for ") || t.starts_with("while ")) {
+        return false;
+    }
+    ["attempt", "attempts", "retry", "retries", "retried"]
+        .iter()
+        .any(|w| has_word(code, w))
+}
+
 /// A span guard discarded at birth. Two line shapes, both of which drop
 /// the guard — and therefore end the span — on the same statement:
 /// a bare statement-position begin call (`obs::begin("x");` — no `=`
@@ -228,6 +249,9 @@ fn scan_file(file: &str, content: &str, allow: &AllowList) -> Vec<Violation> {
         }
         if !in_tests && span_discarded(code) {
             push("span-not-closed", lineno, raw);
+        }
+        if !in_tests && is_protocol_file(file) && raw_retry_loop(code) {
+            push("raw-retry-loop", lineno, raw);
         }
     }
     out
@@ -437,6 +461,24 @@ mod tests {
         // test modules may discard guards deliberately
         let tested = "#[cfg(test)]\nmod tests {\n    fn f() { obs::begin(\"t\"); }\n}\n";
         assert!(scan("src/foo.rs", tested).is_empty());
+    }
+
+    #[test]
+    fn raw_retry_loops_flagged_in_protocol_code_only() {
+        let src = "for attempt in 0..3 {\n";
+        assert_eq!(scan("src/fleet/x.rs", src), vec!["raw-retry-loop"]);
+        assert_eq!(
+            scan("src/client/x.rs", "while retries < max_retries {\n"),
+            vec!["raw-retry-loop"]
+        );
+        // non-protocol paths, RetryPolicy-driven loops, and identifiers
+        // that merely embed the words are all fine
+        assert!(scan("src/util/retry.rs", src).is_empty());
+        assert!(scan("src/fleet/x.rs", "loop {\n").is_empty());
+        assert!(scan("src/fleet/x.rs", "for x in reentry_points {\n").is_empty());
+        // test modules may hand-roll loops to probe the retry machinery
+        let tested = "#[cfg(test)]\nmod tests {\n    fn f() { for attempt in 0..3 {} }\n}\n";
+        assert!(scan("src/fleet/x.rs", tested).is_empty());
     }
 
     #[test]

@@ -78,7 +78,7 @@ use std::path::PathBuf;
 use crate::util::sync::clock;
 use crate::util::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -96,6 +96,8 @@ use crate::runtime::{ApproxModel, InferOutput, ModelSession};
 use crate::server::proto::FetchRequest;
 use crate::server::service::request_on;
 use crate::util::pool::BoundedQueue;
+use crate::util::retry::{Retry, RetryPolicy};
+use crate::util::sync::Clock;
 
 /// Serial (paper "w/o concurrent") vs concurrent (§III-C) execution.
 ///
@@ -226,6 +228,11 @@ pub enum SessionEvent {
         /// 1-based resume counter within this session
         attempt: usize,
         source: ResumeSource,
+        /// jittered backoff slept before this reconnect dial, per the
+        /// session's [`RetryPolicy`] ([`Duration::ZERO`] for cache
+        /// resumes, which never sleep) — surfaced so tests can assert
+        /// the exact retry schedule via [`RetryPolicy::preview`]
+        backoff: Duration,
     },
     /// The session is done; always the last event.
     Finished(SessionSummary),
@@ -288,7 +295,7 @@ pub struct SessionBuilder {
     specs: Vec<ModelSpec>,
     mode: ExecMode,
     policy: InferencePolicy,
-    resume_retries: usize,
+    retry: RetryPolicy,
     cache_dir: Option<PathBuf>,
     runtimes: HashMap<String, Arc<ModelSession>>,
     workload: Option<Workload>,
@@ -309,7 +316,7 @@ impl SessionBuilder {
             specs: Vec::new(),
             mode: ExecMode::Concurrent,
             policy: InferencePolicy::EveryStage,
-            resume_retries: 2,
+            retry: RetryPolicy::default(),
             cache_dir: None,
             runtimes: HashMap::new(),
             workload: None,
@@ -375,9 +382,23 @@ impl SessionBuilder {
     /// On a dropped connection, reconnect at the last complete stage
     /// boundary up to this many times (default 2; 0 = fail fast).
     /// Single-model sessions only — a multiplexed session fails fast
-    /// (see [`ProgressiveSession::multiplex`]).
+    /// (see [`ProgressiveSession::multiplex`]). Reconnect dials are
+    /// spaced by the session's [`RetryPolicy`] (jittered exponential
+    /// backoff); use [`SessionBuilder::retry_policy`] to reshape it.
     pub fn resume_retries(mut self, retries: usize) -> Self {
-        self.resume_retries = retries;
+        let attempts = u32::try_from(retries).unwrap_or(u32::MAX - 1).saturating_add(1);
+        self.retry = self.retry.attempts(attempts);
+        self
+    }
+
+    /// Replace the reconnect backoff policy wholesale (attempts, base
+    /// delay, factor, jitter, deadline budget). The policy's attempt
+    /// count is 1 + the number of resumes — `resume_retries(n)` is sugar
+    /// for `attempts(n + 1)` on the current policy. The jitter stream is
+    /// salted with the model name, so the schedule is deterministic per
+    /// model and assertable via [`RetryPolicy::preview`].
+    pub fn retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
         self
     }
 
@@ -497,7 +518,7 @@ impl SessionBuilder {
             specs: self.specs,
             mode: self.mode,
             policy: self.policy,
-            resume_retries: self.resume_retries,
+            retry: self.retry,
             cache_dir: self.cache_dir,
             workload: self.workload,
             multiplex: self.multiplex,
@@ -641,7 +662,7 @@ struct DriverConfig {
     specs: Vec<ModelSpec>,
     mode: ExecMode,
     policy: InferencePolicy,
-    resume_retries: usize,
+    retry: RetryPolicy,
     cache_dir: Option<PathBuf>,
     workload: Option<Workload>,
     multiplex: bool,
@@ -833,7 +854,12 @@ impl StageCtx<'_> {
         drain_layers(self.q, self.gate, asm, &self.model, t)
     }
 
-    fn emit_resumed(&mut self, stage: usize, source: ResumeSource) -> Result<()> {
+    fn emit_resumed(
+        &mut self,
+        stage: usize,
+        source: ResumeSource,
+        backoff: Duration,
+    ) -> Result<()> {
         self.resumed += 1;
         if source == ResumeSource::Reconnect {
             self.reconnects += 1;
@@ -844,6 +870,7 @@ impl StageCtx<'_> {
             stage,
             attempt,
             source,
+            backoff,
         })
     }
 
@@ -958,7 +985,7 @@ impl StageCtx<'_> {
 /// Items forwarded from the download loop to the stage handler.
 enum WireItem {
     Event(TimedEvent),
-    Resumed { stage: usize },
+    Resumed { stage: usize, backoff: Duration },
 }
 
 /// Read the socket until the window completes, transparently resuming at
@@ -975,14 +1002,13 @@ enum WireItem {
 /// model-download sized (MBs), so both are deliberate.
 fn pump<F>(
     dl: &mut Downloader,
-    retries: usize,
+    mut retry: Retry,
     persist: Option<(&ModelCache, &FetchRequest)>,
     mut sink: F,
 ) -> Result<(f64, u64)>
 where
     F: FnMut(WireItem) -> Result<()>,
 {
-    let mut retries_left = retries;
     let mut t_last = 0.0;
     let mut persisted = dl.stage_boundary();
     while !dl.is_done() {
@@ -992,20 +1018,27 @@ where
                 Err(e) => {
                     // a failed reconnect (e.g. the outage is ongoing) also
                     // spends a retry rather than aborting while budget
-                    // remains
+                    // remains; each dial waits out the policy's jittered
+                    // backoff first
                     let mut last = e;
                     loop {
-                        if retries_left == 0 || !dl.can_resume() {
+                        if !dl.can_resume() {
                             return Err(last);
                         }
-                        retries_left -= 1;
+                        let Some(backoff) = retry.backoff() else {
+                            return Err(last);
+                        };
                         let boundary = dl.stage_boundary();
                         crate::log_warn!(
-                            "download interrupted ({last:#}); resuming at stage {boundary}"
+                            "download interrupted ({last:#}); resuming at stage {boundary} \
+                             after {backoff:?}"
                         );
                         match dl.resume_at_stage(boundary) {
                             Ok(()) => {
-                                sink(WireItem::Resumed { stage: boundary })?;
+                                sink(WireItem::Resumed {
+                                    stage: boundary,
+                                    backoff,
+                                })?;
                                 break;
                             }
                             Err(re) => last = re,
@@ -1162,7 +1195,7 @@ fn warm_start(
     for &(layer, stage) in cached_layers.iter().filter(|&&(_, st)| st >= boundary) {
         emit_layer_ready(ctx.q, ctx.gate, &asm, &ctx.model, layer, stage, t)?;
     }
-    ctx.emit_resumed(boundary, ResumeSource::Cache)?;
+    ctx.emit_resumed(boundary, ResumeSource::Cache, Duration::ZERO)?;
     Ok(Some((asm, dl, prefix_len as u64)))
 }
 
@@ -1176,7 +1209,7 @@ fn drive_single(
         specs,
         mode,
         policy,
-        resume_retries,
+        retry,
         cache_dir,
         workload,
         multiplex: _,
@@ -1254,12 +1287,18 @@ fn drive_single(
     // after a warm start, which already aligned it before emitting)
     ctx.start = dl.start_instant();
     let persist: Option<(&ModelCache, &FetchRequest)> = cache.as_ref().map(|c| (c, &req));
+    // one backoff sequence per download, salted by the model name so the
+    // jitter schedule is deterministic per model (and decorrelated across
+    // a fleet of sessions fetching different models)
+    let retry = retry.start(Clock::real(), crate::fleet::placement::fnv1a(model.as_bytes()));
 
     let (t_transfer_complete, bytes, captured) = match mode {
         ExecMode::Serial => {
             let _ = dl.set_small_recv_buffer();
-            let (t_last, bytes) = pump(&mut dl, resume_retries, persist, |item| match item {
-                WireItem::Resumed { stage } => ctx.emit_resumed(stage, ResumeSource::Reconnect),
+            let (t_last, bytes) = pump(&mut dl, retry, persist, |item| match item {
+                WireItem::Resumed { stage, backoff } => {
+                    ctx.emit_resumed(stage, ResumeSource::Reconnect, backoff)
+                }
                 WireItem::Event(TimedEvent { t, event }) => match event {
                     ParserEvent::Manifest(m) => {
                         asm_opt = Some(ctx.make_assembler(*m)?);
@@ -1293,7 +1332,7 @@ fn drive_single(
                 let wp = wire.clone();
                 let downloader =
                     scope.spawn(move || -> (Result<(f64, u64)>, Option<Vec<u8>>) {
-                        let res = pump(&mut dl, resume_retries, persist, |item| {
+                        let res = pump(&mut dl, retry, persist, |item| {
                             anyhow::ensure!(wp.push(item), "event queue closed early");
                             Ok(())
                         });
@@ -1315,8 +1354,8 @@ fn drive_single(
                             wire.pop()
                         };
                         match next {
-                            Some(WireItem::Resumed { stage }) => {
-                                ctx.emit_resumed(stage, ResumeSource::Reconnect)?;
+                            Some(WireItem::Resumed { stage, backoff }) => {
+                                ctx.emit_resumed(stage, ResumeSource::Reconnect, backoff)?;
                             }
                             Some(WireItem::Event(TimedEvent { t, event })) => match event {
                                 ParserEvent::Manifest(m) => {

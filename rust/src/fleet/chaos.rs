@@ -1,0 +1,210 @@
+//! `fleet::chaos` — scripted fault schedules for a running [`Cluster`].
+//!
+//! A chaos script is a comma-separated list of timed control-plane
+//! actions plus (optionally) client-path fault rules, e.g.
+//!
+//! ```text
+//! kill:origin:0@200,restart:origin:0@900,restart:edge:1@600,
+//! sever:after=9000:every=7,seed=42
+//! ```
+//!
+//! * `ACTION:TIER:INDEX@MS` items drive the cluster: `kill` / `restart`
+//!   on `origin` or `edge` (which need a [`Cluster`] started with
+//!   `faultable=true`), and `drain` / `undrain` on `edge`. `@MS` is the
+//!   offset, in milliseconds, from the moment [`apply`] starts.
+//! * everything else (`sever`, `corrupt`, `delay`, `seed=`) is collected
+//!   into a [`FaultSpec`] for the *client path* — callers front the
+//!   router with a [`crate::netsim::FaultProxy`] running
+//!   [`ChaosScript::client_faults`] so client connections get cut
+//!   mid-frame on the same seeded schedule.
+//!
+//! [`apply`] is blocking by design: it sleeps to each offset on the
+//! clock it is given and returns a log of what it did. Run it on a
+//! scoped thread next to the load generator, with a *real* clock — the
+//! cluster's tier retries may run on a manual clock (so recovery never
+//! waits out real outages), but the outages themselves must land while
+//! real load is in flight.
+
+#![forbid(unsafe_code)]
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::netsim::fault::FaultSpec;
+use crate::util::sync::Clock;
+
+use super::cluster::Cluster;
+
+/// One timed control-plane action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    KillOrigin(usize),
+    RestartOrigin(usize),
+    KillEdge(usize),
+    RestartEdge(usize),
+    DrainEdge(usize),
+    UndrainEdge(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosEvent {
+    /// offset from the start of [`apply`]
+    pub at: Duration,
+    pub action: ChaosAction,
+}
+
+/// A parsed chaos script: ordered cluster events + client-path faults.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosScript {
+    events: Vec<ChaosEvent>,
+    client_faults: FaultSpec,
+    has_client_rules: bool,
+}
+
+impl ChaosScript {
+    /// Parse the grammar described in the module docs.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        let mut client_items: Vec<&str> = Vec::new();
+        for item in text.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let head = item.split([':', '=']).next().unwrap_or_default();
+            match head {
+                "kill" | "restart" | "drain" | "undrain" => {
+                    events.push(parse_event(item)?);
+                }
+                "sever" | "corrupt" | "delay" | "seed" => client_items.push(item),
+                other => bail!("unknown chaos item '{other}' in '{item}'"),
+            }
+        }
+        events.sort_by_key(|e| e.at);
+        let has_client_rules = client_items.iter().any(|i| !i.starts_with("seed"));
+        let client_faults = FaultSpec::parse(&client_items.join(","))?;
+        Ok(Self {
+            events,
+            client_faults,
+            has_client_rules,
+        })
+    }
+
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    /// Fault rules for the client path (pass-through when the script
+    /// has none; check [`ChaosScript::has_client_rules`]).
+    pub fn client_faults(&self) -> &FaultSpec {
+        &self.client_faults
+    }
+
+    pub fn has_client_rules(&self) -> bool {
+        self.has_client_rules
+    }
+
+    /// Offset of the last scripted event ([`Duration::ZERO`] if none).
+    pub fn last_at(&self) -> Duration {
+        self.events.last().map_or(Duration::ZERO, |e| e.at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && !self.has_client_rules
+    }
+}
+
+/// Parse `ACTION:TIER:INDEX@MS`.
+fn parse_event(item: &str) -> Result<ChaosEvent> {
+    let (spec, ms) = item
+        .split_once('@')
+        .with_context(|| format!("chaos item '{item}': missing @MS offset"))?;
+    let at = Duration::from_millis(
+        ms.parse()
+            .with_context(|| format!("chaos item '{item}': bad offset '{ms}'"))?,
+    );
+    let parts: Vec<&str> = spec.split(':').collect();
+    let [action, tier, index] = parts[..] else {
+        bail!("chaos item '{item}': want ACTION:TIER:INDEX@MS");
+    };
+    let i: usize = index
+        .parse()
+        .with_context(|| format!("chaos item '{item}': bad index '{index}'"))?;
+    let action = match (action, tier) {
+        ("kill", "origin") => ChaosAction::KillOrigin(i),
+        ("restart", "origin") => ChaosAction::RestartOrigin(i),
+        ("kill", "edge") => ChaosAction::KillEdge(i),
+        ("restart", "edge") => ChaosAction::RestartEdge(i),
+        ("drain", "edge") => ChaosAction::DrainEdge(i),
+        ("undrain", "edge") => ChaosAction::UndrainEdge(i),
+        _ => bail!("chaos item '{item}': no action '{action}' for tier '{tier}'"),
+    };
+    Ok(ChaosEvent { at, action })
+}
+
+/// Run the script against `cluster`, sleeping to each event offset on
+/// `clock`. Blocks until the last event has been applied; returns one
+/// log line per event. Actions that fail (e.g. `kill` on a
+/// non-faultable cluster) abort with the error — a chaos run that
+/// cannot inject its faults must not silently pass as "survived".
+pub fn apply(cluster: &Cluster, script: &ChaosScript, clock: &Clock) -> Result<Vec<String>> {
+    let mut log = Vec::with_capacity(script.events.len());
+    let mut now = Duration::ZERO;
+    for ev in &script.events {
+        if ev.at > now {
+            clock.sleep(ev.at - now);
+            now = ev.at;
+        }
+        match ev.action {
+            ChaosAction::KillOrigin(i) => cluster.kill_origin(i)?,
+            ChaosAction::RestartOrigin(i) => cluster.restart_origin(i)?,
+            ChaosAction::KillEdge(i) => cluster.kill_edge(i)?,
+            ChaosAction::RestartEdge(i) => cluster.restart_edge(i)?,
+            ChaosAction::DrainEdge(i) => cluster.drain_edge(i),
+            ChaosAction::UndrainEdge(i) => cluster.undrain_edge(i),
+        }
+        log.push(format!("{:>6}ms {:?}", ev.at.as_millis(), ev.action));
+    }
+    Ok(log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn script_grammar_parses_and_orders_events() {
+        let s = ChaosScript::parse(
+            "restart:origin:0@900,kill:origin:0@200,drain:edge:1@50,\
+             undrain:edge:1@400,sever:after=9000:every=7,seed=42",
+        )
+        .unwrap();
+        let times: Vec<u128> = s.events().iter().map(|e| e.at.as_millis()).collect();
+        assert_eq!(times, vec![50, 200, 400, 900], "events sorted by offset");
+        assert_eq!(s.events()[1].action, ChaosAction::KillOrigin(0));
+        assert_eq!(s.last_at(), Duration::from_millis(900));
+        assert!(s.has_client_rules(), "sever rule rides the client path");
+        assert!(!s.client_faults().is_pass_through());
+        let f = s.client_faults().decide(7);
+        assert_eq!(f.sever_after, Some(9000), "every=7 hits conn 7");
+    }
+
+    #[test]
+    fn seed_only_scripts_have_no_client_rules() {
+        let s = ChaosScript::parse("kill:edge:0@10,seed=7").unwrap();
+        assert!(!s.has_client_rules());
+        assert!(!s.is_empty());
+        assert!(ChaosScript::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_items_are_rejected() {
+        for bad in [
+            "kill:origin:0",      // missing @MS
+            "kill:origin@5",      // missing index
+            "explode:origin:0@5", // unknown action
+            "kill:router:0@5",    // no such tier action
+            "kill:origin:x@5",    // bad index
+            "kill:origin:0@soon", // bad offset
+        ] {
+            assert!(ChaosScript::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+}

@@ -16,19 +16,32 @@
 //! are exported as [`crate::fleet::slo::TierStats`] rows for
 //! `BENCH_fleet.json` (edge hit rates, origin byte offload, drains).
 //!
+//! With [`ClusterConfig::faultable`] set, every origin and edge boots
+//! behind a pass-through [`FaultProxy`] that gives it a *stable*
+//! address: [`Cluster::kill_origin`] / [`Cluster::restart_origin`] (and
+//! the edge twins) replace the process behind the proxy on a fresh
+//! ephemeral port without any peer re-learning addresses — the shape of
+//! a crash-and-respawn under an L4 VIP, and the mechanism `fleet::chaos`
+//! scripts drive. A killed tier's proxy drops accepted connections
+//! immediately, so in-flight streams die mid-transfer and the
+//! router/edge retry and failover paths do the recovering.
+//!
 //! Shutdown order is front-to-back (router, edges, origins) so no tier
 //! ever dials a peer that is already gone.
 
 #![forbid(unsafe_code)]
 
+use std::net::SocketAddr;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::netsim::fault::{FaultProxy, FaultSpec};
 use crate::quant::Schedule;
 use crate::server::repository::Repository;
 use crate::server::service::{Server, ServerConfig};
-use crate::util::sync::Arc;
+use crate::util::retry::RetryPolicy;
+use crate::util::sync::{Arc, Clock, Mutex};
 
 use super::edge::{Edge, EdgeConfig};
 use super::router::{Router, RouterConfig};
@@ -51,10 +64,25 @@ pub struct ClusterConfig {
     pub fleet: FleetConfig,
     pub health_interval: Duration,
     pub io_timeout: Duration,
+    /// hard LRU byte budget for every edge's prefix cache
+    pub edge_cache_budget_bytes: usize,
+    /// demand-driven prefix deepening threshold (0 disables)
+    pub edge_deepen_after: u32,
+    /// budgeted backoff for edge→origin fills and tail relays
+    pub edge_retry: RetryPolicy,
+    /// budgeted backoff for router dials and mid-stream failover
+    pub router_retry: RetryPolicy,
+    /// time source for all tier retry backoffs (manual in chaos tests,
+    /// so recovery never waits out real outages)
+    pub clock: Clock,
+    /// front every origin and edge with a stable [`FaultProxy`] so the
+    /// kill/restart methods work; costs one extra local hop per tier
+    pub faultable: bool,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
+        let edge = EdgeConfig::default();
         Self {
             origins: 1,
             edges: 2,
@@ -65,6 +93,12 @@ impl Default for ClusterConfig {
             fleet: FleetConfig::default(),
             health_interval: Duration::from_millis(250),
             io_timeout: Duration::from_secs(10),
+            edge_cache_budget_bytes: edge.cache_budget_bytes,
+            edge_deepen_after: edge.deepen_after,
+            edge_retry: edge.retry,
+            router_retry: RouterConfig::default().retry,
+            clock: Clock::real(),
+            faultable: false,
         }
     }
 }
@@ -72,8 +106,18 @@ impl Default for ClusterConfig {
 /// A running cluster (shuts down front-to-back on drop).
 pub struct Cluster {
     router: Router,
-    edges: Vec<Edge>,
-    origins: Vec<Server>,
+    // per-slot locks: chaos kills/restarts swap one instance while the
+    // rest of the cluster keeps serving
+    edges: Vec<Mutex<Edge>>,
+    origins: Vec<Mutex<Server>>,
+    /// stable fronts, index-aligned with `origins`/`edges`; empty unless
+    /// `cfg.faultable`
+    origin_proxies: Vec<FaultProxy>,
+    edge_proxies: Vec<FaultProxy>,
+    /// what edges dial for origin traffic (proxy fronts when faultable)
+    origin_addrs: Vec<SocketAddr>,
+    repo: Arc<Repository>,
+    cfg: ClusterConfig,
 }
 
 impl Cluster {
@@ -85,32 +129,43 @@ impl Cluster {
         anyhow::ensure!(cfg.edges >= 1, "cluster needs at least one edge");
         let mut origins = Vec::with_capacity(cfg.origins);
         for _ in 0..cfg.origins {
-            origins.push(Server::start_fleet(
-                "127.0.0.1:0",
-                repo.clone(),
-                ServerConfig {
-                    default_speed_mbps: None,
-                    workers: cfg.workers_per_origin,
-                    default_schedule: cfg.default_schedule.clone(),
-                },
-                cfg.fleet.clone(),
-            )?);
+            origins.push(start_origin(&repo, &cfg)?);
         }
-        let origin_addrs: Vec<_> = origins.iter().map(|o| o.addr()).collect();
+        let mut origin_proxies = Vec::new();
+        let origin_addrs: Vec<SocketAddr> = if cfg.faultable {
+            for o in &origins {
+                origin_proxies.push(FaultProxy::start(
+                    o.addr(),
+                    FaultSpec::pass_through(),
+                    cfg.clock.clone(),
+                )?);
+            }
+            origin_proxies.iter().map(|p| p.addr()).collect()
+        } else {
+            origins.iter().map(|o| o.addr()).collect()
+        };
 
         let mut edges = Vec::with_capacity(cfg.edges);
         for _ in 0..cfg.edges {
             edges.push(Edge::start(
                 "127.0.0.1:0",
                 origin_addrs.clone(),
-                EdgeConfig {
-                    prefix_stages: cfg.prefix_stages,
-                    origin_speed_mbps: cfg.origin_speed_mbps,
-                    io_timeout: cfg.io_timeout,
-                },
+                edge_config(&cfg),
             )?);
         }
-        let edge_addrs: Vec<_> = edges.iter().map(|e| e.addr()).collect();
+        let mut edge_proxies = Vec::new();
+        let edge_addrs: Vec<SocketAddr> = if cfg.faultable {
+            for e in &edges {
+                edge_proxies.push(FaultProxy::start(
+                    e.addr(),
+                    FaultSpec::pass_through(),
+                    cfg.clock.clone(),
+                )?);
+            }
+            edge_proxies.iter().map(|p| p.addr()).collect()
+        } else {
+            edges.iter().map(|e| e.addr()).collect()
+        };
 
         let router = Router::start(
             "127.0.0.1:0",
@@ -118,13 +173,20 @@ impl Cluster {
             RouterConfig {
                 health_interval: cfg.health_interval,
                 io_timeout: cfg.io_timeout,
+                retry: cfg.router_retry.clone(),
+                clock: cfg.clock.clone(),
                 ..RouterConfig::default()
             },
         )?;
         Ok(Self {
             router,
-            edges,
-            origins,
+            edges: edges.into_iter().map(Mutex::new).collect(),
+            origins: origins.into_iter().map(Mutex::new).collect(),
+            origin_proxies,
+            edge_proxies,
+            origin_addrs,
+            repo,
+            cfg,
         })
     }
 
@@ -137,12 +199,32 @@ impl Cluster {
         &self.router
     }
 
-    pub fn edges(&self) -> &[Edge] {
-        &self.edges
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn origin_count(&self) -> usize {
+        self.origins.len()
+    }
+
+    /// Run `f` against edge `i` (held under its slot lock, so a
+    /// concurrent chaos restart cannot swap it mid-call).
+    pub fn with_edge<R>(&self, i: usize, f: impl FnOnce(&Edge) -> R) -> R {
+        f(&self.edges[i].lock().unwrap())
+    }
+
+    pub fn edge_stats(&self) -> Vec<Arc<ServerStats>> {
+        self.edges
+            .iter()
+            .map(|e| e.lock().unwrap().stats().clone())
+            .collect()
     }
 
     pub fn origin_stats(&self) -> Vec<Arc<ServerStats>> {
-        self.origins.iter().map(|o| o.stats_arc()).collect()
+        self.origins
+            .iter()
+            .map(|o| o.lock().unwrap().stats_arc())
+            .collect()
     }
 
     /// Begin draining edge `i` (rolling restart); see [`Router::drain`].
@@ -154,11 +236,84 @@ impl Cluster {
         self.router.undrain(i);
     }
 
+    fn ensure_faultable(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.cfg.faultable,
+            "cluster was not started with faultable=true"
+        );
+        Ok(())
+    }
+
+    /// The stable front of origin `i` (None unless faultable).
+    pub fn origin_proxy(&self, i: usize) -> Option<&FaultProxy> {
+        self.origin_proxies.get(i)
+    }
+
+    /// The stable front of edge `i` (None unless faultable).
+    pub fn edge_proxy(&self, i: usize) -> Option<&FaultProxy> {
+        self.edge_proxies.get(i)
+    }
+
+    /// Crash origin `i`: its stable front starts dropping connections
+    /// (in-flight streams die mid-transfer) and the server behind it is
+    /// torn down. Requires [`ClusterConfig::faultable`].
+    pub fn kill_origin(&self, i: usize) -> Result<()> {
+        self.ensure_faultable()?;
+        let proxy = self.origin_proxies.get(i).context("no such origin")?;
+        proxy.set_down(true);
+        self.origins[i].lock().unwrap().shutdown();
+        crate::log_info!("chaos: origin {i} killed");
+        Ok(())
+    }
+
+    /// Respawn origin `i` on a fresh ephemeral port behind its stable
+    /// front. Counters restart from zero, as a real respawn's would.
+    pub fn restart_origin(&self, i: usize) -> Result<()> {
+        self.ensure_faultable()?;
+        let proxy = self.origin_proxies.get(i).context("no such origin")?;
+        let fresh = start_origin(&self.repo, &self.cfg)?;
+        proxy.set_upstream(fresh.addr());
+        proxy.set_down(false);
+        *self.origins[i].lock().unwrap() = fresh;
+        crate::log_info!("chaos: origin {i} restarted");
+        Ok(())
+    }
+
+    /// Crash edge `i` (see [`Cluster::kill_origin`]); the router's
+    /// per-connection failover re-places its traffic on surviving edges.
+    pub fn kill_edge(&self, i: usize) -> Result<()> {
+        self.ensure_faultable()?;
+        let proxy = self.edge_proxies.get(i).context("no such edge")?;
+        proxy.set_down(true);
+        self.edges[i].lock().unwrap().shutdown();
+        crate::log_info!("chaos: edge {i} killed");
+        Ok(())
+    }
+
+    /// Respawn edge `i` behind its stable front. The cache restarts
+    /// cold — exactly what a real edge respawn loses.
+    pub fn restart_edge(&self, i: usize) -> Result<()> {
+        self.ensure_faultable()?;
+        let proxy = self.edge_proxies.get(i).context("no such edge")?;
+        let fresh = Edge::start(
+            "127.0.0.1:0",
+            self.origin_addrs.clone(),
+            edge_config(&self.cfg),
+        )?;
+        proxy.set_upstream(fresh.addr());
+        proxy.set_down(false);
+        *self.edges[i].lock().unwrap() = fresh;
+        crate::log_info!("chaos: edge {i} restarted");
+        Ok(())
+    }
+
     /// Per-tier counter snapshot for SLO reports: one row per tier, edges
     /// and origins aggregated across their instances.
     pub fn tiers(&self) -> Vec<TierStats> {
-        let edge_stats: Vec<&ServerStats> = self.edges.iter().map(|e| e.stats().as_ref()).collect();
-        let origin_stats: Vec<&ServerStats> = self.origins.iter().map(|o| o.stats()).collect();
+        let edge_arcs = self.edge_stats();
+        let origin_arcs = self.origin_stats();
+        let edge_stats: Vec<&ServerStats> = edge_arcs.iter().map(|s| s.as_ref()).collect();
+        let origin_stats: Vec<&ServerStats> = origin_arcs.iter().map(|s| s.as_ref()).collect();
         vec![
             TierStats::from_stats("router", &[self.router.stats().as_ref()]),
             TierStats::from_stats("edge", &edge_stats),
@@ -168,12 +323,43 @@ impl Cluster {
 
     pub fn shutdown(&mut self) {
         self.router.shutdown();
+        for p in &mut self.edge_proxies {
+            p.shutdown();
+        }
         for e in &mut self.edges {
-            e.shutdown();
+            e.lock().unwrap().shutdown();
+        }
+        for p in &mut self.origin_proxies {
+            p.shutdown();
         }
         for o in &mut self.origins {
-            o.shutdown();
+            o.lock().unwrap().shutdown();
         }
+    }
+}
+
+fn start_origin(repo: &Arc<Repository>, cfg: &ClusterConfig) -> Result<Server> {
+    Server::start_fleet(
+        "127.0.0.1:0",
+        repo.clone(),
+        ServerConfig {
+            default_speed_mbps: None,
+            workers: cfg.workers_per_origin,
+            default_schedule: cfg.default_schedule.clone(),
+        },
+        cfg.fleet.clone(),
+    )
+}
+
+fn edge_config(cfg: &ClusterConfig) -> EdgeConfig {
+    EdgeConfig {
+        prefix_stages: cfg.prefix_stages,
+        origin_speed_mbps: cfg.origin_speed_mbps,
+        io_timeout: cfg.io_timeout,
+        cache_budget_bytes: cfg.edge_cache_budget_bytes,
+        deepen_after: cfg.edge_deepen_after,
+        retry: cfg.edge_retry.clone(),
+        clock: cfg.clock.clone(),
     }
 }
 
@@ -257,6 +443,38 @@ mod tests {
             t0.elapsed() < std::time::Duration::from_secs(3),
             "cluster shutdown took {:?}",
             t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn faultable_cluster_survives_origin_kill_and_restart() {
+        let repo = Arc::new(Repository::new(
+            fixture::executable_models("cluster-faultable").unwrap(),
+        ));
+        let cfg = ClusterConfig {
+            origins: 2,
+            faultable: true,
+            ..ClusterConfig::default()
+        };
+        let cluster = Cluster::start(repo.clone(), cfg).unwrap();
+        let expect = repo
+            .container("dense3", &Schedule::paper_default())
+            .unwrap();
+        let fetch = |note: &str| {
+            let (mut s, _) = open_fetch(&cluster.addr(), &FetchRequest::new("dense3")).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            assert_eq!(&got[..], &expect[..], "corrupt bytes {note}");
+        };
+        fetch("before the kill");
+        cluster.kill_origin(0).unwrap();
+        // the edge's ring walk + budgeted retry must reach origin 1
+        fetch("with origin 0 down");
+        cluster.restart_origin(0).unwrap();
+        fetch("after the restart");
+        assert!(
+            cluster.kill_origin(9).is_err(),
+            "out-of-range kill must error"
         );
     }
 }

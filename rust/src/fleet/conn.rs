@@ -411,6 +411,7 @@ impl<S: Read + Write> Conn<S> {
                         remaining: body.len() as u64,
                         container_len: body.len() as u64,
                         stages: None,
+                        generation: None,
                     };
                     let mut head = Vec::new();
                     proto::write_ok(&mut head, &resp).expect("status frame into Vec");
@@ -467,6 +468,7 @@ impl<S: Read + Write> Conn<S> {
             remaining: (selected_len - off) as u64,
             container_len: container.len() as u64,
             stages,
+            generation: Some(container.generation()),
         };
         let mut head = Vec::new();
         proto::write_ok(&mut head, &resp).expect("status frame into Vec");

@@ -28,9 +28,29 @@
 //! (never clamped by origin admission degrade, which guarantees at least
 //! one stage), learn the stage count from the manifest, then `[1, k)` —
 //! and the assembled prefix is re-validated frame-by-frame (CRC) before
-//! it is published. If an origin's `container` length ever disagrees
-//! with the cached entry (model re-encoded), the entry is invalidated
-//! and the request retried against a fresh fill.
+//! it is published. A failed fill is **not** cached (errors fall out of
+//! the flight), so waiting requests are never poisoned by a fill that
+//! died mid-transfer.
+//!
+//! Robustness (see `docs/ROBUSTNESS.md`):
+//!
+//! - **Staleness.** Origins stamp a container-generation hint on every
+//!   status frame; a tail fetch whose generation (or container length)
+//!   disagrees with the cached entry drops the prefix eagerly and the
+//!   request retries against a fresh fill. The cached bytes are also CRC
+//!   re-validated before every serve, so a bit-flipped cache entry is
+//!   refilled instead of relayed.
+//! - **Bounded memory.** The prefix cache is LRU with a byte budget
+//!   ([`EdgeConfig::cache_budget_bytes`]); eviction bumps
+//!   `cache_evictions` and the budget is a hard cap.
+//! - **Budgeted retry.** Origin dials (fills and tail relays) retry
+//!   under the shared [`crate::util::retry`] policy — exponential
+//!   backoff, deterministic jitter, deadline cap — walking the ring past
+//!   origins that refused. Server `ERR` frames are authoritative and
+//!   never retried.
+//! - **Prefix deepening.** When requests keep crossing past the cached
+//!   prefix ([`EdgeConfig::deepen_after`]), the next fill goes one stage
+//!   deeper, so a hot tail migrates toward the edge on demand.
 //!
 //! Concurrency model: blocking sockets, one thread per connection with a
 //! small stack. That is deliberately simpler than the origin's sharded
@@ -39,6 +59,7 @@
 
 #![forbid(unsafe_code)]
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
@@ -52,10 +73,11 @@ use crate::obs::{self, TraceCtx};
 use crate::server::proto::{self, FetchRequest, FetchResponse};
 use crate::server::service::{open_fetch, request_on};
 use crate::util::flight::SingleFlight;
+use crate::util::retry::RetryPolicy;
 use crate::util::sync::atomic::{AtomicBool, Ordering};
-use crate::util::sync::Arc;
+use crate::util::sync::{Arc, Clock, Mutex};
 
-use super::placement::{HashRing, DEFAULT_VNODES};
+use super::placement::{fnv1a, HashRing, DEFAULT_VNODES};
 use super::ServerStats;
 
 /// Cache key: model name + requested schedule widths (None = origin
@@ -75,6 +97,18 @@ pub struct EdgeConfig {
     /// per-socket read timeout so handler threads cannot outlive a hung
     /// peer forever
     pub io_timeout: Duration,
+    /// hard byte cap for the prefix cache: LRU entries are evicted
+    /// (bumping `cache_evictions`) until the total fits. An entry larger
+    /// than the whole budget is itself evicted after serving.
+    pub cache_budget_bytes: usize,
+    /// after this many requests that crossed past the cached prefix of
+    /// a model (while deeper stages exist), the prefix is refilled one
+    /// stage deeper. 0 disables deepening.
+    pub deepen_after: u32,
+    /// budgeted retry policy for origin dials (fills and tail relays)
+    pub retry: RetryPolicy,
+    /// time source for retry backoff (virtual in chaos tests)
+    pub clock: Clock,
 }
 
 impl Default for EdgeConfig {
@@ -83,6 +117,13 @@ impl Default for EdgeConfig {
             prefix_stages: 2,
             origin_speed_mbps: None,
             io_timeout: Duration::from_secs(10),
+            cache_budget_bytes: 64 << 20,
+            deepen_after: 8,
+            retry: RetryPolicy::new()
+                .attempts(3)
+                .base_delay(Duration::from_millis(20))
+                .budget(Duration::from_secs(5)),
+            clock: Clock::real(),
         }
     }
 }
@@ -90,11 +131,35 @@ impl Default for EdgeConfig {
 /// One cached, validated stage prefix of a container.
 struct PrefixEntry {
     /// container bytes `[0, prefix_len)`: preamble + stages `[0, k)`,
-    /// where k is `prefix_stages` clamped to the model's stage count
+    /// where k is the fill depth clamped to the model's stage count
     bytes: Vec<u8>,
     index: StageIndex,
     prefix_len: usize,
     container_len: u64,
+    /// stages cached (`k`) and the model's total stage count
+    stages_cached: u32,
+    total_stages: u32,
+    /// origin's container-generation hint at fill time (None = origin
+    /// predates the hint)
+    generation: Option<u64>,
+}
+
+/// LRU byte accounting over the published prefix entries.
+#[derive(Default)]
+struct LruState {
+    /// keys from least- to most-recently used
+    order: Vec<Key>,
+    sizes: HashMap<Key, usize>,
+    total: usize,
+}
+
+/// Per-key demand tracking for prefix deepening.
+#[derive(Default, Clone)]
+struct PrefixTuning {
+    /// requests that crossed past the cached prefix since the last refill
+    crossings: u32,
+    /// fill depth override (stages); None = `cfg.prefix_stages`
+    depth: Option<u32>,
 }
 
 /// Running edge node (shuts down on drop).
@@ -103,6 +168,7 @@ pub struct Edge {
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
+    inner: Arc<Inner>,
 }
 
 struct Inner {
@@ -110,7 +176,92 @@ struct Inner {
     ring: HashRing,
     cfg: EdgeConfig,
     cache: SingleFlight<Key, Arc<PrefixEntry>>,
+    lru: Mutex<LruState>,
+    tuning: Mutex<HashMap<Key, PrefixTuning>>,
     stats: Arc<ServerStats>,
+}
+
+impl Inner {
+    /// Record `key` as most-recently used at `size` bytes, then evict
+    /// LRU entries until the cache fits its byte budget again.
+    fn lru_touch(&self, key: &Key, size: usize) {
+        let mut lru = self.lru.lock().unwrap();
+        if let Some(prev) = lru.sizes.insert(key.clone(), size) {
+            lru.total -= prev;
+        }
+        lru.total += size;
+        lru.order.retain(|k| k != key);
+        lru.order.push(key.clone());
+        while lru.total > self.cfg.cache_budget_bytes && !lru.order.is_empty() {
+            let victim = lru.order.remove(0);
+            if let Some(sz) = lru.sizes.remove(&victim) {
+                lru.total -= sz;
+            }
+            self.cache.invalidate(&victim);
+            self.stats.cache_evictions.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Forget a key's byte accounting (entry left the cache for a
+    /// non-eviction reason).
+    fn lru_forget(&self, key: &Key) {
+        let mut lru = self.lru.lock().unwrap();
+        if let Some(sz) = lru.sizes.remove(key) {
+            lru.total -= sz;
+        }
+        lru.order.retain(|k| k != key);
+    }
+
+    /// Drop a prefix for staleness (generation/length mismatch, CRC
+    /// failure) and count the invalidation.
+    fn drop_stale(&self, key: &Key) {
+        if self.cache.invalidate(key) {
+            self.stats.invalidations.fetch_add(1, Ordering::SeqCst);
+        }
+        self.lru_forget(key);
+    }
+
+    /// A request crossed past the cached prefix: once `deepen_after`
+    /// crossings accumulate, schedule a one-stage-deeper refill (the
+    /// current request keeps serving from the entry it already holds).
+    fn note_crossing(&self, key: &Key, entry: &PrefixEntry) {
+        if self.cfg.deepen_after == 0 || entry.stages_cached >= entry.total_stages {
+            return;
+        }
+        let deepen = {
+            let mut tuning = self.tuning.lock().unwrap();
+            let t = tuning.entry(key.clone()).or_default();
+            t.crossings += 1;
+            if t.crossings >= self.cfg.deepen_after {
+                t.crossings = 0;
+                let next = (entry.stages_cached + 1).min(entry.total_stages);
+                t.depth = Some(t.depth.unwrap_or(0).max(next));
+                true
+            } else {
+                false
+            }
+        };
+        if deepen {
+            self.cache.invalidate(key);
+            self.lru_forget(key);
+            crate::log_info!(
+                "edge deepening {} to [0, {})",
+                key.0,
+                entry.stages_cached + 1
+            );
+        }
+    }
+
+    /// Fill depth for a key: the deepened override if demand earned one,
+    /// else the configured default.
+    fn fill_depth(&self, key: &Key) -> u32 {
+        self.tuning
+            .lock()
+            .unwrap()
+            .get(key)
+            .and_then(|t| t.depth)
+            .unwrap_or(self.cfg.prefix_stages)
+    }
 }
 
 impl Edge {
@@ -130,10 +281,13 @@ impl Edge {
             origins,
             cfg,
             cache: SingleFlight::new(),
+            lru: Mutex::new(LruState::default()),
+            tuning: Mutex::new(HashMap::new()),
             stats: stats.clone(),
         });
         let accept = {
             let stop = stop.clone();
+            let inner = inner.clone();
             std::thread::Builder::new()
                 .name("prognet-edge-accept".into())
                 .spawn(move || accept_loop(listener, inner, stop))?
@@ -143,6 +297,7 @@ impl Edge {
             stats,
             stop,
             accept: Some(accept),
+            inner,
         })
     }
 
@@ -152,6 +307,49 @@ impl Edge {
 
     pub fn stats(&self) -> &Arc<ServerStats> {
         &self.stats
+    }
+
+    /// Bytes currently held by the prefix cache. Never exceeds
+    /// [`EdgeConfig::cache_budget_bytes`] (asserted by the chaos
+    /// acceptance tests).
+    pub fn cache_bytes_in_use(&self) -> usize {
+        self.inner.lru.lock().unwrap().total
+    }
+
+    /// Number of cached prefixes.
+    pub fn cached_prefixes(&self) -> usize {
+        self.inner.cache.ready_len()
+    }
+
+    /// Fault-injection hook: flip one byte in the middle of the cached
+    /// prefix for `model` (origin-default schedule), as a cosmic-ray /
+    /// bad-RAM stand-in. Returns whether a cached prefix existed. The
+    /// CRC revalidation on the serve path must catch the corruption and
+    /// refill instead of relaying the damaged bytes.
+    pub fn corrupt_cached_prefix(&self, model: &str) -> bool {
+        let key: Key = (model.to_string(), None);
+        let Some(entry) = self.inner.cache.get(&key) else {
+            return false;
+        };
+        if entry.bytes.is_empty() {
+            return false;
+        }
+        let mut bytes = entry.bytes.clone();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        self.inner.cache.insert(
+            key,
+            Arc::new(PrefixEntry {
+                bytes,
+                index: entry.index.clone(),
+                prefix_len: entry.prefix_len,
+                container_len: entry.container_len,
+                stages_cached: entry.stages_cached,
+                total_stages: entry.total_stages,
+                generation: entry.generation,
+            }),
+        );
+        true
     }
 
     pub fn shutdown(&mut self) {
@@ -257,6 +455,7 @@ fn serve_stats(stream: &mut TcpStream, stats: &ServerStats) -> Result<()> {
             remaining: body.len() as u64,
             container_len: body.len() as u64,
             stages: None,
+            generation: None,
         },
     )?;
     stream.write_all(&body)?;
@@ -269,10 +468,11 @@ fn serve_request(
     req: &FetchRequest,
     span: Option<TraceCtx>,
 ) -> Result<()> {
-    // one retry after invalidating a stale entry (origin re-encoded)
+    // one retry after invalidating a stale entry (origin re-encoded,
+    // generation bumped, or the cached bytes failed CRC revalidation)
     match serve_attempt(stream, inner, req, span) {
         Err(e) if e.to_string().contains(STALE_MARKER) => {
-            inner.cache.invalidate(&cache_key(req));
+            inner.drop_stale(&cache_key(req));
             serve_attempt(stream, inner, req, span)
         }
         other => other,
@@ -280,7 +480,8 @@ fn serve_request(
 }
 
 /// Error marker for a cached prefix that no longer matches the origin's
-/// container (checked against the tail fetch's `container` field).
+/// container (generation hint or `container` length on the tail fetch)
+/// or failed its CRC revalidation before serving.
 const STALE_MARKER: &str = "edge cache stale";
 
 fn cache_key(req: &FetchRequest) -> Key {
@@ -296,12 +497,26 @@ fn serve_attempt(
     req: &FetchRequest,
     span: Option<TraceCtx>,
 ) -> Result<()> {
+    let key = cache_key(req);
     let entry = inner
         .cache
-        .get_or_compute(cache_key(req), || {
+        .get_or_compute(key.clone(), || {
             fill_prefix(inner, req, span).map_err(|e| format!("{e:#}"))
         })
         .map_err(|msg| anyhow::anyhow!(msg))?;
+    inner.lru_touch(&key, entry.bytes.len());
+
+    // CRC-revalidate the cached bytes before every serve: a prefix that
+    // rotted in cache memory must refill, not reach a client.
+    let (valid_len, valid_stages) = validated_prefix(&entry.bytes);
+    if valid_len != entry.prefix_len || valid_stages != entry.stages_cached as usize {
+        bail!(
+            "{STALE_MARKER}: cached prefix failed CRC revalidation \
+             ({valid_len}/{} bytes, {valid_stages}/{} stages usable)",
+            entry.prefix_len,
+            entry.stages_cached
+        );
+    }
 
     let sel: Range<usize> = entry.index.body_range(req.stages)?;
     let total = sel.len() as u64;
@@ -312,6 +527,12 @@ fn serve_attempt(
     let cached_upto = entry.prefix_len.min(sel.end).max(serve_from);
     let cache_part = serve_from..cached_upto;
     let tail = cached_upto..sel.end;
+
+    // demand-driven deepening: repeated tail crossings earn the model a
+    // deeper prefix on its next fill
+    if !tail.is_empty() {
+        inner.note_crossing(&key, &entry);
+    }
 
     // open the origin tail *before* the status frame so a dead origin
     // becomes a clean error frame, not a truncated body. The relay span
@@ -330,14 +551,22 @@ fn serve_attempt(
         // re-parent the origin leg under the relay span so the origin's
         // own request span nests inside this phase in the waterfall
         treq.trace = relay_span.as_ref().map(|sp| sp.ctx()).or(req.trace);
-        let origin = pick_origin(inner, &req.model)?;
-        let (tstream, tresp) = open_fetch(&origin, &treq).context("edge->origin tail")?;
+        let (tstream, tresp) =
+            open_origin_with_retry(inner, &req.model, &treq, span).context("edge->origin tail")?;
         if tresp.container_len != entry.container_len {
             bail!(
                 "{STALE_MARKER}: origin container {} != cached {}",
                 tresp.container_len,
                 entry.container_len
             );
+        }
+        // eager staleness: the origin pushes its encode generation on
+        // every status frame — a mismatch drops the prefix now, without
+        // waiting for the byte lengths to happen to disagree
+        if let (Some(got), Some(cached)) = (tresp.generation, entry.generation) {
+            if got != cached {
+                bail!("{STALE_MARKER}: origin generation {got} != cached {cached}");
+            }
         }
         if tresp.remaining != tail.len() as u64 {
             bail!(
@@ -356,6 +585,7 @@ fn serve_attempt(
             remaining: total - req.offset,
             container_len: entry.container_len,
             stages: req.stages,
+            generation: entry.generation,
         },
     )?;
 
@@ -411,12 +641,54 @@ fn serve_attempt(
     Ok(())
 }
 
-fn pick_origin(inner: &Inner, model: &str) -> Result<SocketAddr> {
-    let i = inner
-        .ring
-        .place(model)
-        .ok_or_else(|| anyhow::anyhow!("no origin configured"))?;
-    Ok(inner.origins[i])
+/// Dial an origin for `model` under the edge's budgeted retry policy.
+/// Each retry walks the placement ring past origins that already failed
+/// this sequence (an edge-level failover); server `ERR` frames are
+/// authoritative and returned immediately. Every backoff taken bumps
+/// `stats.retries` and records an `edge.retry` span.
+fn open_origin_with_retry(
+    inner: &Inner,
+    model: &str,
+    req: &FetchRequest,
+    span: Option<TraceCtx>,
+) -> Result<(TcpStream, FetchResponse)> {
+    let mut failed: Vec<usize> = Vec::new();
+    let mut retry = inner
+        .cfg
+        .retry
+        .start(inner.cfg.clock.clone(), fnv1a(model.as_bytes()));
+    loop {
+        let pick = inner
+            .ring
+            .place_where(model, |i| !failed.contains(&i))
+            .or_else(|| inner.ring.place(model));
+        let Some(i) = pick else {
+            bail!("no origin configured");
+        };
+        match open_fetch(&inner.origins[i], req) {
+            Ok(ok) => return Ok(ok),
+            Err(e) => {
+                // an ERR status frame is the origin answering "no",
+                // not the origin being down — do not retry it
+                if format!("{e:#}").contains("server: ERR") {
+                    return Err(e);
+                }
+                failed.push(i);
+                let Some(delay) = retry.backoff() else {
+                    return Err(e.context(format!(
+                        "retry budget exhausted after {} attempts",
+                        retry.attempt()
+                    )));
+                };
+                inner.stats.retries.fetch_add(1, Ordering::SeqCst);
+                if let Some(ctx) = span {
+                    let mut sp = obs::begin_child("edge.retry", ctx);
+                    sp.attr("attempt", retry.attempt() as usize);
+                    sp.attr("delay_us", delay.as_micros() as usize);
+                }
+            }
+        }
+    }
 }
 
 /// Fetch and validate stages `[0, k)` from the origin (single-flight
@@ -431,17 +703,18 @@ fn fill_prefix(
     // the request that won the flight and actually performed the fill
     let mut fill_span = span.map(|ctx| obs::begin_child("edge.fill", ctx));
     let fill_ctx = fill_span.as_ref().map(|sp| sp.ctx());
-    let origin = pick_origin(inner, &req.model)?;
     let mut first = FetchRequest::new(&req.model).with_stages(0, 1).with_keep_alive(true);
     first.schedule = req.schedule.clone();
     first.speed_mbps = inner.cfg.origin_speed_mbps;
     first.trace = fill_ctx;
-    let (mut stream, resp) = open_fetch(&origin, &first).context("edge->origin fill")?;
+    let (mut stream, resp) =
+        open_origin_with_retry(inner, &req.model, &first, span).context("edge->origin fill")?;
     if resp.stages != Some((0, 1)) {
         bail!("origin rewrote fill range to {:?}", resp.stages);
     }
     stream.set_read_timeout(Some(inner.cfg.io_timeout))?;
     let container_len = resp.container_len;
+    let generation = resp.generation;
     let mut bytes = read_exactly(&mut stream, resp.remaining as usize)?;
 
     // the stage-0 body carries the preamble: parse it for the manifest
@@ -452,7 +725,7 @@ fn fill_prefix(
         .ok_or_else(|| anyhow::anyhow!("fill head lacked a manifest"))?
         .clone();
     let total_stages = manifest.schedule.stages() as u32;
-    let k = inner.cfg.prefix_stages.min(total_stages);
+    let k = inner.fill_depth(&cache_key(req)).max(1).min(total_stages);
 
     if k > 1 {
         let mut rest = FetchRequest::new(&req.model).with_stages(1, k);
@@ -463,8 +736,8 @@ fn fill_prefix(
         if rresp.stages != Some((1, k)) {
             bail!("origin rewrote fill range to {:?}", rresp.stages);
         }
-        if rresp.container_len != container_len {
-            bail!("origin container length changed mid-fill");
+        if rresp.container_len != container_len || rresp.generation != generation {
+            bail!("origin container changed mid-fill (re-encoded)");
         }
         bytes.extend_from_slice(&read_exactly(&mut stream, rresp.remaining as usize)?);
     }
@@ -507,6 +780,9 @@ fn fill_prefix(
         index,
         prefix_len,
         container_len,
+        stages_cached: k,
+        total_stages,
+        generation,
     }))
 }
 
@@ -647,6 +923,136 @@ mod tests {
             let want = expect.slice(expect.body_range(Some(stages)).unwrap());
             assert_eq!(&body[..], want, "{stages:?}");
         }
+    }
+
+    #[test]
+    fn corrupted_cached_prefix_is_refilled_not_served() {
+        let (edge, _server, repo) = edge_over("edge-crc");
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        // warm the cache, then rot a byte in the cached prefix
+        let (mut s, _) =
+            open_fetch(&edge.addr(), &FetchRequest::new("dense3").with_stages(0, 2)).unwrap();
+        let mut first = Vec::new();
+        s.read_to_end(&mut first).unwrap();
+        assert!(edge.corrupt_cached_prefix("dense3"), "prefix must be cached");
+        // the next fetch must detect the corruption, refill, and still
+        // serve bit-identical bytes
+        let (mut s, _) = open_fetch(&edge.addr(), &FetchRequest::new("dense3")).unwrap();
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(&got[..], &expect[..], "corruption must never reach a client");
+        let st = edge.stats();
+        assert_eq!(st.origin_fills.load(Ordering::SeqCst), 2, "one refill");
+        assert!(st.invalidations.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn generation_bump_drops_the_prefix_eagerly() {
+        let (edge, _server, repo) = edge_over("edge-generation");
+        let sched = Schedule::paper_default();
+        // warm the cache (prefix only — no tail contact afterwards)
+        let (mut s, resp) =
+            open_fetch(&edge.addr(), &FetchRequest::new("dense3").with_stages(0, 2)).unwrap();
+        assert_eq!(resp.generation, Some(1));
+        let mut head = Vec::new();
+        s.read_to_end(&mut head).unwrap();
+        // origin re-encodes: same bytes, new generation
+        repo.reencode("dense3", &sched).unwrap();
+        let expect = repo.container("dense3", &sched).unwrap();
+        assert_eq!(expect.generation(), 2);
+        // a full fetch crosses into the tail, sees the new generation on
+        // the origin's status frame, drops the prefix and refills
+        let (mut s, resp) = open_fetch(&edge.addr(), &FetchRequest::new("dense3")).unwrap();
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(&got[..], &expect[..]);
+        assert_eq!(resp.generation, Some(2), "client sees the new generation");
+        let st = edge.stats();
+        assert_eq!(st.invalidations.load(Ordering::SeqCst), 1);
+        assert_eq!(st.origin_fills.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn cache_budget_is_a_hard_cap_with_lru_eviction() {
+        let (server, repo) = fixture::synthetic_server("edge-lru").unwrap();
+        // budget sized to hold exactly one of the two models' prefixes
+        let alpha_len = {
+            let c = repo.container("alpha", &Schedule::paper_default()).unwrap();
+            c.body_range(Some((0, 2))).unwrap().end
+        };
+        let beta_len = {
+            let c = repo.container("beta", &Schedule::paper_default()).unwrap();
+            c.body_range(Some((0, 2))).unwrap().end
+        };
+        let budget = alpha_len.max(beta_len) + 16;
+        let edge = Edge::start(
+            "127.0.0.1:0",
+            vec![server.addr()],
+            EdgeConfig {
+                cache_budget_bytes: budget,
+                ..EdgeConfig::default()
+            },
+        )
+        .unwrap();
+        let fetch = |model: &str| {
+            let (mut s, _) =
+                open_fetch(&edge.addr(), &FetchRequest::new(model).with_stages(0, 2)).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            got
+        };
+        // alternate models: each fill must evict the other
+        for round in 0..3 {
+            fetch("alpha");
+            assert!(edge.cache_bytes_in_use() <= budget, "round {round}");
+            fetch("beta");
+            assert!(edge.cache_bytes_in_use() <= budget, "round {round}");
+            assert_eq!(edge.cached_prefixes(), 1, "round {round}");
+        }
+        let st = edge.stats();
+        assert!(
+            st.cache_evictions.load(Ordering::SeqCst) >= 5,
+            "evictions: {}",
+            st.cache_evictions.load(Ordering::SeqCst)
+        );
+        // correctness never degraded: a final fetch is still bit-identical
+        let expect = repo.container("alpha", &Schedule::paper_default()).unwrap();
+        let sel = expect.body_range(Some((0, 2))).unwrap();
+        assert_eq!(fetch("alpha"), expect.slice(sel));
+    }
+
+    #[test]
+    fn repeated_tail_crossings_deepen_the_prefix() {
+        let (server, repo) = fixture::executable_server("edge-deepen").unwrap();
+        let edge = Edge::start(
+            "127.0.0.1:0",
+            vec![server.addr()],
+            EdgeConfig {
+                deepen_after: 2,
+                ..EdgeConfig::default()
+            },
+        )
+        .unwrap();
+        let expect = repo.container("dense3", &Schedule::paper_default()).unwrap();
+        let full = |edge: &Edge| {
+            let (mut s, _) = open_fetch(&edge.addr(), &FetchRequest::new("dense3")).unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            got
+        };
+        // crossing #1 (fill at k=2), crossing #2 triggers the deepen, the
+        // third fetch refills at k=3
+        for _ in 0..3 {
+            assert_eq!(&full(&edge)[..], &expect[..]);
+        }
+        assert_eq!(edge.stats().origin_fills.load(Ordering::SeqCst), 2);
+        // deeper prefix serves more cached bytes per full fetch than the
+        // k=2 fill would have
+        let deeper = expect.body_range(Some((0, 3))).unwrap().end;
+        let before = edge.stats().cache_bytes.load(Ordering::SeqCst);
+        assert_eq!(&full(&edge)[..], &expect[..]);
+        let served = edge.stats().cache_bytes.load(Ordering::SeqCst) - before;
+        assert_eq!(served as usize, deeper, "k=3 prefix serves [0, stage 3)");
     }
 
     #[test]

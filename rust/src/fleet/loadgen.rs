@@ -27,11 +27,14 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::admission::SHED_MARKER;
+use super::placement::fnv1a;
 use super::slo::{ClientSample, Outcome, SloReport};
 use crate::client::session::{ExecMode, ProgressiveSession, SessionEvent};
 use crate::netsim::BandwidthTrace;
 use crate::runtime::ModelSession;
 use crate::server::proto::MAX_FRAME;
+use crate::util::retry::RetryPolicy;
+use crate::util::sync::Clock;
 
 /// One homogeneous slice of the fleet.
 #[derive(Debug, Clone)]
@@ -322,7 +325,7 @@ pub fn run_fleet(
                     if !opts.ramp.is_zero() && n > 1 {
                         std::thread::sleep(opts.ramp.mul_f64(i as f64 / n as f64));
                     }
-                    drive_client(addr, &model, &spec, runtime, &opts)
+                    drive_client(addr, &model, &spec, runtime, &opts, i as u64)
                 })
                 .expect("spawn virtual client")
         })
@@ -344,13 +347,16 @@ pub fn run_fleet(
     ))
 }
 
-/// Drive one virtual client to completion.
+/// Drive one virtual client to completion. `salt` (the client index)
+/// decorrelates the connect-retry jitter across the fleet so a herd of
+/// refused clients does not re-dial in lockstep.
 fn drive_client(
     addr: SocketAddr,
     model: &str,
     spec: &ClientSpec,
     runtime: Option<Arc<ModelSession>>,
     opts: &FleetOptions,
+    salt: u64,
 ) -> ClientSample {
     let mut sample = ClientSample::new(&spec.cohort);
     let target = if spec.flaky {
@@ -368,9 +374,15 @@ fn drive_client(
     } else {
         addr
     };
-    let mut attempt = 0usize;
+    // whole-session connect retries (accept-backlog refusals under herd
+    // starts) share the crate-wide budgeted backoff policy
+    let connect_attempts = u32::try_from(opts.connect_retries)
+        .unwrap_or(u32::MAX - 1)
+        .saturating_add(1);
+    let mut connect_retry = RetryPolicy::default()
+        .attempts(connect_attempts)
+        .start(Clock::real(), fnv1a(spec.cohort.as_bytes()) ^ salt);
     loop {
-        attempt += 1;
         let t0 = Instant::now();
         let mut builder = ProgressiveSession::builder(model)
             .addr(target)
@@ -439,9 +451,8 @@ fn drive_client(
                     return sample;
                 }
                 let is_connect = msg.contains(crate::server::service::CONNECT_CONTEXT);
-                if is_connect && attempt <= opts.connect_retries {
-                    // herd-start backlog refusal: back off briefly, retry
-                    std::thread::sleep(Duration::from_millis(20 * attempt as u64));
+                if is_connect && connect_retry.backoff().is_some() {
+                    // herd-start backlog refusal: jittered backoff, retry
                     continue;
                 }
                 sample.outcome = if is_connect {

@@ -43,6 +43,7 @@
 //! `rust/README.md` ("Fleet serving & load generation").
 
 pub mod admission;
+pub mod chaos;
 pub mod cluster;
 pub mod conn;
 pub mod edge;
@@ -54,6 +55,7 @@ pub mod router;
 pub mod slo;
 
 pub use admission::{Admission, Decision, ShedPolicy, SHED_MARKER};
+pub use chaos::{ChaosAction, ChaosEvent, ChaosScript};
 pub use cluster::{Cluster, ClusterConfig};
 pub use conn::Conn;
 pub use edge::{Edge, EdgeConfig};
@@ -108,6 +110,14 @@ pub struct ServerStats {
     pub relay_bytes: AtomicU64,
     /// router: connections to a draining backend that ran to completion
     pub drained: AtomicU64,
+    /// budgeted retries taken (edge fills/tail relays, session dials)
+    pub retries: AtomicU64,
+    /// router: mid-stream re-placements onto another healthy backend
+    pub failovers: AtomicU64,
+    /// edge: prefix entries evicted to honor the cache byte budget
+    pub cache_evictions: AtomicU64,
+    /// edge: prefixes dropped for staleness (generation/length/CRC)
+    pub invalidations: AtomicU64,
 }
 
 impl ServerStats {
@@ -125,6 +135,7 @@ impl ServerStats {
             &[
                 "active", "queued", "conns", "requests", "stages", "bytes", "shed", "degraded",
                 "evicted", "errors", "ehits", "emiss", "fills", "cbytes", "rbytes", "drained",
+                "retries", "fovers", "cevict", "inval",
             ],
         );
         t.row(vec![
@@ -144,6 +155,10 @@ impl ServerStats {
             b(&self.cache_bytes),
             b(&self.relay_bytes),
             g(&self.drained),
+            g(&self.retries),
+            g(&self.failovers),
+            g(&self.cache_evictions),
+            g(&self.invalidations),
         ]);
         t
     }
@@ -175,5 +190,18 @@ mod tests {
             assert!(rendered.contains(col), "missing column {col}");
         }
         assert!(rendered.contains("4.0 KB"));
+    }
+
+    #[test]
+    fn stats_table_includes_robustness_counters() {
+        let s = ServerStats::default();
+        s.retries.store(4, Ordering::SeqCst);
+        s.failovers.store(1, Ordering::SeqCst);
+        s.cache_evictions.store(9, Ordering::SeqCst);
+        s.invalidations.store(2, Ordering::SeqCst);
+        let rendered = s.table().render();
+        for col in ["retries", "fovers", "cevict", "inval"] {
+            assert!(rendered.contains(col), "missing column {col}");
+        }
     }
 }

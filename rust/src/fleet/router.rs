@@ -15,14 +15,26 @@
 //! before the client has seen the reason).
 //!
 //! Health and drains:
-//! * a prober thread TCP-connects to every backend each interval;
-//!   backends that refuse are taken out of placement until they accept
-//!   again (placement walks the ring past them — minimal remapping);
+//! * a prober thread TCP-connects to every backend each interval; a
+//!   backend leaves placement after [`RouterConfig::eject_after`]
+//!   consecutive refusals (one lost probe never flaps the ring) and
+//!   re-enters only after [`RouterConfig::probation_probes`] consecutive
+//!   successes — probation keeps a crash-looping backend out;
 //! * [`Router::drain`] marks a backend as draining for a rolling
 //!   restart: new connections avoid it, established ones run to
 //!   completion and are counted in `stats.drained` as they finish. The
 //!   probe-and-drop connections the prober makes are tolerated as clean
 //!   closes by both the edge and the origin reactor.
+//!
+//! Failover (see `docs/ROBUSTNESS.md`): when an upstream dies
+//! mid-request — dial refused, status frame cut off, or the body
+//! truncated — the router ejects it immediately, re-places the
+//! connection on the ring and re-issues the request with the offset
+//! advanced past every byte already relayed. The client keeps the one
+//! status frame it already holds; the resumed backend's status frame is
+//! consumed and checked (`remaining` must equal the bytes still owed)
+//! so the spliced stream is byte-identical or the request fails closed.
+//! Retries sleep under the shared [`crate::util::retry`] budget.
 
 #![forbid(unsafe_code)]
 
@@ -32,13 +44,14 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::obs;
-use crate::server::proto;
+use crate::obs::{self, TraceCtx};
+use crate::server::proto::{self, FetchRequest};
 use crate::util::json::Json;
+use crate::util::retry::{Retry, RetryPolicy};
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::util::sync::{clock, Arc};
+use crate::util::sync::{clock, Arc, Clock};
 
-use super::placement::{HashRing, DEFAULT_VNODES};
+use super::placement::{fnv1a, HashRing, DEFAULT_VNODES};
 use super::ServerStats;
 
 /// Router configuration.
@@ -52,6 +65,15 @@ pub struct RouterConfig {
     pub io_timeout: Duration,
     /// virtual nodes per backend on the placement ring
     pub vnodes: usize,
+    /// consecutive failed probes before a backend is ejected
+    pub eject_after: u32,
+    /// consecutive successful probes an ejected backend must pass
+    /// before re-admission
+    pub probation_probes: u32,
+    /// budgeted retry policy for upstream dials and mid-stream failover
+    pub retry: RetryPolicy,
+    /// time source for failover backoff (virtual in chaos tests)
+    pub clock: Clock,
 }
 
 impl Default for RouterConfig {
@@ -61,6 +83,13 @@ impl Default for RouterConfig {
             connect_timeout: Duration::from_secs(1),
             io_timeout: Duration::from_secs(10),
             vnodes: DEFAULT_VNODES,
+            eject_after: 2,
+            probation_probes: 2,
+            retry: RetryPolicy::new()
+                .attempts(4)
+                .base_delay(Duration::from_millis(20))
+                .budget(Duration::from_secs(5)),
+            clock: Clock::real(),
         }
     }
 }
@@ -70,6 +99,11 @@ struct Backend {
     healthy: AtomicBool,
     draining: AtomicBool,
     active: AtomicU64,
+    /// consecutive failed probes (ejection at `cfg.eject_after`)
+    fail_streak: AtomicU64,
+    /// consecutive successful probes while ejected (re-admission at
+    /// `cfg.probation_probes`)
+    ok_streak: AtomicU64,
 }
 
 struct Inner {
@@ -112,6 +146,8 @@ impl Router {
                     healthy: AtomicBool::new(true),
                     draining: AtomicBool::new(false),
                     active: AtomicU64::new(0),
+                    fail_streak: AtomicU64::new(0),
+                    ok_streak: AtomicU64::new(0),
                 })
                 .collect(),
             cfg,
@@ -195,12 +231,32 @@ fn health_loop(inner: Arc<Inner>, stop: Arc<AtomicBool>) {
     // short slices keep shutdown prompt without a wakeup channel
     let slice = Duration::from_millis(25);
     loop {
-        for b in &inner.backends {
+        for (i, b) in inner.backends.iter().enumerate() {
             if stop.load(Ordering::SeqCst) {
                 return;
             }
             let up = TcpStream::connect_timeout(&b.addr, inner.cfg.connect_timeout).is_ok();
-            b.healthy.store(up, Ordering::SeqCst);
+            if up {
+                b.fail_streak.store(0, Ordering::SeqCst);
+                if !b.healthy.load(Ordering::SeqCst) {
+                    // probation: an ejected backend earns its way back
+                    // with consecutive clean probes
+                    let ok = b.ok_streak.fetch_add(1, Ordering::SeqCst) + 1;
+                    if ok >= u64::from(inner.cfg.probation_probes) {
+                        b.ok_streak.store(0, Ordering::SeqCst);
+                        b.healthy.store(true, Ordering::SeqCst);
+                        crate::log_info!("router: backend {i} re-admitted after probation");
+                    }
+                }
+            } else {
+                b.ok_streak.store(0, Ordering::SeqCst);
+                let fails = b.fail_streak.fetch_add(1, Ordering::SeqCst) + 1;
+                if fails >= u64::from(inner.cfg.eject_after)
+                    && b.healthy.swap(false, Ordering::SeqCst)
+                {
+                    crate::log_info!("router: backend {i} ejected after {fails} failed probes");
+                }
+            }
         }
         let mut waited = Duration::ZERO;
         while waited < inner.cfg.health_interval {
@@ -275,78 +331,364 @@ fn proxy_conn(mut client: TcpStream, inner: &Inner) -> Result<()> {
             sp.attr("model", &req.model);
             req.trace = Some(sp.ctx());
         }
+        let span_ctx = req_span.as_ref().map(|sp| sp.ctx());
 
-        if upstream.is_none() {
-            let Some(idx) = inner.ring.place_where(&req.model, |i| inner.placeable(i)) else {
-                let _ = proto::write_err(&mut client, "no healthy backend");
-                bail!("no healthy backend for {}", req.model);
-            };
-            let b = &inner.backends[idx];
-            let up = TcpStream::connect_timeout(&b.addr, inner.cfg.connect_timeout)
-                .with_context(|| format!("dialing backend {idx}"))?;
-            up.set_nodelay(true)?;
-            up.set_read_timeout(Some(inner.cfg.io_timeout))?;
-            b.active.fetch_add(1, Ordering::SeqCst);
-            upstream = Some((up, BackendLease { inner, idx }));
-        }
-        let (up, _lease) = upstream.as_mut().expect("upstream just placed");
-
-        // forward the request frame (byte-identical except for the
-        // re-parented trace ids) and relay the status frame
-        up.write_all(&req.encode())?;
-        up.flush()?;
-        let frame = proto::read_frame(up).context("upstream status frame")?;
-        let status = Json::parse(std::str::from_utf8(&frame)?)?;
-        let ok = status.get("status")?.as_str()? == "ok";
-        let remaining = if ok {
-            status.get("remaining")?.as_i64()? as u64
-        } else {
-            0
-        };
-        proto::write_frame(&mut client, &frame)?;
-        if !ok {
+        match proxy_request(&mut client, inner, &req, &mut upstream, span_ctx)? {
+            Relay::Done(bytes) => {
+                if let Some(mut sp) = req_span.take() {
+                    sp.attr("bytes", bytes);
+                    sp.end();
+                }
+            }
             // upstream error frames are terminal on the upstream side;
             // the client has the reason, close out cleanly
-            client.flush()?;
-            return Ok(());
+            Relay::UpstreamErr => return Ok(()),
         }
-
-        // relay exactly the advertised body
-        let mut left = remaining;
-        let mut buf = [0u8; 16 * 1024];
-        while left > 0 {
-            let n = up.read(&mut buf[..(left as usize).min(buf.len())])?;
-            if n == 0 {
-                bail!("backend closed with {left} body bytes left");
-            }
-            client.write_all(&buf[..n])?;
-            left -= n as u64;
-        }
-        client.flush()?;
-        inner.stats.bytes_sent.fetch_add(remaining, Ordering::SeqCst);
-        if let Some(mut sp) = req_span.take() {
-            sp.attr("bytes", remaining);
-            sp.end();
-        }
-
         if !req.keep_alive {
             return Ok(());
         }
     }
 }
 
+/// How one proxied request ended.
+enum Relay {
+    /// body fully relayed (`bytes` = body bytes delivered this request)
+    Done(u64),
+    /// the backend answered with an `ERR` frame, forwarded verbatim
+    UpstreamErr,
+}
+
+/// One attempt's upstream outcome (client-side failures are plain `Err`:
+/// there is nobody left to retry for).
+enum Attempt {
+    Complete(Relay),
+    /// the upstream died (dial, status frame, or mid-body); the request
+    /// may fail over
+    UpstreamFailed(String),
+}
+
+/// Proxy a single request with failover. Byte accounting lives in
+/// `sent` / `advertised`: the client is promised `advertised` body bytes
+/// by the one status frame it ever sees, and every attempt resumes at
+/// `req.offset + sent` so a spliced stream is byte-identical.
+fn proxy_request<'a>(
+    client: &mut TcpStream,
+    inner: &'a Inner,
+    req: &FetchRequest,
+    upstream: &mut Option<(TcpStream, BackendLease<'a>)>,
+    span: Option<TraceCtx>,
+) -> Result<Relay> {
+    let mut sent: u64 = 0;
+    let mut advertised: Option<u64> = None;
+    let mut excluded: Vec<usize> = Vec::new();
+    let mut retry = inner
+        .cfg
+        .retry
+        .start(inner.cfg.clock.clone(), fnv1a(req.model.as_bytes()));
+    loop {
+        if upstream.is_none() {
+            let pick = inner
+                .ring
+                .place_where(&req.model, |i| inner.placeable(i) && !excluded.contains(&i))
+                .or_else(|| inner.ring.place_where(&req.model, |i| inner.placeable(i)))
+                // mid-stream the client already holds a status frame:
+                // a desperation dial to an ejected backend beats
+                // certain truncation
+                .or_else(|| {
+                    if advertised.is_some() {
+                        inner.ring.place(&req.model)
+                    } else {
+                        None
+                    }
+                });
+            let Some(idx) = pick else {
+                let _ = proto::write_err(client, "no healthy backend");
+                bail!("no healthy backend for {}", req.model);
+            };
+            let b = &inner.backends[idx];
+            match TcpStream::connect_timeout(&b.addr, inner.cfg.connect_timeout) {
+                Ok(up) => {
+                    up.set_nodelay(true)?;
+                    up.set_read_timeout(Some(inner.cfg.io_timeout))?;
+                    b.active.fetch_add(1, Ordering::SeqCst);
+                    *upstream = Some((up, BackendLease { inner, idx }));
+                }
+                Err(e) => {
+                    fail_over(
+                        inner,
+                        idx,
+                        &mut excluded,
+                        &mut retry,
+                        advertised.is_some(),
+                        span,
+                        &format!("dial: {e}"),
+                    )
+                    .map_err(|err| report_failure(client, advertised, err))?;
+                    continue;
+                }
+            }
+        }
+        let (up, lease) = upstream.as_mut().expect("upstream just placed");
+        let idx = lease.idx;
+        match relay_once(client, inner, req, up, &mut sent, &mut advertised)? {
+            Attempt::Complete(done) => return Ok(done),
+            Attempt::UpstreamFailed(reason) => {
+                // drop the lease (active--, drain accounting) before
+                // re-placing
+                *upstream = None;
+                fail_over(
+                    inner,
+                    idx,
+                    &mut excluded,
+                    &mut retry,
+                    advertised.is_some(),
+                    span,
+                    &reason,
+                )
+                .map_err(|err| report_failure(client, advertised, err))?;
+            }
+        }
+    }
+}
+
+/// Forward the request (offset advanced past `sent`) to `up` and relay
+/// the body. Client-side I/O failures are `Err`; upstream failures come
+/// back as [`Attempt::UpstreamFailed`] so the caller can fail over.
+fn relay_once(
+    client: &mut TcpStream,
+    inner: &Inner,
+    req: &FetchRequest,
+    up: &mut TcpStream,
+    sent: &mut u64,
+    advertised: &mut Option<u64>,
+) -> Result<Attempt> {
+    let fwd = req.clone().with_offset(req.offset + *sent);
+    if up.write_all(&fwd.encode()).and_then(|()| up.flush()).is_err() {
+        return Ok(Attempt::UpstreamFailed("request write failed".into()));
+    }
+    let frame = match proto::read_frame(up) {
+        Ok(f) => f,
+        Err(e) => return Ok(Attempt::UpstreamFailed(format!("status frame: {e:#}"))),
+    };
+    let status = Json::parse(std::str::from_utf8(&frame)?)?;
+    let ok = status.get("status")?.as_str()? == "ok";
+    if !ok {
+        // an ERR frame is the backend answering, not the backend dying —
+        // forward it verbatim (never retried: the refusal is
+        // authoritative). Mid-body it is unspliceable and fails closed.
+        anyhow::ensure!(
+            advertised.is_none(),
+            "backend returned an error frame mid-body"
+        );
+        proto::write_frame(client, &frame)?;
+        client.flush()?;
+        return Ok(Attempt::Complete(Relay::UpstreamErr));
+    }
+    let remaining = status.get("remaining")?.as_i64()? as u64;
+    match advertised {
+        None => {
+            // first status frame: the client sees exactly this one
+            proto::write_frame(client, &frame)?;
+            *advertised = Some(remaining);
+        }
+        Some(adv) => {
+            // failover resume: the replacement backend's frame is
+            // consumed here, not forwarded — but it must agree on what
+            // is still owed or the splice would corrupt the stream
+            anyhow::ensure!(
+                remaining == *adv - *sent,
+                "failover resume mismatch: backend offers {remaining} bytes, stream needs {}",
+                *adv - *sent
+            );
+        }
+    }
+    let total = advertised.expect("just set");
+    let mut left = total - *sent;
+    let mut buf = [0u8; 16 * 1024];
+    while left > 0 {
+        let n = match up.read(&mut buf[..(left as usize).min(buf.len())]) {
+            Ok(0) => {
+                return Ok(Attempt::UpstreamFailed(format!(
+                    "backend closed with {left} body bytes left"
+                )))
+            }
+            Ok(n) => n,
+            Err(e) => return Ok(Attempt::UpstreamFailed(format!("body read: {e}"))),
+        };
+        client.write_all(&buf[..n])?;
+        *sent += n as u64;
+        left -= n as u64;
+    }
+    client.flush()?;
+    inner.stats.bytes_sent.fetch_add(total, Ordering::SeqCst);
+    Ok(Attempt::Complete(Relay::Done(total)))
+}
+
+/// Eject a failed backend, take one budgeted backoff and account for the
+/// retry (plus a failover when the stream was already mid-body). `Err`
+/// means the budget is spent and the request must fail closed.
+fn fail_over(
+    inner: &Inner,
+    idx: usize,
+    excluded: &mut Vec<usize>,
+    retry: &mut Retry,
+    mid_stream: bool,
+    span: Option<TraceCtx>,
+    reason: &str,
+) -> Result<()> {
+    // eject from placement immediately — the prober re-admits it after
+    // probation if it comes back
+    inner.backends[idx].healthy.store(false, Ordering::SeqCst);
+    if !excluded.contains(&idx) {
+        excluded.push(idx);
+    }
+    let Some(delay) = retry.backoff() else {
+        bail!(
+            "backend {idx} failed ({reason}); retry budget exhausted after {} attempts",
+            retry.attempt()
+        );
+    };
+    inner.stats.retries.fetch_add(1, Ordering::SeqCst);
+    if mid_stream {
+        inner.stats.failovers.fetch_add(1, Ordering::SeqCst);
+    }
+    crate::log_info!("router: backend {idx} failed ({reason}); retrying after {delay:?}");
+    if let Some(ctx) = span {
+        let mut sp = obs::begin_child("router.failover", ctx);
+        sp.attr("backend", idx);
+        sp.attr("attempt", retry.attempt() as usize);
+        sp.attr("delay_us", delay.as_micros() as usize);
+        sp.attr("mid_stream", usize::from(mid_stream));
+    }
+    Ok(())
+}
+
+/// Best-effort error frame for a request that failed before the client
+/// ever saw a status frame (mid-stream there is nothing left to say).
+fn report_failure(
+    client: &mut TcpStream,
+    advertised: Option<u64>,
+    err: anyhow::Error,
+) -> anyhow::Error {
+    if advertised.is_none() {
+        let _ = proto::write_err(client, &format!("{err:#}"));
+    }
+    err
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::Schedule;
-    use crate::server::proto::FetchRequest;
+    use crate::server::proto::{FetchRequest, FetchResponse};
     use crate::server::service::open_fetch;
     use crate::testutil::fixture;
+    use crate::util::sync::atomic::AtomicUsize;
 
     fn quick_cfg() -> RouterConfig {
         RouterConfig {
             health_interval: Duration::from_millis(50),
             ..RouterConfig::default()
+        }
+    }
+
+    /// A protocol-speaking backend stand-in that serves `bytes` but
+    /// closes the socket halfway through the body for the first
+    /// `truncate` requests it serves. Health probes (connect-and-drop,
+    /// no request frame) don't consume the truncation budget.
+    fn flaky_backend(bytes: Vec<u8>, truncate: usize) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let bytes = Arc::new(bytes);
+        let served = Arc::new(AtomicUsize::new(0));
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut s) = conn else { break };
+                let bytes = bytes.clone();
+                let served = served.clone();
+                std::thread::spawn(move || {
+                    let Ok(req) = proto::read_request(&mut s) else {
+                        return; // health probe
+                    };
+                    let n = served.fetch_add(1, Ordering::SeqCst);
+                    let off = req.offset as usize;
+                    let resp = FetchResponse {
+                        total: bytes.len() as u64,
+                        remaining: (bytes.len() - off) as u64,
+                        container_len: bytes.len() as u64,
+                        stages: None,
+                        generation: None,
+                    };
+                    if proto::write_ok(&mut s, &resp).is_err() {
+                        return;
+                    }
+                    let body = &bytes[off..];
+                    let cut = if n < truncate { body.len() / 2 } else { body.len() };
+                    // dropping the socket after `cut` bytes severs the
+                    // stream mid-body
+                    let _ = s.write_all(&body[..cut]);
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn mid_stream_backend_death_fails_over_bit_identically() {
+        let payload: Vec<u8> = (0..100_000u32)
+            .map(|i| (i.wrapping_mul(31) >> 3) as u8)
+            .collect();
+        let addr = flaky_backend(payload.clone(), 1);
+        let cfg = RouterConfig {
+            retry: RetryPolicy::new()
+                .attempts(3)
+                .base_delay(Duration::from_millis(1)),
+            ..quick_cfg()
+        };
+        let router = Router::start("127.0.0.1:0", vec![addr], cfg).unwrap();
+        let (mut s, resp) = open_fetch(&router.addr(), &FetchRequest::new("dense3")).unwrap();
+        assert_eq!(resp.remaining as usize, payload.len());
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(got, payload, "spliced stream must be byte-identical");
+        let st = router.stats();
+        assert_eq!(st.failovers.load(Ordering::SeqCst), 1);
+        assert!(st.retries.load(Ordering::SeqCst) >= 1);
+        assert_eq!(st.errors.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn ejected_backend_is_readmitted_after_probation() {
+        let slot = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = slot.local_addr().unwrap();
+        let cfg = RouterConfig {
+            health_interval: Duration::from_millis(20),
+            connect_timeout: Duration::from_millis(200),
+            ..RouterConfig::default()
+        };
+        let router = Router::start("127.0.0.1:0", vec![addr], cfg).unwrap();
+        assert!(router.backend_healthy(0), "optimistic before first probe");
+        // backend dies: ejection takes `eject_after` consecutive refusals
+        drop(slot);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while router.backend_healthy(0) {
+            assert!(std::time::Instant::now() < deadline, "never ejected");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // backend restarts on the same port: re-admission only after
+        // `probation_probes` consecutive clean probes
+        let _slot = loop {
+            match TcpListener::bind(addr) {
+                Ok(l) => break l,
+                Err(_) => {
+                    assert!(std::time::Instant::now() < deadline, "port never freed");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        };
+        while !router.backend_healthy(0) {
+            assert!(std::time::Instant::now() < deadline, "never re-admitted");
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 

@@ -195,6 +195,10 @@ pub struct TierStats {
     pub fill_bytes: u64,
     pub relay_bytes: u64,
     pub drained: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub cache_evictions: u64,
+    pub invalidations: u64,
 }
 
 impl TierStats {
@@ -217,6 +221,10 @@ impl TierStats {
             fill_bytes: sum(|s| &s.fill_bytes),
             relay_bytes: sum(|s| &s.relay_bytes),
             drained: sum(|s| &s.drained),
+            retries: sum(|s| &s.retries),
+            failovers: sum(|s| &s.failovers),
+            cache_evictions: sum(|s| &s.cache_evictions),
+            invalidations: sum(|s| &s.invalidations),
         }
     }
 
@@ -257,6 +265,10 @@ impl TierStats {
             ("fill_bytes", json::num(self.fill_bytes as f64)),
             ("relay_bytes", json::num(self.relay_bytes as f64)),
             ("drained", json::num(self.drained as f64)),
+            ("retries", json::num(self.retries as f64)),
+            ("failovers", json::num(self.failovers as f64)),
+            ("cache_evictions", json::num(self.cache_evictions as f64)),
+            ("invalidations", json::num(self.invalidations as f64)),
         ];
         if let Some(v) = self.offload() {
             fields.push(("offload", json::num(v)));
@@ -496,13 +508,19 @@ mod tests {
         a.edge_hits.store(3, Ordering::SeqCst);
         b.cache_bytes.store(100, Ordering::SeqCst);
         b.edge_misses.store(1, Ordering::SeqCst);
+        a.retries.store(2, Ordering::SeqCst);
+        b.failovers.store(1, Ordering::SeqCst);
         let t = TierStats::from_stats("edge", &[&a, &b]);
+        assert_eq!(t.retries, 2);
+        assert_eq!(t.failovers, 1);
         assert_eq!(t.cache_bytes, 400);
         assert_eq!(t.fill_bytes, 100);
         assert!((t.offload().unwrap() - 0.8).abs() < 1e-9);
         assert!((t.hit_rate().unwrap() - 0.75).abs() < 1e-9);
         let j = Json::parse(&t.to_json().to_string()).unwrap();
         assert_eq!(j.get("name").unwrap().as_str().unwrap(), "edge");
+        assert_eq!(j.get("retries").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(j.get("failovers").unwrap().as_i64().unwrap(), 1);
         assert!((j.get("offload").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
         // empty tier: derived rates absent, not NaN
         let empty = TierStats::from_stats("router", &[]);

@@ -60,9 +60,13 @@ fn usage() -> ! {
                     SPEC = name:count:speed_mbps[:flaky],... with speed 'max' = unshaped)\n  \
            cluster [--clients 50] [--edges 2] [--origins 1] [--prefix-stages 2]\n          \
                    [--workers 2] [--cohorts SPEC] [--ramp-ms 250] [--out FILE]\n          \
-                   [--download-only]\n          \
+                   [--download-only] [--chaos SCRIPT]\n          \
                    (self-hosts router -> edge prefix caches -> origin reactors\n          \
-                    over fixture models; report includes per-tier counters)\n  \
+                    over fixture models; report includes per-tier counters.\n          \
+                    SCRIPT = kill/restart:origin/edge:I@MS and sever/corrupt/\n          \
+                    delay/seed=N client faults, comma-separated — see\n          \
+                    docs/ROBUSTNESS.md; exits nonzero unless every fault\n          \
+                    was recovered and at least one retry/failover fired)\n  \
            trace   [--requests 4] [--slowest 3] [--edges 2] [--origins 1]\n          \
                    [--prefix-stages 2] [--workers 2] [--out FILE]\n          \
                    [--metrics-out FILE]\n          \
@@ -339,14 +343,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// Self-hosted cluster tier under load: router → edge prefix caches →
 /// origin reactors, over the synthetic fixture models. Exits nonzero on
 /// any protocol error or a cold edge cache — the CI cluster-smoke
-/// contract.
+/// contract. With `--chaos SCRIPT` the cluster boots behind fault
+/// proxies, the scripted kills/restarts land while the fleet runs, and
+/// the run additionally fails unless at least one retry or failover
+/// actually fired — the CI chaos-smoke contract.
 fn cmd_cluster(args: &Args) -> Result<()> {
+    use prognet::fleet::chaos::{self, ChaosScript};
+    use prognet::netsim::FaultProxy;
+    use prognet::util::sync::Clock;
+
     let clients = args.get_usize("clients", 50)?;
     let origins = args.get_usize("origins", 1)?;
     let edges = args.get_usize("edges", 2)?;
     let workers = args.get_usize("workers", 2)?;
     let prefix_stages = args.get_usize("prefix-stages", 2)? as u32;
     let engine = engine_from_args(args)?;
+    let script = match args.get("chaos") {
+        Some(spec) => Some(ChaosScript::parse(spec)?),
+        None => None,
+    };
 
     let reg = prognet::testutil::fixture::executable_models("cluster-cli")?;
     let manifest = reg.get("dense3")?.clone();
@@ -358,9 +373,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             edges,
             workers_per_origin: workers,
             prefix_stages,
+            faultable: script.is_some(),
             ..ClusterConfig::default()
         },
     )?;
+    // client-path faults (sever/corrupt/delay) ride a proxy in front of
+    // the router so cluster tiers stay byte-exact witnesses
+    let client_proxy = match &script {
+        Some(s) if s.has_client_rules() => Some(FaultProxy::start(
+            cluster.addr(),
+            s.client_faults().clone(),
+            Clock::real(),
+        )?),
+        _ => None,
+    };
+    let target = client_proxy.as_ref().map_or(cluster.addr(), |p| p.addr());
     let runtime = if args.flag("download-only") {
         None
     } else {
@@ -381,12 +408,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     };
     println!(
         "cluster: {} virtual clients → router {} ({edges} edges, {origins} origins, \
-         prefix k={prefix_stages}, {} backend)",
+         prefix k={prefix_stages}, {} backend{})",
         scenario.total_clients(),
         cluster.addr(),
-        engine.backend_name()
+        engine.backend_name(),
+        if script.is_some() { ", chaos on" } else { "" }
     );
-    let report = run_fleet(cluster.addr(), &scenario, runtime, &opts)?.with_tiers(cluster.tiers());
+    let report = std::thread::scope(|s| -> Result<_> {
+        let cluster = &cluster;
+        let chaos_thread = script
+            .as_ref()
+            .map(|sc| s.spawn(move || chaos::apply(cluster, sc, &Clock::real())));
+        let report = run_fleet(target, &scenario, runtime, &opts);
+        if let Some(h) = chaos_thread {
+            for line in h.join().expect("chaos thread panicked")? {
+                println!("chaos: {line}");
+            }
+        }
+        report
+    })?
+    .with_tiers(cluster.tiers());
     println!("{}", report.render());
     let json_text = report.to_json().to_string();
     if let Some(path) = args.get("out") {
@@ -413,6 +454,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         edge.edge_hits,
         edge.edge_misses
     );
+    if script.is_some() {
+        let retries: u64 = report.tiers.iter().map(|t| t.retries).sum();
+        let failovers: u64 = report.tiers.iter().map(|t| t.failovers).sum();
+        anyhow::ensure!(
+            retries + failovers >= 1,
+            "chaos run exercised no retries or failovers — faults never landed"
+        );
+        println!("chaos: survived with {retries} retries / {failovers} failovers across tiers");
+    }
     Ok(())
 }
 
@@ -520,8 +570,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let router_stats = cluster.router().stats().clone();
     let mut sections: Vec<(String, Arc<ServerStats>)> =
         vec![("router".to_string(), router_stats)];
-    for (i, e) in cluster.edges().iter().enumerate() {
-        sections.push((format!("edge{i}"), e.stats().clone()));
+    for (i, e) in cluster.edge_stats().into_iter().enumerate() {
+        sections.push((format!("edge{i}"), e));
     }
     for (i, o) in cluster.origin_stats().into_iter().enumerate() {
         sections.push((format!("origin{i}"), o));

@@ -1,0 +1,543 @@
+//! Deterministic fault injection for network paths: a scriptable TCP
+//! proxy that severs, delays, corrupts and throttles traffic on a seeded
+//! schedule.
+//!
+//! The proxy is the fleet's chaos primitive (see `fleet::chaos`): placed
+//! in front of a router it cuts client connections mid-frame; placed in
+//! front of an origin it doubles as the stable address that lets the
+//! cluster kill and restart the real server behind it without rebinding
+//! a port. Every decision is a pure function of `(seed, connection
+//! number)`, so a fixed seed replays the identical fault sequence —
+//! chaos runs are reproducible, never flaky-by-design.
+//!
+//! Spec grammar (comma-separated rules; fields are `:`-separated
+//! `key=value` pairs; see `docs/ROBUSTNESS.md`):
+//!
+//! ```text
+//! sever:after=12000            cut every connection after 12000 bytes
+//! sever:after=8000:conn=1      … only connection #1 (1-based)
+//! sever:after=8000:every=3     … every 3rd connection
+//! sever:after=8000:p=0.25      … each connection with probability 0.25
+//! corrupt:at=64:mask=40        XOR downstream byte 64 with 0x40
+//! delay:ms=50                  hold the accepted connection 50 ms
+//! seed=42                      seed for the p= decisions (default 0)
+//! ```
+//!
+//! Rules compose: a connection can be delayed, corrupted *and* severed.
+//! `sever` counts downstream (server→client) bytes, so a cut lands
+//! mid-frame from the client's point of view; `corrupt` flips bits in
+//! flight without changing length, exercising CRC revalidation paths.
+
+#![forbid(unsafe_code)]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::BandwidthTrace;
+use crate::util::rng::Rng;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{Arc, Clock, Mutex};
+
+/// Which connections a rule applies to.
+#[derive(Debug, Clone, PartialEq)]
+enum Select {
+    /// every connection
+    All,
+    /// exactly the n-th accepted connection (1-based)
+    Conn(u64),
+    /// every k-th connection (k, 2k, …)
+    Every(u64),
+    /// each connection independently with probability p (seeded)
+    Prob(f64),
+}
+
+impl Select {
+    fn applies(&self, conn_no: u64, rng: &mut Rng) -> bool {
+        match *self {
+            Select::All => true,
+            Select::Conn(n) => conn_no == n,
+            Select::Every(k) => k > 0 && conn_no % k == 0,
+            Select::Prob(p) => rng.f64() < p,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Action {
+    /// cut the connection after this many downstream bytes
+    Sever { after: u64 },
+    /// XOR the downstream byte at this absolute offset with `mask`
+    Corrupt { at: u64, mask: u8 },
+    /// hold the accepted connection before forwarding anything
+    Delay { by: Duration },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Rule {
+    action: Action,
+    select: Select,
+}
+
+/// Parsed fault script: an ordered rule list plus the decision seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    rules: Vec<Rule>,
+    seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self::pass_through()
+    }
+}
+
+/// The per-connection fault decision (resolved once at accept time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConnFaults {
+    /// hold the connection this long before forwarding
+    pub delay: Option<Duration>,
+    /// cut after this many downstream bytes (min across matching rules)
+    pub sever_after: Option<u64>,
+    /// (absolute downstream offset, XOR mask) byte corruptions
+    pub corrupt: Vec<(u64, u8)>,
+}
+
+impl ConnFaults {
+    pub fn is_clean(&self) -> bool {
+        self.delay.is_none() && self.sever_after.is_none() && self.corrupt.is_empty()
+    }
+}
+
+fn parse_field<'a>(field: &'a str, rule: &str) -> Result<(&'a str, &'a str)> {
+    field
+        .split_once('=')
+        .with_context(|| format!("rule '{rule}': field '{field}' is not key=value"))
+}
+
+impl FaultSpec {
+    /// A spec that forwards everything untouched.
+    pub fn pass_through() -> Self {
+        Self {
+            rules: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    /// Parse the comma-separated rule grammar (see module docs).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut rules = Vec::new();
+        let mut seed = 0u64;
+        for item in text.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(v) = item.strip_prefix("seed=") {
+                seed = v.parse().with_context(|| format!("bad seed '{v}'"))?;
+                continue;
+            }
+            let mut fields = item.split(':');
+            let head = fields.next().unwrap_or_default();
+            let mut select = Select::All;
+            let mut kv: Vec<(&str, &str)> = Vec::new();
+            for f in fields {
+                let (k, v) = parse_field(f, item)?;
+                match k {
+                    "conn" => select = Select::Conn(v.parse()?),
+                    "every" => select = Select::Every(v.parse()?),
+                    "p" => select = Select::Prob(v.parse()?),
+                    _ => kv.push((k, v)),
+                }
+            }
+            let get = |key: &str| -> Result<&str> {
+                kv.iter()
+                    .find(|(k, _)| *k == key)
+                    .map(|(_, v)| *v)
+                    .with_context(|| format!("rule '{item}': missing {key}="))
+            };
+            let action = match head {
+                "sever" => Action::Sever {
+                    after: get("after")?.parse()?,
+                },
+                "corrupt" => Action::Corrupt {
+                    at: get("at")?.parse()?,
+                    mask: match kv.iter().find(|(k, _)| *k == "mask") {
+                        Some((_, v)) => u8::from_str_radix(v, 16)
+                            .with_context(|| format!("rule '{item}': bad hex mask '{v}'"))?,
+                        None => 0x40,
+                    },
+                },
+                "delay" => Action::Delay {
+                    by: Duration::from_millis(get("ms")?.parse()?),
+                },
+                other => bail!("unknown fault action '{other}' in '{item}'"),
+            };
+            rules.push(Rule { action, select });
+        }
+        Ok(Self { rules, seed })
+    }
+
+    pub fn is_pass_through(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Resolve the faults for connection `conn_no` (1-based). Pure in
+    /// `(seed, conn_no)`: probability rules draw from an RNG seeded by
+    /// both, so the same connection always gets the same verdict.
+    pub fn decide(&self, conn_no: u64) -> ConnFaults {
+        let mut rng = Rng::new(self.seed ^ conn_no.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut out = ConnFaults::default();
+        for rule in &self.rules {
+            if !rule.select.applies(conn_no, &mut rng) {
+                continue;
+            }
+            match rule.action {
+                Action::Sever { after } => {
+                    out.sever_after = Some(out.sever_after.map_or(after, |a| a.min(after)));
+                }
+                Action::Corrupt { at, mask } => out.corrupt.push((at, mask)),
+                Action::Delay { by } => {
+                    out.delay = Some(out.delay.map_or(by, |d| d + by));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Live counters of a running [`FaultProxy`].
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub connections: AtomicU64,
+    pub severed: AtomicU64,
+    pub corrupted: AtomicU64,
+    pub delayed: AtomicU64,
+    /// connections refused because the proxy was marked down
+    pub refused: AtomicU64,
+}
+
+struct ProxyInner {
+    upstream: Mutex<SocketAddr>,
+    /// marked-down proxies drop accepted connections immediately —
+    /// "connection died before the status frame", the shape of a crashed
+    /// backend
+    down: AtomicBool,
+    spec: FaultSpec,
+    /// downstream shaping trace (None = unshaped); swap mid-run to model
+    /// a bandwidth cliff
+    shape: Mutex<Option<BandwidthTrace>>,
+    clock: Clock,
+    stats: Arc<FaultStats>,
+    stop: Arc<AtomicBool>,
+}
+
+/// A fault-injecting TCP forwarder (shuts down on drop).
+///
+/// Request bytes (client→upstream) are forwarded verbatim on a pump
+/// thread; response bytes (upstream→client) pass through the fault
+/// engine: optional accept delay, scheduled corruption, mid-frame sever,
+/// and optional [`BandwidthTrace`] shaping. The upstream address and the
+/// down flag are swappable at runtime, which is what lets `fleet::chaos`
+/// kill and restart the server behind a stable address.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    inner: Arc<ProxyInner>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    pub fn start(upstream: SocketAddr, spec: FaultSpec, clock: Clock) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding fault proxy")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let inner = Arc::new(ProxyInner {
+            upstream: Mutex::new(upstream),
+            down: AtomicBool::new(false),
+            spec,
+            shape: Mutex::new(None),
+            clock,
+            stats: Arc::new(FaultStats::default()),
+            stop: stop.clone(),
+        });
+        let accept = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("prognet-fault-proxy".into())
+                .spawn(move || accept_loop(listener, inner))?
+        };
+        Ok(Self {
+            addr,
+            inner,
+            accept: Some(accept),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> Arc<FaultStats> {
+        self.inner.stats.clone()
+    }
+
+    /// Swap the upstream address (a restarted backend on a fresh port).
+    pub fn set_upstream(&self, upstream: SocketAddr) {
+        *self.inner.upstream.lock().unwrap() = upstream;
+    }
+
+    pub fn upstream(&self) -> SocketAddr {
+        *self.inner.upstream.lock().unwrap()
+    }
+
+    /// Mark the path down (accepted connections are dropped immediately)
+    /// or back up.
+    pub fn set_down(&self, down: bool) {
+        self.inner.down.store(down, Ordering::SeqCst);
+    }
+
+    /// Apply (or clear) downstream bandwidth shaping mid-run.
+    pub fn set_shape(&self, trace: Option<BandwidthTrace>) {
+        *self.inner.shape.lock().unwrap() = trace;
+    }
+
+    pub fn shutdown(&mut self) {
+        if self.inner.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<ProxyInner>) {
+    let mut conn_no = 0u64;
+    for conn in listener.incoming() {
+        if inner.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(client) = conn else { continue };
+        conn_no += 1;
+        inner.stats.connections.fetch_add(1, Ordering::SeqCst);
+        if inner.down.load(Ordering::SeqCst) {
+            // dropped before any byte: a dial that "succeeded" against a
+            // dead backend, the worst-timed crash shape
+            inner.stats.refused.fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        let faults = inner.spec.decide(conn_no);
+        let inner = inner.clone();
+        let spawned = std::thread::Builder::new()
+            .name("prognet-fault-conn".into())
+            .stack_size(128 * 1024)
+            .spawn(move || {
+                let _ = forward_conn(client, &inner, faults);
+            });
+        drop(spawned);
+    }
+}
+
+/// Pump one proxied connection: requests verbatim on a side thread,
+/// responses through the fault engine.
+fn forward_conn(client: TcpStream, inner: &ProxyInner, faults: ConnFaults) -> Result<()> {
+    if let Some(d) = faults.delay {
+        inner.stats.delayed.fetch_add(1, Ordering::SeqCst);
+        inner.clock.sleep(d);
+    }
+    let upstream_addr = *inner.upstream.lock().unwrap();
+    let up = TcpStream::connect(upstream_addr).context("fault proxy dialing upstream")?;
+    client.set_nodelay(true).ok();
+    up.set_nodelay(true).ok();
+
+    // client → upstream: verbatim
+    let pump_up = {
+        let mut client_r = client.try_clone()?;
+        let mut up_w = up.try_clone()?;
+        std::thread::Builder::new()
+            .name("prognet-fault-up".into())
+            .stack_size(64 * 1024)
+            .spawn(move || {
+                let mut buf = [0u8; 4096];
+                loop {
+                    match client_r.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            if up_w.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let _ = up_w.shutdown(std::net::Shutdown::Write);
+            })?
+    };
+
+    // upstream → client: corrupt / shape / sever
+    let mut up_r = up.try_clone()?;
+    let mut client_w = client.try_clone()?;
+    let mut sent = 0u64;
+    let mut buf = [0u8; 4096];
+    let start = inner.clock.now();
+    let outcome: Result<()> = loop {
+        let n = match up_r.read(&mut buf) {
+            Ok(0) | Err(_) => break Ok(()),
+            Ok(n) => n,
+        };
+        let mut chunk = buf[..n].to_vec();
+        let mut cut_at = chunk.len();
+        if let Some(limit) = faults.sever_after {
+            if sent + chunk.len() as u64 >= limit {
+                cut_at = (limit.saturating_sub(sent)) as usize;
+            }
+        }
+        for &(at, mask) in &faults.corrupt {
+            if at >= sent && at < sent + cut_at as u64 {
+                let i = (at - sent) as usize;
+                chunk[i] ^= mask;
+                inner.stats.corrupted.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        if let Some(trace) = inner.shape.lock().unwrap().clone() {
+            // piecewise-constant pacing: wait out the trace's transfer
+            // time for this chunk at the current virtual offset
+            let elapsed = inner.clock.now().saturating_duration_since(start);
+            let dt = trace.transfer_time_from(elapsed.as_secs_f64(), cut_at as u64);
+            if dt.is_finite() && dt > 0.0 {
+                inner.clock.sleep(Duration::from_secs_f64(dt.min(3600.0)));
+            }
+        }
+        if client_w.write_all(&chunk[..cut_at]).is_err() {
+            break Ok(());
+        }
+        sent += cut_at as u64;
+        if Some(sent) == faults.sever_after {
+            inner.stats.severed.fetch_add(1, Ordering::SeqCst);
+            break Ok(());
+        }
+    };
+    // drop both directions; the pump thread exits on its read error
+    let _ = client.shutdown(std::net::Shutdown::Both);
+    let _ = up.shutdown(std::net::Shutdown::Both);
+    let _ = pump_up.join();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let spec =
+            FaultSpec::parse("sever:after=8000:conn=1,corrupt:at=64:mask=40,delay:ms=5,seed=7")
+                .unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.rules.len(), 3);
+        let f = spec.decide(1);
+        assert_eq!(f.sever_after, Some(8000));
+        assert_eq!(f.corrupt, vec![(64, 0x40)]);
+        assert_eq!(f.delay, Some(Duration::from_millis(5)));
+        let f2 = spec.decide(2);
+        assert_eq!(f2.sever_after, None, "conn=1 rule must not hit conn 2");
+        assert!(FaultSpec::parse("sever").is_err(), "missing after=");
+        assert!(FaultSpec::parse("explode:at=1").is_err(), "unknown action");
+        assert!(FaultSpec::parse("").unwrap().is_pass_through());
+    }
+
+    #[test]
+    fn probability_rules_are_deterministic_in_seed_and_conn() {
+        let spec = FaultSpec::parse("sever:after=100:p=0.5,seed=42").unwrap();
+        let draw = |s: &FaultSpec| -> Vec<bool> {
+            (1..=64).map(|c| s.decide(c).sever_after.is_some()).collect()
+        };
+        let picks = draw(&spec);
+        assert_eq!(picks, draw(&spec), "same seed, same verdicts");
+        let hit = picks.iter().filter(|&&b| b).count();
+        assert!(hit > 8 && hit < 56, "p=0.5 over 64 draws, got {hit}");
+        let other = FaultSpec::parse("sever:after=100:p=0.5,seed=43").unwrap();
+        let differs = draw(&other) != picks;
+        assert!(differs, "different seed must change some verdict");
+    }
+
+    /// One-shot upstream echo server: accepts, reads until EOF of the
+    /// request direction is *not* required — it just writes `payload`
+    /// and closes.
+    fn payload_server(payload: Vec<u8>) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut s) = conn else { break };
+                let payload = payload.clone();
+                std::thread::spawn(move || {
+                    let _ = s.write_all(&payload);
+                });
+            }
+        });
+        addr
+    }
+
+    fn read_all(addr: SocketAddr) -> Vec<u8> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"hi").unwrap();
+        let mut got = Vec::new();
+        let _ = s.read_to_end(&mut got);
+        got
+    }
+
+    #[test]
+    fn proxy_severs_mid_stream_and_corrupts_in_flight() {
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let up = payload_server(payload.clone());
+        let spec =
+            FaultSpec::parse("sever:after=6000:conn=1,corrupt:at=10:mask=ff:conn=2").unwrap();
+        let mut proxy = FaultProxy::start(up, spec, Clock::real()).unwrap();
+
+        let got1 = read_all(proxy.addr());
+        assert_eq!(got1.len(), 6000, "conn 1 severed mid-stream");
+        assert_eq!(&got1[..], &payload[..6000], "prefix is untouched");
+
+        let got2 = read_all(proxy.addr());
+        assert_eq!(got2.len(), payload.len(), "conn 2 full length");
+        assert_eq!(got2[10], payload[10] ^ 0xff, "byte 10 flipped");
+        let mut fixed = got2.clone();
+        fixed[10] = payload[10];
+        assert_eq!(fixed, payload, "only byte 10 differs");
+
+        let st = proxy.stats();
+        assert_eq!(st.severed.load(Ordering::SeqCst), 1);
+        assert_eq!(st.corrupted.load(Ordering::SeqCst), 1);
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn down_proxy_drops_connections_until_marked_up() {
+        let up = payload_server(b"ok".to_vec());
+        let mut proxy =
+            FaultProxy::start(up, FaultSpec::pass_through(), Clock::real()).unwrap();
+        proxy.set_down(true);
+        assert!(read_all(proxy.addr()).is_empty(), "down path yields no bytes");
+        proxy.set_down(false);
+        assert_eq!(read_all(proxy.addr()), b"ok".to_vec());
+        assert_eq!(proxy.stats().refused.load(Ordering::SeqCst), 1);
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn upstream_swap_redirects_new_connections() {
+        let a = payload_server(b"aaaa".to_vec());
+        let b = payload_server(b"bbbb".to_vec());
+        let mut proxy = FaultProxy::start(a, FaultSpec::pass_through(), Clock::real()).unwrap();
+        assert_eq!(read_all(proxy.addr()), b"aaaa".to_vec());
+        proxy.set_upstream(b);
+        assert_eq!(read_all(proxy.addr()), b"bbbb".to_vec());
+        proxy.shutdown();
+    }
+}

@@ -11,13 +11,20 @@
 //!
 //! The paper's experiments use 0.1 / 0.2 / 0.5 / 1.0 / 2.5 MB/s links;
 //! [`LinkSpec`] captures those configurations.
+//!
+//! [`fault`] adds the adversarial half of the simulator: a
+//! deterministic fault-injecting proxy ([`FaultProxy`]) that severs,
+//! delays and corrupts connections on a seeded schedule — the primitive
+//! behind `fleet::chaos` and the `prognet cluster --chaos` harness.
 
 #![forbid(unsafe_code)]
 
+pub mod fault;
 pub mod link;
 pub mod throttle;
 pub mod trace;
 
+pub use fault::{ConnFaults, FaultProxy, FaultSpec, FaultStats};
 pub use link::{Link, LinkSpec};
 pub use trace::{BandwidthTrace, TraceLink};
 pub use throttle::{ThrottledWriter, TokenBucket};

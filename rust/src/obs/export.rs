@@ -30,7 +30,7 @@ use super::span::{SpanRecord, TraceCtx};
 /// Every `ServerStats` counter, in struct order, with its Prometheus
 /// type. Adding a field to `ServerStats` without extending this table
 /// fails the `exposition_covers_every_counter` test below.
-const COUNTERS: [(&str, &str, for<'a> fn(&'a ServerStats) -> &'a AtomicU64); 18] = [
+const COUNTERS: [(&str, &str, for<'a> fn(&'a ServerStats) -> &'a AtomicU64); 22] = [
     ("connections", "counter", |s| &s.connections),
     ("requests", "counter", |s| &s.requests),
     ("bytes_sent", "counter", |s| &s.bytes_sent),
@@ -49,6 +49,10 @@ const COUNTERS: [(&str, &str, for<'a> fn(&'a ServerStats) -> &'a AtomicU64); 18]
     ("fill_bytes", "counter", |s| &s.fill_bytes),
     ("relay_bytes", "counter", |s| &s.relay_bytes),
     ("drained", "counter", |s| &s.drained),
+    ("retries", "counter", |s| &s.retries),
+    ("failovers", "counter", |s| &s.failovers),
+    ("cache_evictions", "counter", |s| &s.cache_evictions),
+    ("invalidations", "counter", |s| &s.invalidations),
 ];
 
 /// Tier prefix of a span name (`"edge.relay"` → `"edge"`).
@@ -324,7 +328,7 @@ mod tests {
         assert!(text.contains("# TYPE prognet_active gauge"));
         // the COUNTERS table stays in lockstep with the struct: render
         // the canonical table and check arity
-        assert_eq!(COUNTERS.len(), 18);
+        assert_eq!(COUNTERS.len(), 22);
         // no sections → still every counter, unlabelled
         let bare = exposition(&[], &[]);
         for (name, _, _) in COUNTERS {

@@ -210,6 +210,11 @@ pub struct FetchResponse {
     pub container_len: u64,
     /// echo of the request's stage range
     pub stages: Option<(u32, u32)>,
+    /// container-generation hint: bumped by the origin whenever the
+    /// model is re-encoded, so caching tiers can drop stale prefixes
+    /// eagerly instead of waiting for a length mismatch. Optional and
+    /// additive — old readers ignore the field, old writers omit it.
+    pub generation: Option<u64>,
 }
 
 impl FetchResponse {
@@ -225,6 +230,9 @@ impl FetchResponse {
                 "stages",
                 json::arr(vec![json::num(a as f64), json::num(b as f64)]),
             ));
+        }
+        if let Some(g) = self.generation {
+            fields.push(("generation", json::num(g as f64)));
         }
         json::obj(fields)
     }
@@ -245,6 +253,10 @@ impl FetchResponse {
             remaining: j.get("remaining")?.as_i64()? as u64,
             container_len: j.get("container")?.as_i64()? as u64,
             stages,
+            generation: match j.opt("generation") {
+                None => None,
+                Some(v) => Some(v.as_i64()? as u64),
+            },
         })
     }
 }
@@ -404,11 +416,41 @@ mod tests {
             remaining: 400,
             container_len: 5000,
             stages: Some((3, 8)),
+            generation: None,
         };
         let mut buf = Vec::new();
         write_ok(&mut buf, &resp).unwrap();
         let mut cur = std::io::Cursor::new(buf);
         assert_eq!(read_response(&mut cur).unwrap(), resp);
+        // ungenerated responses stay byte-identical to the v2 frame
+        assert!(!resp.to_json().to_string().contains("generation"));
+    }
+
+    #[test]
+    fn response_generation_roundtrip() {
+        let resp = FetchResponse {
+            total: 1000,
+            remaining: 1000,
+            container_len: 5000,
+            stages: None,
+            generation: Some(7),
+        };
+        let mut buf = Vec::new();
+        write_ok(&mut buf, &resp).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_response(&mut cur).unwrap(), resp);
+    }
+
+    #[test]
+    fn v2_response_without_generation_still_parses() {
+        // a status frame from a pre-generation server
+        let body = br#"{"status":"ok","total":10,"remaining":10,"container":10}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(body);
+        let mut cur = std::io::Cursor::new(buf);
+        let back = read_response(&mut cur).unwrap();
+        assert_eq!(back.generation, None);
     }
 
     #[test]

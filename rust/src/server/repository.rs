@@ -14,9 +14,11 @@ use std::ops::Range;
 
 use anyhow::Result;
 
+use std::collections::HashMap;
+
 use crate::util::flight::SingleFlight;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
-use crate::util::sync::Arc;
+use crate::util::sync::{Arc, Mutex};
 
 use crate::format::{PnetManifest, PnetWriter, StageIndex};
 use crate::models::Registry;
@@ -34,6 +36,7 @@ pub struct EncodedContainer {
     bytes: Vec<u8>,
     manifest: PnetManifest,
     index: StageIndex,
+    generation: u64,
 }
 
 impl EncodedContainer {
@@ -47,6 +50,14 @@ impl EncodedContainer {
 
     pub fn index(&self) -> &StageIndex {
         &self.index
+    }
+
+    /// Encode generation of this container: starts at 1 per
+    /// (model, schedule) and bumps on every [`Repository::reencode`].
+    /// Propagated on the status frame so caching tiers can eagerly drop
+    /// prefixes from an older generation.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn len(&self) -> usize {
@@ -82,6 +93,7 @@ pub struct Repository {
     registry: Registry,
     cache: SingleFlight<Key, Arc<EncodedContainer>>,
     encodes: AtomicU64,
+    generations: Mutex<HashMap<Key, u64>>,
 }
 
 impl Repository {
@@ -90,6 +102,7 @@ impl Repository {
             registry,
             cache: SingleFlight::new(),
             encodes: AtomicU64::new(0),
+            generations: Mutex::new(HashMap::new()),
         }
     }
 
@@ -146,12 +159,38 @@ impl Repository {
         debug_assert_eq!(index.total_len(), bytes.len());
         let manifest = writer.manifest().clone();
         self.encodes.fetch_add(1, Ordering::SeqCst);
-        crate::log_info!("encoded {model} [{schedule}]: {} bytes", bytes.len());
+        let generation = self.generation_of(model, schedule);
+        crate::log_info!(
+            "encoded {model} [{schedule}] gen {generation}: {} bytes",
+            bytes.len()
+        );
         Ok(Arc::new(EncodedContainer {
             bytes,
             manifest,
             index,
+            generation,
         }))
+    }
+
+    /// Current encode generation for a key (1 before any re-encode).
+    pub fn generation_of(&self, model: &str, schedule: &Schedule) -> u64 {
+        let key = (model.to_string(), schedule.widths().to_vec());
+        *self.generations.lock().unwrap().get(&key).unwrap_or(&1)
+    }
+
+    /// Drop the cached encoding and bump its generation, then encode
+    /// fresh — what a model update at the origin looks like to the
+    /// serving tier. Downstream caches see the new generation on the
+    /// next status frame and drop their stale prefixes eagerly.
+    pub fn reencode(&self, model: &str, schedule: &Schedule) -> Result<Arc<EncodedContainer>> {
+        let key = (model.to_string(), schedule.widths().to_vec());
+        {
+            let mut gens = self.generations.lock().unwrap();
+            let g = gens.entry(key.clone()).or_insert(1);
+            *g += 1;
+        }
+        self.cache.invalidate(&key);
+        self.container(model, schedule)
     }
 
     /// Encoded size without retaining the encoding.
@@ -247,6 +286,25 @@ mod tests {
         for r in &results[1..] {
             assert!(Arc::ptr_eq(&results[0], r), "all callers share one Arc");
         }
+    }
+
+    #[test]
+    fn reencode_bumps_generation_and_replaces_entry() {
+        let repo = Repository::new(synthetic_models("repo-reencode").unwrap());
+        let sched = Schedule::paper_default();
+        let a = repo.container("alpha", &sched).unwrap();
+        assert_eq!(a.generation(), 1);
+        assert_eq!(repo.generation_of("alpha", &sched), 1);
+        let b = repo.reencode("alpha", &sched).unwrap();
+        assert_eq!(b.generation(), 2);
+        assert_eq!(repo.generation_of("alpha", &sched), 2);
+        assert!(!Arc::ptr_eq(&a, &b), "reencode must mint a fresh entry");
+        assert_eq!(a.bytes(), b.bytes(), "same weights → same bytes");
+        assert_eq!(repo.encode_count(), 2);
+        // subsequent lookups keep serving the new generation
+        let c = repo.container("alpha", &sched).unwrap();
+        assert!(Arc::ptr_eq(&b, &c));
+        assert_eq!(c.generation(), 2);
     }
 
     #[test]

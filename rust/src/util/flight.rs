@@ -153,6 +153,23 @@ impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
         }
     }
 
+    /// Peek a cached (`Ready`) value without computing. `Pending` keys
+    /// return `None` — peeking must never block on a flight.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let slots = self.slots.lock().unwrap();
+        match slots.get(key) {
+            Some(Slot::Ready(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    /// Replace (or seed) the cached value for a key, bypassing the
+    /// flight. Used by fault injection to plant corrupted entries and by
+    /// tests; production fills go through `get_or_compute`.
+    pub fn insert(&self, key: K, value: V) {
+        self.slots.lock().unwrap().insert(key, Slot::Ready(value));
+    }
+
     /// Number of completed (cached) entries.
     pub fn ready_len(&self) -> usize {
         self.slots
@@ -233,6 +250,20 @@ mod tests {
         assert_eq!(sf.ready_len(), 0);
         // next request recomputes
         assert_eq!(sf.get_or_compute(1, || Ok(20)), Ok(20));
+    }
+
+    #[test]
+    fn get_peeks_and_insert_replaces() {
+        let sf = SingleFlight::<u32, u32>::new();
+        assert_eq!(sf.get(&1), None);
+        sf.get_or_compute(1, || Ok(10)).unwrap();
+        assert_eq!(sf.get(&1), Some(10));
+        sf.insert(1, 99);
+        assert_eq!(sf.get(&1), Some(99));
+        // insert seeds a fresh key too
+        sf.insert(2, 7);
+        assert_eq!(sf.get_or_compute(2, || Ok(0)), Ok(7));
+        assert_eq!(sf.ready_len(), 2);
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod flight;
 pub mod json;
 pub mod logging;
 pub mod pool;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 pub mod sync;

@@ -1,0 +1,327 @@
+//! Budgeted retry: deadline-capped exponential backoff with
+//! deterministic jitter.
+//!
+//! Every reconnect/refill path in the crate (session resume, edge
+//! origin fills and tail relays, router failover dials, load-generator
+//! connects) shares this one policy type instead of hand-rolled
+//! `sleep(20ms * attempt)` loops, so retry budgets are visible in one
+//! place and chaos tests can assert the exact schedule. The
+//! `raw-retry-loop` lint rule (see `prognet-lint`) flags ad-hoc retry
+//! loops in protocol modules to keep it that way.
+//!
+//! Jitter is deterministic: a [`crate::util::rng::Rng`] seeded from the
+//! policy (optionally mixed with a per-call salt) decides each delay, so
+//! a fixed seed reproduces the same backoff sequence — chaos runs stay
+//! replayable. Sleeps go through the injectable
+//! [`Clock`](crate::util::sync::Clock), so virtual-time tests retry
+//! without blocking and the `wall-clock-in-protocol` invariant holds at
+//! the call sites.
+
+#![forbid(unsafe_code)]
+
+use crate::util::rng::Rng;
+use crate::util::sync::Clock;
+use std::time::Duration;
+
+/// Backoff/budget parameters. Construct with [`RetryPolicy::new`] and
+/// shape with the builder methods; [`RetryPolicy::start`] yields the
+/// stateful [`Retry`] that tracks attempts and the deadline.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Maximum attempts in total (first try included). 1 = no retries.
+    max_attempts: u32,
+    /// Delay before the first retry.
+    base_delay: Duration,
+    /// Multiplier applied per subsequent retry.
+    factor: f64,
+    /// Per-sleep cap.
+    max_delay: Duration,
+    /// Total budget across all sleeps measured from `start()`; a retry
+    /// whose sleep would land past the deadline is refused instead.
+    budget: Option<Duration>,
+    /// Fraction of each delay that is randomized away, in `[0, 1]`:
+    /// the jittered delay is uniform in `[(1-jitter)*d, d]`.
+    jitter: f64,
+    /// Seed for the deterministic jitter stream.
+    seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(20),
+            factor: 2.0,
+            max_delay: Duration::from_secs(1),
+            budget: None,
+            jitter: 0.5,
+            seed: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total attempts allowed (clamped to ≥ 1).
+    pub fn attempts(mut self, n: u32) -> Self {
+        self.max_attempts = n.max(1);
+        self
+    }
+
+    pub fn base_delay(mut self, d: Duration) -> Self {
+        self.base_delay = d;
+        self
+    }
+
+    pub fn factor(mut self, f: f64) -> Self {
+        self.factor = if f.is_finite() && f >= 1.0 { f } else { 1.0 };
+        self
+    }
+
+    pub fn max_delay(mut self, d: Duration) -> Self {
+        self.max_delay = d;
+        self
+    }
+
+    /// Deadline across the whole retry sequence, measured from
+    /// [`RetryPolicy::start`].
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.budget = Some(d);
+        self
+    }
+
+    pub fn jitter(mut self, j: f64) -> Self {
+        self.jitter = j.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn max_attempts(&self) -> u32 {
+        self.max_attempts
+    }
+
+    /// Begin a retry sequence on `clock`. `salt` decorrelates jitter
+    /// between concurrent sequences sharing one policy (hash of a
+    /// connection id, client index, …); pass 0 when there is only one.
+    pub fn start(&self, clock: Clock, salt: u64) -> Retry {
+        Retry {
+            rng: Rng::new(self.seed ^ salt),
+            started: clock.now(),
+            clock,
+            policy: self.clone(),
+            retries_done: 0,
+        }
+    }
+
+    /// The deterministic backoff schedule this policy would produce for
+    /// `salt` — what tests assert against without sleeping.
+    pub fn preview(&self, salt: u64) -> Vec<Duration> {
+        let clock = Clock::manual();
+        let mut retry = self.start(clock, salt);
+        let mut delays = Vec::new();
+        while let Some(d) = retry.backoff() {
+            delays.push(d);
+        }
+        delays
+    }
+}
+
+/// One in-flight retry sequence: owns the attempt counter, the jitter
+/// stream and the deadline. Obtained from [`RetryPolicy::start`].
+#[derive(Debug)]
+pub struct Retry {
+    policy: RetryPolicy,
+    clock: Clock,
+    rng: Rng,
+    started: std::time::Instant,
+    retries_done: u32,
+}
+
+impl Retry {
+    /// Retries consumed so far.
+    pub fn retries_done(&self) -> u32 {
+        self.retries_done
+    }
+
+    /// The attempt number (1-based) the caller is about to make.
+    pub fn attempt(&self) -> u32 {
+        self.retries_done + 1
+    }
+
+    /// Whether another retry is currently permitted by the attempt cap
+    /// (the budget is only checked once the delay is known).
+    pub fn can_retry(&self) -> bool {
+        self.retries_done + 1 < self.policy.max_attempts
+    }
+
+    /// Sleep out the next backoff and return the delay slept, or `None`
+    /// when the attempt cap is spent or the sleep would overrun the
+    /// budget (the sequence is then over — fail closed).
+    pub fn backoff(&mut self) -> Option<Duration> {
+        if !self.can_retry() {
+            return None;
+        }
+        let exp = self
+            .policy
+            .base_delay
+            .as_secs_f64()
+            .max(0.0)
+            .mul_add(self.policy.factor.powi(self.retries_done as i32), 0.0);
+        let capped = exp.min(self.policy.max_delay.as_secs_f64());
+        let scale = 1.0 - self.policy.jitter * self.rng.f64();
+        let delay = Duration::from_secs_f64(capped * scale);
+        if let Some(budget) = self.policy.budget {
+            let elapsed = self.clock.now().saturating_duration_since(self.started);
+            if elapsed + delay > budget {
+                return None;
+            }
+        }
+        self.retries_done += 1;
+        self.clock.sleep(delay);
+        Some(delay)
+    }
+
+    /// Run `op` under this sequence: call it with the 1-based attempt
+    /// number, retrying on `Err` until the policy refuses. Returns the
+    /// first `Ok` or the last error.
+    pub fn run<T, E>(&mut self, mut op: impl FnMut(u32) -> Result<T, E>) -> Result<T, E> {
+        loop {
+            match op(self.attempt()) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if self.backoff().is_none() {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy::new()
+            .attempts(4)
+            .base_delay(Duration::from_millis(100))
+            .factor(2.0)
+            .max_delay(Duration::from_secs(10))
+            .jitter(0.5)
+            .seed(42)
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_bounded() {
+        let p = policy();
+        let a = p.preview(7);
+        let b = p.preview(7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3); // 4 attempts → 3 backoffs
+        for (i, d) in a.iter().enumerate() {
+            let full = Duration::from_millis(100 * (1 << i as u32));
+            assert!(*d <= full, "delay {i} {d:?} above cap {full:?}");
+            assert!(
+                d.as_secs_f64() >= full.as_secs_f64() * 0.5 - 1e-9,
+                "delay {i} {d:?} below jitter floor"
+            );
+        }
+    }
+
+    #[test]
+    fn salts_decorrelate_jitter() {
+        let p = policy();
+        assert_ne!(p.preview(1), p.preview(2));
+    }
+
+    #[test]
+    fn budget_refuses_overrunning_sleep() {
+        // budget below the first backoff floor (≥ 50ms at jitter 0.5)
+        let p = policy().budget(Duration::from_millis(10));
+        assert!(p.preview(0).is_empty());
+        // generous budget admits the whole schedule
+        let p = policy().budget(Duration::from_secs(60));
+        assert_eq!(p.preview(0).len(), 3);
+    }
+
+    #[test]
+    fn budget_is_cumulative_across_sleeps() {
+        // floor of the 3-delay schedule is 100+200+400 halves = 350ms;
+        // a 250ms budget must cut the sequence short.
+        let p = policy().budget(Duration::from_millis(250));
+        let delays = p.preview(0);
+        assert!(delays.len() < 3, "expected truncation, got {delays:?}");
+        let total: Duration = delays.iter().sum();
+        assert!(total <= Duration::from_millis(250));
+    }
+
+    #[test]
+    fn zero_jitter_is_pure_exponential() {
+        let p = policy().jitter(0.0).attempts(3);
+        assert_eq!(
+            p.preview(0),
+            vec![Duration::from_millis(100), Duration::from_millis(200)]
+        );
+    }
+
+    #[test]
+    fn max_delay_caps_growth() {
+        let p = policy().jitter(0.0).max_delay(Duration::from_millis(150));
+        assert_eq!(
+            p.preview(0),
+            vec![
+                Duration::from_millis(100),
+                Duration::from_millis(150),
+                Duration::from_millis(150)
+            ]
+        );
+    }
+
+    #[test]
+    fn run_retries_then_succeeds() {
+        let clock = Clock::manual();
+        let t0 = clock.now();
+        let mut retry = policy().start(clock.clone(), 0);
+        let mut calls = 0u32;
+        let out: Result<u32, &str> = retry.run(|attempt| {
+            calls += 1;
+            assert_eq!(attempt, calls);
+            if attempt < 3 {
+                Err("not yet")
+            } else {
+                Ok(attempt)
+            }
+        });
+        assert_eq!(out, Ok(3));
+        assert_eq!(calls, 3);
+        assert_eq!(retry.retries_done(), 2);
+        // manual clock advanced by exactly the two backoffs
+        assert!(clock.now() > t0);
+    }
+
+    #[test]
+    fn run_returns_last_error_when_exhausted() {
+        let clock = Clock::manual();
+        let mut retry = policy().start(clock, 0);
+        let mut calls = 0u32;
+        let out: Result<(), u32> = retry.run(|_| {
+            calls += 1;
+            Err(calls)
+        });
+        assert_eq!(out, Err(4)); // 4 attempts, last error surfaces
+    }
+
+    #[test]
+    fn single_attempt_never_sleeps() {
+        let p = RetryPolicy::new().attempts(1);
+        assert!(p.preview(0).is_empty());
+    }
+}

@@ -1,0 +1,279 @@
+//! Chaos acceptance: the cluster under scripted faults.
+//!
+//! The tentpole property: a faultable cluster (router → 2 edges → 2
+//! origins, everything behind stable fault proxies) survives scripted
+//! origin kills, edge kill/restarts and client-side mid-frame
+//! truncations with **zero unrecovered errors** — every session
+//! finishes, every session reaches ModelReady, the bytes that arrive
+//! are bit-identical to the origin container, and no edge cache ever
+//! exceeds its byte budget. Tier retries run on a manual clock so
+//! recovery never waits out real outages; the outages themselves land
+//! on real time, mid-load.
+//!
+//! Plus the `netsim::trace` satellite: a bandwidth cliff mid-fill makes
+//! the single-flight fill fail *closed* — no poisoned cache entry — and
+//! the next request after the cliff lifts refills and serves
+//! bit-identical bytes.
+
+use std::io::Read;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use prognet::fleet::chaos::{self, ChaosScript};
+use prognet::fleet::cluster::{Cluster, ClusterConfig};
+use prognet::fleet::edge::{Edge, EdgeConfig};
+use prognet::fleet::loadgen::{run_fleet, FleetOptions, Scenario};
+use prognet::fleet::placement::{HashRing, DEFAULT_VNODES};
+use prognet::netsim::{BandwidthTrace, FaultProxy, FaultSpec};
+use prognet::quant::Schedule;
+use prognet::runtime::{Engine, ModelSession};
+use prognet::server::service::{open_fetch, ServerConfig};
+use prognet::server::{FetchRequest, Repository, Server};
+use prognet::testutil::fixture;
+use prognet::testutil::prop::check;
+use prognet::util::retry::RetryPolicy;
+use prognet::util::sync::Clock;
+
+/// Soft `RLIMIT_NOFILE` (see `fleet_serving.rs`): the chaos path holds
+/// up to ~10 fds per in-flight client (proxy hops double the router and
+/// origin legs), so the population scales to the fd budget.
+fn max_open_files() -> usize {
+    std::fs::read_to_string("/proc/self/limits")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("Max open files"))
+                .and_then(|l| {
+                    let soft = l.split_whitespace().nth(3)?;
+                    if soft == "unlimited" {
+                        Some(usize::MAX)
+                    } else {
+                        soft.parse().ok()
+                    }
+                })
+        })
+        .unwrap_or(1024)
+}
+
+fn fetch_all(addr: &std::net::SocketAddr, req: &FetchRequest) -> Vec<u8> {
+    let (mut stream, resp) = open_fetch(addr, req).unwrap();
+    let mut body = Vec::new();
+    stream.read_to_end(&mut body).unwrap();
+    assert_eq!(body.len() as u64, resp.remaining, "advertised size must match");
+    body
+}
+
+/// Placement is keyed on the model name, so for a single model exactly
+/// one edge and one origin carry the traffic — aim the script at those,
+/// or the kills land on idle instances and prove nothing.
+fn hot_index(prefix: &str, n: usize, model: &str) -> usize {
+    let labels: Vec<String> = (0..n).map(|i| format!("{prefix}-{i}")).collect();
+    HashRing::new(&labels, DEFAULT_VNODES).place(model).unwrap()
+}
+
+#[test]
+fn chaos_acceptance_scripted_faults_with_zero_unrecovered_errors() {
+    let desired: usize = std::env::var("PROGNET_CHAOS_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let budget = max_open_files().saturating_sub(128) / 10;
+    let clients = desired.min(budget.max(64));
+    let cache_budget = 64 << 10;
+
+    let repo = Arc::new(Repository::new(
+        fixture::executable_models("cluster-chaos").unwrap(),
+    ));
+    let cluster = Cluster::start(
+        repo.clone(),
+        ClusterConfig {
+            origins: 2,
+            edges: 2,
+            faultable: true,
+            edge_cache_budget_bytes: cache_budget,
+            // virtual time for tier retry backoffs: recovery comes from
+            // failover (ring walks past dead instances), never from
+            // sleeping out a real outage
+            clock: Clock::manual(),
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
+    let manifest = repo.registry().get("dense3").unwrap().clone();
+    let runtime = Arc::new(ModelSession::load(&Engine::reference(), &manifest).unwrap());
+
+    // warm both caches so the faults land on a serving tree
+    for _ in 0..4 {
+        fetch_all(&cluster.addr(), &FetchRequest::new("dense3"));
+    }
+
+    // aim at the instances that actually carry dense3 traffic; the two
+    // outage windows are disjoint so the ring walk always has somewhere
+    // healthy to land
+    let hot_origin = hot_index("origin", 2, "dense3");
+    let hot_edge = hot_index("edge", 2, "dense3");
+    let script = ChaosScript::parse(&format!(
+        "kill:origin:{hot_origin}@150,restart:origin:{hot_origin}@600,\
+         kill:edge:{hot_edge}@800,restart:edge:{hot_edge}@1100"
+    ))
+    .unwrap();
+
+    let flaky = clients * 3 / 10;
+    let scenario = Scenario::parse(
+        "dense3",
+        &format!("bulk:{}:max,flaky:{flaky}:max:flaky", clients - flaky),
+    )
+    .unwrap();
+    let opts = FleetOptions {
+        // arrivals span every outage window in the script
+        ramp: Duration::from_millis(1500),
+        connect_retries: 5,
+        resume_retries: 4,
+        // the fixture dense3 container is ~2 KB: cut flaky clients just
+        // past its manifest so their reconnect-resume actually runs
+        flaky_cut_bytes: 1500,
+        ..FleetOptions::default()
+    };
+
+    let stop = AtomicBool::new(false);
+    let (report, max_cache_bytes) = std::thread::scope(|s| {
+        let cluster = &cluster;
+        let script = &script;
+        let stop = &stop;
+        // sample cache occupancy throughout: "never exceeds the budget"
+        // must hold mid-churn, not just after the dust settles
+        let watcher = s.spawn(move || {
+            let mut max = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                for i in 0..cluster.edge_count() {
+                    max = max.max(cluster.with_edge(i, |e| e.cache_bytes_in_use()));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            max
+        });
+        let chaos_thread =
+            s.spawn(move || chaos::apply(cluster, script, &Clock::real()).unwrap());
+        let report = run_fleet(cluster.addr(), &scenario, Some(runtime), &opts).unwrap();
+        chaos_thread.join().unwrap();
+        stop.store(true, Ordering::SeqCst);
+        (
+            report.with_tiers(cluster.tiers()),
+            watcher.join().unwrap(),
+        )
+    });
+
+    // zero unrecovered errors: every session finished and reached
+    // ModelReady despite the kills, restarts and truncations
+    assert_eq!(report.clients(), clients);
+    assert_eq!(report.protocol_errors(), 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.connect_failed, 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.shed, 0, "{:?}", report.sample_errors);
+    assert_eq!(report.overall.finished, clients);
+    let ready = report.overall.model_ready.as_ref().unwrap();
+    assert_eq!(ready.n, clients, "every client reached ModelReady");
+    assert!(
+        report.overall.resumes >= 1,
+        "flaky truncations must have forced reconnect-resumes"
+    );
+
+    // the faults genuinely landed and were recovered: at least one tier
+    // retry or failover fired, and the SLO rows carry the counters
+    let retries: u64 = report.tiers.iter().map(|t| t.retries).sum();
+    let failovers: u64 = report.tiers.iter().map(|t| t.failovers).sum();
+    assert!(
+        retries + failovers >= 1,
+        "chaos run exercised no retries or failovers"
+    );
+
+    // bounded caches: the LRU byte budget held through kill/refill churn
+    assert!(
+        max_cache_bytes <= cache_budget,
+        "edge cache peaked at {max_cache_bytes} bytes over the {cache_budget} budget"
+    );
+    for i in 0..cluster.edge_count() {
+        let used = cluster.with_edge(i, |e| e.cache_bytes_in_use());
+        assert!(used <= cache_budget, "edge {i} holds {used} bytes");
+    }
+
+    // final bytes are bit-identical after the chaos: random stage ranges
+    // through the (post-restart) cluster equal a direct container read
+    let container = repo.container("dense3", &Schedule::paper_default()).unwrap();
+    let stages = Schedule::paper_default().stages() as u32;
+    check(
+        "post-chaos fetches are bit-identical",
+        15,
+        |g| {
+            let a = g.usize(0, stages as usize - 1) as u32;
+            let b = g.usize(a as usize + 1, stages as usize) as u32;
+            (a, b)
+        },
+        |(a, b)| {
+            let sel = container
+                .body_range(Some((a, b)))
+                .map_err(|e| format!("range: {e:#}"))?;
+            let got = fetch_all(&cluster.addr(), &FetchRequest::new("dense3").with_stages(a, b));
+            if got[..] != container[sel] {
+                return Err(format!("[{a},{b}) differs after chaos"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bandwidth_cliff_mid_fill_fails_closed_without_poisoning_the_cache() {
+    let repo = Arc::new(Repository::new(
+        fixture::executable_models_big("chaos-cliff").unwrap(),
+    ));
+    let server = Server::start_fleet(
+        "127.0.0.1:0",
+        repo.clone(),
+        ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+        prognet::fleet::FleetConfig::default(),
+    )
+    .unwrap();
+    // origin behind a shaping proxy: ~5 KB at 1 MB/s, then a cliff to a
+    // trickle — the fill stream stalls mid-flight, past the manifest
+    let proxy = FaultProxy::start(server.addr(), FaultSpec::pass_through(), Clock::real()).unwrap();
+    proxy.set_shape(Some(BandwidthTrace::parse("0.005:1,600:0.00001").unwrap()));
+
+    let edge = Edge::start(
+        "127.0.0.1:0",
+        vec![proxy.addr()],
+        EdgeConfig {
+            // tight deadline + budget: the fill must give up quickly
+            io_timeout: Duration::from_millis(200),
+            retry: RetryPolicy::new()
+                .attempts(2)
+                .base_delay(Duration::from_millis(5))
+                .budget(Duration::from_secs(1)),
+            ..EdgeConfig::default()
+        },
+    )
+    .unwrap();
+
+    // the single-flight fill stalls on the cliff and fails closed: the
+    // client gets an error frame, not a truncated or partial prefix
+    let res = open_fetch(&edge.addr(), &FetchRequest::new("dense2b"));
+    assert!(res.is_err(), "fill through the cliff must fail closed");
+    assert_eq!(edge.cached_prefixes(), 0, "failed fill must not be cached");
+    assert_eq!(edge.cache_bytes_in_use(), 0);
+    assert_eq!(edge.stats().origin_fills.load(Ordering::SeqCst), 0);
+
+    // cliff lifts: the next request refills (errors were never cached)
+    // and serves bytes bit-identical to the origin container
+    proxy.set_shape(None);
+    let expect = repo
+        .container("dense2b", &Schedule::paper_default())
+        .unwrap();
+    let got = fetch_all(&edge.addr(), &FetchRequest::new("dense2b"));
+    assert_eq!(&got[..], &expect[..], "post-cliff refill must be bit-identical");
+    assert_eq!(edge.cached_prefixes(), 1);
+    assert_eq!(edge.stats().origin_fills.load(Ordering::SeqCst), 1);
+    assert!(edge.cache_bytes_in_use() > 0);
+}

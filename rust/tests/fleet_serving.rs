@@ -379,7 +379,7 @@ fn loadgen_sustains_10k_clients_through_the_cluster_with_zero_protocol_errors() 
     let drained = |stats: &prognet::fleet::ServerStats| stats.active.load(Ordering::SeqCst) == 0;
     loop {
         let all = drained(cluster.router().stats())
-            && cluster.edges().iter().all(|e| drained(e.stats()))
+            && cluster.edge_stats().iter().all(|e| drained(e.as_ref()))
             && cluster.origin_stats().iter().all(|s| drained(s));
         if all {
             break;

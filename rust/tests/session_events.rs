@@ -19,12 +19,14 @@ use std::sync::Arc;
 use prognet::client::{
     ExecMode, InferencePolicy, ModelCache, ProgressiveSession, ResumeSource, SessionEvent,
 };
+use prognet::fleet::placement::fnv1a;
 use prognet::format::PnetReader;
 use prognet::quant::Schedule;
 use prognet::runtime::{Engine, ModelSession};
 use prognet::server::FetchRequest;
 use prognet::testutil::fixture;
 use prognet::testutil::prop::check;
+use prognet::util::retry::RetryPolicy;
 
 /// Collected event stream of a finished session.
 fn collect(handle: &ProgressiveSession) -> Vec<SessionEvent> {
@@ -361,13 +363,24 @@ fn reconnect_resume_emits_no_duplicate_stages() {
     let resumes: Vec<_> = events
         .iter()
         .filter_map(|ev| match ev {
-            SessionEvent::Resumed { stage, source, .. } => Some((*stage, *source)),
+            SessionEvent::Resumed {
+                stage,
+                source,
+                backoff,
+                ..
+            } => Some((*stage, *source, *backoff)),
             _ => None,
         })
         .collect();
     assert_eq!(resumes.len(), 1, "exactly one reconnect: {resumes:?}");
     assert_eq!(resumes[0].1, ResumeSource::Reconnect);
     assert!(resumes[0].0 >= 1, "12 KB covers at least one stage");
+    // the reconnect waited out exactly the first delay of the shared
+    // retry policy's deterministic (model-salted) jitter schedule
+    let schedule = RetryPolicy::default()
+        .attempts(3)
+        .preview(fnv1a(b"dense2b"));
+    assert_eq!(resumes[0].2, schedule[0], "backoff off-schedule");
     let report = handle.finish().unwrap();
     assert!(report.assembler("dense2b").unwrap().is_complete());
     assert_eq!(report.summary.resumed, 1);
